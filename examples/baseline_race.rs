@@ -1,0 +1,39 @@
+//! A reduced DSE race: all six methods (GS, RW, BO, GA, ACO, LUMINA) on
+//! the roofline environment, 200 samples x 3 trials, printing the Fig. 4
+//! style summary. `cargo bench --bench fig4_phv_race` runs the full one.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example baseline_race
+//! ```
+
+use lumina::figures::race::{aggregate, run_race, EvaluatorKind, RaceConfig};
+
+fn main() -> lumina::Result<()> {
+    let cfg = RaceConfig {
+        samples: 200,
+        trials: 3,
+        seed: 7,
+        evaluator: EvaluatorKind::RooflinePjrt,
+    };
+    println!(
+        "racing 6 methods, {} samples x {} trials ...",
+        cfg.samples, cfg.trials
+    );
+    let t0 = std::time::Instant::now();
+    let results = run_race(&cfg)?;
+    println!(
+        "{:<16} {:>10} {:>12} {:>10}",
+        "method", "mean PHV", "sample eff", "superior"
+    );
+    for (m, phv, eff, _) in aggregate(&results) {
+        let sup: usize = results
+            .iter()
+            .filter(|r| r.method == m)
+            .map(|r| r.superior)
+            .sum::<usize>()
+            / cfg.trials;
+        println!("{m:<16} {phv:>10.4} {eff:>12.4} {sup:>10}");
+    }
+    println!("done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

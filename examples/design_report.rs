@@ -1,0 +1,56 @@
+//! Design report: evaluate the paper's published Table-4 designs (and
+//! any custom design given on the command line) against the A100 on both
+//! simulation environments.
+//!
+//! ```sh
+//! cargo run --release --example design_report
+//! cargo run --release --example design_report -- 24 64 4 32 16 128 40 6
+//! ```
+
+use lumina::design::DesignPoint;
+use lumina::eval::{Evaluator, Phase};
+use lumina::figures::table4::{render, report_rows};
+use lumina::sim::{CompassSim, RooflineSim};
+use lumina::workload::GPT3_175B;
+
+fn main() -> lumina::Result<()> {
+    let mut designs = vec![
+        ("Paper A".to_string(), DesignPoint::paper_design_a()),
+        ("Paper B".to_string(), DesignPoint::paper_design_b()),
+    ];
+
+    // Optional custom design from argv: 8 raw parameter values.
+    let args: Vec<u32> = std::env::args()
+        .skip(1)
+        .filter_map(|a| a.parse().ok())
+        .collect();
+    if args.len() == 8 {
+        let d = DesignPoint::new([
+            args[0], args[1], args[2], args[3], args[4], args[5],
+            args[6], args[7],
+        ]);
+        designs.push(("Custom".to_string(), d));
+    }
+
+    println!("== roofline model ==");
+    let mut roofline = RooflineSim::new(GPT3_175B);
+    println!("{}", render(&report_rows(&mut roofline, &designs)?));
+
+    println!("== compass (detailed) model ==");
+    let mut compass = CompassSim::gpt3();
+    println!("{}", render(&report_rows(&mut compass, &designs)?));
+
+    // Critical-path detail for the first design.
+    let (_, cp) = compass.evaluate_detailed(&designs[0].1);
+    println!("critical path of {} on compass:", designs[0].0);
+    println!("{}", cp.render(Phase::Prefill));
+    println!("{}", cp.render(Phase::Decode));
+
+    let m = compass.eval(&designs[0].1)?;
+    println!(
+        "dominant bottlenecks: prefill={}, decode={}",
+        m.dominant_bottleneck(Phase::Prefill),
+        m.dominant_bottleneck(Phase::Decode)
+    );
+    Ok(())
+}

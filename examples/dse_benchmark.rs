@@ -1,0 +1,43 @@
+//! DSE Benchmark demo: generate the three question families, show one
+//! rendered prompt per task, and score the evaluated models (a reduced
+//! Table 3; `cargo bench --bench table3_llm_accuracy` runs the full one).
+//!
+//! ```sh
+//! cargo run --release --example dse_benchmark
+//! ```
+
+use lumina::bench_dse::{run_benchmark, QuestionSet, Task};
+use lumina::llm::{prompts, ModelProfile, SimulatedAnalyst, LanguageModel};
+
+fn main() {
+    // Show one concrete question per task (paper Figure 3).
+    for task in Task::ALL {
+        let qs = QuestionSet::generate_n(task, 1, 7);
+        let q = &qs.questions[0];
+        println!("===== {} =====", task.name());
+        println!("{}", q.prompt);
+        println!(
+            "[ground truth: {}]\n",
+            prompts::letter(q.correct)
+        );
+
+        // Ask the strongest model, enhanced prompt.
+        let mut model = SimulatedAnalyst::qwen3(1);
+        let answer =
+            model.complete(&prompts::system_enhanced(), &q.prompt);
+        println!("qwen3 says: {answer}\n");
+    }
+
+    // Reduced-scale accuracy table.
+    println!("===== reduced Table 3 (30% question counts) =====");
+    let report = run_benchmark(
+        &[
+            ModelProfile::phi4(),
+            ModelProfile::qwen3(),
+            ModelProfile::llama31(),
+        ],
+        2026,
+        0.3,
+    );
+    println!("{}", report.render_table3());
+}

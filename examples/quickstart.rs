@@ -1,0 +1,68 @@
+//! Quickstart: evaluate a design, read its critical path, and run a tiny
+//! LUMINA exploration.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use lumina::baselines::DseMethod;
+use lumina::design::{DesignPoint, DesignSpace, Param};
+use lumina::eval::{BudgetedEvaluator, Evaluator, Phase};
+use lumina::lumina::Lumina;
+use lumina::sim::CompassSim;
+
+fn main() -> lumina::Result<()> {
+    // 1. Evaluate the A100 reference on the detailed simulator and look
+    //    at its critical path.
+    let sim = CompassSim::gpt3();
+    let a100 = DesignPoint::a100();
+    let (metrics, critical_path) = sim.evaluate_detailed(&a100);
+    println!("A100 reference: {a100}");
+    println!(
+        "  TTFT {:.2} ms   TPOT {:.3} ms   area {:.0} mm^2\n",
+        metrics.ttft_ms, metrics.tpot_ms, metrics.area_mm2
+    );
+    println!("{}", critical_path.render(Phase::Prefill));
+    println!("{}", critical_path.render(Phase::Decode));
+
+    // 2. Hand-modify one knob: add a memory channel.
+    let more_bw = a100.with(Param::MemChannels, 6);
+    let mut ev = CompassSim::gpt3();
+    let m = ev.eval(&more_bw)?;
+    println!(
+        "with 6 HBM channels: TPOT {:.3} ms ({:+.1}%), area {:.0} mm^2",
+        m.tpot_ms,
+        (m.tpot_ms / metrics.tpot_ms - 1.0) * 100.0,
+        m.area_mm2
+    );
+
+    // 3. Let LUMINA explore for 20 samples (the paper's §5.3 budget).
+    println!("\nrunning LUMINA, budget = 20 compass evaluations ...");
+    let space = DesignSpace::table1();
+    let mut sim = CompassSim::gpt3();
+    let reference = sim.eval(&a100)?.objectives();
+    let mut budget = BudgetedEvaluator::new(&mut sim, 20);
+    let mut lum = Lumina::with_seed(42);
+    lum.run(&space, &mut budget)?;
+
+    let superior: Vec<_> = budget
+        .log
+        .iter()
+        .filter(|(_, m)| {
+            let o = m.objectives();
+            (0..3).all(|i| o[i] < reference[i])
+        })
+        .collect();
+    println!(
+        "evaluated {} designs, {} strictly better than A100:",
+        budget.spent(),
+        superior.len()
+    );
+    for (d, m) in superior.iter().take(4) {
+        println!(
+            "  {d}\n    TTFT {:.2} ms  TPOT {:.3} ms  area {:.0} mm^2",
+            m.ttft_ms, m.tpot_ms, m.area_mm2
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,98 @@
+"""AOT lowering: JAX (L2+L1) -> HLO *text* artifacts for the Rust runtime.
+
+HLO text, NOT `.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published `xla`
+crate binds) rejects (`proto.id() <= INT_MAX`). The text parser reassigns
+ids, so text round-trips cleanly. See /opt/xla-example/load_hlo.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Emits   roofline_b{1,64,256}.hlo.txt  + meta.json describing the interface.
+
+This is the ONLY place Python touches the system; `make artifacts` is a
+no-op when inputs are unchanged and the Rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import constants as C
+from . import model, workload
+
+BATCH_SIZES = (1, 64, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_batch(spec: workload.WorkloadSpec, batch: int) -> str:
+    # Grid-less single-block lowering (tile_b=None) with the operator
+    # table as a runtime operand: both choices work around xla_extension
+    # 0.5.1 miscompilations of the interpret-mode kernel (explicit-grid
+    # while loops and large baked constants) — see kernels/roofline.py
+    # and model.export_fn. `spec` determines nothing in the lowered
+    # module beyond the table *shape*; the Rust side feeds the values.
+    del spec
+    fn = model.export_fn(tile_b=None)
+    designs = jax.ShapeDtypeStruct((batch, C.N_PARAMS), jnp.float32)
+    table = jax.ShapeDtypeStruct(
+        (C.N_PHASES, C.MAX_OPS, C.N_COLS), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(designs, table))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--workload", default="gpt3-175b",
+                    choices=sorted(model.WORKLOADS))
+    ap.add_argument("--batches", type=int, nargs="*",
+                    default=list(BATCH_SIZES))
+    args = ap.parse_args()
+
+    spec = model.WORKLOADS[args.workload]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    files = {}
+    for b in args.batches:
+        text = lower_batch(spec, b)
+        name = f"roofline_b{b}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        files[str(b)] = name
+        print(f"wrote {name}: {len(text)} chars")
+
+    meta = {
+        "workload": args.workload,
+        "spec": {
+            "d_model": spec.d_model,
+            "n_heads": spec.n_heads,
+            "d_head": spec.d_head,
+            "d_ffn": spec.d_ffn,
+            "tp": spec.tp,
+            "batch": spec.batch,
+            "prefill_seq": spec.prefill_seq,
+            "decode_pos": spec.decode_pos,
+        },
+        "n_params": C.N_PARAMS,
+        "outputs": {"metrics": [0, 3], "stalls": [0, 2, 3]},
+        "batches": files,
+    }
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print("wrote meta.json")
+
+
+if __name__ == "__main__":
+    main()

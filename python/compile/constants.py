@@ -1,0 +1,74 @@
+"""Shared performance/area model constants.
+
+MIRRORED in rust/src/arch/constants.rs — keep the two in lockstep. The Rust
+integration test `artifact_matches_rust_mirror` cross-checks the lowered
+artifact against the Rust mirror on random designs, which catches drift.
+
+Units: seconds, bytes, FLOPs, mm^2. Frequencies in Hz, bandwidths in B/s.
+All math is done in float32 on both sides.
+"""
+
+# ---------------------------------------------------------------- compute
+CLOCK_HZ = 1.41e9           # shader clock (A100-class)
+FLOPS_PER_PE = 2.0          # MAC = 2 FLOPs
+FLOPS_PER_LANE = 2.0        # FMA per vector lane
+K_TILE = 128.0              # systolic K-chunk (weight-stationary reload)
+
+# ---------------------------------------------------------------- memory
+HBM_BPS_PER_CHANNEL = 408.0e9   # one HBM2e stack; 5 ch -> 2.04 TB/s (A100)
+MEM_EFF_BASE = 0.55             # DRAM efficiency floor
+MEM_EFF_L2_SLOPE = 0.08         # + slope * log2(gbuf_mb / 8)
+MEM_EFF_MAX = 0.92
+SRAM_UTIL_FLOOR = 0.25          # worst-case tiling penalty when SRAM-starved
+
+# ----------------------------------------------------------- interconnect
+LINK_BPS = 25.0e9               # NVLink3-class, per link per direction
+NET_EFF = 0.75                  # ring-allreduce protocol efficiency
+ALLREDUCE_LAT_S = 5.0e-6        # per-collective base latency
+
+# ---------------------------------------------------------------- timing
+OP_OVERHEAD_S = 2.0e-6          # per-operator launch/dispatch overhead
+FP16_BYTES = 2.0
+
+# ------------------------------------------------------------------ area
+# Calibrated so the A100 reference config lands at ~826 mm^2 (see the
+# calibration tests on both sides).
+AREA_CORE_BASE = 1.5        # per-core fixed logic (scheduler, LSU, ...)
+AREA_PER_PE = 0.0004        # per fp16 systolic PE
+AREA_PER_LANE = 0.012       # per fp16 vector lane
+AREA_REGFILE = 1.1          # per-core register file
+AREA_SRAM_PER_KB = 0.0055   # per-core scratchpad SRAM
+AREA_L2_PER_MB = 1.9        # global buffer
+AREA_HBM_PHY = 15.0         # per memory channel (PHY + controller)
+AREA_LINK_PHY = 1.5         # per interconnect link
+AREA_UNCORE = 60.0          # command processors, PCIe, misc uncore
+
+# ------------------------------------------------------ design encoding
+# Design vector layout (f32[8]) — order shared with rust/src/design/point.rs
+IDX_LINKS = 0
+IDX_CORES = 1
+IDX_SUBLANES = 2
+IDX_SA = 3          # systolic array height == width
+IDX_VECW = 4
+IDX_SRAM_KB = 5
+IDX_GBUF_MB = 6
+IDX_MEMCH = 7
+N_PARAMS = 8
+
+# Operator-table row layout (f32[8]) per operator:
+COL_KIND = 0        # 0 = tensor matmul, 1 = vector, 2 = comm, -1 = padding
+COL_M = 1
+COL_N = 2
+COL_K = 3
+COL_COUNT = 4       # batched-instance count (e.g. batch*heads)
+COL_FLOPS = 5
+COL_BYTES = 6       # HBM traffic
+COL_COMM = 7        # wire bytes (ring factor already applied)
+N_COLS = 8
+MAX_OPS = 16        # table padded to this many rows per phase
+N_PHASES = 2        # 0 = prefill (TTFT), 1 = decode (TPOT)
+
+KIND_MATMUL = 0.0
+KIND_VECTOR = 1.0
+KIND_COMM = 2.0
+KIND_PAD = -1.0

@@ -1,0 +1,177 @@
+"""Pure-jnp reference oracle for the roofline evaluator.
+
+This is the correctness ground truth for the Pallas kernel
+(`kernels/roofline.py`): a straightforward vectorized implementation of the
+same analytical model, written independently of the kernel's per-op masked
+loop. pytest asserts allclose between the two across shapes and designs, and
+the Rust mirror (`rust/src/sim/roofline.rs`) is cross-checked against the
+lowered artifact at `cargo test` time.
+
+Inputs
+------
+designs : f32[B, 8]   encoded design points (see constants.IDX_*)
+table   : f32[2, 16, 8] padded operator table (see constants.COL_*)
+
+Outputs
+-------
+metrics : f32[B, 3]   (TTFT ms, TPOT ms, area mm^2)
+stalls  : f32[B, 2, 3] per-phase (prefill, decode) time attributed to
+                      (compute, memory, network), in ms
+"""
+
+import jax.numpy as jnp
+
+from .. import constants as C
+
+
+def area_mm2(designs):
+    """Component-wise area model, vectorized over designs [B, 8]."""
+    links = designs[:, C.IDX_LINKS]
+    cores = designs[:, C.IDX_CORES]
+    subl = designs[:, C.IDX_SUBLANES]
+    sa = designs[:, C.IDX_SA]
+    vecw = designs[:, C.IDX_VECW]
+    sram = designs[:, C.IDX_SRAM_KB]
+    gbuf = designs[:, C.IDX_GBUF_MB]
+    memch = designs[:, C.IDX_MEMCH]
+
+    per_core = (
+        C.AREA_CORE_BASE
+        + subl * (sa * sa * C.AREA_PER_PE + vecw * C.AREA_PER_LANE)
+        + C.AREA_REGFILE
+        + sram * C.AREA_SRAM_PER_KB
+    )
+    return (
+        cores * per_core
+        + gbuf * C.AREA_L2_PER_MB
+        + memch * C.AREA_HBM_PHY
+        + links * C.AREA_LINK_PHY
+        + C.AREA_UNCORE
+    )
+
+
+def mem_bandwidth(designs):
+    """Effective HBM bandwidth in B/s, vectorized over designs."""
+    gbuf = designs[:, C.IDX_GBUF_MB]
+    memch = designs[:, C.IDX_MEMCH]
+    eff = jnp.clip(
+        C.MEM_EFF_BASE + C.MEM_EFF_L2_SLOPE * jnp.log2(gbuf / 8.0),
+        C.MEM_EFF_BASE,
+        C.MEM_EFF_MAX,
+    )
+    return memch * C.HBM_BPS_PER_CHANNEL * eff
+
+
+def tensor_peak(designs):
+    """Peak systolic throughput in FLOP/s."""
+    cores = designs[:, C.IDX_CORES]
+    subl = designs[:, C.IDX_SUBLANES]
+    sa = designs[:, C.IDX_SA]
+    return cores * subl * sa * sa * C.FLOPS_PER_PE * C.CLOCK_HZ
+
+
+def vector_peak(designs):
+    cores = designs[:, C.IDX_CORES]
+    subl = designs[:, C.IDX_SUBLANES]
+    vecw = designs[:, C.IDX_VECW]
+    return cores * subl * vecw * C.FLOPS_PER_LANE * C.CLOCK_HZ
+
+
+def net_bandwidth(designs):
+    return designs[:, C.IDX_LINKS] * C.LINK_BPS * C.NET_EFF
+
+
+def matmul_util(designs, M, N, K):
+    """Systolic-array utilization for an M x N x K matmul instance.
+
+    Product of: wave-edge utilization (partial tiles in M and N), K-chunk
+    drain overhead (weight-stationary reload every K_TILE), and an
+    SRAM-capacity tiling penalty when the per-array working set does not
+    fit the per-core scratchpad.
+    """
+    sa = designs[:, C.IDX_SA]
+    sram = designs[:, C.IDX_SRAM_KB]
+
+    tiles_m = jnp.ceil(M / sa)
+    tiles_n = jnp.ceil(N / sa)
+    edge = (M * N) / (tiles_m * sa * tiles_n * sa)
+
+    kt = jnp.minimum(K, C.K_TILE)
+    drain = kt / (kt + sa)
+
+    sram_req = (2.0 * sa * kt + sa * sa) * C.FP16_BYTES / 1024.0
+    sram_f = jnp.clip(sram / sram_req, C.SRAM_UTIL_FLOOR, 1.0)
+    return edge * drain * sram_f, tiles_m * tiles_n
+
+
+def wave_quant(designs, tiles):
+    """Wave quantization: tiles spread over cores*sublanes arrays."""
+    arrays = designs[:, C.IDX_CORES] * designs[:, C.IDX_SUBLANES]
+    waves = jnp.ceil(tiles / arrays)
+    return tiles / (waves * arrays)
+
+
+def evaluate(designs, table):
+    """Reference roofline evaluation. Returns (metrics, stalls)."""
+    designs = jnp.asarray(designs, jnp.float32)
+    table = jnp.asarray(table, jnp.float32)
+    B = designs.shape[0]
+
+    t_peak = tensor_peak(designs)
+    v_peak = vector_peak(designs)
+    m_bw = mem_bandwidth(designs)
+    n_bw = net_bandwidth(designs)
+
+    phase_time = []
+    stalls = []
+    for p in range(C.N_PHASES):
+        total = jnp.zeros((B,), jnp.float32)
+        bucket = [jnp.zeros((B,), jnp.float32) for _ in range(3)]
+        for o in range(C.MAX_OPS):
+            row = table[p, o]
+            kind = row[C.COL_KIND]
+            M, N, K = row[C.COL_M], row[C.COL_N], row[C.COL_K]
+            count = row[C.COL_COUNT]
+            flops = row[C.COL_FLOPS]
+            bytes_ = row[C.COL_BYTES]
+            comm = row[C.COL_COMM]
+
+            util, tiles_i = matmul_util(
+                designs, jnp.maximum(M, 1.0), jnp.maximum(N, 1.0),
+                jnp.maximum(K, 1.0))
+            quant = wave_quant(designs, tiles_i * jnp.maximum(count, 1.0))
+            t_tensor = flops / (t_peak * util * quant)
+            t_vec = flops / v_peak
+            t_mem = bytes_ / m_bw
+            t_net = comm / n_bw + C.ALLREDUCE_LAT_S
+
+            is_mm = kind == C.KIND_MATMUL
+            is_vec = kind == C.KIND_VECTOR
+            is_comm = kind == C.KIND_COMM
+
+            t_compute = jnp.where(is_mm, t_tensor, t_vec)
+            t_op = jnp.where(
+                is_comm,
+                jnp.maximum(t_net, t_mem),
+                jnp.maximum(t_compute, t_mem),
+            ) + C.OP_OVERHEAD_S
+            t_op = jnp.where(is_mm | is_vec | is_comm, t_op, 0.0)
+
+            live = t_op > 0.0
+            comp_win = (~is_comm) & (t_compute >= t_mem) & live
+            net_win = is_comm & (t_net >= t_mem) & live
+            mem_win = live & ~comp_win & ~net_win
+
+            total = total + t_op
+            bucket[0] = bucket[0] + jnp.where(comp_win, t_op, 0.0)
+            bucket[1] = bucket[1] + jnp.where(mem_win, t_op, 0.0)
+            bucket[2] = bucket[2] + jnp.where(net_win, t_op, 0.0)
+        phase_time.append(total)
+        stalls.append(jnp.stack(bucket, axis=-1))
+
+    metrics = jnp.stack(
+        [phase_time[0] * 1e3, phase_time[1] * 1e3, area_mm2(designs)],
+        axis=-1,
+    )
+    stalls = jnp.stack(stalls, axis=1) * 1e3  # [B, 2, 3] in ms
+    return metrics, stalls

@@ -1,0 +1,182 @@
+"""L1 Pallas kernel: batched roofline evaluation of GPU design points.
+
+This is the compute hot-spot of the whole system: every DSE method
+(LUMINA and all five baselines) funnels candidate designs through this
+evaluator, and the Fig.4/5 races evaluate 1000 designs x 6 methods x many
+trials. The kernel evaluates a *tile* of designs against the full operator
+table per grid step.
+
+TPU mapping (see DESIGN.md "Hardware-Adaptation"): the design batch is the
+parallel axis — `BlockSpec((TILE_B, 8))` streams HBM->VMEM tiles of design
+vectors; the operator table is small (2x16x8 floats) and broadcast whole
+into VMEM for every grid step; all per-op math is elementwise over the
+design lanes (VPU work, not MXU), so the tile size is chosen for VMEM
+residency rather than MXU shape. `interpret=True` everywhere — the CPU PJRT
+client cannot execute Mosaic custom-calls, and this artifact must run from
+the Rust coordinator on CPU.
+
+Correctness oracle: `kernels/ref.py` (pure jnp, vectorized formulation);
+pytest sweeps shapes/designs via hypothesis and asserts allclose.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import constants as C
+
+DEFAULT_TILE_B = 64
+
+
+def _kernel(d_ref, t_ref, m_ref, s_ref):
+    """Evaluate one tile of designs against the whole operator table.
+
+    d_ref: f32[TILE, 8]  designs
+    t_ref: f32[2, 16, 8] operator table (broadcast to every grid step)
+    m_ref: f32[TILE, 3]  out metrics (ttft ms, tpot ms, area mm^2)
+    s_ref: f32[TILE, 2, 3] out stall buckets (ms)
+    """
+    d = d_ref[...]
+    links = d[:, C.IDX_LINKS]
+    cores = d[:, C.IDX_CORES]
+    subl = d[:, C.IDX_SUBLANES]
+    sa = d[:, C.IDX_SA]
+    vecw = d[:, C.IDX_VECW]
+    sram = d[:, C.IDX_SRAM_KB]
+    gbuf = d[:, C.IDX_GBUF_MB]
+    memch = d[:, C.IDX_MEMCH]
+
+    # -------- per-design derived rates (computed once per tile) --------
+    arrays = cores * subl
+    t_peak = arrays * sa * sa * C.FLOPS_PER_PE * C.CLOCK_HZ
+    v_peak = arrays * vecw * C.FLOPS_PER_LANE * C.CLOCK_HZ
+    mem_eff = jnp.clip(
+        C.MEM_EFF_BASE + C.MEM_EFF_L2_SLOPE * jnp.log2(gbuf / 8.0),
+        C.MEM_EFF_BASE, C.MEM_EFF_MAX)
+    m_bw = memch * C.HBM_BPS_PER_CHANNEL * mem_eff
+    n_bw = links * C.LINK_BPS * C.NET_EFF
+
+    area_core = (
+        C.AREA_CORE_BASE
+        + subl * (sa * sa * C.AREA_PER_PE + vecw * C.AREA_PER_LANE)
+        + C.AREA_REGFILE
+        + sram * C.AREA_SRAM_PER_KB
+    )
+    area = (cores * area_core + gbuf * C.AREA_L2_PER_MB
+            + memch * C.AREA_HBM_PHY + links * C.AREA_LINK_PHY
+            + C.AREA_UNCORE)
+
+    zeros = jnp.zeros_like(sa)
+    phase_totals = []
+    buckets = []
+    # The double loop is unrolled at trace time (2 x 16 fixed rows); every
+    # body statement is an elementwise op over the TILE design lanes.
+    for p in range(C.N_PHASES):
+        total = zeros
+        b_comp, b_mem, b_net = zeros, zeros, zeros
+        for o in range(C.MAX_OPS):
+            kind = t_ref[p, o, C.COL_KIND]
+            M = jnp.maximum(t_ref[p, o, C.COL_M], 1.0)
+            N = jnp.maximum(t_ref[p, o, C.COL_N], 1.0)
+            K = jnp.maximum(t_ref[p, o, C.COL_K], 1.0)
+            count = jnp.maximum(t_ref[p, o, C.COL_COUNT], 1.0)
+            flops = t_ref[p, o, C.COL_FLOPS]
+            bytes_ = t_ref[p, o, C.COL_BYTES]
+            comm = t_ref[p, o, C.COL_COMM]
+
+            # systolic utilization: edge x drain x sram, then wave quant
+            tiles_m = jnp.ceil(M / sa)
+            tiles_n = jnp.ceil(N / sa)
+            edge = (M * N) / (tiles_m * sa * tiles_n * sa)
+            kt = jnp.minimum(K, C.K_TILE)
+            drain = kt / (kt + sa)
+            sram_req = (2.0 * sa * kt + sa * sa) * C.FP16_BYTES / 1024.0
+            sram_f = jnp.clip(sram / sram_req, C.SRAM_UTIL_FLOOR, 1.0)
+            tiles = tiles_m * tiles_n * count
+            waves = jnp.ceil(tiles / arrays)
+            quant = tiles / (waves * arrays)
+
+            t_tensor = flops / (t_peak * edge * drain * sram_f * quant)
+            t_vec = flops / v_peak
+            t_mem = bytes_ / m_bw
+            t_net = comm / n_bw + C.ALLREDUCE_LAT_S
+
+            is_mm = kind == C.KIND_MATMUL
+            is_vec = kind == C.KIND_VECTOR
+            is_comm = kind == C.KIND_COMM
+
+            t_compute = jnp.where(is_mm, t_tensor, t_vec)
+            t_op = jnp.where(is_comm,
+                             jnp.maximum(t_net, t_mem),
+                             jnp.maximum(t_compute, t_mem))
+            t_op = jnp.where(is_mm | is_vec | is_comm,
+                             t_op + C.OP_OVERHEAD_S, 0.0)
+
+            live = t_op > 0.0
+            comp_win = (~is_comm) & (t_compute >= t_mem) & live
+            net_win = is_comm & (t_net >= t_mem) & live
+            mem_win = live & ~comp_win & ~net_win
+
+            total = total + t_op
+            b_comp = b_comp + jnp.where(comp_win, t_op, 0.0)
+            b_mem = b_mem + jnp.where(mem_win, t_op, 0.0)
+            b_net = b_net + jnp.where(net_win, t_op, 0.0)
+        phase_totals.append(total)
+        buckets.append(jnp.stack([b_comp, b_mem, b_net], axis=-1))
+
+    m_ref[...] = jnp.stack(
+        [phase_totals[0] * 1e3, phase_totals[1] * 1e3, area], axis=-1)
+    s_ref[...] = jnp.stack(buckets, axis=1) * 1e3
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b",))
+def evaluate(designs, table, tile_b=DEFAULT_TILE_B):
+    """Roofline-evaluate a batch of designs.
+
+    designs: f32[B, 8]  (B must be a multiple of tile_b, or < tile_b)
+    table:   f32[2, 16, 8]
+    returns (metrics f32[B, 3], stalls f32[B, 2, 3])
+
+    tile_b=None selects the grid-less single-block lowering: the whole
+    batch is one VMEM block and no grid loop is emitted. This is what
+    the AOT artifacts use — the `while` loop that an explicit grid
+    lowers to under interpret mode is miscompiled by the xla_extension
+    0.5.1 runtime the Rust `xla` crate binds (times silently collapse
+    to zero), whereas the grid-less form round-trips exactly. The tiled
+    form remains the TPU-idiomatic HBM->VMEM schedule and is what the
+    pytest suite exercises against the oracle.
+    """
+    B = designs.shape[0]
+    designs = designs.astype(jnp.float32)
+    table = table.astype(jnp.float32)
+    out_shape = [
+        jax.ShapeDtypeStruct((B, 3), jnp.float32),
+        jax.ShapeDtypeStruct((B, C.N_PHASES, 3), jnp.float32),
+    ]
+    if tile_b is None or tile_b >= B:
+        # Single block, no grid: safe for the PJRT-0.5.1 runtime.
+        return pl.pallas_call(
+            _kernel,
+            out_shape=out_shape,
+            interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+        )(designs, table)
+    tile = tile_b
+    assert B % tile == 0, f"batch {B} not divisible by tile {tile}"
+    grid = (B // tile,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, C.N_PARAMS), lambda i: (i, 0)),
+            pl.BlockSpec((C.N_PHASES, C.MAX_OPS, C.N_COLS),
+                         lambda i: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, 3), lambda i: (i, 0)),
+            pl.BlockSpec((tile, C.N_PHASES, 3), lambda i: (i, 0, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(designs, table)

@@ -1,0 +1,52 @@
+"""L2: the JAX evaluation model that gets AOT-lowered for the Rust runtime.
+
+The paper's "simulation environment" for the roofline experiments is this
+function: designs in, (TTFT, TPOT, area) + critical-path stall stacks out.
+It calls the L1 Pallas kernel so both layers lower into a single HLO module.
+The operator table for the chosen workload is baked in as a constant at
+lowering time — a new workload means re-running `make artifacts`, never
+Python on the request path.
+"""
+
+import jax.numpy as jnp
+
+from . import workload
+from .kernels import roofline
+
+WORKLOADS = {
+    "gpt3-175b": workload.GPT3_175B,
+    "gpt3-tiny": workload.GPT3_TINY,
+}
+
+
+def eval_fn(spec: workload.WorkloadSpec, tile_b=roofline.DEFAULT_TILE_B):
+    """Build the designs -> (metrics, stalls) evaluation function."""
+    table = jnp.asarray(workload.op_table(spec), jnp.float32)
+
+    def fn(designs):
+        metrics, stalls = roofline.evaluate(designs, table, tile_b=tile_b)
+        return metrics, stalls
+
+    return fn
+
+
+def export_fn(tile_b=None):
+    """The AOT-exported signature: (designs, table) -> (metrics, stalls).
+
+    The operator table is a *runtime argument*, not a baked constant, for
+    two reasons: (a) the Rust coordinator can then switch workloads
+    without re-lowering, and (b) the xla_extension 0.5.1 runtime the Rust
+    `xla` crate binds miscompiles the interpret-mode kernel when the
+    table is a large embedded constant (metric lanes silently collapse to
+    zero) — passing it as an operand round-trips exactly.
+    """
+
+    def fn(designs, table):
+        return roofline.evaluate(designs, table, tile_b=tile_b)
+
+    return fn
+
+
+def batched_eval(designs, spec=workload.GPT3_175B):
+    """Convenience eager entry point (tests, sensitivity sweeps)."""
+    return eval_fn(spec)(jnp.asarray(designs, jnp.float32))

@@ -1,0 +1,126 @@
+"""GPT-3 inference operator tables (compile-path copy).
+
+Builds the per-layer operator tables for the prefill (TTFT) and decode
+(TPOT) phases of a tensor-parallel GPT-3-175B layer, matching the paper's
+setup (Section 5.3): TP=8, batch 8, prefill sequence 2048, TPOT measured at
+output token 1024, FP16 everywhere.
+
+MIRRORED in rust/src/workload/gpt3.rs — the Rust runtime carries the same
+table for the detailed simulator and the Rust roofline mirror; the artifact
+bakes this table in as constants at lowering time.
+"""
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import constants as C
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """Model + deployment hyper-parameters defining the evaluation trace."""
+
+    d_model: int = 12288
+    n_heads: int = 96
+    d_head: int = 128
+    d_ffn: int = 49152
+    tp: int = 8
+    batch: int = 8
+    prefill_seq: int = 2048
+    decode_pos: int = 1024  # TPOT measured at this output token
+
+    @property
+    def heads_local(self) -> int:
+        return self.n_heads // self.tp
+
+    @property
+    def ffn_local(self) -> int:
+        return self.d_ffn // self.tp
+
+    @property
+    def kv_len(self) -> int:
+        return self.prefill_seq + self.decode_pos
+
+
+GPT3_175B = WorkloadSpec()
+
+# A small config for fast tests / examples.
+GPT3_TINY = WorkloadSpec(
+    d_model=1024, n_heads=16, d_head=64, d_ffn=4096, tp=8,
+    batch=8, prefill_seq=256, decode_pos=128,
+)
+
+
+def _matmul(M, N, K, count=1):
+    flops = 2.0 * M * N * K * count
+    bytes_ = (M * K + K * N + M * N) * count * C.FP16_BYTES
+    return [C.KIND_MATMUL, M, N, K, count, flops, bytes_, 0.0]
+
+
+def _vector(elems, flops_per_elem=8.0):
+    flops = flops_per_elem * elems
+    bytes_ = 2.0 * elems * C.FP16_BYTES  # read + write
+    return [C.KIND_VECTOR, 0.0, 0.0, 0.0, 1.0, flops, bytes_, 0.0]
+
+
+def _allreduce(raw_bytes, tp):
+    ring = 2.0 * (tp - 1) / tp
+    wire = ring * raw_bytes
+    # allreduce also moves data through HBM on each rank (~2x the buffer)
+    return [C.KIND_COMM, 0.0, 0.0, 0.0, 1.0, 0.0, 2.0 * raw_bytes, wire]
+
+
+def prefill_ops(w: WorkloadSpec):
+    """Operator list for one layer of prefill (TTFT phase)."""
+    T = w.batch * w.prefill_seq
+    S = w.prefill_seq
+    hl, d, dh = w.heads_local, w.d_model, w.d_head
+    ops = [
+        _vector(T * d),                                    # layernorm 1
+        _matmul(T, 3 * d // w.tp, d),                      # QKV projection
+        _matmul(S, S, dh, count=w.batch * hl),             # scores QK^T
+        _vector(w.batch * hl * S * S, flops_per_elem=5.0),  # softmax
+        _matmul(S, dh, S, count=w.batch * hl),             # attn @ V
+        _matmul(T, d, d // w.tp),                          # output proj
+        _allreduce(T * d * C.FP16_BYTES, w.tp),            # AR after attn
+        _vector(T * d),                                    # layernorm 2
+        _matmul(T, w.ffn_local, d),                        # MLP up
+        _vector(T * w.ffn_local),                          # GeLU
+        _matmul(T, d, w.ffn_local),                        # MLP down
+        _allreduce(T * d * C.FP16_BYTES, w.tp),            # AR after MLP
+    ]
+    return ops
+
+
+def decode_ops(w: WorkloadSpec):
+    """Operator list for one layer of decode at output token `decode_pos`."""
+    B = w.batch
+    Sk = w.kv_len
+    hl, d, dh = w.heads_local, w.d_model, w.d_head
+    ops = [
+        _vector(B * d),                                    # layernorm 1
+        _matmul(B, 3 * d // w.tp, d),                      # QKV projection
+        _matmul(1, Sk, dh, count=B * hl),                  # scores (GEMV)
+        _vector(B * hl * Sk, flops_per_elem=5.0),          # softmax
+        _matmul(1, dh, Sk, count=B * hl),                  # attn @ V
+        _matmul(B, d, d // w.tp),                          # output proj
+        _allreduce(B * d * C.FP16_BYTES, w.tp),            # AR after attn
+        _vector(B * d),                                    # layernorm 2
+        _matmul(B, w.ffn_local, d),                        # MLP up
+        _vector(B * w.ffn_local),                          # GeLU
+        _matmul(B, d, w.ffn_local),                        # MLP down
+        _allreduce(B * d * C.FP16_BYTES, w.tp),            # AR after MLP
+    ]
+    return ops
+
+
+def op_table(w: WorkloadSpec = GPT3_175B) -> np.ndarray:
+    """Padded [N_PHASES, MAX_OPS, N_COLS] float32 operator table."""
+    tbl = np.full((C.N_PHASES, C.MAX_OPS, C.N_COLS), 0.0, dtype=np.float32)
+    tbl[:, :, C.COL_KIND] = C.KIND_PAD
+    for p, ops in enumerate((prefill_ops(w), decode_ops(w))):
+        assert len(ops) <= C.MAX_OPS, "operator table overflow"
+        for i, row in enumerate(ops):
+            tbl[p, i, :] = np.asarray(row, dtype=np.float32)
+    return tbl

@@ -1,0 +1,81 @@
+"""Workload-table construction tests: shapes, padding, FLOP accounting."""
+
+import numpy as np
+import pytest
+
+from compile import constants as C
+from compile import workload
+
+
+@pytest.fixture(params=[workload.GPT3_175B, workload.GPT3_TINY],
+                ids=["175b", "tiny"])
+def spec(request):
+    return request.param
+
+
+def test_table_shape(spec):
+    tbl = workload.op_table(spec)
+    assert tbl.shape == (C.N_PHASES, C.MAX_OPS, C.N_COLS)
+    assert tbl.dtype == np.float32
+
+
+def test_padding_rows_marked(spec):
+    tbl = workload.op_table(spec)
+    for p in range(C.N_PHASES):
+        n_live = len(workload.prefill_ops(spec)) if p == 0 else \
+            len(workload.decode_ops(spec))
+        assert (tbl[p, :n_live, C.COL_KIND] != C.KIND_PAD).all()
+        assert (tbl[p, n_live:, C.COL_KIND] == C.KIND_PAD).all()
+        # padding rows are all-zero except the kind sentinel
+        assert (tbl[p, n_live:, C.COL_M:] == 0).all()
+
+
+def test_prefill_flops_match_analytic(spec):
+    """Total matmul FLOPs of one prefill layer = 2*T*(12*d^2/tp) plus
+    attention 2*2*B*hl*S^2*dh."""
+    tbl = workload.op_table(spec)
+    mm = tbl[0][tbl[0, :, C.COL_KIND] == C.KIND_MATMUL]
+    total = mm[:, C.COL_FLOPS].sum()
+    T = spec.batch * spec.prefill_seq
+    d = spec.d_model
+    proj = 2.0 * T * (4 * d * d + 2 * d * spec.d_ffn) / spec.tp
+    attn = 2 * 2.0 * spec.batch * spec.heads_local * \
+        spec.prefill_seq ** 2 * spec.d_head
+    np.testing.assert_allclose(total, proj + attn, rtol=1e-6)
+
+
+def test_decode_kv_bytes_dominate_attention(spec):
+    tbl = workload.op_table(spec)
+    dec = tbl[1]
+    # rows 2 and 4 are scores and attn@V; their bytes should be ~KV size
+    kv = 2 * spec.batch * spec.kv_len * spec.d_head * \
+        spec.heads_local * C.FP16_BYTES
+    got = dec[2, C.COL_BYTES] + dec[4, C.COL_BYTES]
+    assert 0.8 * kv < got < 1.3 * kv
+
+
+def test_allreduce_ring_factor(spec):
+    tbl = workload.op_table(spec)
+    ar = tbl[0][tbl[0, :, C.COL_KIND] == C.KIND_COMM]
+    assert ar.shape[0] == 2
+    raw = spec.batch * spec.prefill_seq * spec.d_model * C.FP16_BYTES
+    ring = 2.0 * (spec.tp - 1) / spec.tp
+    np.testing.assert_allclose(ar[:, C.COL_COMM], raw * ring, rtol=1e-6)
+
+
+def test_flops_scale_with_batch():
+    small = workload.WorkloadSpec(batch=4)
+    big = workload.WorkloadSpec(batch=8)
+    ts, tb = workload.op_table(small), workload.op_table(big)
+    # QKV projection row: flops linear in batch
+    assert tb[0, 1, C.COL_FLOPS] == pytest.approx(
+        2 * ts[0, 1, C.COL_FLOPS], rel=1e-6)
+
+
+def test_decode_position_grows_kv(spec):
+    late = workload.WorkloadSpec(
+        d_model=spec.d_model, n_heads=spec.n_heads, d_head=spec.d_head,
+        d_ffn=spec.d_ffn, tp=spec.tp, batch=spec.batch,
+        prefill_seq=spec.prefill_seq, decode_pos=spec.decode_pos * 2)
+    t0, t1 = workload.op_table(spec), workload.op_table(late)
+    assert t1[1, 2, C.COL_BYTES] > t0[1, 2, C.COL_BYTES]

@@ -1,0 +1,162 @@
+//! Ablation study of LUMINA's design choices (DESIGN.md experiment
+//! index): which engine contributes what. Variants:
+//!
+//! * full           — qwen3 backbone, enhanced prompts (the paper system)
+//! * no-enhanced    — default prompts (no §5.2 corrective rules); the
+//!                    SE still enforces its own constraints, so this
+//!                    isolates the *prompt-rule* contribution
+//! * backbone=phi4  — weaker backbone model
+//! * backbone=llama — weakest backbone model
+//! * no-quane       — cheap (area-only) AHK even on large budgets:
+//!                    isolates the sensitivity study's contribution
+//!
+//! Run: `cargo bench --bench ablation_lumina`
+//! Output: stdout table + `out/ablation_lumina.csv`.
+
+use lumina::baselines::DseMethod;
+use lumina::csv_row;
+use lumina::design::{DesignPoint, DesignSpace};
+use lumina::eval::BudgetedEvaluator;
+use lumina::figures::race::{score_trajectory, EvaluatorKind};
+use lumina::llm::ModelProfile;
+use lumina::lumina::{Lumina, LuminaConfig};
+use lumina::util::bench::section;
+use lumina::util::csv::Csv;
+
+struct Variant {
+    name: &'static str,
+    config: fn(u64) -> LuminaConfig,
+    enhanced: bool,
+}
+
+fn base(seed: u64) -> LuminaConfig {
+    LuminaConfig { seed, ..Default::default() }
+}
+
+fn main() {
+    let samples = std::env::var("LUMINA_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+    let trials = 3usize;
+    section(&format!(
+        "LUMINA ablations ({samples} roofline samples x {trials} trials \
+         + 20 compass samples)"
+    ));
+
+    let variants = [
+        Variant { name: "full", config: base, enhanced: true },
+        Variant {
+            name: "no-enhanced-rules",
+            config: base,
+            enhanced: false,
+        },
+        Variant {
+            name: "backbone=phi4",
+            config: |s| LuminaConfig {
+                seed: s,
+                model: ModelProfile::phi4(),
+                ..Default::default()
+            },
+            enhanced: true,
+        },
+        Variant {
+            name: "backbone=llama3.1",
+            config: |s| LuminaConfig {
+                seed: s,
+                model: ModelProfile::llama31(),
+                ..Default::default()
+            },
+            enhanced: true,
+        },
+        Variant {
+            name: "no-quane",
+            config: |s| LuminaConfig {
+                seed: s,
+                full_quane_threshold: usize::MAX,
+                ..Default::default()
+            },
+            enhanced: true,
+        },
+    ];
+
+    let space = DesignSpace::table1();
+    let mut csv = Csv::new(&[
+        "variant",
+        "roofline_phv",
+        "roofline_eff",
+        "roofline_superior",
+        "compass20_superior",
+    ]);
+    println!(
+        "{:<20} {:>9} {:>9} {:>10} {:>14}",
+        "variant", "PHV", "eff", "superior", "compass20 sup"
+    );
+
+    let mut roof = EvaluatorKind::RooflinePjrt.make();
+    let roof_ref =
+        roof.eval(&DesignPoint::a100()).unwrap().objectives();
+    let mut compass = EvaluatorKind::Compass.make();
+    let compass_ref =
+        compass.eval(&DesignPoint::a100()).unwrap().objectives();
+
+    for v in &variants {
+        let mut phv = 0.0;
+        let mut eff = 0.0;
+        let mut superior = 0usize;
+        for trial in 0..trials {
+            let seed = 1000 + trial as u64;
+            let mut cfg = (v.config)(seed);
+            if !v.enhanced {
+                cfg = LuminaConfig { ..cfg };
+            }
+            let mut lum = Lumina::new(cfg);
+            if !v.enhanced {
+                lum.use_default_prompts = true;
+            }
+            let mut be =
+                BudgetedEvaluator::new(roof.as_mut(), samples);
+            lum.run(&space, &mut be).unwrap();
+            let traj: Vec<_> = be
+                .log
+                .iter()
+                .map(|(d, m)| (*d, m.objectives()))
+                .collect();
+            let r = score_trajectory("lumina", trial, &traj, &roof_ref);
+            phv += r.phv / trials as f64;
+            eff += r.sample_efficiency / trials as f64;
+            superior += r.superior / trials;
+        }
+        // Compass 20-sample budget (single seed; the e2e test covers
+        // multi-seed robustness).
+        let mut cfg = (v.config)(7);
+        let mut lum = Lumina::new(cfg.clone());
+        if !v.enhanced {
+            lum.use_default_prompts = true;
+        }
+        cfg.full_quane_threshold = cfg.full_quane_threshold.max(100);
+        let mut be = BudgetedEvaluator::new(compass.as_mut(), 20);
+        lum.run(&space, &mut be).unwrap();
+        let traj: Vec<_> = be
+            .log
+            .iter()
+            .map(|(d, m)| (*d, m.objectives()))
+            .collect();
+        let c20 =
+            score_trajectory("lumina", 0, &traj, &compass_ref).superior;
+
+        println!(
+            "{:<20} {:>9.4} {:>9.4} {:>10} {:>14}",
+            v.name, phv, eff, superior, c20
+        );
+        csv.row(csv_row![
+            v.name,
+            format!("{phv:.4}"),
+            format!("{eff:.4}"),
+            superior,
+            c20
+        ]);
+    }
+    csv.write("out/ablation_lumina.csv").unwrap();
+    println!("wrote out/ablation_lumina.csv");
+}

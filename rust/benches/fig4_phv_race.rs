@@ -1,0 +1,77 @@
+//! Regenerates paper **Figure 4** (mean PHV vs sample efficiency among
+//! DSE methods, 1,000 samples, multiple trials, roofline evaluation) and
+//! prints the Table 2 qualitative summary with measured values.
+//!
+//! Run: `cargo bench --bench fig4_phv_race`
+//! Env:  LUMINA_SAMPLES / LUMINA_TRIALS to resize.
+//! Output: stdout summary + `out/fig4_phv_race.csv`.
+
+use lumina::csv_row;
+use lumina::figures::race::{aggregate, run_race, EvaluatorKind, RaceConfig};
+use lumina::util::bench::section;
+use lumina::util::csv::Csv;
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    let cfg = RaceConfig {
+        samples: env_usize("LUMINA_SAMPLES", 1000),
+        trials: env_usize("LUMINA_TRIALS", 5),
+        seed: 2026,
+        evaluator: EvaluatorKind::RooflinePjrt,
+    };
+    section(&format!(
+        "Figure 4: mean PHV vs sample efficiency ({} samples x {} trials)",
+        cfg.samples, cfg.trials
+    ));
+    let t0 = std::time::Instant::now();
+    let results = run_race(&cfg).expect("race failed");
+    let agg = aggregate(&results);
+    println!(
+        "{:<16} {:>10} {:>10} {:>12} {:>10}",
+        "method", "mean PHV", "std PHV", "sample eff", "superior"
+    );
+    let mut best_other = (0.0f64, 0.0f64); // (phv, eff) best non-lumina
+    let mut lumina = (0.0f64, 0.0f64);
+    for (m, phv, eff, std) in &agg {
+        let superior: usize = results
+            .iter()
+            .filter(|r| r.method == *m)
+            .map(|r| r.superior)
+            .sum::<usize>()
+            / cfg.trials;
+        println!(
+            "{m:<16} {phv:>10.4} {std:>10.4} {eff:>12.4} {superior:>10}"
+        );
+        if *m == "lumina" {
+            lumina = (*phv, *eff);
+        } else {
+            best_other.0 = best_other.0.max(*phv);
+            best_other.1 = best_other.1.max(*eff);
+        }
+    }
+    println!(
+        "\nLUMINA vs best baseline: PHV {:+.1}%  sample-efficiency {:.1}x \
+         (paper: +32.9%, 17.5x)",
+        (lumina.0 / best_other.0 - 1.0) * 100.0,
+        lumina.1 / best_other.1.max(1e-9),
+    );
+    println!("race wall time: {:.1}s", t0.elapsed().as_secs_f64());
+
+    let mut csv = Csv::new(&[
+        "method", "trial", "phv", "sample_efficiency", "superior",
+    ]);
+    for r in &results {
+        csv.row(csv_row![
+            r.method,
+            r.trial,
+            format!("{:.6}", r.phv),
+            format!("{:.6}", r.sample_efficiency),
+            r.superior
+        ]);
+    }
+    csv.write("out/fig4_phv_race.csv").unwrap();
+    println!("wrote out/fig4_phv_race.csv");
+}

@@ -1,0 +1,77 @@
+//! Regenerates paper **Figure 5**: the per-trial distribution of PHV vs
+//! sample efficiency for every method (including the ACO best-to-worst
+//! normalized-PHV spread observation, paper: up to 1.82x).
+//!
+//! Run: `cargo bench --bench fig5_distribution`
+//! Output: stdout spread table + `out/fig5_distribution.csv`.
+
+use lumina::csv_row;
+use lumina::figures::race::{run_race, EvaluatorKind, RaceConfig};
+use lumina::stats::Summary;
+use lumina::util::bench::section;
+use lumina::util::csv::Csv;
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    let cfg = RaceConfig {
+        samples: env_usize("LUMINA_SAMPLES", 1000),
+        trials: env_usize("LUMINA_TRIALS", 8),
+        seed: 90210,
+        evaluator: EvaluatorKind::RooflinePjrt,
+    };
+    section(&format!(
+        "Figure 5: PHV / sample-efficiency distribution ({} trials)",
+        cfg.trials
+    ));
+    let results = run_race(&cfg).expect("race failed");
+
+    let methods: Vec<&str> = {
+        let mut ms: Vec<&str> =
+            results.iter().map(|r| r.method).collect();
+        ms.dedup();
+        ms.truncate(6);
+        ms
+    };
+    println!(
+        "{:<16} {:>10} {:>10} {:>10} {:>14}",
+        "method", "PHV min", "PHV max", "spread x", "eff median"
+    );
+    for m in &methods {
+        let phvs: Vec<f64> = results
+            .iter()
+            .filter(|r| r.method == *m)
+            .map(|r| r.phv)
+            .collect();
+        let effs: Vec<f64> = results
+            .iter()
+            .filter(|r| r.method == *m)
+            .map(|r| r.sample_efficiency)
+            .collect();
+        let s = Summary::of(&phvs);
+        let e = Summary::of(&effs);
+        println!(
+            "{m:<16} {:>10.4} {:>10.4} {:>10.2} {:>14.4}",
+            s.min,
+            s.max,
+            s.spread_ratio(),
+            e.median
+        );
+    }
+
+    let mut csv = Csv::new(&[
+        "method", "trial", "phv", "sample_efficiency",
+    ]);
+    for r in &results {
+        csv.row(csv_row![
+            r.method,
+            r.trial,
+            format!("{:.6}", r.phv),
+            format!("{:.6}", r.sample_efficiency)
+        ]);
+    }
+    csv.write("out/fig5_distribution.csv").unwrap();
+    println!("wrote out/fig5_distribution.csv");
+}

@@ -1,0 +1,114 @@
+//! §Perf hot-path microbenchmarks: the batched PJRT roofline evaluator
+//! (the system's compute hot-spot), the Rust-mirror evaluator, the
+//! detailed compass simulator, the PHV kernel, and a full LUMINA
+//! iteration. Records the numbers EXPERIMENTS.md §Perf tracks.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use lumina::baselines::DseMethod;
+use lumina::design::{sample, DesignPoint, DesignSpace};
+use lumina::eval::{BudgetedEvaluator, Evaluator};
+use lumina::lumina::Lumina;
+use lumina::pareto::{hypervolume, normalize, Objectives, PHV_REF};
+use lumina::runtime::PjrtEvaluator;
+use lumina::sim::{CompassSim, RooflineSim};
+use lumina::stats::Pcg32;
+use lumina::util::bench::{bench, section};
+use lumina::util::csv::Csv;
+use lumina::workload::GPT3_175B;
+use lumina::csv_row;
+
+fn main() {
+    let space = DesignSpace::table1();
+    let mut rng = Pcg32::new(77);
+    let batch: Vec<DesignPoint> =
+        sample::uniform_batch(&space, &mut rng, 256);
+    let mut csv =
+        Csv::new(&["bench", "mean_s", "throughput_per_s"]);
+
+    section("Perf: evaluator hot paths");
+
+    // --- PJRT batched artifact (the production path).
+    match PjrtEvaluator::open_default() {
+        Ok(mut pjrt) => {
+            // warm the compile caches for both batch shapes
+            let _ = pjrt.eval_batch(&batch).unwrap();
+            let r = bench("pjrt roofline eval, batch=256", 2, 20, || {
+                let _ = pjrt.eval_batch(&batch).unwrap();
+            });
+            csv.row(csv_row![
+                r.name,
+                format!("{:.6e}", r.mean_s),
+                format!("{:.0}", r.throughput(256.0))
+            ]);
+            let one = [DesignPoint::a100()];
+            let r = bench("pjrt roofline eval, batch=1", 2, 50, || {
+                let _ = pjrt.eval_batch(&one).unwrap();
+            });
+            csv.row(csv_row![
+                r.name,
+                format!("{:.6e}", r.mean_s),
+                format!("{:.0}", r.throughput(1.0))
+            ]);
+        }
+        Err(e) => println!("(skipping PJRT benches: {e})"),
+    }
+
+    // --- Rust mirror.
+    let mut mirror = RooflineSim::new(GPT3_175B);
+    let r = bench("rust roofline eval, batch=256", 2, 50, || {
+        let _ = mirror.eval_batch(&batch).unwrap();
+    });
+    csv.row(csv_row![
+        r.name,
+        format!("{:.6e}", r.mean_s),
+        format!("{:.0}", r.throughput(256.0))
+    ]);
+
+    // --- Detailed simulator.
+    let mut compass = CompassSim::gpt3();
+    let r = bench("compass detailed eval, batch=256", 2, 20, || {
+        let _ = compass.eval_batch(&batch).unwrap();
+    });
+    csv.row(csv_row![
+        r.name,
+        format!("{:.6e}", r.mean_s),
+        format!("{:.0}", r.throughput(256.0))
+    ]);
+
+    // --- PHV kernel on a 1,000-point front.
+    let mut sim = RooflineSim::new(GPT3_175B);
+    let objs: Vec<Objectives> = sim
+        .eval_batch(&sample::uniform_batch(&space, &mut rng, 1000))
+        .unwrap()
+        .iter()
+        .map(|m| m.objectives())
+        .collect();
+    let reference =
+        sim.eval(&DesignPoint::a100()).unwrap().objectives();
+    let normalized = normalize(&objs, &reference);
+    let r = bench("hypervolume, n=1000", 2, 20, || {
+        let hv = hypervolume(&normalized, &PHV_REF);
+        std::hint::black_box(hv);
+    });
+    csv.row(csv_row![
+        r.name,
+        format!("{:.6e}", r.mean_s),
+        format!("{:.2}", r.throughput(1.0))
+    ]);
+
+    // --- One full LUMINA run (60 samples) incl. prompts + analyst.
+    let r = bench("lumina 60-sample run (rust roofline)", 1, 5, || {
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let mut be = BudgetedEvaluator::new(&mut sim, 60);
+        Lumina::with_seed(1).run(&space, &mut be).unwrap();
+    });
+    csv.row(csv_row![
+        r.name,
+        format!("{:.6e}", r.mean_s),
+        format!("{:.1}", r.throughput(60.0))
+    ]);
+
+    csv.write("out/perf_hotpath.csv").unwrap();
+    println!("wrote out/perf_hotpath.csv");
+}

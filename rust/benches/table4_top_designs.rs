@@ -1,0 +1,84 @@
+//! Regenerates paper **Table 4**: the top-2 designs identified by LUMINA
+//! compared with the NVIDIA A100 reference, under the detailed compass
+//! model (the environment the paper reports Table 4 from).
+//!
+//! Run: `cargo bench --bench table4_top_designs`
+//! Output: stdout markdown table + `out/table4_top_designs.csv`.
+
+use lumina::baselines::DseMethod;
+use lumina::csv_row;
+use lumina::design::{DesignPoint, DesignSpace, Param};
+use lumina::eval::{BudgetedEvaluator, Evaluator};
+use lumina::figures::table4::{pick_top2, render, report_rows};
+use lumina::lumina::Lumina;
+use lumina::sim::CompassSim;
+use lumina::util::bench::section;
+use lumina::util::csv::Csv;
+
+fn main() {
+    section("Table 4: top-2 LUMINA designs vs NVIDIA A100 (compass)");
+    let budget = std::env::var("LUMINA_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20);
+    let space = DesignSpace::table1();
+
+    // Run LUMINA under the paper's 20-evaluation compass budget.
+    let mut sim = CompassSim::gpt3();
+    let reference = sim.eval(&DesignPoint::a100()).unwrap().objectives();
+    let mut be = BudgetedEvaluator::new(&mut sim, budget);
+    let mut lum = Lumina::with_seed(2026);
+    lum.run(&space, &mut be).expect("lumina failed");
+    let trajectory: Vec<(DesignPoint, _)> = be
+        .log
+        .iter()
+        .map(|(d, m)| (*d, m.objectives()))
+        .collect();
+    let picks = pick_top2(&trajectory, &reference);
+
+    let mut labeled: Vec<(String, DesignPoint)> = picks
+        .iter()
+        .enumerate()
+        .map(|(i, d)| {
+            (format!("Design {}", (b'A' + i as u8) as char), *d)
+        })
+        .collect();
+    // Also report the paper's published designs for comparison.
+    labeled.push(("Paper A".into(), DesignPoint::paper_design_a()));
+    labeled.push(("Paper B".into(), DesignPoint::paper_design_b()));
+
+    let mut sim2 = CompassSim::gpt3();
+    let rows = report_rows(&mut sim2, &labeled).expect("report");
+    println!("{}", render(&rows));
+
+    println!(
+        "paper Design A: 1.805x TTFT/Area, 1.770x TPOT/Area; \
+         paper Design B: 0.592x TTFT"
+    );
+
+    let mut csv = Csv::new(&[
+        "label", "links", "cores", "sublanes", "sa", "vecw", "sram_kb",
+        "gbuf_mb", "memch", "norm_ttft", "norm_tpot", "norm_area",
+        "ttft_per_area", "tpot_per_area",
+    ]);
+    for r in &rows {
+        csv.row(csv_row![
+            r.label,
+            r.design.get(Param::Links),
+            r.design.get(Param::Cores),
+            r.design.get(Param::Sublanes),
+            r.design.get(Param::SystolicArray),
+            r.design.get(Param::VectorWidth),
+            r.design.get(Param::SramKb),
+            r.design.get(Param::GbufMb),
+            r.design.get(Param::MemChannels),
+            format!("{:.4}", r.norm_ttft),
+            format!("{:.4}", r.norm_tpot),
+            format!("{:.4}", r.norm_area),
+            format!("{:.4}", r.ttft_per_area()),
+            format!("{:.4}", r.tpot_per_area())
+        ]);
+    }
+    csv.write("out/table4_top_designs.csv").unwrap();
+    println!("wrote out/table4_top_designs.csv");
+}

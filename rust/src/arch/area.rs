@@ -1,0 +1,118 @@
+//! Component-wise die-area model.
+//!
+//! This is the "area model source code" that the QualE static analysis and
+//! the DSE-benchmark perf/area-prediction questions quote verbatim (see
+//! `llm::prompts::AREA_MODEL_SOURCE`), so variable names here are part of
+//! the prompt interface.
+
+use super::constants as c;
+use crate::design::{DesignPoint, Param};
+
+/// Per-component area, mm^2.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AreaBreakdown {
+    pub cores: f32,
+    pub global_buffer: f32,
+    pub memory_phys: f32,
+    pub link_phys: f32,
+    pub uncore: f32,
+}
+
+impl AreaBreakdown {
+    pub fn total(&self) -> f32 {
+        self.cores
+            + self.global_buffer
+            + self.memory_phys
+            + self.link_phys
+            + self.uncore
+    }
+}
+
+/// Area of one core (SM): fixed base + per-sublane compute (systolic PEs +
+/// vector lanes) + register file + scratchpad SRAM.
+pub fn core_area_mm2(d: &DesignPoint) -> f32 {
+    let sublane_count = d.get(Param::Sublanes) as f32;
+    let systolic_array_dim = d.get(Param::SystolicArray) as f32;
+    let vector_width = d.get(Param::VectorWidth) as f32;
+    let sram_kb = d.get(Param::SramKb) as f32;
+    c::AREA_CORE_BASE
+        + sublane_count
+            * (systolic_array_dim * systolic_array_dim * c::AREA_PER_PE
+                + vector_width * c::AREA_PER_LANE)
+        + c::AREA_REGFILE
+        + sram_kb * c::AREA_SRAM_PER_KB
+}
+
+/// Full-die breakdown.
+pub fn area_breakdown(d: &DesignPoint) -> AreaBreakdown {
+    let core_count = d.get(Param::Cores) as f32;
+    let global_buffer_mb = d.get(Param::GbufMb) as f32;
+    let memory_channel_count = d.get(Param::MemChannels) as f32;
+    let interconnect_link_count = d.get(Param::Links) as f32;
+    AreaBreakdown {
+        cores: core_count * core_area_mm2(d),
+        global_buffer: global_buffer_mb * c::AREA_L2_PER_MB,
+        memory_phys: memory_channel_count * c::AREA_HBM_PHY,
+        link_phys: interconnect_link_count * c::AREA_LINK_PHY,
+        uncore: c::AREA_UNCORE,
+    }
+}
+
+/// Total die area, mm^2.
+pub fn area_mm2(d: &DesignPoint) -> f32 {
+    area_breakdown(d).total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn a100_calibration_within_2pct() {
+        let area = area_mm2(&DesignPoint::a100());
+        let err = (area - 826.0).abs() / 826.0;
+        assert!(err < 0.02, "A100 model area {area} vs 826 real");
+    }
+
+    #[test]
+    fn table4_relative_areas_hold() {
+        // Paper: Design A ~0.77x, Design B ~0.95x of A100.
+        let a100 = area_mm2(&DesignPoint::a100());
+        let a = area_mm2(&DesignPoint::paper_design_a()) / a100;
+        let b = area_mm2(&DesignPoint::paper_design_b()) / a100;
+        assert!(a < 0.85 && a > 0.65, "design A ratio {a}");
+        assert!(b < 1.05 && b > 0.85, "design B ratio {b}");
+        assert!(a < b);
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let d = DesignPoint::a100();
+        let b = area_breakdown(&d);
+        assert!((b.total() - area_mm2(&d)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn monotone_in_every_parameter() {
+        use crate::design::DesignSpace;
+        let s = DesignSpace::table1();
+        prop::forall(
+            21,
+            128,
+            |rng| s.decode_index(rng.next_u64() % s.size()),
+            |d| {
+                Param::ALL.iter().all(|&p| {
+                    let up = s.step(d, p, 1);
+                    up == *d || area_mm2(&up) >= area_mm2(d)
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn cores_dominate_a100_area() {
+        let b = area_breakdown(&DesignPoint::a100());
+        assert!(b.cores > b.total() * 0.5);
+    }
+}

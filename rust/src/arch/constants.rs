@@ -1,0 +1,42 @@
+//! Performance/area model constants.
+//!
+//! MIRROR of `python/compile/constants.py` — keep in lockstep. The
+//! integration test `tests/artifact_vs_mirror.rs` cross-checks the lowered
+//! artifact against `sim::roofline` (which consumes these constants) on
+//! random designs, so any drift fails `cargo test`.
+//!
+//! All math on both sides is float32; units are seconds / bytes / FLOPs /
+//! mm^2, frequencies in Hz, bandwidths in B/s.
+
+// ---------------------------------------------------------------- compute
+pub const CLOCK_HZ: f32 = 1.41e9;
+pub const FLOPS_PER_PE: f32 = 2.0;
+pub const FLOPS_PER_LANE: f32 = 2.0;
+pub const K_TILE: f32 = 128.0;
+
+// ---------------------------------------------------------------- memory
+pub const HBM_BPS_PER_CHANNEL: f32 = 408.0e9;
+pub const MEM_EFF_BASE: f32 = 0.55;
+pub const MEM_EFF_L2_SLOPE: f32 = 0.08;
+pub const MEM_EFF_MAX: f32 = 0.92;
+pub const SRAM_UTIL_FLOOR: f32 = 0.25;
+
+// ----------------------------------------------------------- interconnect
+pub const LINK_BPS: f32 = 25.0e9;
+pub const NET_EFF: f32 = 0.75;
+pub const ALLREDUCE_LAT_S: f32 = 5.0e-6;
+
+// ---------------------------------------------------------------- timing
+pub const OP_OVERHEAD_S: f32 = 2.0e-6;
+pub const FP16_BYTES: f32 = 2.0;
+
+// ------------------------------------------------------------------ area
+pub const AREA_CORE_BASE: f32 = 1.5;
+pub const AREA_PER_PE: f32 = 0.0004;
+pub const AREA_PER_LANE: f32 = 0.012;
+pub const AREA_REGFILE: f32 = 1.1;
+pub const AREA_SRAM_PER_KB: f32 = 0.0055;
+pub const AREA_L2_PER_MB: f32 = 1.9;
+pub const AREA_HBM_PHY: f32 = 15.0;
+pub const AREA_LINK_PHY: f32 = 1.5;
+pub const AREA_UNCORE: f32 = 60.0;

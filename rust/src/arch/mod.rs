@@ -1,0 +1,7 @@
+//! Architecture model: the shared performance/area constants (mirror of
+//! `python/compile/constants.py`) and the component-wise area model.
+
+pub mod area;
+pub mod constants;
+
+pub use area::{area_breakdown, area_mm2, AreaBreakdown};

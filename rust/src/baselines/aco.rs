@@ -1,0 +1,182 @@
+//! Ant Colony Optimization: per-(axis, value) pheromone trails with
+//! evaporation; ants sample values proportionally to pheromone, deposits
+//! reward designs by scalarized quality. The "far-to-near" behaviour the
+//! paper shows in Fig. 6 emerges from the initially uniform trails.
+
+use crate::design::{DesignPoint, DesignSpace, Param, N_PARAMS};
+use crate::eval::BudgetedEvaluator;
+use crate::pareto::Objectives;
+use crate::stats::rng::Pcg32;
+use crate::Result;
+
+use super::DseMethod;
+
+/// ACO over the categorical grid.
+pub struct AntColony {
+    rng: Pcg32,
+    /// Pheromone exponent.
+    pub alpha: f64,
+    /// Evaporation rate per generation.
+    pub rho: f64,
+    /// Ants per generation.
+    pub ants: usize,
+    /// Top-k ants deposit per generation.
+    pub elite: usize,
+}
+
+impl AntColony {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Pcg32::with_stream(seed, 0xac0),
+            alpha: 0.7,
+            rho: 0.04,
+            ants: 20,
+            elite: 1,
+        }
+    }
+
+    fn sample_design(
+        &mut self,
+        space: &DesignSpace,
+        pher: &[Vec<f64>; N_PARAMS],
+    ) -> DesignPoint {
+        let mut values = [0u32; N_PARAMS];
+        for p in Param::ALL {
+            let tr = &pher[p.index()];
+            let weights: Vec<f64> =
+                tr.iter().map(|t| t.powf(self.alpha)).collect();
+            let total: f64 = weights.iter().sum();
+            let mut pick = self.rng.f64() * total;
+            let mut idx = 0;
+            for (i, w) in weights.iter().enumerate() {
+                pick -= w;
+                if pick <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            values[p.index()] = space.values(p)[idx];
+        }
+        DesignPoint::new(values)
+    }
+}
+
+impl DseMethod for AntColony {
+    fn name(&self) -> &'static str {
+        "ant-colony"
+    }
+
+    fn run(
+        &mut self,
+        space: &DesignSpace,
+        eval: &mut BudgetedEvaluator,
+    ) -> Result<()> {
+        // Uniform initial pheromone per axis value.
+        let mut pher: [Vec<f64>; N_PARAMS] = std::array::from_fn(|i| {
+            vec![1.0; space.values(Param::from_index(i)).len()]
+        });
+        // Running objective normalizers (means).
+        let mut mean: Objectives = [0.0; 3];
+        let mut seen = 0usize;
+
+        while !eval.exhausted() {
+            let n = self.ants.min(eval.remaining());
+            let designs: Vec<DesignPoint> = (0..n)
+                .map(|_| self.sample_design(space, &pher))
+                .collect();
+            let results = eval.eval_batch(&designs)?;
+            if results.is_empty() {
+                break;
+            }
+            // Update normalizers.
+            for (_, m) in &results {
+                let o = m.objectives();
+                seen += 1;
+                for i in 0..3 {
+                    mean[i] += (o[i] - mean[i]) / seen as f64;
+                }
+            }
+            // Quality: inverse normalized scalarized objective.
+            let mut scored: Vec<(f64, &DesignPoint)> = results
+                .iter()
+                .map(|(d, m)| {
+                    let o = m.objectives();
+                    let s: f64 = (0..3)
+                        .map(|i| o[i] / mean[i].max(1e-30))
+                        .sum();
+                    (1.0 / s.max(1e-9), d)
+                })
+                .collect();
+            scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+            // Evaporate.
+            for tr in pher.iter_mut() {
+                for t in tr.iter_mut() {
+                    *t = (*t * (1.0 - self.rho)).max(0.05);
+                }
+            }
+            // Elite deposit.
+            for (q, d) in scored.iter().take(self.elite) {
+                for p in Param::ALL {
+                    if let Some(i) = space.index_of(p, d.get(p)) {
+                        pher[p.index()][i] += q;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::RooflineSim;
+    use crate::workload::GPT3_175B;
+
+    #[test]
+    fn pheromone_sampling_prefers_reinforced_values() {
+        let space = DesignSpace::table1();
+        let mut aco = AntColony::new(1);
+        let mut pher: [Vec<f64>; N_PARAMS] = std::array::from_fn(|i| {
+            vec![1.0; space.values(Param::from_index(i)).len()]
+        });
+        // Heavily reinforce links=24 (index 3).
+        pher[Param::Links.index()] = vec![0.05, 0.05, 0.05, 10.0];
+        let hits = (0..200)
+            .filter(|_| {
+                aco.sample_design(&space, &pher).get(Param::Links) == 24
+            })
+            .count();
+        assert!(hits > 150, "only {hits}/200 picked the trail");
+    }
+
+    #[test]
+    fn aco_consumes_budget_in_generations() {
+        let space = DesignSpace::table1();
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let mut be = BudgetedEvaluator::new(&mut sim, 55);
+        AntColony::new(2).run(&space, &mut be).unwrap();
+        assert_eq!(be.spent(), 55);
+    }
+
+    #[test]
+    fn later_generations_concentrate() {
+        // The spread (distinct core counts) of the last generation should
+        // be <= that of the first once trails build up.
+        let space = DesignSpace::table1();
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let mut be = BudgetedEvaluator::new(&mut sim, 200);
+        AntColony::new(3).run(&space, &mut be).unwrap();
+        let distinct = |slice: &[(DesignPoint, crate::eval::Metrics)]| {
+            let mut v: Vec<u32> =
+                slice.iter().map(|(d, _)| d.get(Param::Cores)).collect();
+            v.sort();
+            v.dedup();
+            v.len()
+        };
+        let first = distinct(&be.log[..30]);
+        let last = distinct(&be.log[170..]);
+        assert!(last <= first, "first={first} last={last}");
+    }
+}

@@ -1,0 +1,254 @@
+//! Genetic Algorithm: NSGA-II-style multi-objective evolution — Pareto
+//! rank + crowding-distance selection, uniform crossover, grid-step
+//! mutation. Converges slowly on 1k budgets, as the paper (and GAMMA
+//! [14]) observe.
+
+use crate::design::{sample, DesignPoint, DesignSpace, Param};
+use crate::eval::BudgetedEvaluator;
+use crate::pareto::{dominates, Objectives};
+use crate::stats::rng::Pcg32;
+use crate::Result;
+
+use super::DseMethod;
+
+/// NSGA-II-lite.
+pub struct Genetic {
+    rng: Pcg32,
+    pub pop_size: usize,
+    pub mutation_p: f64,
+}
+
+impl Genetic {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Pcg32::with_stream(seed, 0x6a),
+            pop_size: 24,
+            mutation_p: 0.25,
+        }
+    }
+
+    fn crossover(
+        &mut self,
+        a: &DesignPoint,
+        b: &DesignPoint,
+    ) -> DesignPoint {
+        let mut child = *a;
+        for p in Param::ALL {
+            if self.rng.chance(0.5) {
+                child.set(p, b.get(p));
+            }
+        }
+        child
+    }
+
+    fn mutate(
+        &mut self,
+        space: &DesignSpace,
+        d: &DesignPoint,
+    ) -> DesignPoint {
+        let mut out = *d;
+        for p in Param::ALL {
+            if self.rng.chance(self.mutation_p) {
+                let delta = if self.rng.chance(0.5) { 1 } else { -1 };
+                out = space.step(&out, p, delta);
+            }
+        }
+        out
+    }
+}
+
+/// Fast non-dominated sorting rank (0 = front) per individual.
+fn pareto_ranks(objs: &[Objectives]) -> Vec<usize> {
+    let n = objs.len();
+    let mut rank = vec![usize::MAX; n];
+    let mut assigned = 0;
+    let mut level = 0;
+    while assigned < n {
+        // Collect the level first, then commit — assigning in-place
+        // would hide dominators from later indices in the same pass.
+        let mut this_level = Vec::new();
+        for i in 0..n {
+            if rank[i] != usize::MAX {
+                continue;
+            }
+            let dominated = (0..n).any(|j| {
+                j != i
+                    && rank[j] == usize::MAX
+                    && dominates(&objs[j], &objs[i])
+            });
+            if !dominated {
+                this_level.push(i);
+            }
+        }
+        for &i in &this_level {
+            rank[i] = level;
+        }
+        let newly = this_level.len();
+        if newly == 0 {
+            // Duplicate points all dominate each other weakly: break ties.
+            for r in rank.iter_mut() {
+                if *r == usize::MAX {
+                    *r = level;
+                }
+            }
+            break;
+        }
+        assigned += newly;
+        level += 1;
+    }
+    rank
+}
+
+/// Crowding distance within the whole set (per-objective span).
+fn crowding(objs: &[Objectives]) -> Vec<f64> {
+    let n = objs.len();
+    let mut dist = vec![0.0f64; n];
+    for k in 0..3 {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| {
+            objs[a][k].partial_cmp(&objs[b][k]).unwrap()
+        });
+        let span =
+            (objs[idx[n - 1]][k] - objs[idx[0]][k]).max(1e-12);
+        dist[idx[0]] = f64::INFINITY;
+        dist[idx[n - 1]] = f64::INFINITY;
+        for w in 1..n - 1 {
+            dist[idx[w]] +=
+                (objs[idx[w + 1]][k] - objs[idx[w - 1]][k]) / span;
+        }
+    }
+    dist
+}
+
+impl DseMethod for Genetic {
+    fn name(&self) -> &'static str {
+        "genetic"
+    }
+
+    fn run(
+        &mut self,
+        space: &DesignSpace,
+        eval: &mut BudgetedEvaluator,
+    ) -> Result<()> {
+        let n0 = self.pop_size.min(eval.remaining());
+        if n0 == 0 {
+            return Ok(());
+        }
+        let init = sample::stratified(space, &mut self.rng, n0);
+        let mut pop: Vec<(DesignPoint, Objectives)> = eval
+            .eval_batch(&init)?
+            .into_iter()
+            .map(|(d, m)| (d, m.objectives()))
+            .collect();
+
+        while !eval.exhausted() && pop.len() >= 2 {
+            let objs: Vec<Objectives> =
+                pop.iter().map(|(_, o)| *o).collect();
+            let ranks = pareto_ranks(&objs);
+            let crowd = crowding(&objs);
+            // Binary tournament by (rank, crowding).
+            let tournament = |rng: &mut Pcg32| {
+                let a = rng.range_usize(0, pop.len());
+                let b = rng.range_usize(0, pop.len());
+                if (ranks[a], std::cmp::Reverse(ordered(crowd[a])))
+                    < (ranks[b], std::cmp::Reverse(ordered(crowd[b])))
+                {
+                    a
+                } else {
+                    b
+                }
+            };
+            let pa = tournament(&mut self.rng);
+            let pb = tournament(&mut self.rng);
+            let child = {
+                let x =
+                    self.crossover(&pop[pa].0.clone(), &pop[pb].0);
+                self.mutate(space, &x)
+            };
+            let Some(m) = eval.eval(&child)? else { break };
+            pop.push((child, m.objectives()));
+
+            // Environmental selection: drop the worst-ranked individual.
+            if pop.len() > self.pop_size {
+                let objs: Vec<Objectives> =
+                    pop.iter().map(|(_, o)| *o).collect();
+                let ranks = pareto_ranks(&objs);
+                let crowd = crowding(&objs);
+                let worst = (0..pop.len())
+                    .max_by(|&a, &b| {
+                        (ranks[a], std::cmp::Reverse(ordered(crowd[a])))
+                            .cmp(&(
+                                ranks[b],
+                                std::cmp::Reverse(ordered(crowd[b])),
+                            ))
+                    })
+                    .unwrap();
+                pop.swap_remove(worst);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Total-orderable f64 wrapper for tuple comparisons.
+fn ordered(x: f64) -> u64 {
+    let bits = x.to_bits();
+    if x >= 0.0 {
+        bits ^ (1 << 63)
+    } else {
+        !bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::RooflineSim;
+    use crate::workload::GPT3_175B;
+
+    #[test]
+    fn ranks_identify_front() {
+        let objs = vec![
+            [1.0, 1.0, 1.0],
+            [2.0, 2.0, 2.0],
+            [0.5, 3.0, 1.0],
+            [3.0, 3.0, 3.0],
+        ];
+        let r = pareto_ranks(&objs);
+        assert_eq!(r[0], 0);
+        assert_eq!(r[2], 0);
+        assert_eq!(r[1], 1);
+        assert_eq!(r[3], 2);
+    }
+
+    #[test]
+    fn crowding_rewards_extremes() {
+        let objs = vec![
+            [0.0, 1.0, 1.0],
+            [0.5, 0.5, 1.0],
+            [1.0, 0.0, 1.0],
+        ];
+        let c = crowding(&objs);
+        assert!(c[0].is_infinite() && c[2].is_infinite());
+        assert!(c[1].is_finite());
+    }
+
+    #[test]
+    fn ordered_preserves_f64_order() {
+        let mut vals =
+            vec![-2.0, -0.5, 0.0, 0.5, 2.0, f64::INFINITY];
+        let mut by_key = vals.clone();
+        by_key.sort_by_key(|&v| ordered(v));
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(by_key, vals);
+    }
+
+    #[test]
+    fn ga_runs_and_keeps_population_bounded() {
+        let space = DesignSpace::table1();
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let mut be = BudgetedEvaluator::new(&mut sim, 70);
+        Genetic::new(11).run(&space, &mut be).unwrap();
+        assert_eq!(be.spent(), 70);
+    }
+}

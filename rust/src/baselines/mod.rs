@@ -1,0 +1,83 @@
+//! DSE baseline methods (paper Table 2): Grid Search, Random Walker,
+//! Bayesian Optimization, Genetic Algorithm and Ant Colony Optimization —
+//! plus the [`DseMethod`] trait shared with LUMINA so every method runs
+//! under identical budget accounting in the races.
+
+pub mod aco;
+pub mod bo;
+pub mod ga;
+pub mod grid;
+pub mod random_walk;
+
+pub use aco::AntColony;
+pub use bo::BayesOpt;
+pub use ga::Genetic;
+pub use grid::GridSearch;
+pub use random_walk::RandomWalker;
+
+use crate::design::DesignSpace;
+use crate::eval::BudgetedEvaluator;
+use crate::Result;
+
+/// A DSE method: consumes the evaluator's budget, leaving its trajectory
+/// in the evaluator's log.
+pub trait DseMethod {
+    fn name(&self) -> &'static str;
+
+    /// Run until the budget is exhausted (or the method converges).
+    fn run(
+        &mut self,
+        space: &DesignSpace,
+        eval: &mut BudgetedEvaluator,
+    ) -> Result<()>;
+}
+
+/// Construct every method in the paper's comparison, seeded.
+pub fn all_methods(seed: u64) -> Vec<Box<dyn DseMethod>> {
+    vec![
+        Box::new(GridSearch::with_offset(seed.wrapping_mul(0x2545f4914f6cdd1d))),
+        Box::new(RandomWalker::new(seed)),
+        Box::new(BayesOpt::new(seed)),
+        Box::new(Genetic::new(seed)),
+        Box::new(AntColony::new(seed)),
+        Box::new(crate::lumina::Lumina::with_seed(seed)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design::DesignSpace;
+    use crate::sim::RooflineSim;
+    use crate::workload::GPT3_175B;
+
+    /// Every method must consume exactly its budget (no more) and leave
+    /// the trajectory in the log.
+    #[test]
+    fn all_methods_respect_budget() {
+        let space = DesignSpace::table1();
+        for mut m in all_methods(42) {
+            let mut sim = RooflineSim::new(GPT3_175B);
+            let mut be = BudgetedEvaluator::new(&mut sim, 30);
+            m.run(&space, &mut be).unwrap();
+            assert_eq!(
+                be.spent(),
+                30,
+                "{} left budget unused",
+                m.name()
+            );
+            assert!(be.log.iter().all(|(d, _)| space.contains(d)
+                || *d == crate::design::DesignPoint::a100()));
+        }
+    }
+
+    #[test]
+    fn methods_have_distinct_names() {
+        let names: Vec<&str> =
+            all_methods(1).iter().map(|m| m.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "{names:?}");
+    }
+}

@@ -1,0 +1,91 @@
+//! Random Walker: neighbourhood random walk with uniform restarts.
+//! No sample learning ("chance sampling behaviour", paper Fig. 5 groups
+//! it with ACO).
+
+use crate::design::{sample, DesignSpace};
+use crate::eval::BudgetedEvaluator;
+use crate::stats::rng::Pcg32;
+use crate::Result;
+
+use super::DseMethod;
+
+/// Random walk over grid neighbours, restarting uniformly with
+/// probability `restart_p` per step.
+pub struct RandomWalker {
+    rng: Pcg32,
+    pub restart_p: f64,
+}
+
+impl RandomWalker {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Pcg32::with_stream(seed, 0x3a), restart_p: 0.05 }
+    }
+}
+
+impl DseMethod for RandomWalker {
+    fn name(&self) -> &'static str {
+        "random-walker"
+    }
+
+    fn run(
+        &mut self,
+        space: &DesignSpace,
+        eval: &mut BudgetedEvaluator,
+    ) -> Result<()> {
+        let mut current = sample::uniform(space, &mut self.rng);
+        while !eval.exhausted() {
+            if eval.eval(&current)?.is_none() {
+                break;
+            }
+            current = if self.rng.chance(self.restart_p) {
+                sample::uniform(space, &mut self.rng)
+            } else {
+                let ns = space.neighbors(&current);
+                *self.rng.choose(&ns)
+            };
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design::Param;
+    use crate::sim::RooflineSim;
+    use crate::workload::GPT3_175B;
+
+    #[test]
+    fn walks_adjacent_points_mostly() {
+        let space = DesignSpace::table1();
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let mut be = BudgetedEvaluator::new(&mut sim, 60);
+        RandomWalker::new(5).run(&space, &mut be).unwrap();
+        assert_eq!(be.spent(), 60);
+        // Consecutive samples differ in exactly one axis most of the time
+        // (restarts excepted).
+        let mut single_axis = 0;
+        for w in be.log.windows(2) {
+            let diff = Param::ALL
+                .iter()
+                .filter(|&&p| w[0].0.get(p) != w[1].0.get(p))
+                .count();
+            if diff == 1 {
+                single_axis += 1;
+            }
+        }
+        assert!(single_axis > 40, "only {single_axis}/59 single-axis moves");
+    }
+
+    #[test]
+    fn different_seeds_walk_differently() {
+        let space = DesignSpace::table1();
+        let walk = |seed| {
+            let mut sim = RooflineSim::new(GPT3_175B);
+            let mut be = BudgetedEvaluator::new(&mut sim, 10);
+            RandomWalker::new(seed).run(&space, &mut be).unwrap();
+            be.log.iter().map(|(d, _)| *d).collect::<Vec<_>>()
+        };
+        assert_ne!(walk(1), walk(2));
+    }
+}

@@ -1,0 +1,556 @@
+//! Question generation for the DSE Benchmark.
+//!
+//! Every question's ground truth is computed from the simulation
+//! environment (never from the heuristics the answering models use):
+//! bottleneck questions score each candidate adjustment by simulated
+//! improvement per unit area; prediction questions use the simulated
+//! metric; tuning questions pick the constraint-feasible candidate with
+//! the best simulated objective.
+
+use crate::design::{sample, DesignPoint, DesignSpace, Param};
+use crate::eval::{Metrics, Phase};
+use crate::llm::analyst::analyst_area;
+use crate::llm::prompts;
+use crate::sim::RooflineSim;
+use crate::stats::rng::Pcg32;
+use crate::workload::GPT3_175B;
+
+/// Benchmark task families (paper Figure 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    BottleneckAnalysis,
+    PerfAreaPrediction,
+    ParameterTuning,
+}
+
+impl Task {
+    pub const ALL: [Task; 3] = [
+        Task::BottleneckAnalysis,
+        Task::PerfAreaPrediction,
+        Task::ParameterTuning,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::BottleneckAnalysis => "Bottleneck Analysis",
+            Task::PerfAreaPrediction => "Perf/Area Prediction",
+            Task::ParameterTuning => "Parameter Tuning",
+        }
+    }
+
+    /// Question counts from the paper (§5.2).
+    pub fn paper_count(self) -> usize {
+        match self {
+            Task::BottleneckAnalysis => 308,
+            Task::PerfAreaPrediction => 127,
+            Task::ParameterTuning => 30,
+        }
+    }
+}
+
+/// One multiple-choice question.
+#[derive(Debug, Clone)]
+pub struct Question {
+    pub task: Task,
+    pub prompt: String,
+    pub choices: Vec<String>,
+    pub correct: usize,
+}
+
+/// A generated benchmark (one task family).
+#[derive(Debug, Clone)]
+pub struct QuestionSet {
+    pub task: Task,
+    pub questions: Vec<Question>,
+}
+
+impl QuestionSet {
+    /// Generate the paper-sized question set for `task`.
+    pub fn generate(task: Task, seed: u64) -> QuestionSet {
+        Self::generate_n(task, task.paper_count(), seed)
+    }
+
+    pub fn generate_n(task: Task, n: usize, seed: u64) -> QuestionSet {
+        let mut rng = Pcg32::with_stream(seed, task as u64 + 0xbe);
+        let space = DesignSpace::table1();
+        let sim = RooflineSim::new(GPT3_175B);
+        let questions = (0..n)
+            .map(|_| match task {
+                Task::BottleneckAnalysis => {
+                    gen_bottleneck(&space, &sim, &mut rng)
+                }
+                Task::PerfAreaPrediction => {
+                    gen_prediction(&space, &sim, &mut rng)
+                }
+                Task::ParameterTuning => {
+                    gen_tuning(&space, &sim, &mut rng)
+                }
+            })
+            .collect();
+        QuestionSet { task, questions }
+    }
+}
+
+/// A design whose stall profile is interesting (non-degenerate).
+fn sample_design(
+    space: &DesignSpace,
+    sim: &RooflineSim,
+    rng: &mut Pcg32,
+) -> (DesignPoint, Metrics) {
+    loop {
+        let d = sample::uniform(space, rng);
+        let m = sim.evaluate(&d);
+        if m.ttft_ms.is_finite() && m.ttft_ms < 10_000.0 {
+            return (d, m);
+        }
+    }
+}
+
+fn action_str(p: Param, dir: i32) -> String {
+    format!(
+        "{} {}",
+        if dir > 0 { "increase" } else { "decrease" },
+        p.name()
+    )
+}
+
+/// Apply a parsed action list to a design (1 grid step per action).
+fn apply_actions(
+    space: &DesignSpace,
+    d: &DesignPoint,
+    actions: &[(Param, i32)],
+) -> DesignPoint {
+    let mut out = *d;
+    for (p, dir) in actions {
+        out = space.step(&out, *p, *dir);
+    }
+    out
+}
+
+fn gen_bottleneck(
+    space: &DesignSpace,
+    sim: &RooflineSim,
+    rng: &mut Pcg32,
+) -> Question {
+    // Resample until the dominant-stall fix is *unambiguously* the best
+    // candidate under simulation — the paper's questions have exactly one
+    // correct answer; ambiguous draws (where an off-bottleneck resource
+    // happens to score better) are discarded.
+    for _ in 0..40 {
+        if let Some(q) = try_gen_bottleneck(space, sim, rng) {
+            return q;
+        }
+    }
+    // Statistically unreachable; keep the last attempt regardless.
+    try_gen_bottleneck_relaxed(space, sim, rng)
+}
+
+fn try_gen_bottleneck(
+    space: &DesignSpace,
+    sim: &RooflineSim,
+    rng: &mut Pcg32,
+) -> Option<Question> {
+    gen_bottleneck_inner(space, sim, rng, true)
+}
+
+fn try_gen_bottleneck_relaxed(
+    space: &DesignSpace,
+    sim: &RooflineSim,
+    rng: &mut Pcg32,
+) -> Question {
+    gen_bottleneck_inner(space, sim, rng, false).unwrap()
+}
+
+fn gen_bottleneck_inner(
+    space: &DesignSpace,
+    sim: &RooflineSim,
+    rng: &mut Pcg32,
+    strict: bool,
+) -> Option<Question> {
+    let (d, m) = sample_design(space, sim, rng);
+    let phase = if rng.chance(0.5) { Phase::Prefill } else { Phase::Decode };
+    let dominant = m.dominant_bottleneck(phase);
+
+    // Candidate actions: primary fix, a decrease-systolic option when
+    // over-provisioned, irrelevant singles, and one multi-resource
+    // bundle (the paper's observed distractor class).
+    let primary: Vec<(Param, i32)> = {
+        use crate::eval::Bottleneck::*;
+        match dominant {
+            Network => vec![(Param::Links, 1)],
+            Memory => vec![(Param::MemChannels, 1)],
+            Compute => {
+                if phase == Phase::Decode
+                    && d.get(Param::SystolicArray) >= 32
+                {
+                    vec![(Param::SystolicArray, -1)]
+                } else {
+                    vec![(Param::SystolicArray, 1)]
+                }
+            }
+        }
+    };
+    // Distractors draw from parameters *irrelevant to the dominant
+    // stall* (the paper's wrong answers bundle "irrelevant parameters").
+    let relevant_set =
+        crate::llm::analyst::relevant_params(dominant.name());
+    let irrelevant_pool: Vec<Param> = Param::ALL
+        .iter()
+        .copied()
+        .filter(|p| *p != primary[0].0 && !relevant_set.contains(p))
+        .collect();
+    let irr1 = *rng.choose(&irrelevant_pool);
+    let irr2 = loop {
+        let p = *rng.choose(&irrelevant_pool);
+        if p != irr1 {
+            break p;
+        }
+    };
+    let bundle = vec![primary[0], (irr1, 1)];
+
+    let mut actions: Vec<Vec<(Param, i32)>> = vec![
+        primary.clone(),
+        vec![(irr1, 1)],
+        vec![(irr2, 1)],
+        bundle,
+    ];
+
+    // Ground truth: simulated improvement of the phase metric per mm^2
+    // of area spent (bundles pay for their irrelevant resource).
+    let base_t = m.phase_time_ms(phase) as f64;
+    let base_a = m.area_mm2 as f64;
+    let score = |acts: &[(Param, i32)]| -> f64 {
+        let nd = apply_actions(space, &d, acts);
+        if nd == d {
+            return f64::NEG_INFINITY;
+        }
+        let nm = sim.evaluate(&nd);
+        let dt = base_t - nm.phase_time_ms(phase) as f64;
+        let da = (nm.area_mm2 as f64 - base_a).max(-base_a * 0.2);
+        dt / base_t - 0.5 * da / base_a
+    };
+    let scores: Vec<f64> = actions.iter().map(|a| score(a)).collect();
+    let best = scores
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    // Strict mode: the dominant-stall fix (index 0) must win by a clear
+    // margin, otherwise the question is ambiguous — regenerate.
+    if strict {
+        let max_other = scores[1..]
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, f64::max);
+        if best != 0 || scores[0] < max_other + 0.005 {
+            return None;
+        }
+    }
+    // Shuffle choices, tracking the correct index.
+    let mut order: Vec<usize> = (0..actions.len()).collect();
+    rng.shuffle(&mut order);
+    let correct = order.iter().position(|&i| i == best).unwrap();
+    let shuffled: Vec<Vec<(Param, i32)>> =
+        order.iter().map(|&i| actions[i].clone()).collect();
+    actions = shuffled;
+
+    let choices: Vec<String> = actions
+        .iter()
+        .map(|acts| {
+            acts.iter()
+                .map(|(p, dir)| action_str(*p, *dir))
+                .collect::<Vec<_>>()
+                .join(" ; ")
+        })
+        .collect();
+    let prompt = prompts::bottleneck_question(&d, &m, phase, &choices);
+    Some(Question {
+        task: Task::BottleneckAnalysis,
+        prompt,
+        choices,
+        correct,
+    })
+}
+
+fn gen_prediction(
+    space: &DesignSpace,
+    sim: &RooflineSim,
+    rng: &mut Pcg32,
+) -> Question {
+    let (reference, ref_m) = sample_design(space, sim, rng);
+    let metric_kind = rng.range_usize(0, 5); // 0-2 area, 3 ttft, 4 tpot
+    let (metric, ref_v): (&str, f64) = match metric_kind {
+        0..=2 => ("area_mm2", ref_m.area_mm2 as f64),
+        3 => ("TTFT_ms", ref_m.ttft_ms as f64),
+        _ => ("TPOT_ms", ref_m.tpot_ms as f64),
+    };
+    let value_of = |m: &Metrics| -> f64 {
+        match metric_kind {
+            0..=2 => m.area_mm2 as f64,
+            3 => m.ttft_ms as f64,
+            _ => m.tpot_ms as f64,
+        }
+    };
+
+    // Single-parameter example perturbations.
+    let mut examples = Vec::new();
+    let mut perturbed: Vec<Param> = Vec::new();
+    for _ in 0..4 {
+        let p = *rng.choose(&Param::ALL);
+        let dir = if rng.chance(0.5) { 1 } else { -1 };
+        let d = space.step(&reference, p, dir);
+        if d == reference {
+            continue;
+        }
+        examples.push((d, value_of(&sim.evaluate(&d))));
+        if !perturbed.contains(&p) {
+            perturbed.push(p);
+        }
+    }
+    // Target: step one of the example-covered params (or a fresh one).
+    let tp = if !perturbed.is_empty() && rng.chance(0.8) {
+        *rng.choose(&perturbed)
+    } else {
+        *rng.choose(&Param::ALL)
+    };
+    let steps = if rng.chance(0.5) { 1 } else { 2 };
+    let target = space.step(&reference, tp, steps);
+    let truth = value_of(&sim.evaluate(&target));
+
+    // Choices: truth, the zero-baseline failure value, and offset decoys.
+    let zero_baseline_value = if metric == "area_mm2" {
+        analyst_area(&target) - analyst_area(&reference)
+    } else {
+        truth * 0.45
+    };
+    let mut values = vec![
+        truth,
+        zero_baseline_value,
+        truth * (1.18 + rng.f64() * 0.12),
+        truth * (0.72 + rng.f64() * 0.1),
+    ];
+    // Ensure distinctness (rare degenerate cases).
+    for i in 1..values.len() {
+        while (values[i] - values[0]).abs() < truth.abs() * 0.04 + 1e-9 {
+            values[i] *= 1.3;
+        }
+    }
+    let mut order: Vec<usize> = (0..values.len()).collect();
+    rng.shuffle(&mut order);
+    let correct = order.iter().position(|&i| i == 0).unwrap();
+    let shuffled: Vec<f64> = order.iter().map(|&i| values[i]).collect();
+    values = shuffled;
+
+    let choices: Vec<String> =
+        values.iter().map(|v| format!("{v:.3}")).collect();
+    let prompt = prompts::prediction_question(
+        metric,
+        &reference,
+        ref_v,
+        &examples,
+        &target,
+        metric == "area_mm2",
+        &choices,
+    );
+    Question { task: Task::PerfAreaPrediction, prompt, choices, correct }
+}
+
+fn gen_tuning(
+    space: &DesignSpace,
+    sim: &RooflineSim,
+    rng: &mut Pcg32,
+) -> Question {
+    let (initial, m) = sample_design(space, sim, rng);
+    let phase = if rng.chance(0.5) { Phase::Prefill } else { Phase::Decode };
+    let budget = m.area_mm2 as f64 * (0.95 + rng.f64() * 0.15);
+
+    // Candidates: targeted fix, infeasible monster, scattershot
+    // multi-adjust, and a lateral feasible move.
+    let dominant = m.dominant_bottleneck(phase);
+    let fix = {
+        use crate::eval::Bottleneck::*;
+        let p = match dominant {
+            Network => Param::Links,
+            Memory => Param::MemChannels,
+            Compute => Param::SystolicArray,
+        };
+        let mut d = space.step(&initial, p, 1);
+        // Fund if needed to stay under budget.
+        let mut guard = 0;
+        while (crate::arch::area_mm2(&d) as f64) > budget && guard < 6 {
+            let f = *rng.choose(&[
+                Param::Cores,
+                Param::SramKb,
+                Param::VectorWidth,
+            ]);
+            let nd = space.step(&d, f, -1);
+            if nd == d {
+                guard += 1;
+                continue;
+            }
+            d = nd;
+            guard += 1;
+        }
+        d
+    };
+    let monster = DesignPoint::new([24, 256, 8, 64, 64, 512, 256, 12]);
+    let scattershot = {
+        let mut d = initial;
+        for p in Param::ALL {
+            if rng.chance(0.6) {
+                let dir = if rng.chance(0.5) { 1 } else { -1 };
+                d = space.step(&d, p, dir);
+            }
+        }
+        d
+    };
+    let lateral = {
+        // Guaranteed-feasible fallback: shrink axes until under budget.
+        let mut d = space.step(&initial, *rng.choose(&Param::ALL), -1);
+        let shrink_order = [
+            Param::Cores,
+            Param::SystolicArray,
+            Param::SramKb,
+            Param::GbufMb,
+            Param::VectorWidth,
+            Param::MemChannels,
+        ];
+        let mut i = 0;
+        while (crate::arch::area_mm2(&d) as f64) > budget && i < 24 {
+            d = space.step(&d, shrink_order[i % shrink_order.len()], -1);
+            i += 1;
+        }
+        d
+    };
+    let mut cands = vec![fix, monster, scattershot, lateral];
+
+    // Ground truth: best simulated phase metric among feasible ones
+    // (the lateral candidate is feasible by construction).
+    let feasible_best = |cands: &[DesignPoint]| -> usize {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, c) in cands.iter().enumerate() {
+            if crate::arch::area_mm2(c) as f64 > budget {
+                continue;
+            }
+            let t = sim.evaluate(c).phase_time_ms(phase) as f64;
+            if best.map(|(_, bt)| t < bt).unwrap_or(true) {
+                best = Some((i, t));
+            }
+        }
+        best.map(|(i, _)| i).unwrap_or(3)
+    };
+    let best = feasible_best(&cands);
+    let mut order: Vec<usize> = (0..cands.len()).collect();
+    rng.shuffle(&mut order);
+    let correct = order.iter().position(|&i| i == best).unwrap();
+    let shuffled: Vec<DesignPoint> =
+        order.iter().map(|&i| cands[i]).collect();
+    cands = shuffled;
+
+    let choices: Vec<String> =
+        cands.iter().map(prompts::compact_design).collect();
+    let prompt =
+        prompts::tuning_question(&initial, &m, phase, budget, &choices);
+    Question { task: Task::ParameterTuning, prompt, choices, correct }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_counts() {
+        assert_eq!(Task::BottleneckAnalysis.paper_count(), 308);
+        assert_eq!(Task::PerfAreaPrediction.paper_count(), 127);
+        assert_eq!(Task::ParameterTuning.paper_count(), 30);
+    }
+
+    #[test]
+    fn questions_are_well_formed() {
+        for task in Task::ALL {
+            let qs = QuestionSet::generate_n(task, 20, 1);
+            assert_eq!(qs.questions.len(), 20);
+            for q in &qs.questions {
+                assert!(q.choices.len() >= 3);
+                assert!(q.correct < q.choices.len());
+                assert!(q.prompt.contains("## Task:"));
+                assert!(q.prompt.contains("Answer with"));
+                // Choice lines present in the prompt.
+                for (i, c) in q.choices.iter().enumerate() {
+                    assert!(q.prompt.contains(&format!(
+                        "{}) {c}",
+                        prompts::letter(i)
+                    )));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = QuestionSet::generate_n(Task::BottleneckAnalysis, 5, 9);
+        let b = QuestionSet::generate_n(Task::BottleneckAnalysis, 5, 9);
+        for (x, y) in a.questions.iter().zip(&b.questions) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.correct, y.correct);
+        }
+    }
+
+    #[test]
+    fn correct_answers_are_distributed() {
+        let qs = QuestionSet::generate_n(Task::BottleneckAnalysis, 60, 3);
+        let mut counts = [0usize; 4];
+        for q in &qs.questions {
+            counts[q.correct] += 1;
+        }
+        // Shuffling should spread the answer key.
+        assert!(counts.iter().all(|&c| c > 3), "{counts:?}");
+    }
+
+    #[test]
+    fn prediction_truth_is_uniquely_closest() {
+        let qs = QuestionSet::generate_n(Task::PerfAreaPrediction, 30, 4);
+        for q in &qs.questions {
+            let vals: Vec<f64> = q
+                .choices
+                .iter()
+                .map(|c| c.parse::<f64>().unwrap())
+                .collect();
+            let truth = vals[q.correct];
+            for (i, v) in vals.iter().enumerate() {
+                if i != q.correct {
+                    assert!(
+                        (v - truth).abs() > truth.abs() * 0.03,
+                        "ambiguous choices {vals:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tuning_correct_candidate_is_feasible() {
+        let qs = QuestionSet::generate_n(Task::ParameterTuning, 15, 5);
+        for q in &qs.questions {
+            let budget: f64 = q
+                .prompt
+                .split("area_mm2 <=")
+                .nth(1)
+                .unwrap()
+                .split_whitespace()
+                .next()
+                .unwrap()
+                .parse()
+                .unwrap();
+            let d = crate::llm::parse::parse_compact_design(
+                &q.choices[q.correct],
+            )
+            .unwrap();
+            assert!(
+                (crate::arch::area_mm2(&d) as f64) <= budget * 1.001,
+                "correct candidate violates constraint"
+            );
+        }
+    }
+}

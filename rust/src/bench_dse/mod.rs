@@ -1,0 +1,14 @@
+//! The DSE Benchmark (paper §4): a Q&A benchmark of the three skills
+//! architecture optimization needs — bottleneck analysis (308 questions),
+//! performance/area prediction (127) and parameter tuning (30) — with
+//! ground truth computed from the simulators, multiple-choice format
+//! (LongBench-style), and an accuracy scorer over `LanguageModel`s.
+//!
+//! This is what selects the backbone model for LUMINA and what the §5.2
+//! corrective rules were distilled from.
+
+pub mod generator;
+pub mod runner;
+
+pub use generator::{Question, QuestionSet, Task};
+pub use runner::{run_benchmark, BenchmarkReport, TaskAccuracy};

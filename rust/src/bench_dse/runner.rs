@@ -1,0 +1,217 @@
+//! Benchmark runner + scoring (reproduces paper Table 3).
+
+use crate::llm::{prompts, LanguageModel, ModelProfile, SimulatedAnalyst};
+use crate::llm::parse::parse_answer_letter;
+
+use super::generator::{Question, QuestionSet, Task};
+
+/// Accuracy of one (model, task) cell.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskAccuracy {
+    pub task: Task,
+    pub original: f64,
+    pub enhanced: f64,
+    pub n: usize,
+}
+
+/// Full benchmark report for a set of models.
+#[derive(Debug, Clone)]
+pub struct BenchmarkReport {
+    /// (model name, per-task accuracies).
+    pub rows: Vec<(String, Vec<TaskAccuracy>)>,
+}
+
+/// Score one model on one question set under a given system prompt.
+pub fn score(
+    model: &mut dyn LanguageModel,
+    system: &str,
+    questions: &[Question],
+) -> f64 {
+    let mut right = 0usize;
+    for q in questions {
+        let completion = model.complete(system, &q.prompt);
+        if parse_answer_letter(&completion) == Some(q.correct) {
+            right += 1;
+        }
+    }
+    right as f64 / questions.len().max(1) as f64
+}
+
+/// Run the full benchmark (all three tasks, original + enhanced prompts)
+/// for the given model profiles. `scale` in (0, 1] shrinks the question
+/// counts proportionally for quick runs.
+pub fn run_benchmark(
+    profiles: &[ModelProfile],
+    seed: u64,
+    scale: f64,
+) -> BenchmarkReport {
+    let sets: Vec<QuestionSet> = Task::ALL
+        .iter()
+        .map(|&t| {
+            let n = ((t.paper_count() as f64 * scale).round() as usize)
+                .max(10);
+            QuestionSet::generate_n(t, n, seed)
+        })
+        .collect();
+
+    let enhanced_system = prompts::system_enhanced();
+    let mut rows = Vec::new();
+    for profile in profiles {
+        let mut accs = Vec::new();
+        for set in &sets {
+            let mut m_orig =
+                SimulatedAnalyst::new(*profile, seed ^ 0x0f1);
+            let original =
+                score(&mut m_orig, prompts::SYSTEM_DEFAULT, &set.questions);
+            let mut m_enh =
+                SimulatedAnalyst::new(*profile, seed ^ 0x0f2);
+            let enhanced =
+                score(&mut m_enh, &enhanced_system, &set.questions);
+            accs.push(TaskAccuracy {
+                task: set.task,
+                original,
+                enhanced,
+                n: set.questions.len(),
+            });
+        }
+        rows.push((profile.name.to_string(), accs));
+    }
+    BenchmarkReport { rows }
+}
+
+impl BenchmarkReport {
+    /// Render as the paper's Table 3.
+    pub fn render_table3(&self) -> String {
+        let mut out = String::from(
+            "| Benchmark Task       | Model     | Accuracy (Original) | \
+             Accuracy (Enhanced) |\n|---|---|---|---|\n",
+        );
+        for task in Task::ALL {
+            for (name, accs) in &self.rows {
+                let a = accs.iter().find(|a| a.task == task).unwrap();
+                out.push_str(&format!(
+                    "| {:<20} | {:<9} | {:.2} | {:.2} |\n",
+                    task.name(),
+                    name,
+                    a.original,
+                    a.enhanced
+                ));
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, model: &str, task: Task) -> Option<TaskAccuracy> {
+        self.rows
+            .iter()
+            .find(|(n, _)| n == model)
+            .and_then(|(_, accs)| {
+                accs.iter().find(|a| a.task == task).copied()
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> BenchmarkReport {
+        run_benchmark(
+            &[
+                ModelProfile::phi4(),
+                ModelProfile::qwen3(),
+                ModelProfile::llama31(),
+            ],
+            77,
+            0.35,
+        )
+    }
+
+    #[test]
+    fn oracle_model_is_near_perfect_on_bottleneck_and_prediction() {
+        let r = run_benchmark(&[ModelProfile::oracle()], 3, 0.3);
+        let b = r.get("oracle", Task::BottleneckAnalysis).unwrap();
+        let p = r.get("oracle", Task::PerfAreaPrediction).unwrap();
+        assert!(b.original > 0.85, "bottleneck oracle {:.2}", b.original);
+        assert!(p.original > 0.85, "prediction oracle {:.2}", p.original);
+    }
+
+    #[test]
+    fn enhanced_prompts_help_every_model_and_task() {
+        let r = report();
+        for (name, accs) in &r.rows {
+            for a in accs {
+                assert!(
+                    a.enhanced >= a.original - 0.05,
+                    "{name} {:?}: {:.2} -> {:.2}",
+                    a.task,
+                    a.original,
+                    a.enhanced
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn model_ordering_matches_paper() {
+        // Qwen-3 strongest, Llama-3.1 weakest, on every task (original).
+        let r = report();
+        for task in Task::ALL {
+            let q = r.get("qwen3", task).unwrap().original;
+            let l = r.get("llama3.1", task).unwrap().original;
+            assert!(q > l, "{task:?}: qwen {q:.2} vs llama {l:.2}");
+        }
+    }
+
+    #[test]
+    fn table3_calibration_bands() {
+        // Accuracies land near the paper's Table 3 (generous ±0.12 band —
+        // the simulated models are stand-ins, the *ordering and deltas*
+        // are the contract; see EXPERIMENTS.md for measured values).
+        // Full question counts: the 30-question tuning task is too noisy
+        // at reduced scale.
+        let r = run_benchmark(
+            &[
+                ModelProfile::phi4(),
+                ModelProfile::qwen3(),
+                ModelProfile::llama31(),
+            ],
+            2026,
+            1.0,
+        );
+        let expect = [
+            ("phi4", Task::BottleneckAnalysis, 0.70, 0.76),
+            ("qwen3", Task::BottleneckAnalysis, 0.73, 0.80),
+            ("llama3.1", Task::BottleneckAnalysis, 0.47, 0.53),
+            ("phi4", Task::PerfAreaPrediction, 0.42, 0.61),
+            ("qwen3", Task::PerfAreaPrediction, 0.59, 0.82),
+            ("llama3.1", Task::PerfAreaPrediction, 0.23, 0.39),
+            ("phi4", Task::ParameterTuning, 0.30, 0.48),
+            ("qwen3", Task::ParameterTuning, 0.40, 0.63),
+            ("llama3.1", Task::ParameterTuning, 0.26, 0.46),
+        ];
+        for (model, task, orig, enh) in expect {
+            let a = r.get(model, task).unwrap();
+            assert!(
+                (a.original - orig).abs() < 0.12,
+                "{model} {task:?} original {:.2} vs paper {orig}",
+                a.original
+            );
+            assert!(
+                (a.enhanced - enh).abs() < 0.15,
+                "{model} {task:?} enhanced {:.2} vs paper {enh}",
+                a.enhanced
+            );
+        }
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let r = report();
+        let t = r.render_table3();
+        for m in ["phi4", "qwen3", "llama3.1"] {
+            assert!(t.contains(m));
+        }
+        assert!(t.contains("Bottleneck Analysis"));
+    }
+}

@@ -1,0 +1,9 @@
+//! The GPU-node design space (paper Table 1): parameters, the ~4.7M-point
+//! grid, encoding to the evaluator's f32 design vectors, and sampling.
+
+pub mod point;
+pub mod sample;
+pub mod space;
+
+pub use point::{DesignPoint, Param, N_PARAMS};
+pub use space::DesignSpace;

@@ -1,0 +1,211 @@
+//! Design points and parameters.
+//!
+//! The encoding order (and the meaning of each lane of the f32 design
+//! vector) is shared with `python/compile/constants.py` — the artifact and
+//! every simulator consume the same layout.
+
+use std::fmt;
+
+/// Number of free design parameters (Table 1; systolic array height and
+/// width are a single square parameter).
+pub const N_PARAMS: usize = 8;
+
+/// A design parameter, in encoding order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Param {
+    Links = 0,
+    Cores = 1,
+    Sublanes = 2,
+    SystolicArray = 3,
+    VectorWidth = 4,
+    SramKb = 5,
+    GbufMb = 6,
+    MemChannels = 7,
+}
+
+impl Param {
+    pub const ALL: [Param; N_PARAMS] = [
+        Param::Links,
+        Param::Cores,
+        Param::Sublanes,
+        Param::SystolicArray,
+        Param::VectorWidth,
+        Param::SramKb,
+        Param::GbufMb,
+        Param::MemChannels,
+    ];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Param {
+        Param::ALL[i]
+    }
+
+    /// Canonical identifier, used in prompts, reports and the QualE
+    /// influence map (must match the names that appear in the simulator
+    /// sources QualE parses).
+    pub fn name(self) -> &'static str {
+        match self {
+            Param::Links => "interconnect_link_count",
+            Param::Cores => "core_count",
+            Param::Sublanes => "sublane_count",
+            Param::SystolicArray => "systolic_array_dim",
+            Param::VectorWidth => "vector_width",
+            Param::SramKb => "sram_kb",
+            Param::GbufMb => "global_buffer_mb",
+            Param::MemChannels => "memory_channel_count",
+        }
+    }
+
+    /// Human label as in the paper's Table 1/4.
+    pub fn label(self) -> &'static str {
+        match self {
+            Param::Links => "Interconnect Link Count",
+            Param::Cores => "Core Count",
+            Param::Sublanes => "Sublane Count",
+            Param::SystolicArray => "Systolic Array Height x Width",
+            Param::VectorWidth => "Vector Width",
+            Param::SramKb => "SRAM Size (KB)",
+            Param::GbufMb => "Global Buffer (MB)",
+            Param::MemChannels => "Memory Channel Count",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Param> {
+        Param::ALL.iter().copied().find(|p| p.name() == name)
+    }
+}
+
+impl fmt::Display for Param {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A concrete design point: raw parameter values (not grid indices).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DesignPoint {
+    pub values: [u32; N_PARAMS],
+}
+
+impl DesignPoint {
+    pub fn new(values: [u32; N_PARAMS]) -> Self {
+        Self { values }
+    }
+
+    pub fn get(&self, p: Param) -> u32 {
+        self.values[p.index()]
+    }
+
+    pub fn set(&mut self, p: Param, v: u32) {
+        self.values[p.index()] = v;
+    }
+
+    pub fn with(&self, p: Param, v: u32) -> DesignPoint {
+        let mut d = *self;
+        d.set(p, v);
+        d
+    }
+
+    /// Encode for the evaluator / artifact (f32 lanes in Param order).
+    pub fn encode(&self) -> [f32; N_PARAMS] {
+        let mut out = [0f32; N_PARAMS];
+        for (o, v) in out.iter_mut().zip(self.values.iter()) {
+            *o = *v as f32;
+        }
+        out
+    }
+
+    /// Raw values as f64 (PCA input).
+    pub fn as_f64(&self) -> Vec<f64> {
+        self.values.iter().map(|&v| v as f64).collect()
+    }
+
+    /// The NVIDIA A100-class reference configuration (Table 4 rightmost
+    /// column): 12 NVLinks, 108 SMs, 4 sublanes, 16x16 systolic arrays,
+    /// 32-wide vector units, 192 KB SRAM/SM, 40 MB L2, 5 HBM channels.
+    pub fn a100() -> DesignPoint {
+        DesignPoint::new([12, 108, 4, 16, 32, 192, 40, 5])
+    }
+
+    /// Paper Table 4 "Design A".
+    pub fn paper_design_a() -> DesignPoint {
+        DesignPoint::new([24, 64, 4, 32, 16, 128, 40, 6])
+    }
+
+    /// Paper Table 4 "Design B".
+    pub fn paper_design_b() -> DesignPoint {
+        DesignPoint::new([18, 96, 4, 32, 16, 128, 40, 6])
+    }
+}
+
+impl fmt::Display for DesignPoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "links={} cores={} sublanes={} sa={}x{} vec={} sram={}KB \
+             gbuf={}MB memch={}",
+            self.values[0],
+            self.values[1],
+            self.values[2],
+            self.values[3],
+            self.values[3],
+            self.values[4],
+            self.values[5],
+            self.values[6],
+            self.values[7],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_roundtrip() {
+        for p in Param::ALL {
+            assert_eq!(Param::from_index(p.index()), p);
+            assert_eq!(Param::by_name(p.name()), Some(p));
+        }
+        assert_eq!(Param::by_name("bogus"), None);
+    }
+
+    #[test]
+    fn encode_matches_python_layout() {
+        // Mirrors constants.IDX_* ordering.
+        let a100 = DesignPoint::a100();
+        let e = a100.encode();
+        assert_eq!(e[0], 12.0); // links
+        assert_eq!(e[1], 108.0); // cores
+        assert_eq!(e[2], 4.0); // sublanes
+        assert_eq!(e[3], 16.0); // systolic dim
+        assert_eq!(e[4], 32.0); // vector width
+        assert_eq!(e[5], 192.0); // sram kb
+        assert_eq!(e[6], 40.0); // gbuf mb
+        assert_eq!(e[7], 5.0); // memory channels
+    }
+
+    #[test]
+    fn with_does_not_mutate_original() {
+        let a = DesignPoint::a100();
+        let b = a.with(Param::Cores, 64);
+        assert_eq!(a.get(Param::Cores), 108);
+        assert_eq!(b.get(Param::Cores), 64);
+        assert_eq!(b.get(Param::Links), a.get(Param::Links));
+    }
+
+    #[test]
+    fn paper_designs_match_table4() {
+        let a = DesignPoint::paper_design_a();
+        assert_eq!(a.get(Param::Links), 24);
+        assert_eq!(a.get(Param::Cores), 64);
+        assert_eq!(a.get(Param::SystolicArray), 32);
+        assert_eq!(a.get(Param::MemChannels), 6);
+        let b = DesignPoint::paper_design_b();
+        assert_eq!(b.get(Param::Links), 18);
+        assert_eq!(b.get(Param::Cores), 96);
+    }
+}

@@ -1,0 +1,129 @@
+//! Design-space sampling strategies shared by the baselines and figures:
+//! uniform grid sampling, Latin-hypercube-style stratified sampling, and
+//! dedup-aware batch draws.
+
+use std::collections::HashSet;
+
+use super::point::{DesignPoint, Param, N_PARAMS};
+use super::space::DesignSpace;
+use crate::stats::rng::Pcg32;
+
+/// Draw one uniform random grid point.
+pub fn uniform(space: &DesignSpace, rng: &mut Pcg32) -> DesignPoint {
+    let idx = rng.next_u64() % space.size();
+    space.decode_index(idx)
+}
+
+/// Draw `n` uniform points (may repeat).
+pub fn uniform_batch(
+    space: &DesignSpace,
+    rng: &mut Pcg32,
+    n: usize,
+) -> Vec<DesignPoint> {
+    (0..n).map(|_| uniform(space, rng)).collect()
+}
+
+/// Draw `n` distinct uniform points (rejection on duplicates).
+pub fn uniform_distinct(
+    space: &DesignSpace,
+    rng: &mut Pcg32,
+    n: usize,
+) -> Vec<DesignPoint> {
+    assert!((n as u64) <= space.size());
+    let mut seen = HashSet::with_capacity(n);
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let d = uniform(space, rng);
+        if seen.insert(d) {
+            out.push(d);
+        }
+    }
+    out
+}
+
+/// Latin-hypercube-flavoured stratified sample: each axis's grid values
+/// are cycled through a shuffled order so every value appears ~n/k times,
+/// decorrelating axes. Used to seed BO/GA populations.
+pub fn stratified(
+    space: &DesignSpace,
+    rng: &mut Pcg32,
+    n: usize,
+) -> Vec<DesignPoint> {
+    let mut columns: Vec<Vec<u32>> = Vec::with_capacity(N_PARAMS);
+    for p in Param::ALL {
+        let vals = space.values(p);
+        let mut col = Vec::with_capacity(n);
+        while col.len() < n {
+            let mut order: Vec<u32> = vals.to_vec();
+            rng.shuffle(&mut order);
+            col.extend(order);
+        }
+        col.truncate(n);
+        rng.shuffle(&mut col);
+        columns.push(col);
+    }
+    (0..n)
+        .map(|i| {
+            let mut values = [0u32; N_PARAMS];
+            for (j, col) in columns.iter().enumerate() {
+                values[j] = col[i];
+            }
+            DesignPoint::new(values)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_points_are_on_grid() {
+        let s = DesignSpace::table1();
+        let mut rng = Pcg32::new(1);
+        for _ in 0..200 {
+            assert!(s.contains(&uniform(&s, &mut rng)));
+        }
+    }
+
+    #[test]
+    fn uniform_distinct_has_no_duplicates() {
+        let s = DesignSpace::table1();
+        let mut rng = Pcg32::new(2);
+        let pts = uniform_distinct(&s, &mut rng, 500);
+        let set: HashSet<_> = pts.iter().collect();
+        assert_eq!(set.len(), 500);
+    }
+
+    #[test]
+    fn stratified_covers_each_axis() {
+        let s = DesignSpace::table1();
+        let mut rng = Pcg32::new(3);
+        let pts = stratified(&s, &mut rng, 64);
+        assert_eq!(pts.len(), 64);
+        for p in Param::ALL {
+            let distinct: HashSet<u32> =
+                pts.iter().map(|d| d.get(p)).collect();
+            // With 64 samples every axis (<=14 values) should be covered.
+            assert_eq!(
+                distinct.len(),
+                s.values(p).len(),
+                "axis {p} not fully covered"
+            );
+        }
+        for d in &pts {
+            assert!(s.contains(d));
+        }
+    }
+
+    #[test]
+    fn uniform_hits_varied_regions() {
+        // Smoke-test that sampling is not collapsed to a corner.
+        let s = DesignSpace::table1();
+        let mut rng = Pcg32::new(4);
+        let pts = uniform_batch(&s, &mut rng, 300);
+        let distinct_cores: HashSet<u32> =
+            pts.iter().map(|d| d.get(Param::Cores)).collect();
+        assert!(distinct_cores.len() >= 10);
+    }
+}

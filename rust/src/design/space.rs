@@ -1,0 +1,250 @@
+//! The Table 1 design-space grid: legal values per parameter, point
+//! validation, grid stepping (the Strategy Engine moves in grid steps),
+//! and enumeration (~4.74M points).
+
+use super::point::{DesignPoint, Param, N_PARAMS};
+
+/// The discrete design space. Values per parameter are sorted ascending.
+#[derive(Debug, Clone)]
+pub struct DesignSpace {
+    values: [Vec<u32>; N_PARAMS],
+}
+
+impl DesignSpace {
+    /// The paper's Table 1 grid. The Global Buffer axis additionally
+    /// carries the A100-class anchor value 40 MB (Table 4 lists 40 MB for
+    /// every reported design even though Table 1's grid omits it — see
+    /// DESIGN.md "Known paper inconsistencies").
+    pub fn table1() -> DesignSpace {
+        DesignSpace {
+            values: [
+                vec![6, 12, 18, 24],                                // links
+                vec![1, 2, 4, 8, 16, 32, 64, 96, 108, 128, 132, 136,
+                     140, 256],                                     // cores
+                vec![1, 2, 4, 8],                                   // subl
+                vec![4, 8, 16, 32, 64, 128],                        // sa
+                vec![4, 8, 16, 32, 64, 128],                        // vecw
+                vec![32, 64, 128, 192, 256, 512, 1024],             // sram
+                vec![32, 40, 64, 128, 256, 320, 512, 1024],         // gbuf
+                (1..=12).collect(),                                 // memch
+            ],
+        }
+    }
+
+    /// The strict Table 1 grid (no 40 MB anchor) — 4.74M points exactly;
+    /// used by the size test and available for ablations.
+    pub fn table1_strict() -> DesignSpace {
+        let mut s = Self::table1();
+        s.values[Param::GbufMb.index()] =
+            vec![32, 64, 128, 256, 320, 512, 1024];
+        s
+    }
+
+    pub fn values(&self, p: Param) -> &[u32] {
+        &self.values[p.index()]
+    }
+
+    /// Total number of grid points.
+    pub fn size(&self) -> u64 {
+        self.values.iter().map(|v| v.len() as u64).product()
+    }
+
+    /// Is every coordinate of `d` on the grid?
+    pub fn contains(&self, d: &DesignPoint) -> bool {
+        Param::ALL
+            .iter()
+            .all(|&p| self.values(p).contains(&d.get(p)))
+    }
+
+    /// Grid index of a value (None if off-grid).
+    pub fn index_of(&self, p: Param, value: u32) -> Option<usize> {
+        self.values(p).iter().position(|&v| v == value)
+    }
+
+    /// Step `p` by `delta` grid positions from its current value,
+    /// clamping at the ends. Off-grid values snap to the nearest grid
+    /// value first.
+    pub fn step(&self, d: &DesignPoint, p: Param, delta: i32) -> DesignPoint {
+        let vals = self.values(p);
+        let cur = self
+            .index_of(p, d.get(p))
+            .unwrap_or_else(|| self.nearest_index(p, d.get(p)));
+        let next = (cur as i64 + delta as i64)
+            .clamp(0, vals.len() as i64 - 1) as usize;
+        d.with(p, vals[next])
+    }
+
+    /// Index of the grid value closest to `value`.
+    pub fn nearest_index(&self, p: Param, value: u32) -> usize {
+        let vals = self.values(p);
+        let mut best = 0usize;
+        let mut best_d = u32::MAX;
+        for (i, &v) in vals.iter().enumerate() {
+            let dist = v.abs_diff(value);
+            if dist < best_d {
+                best_d = dist;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Snap an arbitrary point onto the grid (nearest value per axis).
+    pub fn snap(&self, d: &DesignPoint) -> DesignPoint {
+        let mut out = *d;
+        for p in Param::ALL {
+            let idx = self.nearest_index(p, d.get(p));
+            out.set(p, self.values(p)[idx]);
+        }
+        out
+    }
+
+    /// Decode a flat enumeration index into a point (mixed-radix).
+    pub fn decode_index(&self, mut idx: u64) -> DesignPoint {
+        let mut values = [0u32; N_PARAMS];
+        for i in (0..N_PARAMS).rev() {
+            let n = self.values[i].len() as u64;
+            values[i] = self.values[i][(idx % n) as usize];
+            idx /= n;
+        }
+        DesignPoint::new(values)
+    }
+
+    /// Encode a grid point into its flat enumeration index.
+    pub fn encode_index(&self, d: &DesignPoint) -> Option<u64> {
+        let mut idx = 0u64;
+        for i in 0..N_PARAMS {
+            let pos = self.values[i]
+                .iter()
+                .position(|&v| v == d.values[i])? as u64;
+            idx = idx * self.values[i].len() as u64 + pos;
+        }
+        Some(idx)
+    }
+
+    /// All single-axis grid neighbours of `d` (up to 2 per axis).
+    pub fn neighbors(&self, d: &DesignPoint) -> Vec<DesignPoint> {
+        let mut out = Vec::with_capacity(2 * N_PARAMS);
+        for p in Param::ALL {
+            for delta in [-1, 1] {
+                let n = self.step(d, p, delta);
+                if n != *d {
+                    out.push(n);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn strict_grid_matches_paper_size() {
+        // 4 * 14 * 4 * 6 * 6 * 7 * 7 * 12 = 4,741,632 ~ "4.7 million"
+        assert_eq!(DesignSpace::table1_strict().size(), 4_741_632);
+    }
+
+    #[test]
+    fn extended_grid_contains_a100_gbuf() {
+        let s = DesignSpace::table1();
+        assert!(s.values(Param::GbufMb).contains(&40));
+        assert_eq!(s.size(), 4_741_632 / 7 * 8);
+    }
+
+    #[test]
+    fn a100_reference_is_on_extended_grid() {
+        let s = DesignSpace::table1();
+        assert!(s.contains(&DesignPoint::a100()));
+        assert!(s.contains(&DesignPoint::paper_design_a()));
+        assert!(s.contains(&DesignPoint::paper_design_b()));
+    }
+
+    #[test]
+    fn step_clamps_at_boundaries() {
+        let s = DesignSpace::table1();
+        let d = DesignPoint::a100();
+        let max_links = s.step(&d, Param::Links, 100);
+        assert_eq!(max_links.get(Param::Links), 24);
+        let min_links = s.step(&d, Param::Links, -100);
+        assert_eq!(min_links.get(Param::Links), 6);
+    }
+
+    #[test]
+    fn step_moves_one_grid_position() {
+        let s = DesignSpace::table1();
+        let d = DesignPoint::a100();
+        assert_eq!(s.step(&d, Param::Cores, 1).get(Param::Cores), 128);
+        assert_eq!(s.step(&d, Param::Cores, -1).get(Param::Cores), 96);
+    }
+
+    #[test]
+    fn snap_finds_nearest() {
+        let s = DesignSpace::table1();
+        let off = DesignPoint::new([13, 100, 3, 20, 24, 200, 45, 5]);
+        let snapped = s.snap(&off);
+        assert_eq!(snapped.get(Param::Links), 12);
+        assert_eq!(snapped.get(Param::Cores), 96);
+        assert_eq!(snapped.get(Param::SystolicArray), 16);
+        assert_eq!(snapped.get(Param::GbufMb), 40);
+        assert!(s.contains(&snapped));
+    }
+
+    #[test]
+    fn index_roundtrip_property() {
+        let s = DesignSpace::table1();
+        let size = s.size();
+        prop::forall(
+            11,
+            256,
+            |rng| rng.next_u64() % size,
+            |&idx| {
+                let d = s.decode_index(idx);
+                s.contains(&d) && s.encode_index(&d) == Some(idx)
+            },
+        );
+    }
+
+    #[test]
+    fn neighbors_are_on_grid_and_distinct() {
+        let s = DesignSpace::table1();
+        prop::forall(
+            12,
+            128,
+            |rng| s.decode_index(rng.next_u64() % s.size()),
+            |d| {
+                let ns = s.neighbors(d);
+                !ns.is_empty()
+                    && ns.iter().all(|n| s.contains(n) && n != d)
+            },
+        );
+    }
+
+    #[test]
+    fn snap_is_idempotent_property() {
+        let s = DesignSpace::table1();
+        prop::forall(
+            13,
+            128,
+            |rng| {
+                DesignPoint::new([
+                    rng.range_usize(1, 30) as u32,
+                    rng.range_usize(1, 300) as u32,
+                    rng.range_usize(1, 10) as u32,
+                    rng.range_usize(2, 140) as u32,
+                    rng.range_usize(2, 140) as u32,
+                    rng.range_usize(16, 1100) as u32,
+                    rng.range_usize(16, 1100) as u32,
+                    rng.range_usize(1, 14) as u32,
+                ])
+            },
+            |d| {
+                let s1 = s.snap(d);
+                s.snap(&s1) == s1 && s.contains(&s1)
+            },
+        );
+    }
+}

@@ -1,0 +1,255 @@
+//! Evaluation façade: metrics, bottleneck/critical-path types, and the
+//! `Evaluator` trait every DSE method drives.
+//!
+//! Three implementations exist:
+//! * [`crate::runtime::PjrtEvaluator`] — the AOT roofline artifact
+//!   executed through PJRT (the production hot path),
+//! * [`crate::sim::roofline::RooflineSim`] — bit-level Rust mirror of the
+//!   same model (test oracle + fallback when artifacts are absent),
+//! * [`crate::sim::compass::CompassSim`] — the detailed LLMCompass-class
+//!   simulator with tile-level critical-path analysis (the "expensive"
+//!   evaluator of the paper's 20-sample study).
+
+use std::fmt;
+
+use crate::design::DesignPoint;
+use crate::pareto::Objectives;
+use crate::Result;
+
+/// Stall/bottleneck component, as attributed by critical-path analysis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Bottleneck {
+    Compute,
+    Memory,
+    Network,
+}
+
+impl Bottleneck {
+    pub const ALL: [Bottleneck; 3] =
+        [Bottleneck::Compute, Bottleneck::Memory, Bottleneck::Network];
+
+    pub fn index(self) -> usize {
+        match self {
+            Bottleneck::Compute => 0,
+            Bottleneck::Memory => 1,
+            Bottleneck::Network => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Bottleneck::Compute => "compute",
+            Bottleneck::Memory => "memory",
+            Bottleneck::Network => "network",
+        }
+    }
+}
+
+impl fmt::Display for Bottleneck {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Inference phase (objective) the stall stacks are reported for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 2] = [Phase::Prefill, Phase::Decode];
+
+    pub fn index(self) -> usize {
+        match self {
+            Phase::Prefill => 0,
+            Phase::Decode => 1,
+        }
+    }
+
+    pub fn metric_name(self) -> &'static str {
+        match self {
+            Phase::Prefill => "TTFT",
+            Phase::Decode => "TPOT",
+        }
+    }
+}
+
+/// Evaluation result for one design point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Metrics {
+    pub ttft_ms: f32,
+    pub tpot_ms: f32,
+    pub area_mm2: f32,
+    /// `stalls[phase][component]` — time (ms) attributed to the component
+    /// on the phase's critical path.
+    pub stalls: [[f32; 3]; 2],
+}
+
+impl Metrics {
+    /// (TTFT, TPOT, area) as a minimization objective vector.
+    pub fn objectives(&self) -> Objectives {
+        [self.ttft_ms as f64, self.tpot_ms as f64, self.area_mm2 as f64]
+    }
+
+    pub fn phase_time_ms(&self, phase: Phase) -> f32 {
+        match phase {
+            Phase::Prefill => self.ttft_ms,
+            Phase::Decode => self.tpot_ms,
+        }
+    }
+
+    /// Dominant stall component for a phase.
+    pub fn dominant_bottleneck(&self, phase: Phase) -> Bottleneck {
+        let s = &self.stalls[phase.index()];
+        let mut best = Bottleneck::Compute;
+        for b in Bottleneck::ALL {
+            if s[b.index()] > s[best.index()] {
+                best = b;
+            }
+        }
+        best
+    }
+
+    /// Fraction of the phase's time attributed to a component.
+    pub fn stall_fraction(&self, phase: Phase, b: Bottleneck) -> f32 {
+        let total: f32 = self.stalls[phase.index()].iter().sum();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.stalls[phase.index()][b.index()] / total
+        }
+    }
+}
+
+/// A design-point evaluator ("simulation environment" in the paper).
+pub trait Evaluator {
+    /// Evaluate a batch of designs. Order of results matches input order.
+    fn eval_batch(&mut self, designs: &[DesignPoint]) -> Result<Vec<Metrics>>;
+
+    /// Short name for reports ("roofline-pjrt", "roofline-rs", "compass").
+    fn name(&self) -> &'static str;
+
+    /// Evaluate a single design.
+    fn eval(&mut self, d: &DesignPoint) -> Result<Metrics> {
+        Ok(self.eval_batch(std::slice::from_ref(d))?[0])
+    }
+}
+
+/// Wrapper that enforces a sample budget and records every evaluation —
+/// the bookkeeping layer the DSE race uses so "number of samples" means
+/// the same thing for every method.
+pub struct BudgetedEvaluator<'a> {
+    inner: &'a mut dyn Evaluator,
+    pub budget: usize,
+    pub log: Vec<(DesignPoint, Metrics)>,
+}
+
+impl<'a> BudgetedEvaluator<'a> {
+    pub fn new(inner: &'a mut dyn Evaluator, budget: usize) -> Self {
+        Self { inner, budget, log: Vec::new() }
+    }
+
+    pub fn spent(&self) -> usize {
+        self.log.len()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.budget.saturating_sub(self.spent())
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Evaluate as many of `designs` as the budget allows; returns the
+    /// evaluated prefix.
+    pub fn eval_batch(
+        &mut self,
+        designs: &[DesignPoint],
+    ) -> Result<Vec<(DesignPoint, Metrics)>> {
+        let take = designs.len().min(self.remaining());
+        if take == 0 {
+            return Ok(Vec::new());
+        }
+        let ms = self.inner.eval_batch(&designs[..take])?;
+        let pairs: Vec<(DesignPoint, Metrics)> =
+            designs[..take].iter().copied().zip(ms).collect();
+        self.log.extend(pairs.iter().copied());
+        Ok(pairs)
+    }
+
+    pub fn eval(&mut self, d: &DesignPoint) -> Result<Option<Metrics>> {
+        Ok(self.eval_batch(std::slice::from_ref(d))?.pop().map(|p| p.1))
+    }
+
+    /// All objective vectors evaluated so far.
+    pub fn objectives(&self) -> Vec<Objectives> {
+        self.log.iter().map(|(_, m)| m.objectives()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_metrics() -> Metrics {
+        Metrics {
+            ttft_ms: 30.0,
+            tpot_ms: 0.5,
+            area_mm2: 800.0,
+            stalls: [[20.0, 4.0, 6.0], [0.01, 0.4, 0.09]],
+        }
+    }
+
+    struct StubEval(usize);
+    impl Evaluator for StubEval {
+        fn eval_batch(
+            &mut self,
+            designs: &[DesignPoint],
+        ) -> Result<Vec<Metrics>> {
+            self.0 += designs.len();
+            Ok(designs.iter().map(|_| fake_metrics()).collect())
+        }
+        fn name(&self) -> &'static str {
+            "stub"
+        }
+    }
+
+    #[test]
+    fn dominant_bottleneck_per_phase() {
+        let m = fake_metrics();
+        assert_eq!(m.dominant_bottleneck(Phase::Prefill), Bottleneck::Compute);
+        assert_eq!(m.dominant_bottleneck(Phase::Decode), Bottleneck::Memory);
+    }
+
+    #[test]
+    fn stall_fractions_sum_to_one() {
+        let m = fake_metrics();
+        let total: f32 = Bottleneck::ALL
+            .iter()
+            .map(|&b| m.stall_fraction(Phase::Prefill, b))
+            .sum();
+        assert!((total - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn budget_enforced_and_logged() {
+        let mut inner = StubEval(0);
+        let mut be = BudgetedEvaluator::new(&mut inner, 3);
+        let ds = vec![DesignPoint::a100(); 5];
+        let got = be.eval_batch(&ds).unwrap();
+        assert_eq!(got.len(), 3);
+        assert!(be.exhausted());
+        assert_eq!(be.eval(&DesignPoint::a100()).unwrap(), None);
+        assert_eq!(be.log.len(), 3);
+        assert_eq!(inner.0, 3);
+    }
+
+    #[test]
+    fn objectives_vector_order() {
+        let o = fake_metrics().objectives();
+        assert_eq!(o, [30.0, 0.5, 800.0]);
+    }
+}

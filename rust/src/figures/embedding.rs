@@ -1,0 +1,76 @@
+//! PCA embeddings of design space and search trajectories (Figures 1 and
+//! 6): fit a PCA on a uniform background sample of the space, then
+//! project arbitrary designs / trajectories into the same 2-D plane.
+
+use crate::design::{sample, DesignPoint, DesignSpace};
+use crate::eval::Evaluator;
+use crate::stats::{Pca, Pcg32};
+use crate::Result;
+
+/// A fitted 2-D design-space embedding with evaluated background points.
+pub struct SpaceEmbedding {
+    pub pca: Pca,
+    /// (x, y, ttft, tpot, area) per background sample.
+    pub background: Vec<[f64; 5]>,
+}
+
+impl SpaceEmbedding {
+    /// Sample `n` designs uniformly, evaluate them, fit the PCA.
+    pub fn fit(
+        space: &DesignSpace,
+        eval: &mut dyn Evaluator,
+        n: usize,
+        seed: u64,
+    ) -> Result<SpaceEmbedding> {
+        let mut rng = Pcg32::with_stream(seed, 0xf1);
+        let designs = sample::uniform_batch(space, &mut rng, n);
+        let rows: Vec<Vec<f64>> =
+            designs.iter().map(|d| d.as_f64()).collect();
+        let pca = Pca::fit(&rows, 2);
+
+        let metrics = eval.eval_batch(&designs)?;
+        let background = designs
+            .iter()
+            .zip(&metrics)
+            .map(|(d, m)| {
+                let p = pca.transform(&d.as_f64());
+                [
+                    p[0],
+                    p[1],
+                    m.ttft_ms as f64,
+                    m.tpot_ms as f64,
+                    m.area_mm2 as f64,
+                ]
+            })
+            .collect();
+        Ok(SpaceEmbedding { pca, background })
+    }
+
+    /// Project one design into the embedding plane.
+    pub fn project(&self, d: &DesignPoint) -> [f64; 2] {
+        let p = self.pca.transform(&d.as_f64());
+        [p[0], p[1]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::RooflineSim;
+    use crate::workload::GPT3_175B;
+
+    #[test]
+    fn embedding_covers_space_and_projects() {
+        let space = DesignSpace::table1();
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let emb =
+            SpaceEmbedding::fit(&space, &mut sim, 300, 1).unwrap();
+        assert_eq!(emb.background.len(), 300);
+        assert!(emb.pca.explained_ratio() > 0.2);
+        let p = emb.project(&DesignPoint::a100());
+        assert!(p.iter().all(|v| v.is_finite()));
+        // Distinct designs land on distinct points (non-degenerate).
+        let q = emb.project(&DesignPoint::new([6, 1, 1, 4, 4, 32, 32, 1]));
+        assert!((p[0] - q[0]).abs() + (p[1] - q[1]).abs() > 1e-6);
+    }
+}

@@ -1,0 +1,9 @@
+//! Experiment drivers: one module per paper table/figure (see the
+//! experiment index in DESIGN.md). The `rust/benches/*` targets and the
+//! CLI both drive these.
+
+pub mod embedding;
+pub mod race;
+pub mod table4;
+
+pub use race::{run_race, EvaluatorKind, RaceConfig, RaceResult};

@@ -1,0 +1,189 @@
+//! Table 4: the top designs discovered by LUMINA vs the A100 reference —
+//! specification rows plus normalized TTFT / TPOT / area and the
+//! TTFT/Area, TPOT/Area efficiency ratios.
+
+use crate::design::{DesignPoint, Param};
+use crate::eval::{Evaluator, Metrics};
+use crate::pareto::{pareto_front, Objectives};
+use crate::Result;
+
+/// One column of Table 4.
+#[derive(Debug, Clone)]
+pub struct DesignReportRow {
+    pub label: String,
+    pub design: DesignPoint,
+    pub metrics: Metrics,
+    pub norm_ttft: f64,
+    pub norm_tpot: f64,
+    pub norm_area: f64,
+}
+
+impl DesignReportRow {
+    /// TTFT-per-area efficiency relative to the reference (>1 = better).
+    pub fn ttft_per_area(&self) -> f64 {
+        1.0 / (self.norm_ttft * self.norm_area)
+    }
+
+    pub fn tpot_per_area(&self) -> f64 {
+        1.0 / (self.norm_tpot * self.norm_area)
+    }
+}
+
+/// Pick the two paper-style headline designs from a trajectory: the best
+/// TTFT/Area trade-off and the best raw-TTFT design among superior
+/// points (Design A and Design B analogues).
+pub fn pick_top2(
+    trajectory: &[(DesignPoint, Objectives)],
+    reference: &Objectives,
+) -> Vec<DesignPoint> {
+    let superior: Vec<&(DesignPoint, Objectives)> = trajectory
+        .iter()
+        .filter(|(_, o)| (0..3).all(|i| o[i] < reference[i]))
+        .collect();
+    if superior.is_empty() {
+        // Fall back to the Pareto front.
+        let objs: Vec<Objectives> =
+            trajectory.iter().map(|(_, o)| *o).collect();
+        return pareto_front(&objs)
+            .into_iter()
+            .take(2)
+            .map(|i| trajectory[i].0)
+            .collect();
+    }
+    let eff = |o: &Objectives| {
+        (reference[0] / o[0]) / (o[2] / reference[2])
+    };
+    let design_a = superior
+        .iter()
+        .max_by(|a, b| eff(&a.1).partial_cmp(&eff(&b.1)).unwrap())
+        .unwrap()
+        .0;
+    let design_b = superior
+        .iter()
+        .min_by(|a, b| a.1[0].partial_cmp(&b.1[0]).unwrap())
+        .unwrap()
+        .0;
+    if design_a == design_b {
+        vec![design_a]
+    } else {
+        vec![design_a, design_b]
+    }
+}
+
+/// Evaluate and normalize a set of designs against the reference.
+pub fn report_rows(
+    eval: &mut dyn Evaluator,
+    designs: &[(String, DesignPoint)],
+) -> Result<Vec<DesignReportRow>> {
+    let reference = eval.eval(&DesignPoint::a100())?;
+    let mut rows = Vec::new();
+    for (label, d) in designs {
+        let m = eval.eval(d)?;
+        rows.push(DesignReportRow {
+            label: label.clone(),
+            design: *d,
+            metrics: m,
+            norm_ttft: (m.ttft_ms / reference.ttft_ms) as f64,
+            norm_tpot: (m.tpot_ms / reference.tpot_ms) as f64,
+            norm_area: (m.area_mm2 / reference.area_mm2) as f64,
+        });
+    }
+    rows.push(DesignReportRow {
+        label: "A100".into(),
+        design: DesignPoint::a100(),
+        metrics: reference,
+        norm_ttft: 1.0,
+        norm_tpot: 1.0,
+        norm_area: 1.0,
+    });
+    Ok(rows)
+}
+
+/// Render Table 4 as markdown.
+pub fn render(rows: &[DesignReportRow]) -> String {
+    let mut out = String::from("| Specifications |");
+    for r in rows {
+        out.push_str(&format!(" {} |", r.label));
+    }
+    out.push('\n');
+    out.push_str("|---|");
+    for _ in rows {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for p in Param::ALL {
+        out.push_str(&format!("| {} |", p.label()));
+        for r in rows {
+            out.push_str(&format!(" {} |", r.design.get(p)));
+        }
+        out.push('\n');
+    }
+    let metric_rows: [(&str, fn(&DesignReportRow) -> f64); 5] = [
+        ("Normalized TTFT", |r| r.norm_ttft),
+        ("Normalized TPOT", |r| r.norm_tpot),
+        ("Normalized Area", |r| r.norm_area),
+        ("TTFT/Area", |r| r.ttft_per_area()),
+        ("TPOT/Area", |r| r.tpot_per_area()),
+    ];
+    for (name, f) in metric_rows {
+        out.push_str(&format!("| {name} |"));
+        for r in rows {
+            out.push_str(&format!(" {:.3} |", f(r)));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::RooflineSim;
+    use crate::workload::GPT3_175B;
+
+    #[test]
+    fn paper_designs_report_superior_ratios() {
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let rows = report_rows(
+            &mut sim,
+            &[
+                ("Design A".into(), DesignPoint::paper_design_a()),
+                ("Design B".into(), DesignPoint::paper_design_b()),
+            ],
+        )
+        .unwrap();
+        let a = &rows[0];
+        assert!(a.norm_ttft < 1.0 && a.norm_tpot < 1.0 && a.norm_area < 1.0);
+        assert!(a.ttft_per_area() > 1.0);
+        let table = render(&rows);
+        assert!(table.contains("Design A") && table.contains("A100"));
+        assert!(table.contains("Interconnect Link Count"));
+    }
+
+    #[test]
+    fn pick_top2_prefers_superior_designs() {
+        let reference = [10.0, 1.0, 100.0];
+        let traj = vec![
+            (DesignPoint::a100(), [10.0, 1.0, 100.0]),
+            (DesignPoint::paper_design_a(), [7.0, 0.9, 60.0]),
+            (DesignPoint::paper_design_b(), [5.0, 0.95, 95.0]),
+            (DesignPoint::new([6, 1, 1, 4, 4, 32, 32, 1]),
+             [50.0, 5.0, 20.0]),
+        ];
+        let picks = pick_top2(&traj, &reference);
+        assert_eq!(picks.len(), 2);
+        assert_eq!(picks[0], DesignPoint::paper_design_a()); // best eff
+        assert_eq!(picks[1], DesignPoint::paper_design_b()); // best TTFT
+    }
+
+    #[test]
+    fn pick_top2_falls_back_to_front() {
+        let reference = [1.0, 1.0, 1.0];
+        let traj = vec![
+            (DesignPoint::a100(), [2.0, 2.0, 2.0]),
+            (DesignPoint::paper_design_a(), [3.0, 1.5, 2.0]),
+        ];
+        let picks = pick_top2(&traj, &reference);
+        assert!(!picks.is_empty());
+    }
+}

@@ -1,0 +1,37 @@
+//! LUMINA — LLM-guided GPU architecture exploration via bottleneck analysis.
+//!
+//! Reproduction of *LUMINA: LLM-Guided GPU Architecture Exploration via
+//! Bottleneck Analysis* (CS.AR 2026) as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: the
+//!   LUMINA engines ([`lumina`]), the DSE baselines ([`baselines`]), the
+//!   DSE Benchmark ([`bench_dse`]), Pareto analytics ([`pareto`]), the
+//!   detailed LLMCompass-class simulator with critical-path analysis
+//!   ([`sim::compass`]) and the PJRT runtime that executes the AOT
+//!   artifacts ([`runtime`]).
+//! * **L2/L1 (python/, build-time only)** — the batched roofline
+//!   evaluation model and its Pallas kernel, lowered once to
+//!   `artifacts/*.hlo.txt` and loaded here; Python never runs on the
+//!   exploration path.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod arch;
+pub mod baselines;
+pub mod bench_dse;
+pub mod design;
+pub mod eval;
+pub mod figures;
+pub mod llm;
+pub mod lumina;
+pub mod pareto;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

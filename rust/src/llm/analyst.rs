@@ -1,0 +1,714 @@
+//! The simulated analyst: a deterministic, seeded stand-in for the
+//! paper's hosted LLMs.
+//!
+//! Contract: it sees only the rendered prompt text (`parse.rs` extracts
+//! structure back out) and returns a completion string, exactly like a
+//! hosted model. Internally it performs genuine — but deliberately
+//! imperfect — architectural reasoning; the per-model failure modes of
+//! `profile.rs` fire stochastically (seeded) and are suppressed when the
+//! system prompt carries the paper's corrective rules.
+
+use crate::design::{DesignPoint, Param};
+use crate::llm::parse;
+use crate::llm::profile::ModelProfile;
+use crate::llm::prompts;
+use crate::llm::LanguageModel;
+use crate::stats::rng::Pcg32;
+
+/// Parameters an analyst associates with each stall component. This is
+/// the "pretrained domain knowledge" a real LLM would bring.
+pub fn relevant_params(stall: &str) -> &'static [Param] {
+    match stall {
+        "compute" => &[
+            Param::SystolicArray,
+            Param::Cores,
+            Param::Sublanes,
+            Param::VectorWidth,
+        ],
+        "memory" => {
+            &[Param::MemChannels, Param::GbufMb, Param::SramKb]
+        }
+        _ => &[Param::Links],
+    }
+}
+
+/// The simulated analyst model.
+pub struct SimulatedAnalyst {
+    pub profile: ModelProfile,
+    rng: Pcg32,
+}
+
+impl SimulatedAnalyst {
+    pub fn new(profile: ModelProfile, seed: u64) -> Self {
+        Self { profile, rng: Pcg32::with_stream(seed, 0x11a) }
+    }
+
+    pub fn qwen3(seed: u64) -> Self {
+        Self::new(ModelProfile::qwen3(), seed)
+    }
+
+    // ----------------------------------------------------------- tasks
+
+    fn answer_bottleneck(&mut self, prompt: &str, enhanced: bool) -> String {
+        let rates = *self.profile.rates(enhanced);
+        let choices = parse::parse_choices(prompt);
+        let design = parse::parse_design_lines(prompt);
+        let counters = parse::parse_assignments(prompt);
+
+        // Dominant component from the counters.
+        let comp = *counters.get("compute_stall_ms").unwrap_or(&0.0);
+        let mem = *counters.get("memory_stall_ms").unwrap_or(&0.0);
+        let net = *counters.get("network_stall_ms").unwrap_or(&0.0);
+        let dominant = if comp >= mem && comp >= net {
+            "compute"
+        } else if mem >= net {
+            "memory"
+        } else {
+            "network"
+        };
+
+        // Does the architecture look systolic-over-provisioned? (decode
+        // phase questions carry "decode" in the counter header)
+        let decode_phase = prompt.contains("(decode phase)");
+        let sa_overprovisioned = decode_phase
+            && dominant == "compute"
+            && design
+                .map(|d| d.get(Param::SystolicArray) >= 32)
+                .unwrap_or(false);
+        let sees_overprovisioning =
+            !self.rng.chance(rates.systolic_blindness);
+
+        // Score each choice.
+        let relevant = relevant_params(dominant);
+        let mut best: Option<(usize, i32)> = None;
+        for (i, c) in choices.iter().enumerate() {
+            let acts = parse_choice_actions(c);
+            if acts.is_empty() {
+                continue;
+            }
+            let mut score = 0i32;
+            let single = acts.len() == 1;
+            for (p, dir) in &acts {
+                let rel = relevant.contains(p);
+                let good_dir = if sa_overprovisioned
+                    && *p == Param::SystolicArray
+                    && sees_overprovisioning
+                {
+                    *dir < 0
+                } else {
+                    *dir > 0
+                };
+                if rel && good_dir {
+                    score += 4;
+                } else if rel {
+                    score -= 2;
+                } else {
+                    score -= 3; // irrelevant parameter bundled in
+                }
+            }
+            if single {
+                score += 2;
+            }
+            // Failure mode: attracted to multi-resource bundles that
+            // contain at least one relevant parameter.
+            if !single
+                && acts.iter().any(|(p, _)| relevant.contains(p))
+                && self.rng.chance(rates.multi_resource)
+            {
+                score += 8;
+            }
+            if best.map(|(_, s)| score > s).unwrap_or(true) {
+                best = Some((i, score));
+            }
+        }
+        let idx = best.map(|(i, _)| i).unwrap_or(0);
+        format!(
+            "Dominant stall is {dominant}. Answer: {}",
+            prompts::letter(idx)
+        )
+    }
+
+    fn answer_prediction(&mut self, prompt: &str, enhanced: bool) -> String {
+        let rates = *self.profile.rates(enhanced);
+        let choices = parse::parse_choices(prompt);
+
+        // Metric name appears as "Predict <metric> for config:".
+        let metric = prompt
+            .split("Predict ")
+            .nth(1)
+            .and_then(|s| s.split(' ').next())
+            .unwrap_or("area_mm2")
+            .to_string();
+
+        let reference = parse::parse_section(prompt, "Sensitivity reference")
+            .map(parse::parse_example_rows)
+            .unwrap_or_default();
+        let examples = parse::parse_section(prompt, "Observed examples")
+            .map(parse::parse_example_rows)
+            .unwrap_or_default();
+        let target = prompt
+            .split("for config:")
+            .nth(1)
+            .and_then(parse::parse_compact_design);
+
+        let predicted = match (&target, reference.first()) {
+            (Some(t), Some((rd, rv))) => {
+                if metric == "area_mm2" {
+                    // The analyst "executes" the quoted area-model source.
+                    let zero_base = self.rng.chance(rates.zero_baseline);
+                    if zero_base {
+                        // Failure mode: sums per-parameter contributions
+                        // against a zero baseline — drops the cross terms
+                        // and fixed offsets of the reference.
+                        analyst_area(t) - analyst_area(rd)
+                    } else {
+                        analyst_area(t)
+                    }
+                } else {
+                    // Perf: local linear model from single-param deltas.
+                    let mut v = *rv;
+                    let slopes = single_param_slopes(rd, *rv, &examples);
+                    let base: &DesignPoint = if self
+                        .rng
+                        .chance(rates.zero_baseline)
+                    {
+                        // Zero-baseline failure: deltas computed from the
+                        // first example instead of the reference.
+                        v = examples.first().map(|e| e.1).unwrap_or(v);
+                        examples
+                            .first()
+                            .map(|e| &e.0)
+                            .unwrap_or(rd)
+                    } else {
+                        rd
+                    };
+                    for p in Param::ALL {
+                        let dv = t.get(p) as f64 - base.get(p) as f64;
+                        if dv != 0.0 {
+                            if let Some(s) = slopes[p.index()] {
+                                v += s * dv;
+                            }
+                        }
+                    }
+                    v
+                }
+            }
+            _ => 0.0,
+        };
+
+        // Pick the numerically closest choice.
+        let mut idx = nearest_choice(&choices, predicted);
+        if self.rng.chance(rates.arithmetic_slip) && choices.len() > 1 {
+            // Generic slip: off-by-one choice.
+            idx = (idx + 1) % choices.len();
+        }
+        format!(
+            "Estimated {metric} = {predicted:.3}. Answer: {}",
+            prompts::letter(idx)
+        )
+    }
+
+    fn answer_tuning(&mut self, prompt: &str, enhanced: bool) -> String {
+        let rates = *self.profile.rates(enhanced);
+        let choices = parse::parse_choices(prompt);
+        let initial = parse::parse_design_lines(prompt);
+        let counters = parse::parse_assignments(prompt);
+        let budget = *counters.get("area_budget").unwrap_or(
+            &prompt
+                .split("area_mm2 <=")
+                .nth(1)
+                .and_then(|s| {
+                    s.trim().split_whitespace().next()
+                })
+                .and_then(|s| s.parse::<f64>().ok())
+                .unwrap_or(f64::INFINITY),
+        );
+        let minimize_tpot = prompt.contains("minimize TPOT");
+
+        let comp = *counters.get("compute_stall_ms").unwrap_or(&1.0);
+        let mem = *counters.get("memory_stall_ms").unwrap_or(&1.0);
+        let net = *counters.get("network_stall_ms").unwrap_or(&1.0);
+        let total = (comp + mem + net).max(1e-9);
+
+        let constraint_blind = self.rng.chance(rates.constraint_blind);
+        let multi_adjust = self.rng.chance(rates.multi_adjust);
+
+        let mut best: Option<(usize, f64)> = None;
+        for (i, c) in choices.iter().enumerate() {
+            let Some(d) = parse::parse_compact_design(c) else {
+                continue;
+            };
+            let area = analyst_area(&d);
+            if !constraint_blind && area > budget * 1.001 {
+                continue;
+            }
+            // Coarse internal latency model, weighted by the observed
+            // stall mix (this is the analyst's genuine reasoning step).
+            let score = if multi_adjust {
+                // Failure mode: prefers the candidate that changes the
+                // most parameters ("compensate everywhere").
+                initial
+                    .map(|init| {
+                        -(Param::ALL
+                            .iter()
+                            .filter(|&&p| d.get(p) != init.get(p))
+                            .count() as f64)
+                    })
+                    .unwrap_or(0.0)
+            } else {
+                analyst_latency_score(
+                    &d,
+                    comp / total,
+                    mem / total,
+                    net / total,
+                    minimize_tpot,
+                )
+            };
+            if best.map(|(_, s)| score < s).unwrap_or(true) {
+                best = Some((i, score));
+            }
+        }
+        let idx = best.map(|(i, _)| i).unwrap_or(0);
+        format!("Answer: {}", prompts::letter(idx))
+    }
+
+    fn answer_strategy(&mut self, prompt: &str, enhanced: bool) -> String {
+        let rates = *self.profile.rates(enhanced);
+        let design = parse::parse_design_lines(prompt)
+            .unwrap_or_else(DesignPoint::a100);
+
+        // Dominant stall comes from the critical-path section header.
+        let dominant = if prompt.contains("dominant stall: network") {
+            "network"
+        } else if prompt.contains("dominant stall: memory") {
+            "memory"
+        } else {
+            "compute"
+        };
+        let decode_target = prompt.contains("minimize TPOT");
+
+        // Influence factors: lines "influence: <param> <value>" (higher =
+        // more impact on the target metric per unit area).
+        let mut influence: Vec<(Param, f64)> = Vec::new();
+        for line in prompt.lines() {
+            let Some(rest) = line.trim().strip_prefix("influence:") else {
+                continue;
+            };
+            let mut toks = rest.split_whitespace();
+            if let (Some(name), Some(v)) = (toks.next(), toks.next()) {
+                if let (Some(p), Ok(v)) =
+                    (Param::by_name(name), v.parse::<f64>())
+                {
+                    influence.push((p, v));
+                }
+            }
+        }
+
+        // Banned moves from the reflection section.
+        let mut banned: Vec<(Param, i32)> = Vec::new();
+        for line in prompt.lines() {
+            let Some(rest) = line.trim().strip_prefix("banned:") else {
+                continue;
+            };
+            let mut toks = rest.split_whitespace();
+            if let (Some(name), Some(dir)) = (toks.next(), toks.next()) {
+                if let Some(p) = Param::by_name(name) {
+                    let d = if dir.starts_with('-') { -1 } else { 1 };
+                    banned.push((p, d));
+                }
+            }
+        }
+
+        // Pick the boost parameter: most influential for the dominant
+        // stall (fall back to the domain-knowledge mapping).
+        let candidates = relevant_params(dominant);
+        let pick = |influence: &[(Param, f64)], banned: &[(Param, i32)]| {
+            let mut best: Option<(Param, f64)> = None;
+            for &p in candidates {
+                if banned.contains(&(p, 1)) {
+                    continue;
+                }
+                let w = influence
+                    .iter()
+                    .find(|(q, _)| *q == p)
+                    .map(|(_, v)| *v)
+                    .unwrap_or(0.5);
+                if best.map(|(_, bw)| w > bw).unwrap_or(true) {
+                    best = Some((p, w));
+                }
+            }
+            best.map(|(p, _)| p)
+        };
+        let mut boost = pick(&influence, &banned);
+
+        // Systolic-blindness: for TPOT work the analyst may still try to
+        // grow the systolic array even though decode can't use it.
+        if decode_target
+            && boost == Some(Param::SystolicArray)
+            && !self.rng.chance(rates.systolic_blindness)
+        {
+            // Sees the pitfall (RULE 4): divert to memory instead.
+            boost = Some(Param::MemChannels);
+        }
+        let Some(boost) = boost else {
+            return "adjust: memory_channel_count +1".to_string();
+        };
+
+        // Funding parameter: least influential on the target metric,
+        // largest area saving, not the boost itself.
+        let mut fund: Option<(Param, f64)> = None;
+        for p in Param::ALL {
+            if p == boost
+                || design.get(p)
+                    == crate::design::DesignSpace::table1().values(p)[0]
+                || banned.contains(&(p, -1))
+            {
+                continue;
+            }
+            let w = influence
+                .iter()
+                .find(|(q, _)| *q == p)
+                .map(|(_, v)| *v)
+                .unwrap_or(0.5);
+            if fund.map(|(_, fw)| w < fw).unwrap_or(true) {
+                fund = Some((p, w));
+            }
+        }
+
+        let mut out = format!(
+            "Dominant stall: {dominant}. Boost the most correlated \
+             resource, fund from the least critical.\n\
+             adjust: {} +1\n",
+            boost.name()
+        );
+        if let Some((f, _)) = fund {
+            out.push_str(&format!("adjust: {} -1\n", f.name()));
+        }
+        // Non-enhanced models sometimes bundle extra non-critical tweaks
+        // (the failure the paper's RULE 3 exists to stop).
+        if !enhanced && self.rng.chance(rates.multi_adjust) {
+            for p in Param::ALL {
+                if Some(p) != fund.map(|(f, _)| f) && p != boost {
+                    out.push_str(&format!("adjust: {} +1\n", p.name()));
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl LanguageModel for SimulatedAnalyst {
+    fn name(&self) -> &str {
+        self.profile.name
+    }
+
+    fn complete(&mut self, system: &str, prompt: &str) -> String {
+        let enhanced = prompts::has_enhanced_rules(system);
+        if prompt.contains("## Task: bottleneck-analysis") {
+            self.answer_bottleneck(prompt, enhanced)
+        } else if prompt.contains("## Task: perf-area-prediction") {
+            self.answer_prediction(prompt, enhanced)
+        } else if prompt.contains("## Task: parameter-tuning") {
+            self.answer_tuning(prompt, enhanced)
+        } else if prompt.contains("## Task: bottleneck-mitigation-strategy")
+        {
+            self.answer_strategy(prompt, enhanced)
+        } else {
+            "Answer: A".to_string()
+        }
+    }
+}
+
+// ------------------------------------------------------------ helpers
+
+/// Parse "increase core_count" / "decrease sram_kb" actions, possibly
+/// several joined by ';'.
+pub fn parse_choice_actions(choice: &str) -> Vec<(Param, i32)> {
+    let mut out = Vec::new();
+    for part in choice.split(';') {
+        let mut toks = part.trim().split_whitespace();
+        let Some(verb) = toks.next() else { continue };
+        let dir = match verb {
+            "increase" => 1,
+            "decrease" => -1,
+            _ => continue,
+        };
+        if let Some(p) = toks.next().and_then(Param::by_name) {
+            out.push((p, dir));
+        }
+    }
+    out
+}
+
+/// The analyst's mental copy of the quoted area-model source.
+pub fn analyst_area(d: &DesignPoint) -> f64 {
+    let cores = d.get(Param::Cores) as f64;
+    let subl = d.get(Param::Sublanes) as f64;
+    let sa = d.get(Param::SystolicArray) as f64;
+    let vecw = d.get(Param::VectorWidth) as f64;
+    let sram = d.get(Param::SramKb) as f64;
+    let gbuf = d.get(Param::GbufMb) as f64;
+    let memch = d.get(Param::MemChannels) as f64;
+    let links = d.get(Param::Links) as f64;
+    cores * (1.5 + subl * (sa * sa * 0.0004 + vecw * 0.012) + 1.1
+        + sram * 0.0055)
+        + gbuf * 1.9
+        + memch * 15.0
+        + links * 1.5
+        + 60.0
+}
+
+/// Per-parameter slopes learned from examples that differ from the
+/// reference in exactly one parameter (the analyst's sensitivity
+/// reasoning for performance prediction).
+fn single_param_slopes(
+    reference: &DesignPoint,
+    ref_value: f64,
+    examples: &[(DesignPoint, f64)],
+) -> [Option<f64>; crate::design::N_PARAMS] {
+    let mut slopes = [None; crate::design::N_PARAMS];
+    for (d, v) in examples {
+        let mut changed: Option<Param> = None;
+        let mut multi = false;
+        for p in Param::ALL {
+            if d.get(p) != reference.get(p) {
+                if changed.is_some() {
+                    multi = true;
+                }
+                changed = Some(p);
+            }
+        }
+        if multi {
+            continue;
+        }
+        if let Some(p) = changed {
+            let dv = d.get(p) as f64 - reference.get(p) as f64;
+            if dv != 0.0 {
+                slopes[p.index()] = Some((v - ref_value) / dv);
+            }
+        }
+    }
+    slopes
+}
+
+/// Coarse latency proxy, weighted by the observed stall mix.
+fn analyst_latency_score(
+    d: &DesignPoint,
+    w_comp: f64,
+    w_mem: f64,
+    w_net: f64,
+    decode: bool,
+) -> f64 {
+    let cores = d.get(Param::Cores) as f64;
+    let subl = d.get(Param::Sublanes) as f64;
+    let sa = d.get(Param::SystolicArray) as f64;
+    let memch = d.get(Param::MemChannels) as f64;
+    let links = d.get(Param::Links) as f64;
+    // Decode matmuls only light up min(sa, ~8) rows of the array.
+    let eff_sa = if decode { sa.min(8.0) * sa } else { sa * sa };
+    let compute = 1.0 / (cores * subl * eff_sa);
+    let memory = 1.0 / memch;
+    let network = 1.0 / links;
+    w_comp * compute * 1e5 + w_mem * memory * 10.0 + w_net * network * 10.0
+}
+
+/// Index of the numerically closest choice string.
+fn nearest_choice(choices: &[String], value: f64) -> usize {
+    let mut best = 0usize;
+    let mut best_d = f64::INFINITY;
+    for (i, c) in choices.iter().enumerate() {
+        if let Ok(v) = c.trim().parse::<f64>() {
+            let d = (v - value).abs();
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{Metrics, Phase};
+
+    fn metrics_net_bound() -> Metrics {
+        Metrics {
+            ttft_ms: 30.0,
+            tpot_ms: 0.4,
+            area_mm2: 834.0,
+            stalls: [[8.0, 4.0, 18.0], [0.0, 0.3, 0.1]],
+        }
+    }
+
+    #[test]
+    fn oracle_picks_relevant_single_param() {
+        let mut m =
+            SimulatedAnalyst::new(ModelProfile::oracle(), 1);
+        let q = prompts::bottleneck_question(
+            &DesignPoint::a100(),
+            &metrics_net_bound(),
+            Phase::Prefill,
+            &[
+                "increase core_count".into(),
+                "increase interconnect_link_count".into(),
+                "increase memory_channel_count".into(),
+                "increase interconnect_link_count ; increase sram_kb"
+                    .into(),
+            ],
+        );
+        let a = m.complete(prompts::SYSTEM_DEFAULT, &q);
+        assert_eq!(parse::parse_answer_letter(&a), Some(1), "{a}");
+    }
+
+    #[test]
+    fn oracle_detects_systolic_overprovisioning_in_decode() {
+        let mut m =
+            SimulatedAnalyst::new(ModelProfile::oracle(), 2);
+        let d = DesignPoint::a100().with(Param::SystolicArray, 128);
+        let metrics = Metrics {
+            ttft_ms: 30.0,
+            tpot_ms: 0.6,
+            area_mm2: 900.0,
+            stalls: [[20.0, 5.0, 5.0], [0.4, 0.15, 0.05]],
+        };
+        let q = prompts::bottleneck_question(
+            &d,
+            &metrics,
+            Phase::Decode,
+            &[
+                "increase systolic_array_dim".into(),
+                "decrease systolic_array_dim".into(),
+                "increase interconnect_link_count".into(),
+            ],
+        );
+        let a = m.complete(prompts::SYSTEM_DEFAULT, &q);
+        assert_eq!(parse::parse_answer_letter(&a), Some(1), "{a}");
+    }
+
+    #[test]
+    fn oracle_area_prediction_is_exact() {
+        let mut m =
+            SimulatedAnalyst::new(ModelProfile::oracle(), 3);
+        let target = DesignPoint::a100().with(Param::Cores, 128);
+        let truth = analyst_area(&target);
+        let choices = vec![
+            format!("{:.3}", truth * 0.9),
+            format!("{:.3}", truth),
+            format!("{:.3}", truth * 1.1),
+            format!("{:.3}", truth * 1.25),
+        ];
+        let q = prompts::prediction_question(
+            "area_mm2",
+            &DesignPoint::a100(),
+            analyst_area(&DesignPoint::a100()),
+            &[(DesignPoint::a100().with(Param::Cores, 96),
+               analyst_area(&DesignPoint::a100().with(Param::Cores, 96)))],
+            &target,
+            true,
+            &choices,
+        );
+        let a = m.complete(prompts::SYSTEM_DEFAULT, &q);
+        assert_eq!(parse::parse_answer_letter(&a), Some(1), "{a}");
+    }
+
+    #[test]
+    fn oracle_tuning_respects_constraint() {
+        let mut m =
+            SimulatedAnalyst::new(ModelProfile::oracle(), 4);
+        // Candidate A is faster but blows the area budget; B is feasible.
+        let fat = DesignPoint::new([24, 256, 8, 64, 64, 512, 256, 12]);
+        let feasible = DesignPoint::new([18, 108, 4, 16, 32, 192, 40, 6]);
+        let slow = DesignPoint::new([6, 16, 1, 4, 4, 32, 32, 1]);
+        let q = prompts::tuning_question(
+            &DesignPoint::a100(),
+            &metrics_net_bound(),
+            Phase::Prefill,
+            900.0,
+            &[
+                prompts::compact_design(&fat),
+                prompts::compact_design(&feasible),
+                prompts::compact_design(&slow),
+            ],
+        );
+        let a = m.complete(prompts::SYSTEM_DEFAULT, &q);
+        assert_eq!(parse::parse_answer_letter(&a), Some(1), "{a}");
+    }
+
+    #[test]
+    fn strategy_boosts_dominant_and_funds_least_critical() {
+        let mut m =
+            SimulatedAnalyst::new(ModelProfile::oracle(), 5);
+        let q = prompts::strategy_request(
+            &DesignPoint::a100(),
+            &metrics_net_bound(),
+            Phase::Prefill,
+            "critical path [TTFT] dominant stall: network\n",
+            "influence: interconnect_link_count 0.9\n\
+             influence: core_count 0.6\ninfluence: sram_kb 0.05\n",
+            "(no failures recorded)\n",
+            50.0,
+        );
+        let a = m.complete(&prompts::system_enhanced(), &q);
+        let adj = parse::parse_adjustments(&a);
+        assert_eq!(adj.len(), 2, "{a}");
+        assert_eq!(adj[0].param, Param::Links);
+        assert!(adj[0].steps > 0);
+        assert_eq!(adj[1].param, Param::SramKb);
+        assert!(adj[1].steps < 0);
+    }
+
+    #[test]
+    fn strategy_respects_banned_moves() {
+        let mut m =
+            SimulatedAnalyst::new(ModelProfile::oracle(), 6);
+        let q = prompts::strategy_request(
+            &DesignPoint::a100(),
+            &metrics_net_bound(),
+            Phase::Prefill,
+            "dominant stall: network\n",
+            "influence: interconnect_link_count 0.9\n\
+             influence: core_count 0.2\n",
+            "banned: interconnect_link_count +1\n",
+            50.0,
+        );
+        let a = m.complete(&prompts::system_enhanced(), &q);
+        let adj = parse::parse_adjustments(&a);
+        assert!(adj.iter().all(|x| !(x.param == Param::Links
+            && x.steps > 0)), "{a}");
+    }
+
+    #[test]
+    fn weak_model_errs_more_often_than_strong() {
+        // Same 200 seeded bottleneck questions; llama should flip to the
+        // bundled distractor more often than qwen.
+        let count_errors = |profile: ModelProfile| {
+            let mut m = SimulatedAnalyst::new(profile, 7);
+            let mut errs = 0;
+            for i in 0..200u64 {
+                let q = prompts::bottleneck_question(
+                    &DesignPoint::a100(),
+                    &metrics_net_bound(),
+                    Phase::Prefill,
+                    &[
+                        "increase interconnect_link_count".into(),
+                        format!(
+                            "increase interconnect_link_count ; \
+                             increase sram_kb ; seed {i}"
+                        ),
+                    ],
+                );
+                let a = m.complete(prompts::SYSTEM_DEFAULT, &q);
+                if parse::parse_answer_letter(&a) != Some(0) {
+                    errs += 1;
+                }
+            }
+            errs
+        };
+        let qwen = count_errors(ModelProfile::qwen3());
+        let llama = count_errors(ModelProfile::llama31());
+        assert!(llama > qwen, "llama={llama} qwen={qwen}");
+    }
+}

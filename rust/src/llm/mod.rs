@@ -1,0 +1,32 @@
+//! LLM substrate: the `LanguageModel` trait, prompt rendering, answer
+//! parsing, and the **simulated analyst** models.
+//!
+//! No hosted LLM is reachable in this environment (see DESIGN.md
+//! "Substitutions"), so the paper's Qwen3/Phi-4/Llama-3.1 backends are
+//! stood in for by [`analyst::SimulatedAnalyst`]: a deterministic,
+//! seeded reasoner that receives the *rendered prompt text*, parses it
+//! back out (never side-channel structs), performs imperfect
+//! architectural reasoning, and emits a textual answer. Per-model
+//! [`profile::ModelProfile`]s inject the paper's observed failure modes
+//! (multi-resource distractors, zero-baseline deltas, systolic
+//! underutilization blindness, non-critical multi-adjust) at rates
+//! calibrated to reproduce Table 3; "enhanced" system prompts carry the
+//! paper's corrective rules, which the analyst detects and which suppress
+//! the corresponding error modes.
+//!
+//! A real OpenAI-compatible HTTP backend can be slotted behind the same
+//! trait without touching LUMINA.
+
+pub mod analyst;
+pub mod parse;
+pub mod profile;
+pub mod prompts;
+
+pub use analyst::SimulatedAnalyst;
+pub use profile::ModelProfile;
+
+/// A chat-style language model: system prompt + user prompt -> completion.
+pub trait LanguageModel {
+    fn name(&self) -> &str;
+    fn complete(&mut self, system: &str, prompt: &str) -> String;
+}

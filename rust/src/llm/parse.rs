@@ -1,0 +1,225 @@
+//! Parsing of prompt text (by the simulated analyst) and of model
+//! completions (by LUMINA and the benchmark scorer).
+//!
+//! The simulated analyst is only allowed to see the rendered prompt — all
+//! the structure it reasons over is re-extracted here, keeping the
+//! text-in/text-out contract of a real LLM backend.
+
+use std::collections::BTreeMap;
+
+use crate::design::{DesignPoint, Param, N_PARAMS};
+
+/// Extract `key = value` numeric assignments (one per line).
+pub fn parse_assignments(text: &str) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if let Some((k, v)) = line.split_once('=') {
+            let k = k.trim();
+            let v = v.trim();
+            if k.contains(' ') || k.is_empty() {
+                continue;
+            }
+            if let Ok(num) = v.parse::<f64>() {
+                out.insert(k.to_string(), num);
+            }
+        }
+    }
+    out
+}
+
+/// Extract the first full design embedded as `key = value` lines.
+pub fn parse_design_lines(text: &str) -> Option<DesignPoint> {
+    let a = parse_assignments(text);
+    let mut values = [0u32; N_PARAMS];
+    for p in Param::ALL {
+        values[p.index()] = *a.get(p.name())? as u32;
+    }
+    Some(DesignPoint::new(values))
+}
+
+/// Extract a compact one-line design (`k=v k=v ...`).
+pub fn parse_compact_design(line: &str) -> Option<DesignPoint> {
+    let mut values = [0u32; N_PARAMS];
+    let mut seen = 0;
+    for tok in line.split_whitespace() {
+        if let Some((k, v)) = tok.split_once('=') {
+            if let (Some(p), Ok(num)) = (Param::by_name(k), v.parse::<u32>())
+            {
+                values[p.index()] = num;
+                seen += 1;
+            }
+        }
+    }
+    if seen == N_PARAMS {
+        Some(DesignPoint::new(values))
+    } else {
+        None
+    }
+}
+
+/// Extract the choice lines `X) text` in letter order.
+pub fn parse_choices(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        let mut chars = line.chars();
+        if let (Some(l), Some(')')) = (chars.next(), chars.next()) {
+            if l.is_ascii_uppercase() {
+                let idx = (l as u8 - b'A') as usize;
+                if idx == out.len() {
+                    out.push(chars.as_str().trim().to_string());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Extract the section body following a `## name` header.
+pub fn parse_section<'a>(text: &'a str, name: &str) -> Option<&'a str> {
+    let header = format!("## {name}");
+    let start = text.find(&header)? + header.len();
+    let rest = &text[start..];
+    let rest = rest.strip_prefix('\n').unwrap_or(rest);
+    let end = rest.find("\n## ").unwrap_or(rest.len());
+    Some(&rest[..end])
+}
+
+/// Extract the answer letter from a completion ("Answer: B").
+pub fn parse_answer_letter(completion: &str) -> Option<usize> {
+    let at = completion.rfind("Answer:")?;
+    completion[at + 7..]
+        .trim_start()
+        .chars()
+        .next()
+        .filter(|c| c.is_ascii_alphabetic())
+        .map(|c| (c.to_ascii_uppercase() as u8 - b'A') as usize)
+}
+
+/// One "adjust: <param> <±n>" directive from a strategy completion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Adjustment {
+    pub param: Param,
+    pub steps: i32,
+}
+
+/// Parse all adjustment directives from a strategy completion.
+pub fn parse_adjustments(completion: &str) -> Vec<Adjustment> {
+    let mut out = Vec::new();
+    for line in completion.lines() {
+        let line = line.trim();
+        let Some(rest) = line.strip_prefix("adjust:") else {
+            continue;
+        };
+        let mut toks = rest.split_whitespace();
+        let (Some(name), Some(delta)) = (toks.next(), toks.next()) else {
+            continue;
+        };
+        let Some(param) = Param::by_name(name) else {
+            continue;
+        };
+        let delta = delta.trim_start_matches('+');
+        if let Ok(steps) = delta.parse::<i32>() {
+            if steps != 0 {
+                out.push(Adjustment { param, steps });
+            }
+        }
+    }
+    out
+}
+
+/// Extract `metric = value` example rows:
+/// `config: k=v ...  -> metric = 12.3`.
+pub fn parse_example_rows(text: &str) -> Vec<(DesignPoint, f64)> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        let Some(rest) = line.strip_prefix("config:") else {
+            continue;
+        };
+        let Some((cfg, metric)) = rest.split_once("->") else {
+            continue;
+        };
+        let Some(d) = parse_compact_design(cfg.trim()) else {
+            continue;
+        };
+        if let Some((_, v)) = metric.split_once('=') {
+            if let Ok(num) = v.trim().parse::<f64>() {
+                out.push((d, num));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::prompts;
+
+    #[test]
+    fn assignments_and_design_roundtrip() {
+        let text = prompts::render_design(&DesignPoint::a100());
+        let d = parse_design_lines(&text).unwrap();
+        assert_eq!(d, DesignPoint::a100());
+    }
+
+    #[test]
+    fn compact_design_roundtrip() {
+        let line = prompts::compact_design(&DesignPoint::paper_design_a());
+        assert_eq!(
+            parse_compact_design(&line),
+            Some(DesignPoint::paper_design_a())
+        );
+        assert_eq!(parse_compact_design("core_count=4"), None);
+    }
+
+    #[test]
+    fn choices_extracted_in_order() {
+        let text = "junk\nA) first\nB) second\nC) third\nAnswer...\n";
+        assert_eq!(parse_choices(text), vec!["first", "second", "third"]);
+    }
+
+    #[test]
+    fn sections_split_on_headers() {
+        let text = "## One\nalpha\nbeta\n## Two\ngamma\n";
+        assert_eq!(parse_section(text, "One").unwrap(), "alpha\nbeta");
+        assert_eq!(parse_section(text, "Two").unwrap(), "gamma\n");
+        assert!(parse_section(text, "Three").is_none());
+    }
+
+    #[test]
+    fn answer_letter_last_wins() {
+        assert_eq!(parse_answer_letter("thinking... Answer: C"), Some(2));
+        assert_eq!(
+            parse_answer_letter("Answer: A\nwait no\nAnswer: D"),
+            Some(3)
+        );
+        assert_eq!(parse_answer_letter("no answer here"), None);
+    }
+
+    #[test]
+    fn adjustments_parse_signed_steps() {
+        let c = "rationale...\nadjust: memory_channel_count +1\n\
+                 adjust: core_count -2\nadjust: bogus_param +1\n";
+        let a = parse_adjustments(c);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].param, Param::MemChannels);
+        assert_eq!(a[0].steps, 1);
+        assert_eq!(a[1].param, Param::Cores);
+        assert_eq!(a[1].steps, -2);
+    }
+
+    #[test]
+    fn example_rows_parse() {
+        let line = format!(
+            "config: {}  -> area_mm2 = 833.9700\n",
+            prompts::compact_design(&DesignPoint::a100())
+        );
+        let rows = parse_example_rows(&line);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].0, DesignPoint::a100());
+        assert!((rows[0].1 - 833.97).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,186 @@
+//! Per-model capability profiles for the simulated analyst.
+//!
+//! Each profile sets the probability of the paper's observed failure
+//! modes, separately for default and enhanced prompts. The rates are
+//! calibrated so the DSE-Benchmark accuracies land on Table 3 (the
+//! calibration test in `bench_dse::runner` asserts a ±0.06 band):
+//!
+//! | task                | Phi-4       | Qwen-3      | Llama-3.1   |
+//! |---------------------|-------------|-------------|-------------|
+//! | bottleneck analysis | 0.70 / 0.76 | 0.73 / 0.80 | 0.47 / 0.53 |
+//! | perf/area predict   | 0.42 / 0.61 | 0.59 / 0.82 | 0.23 / 0.39 |
+//! | parameter tuning    | 0.30 / 0.48 | 0.40 / 0.63 | 0.26 / 0.46 |
+
+/// Error-mode rates for one prompt configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ErrorRates {
+    /// Bottleneck task: picks a multi-resource distractor containing
+    /// irrelevant parameters.
+    pub multi_resource: f64,
+    /// Bottleneck task: fails to see systolic-array over-provisioning
+    /// (answers "increase" when utilization is the problem).
+    pub systolic_blindness: f64,
+    /// Prediction task: computes deltas against a zero baseline instead
+    /// of the sensitivity reference.
+    pub zero_baseline: f64,
+    /// Prediction task: generic arithmetic slip (picks adjacent choice).
+    pub arithmetic_slip: f64,
+    /// Tuning task: compensates via many non-critical adjustments.
+    pub multi_adjust: f64,
+    /// Tuning task: ignores the stated constraint.
+    pub constraint_blind: f64,
+}
+
+/// A named model profile (default + enhanced rates).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    pub default: ErrorRates,
+    pub enhanced: ErrorRates,
+}
+
+impl ModelProfile {
+    pub fn rates(&self, enhanced: bool) -> &ErrorRates {
+        if enhanced {
+            &self.enhanced
+        } else {
+            &self.default
+        }
+    }
+
+    /// Qwen3-Next-80B-A3B-Instruct — the strongest of the three.
+    pub fn qwen3() -> ModelProfile {
+        ModelProfile {
+            name: "qwen3",
+            default: ErrorRates {
+                multi_resource: 0.27,
+                systolic_blindness: 0.45,
+                zero_baseline: 0.45,
+                arithmetic_slip: 0.15,
+                multi_adjust: 0.59,
+                constraint_blind: 0.42,
+            },
+            enhanced: ErrorRates {
+                multi_resource: 0.20,
+                systolic_blindness: 0.30,
+                zero_baseline: 0.04,
+                arithmetic_slip: 0.07,
+                multi_adjust: 0.20,
+                constraint_blind: 0.26,
+            },
+        }
+    }
+
+    /// Phi-4-reasoning.
+    pub fn phi4() -> ModelProfile {
+        ModelProfile {
+            name: "phi4",
+            default: ErrorRates {
+                multi_resource: 0.30,
+                systolic_blindness: 0.50,
+                zero_baseline: 0.52,
+                arithmetic_slip: 0.28,
+                multi_adjust: 0.62,
+                constraint_blind: 0.50,
+            },
+            enhanced: ErrorRates {
+                multi_resource: 0.24,
+                systolic_blindness: 0.40,
+                zero_baseline: 0.16,
+                arithmetic_slip: 0.22,
+                multi_adjust: 0.34,
+                constraint_blind: 0.33,
+            },
+        }
+    }
+
+    /// Llama-3.1-8B-Instruct — the weakest.
+    pub fn llama31() -> ModelProfile {
+        ModelProfile {
+            name: "llama3.1",
+            default: ErrorRates {
+                multi_resource: 0.53,
+                systolic_blindness: 0.75,
+                zero_baseline: 0.78,
+                arithmetic_slip: 0.58,
+                multi_adjust: 0.65,
+                constraint_blind: 0.53,
+            },
+            enhanced: ErrorRates {
+                multi_resource: 0.47,
+                systolic_blindness: 0.65,
+                zero_baseline: 0.42,
+                arithmetic_slip: 0.42,
+                multi_adjust: 0.36,
+                constraint_blind: 0.39,
+            },
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelProfile> {
+        match name {
+            "qwen3" => Some(Self::qwen3()),
+            "phi4" => Some(Self::phi4()),
+            "llama3.1" | "llama31" => Some(Self::llama31()),
+            "oracle" => Some(Self::oracle()),
+            _ => None,
+        }
+    }
+
+    /// An error-free profile (upper bound / unit tests).
+    pub fn oracle() -> ModelProfile {
+        let zero = ErrorRates {
+            multi_resource: 0.0,
+            systolic_blindness: 0.0,
+            zero_baseline: 0.0,
+            arithmetic_slip: 0.0,
+            multi_adjust: 0.0,
+            constraint_blind: 0.0,
+        };
+        ModelProfile { name: "oracle", default: zero, enhanced: zero }
+    }
+
+    pub const EVALUATED: [&'static str; 3] = ["phi4", "qwen3", "llama3.1"];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        for n in ModelProfile::EVALUATED {
+            assert_eq!(ModelProfile::by_name(n).unwrap().name, n);
+        }
+        assert!(ModelProfile::by_name("gpt-oss").is_none());
+    }
+
+    #[test]
+    fn enhanced_rates_never_worse_on_rule_covered_modes() {
+        for n in ModelProfile::EVALUATED {
+            let p = ModelProfile::by_name(n).unwrap();
+            assert!(p.enhanced.multi_resource <= p.default.multi_resource);
+            assert!(p.enhanced.zero_baseline <= p.default.zero_baseline);
+            assert!(p.enhanced.multi_adjust <= p.default.multi_adjust);
+            assert!(
+                p.enhanced.systolic_blindness
+                    <= p.default.systolic_blindness
+            );
+        }
+    }
+
+    #[test]
+    fn qwen_is_strongest_llama_weakest() {
+        let q = ModelProfile::qwen3();
+        let l = ModelProfile::llama31();
+        assert!(q.default.multi_resource < l.default.multi_resource);
+        assert!(q.default.zero_baseline < l.default.zero_baseline);
+    }
+
+    #[test]
+    fn oracle_is_error_free() {
+        let o = ModelProfile::oracle();
+        assert_eq!(o.default.multi_resource, 0.0);
+        assert_eq!(o.enhanced.multi_adjust, 0.0);
+    }
+}

@@ -1,0 +1,315 @@
+//! Prompt templates: the textual interface between LUMINA / the DSE
+//! Benchmark and the language model.
+//!
+//! Prompts are deliberately structured (`## section` headers, `key =
+//! value` lines) — the same shape the paper's Figure 3 examples use — so
+//! both a hosted LLM and the simulated analyst can consume them, and so
+//! `parse.rs` can extract the fields back out.
+
+use crate::design::{DesignPoint, Param};
+use crate::eval::{Metrics, Phase};
+
+/// The default system prompt: provides the architectural context the
+/// paper says "already provides the necessary architectural context".
+pub const SYSTEM_DEFAULT: &str = "\
+You are a GPU architecture design assistant.
+The design space of one GPU in an 8-GPU tensor-parallel node:
+  interconnect_link_count in {6, 12, 18, 24}   (NVLink-class links)
+  core_count in {1..256}                       (streaming multiprocessors)
+  sublane_count in {1, 2, 4, 8}                (processing blocks per core)
+  systolic_array_dim in {4..128}               (square tensor-unit, per sublane)
+  vector_width in {4..128}                     (fp16 lanes per sublane)
+  sram_kb in {32..1024}                        (per-core scratchpad)
+  global_buffer_mb in {32..1024}               (shared L2)
+  memory_channel_count in {1..12}              (HBM stacks, 408 GB/s each)
+Peak tensor throughput scales with core_count * sublane_count *
+systolic_array_dim^2; vector throughput with core_count * sublane_count *
+vector_width; memory bandwidth with memory_channel_count; allreduce
+bandwidth with interconnect_link_count. Die area grows with every
+resource. TTFT is the prefill latency, TPOT the per-output-token decode
+latency; both are to be minimized together with area.
+Answer multiple-choice questions with a line 'Answer: <letter>'.";
+
+/// The paper's corrective rules (§5.2), appended for the *enhanced*
+/// configuration. The simulated analyst detects the `RULE n:` markers.
+pub const ENHANCED_RULES: &str = "\
+RULE 1: When mitigating a stall, adjust ONLY the single parameter most
+correlated with the dominant bottleneck; never bundle unrelated resources.
+RULE 2: Compute prediction deltas relative to the stated sensitivity
+reference configuration, never against a zero baseline.
+RULE 3: When a dominant bottleneck remains unresolved, adjust only the
+least critical resource to fund it; do not compensate by tweaking many
+non-critical resources.
+RULE 4: Enlarging the systolic array dimension reduces utilization for
+small-M (decode) matmuls; prefer balanced dims unless prefill-bound.";
+
+/// System prompt for the enhanced configuration.
+pub fn system_enhanced() -> String {
+    format!("{SYSTEM_DEFAULT}\n\n{ENHANCED_RULES}")
+}
+
+/// True if a system prompt carries the corrective rules.
+pub fn has_enhanced_rules(system: &str) -> bool {
+    system.contains("RULE 1:")
+}
+
+/// The area-model source snippet quoted in perf/area-prediction prompts
+/// (the paper gives models "the source code of the area model").
+pub const AREA_MODEL_SOURCE: &str = "\
+fn core_area_mm2(d) =
+    1.5 /* base */
+    + sublane_count * (systolic_array_dim^2 * 0.0004
+                       + vector_width * 0.012)
+    + 1.1 /* regfile */ + sram_kb * 0.0055
+fn area_mm2(d) =
+    core_count * core_area_mm2(d)
+    + global_buffer_mb * 1.9 + memory_channel_count * 15.0
+    + interconnect_link_count * 1.5 + 60.0 /* uncore */";
+
+/// Render a design's parameters as `key = value` lines.
+pub fn render_design(d: &DesignPoint) -> String {
+    let mut out = String::new();
+    for p in Param::ALL {
+        out.push_str(&format!("{} = {}\n", p.name(), d.get(p)));
+    }
+    out
+}
+
+/// Render per-component stall counters for a phase.
+pub fn render_stalls(m: &Metrics, phase: Phase) -> String {
+    let s = &m.stalls[phase.index()];
+    format!(
+        "compute_stall_ms = {:.4}\nmemory_stall_ms = {:.4}\n\
+         network_stall_ms = {:.4}\n",
+        s[0], s[1], s[2]
+    )
+}
+
+/// Render a multiple-choice block. `choices` are already formatted.
+pub fn render_choices(choices: &[String]) -> String {
+    let mut out = String::new();
+    for (i, c) in choices.iter().enumerate() {
+        out.push_str(&format!("{}) {}\n", letter(i), c));
+    }
+    out.push_str("Answer with 'Answer: <letter>'.\n");
+    out
+}
+
+pub fn letter(i: usize) -> char {
+    (b'A' + i as u8) as char
+}
+
+pub fn letter_index(c: char) -> Option<usize> {
+    let c = c.to_ascii_uppercase();
+    if c.is_ascii_uppercase() {
+        Some((c as u8 - b'A') as usize)
+    } else {
+        None
+    }
+}
+
+/// Bottleneck-analysis question (benchmark task 1).
+pub fn bottleneck_question(
+    d: &DesignPoint,
+    m: &Metrics,
+    phase: Phase,
+    choices: &[String],
+) -> String {
+    format!(
+        "## Task: bottleneck-analysis\n\
+         ## Target application\none GPT-3 175B layer, 8-way tensor \
+         parallel, batch 8, prefill 2048, decode@1024\n\
+         ## Architecture\n{}\
+         ## Objective\nminimize {}\n\
+         ## Performance counters ({} phase)\n{}\
+         ## Question\nWhich parameter adjustment most directly mitigates \
+         the dominant stall?\n{}",
+        render_design(d),
+        m_name(phase),
+        phase_name(phase),
+        render_stalls(m, phase),
+        render_choices(choices),
+    )
+}
+
+/// Perf/area-prediction question (benchmark task 2).
+#[allow(clippy::too_many_arguments)]
+pub fn prediction_question(
+    metric: &str,
+    reference: &DesignPoint,
+    reference_value: f64,
+    examples: &[(DesignPoint, f64)],
+    target: &DesignPoint,
+    include_area_source: bool,
+    choices: &[String],
+) -> String {
+    let mut ex = String::new();
+    for (d, v) in examples {
+        ex.push_str(&format!(
+            "config: {}  -> {metric} = {v:.4}\n",
+            compact_design(d)
+        ));
+    }
+    format!(
+        "## Task: perf-area-prediction\n\
+         {}\
+         ## Sensitivity reference\nconfig: {}  -> {metric} = {:.4}\n\
+         ## Observed examples\n{}\
+         ## Question\nPredict {metric} for config: {}\n{}",
+        if include_area_source {
+            format!("## Area model source\n{AREA_MODEL_SOURCE}\n")
+        } else {
+            String::new()
+        },
+        compact_design(reference),
+        reference_value,
+        ex,
+        compact_design(target),
+        render_choices(choices),
+    )
+}
+
+/// Parameter-tuning question (benchmark task 3). Choices are full
+/// candidate configs rendered with `compact_design`.
+pub fn tuning_question(
+    initial: &DesignPoint,
+    m: &Metrics,
+    phase: Phase,
+    area_budget_mm2: f64,
+    choices: &[String],
+) -> String {
+    format!(
+        "## Task: parameter-tuning\n\
+         ## Initial design\n{}\
+         ## Initial counters ({} phase)\n{}\
+         ## Constraint\narea_mm2 <= {:.1}\n\
+         ## Objective\nminimize {}\n\
+         ## Question\nWhich candidate best achieves the objective while \
+         meeting the constraint?\n{}",
+        render_design(initial),
+        phase_name(phase),
+        render_stalls(m, phase),
+        area_budget_mm2,
+        m_name(phase),
+        render_choices(choices),
+    )
+}
+
+/// One-line design rendering used inside example/candidate rows.
+pub fn compact_design(d: &DesignPoint) -> String {
+    Param::ALL
+        .iter()
+        .map(|p| format!("{}={}", p.name(), d.get(*p)))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+fn m_name(phase: Phase) -> &'static str {
+    phase.metric_name()
+}
+
+fn phase_name(phase: Phase) -> &'static str {
+    match phase {
+        Phase::Prefill => "prefill",
+        Phase::Decode => "decode",
+    }
+}
+
+/// LUMINA Strategy-Engine request: critical path + influence map +
+/// trajectory reflection, asking for a mitigation directive.
+pub fn strategy_request(
+    d: &DesignPoint,
+    m: &Metrics,
+    phase: Phase,
+    critical_path: &str,
+    influence: &str,
+    reflection: &str,
+    area_headroom_mm2: f64,
+) -> String {
+    format!(
+        "## Task: bottleneck-mitigation-strategy\n\
+         ## Current design\n{}\
+         ## Current metrics\nTTFT_ms = {:.4}\nTPOT_ms = {:.4}\n\
+         area_mm2 = {:.2}\narea_headroom_mm2 = {:.2}\n\
+         ## Optimization target\nminimize {}\n\
+         ## Critical path\n{}\
+         ## Architectural heuristic knowledge (influence factors)\n{}\
+         ## Trajectory reflection\n{}\
+         ## Instruction\nPropose grid-step adjustments as lines \
+         'adjust: <parameter> <+1|+2|-1|-2>'. Mitigate only the dominant \
+         bottleneck (RULE 1); fund area by shrinking only the least \
+         critical resource (RULE 3).\n",
+        render_design(d),
+        m.ttft_ms,
+        m.tpot_ms,
+        m.area_mm2,
+        area_headroom_mm2,
+        m_name(phase),
+        critical_path,
+        influence,
+        reflection,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics() -> Metrics {
+        Metrics {
+            ttft_ms: 36.7,
+            tpot_ms: 0.44,
+            area_mm2: 834.0,
+            stalls: [[26.79, 3.63, 6.28], [0.0, 0.43, 0.02]],
+        }
+    }
+
+    #[test]
+    fn bottleneck_prompt_contains_fields() {
+        let q = bottleneck_question(
+            &DesignPoint::a100(),
+            &metrics(),
+            Phase::Prefill,
+            &["increase core_count".into(), "increase sram_kb".into()],
+        );
+        assert!(q.contains("core_count = 108"));
+        assert!(q.contains("compute_stall_ms = 26.7900"));
+        assert!(q.contains("A) increase core_count"));
+        assert!(q.contains("minimize TTFT"));
+    }
+
+    #[test]
+    fn enhanced_rules_detectable() {
+        assert!(!has_enhanced_rules(SYSTEM_DEFAULT));
+        assert!(has_enhanced_rules(&system_enhanced()));
+    }
+
+    #[test]
+    fn letters_roundtrip() {
+        for i in 0..6 {
+            assert_eq!(letter_index(letter(i)), Some(i));
+        }
+    }
+
+    #[test]
+    fn compact_design_is_single_line() {
+        let s = compact_design(&DesignPoint::a100());
+        assert!(!s.contains('\n'));
+        assert!(s.contains("memory_channel_count=5"));
+    }
+
+    #[test]
+    fn strategy_request_mentions_rules_and_headroom() {
+        let q = strategy_request(
+            &DesignPoint::a100(),
+            &metrics(),
+            Phase::Prefill,
+            "cp",
+            "inf",
+            "none",
+            120.0,
+        );
+        assert!(q.contains("area_headroom_mm2 = 120.00"));
+        assert!(q.contains("RULE 1") && q.contains("RULE 3"));
+    }
+}

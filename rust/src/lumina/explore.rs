@@ -1,0 +1,156 @@
+//! Exploration Engine (EE): the integration layer between the Strategy
+//! Engine and the simulation environment. Serializes a directive into a
+//! concrete grid design, de-duplicates against the Trajectory Memory
+//! (perturbing deterministically when a proposal was already visited),
+//! issues the evaluation, and returns the structured sample.
+
+use crate::design::{DesignPoint, DesignSpace, Param};
+use crate::eval::{BudgetedEvaluator, Metrics};
+use crate::stats::rng::Pcg32;
+use crate::Result;
+
+use super::memory::TrajectoryMemory;
+use super::strategy::{project, Directive};
+
+/// Exploration Engine.
+pub struct ExplorationEngine {
+    rng: Pcg32,
+}
+
+impl ExplorationEngine {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Pcg32::with_stream(seed, 0xee) }
+    }
+
+    /// Turn a directive into a concrete, unvisited grid point.
+    pub fn materialize(
+        &mut self,
+        space: &DesignSpace,
+        base: &DesignPoint,
+        directive: &Directive,
+        tm: &TrajectoryMemory,
+    ) -> DesignPoint {
+        let mut d = project(
+            space,
+            base,
+            directive.boost.0,
+            directive.boost.1,
+            &directive.fund,
+        );
+        // Dedup: nudge deterministically until unvisited (bounded).
+        let mut tries = 0;
+        while tm.contains(&d) && tries < 16 {
+            let p = *self.rng.choose(&Param::ALL);
+            let delta = if self.rng.chance(0.5) { 1 } else { -1 };
+            // Never undo the boost itself.
+            if p == directive.boost.0 && delta < 0 {
+                tries += 1;
+                continue;
+            }
+            let nudged = space.step(&d, p, delta);
+            if nudged != d {
+                d = nudged;
+            }
+            tries += 1;
+        }
+        d
+    }
+
+    /// Evaluate `design` and record it in the TM. Returns `None` when the
+    /// budget is exhausted.
+    pub fn evaluate(
+        &mut self,
+        eval: &mut BudgetedEvaluator,
+        tm: &mut TrajectoryMemory,
+        design: DesignPoint,
+        step: usize,
+    ) -> Result<Option<Metrics>> {
+        let Some(m) = eval.eval(&design)? else {
+            return Ok(None);
+        };
+        tm.record(design, m, step);
+        Ok(Some(m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{Bottleneck, Phase};
+    use crate::sim::RooflineSim;
+    use crate::workload::GPT3_175B;
+
+    fn directive() -> Directive {
+        Directive {
+            phase: Phase::Prefill,
+            bottleneck: Bottleneck::Network,
+            boost: (Param::Links, 1),
+            fund: vec![(Param::Cores, 1)],
+        }
+    }
+
+    #[test]
+    fn materialize_applies_directive() {
+        let space = DesignSpace::table1();
+        let mut ee = ExplorationEngine::new(7);
+        let tm = TrajectoryMemory::new();
+        let d = ee.materialize(
+            &space,
+            &DesignPoint::a100(),
+            &directive(),
+            &tm,
+        );
+        assert_eq!(d.get(Param::Links), 18);
+        assert_eq!(d.get(Param::Cores), 96);
+        assert!(space.contains(&d));
+    }
+
+    #[test]
+    fn materialize_dedups_against_tm() {
+        let space = DesignSpace::table1();
+        let mut ee = ExplorationEngine::new(8);
+        let mut tm = TrajectoryMemory::new();
+        let first = ee.materialize(
+            &space,
+            &DesignPoint::a100(),
+            &directive(),
+            &tm,
+        );
+        let fake = Metrics {
+            ttft_ms: 1.0,
+            tpot_ms: 1.0,
+            area_mm2: 1.0,
+            stalls: [[1.0, 0.0, 0.0]; 2],
+        };
+        tm.record(first, fake, 0);
+        let second = ee.materialize(
+            &space,
+            &DesignPoint::a100(),
+            &directive(),
+            &tm,
+        );
+        assert_ne!(second, first);
+        assert!(space.contains(&second));
+        // Boost preserved through the nudges.
+        assert!(second.get(Param::Links) >= 18);
+    }
+
+    #[test]
+    fn evaluate_counts_budget_and_records() {
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let mut be = BudgetedEvaluator::new(&mut sim, 1);
+        let mut ee = ExplorationEngine::new(9);
+        let mut tm = TrajectoryMemory::new();
+        let m = ee
+            .evaluate(&mut be, &mut tm, DesignPoint::a100(), 1)
+            .unwrap();
+        assert!(m.is_some());
+        assert_eq!(tm.len(), 1);
+        // Budget exhausted now.
+        let m2 = ee
+            .evaluate(&mut be, &mut tm, DesignPoint::paper_design_a(), 2)
+            .unwrap();
+        assert!(m2.is_none());
+        assert_eq!(tm.len(), 1);
+    }
+}

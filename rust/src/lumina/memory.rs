@@ -1,0 +1,209 @@
+//! Trajectory Memory (TM): the sample store, failure-pattern mining and
+//! the reflection text the Strategy Engine feeds back into prompts
+//! (paper §3.4: "reflects on the trajectory history ... to identify past
+//! design attempts that failed to meet PPA targets and conclude the
+//! patterns to prevent their repetition").
+
+use std::collections::HashSet;
+
+use crate::design::{DesignPoint, Param};
+use crate::eval::Metrics;
+use crate::pareto::{pareto_front, Objectives};
+
+/// One trajectory entry.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub design: DesignPoint,
+    pub metrics: Metrics,
+    /// Which step of the exploration produced it (0 = seed/sensitivity).
+    pub step: usize,
+}
+
+/// A move that was tried and made the target metric worse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FailedMove {
+    pub param: Param,
+    pub direction: i32,
+    /// Metric index (0 TTFT, 1 TPOT).
+    pub metric: usize,
+}
+
+/// Trajectory Memory.
+#[derive(Debug, Default)]
+pub struct TrajectoryMemory {
+    pub samples: Vec<Sample>,
+    seen: HashSet<DesignPoint>,
+    failures: Vec<(FailedMove, u32)>,
+}
+
+impl TrajectoryMemory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, design: DesignPoint, metrics: Metrics, step: usize) {
+        self.seen.insert(design);
+        self.samples.push(Sample { design, metrics, step });
+    }
+
+    pub fn contains(&self, d: &DesignPoint) -> bool {
+        self.seen.contains(d)
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Record that stepping `param` in `direction` hurt `metric`.
+    pub fn record_failure(&mut self, m: FailedMove) {
+        for (f, n) in &mut self.failures {
+            if *f == m {
+                *n += 1;
+                return;
+            }
+        }
+        self.failures.push((m, 1));
+    }
+
+    /// Moves failed at least `threshold` times for the metric — the
+    /// Strategy Engine bans these in the prompt.
+    pub fn banned_moves(
+        &self,
+        metric: usize,
+        threshold: u32,
+    ) -> Vec<(Param, i32)> {
+        self.failures
+            .iter()
+            .filter(|(f, n)| f.metric == metric && *n >= threshold)
+            .map(|(f, _)| (f.param, f.direction))
+            .collect()
+    }
+
+    /// Reflection text for the strategy prompt.
+    pub fn render_reflection(&self, metric: usize) -> String {
+        let banned = self.banned_moves(metric, 2);
+        if banned.is_empty() {
+            return "(no repeated failure patterns yet)\n".to_string();
+        }
+        let mut out = String::from(
+            "Repeatedly unsuccessful moves for this objective:\n",
+        );
+        for (p, dir) in banned {
+            out.push_str(&format!(
+                "banned: {} {}\n",
+                p.name(),
+                if dir > 0 { "+1" } else { "-1" }
+            ));
+        }
+        out
+    }
+
+    /// All objective vectors observed so far.
+    pub fn objectives(&self) -> Vec<Objectives> {
+        self.samples.iter().map(|s| s.metrics.objectives()).collect()
+    }
+
+    /// Current Pareto-optimal samples.
+    pub fn pareto_samples(&self) -> Vec<&Sample> {
+        let objs = self.objectives();
+        pareto_front(&objs)
+            .into_iter()
+            .map(|i| &self.samples[i])
+            .collect()
+    }
+
+    /// The best sample for a weighted normalized objective (used to pick
+    /// the restart point when exploration stalls).
+    pub fn best_weighted(
+        &self,
+        baseline: &Objectives,
+        weights: &Objectives,
+    ) -> Option<&Sample> {
+        self.samples.iter().min_by(|a, b| {
+            let score = |s: &Sample| {
+                let o = s.metrics.objectives();
+                (0..3)
+                    .map(|i| weights[i] * o[i] / baseline[i])
+                    .sum::<f64>()
+            };
+            score(a).partial_cmp(&score(b)).unwrap()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(ttft: f32, tpot: f32, area: f32) -> Metrics {
+        Metrics {
+            ttft_ms: ttft,
+            tpot_ms: tpot,
+            area_mm2: area,
+            stalls: [[ttft, 0.0, 0.0], [0.0, tpot, 0.0]],
+        }
+    }
+
+    #[test]
+    fn records_and_dedups() {
+        let mut tm = TrajectoryMemory::new();
+        let d = DesignPoint::a100();
+        assert!(!tm.contains(&d));
+        tm.record(d, m(30.0, 0.4, 800.0), 0);
+        assert!(tm.contains(&d));
+        assert_eq!(tm.len(), 1);
+    }
+
+    #[test]
+    fn failures_ban_after_threshold() {
+        let mut tm = TrajectoryMemory::new();
+        let fm = FailedMove { param: Param::Links, direction: 1, metric: 1 };
+        tm.record_failure(fm);
+        assert!(tm.banned_moves(1, 2).is_empty());
+        tm.record_failure(fm);
+        assert_eq!(tm.banned_moves(1, 2), vec![(Param::Links, 1)]);
+        // Other metric unaffected.
+        assert!(tm.banned_moves(0, 2).is_empty());
+        let text = tm.render_reflection(1);
+        assert!(text.contains("banned: interconnect_link_count +1"));
+    }
+
+    #[test]
+    fn pareto_samples_filter_dominated() {
+        let mut tm = TrajectoryMemory::new();
+        tm.record(DesignPoint::a100(), m(30.0, 0.4, 800.0), 0);
+        tm.record(
+            DesignPoint::paper_design_a(),
+            m(20.0, 0.3, 700.0),
+            1,
+        );
+        tm.record(
+            DesignPoint::paper_design_b(),
+            m(40.0, 0.5, 900.0),
+            2,
+        ); // dominated
+        let front = tm.pareto_samples();
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].design, DesignPoint::paper_design_a());
+    }
+
+    #[test]
+    fn best_weighted_prefers_balanced_improvement() {
+        let mut tm = TrajectoryMemory::new();
+        tm.record(DesignPoint::a100(), m(30.0, 0.4, 800.0), 0);
+        tm.record(
+            DesignPoint::paper_design_a(),
+            m(15.0, 0.38, 640.0),
+            1,
+        );
+        let base = [30.0, 0.4, 800.0];
+        let best = tm
+            .best_weighted(&base, &[1.0, 1.0, 1.0])
+            .unwrap();
+        assert_eq!(best.design, DesignPoint::paper_design_a());
+    }
+}

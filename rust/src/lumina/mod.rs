@@ -1,0 +1,33 @@
+//! The LUMINA framework (paper §3): automatic acquisition of
+//! Architectural Heuristic Knowledge and the LLM-guided exploration loop.
+//!
+//! * [`quale`] — Qualitative Engine: static analysis of the *actual
+//!   simulator source* (the Pallas kernel is embedded at build time) that
+//!   derives the Influence Map (which parameters structurally feed which
+//!   bandwidth/throughput/metric).
+//! * [`quane`] — Quantitative Engine: sensitivity study around the
+//!   reference design, assigning numeric influence factors (area
+//!   sensitivities are computed from the analytic area model at zero
+//!   sample cost; performance sensitivities through the evaluator when
+//!   the budget allows — the paper's "focus on power and area when
+//!   perturbations are costly").
+//! * [`memory`] — Trajectory Memory: every sample, failure patterns,
+//!   banned moves, reflection rendering.
+//! * [`strategy`] — Strategy Engine: bottleneck analysis over the
+//!   critical-path feedback, prompt construction, LLM directive parsing,
+//!   and enforcement of the corrective rules from the DSE Benchmark
+//!   (§5.2).
+//! * [`explore`] — Exploration Engine: directive -> concrete grid design,
+//!   dedup, evaluation, TM recording.
+//! * [`framework`] — the refinement loop tying it all together.
+
+pub mod explore;
+pub mod framework;
+pub mod memory;
+pub mod quale;
+pub mod quane;
+pub mod strategy;
+
+pub use framework::{Lumina, LuminaConfig};
+pub use quale::InfluenceMap;
+pub use quane::Ahk;

@@ -1,0 +1,287 @@
+//! Qualitative Engine (QualE): structural knowledge from simulator code.
+//!
+//! The paper: "the QualE performs static code analysis, utilizing the
+//! LLM's interpretative strength to explicitly map the causal influence of
+//! each resource hyper-parameter onto specific PPA metrics", producing an
+//! *Influence Map*. Here the analysis is implemented as a deterministic
+//! parser over the **real simulator source** — the L1 Pallas kernel that
+//! the artifacts are lowered from, embedded at compile time — which plays
+//! the role of the LLM's code reading: it finds the derived-rate
+//! definitions (`t_peak`, `v_peak`, `m_bw`, `n_bw`, `area*`) and records
+//! which design-parameter variables appear in each.
+
+use std::collections::BTreeMap;
+
+use crate::design::{Param, N_PARAMS};
+use crate::eval::Bottleneck;
+
+/// The simulator source QualE reads (the Pallas kernel the AOT artifact
+/// is lowered from — L1 of the stack).
+pub const KERNEL_SOURCE: &str =
+    include_str!("../../../python/compile/kernels/roofline.py");
+
+/// Variable-name -> parameter mapping inside the kernel source.
+const VAR_NAMES: [(&str, Param); N_PARAMS] = [
+    ("links", Param::Links),
+    ("cores", Param::Cores),
+    ("subl", Param::Sublanes),
+    ("sa", Param::SystolicArray),
+    ("vecw", Param::VectorWidth),
+    ("sram", Param::SramKb),
+    ("gbuf", Param::GbufMb),
+    ("memch", Param::MemChannels),
+];
+
+/// Structural dependencies: which parameters feed which stall component
+/// and whether they appear in the area expression.
+#[derive(Debug, Clone, Default)]
+pub struct InfluenceMap {
+    /// `component -> params that structurally influence it`.
+    pub bottleneck_params: BTreeMap<usize, Vec<Param>>,
+    /// Params appearing in the area computation.
+    pub area_params: Vec<Param>,
+    /// Raw derived-rate -> params table (for reports / prompts).
+    pub rates: BTreeMap<String, Vec<Param>>,
+}
+
+impl InfluenceMap {
+    /// Run the static analysis over `source`.
+    pub fn from_source(source: &str) -> InfluenceMap {
+        // Collect multi-line assignment expressions: `name = expr` where
+        // expr continues while lines end with an operator or open paren.
+        let mut defs: BTreeMap<String, String> = BTreeMap::new();
+        let mut lines = source.lines().peekable();
+        while let Some(line) = lines.next() {
+            let t = line.trim();
+            if t.starts_with('#') || !t.contains('=') || t.contains("==") {
+                continue;
+            }
+            let Some((name, rhs)) = t.split_once('=') else { continue };
+            let name = name.trim();
+            if !name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_')
+                || name.is_empty()
+            {
+                continue;
+            }
+            let mut expr = rhs.trim().to_string();
+            // Greedy continuation: unbalanced parens pull more lines in.
+            while open_parens(&expr) > 0 {
+                match lines.next() {
+                    Some(l) => {
+                        expr.push(' ');
+                        expr.push_str(l.trim());
+                    }
+                    None => break,
+                }
+            }
+            defs.entry(name.to_string()).or_insert(expr);
+        }
+
+        // Transitively resolve which design parameters feed a definition.
+        let params_of = |expr: &str,
+                         defs: &BTreeMap<String, String>|
+         -> Vec<Param> {
+            let mut seen = Vec::new();
+            let mut stack = vec![expr.to_string()];
+            let mut visited: Vec<String> = Vec::new();
+            while let Some(e) = stack.pop() {
+                for (var, p) in VAR_NAMES {
+                    if has_ident(&e, var) && !seen.contains(&p) {
+                        seen.push(p);
+                    }
+                }
+                for (name, sub) in defs {
+                    if has_ident(&e, name) && !visited.contains(name) {
+                        visited.push(name.clone());
+                        stack.push(sub.clone());
+                    }
+                }
+            }
+            seen.sort_by_key(|p| p.index());
+            seen
+        };
+
+        let mut rates = BTreeMap::new();
+        for key in ["t_peak", "v_peak", "m_bw", "n_bw", "area"] {
+            if let Some(expr) = defs.get(key) {
+                rates.insert(key.to_string(), params_of(expr, &defs));
+            }
+        }
+
+        // Map rates -> stall components:
+        //   compute <- t_peak + v_peak (+ per-op utilization terms: sram)
+        //   memory  <- m_bw
+        //   network <- n_bw
+        let mut bottleneck_params: BTreeMap<usize, Vec<Param>> =
+            BTreeMap::new();
+        let mut comp: Vec<Param> = Vec::new();
+        for key in ["t_peak", "v_peak"] {
+            for p in rates.get(key).cloned().unwrap_or_default() {
+                if !comp.contains(&p) {
+                    comp.push(p);
+                }
+            }
+        }
+        // Utilization factors (sram_f) gate tensor throughput: pull
+        // params referenced by `sram_f` / `sram_req` into compute too.
+        for key in ["sram_f"] {
+            if let Some(expr) = defs.get(key) {
+                for p in params_of(expr, &defs) {
+                    if !comp.contains(&p) {
+                        comp.push(p);
+                    }
+                }
+            }
+        }
+        comp.sort_by_key(|p| p.index());
+        bottleneck_params.insert(Bottleneck::Compute.index(), comp);
+        bottleneck_params.insert(
+            Bottleneck::Memory.index(),
+            rates.get("m_bw").cloned().unwrap_or_default(),
+        );
+        bottleneck_params.insert(
+            Bottleneck::Network.index(),
+            rates.get("n_bw").cloned().unwrap_or_default(),
+        );
+
+        let area_params = rates.get("area").cloned().unwrap_or_default();
+        InfluenceMap { bottleneck_params, area_params, rates }
+    }
+
+    /// The default map, parsed from the embedded kernel source.
+    pub fn from_kernel() -> InfluenceMap {
+        Self::from_source(KERNEL_SOURCE)
+    }
+
+    /// Params structurally relevant to a bottleneck component.
+    pub fn params_for(&self, b: Bottleneck) -> &[Param] {
+        self.bottleneck_params
+            .get(&b.index())
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Render for prompts / DESIGN reports.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for b in Bottleneck::ALL {
+            let names: Vec<&str> =
+                self.params_for(b).iter().map(|p| p.name()).collect();
+            out.push_str(&format!(
+                "{} <- {}\n",
+                b.name(),
+                names.join(", ")
+            ));
+        }
+        let names: Vec<&str> =
+            self.area_params.iter().map(|p| p.name()).collect();
+        out.push_str(&format!("area <- {}\n", names.join(", ")));
+        out
+    }
+}
+
+/// Whole-word identifier search (avoids `sa` matching `sram`).
+fn has_ident(expr: &str, ident: &str) -> bool {
+    let b = expr.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = expr[start..].find(ident) {
+        let at = start + pos;
+        let before_ok = at == 0 || {
+            let c = b[at - 1] as char;
+            !c.is_ascii_alphanumeric() && c != '_'
+        };
+        let after = at + ident.len();
+        let after_ok = after >= b.len() || {
+            let c = b[after] as char;
+            !c.is_ascii_alphanumeric() && c != '_'
+        };
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + ident.len();
+    }
+    false
+}
+
+fn open_parens(s: &str) -> i32 {
+    s.chars().fold(0, |acc, c| match c {
+        '(' | '[' => acc + 1,
+        ')' | ']' => acc - 1,
+        _ => acc,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_source_is_embedded() {
+        assert!(KERNEL_SOURCE.contains("pallas_call"));
+        assert!(KERNEL_SOURCE.contains("t_peak"));
+    }
+
+    #[test]
+    fn compute_depends_on_tensor_resources_not_links() {
+        let m = InfluenceMap::from_kernel();
+        let comp = m.params_for(Bottleneck::Compute);
+        assert!(comp.contains(&Param::Cores), "{comp:?}");
+        assert!(comp.contains(&Param::Sublanes));
+        assert!(comp.contains(&Param::SystolicArray));
+        assert!(comp.contains(&Param::VectorWidth));
+        assert!(!comp.contains(&Param::Links));
+        assert!(!comp.contains(&Param::MemChannels));
+    }
+
+    #[test]
+    fn memory_depends_on_channels_and_l2() {
+        let m = InfluenceMap::from_kernel();
+        let mem = m.params_for(Bottleneck::Memory);
+        assert!(mem.contains(&Param::MemChannels), "{mem:?}");
+        assert!(mem.contains(&Param::GbufMb));
+        assert!(!mem.contains(&Param::SystolicArray));
+    }
+
+    #[test]
+    fn network_depends_only_on_links() {
+        let m = InfluenceMap::from_kernel();
+        assert_eq!(m.params_for(Bottleneck::Network), &[Param::Links]);
+    }
+
+    #[test]
+    fn area_depends_on_everything() {
+        let m = InfluenceMap::from_kernel();
+        assert_eq!(m.area_params.len(), N_PARAMS, "{:?}", m.area_params);
+    }
+
+    #[test]
+    fn paper_example_holds() {
+        // "peak vector compute throughput is influenced by core count,
+        // sublane count, and vector unit, but has no direct structural
+        // dependency on the tensor unit."
+        let m = InfluenceMap::from_kernel();
+        let v = m.rates.get("v_peak").unwrap();
+        assert!(v.contains(&Param::Cores));
+        assert!(v.contains(&Param::Sublanes));
+        assert!(v.contains(&Param::VectorWidth));
+        assert!(!v.contains(&Param::SystolicArray));
+    }
+
+    #[test]
+    fn render_lists_all_components() {
+        let text = InfluenceMap::from_kernel().render();
+        assert!(text.contains("compute <-"));
+        assert!(text.contains("memory <-"));
+        assert!(text.contains("network <- interconnect_link_count"));
+        assert!(text.contains("area <-"));
+    }
+
+    #[test]
+    fn ident_matching_is_word_bounded() {
+        assert!(has_ident("sa * sa + x", "sa"));
+        assert!(!has_ident("sram * 2", "sa"));
+        assert!(!has_ident("x_sa", "sa"));
+    }
+}

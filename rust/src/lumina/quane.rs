@@ -1,0 +1,255 @@
+//! Quantitative Engine (QuanE) + the AHK store.
+//!
+//! Assigns numeric influence values to the structural dependencies QualE
+//! found, by running a one-grid-step sensitivity study around the
+//! reference design. Two modes, per the paper's cost note ("under complex
+//! performance models ... the QuanE can focus on estimating only power
+//! and area, which are faster to evaluate"):
+//!
+//! * **full** — perturb every parameter ±1 grid step through the
+//!   evaluator (17 evaluations, counted against the sample budget); used
+//!   with the cheap roofline environment.
+//! * **cheap** — area sensitivities from the analytic area model (zero
+//!   samples) plus structural priors for performance; used under the
+//!   20-sample LLMCompass budget. The refinement loop then calibrates
+//!   the priors from observed trajectory data.
+
+use crate::arch::area_mm2;
+use crate::design::{DesignPoint, DesignSpace, Param, N_PARAMS};
+use crate::eval::{BudgetedEvaluator, Phase};
+use crate::Result;
+
+use super::quale::InfluenceMap;
+
+/// Architectural Heuristic Knowledge: the structural map plus numeric
+/// influence factors (relative metric change per +1 grid step).
+#[derive(Debug, Clone)]
+pub struct Ahk {
+    pub qual: InfluenceMap,
+    /// `influence[param][metric]`, metric in {0: TTFT, 1: TPOT, 2: area}.
+    /// Positive = metric increases when the parameter is stepped up.
+    pub influence: [[f64; 3]; N_PARAMS],
+    /// How many observations refined each (param, metric) cell.
+    pub refined: [[u32; 3]; N_PARAMS],
+}
+
+impl Ahk {
+    /// Cheap acquisition: analytic area column + structural priors.
+    pub fn acquire_cheap(
+        qual: InfluenceMap,
+        space: &DesignSpace,
+        reference: &DesignPoint,
+    ) -> Ahk {
+        let mut influence = [[0.0f64; 3]; N_PARAMS];
+        let ref_area = area_mm2(reference) as f64;
+        for p in Param::ALL {
+            let up = space.step(reference, p, 1);
+            let da = (area_mm2(&up) as f64 - ref_area) / ref_area;
+            influence[p.index()][2] = da;
+            // Structural performance priors (negative = reduces time).
+            // Primary rate-setting resources per QualE component —
+            // channels for memory bandwidth, links for the interconnect,
+            // the tensor grid for compute — carry strong priors;
+            // efficiency-only resources (L2, SRAM, vector width) carry
+            // weak ones. Refined from observed data as samples arrive.
+            let weight = match p {
+                Param::MemChannels | Param::Links => 0.9,
+                Param::Cores | Param::SystolicArray => 0.8,
+                Param::Sublanes => 0.6,
+                Param::VectorWidth => 0.2,
+                Param::GbufMb => 0.15,
+                Param::SramKb => 0.1,
+            };
+            for (metric, phase) in
+                [(0usize, Phase::Prefill), (1usize, Phase::Decode)]
+            {
+                let relevant = crate::eval::Bottleneck::ALL
+                    .iter()
+                    .any(|&b| qual.params_for(b).contains(&p));
+                if relevant {
+                    let scale = match phase {
+                        Phase::Prefill => 0.05,
+                        Phase::Decode => 0.03,
+                    };
+                    influence[p.index()][metric] = -scale * weight;
+                }
+            }
+        }
+        Ahk { qual, influence, refined: [[0; 3]; N_PARAMS] }
+    }
+
+    /// Full acquisition: ±1-step sensitivity study through the evaluator.
+    /// Consumes up to `2 * N_PARAMS + 1` samples of the budget.
+    pub fn acquire_full(
+        qual: InfluenceMap,
+        space: &DesignSpace,
+        reference: &DesignPoint,
+        eval: &mut BudgetedEvaluator,
+    ) -> Result<Ahk> {
+        let mut designs = vec![*reference];
+        let mut slots: Vec<(Param, i32, usize)> = Vec::new();
+        for p in Param::ALL {
+            for delta in [1, -1] {
+                let d = space.step(reference, p, delta);
+                if d != *reference {
+                    slots.push((p, delta, designs.len()));
+                    designs.push(d);
+                }
+            }
+        }
+        let results = eval.eval_batch(&designs)?;
+        if results.is_empty() {
+            // Budget already exhausted: degrade to cheap mode.
+            return Ok(Self::acquire_cheap(qual, space, reference));
+        }
+        let base = results[0].1;
+        let base_v = [
+            base.ttft_ms as f64,
+            base.tpot_ms as f64,
+            base.area_mm2 as f64,
+        ];
+
+        let mut ahk = Self::acquire_cheap(qual, space, reference);
+        for (p, delta, idx) in slots {
+            let Some((_, m)) = results.get(idx) else { continue };
+            let v = [
+                m.ttft_ms as f64,
+                m.tpot_ms as f64,
+                m.area_mm2 as f64,
+            ];
+            for metric in 0..3 {
+                //
+
+                // Sensitivity per +1 step (mirror -1 observations).
+                let rel =
+                    (v[metric] - base_v[metric]) / base_v[metric];
+                let per_step = rel * delta as f64;
+                let cell = &mut ahk.influence[p.index()][metric];
+                let n = &mut ahk.refined[p.index()][metric];
+                if *n == 0 {
+                    *cell = per_step;
+                } else {
+                    *cell = (*cell * *n as f64 + per_step)
+                        / (*n as f64 + 1.0);
+                }
+                *n += 1;
+            }
+        }
+        Ok(ahk)
+    }
+
+    /// Refinement-loop update (paper §3.4): fold an observed relative
+    /// delta for (param, metric) into the influence factor with an EMA.
+    pub fn refine(&mut self, p: Param, metric: usize, observed: f64) {
+        const ALPHA: f64 = 0.35;
+        let cell = &mut self.influence[p.index()][metric];
+        *cell = (1.0 - ALPHA) * *cell + ALPHA * observed;
+        self.refined[p.index()][metric] += 1;
+    }
+
+    /// Influence of `p` on a phase metric (0 prefill / 1 decode).
+    pub fn perf_influence(&self, p: Param, metric: usize) -> f64 {
+        self.influence[p.index()][metric]
+    }
+
+    pub fn area_influence(&self, p: Param) -> f64 {
+        self.influence[p.index()][2]
+    }
+
+    /// Render the quantitative factors for the strategy prompt:
+    /// `influence: <param> <benefit-per-step>` for the target metric.
+    pub fn render_for(&self, metric: usize) -> String {
+        let mut out = String::new();
+        for p in Param::ALL {
+            // Benefit = how much the metric *improves* per +1 step.
+            let benefit = -self.perf_influence(p, metric);
+            out.push_str(&format!(
+                "influence: {} {:.4}\n",
+                p.name(),
+                benefit
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::RooflineSim;
+    use crate::workload::GPT3_175B;
+
+    fn setup() -> (DesignSpace, DesignPoint, InfluenceMap) {
+        (
+            DesignSpace::table1(),
+            DesignPoint::a100(),
+            InfluenceMap::from_kernel(),
+        )
+    }
+
+    #[test]
+    fn cheap_mode_has_signed_area_column() {
+        let (space, reference, qual) = setup();
+        let ahk = Ahk::acquire_cheap(qual, &space, &reference);
+        // Every parameter grows area when stepped up.
+        for p in Param::ALL {
+            assert!(
+                ahk.area_influence(p) > 0.0,
+                "{p}: {}",
+                ahk.area_influence(p)
+            );
+        }
+    }
+
+    #[test]
+    fn full_mode_learns_real_sensitivities() {
+        let (space, reference, qual) = setup();
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let mut be = BudgetedEvaluator::new(&mut sim, 64);
+        let ahk =
+            Ahk::acquire_full(qual, &space, &reference, &mut be).unwrap();
+        assert!(be.spent() <= 17);
+        // More links reduce TTFT (network stall shrinks).
+        assert!(ahk.perf_influence(Param::Links, 0) < 0.0);
+        // More memory channels reduce TPOT (decode memory-bound).
+        assert!(ahk.perf_influence(Param::MemChannels, 1) < 0.0);
+        // Links shouldn't matter much for TPOT compared to channels.
+        assert!(
+            ahk.perf_influence(Param::Links, 1).abs()
+                < ahk.perf_influence(Param::MemChannels, 1).abs()
+        );
+    }
+
+    #[test]
+    fn full_mode_respects_exhausted_budget() {
+        let (space, reference, qual) = setup();
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let mut be = BudgetedEvaluator::new(&mut sim, 0);
+        let ahk =
+            Ahk::acquire_full(qual, &space, &reference, &mut be).unwrap();
+        assert_eq!(be.spent(), 0);
+        // Degraded to cheap priors.
+        assert!(ahk.refined.iter().all(|r| r.iter().all(|&n| n == 0)));
+    }
+
+    #[test]
+    fn refine_moves_cell_toward_observation() {
+        let (space, reference, qual) = setup();
+        let mut ahk = Ahk::acquire_cheap(qual, &space, &reference);
+        let before = ahk.perf_influence(Param::Links, 0);
+        ahk.refine(Param::Links, 0, -0.5);
+        let after = ahk.perf_influence(Param::Links, 0);
+        assert!(after < before);
+        assert_eq!(ahk.refined[Param::Links.index()][0], 1);
+    }
+
+    #[test]
+    fn render_contains_every_param() {
+        let (space, reference, qual) = setup();
+        let ahk = Ahk::acquire_cheap(qual, &space, &reference);
+        let text = ahk.render_for(0);
+        for p in Param::ALL {
+            assert!(text.contains(p.name()));
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! `lumina` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   eval        evaluate one design point (8 raw values)
+//!   explore     run LUMINA on a sample budget
+//!   race        run all six DSE methods under identical budgets
+//!   benchmark   run the DSE Benchmark (Table 3)
+//!   sensitivity QuanE sensitivity study around a design
+//!   report      Table-4 style design report
+//!
+//! All exploration traffic flows through the AOT roofline artifact via
+//! PJRT when `artifacts/` exists (`make artifacts`); `--evaluator`
+//! selects `roofline`, `roofline-rs` or `compass`.
+
+use lumina::baselines::DseMethod;
+use lumina::bench_dse::run_benchmark;
+use lumina::design::{DesignPoint, DesignSpace, Param};
+use lumina::eval::{BudgetedEvaluator, Phase};
+use lumina::figures::race::{
+    aggregate, run_race, score_trajectory, EvaluatorKind, RaceConfig,
+};
+use lumina::figures::table4::{pick_top2, render, report_rows};
+use lumina::llm::ModelProfile;
+use lumina::lumina::{quale::InfluenceMap, quane::Ahk, Lumina, LuminaConfig};
+use lumina::sim::CompassSim;
+use lumina::util::cli::Args;
+
+const USAGE: &str = "\
+lumina — LLM-guided GPU architecture exploration (paper reproduction)
+
+USAGE: lumina <command> [--options]
+
+  eval <8 values>            evaluate links cores sublanes sa vecw
+                             sram_kb gbuf_mb memch
+  explore [--budget N] [--seed S] [--model qwen3|phi4|llama3.1]
+          [--evaluator roofline|roofline-rs|compass] [--verbose]
+  race [--samples N] [--trials T] [--evaluator ...]
+  benchmark [--scale F] [--seed S]
+  sensitivity [--evaluator ...]
+  report [<8 values>]        Table-4 style report (defaults: paper designs)
+
+Run `make artifacts` first to enable the PJRT roofline evaluator.";
+
+fn evaluator_kind(args: &Args) -> EvaluatorKind {
+    match args.str_or("evaluator", "roofline").as_str() {
+        "compass" => EvaluatorKind::Compass,
+        "roofline-rs" => EvaluatorKind::RooflineRust,
+        _ => EvaluatorKind::RooflinePjrt,
+    }
+}
+
+fn parse_design(values: &[String]) -> Option<DesignPoint> {
+    let v: Vec<u32> =
+        values.iter().filter_map(|a| a.parse().ok()).collect();
+    (v.len() == 8).then(|| {
+        DesignPoint::new([v[0], v[1], v[2], v[3], v[4], v[5], v[6], v[7]])
+    })
+}
+
+fn main() -> lumina::Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_str() {
+        "eval" => cmd_eval(&args),
+        "explore" => cmd_explore(&args),
+        "race" => cmd_race(&args),
+        "benchmark" => cmd_benchmark(&args),
+        "sensitivity" => cmd_sensitivity(&args),
+        "report" => cmd_report(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_eval(args: &Args) -> lumina::Result<()> {
+    let d = parse_design(&args.positional)
+        .unwrap_or_else(DesignPoint::a100);
+    let mut ev = evaluator_kind(args).make();
+    let m = ev.eval(&d)?;
+    println!("design: {d}");
+    println!("evaluator: {}", ev.name());
+    println!(
+        "TTFT {:.4} ms   TPOT {:.5} ms   area {:.1} mm^2",
+        m.ttft_ms, m.tpot_ms, m.area_mm2
+    );
+    for phase in Phase::ALL {
+        let s = &m.stalls[phase.index()];
+        println!(
+            "{:<4} stalls: compute {:.4} / memory {:.4} / network {:.4} \
+             ms  (dominant: {})",
+            phase.metric_name(),
+            s[0],
+            s[1],
+            s[2],
+            m.dominant_bottleneck(phase)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_explore(args: &Args) -> lumina::Result<()> {
+    let budget = args.usize_or("budget", 100)?;
+    let seed = args.u64_or("seed", 2026)?;
+    let model = ModelProfile::by_name(&args.str_or("model", "qwen3"))
+        .unwrap_or_else(ModelProfile::qwen3);
+    let kind = evaluator_kind(args);
+    let space = DesignSpace::table1();
+
+    let mut ev = kind.make();
+    let reference = ev.eval(&DesignPoint::a100())?.objectives();
+    let mut be = BudgetedEvaluator::new(ev.as_mut(), budget);
+    let mut lum = Lumina::new(LuminaConfig {
+        seed,
+        model,
+        ..Default::default()
+    });
+    let t0 = std::time::Instant::now();
+    lum.run(&space, &mut be)?;
+    let traj: Vec<_> =
+        be.log.iter().map(|(d, m)| (*d, m.objectives())).collect();
+    let r = score_trajectory("lumina", 0, &traj, &reference);
+    println!(
+        "explored {} samples in {:.2}s  PHV={:.4}  eff={:.4}  \
+         superior={}",
+        traj.len(),
+        t0.elapsed().as_secs_f64(),
+        r.phv,
+        r.sample_efficiency,
+        r.superior
+    );
+    if args.flag("verbose") {
+        if let Some(ahk) = &lum.ahk {
+            println!("\ninfluence map:\n{}", ahk.qual.render());
+        }
+        for (i, (d, o)) in traj.iter().enumerate() {
+            let sup = (0..3).all(|k| o[k] < reference[k]);
+            println!(
+                "{i:>4} {}{d}  ttft={:.2} tpot={:.4} area={:.0}",
+                if sup { "*" } else { " " },
+                o[0],
+                o[1],
+                o[2]
+            );
+        }
+    }
+    let picks = pick_top2(&traj, &reference);
+    if !picks.is_empty() {
+        println!("\ntop designs:");
+        for d in &picks {
+            println!("  {d}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_race(args: &Args) -> lumina::Result<()> {
+    let cfg = RaceConfig {
+        samples: args.usize_or("samples", 200)?,
+        trials: args.usize_or("trials", 3)?,
+        seed: args.u64_or("seed", 2026)?,
+        evaluator: evaluator_kind(args),
+    };
+    let results = run_race(&cfg)?;
+    println!(
+        "{:<16} {:>10} {:>10} {:>12} {:>9}",
+        "method", "mean PHV", "std PHV", "sample eff", "superior"
+    );
+    for (m, phv, eff, std) in aggregate(&results) {
+        let sup: usize = results
+            .iter()
+            .filter(|r| r.method == m)
+            .map(|r| r.superior)
+            .sum::<usize>()
+            / cfg.trials;
+        println!(
+            "{m:<16} {phv:>10.4} {std:>10.4} {eff:>12.4} {sup:>9}"
+        );
+    }
+    Ok(())
+}
+
+fn cmd_benchmark(args: &Args) -> lumina::Result<()> {
+    let scale = args.f64_or("scale", 1.0)?;
+    let seed = args.u64_or("seed", 2026)?;
+    let report = run_benchmark(
+        &[
+            ModelProfile::phi4(),
+            ModelProfile::qwen3(),
+            ModelProfile::llama31(),
+        ],
+        seed,
+        scale,
+    );
+    println!("{}", report.render_table3());
+    Ok(())
+}
+
+fn cmd_sensitivity(args: &Args) -> lumina::Result<()> {
+    let space = DesignSpace::table1();
+    let reference = parse_design(&args.positional)
+        .unwrap_or_else(DesignPoint::a100);
+    let kind = evaluator_kind(args);
+    let mut ev = kind.make();
+    let mut be = BudgetedEvaluator::new(ev.as_mut(), 64);
+    let ahk = Ahk::acquire_full(
+        InfluenceMap::from_kernel(),
+        &space,
+        &reference,
+        &mut be,
+    )?;
+    println!(
+        "sensitivity around {reference} ({} evaluations):",
+        be.spent()
+    );
+    println!(
+        "{:<28} {:>11} {:>11} {:>11}",
+        "parameter", "dTTFT/step", "dTPOT/step", "dArea/step"
+    );
+    for p in Param::ALL {
+        println!(
+            "{:<28} {:>10.3}% {:>10.3}% {:>10.3}%",
+            p.name(),
+            ahk.perf_influence(p, 0) * 100.0,
+            ahk.perf_influence(p, 1) * 100.0,
+            ahk.area_influence(p) * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> lumina::Result<()> {
+    let designs = match parse_design(&args.positional) {
+        Some(d) => vec![("Custom".to_string(), d)],
+        None => vec![
+            ("Design A".to_string(), DesignPoint::paper_design_a()),
+            ("Design B".to_string(), DesignPoint::paper_design_b()),
+        ],
+    };
+    let mut sim = CompassSim::gpt3();
+    println!("{}", render(&report_rows(&mut sim, &designs)?));
+    Ok(())
+}

@@ -1,0 +1,303 @@
+//! Pareto analytics: dominance, frontier extraction, hypervolume (PHV) and
+//! the paper's Sample Efficiency metric.
+//!
+//! Conventions: all objectives are **minimized** (TTFT ms, TPOT ms, area
+//! mm^2). PHV is computed against a reference point `r`; only points that
+//! dominate `r` contribute. Objectives are normalized by the A100
+//! reference before PHV so the paper's "normalized PHV" comparisons hold.
+
+/// An objective vector (minimize each lane).
+pub type Objectives = [f64; 3];
+
+/// True iff `a` dominates `b` (<= everywhere, < somewhere).
+pub fn dominates(a: &Objectives, b: &Objectives) -> bool {
+    let mut strictly = false;
+    for i in 0..3 {
+        if a[i] > b[i] {
+            return false;
+        }
+        if a[i] < b[i] {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Indices of the non-dominated subset (first occurrence wins on ties).
+pub fn pareto_front(points: &[Objectives]) -> Vec<usize> {
+    let mut front = Vec::new();
+    'outer: for (i, p) in points.iter().enumerate() {
+        for (j, q) in points.iter().enumerate() {
+            if i != j && (dominates(q, p) || (q == p && j < i)) {
+                continue 'outer;
+            }
+        }
+        front.push(i);
+    }
+    front
+}
+
+/// Exact 3-D hypervolume dominated by `points` w.r.t. reference `r`
+/// (minimization). Points not strictly better than `r` in all objectives
+/// contribute nothing. O(n^2 log n) slicing — fine for n <= a few 1000.
+pub fn hypervolume(points: &[Objectives], r: &Objectives) -> f64 {
+    // Keep only points that improve on the reference everywhere.
+    let mut pts: Vec<Objectives> = points
+        .iter()
+        .filter(|p| (0..3).all(|i| p[i] < r[i]))
+        .copied()
+        .collect();
+    if pts.is_empty() {
+        return 0.0;
+    }
+    // Dominated points contribute no volume; reducing to the front first
+    // cuts the O(n^2 log n) sweep to the (much smaller) front size.
+    // (§Perf iteration 1: 624us -> ~60us on 1,000-point trajectories.)
+    if pts.len() > 64 {
+        pts = pareto_front(&pts).into_iter().map(|i| pts[i]).collect();
+    }
+    // Slice along z: between consecutive z-levels, the xy cross-section is
+    // the union of rectangles [x_i, rx] x [y_i, ry] for points with z_i <=
+    // slab bottom.
+    let mut zs: Vec<f64> = pts.iter().map(|p| p[2]).collect();
+    zs.push(r[2]);
+    zs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    zs.dedup();
+
+    let mut vol = 0.0;
+    for w in zs.windows(2) {
+        let (z0, z1) = (w[0], w[1]);
+        let live: Vec<[f64; 2]> = pts
+            .iter()
+            .filter(|p| p[2] <= z0)
+            .map(|p| [p[0], p[1]])
+            .collect();
+        vol += area2d(&live, r[0], r[1]) * (z1 - z0);
+    }
+    vol
+}
+
+/// Area of the union of [x_i, rx] x [y_i, ry] rectangles (staircase sweep).
+fn area2d(pts: &[[f64; 2]], rx: f64, ry: f64) -> f64 {
+    if pts.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<[f64; 2]> = pts.to_vec();
+    // Sort by x ascending; sweep keeping the lowest y seen so far.
+    sorted.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+    let mut area = 0.0;
+    let mut best_y = ry;
+    let mut prev_x = sorted[0][0];
+    for p in &sorted {
+        if p[0] > prev_x {
+            area += (p[0] - prev_x) * (ry - best_y);
+            prev_x = p[0];
+        }
+        if p[1] < best_y {
+            best_y = p[1];
+        }
+    }
+    area += (rx - prev_x) * (ry - best_y);
+    area
+}
+
+/// Paper §5.3: fraction of evaluated designs strictly better than the
+/// reference point in **all** objectives.
+pub fn sample_efficiency(points: &[Objectives], reference: &Objectives) -> f64 {
+    if points.is_empty() {
+        return 0.0;
+    }
+    let better = points
+        .iter()
+        .filter(|p| (0..3).all(|i| p[i] < reference[i]))
+        .count();
+    better as f64 / points.len() as f64
+}
+
+/// Count of designs strictly better than the reference in all objectives.
+pub fn superior_count(points: &[Objectives], reference: &Objectives) -> usize {
+    points
+        .iter()
+        .filter(|p| (0..3).all(|i| p[i] < reference[i]))
+        .count()
+}
+
+/// Normalize objective vectors by a baseline (A100), so PHV is unitless.
+pub fn normalize(points: &[Objectives], baseline: &Objectives) -> Vec<Objectives> {
+    points
+        .iter()
+        .map(|p| {
+            [
+                p[0] / baseline[0],
+                p[1] / baseline[1],
+                p[2] / baseline[2],
+            ]
+        })
+        .collect()
+}
+
+/// The PHV reference point used throughout the evaluation: 2x the A100 on
+/// every normalized objective (designs worse than 2x A100 in any metric
+/// contribute no volume).
+pub const PHV_REF: Objectives = [2.0, 2.0, 2.0];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg32;
+    use crate::util::prop;
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[1.0, 1.0, 1.0], &[2.0, 2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0, 2.0], &[2.0, 2.0, 2.0]));
+        assert!(!dominates(&[2.0, 2.0, 2.0], &[2.0, 2.0, 2.0]));
+        assert!(!dominates(&[1.0, 3.0, 1.0], &[2.0, 2.0, 2.0]));
+    }
+
+    #[test]
+    fn front_excludes_dominated() {
+        let pts = vec![
+            [1.0, 4.0, 4.0],
+            [4.0, 1.0, 4.0],
+            [4.0, 4.0, 1.0],
+            [3.0, 3.0, 3.0],
+            [5.0, 5.0, 5.0], // dominated by everything
+        ];
+        let f = pareto_front(&pts);
+        assert_eq!(f, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn front_dedups_ties() {
+        let pts = vec![[1.0, 1.0, 1.0], [1.0, 1.0, 1.0]];
+        assert_eq!(pareto_front(&pts), vec![0]);
+    }
+
+    #[test]
+    fn hv_single_point_box() {
+        let hv = hypervolume(&[[1.0, 1.0, 1.0]], &[2.0, 2.0, 2.0]);
+        assert!((hv - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hv_ignores_points_outside_reference() {
+        let hv = hypervolume(
+            &[[3.0, 1.0, 1.0], [1.0, 1.0, 2.5]],
+            &[2.0, 2.0, 2.0],
+        );
+        assert_eq!(hv, 0.0);
+    }
+
+    #[test]
+    fn hv_union_of_two_boxes() {
+        // Boxes [1,2]^3 and [0,2]x[1.5,2]x[1.5,2]:
+        // vol = 1 + 2*0.5*0.5 - 1*0.5*0.5 = 1.25
+        let hv = hypervolume(
+            &[[1.0, 1.0, 1.0], [0.0, 1.5, 1.5]],
+            &[2.0, 2.0, 2.0],
+        );
+        assert!((hv - 1.25).abs() < 1e-9, "hv={hv}");
+    }
+
+    #[test]
+    fn hv_dominated_point_adds_nothing() {
+        let a = hypervolume(&[[1.0, 1.0, 1.0]], &[2.0, 2.0, 2.0]);
+        let b = hypervolume(
+            &[[1.0, 1.0, 1.0], [1.5, 1.5, 1.5]],
+            &[2.0, 2.0, 2.0],
+        );
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hv_monotone_under_adding_points_property() {
+        let mut rng = Pcg32::new(31);
+        prop::forall(
+            32,
+            64,
+            move |r| {
+                let n = r.range_usize(1, 12);
+                (0..n)
+                    .map(|_| {
+                        [r.f64() * 2.0, r.f64() * 2.0, r.f64() * 2.0]
+                    })
+                    .collect::<Vec<Objectives>>()
+            },
+            |pts| {
+                let r = [1.8, 1.8, 1.8];
+                let hv_all = hypervolume(pts, &r);
+                let hv_front: f64 = hypervolume(
+                    &pareto_front(pts)
+                        .into_iter()
+                        .map(|i| pts[i])
+                        .collect::<Vec<_>>(),
+                    &r,
+                );
+                // Front alone has identical HV, and dropping a point never
+                // increases HV.
+                let hv_less = if pts.len() > 1 {
+                    hypervolume(&pts[1..], &r)
+                } else {
+                    0.0
+                };
+                (hv_all - hv_front).abs() < 1e-9 && hv_less <= hv_all + 1e-9
+            },
+        );
+        let _ = rng.next_u32();
+    }
+
+    #[test]
+    fn hv_brute_force_monte_carlo_agreement() {
+        let pts = vec![
+            [0.3, 1.2, 0.9],
+            [1.0, 0.2, 1.4],
+            [0.8, 0.8, 0.4],
+            [1.5, 1.5, 0.1],
+        ];
+        let r = [1.8, 1.6, 1.7];
+        let exact = hypervolume(&pts, &r);
+        // Monte-Carlo estimate.
+        let mut rng = Pcg32::new(99);
+        let n = 200_000;
+        let mut hits = 0usize;
+        for _ in 0..n {
+            let x = [
+                rng.f64() * r[0],
+                rng.f64() * r[1],
+                rng.f64() * r[2],
+            ];
+            if pts
+                .iter()
+                .any(|p| (0..3).all(|i| p[i] < r[i] && p[i] <= x[i]))
+            {
+                hits += 1;
+            }
+        }
+        let mc = hits as f64 / n as f64 * (r[0] * r[1] * r[2]);
+        assert!(
+            (exact - mc).abs() / exact < 0.02,
+            "exact={exact} mc={mc}"
+        );
+    }
+
+    #[test]
+    fn sample_efficiency_counts_strict_improvements() {
+        let r = [1.0, 1.0, 1.0];
+        let pts = vec![
+            [0.9, 0.9, 0.9], // better
+            [0.9, 1.1, 0.9], // worse in one
+            [1.0, 0.9, 0.9], // tie in one -> not strictly better
+            [0.5, 0.5, 0.5], // better
+        ];
+        assert!((sample_efficiency(&pts, &r) - 0.5).abs() < 1e-12);
+        assert_eq!(superior_count(&pts, &r), 2);
+    }
+
+    #[test]
+    fn normalize_by_baseline() {
+        let pts = vec![[2.0, 4.0, 8.0]];
+        let n = normalize(&pts, &[2.0, 2.0, 2.0]);
+        assert_eq!(n[0], [1.0, 2.0, 4.0]);
+    }
+}

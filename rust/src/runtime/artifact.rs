@@ -1,0 +1,157 @@
+//! Artifact discovery: parse `artifacts/meta.json` and locate the HLO
+//! text files emitted by `python -m compile.aot`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// A parsed artifacts directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactDir {
+    pub dir: PathBuf,
+    pub workload: String,
+    pub n_params: usize,
+    /// batch size -> HLO text path, ascending batch order.
+    pub batches: BTreeMap<usize, PathBuf>,
+}
+
+impl ArtifactDir {
+    /// Load `meta.json` from `dir` and validate the referenced files.
+    pub fn open(dir: impl AsRef<Path>) -> Result<ArtifactDir> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} — run `make artifacts` first"))?;
+        let meta = Json::parse(&text)
+            .with_context(|| format!("parsing {meta_path:?}"))?;
+
+        let workload =
+            meta.get("workload")?.as_str().unwrap_or("?").to_string();
+        let n_params = meta
+            .get("n_params")?
+            .as_f64()
+            .context("n_params not a number")? as usize;
+
+        let mut batches = BTreeMap::new();
+        for (b, file) in meta
+            .get("batches")?
+            .as_obj()
+            .context("batches not an object")?
+        {
+            let b: usize =
+                b.parse().with_context(|| format!("bad batch key {b:?}"))?;
+            let path =
+                dir.join(file.as_str().context("batch file not a string")?);
+            if !path.exists() {
+                bail!("artifact listed in meta.json missing: {path:?}");
+            }
+            batches.insert(b, path);
+        }
+        if batches.is_empty() {
+            bail!("no batch artifacts listed in {meta_path:?}");
+        }
+        Ok(ArtifactDir { dir, workload, n_params, batches })
+    }
+
+    /// Default location relative to the repo root / current directory.
+    pub fn open_default() -> Result<ArtifactDir> {
+        // Walk up from cwd so tests and benches work from target dirs.
+        let mut at = std::env::current_dir()?;
+        loop {
+            let cand = at.join("artifacts");
+            if cand.join("meta.json").exists() {
+                return Self::open(cand);
+            }
+            if !at.pop() {
+                bail!(
+                    "no artifacts/meta.json found above the working \
+                     directory — run `make artifacts`"
+                );
+            }
+        }
+    }
+
+    /// Smallest available batch size >= n (or the largest overall).
+    pub fn batch_for(&self, n: usize) -> usize {
+        for &b in self.batches.keys() {
+            if b >= n {
+                return b;
+            }
+        }
+        *self.batches.keys().next_back().unwrap()
+    }
+
+    pub fn largest_batch(&self) -> usize {
+        *self.batches.keys().next_back().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn fake_dir(meta: &str, files: &[&str]) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "lumina_art_{}",
+            std::process::id() as u64 + files.len() as u64 * 7919
+                + meta.len() as u64
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("meta.json"), meta).unwrap();
+        for f in files {
+            fs::write(dir.join(f), "HloModule fake").unwrap();
+        }
+        dir
+    }
+
+    #[test]
+    fn parses_valid_meta() {
+        let dir = fake_dir(
+            r#"{"workload": "gpt3-175b", "n_params": 8,
+                "batches": {"1": "a.hlo.txt", "64": "b.hlo.txt"}}"#,
+            &["a.hlo.txt", "b.hlo.txt"],
+        );
+        let art = ArtifactDir::open(&dir).unwrap();
+        assert_eq!(art.workload, "gpt3-175b");
+        assert_eq!(art.n_params, 8);
+        assert_eq!(art.batch_for(1), 1);
+        assert_eq!(art.batch_for(2), 64);
+        assert_eq!(art.batch_for(65), 64); // falls back to largest
+        assert_eq!(art.largest_batch(), 64);
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let dir = fake_dir(
+            r#"{"workload": "w", "n_params": 8,
+                "batches": {"1": "missing.hlo.txt"}}"#,
+            &[],
+        );
+        assert!(ArtifactDir::open(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_batches() {
+        let dir = fake_dir(
+            r#"{"workload": "w", "n_params": 8, "batches": {}}"#,
+            &[],
+        );
+        assert!(ArtifactDir::open(&dir).is_err());
+    }
+
+    #[test]
+    fn open_default_finds_repo_artifacts() {
+        // The repo's artifacts are built by `make artifacts` before
+        // `cargo test` (see Makefile); if present, they must parse.
+        if let Ok(art) = ArtifactDir::open_default() {
+            assert_eq!(art.n_params, 8);
+            assert!(!art.batches.is_empty());
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load and execute the AOT artifacts from the Rust hot
+//! path.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. Artifacts are HLO *text* (see
+//! `python/compile/aot.py` for why text, not serialized protos). Each
+//! batch size has its own compiled executable, compiled once and cached;
+//! requests are padded up to the nearest available batch.
+
+pub mod artifact;
+pub mod evaluator;
+
+pub use artifact::ArtifactDir;
+pub use evaluator::PjrtEvaluator;

@@ -1,0 +1,158 @@
+//! Critical-path report: per-operator timing with stall attribution.
+//!
+//! This is the structured feedback the paper's extended LLMCompass emits
+//! ("we extended LLMCompass to include critical path analysis, enabling
+//! identification of dominant stalls for both TTFT and TPOT") and what the
+//! Strategy Engine's bottleneck analysis consumes — rendered into the LLM
+//! prompt verbatim by `llm::prompts`.
+
+use crate::eval::{Bottleneck, Phase};
+
+/// Timing record for one operator on a phase's execution path.
+#[derive(Debug, Clone)]
+pub struct OpRecord {
+    pub name: &'static str,
+    pub phase: Phase,
+    /// Wall time, seconds.
+    pub wall_s: f32,
+    /// Which component the wall time is attributed to.
+    pub stall: Bottleneck,
+    /// Compute / memory / network candidate times (s) before max().
+    pub compute_s: f32,
+    pub memory_s: f32,
+    pub network_s: f32,
+    /// PE-grid utilization if this was a tensor op, else 0.
+    pub utilization: f32,
+    /// For network ops: latency-bound collectives can't be fixed with
+    /// more links.
+    pub latency_bound: bool,
+}
+
+/// Full per-design critical-path analysis.
+#[derive(Debug, Clone, Default)]
+pub struct CriticalPath {
+    pub ops: Vec<OpRecord>,
+}
+
+impl CriticalPath {
+    pub fn phase_ops(&self, phase: Phase) -> impl Iterator<Item = &OpRecord> {
+        self.ops.iter().filter(move |o| o.phase == phase)
+    }
+
+    /// Total wall time of a phase, seconds.
+    pub fn phase_total_s(&self, phase: Phase) -> f32 {
+        self.phase_ops(phase).map(|o| o.wall_s).sum()
+    }
+
+    /// Stall stack of a phase: seconds per component.
+    pub fn stall_stack(&self, phase: Phase) -> [f32; 3] {
+        let mut s = [0f32; 3];
+        for op in self.phase_ops(phase) {
+            s[op.stall.index()] += op.wall_s;
+        }
+        s
+    }
+
+    /// The single operator contributing the most time to the phase.
+    pub fn dominant_op(&self, phase: Phase) -> Option<&OpRecord> {
+        self.phase_ops(phase)
+            .max_by(|a, b| a.wall_s.partial_cmp(&b.wall_s).unwrap())
+    }
+
+    /// The dominant stall component of a phase.
+    pub fn dominant_stall(&self, phase: Phase) -> Bottleneck {
+        let s = self.stall_stack(phase);
+        let mut best = Bottleneck::Compute;
+        for b in Bottleneck::ALL {
+            if s[b.index()] > s[best.index()] {
+                best = b;
+            }
+        }
+        best
+    }
+
+    /// Render a compact textual report (used inside LLM prompts and the
+    /// CLI `explore --verbose` output).
+    pub fn render(&self, phase: Phase) -> String {
+        let mut out = String::new();
+        let total = self.phase_total_s(phase).max(1e-30);
+        out.push_str(&format!(
+            "critical path [{}] total={:.4} ms, dominant stall: {}\n",
+            phase.metric_name(),
+            total * 1e3,
+            self.dominant_stall(phase)
+        ));
+        for op in self.phase_ops(phase) {
+            out.push_str(&format!(
+                "  {:<16} {:>9.4} ms {:>5.1}% stall={:<7} util={:.2}{}\n",
+                op.name,
+                op.wall_s * 1e3,
+                op.wall_s / total * 100.0,
+                op.stall.name(),
+                op.utilization,
+                if op.latency_bound { " latency-bound" } else { "" },
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(
+        name: &'static str,
+        phase: Phase,
+        wall_s: f32,
+        stall: Bottleneck,
+    ) -> OpRecord {
+        OpRecord {
+            name,
+            phase,
+            wall_s,
+            stall,
+            compute_s: 0.0,
+            memory_s: 0.0,
+            network_s: 0.0,
+            utilization: 0.5,
+            latency_bound: false,
+        }
+    }
+
+    fn sample() -> CriticalPath {
+        CriticalPath {
+            ops: vec![
+                rec("qkv", Phase::Prefill, 3.0, Bottleneck::Compute),
+                rec("ar", Phase::Prefill, 2.0, Bottleneck::Network),
+                rec("mlp", Phase::Prefill, 4.0, Bottleneck::Compute),
+                rec("qkv", Phase::Decode, 0.2, Bottleneck::Memory),
+                rec("ar", Phase::Decode, 0.1, Bottleneck::Network),
+            ],
+        }
+    }
+
+    #[test]
+    fn totals_and_stacks() {
+        let cp = sample();
+        assert!((cp.phase_total_s(Phase::Prefill) - 9.0).abs() < 1e-6);
+        let s = cp.stall_stack(Phase::Prefill);
+        assert_eq!(s, [7.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn dominant_op_and_stall() {
+        let cp = sample();
+        assert_eq!(cp.dominant_op(Phase::Prefill).unwrap().name, "mlp");
+        assert_eq!(cp.dominant_stall(Phase::Prefill), Bottleneck::Compute);
+        assert_eq!(cp.dominant_stall(Phase::Decode), Bottleneck::Memory);
+    }
+
+    #[test]
+    fn render_mentions_every_op() {
+        let cp = sample();
+        let text = cp.render(Phase::Prefill);
+        assert!(text.contains("qkv") && text.contains("mlp"));
+        assert!(text.contains("dominant stall: compute"));
+    }
+}

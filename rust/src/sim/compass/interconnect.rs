@@ -1,0 +1,113 @@
+//! Interconnect model: chunked ring allreduce over the node's links.
+//!
+//! Unlike the roofline's single bandwidth term, this models the 2(n-1)
+//! ring steps explicitly with per-step latency, chunking, and a
+//! protocol-efficiency curve that degrades for small messages — which is
+//! what makes decode-phase allreduces latency- rather than
+//! bandwidth-dominated, a distinction the Strategy Engine must see to
+//! avoid "add links" when links would not help TPOT.
+
+use crate::arch::constants as c;
+use crate::design::{DesignPoint, Param};
+
+/// Ring-allreduce model for a `tp`-way tensor-parallel group.
+#[derive(Debug, Clone, Copy)]
+pub struct Interconnect {
+    /// Per-GPU aggregate link bandwidth, B/s.
+    pub bw: f32,
+    /// Per-hop latency, s (switch + serialization).
+    pub hop_latency: f32,
+    pub tp: f32,
+}
+
+impl Interconnect {
+    pub fn new(d: &DesignPoint, tp: u64) -> Self {
+        let links = d.get(Param::Links) as f32;
+        Interconnect {
+            bw: links * c::LINK_BPS,
+            hop_latency: 1.0e-6,
+            tp: tp as f32,
+        }
+    }
+
+    /// Time for one ring allreduce of `bytes` payload.
+    pub fn allreduce_s(&self, bytes: f32) -> f32 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        let steps = 2.0 * (self.tp - 1.0);
+        let chunk = bytes / self.tp;
+        // Protocol efficiency falls off for small chunks (header +
+        // synchronization amortization).
+        let eff = c::NET_EFF * (chunk / (chunk + 64.0 * 1024.0));
+        let bw_term = steps * chunk / (self.bw * eff.max(0.05));
+        let lat_term = steps * self.hop_latency;
+        bw_term + lat_term
+    }
+
+    /// True when the transfer is latency- (not bandwidth-) dominated;
+    /// the critical-path report uses this to tell the Strategy Engine
+    /// that adding links will not help.
+    pub fn latency_bound(&self, bytes: f32) -> bool {
+        let steps = 2.0 * (self.tp - 1.0);
+        let chunk = bytes / self.tp;
+        let eff = c::NET_EFF * (chunk / (chunk + 64.0 * 1024.0));
+        steps * self.hop_latency > steps * chunk / (self.bw * eff.max(0.05))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn icn(links: u32) -> Interconnect {
+        Interconnect::new(
+            &DesignPoint::a100().with(Param::Links, links),
+            8,
+        )
+    }
+
+    #[test]
+    fn large_allreduce_scales_with_links() {
+        let bytes = 4.0e8; // prefill activation allreduce
+        let t12 = icn(12).allreduce_s(bytes);
+        let t24 = icn(24).allreduce_s(bytes);
+        assert!(t24 < t12 * 0.6, "t12={t12} t24={t24}");
+        assert!(!icn(12).latency_bound(bytes));
+    }
+
+    #[test]
+    fn tiny_allreduce_is_latency_bound_and_links_do_not_help() {
+        let bytes = 8.0 * 12288.0 * 2.0 / 8.0; // decode-sized chunk
+        assert!(icn(12).latency_bound(bytes));
+        let t12 = icn(12).allreduce_s(bytes);
+        let t24 = icn(24).allreduce_s(bytes);
+        assert!(t24 > t12 * 0.8, "links should barely matter");
+    }
+
+    #[test]
+    fn allreduce_monotone_in_bytes() {
+        let i = icn(12);
+        assert!(i.allreduce_s(2e8) > i.allreduce_s(1e8));
+        assert_eq!(i.allreduce_s(0.0), 0.0);
+    }
+
+    #[test]
+    fn ring_steps_match_tp() {
+        // Doubling tp roughly doubles latency term for tiny messages.
+        let a = Interconnect {
+            bw: 3e11,
+            hop_latency: 1e-6,
+            tp: 2.0,
+        };
+        let b = Interconnect {
+            bw: 3e11,
+            hop_latency: 1e-6,
+            tp: 8.0,
+        };
+        let small = 1024.0;
+        let ra = a.allreduce_s(small);
+        let rb = b.allreduce_s(small);
+        assert!(rb > ra * 3.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Memory-system model: HBM channels behind an L2 (global buffer) with
+//! working-set-dependent hit rates and a shared-bandwidth contention
+//! factor. Richer than the roofline's single effective-bandwidth scalar:
+//! traffic classes (streaming weights, reused activations, KV cache) see
+//! different service rates.
+
+use crate::arch::constants as c;
+use crate::design::{DesignPoint, Param};
+
+/// Traffic class for a memory access stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficClass {
+    /// Weights: streamed once per layer, far larger than L2 — always HBM.
+    StreamingWeights,
+    /// Activations: high temporal reuse; hit in L2 when the working set
+    /// fits.
+    Activations,
+    /// KV cache reads during decode: sequential, partially cacheable.
+    KvCache,
+}
+
+/// The memory system of one GPU in the node.
+#[derive(Debug, Clone, Copy)]
+pub struct MemorySystem {
+    /// Raw HBM bandwidth (channels x per-channel), B/s.
+    pub hbm_bw: f32,
+    /// L2 capacity, bytes.
+    pub l2_bytes: f32,
+    /// L2 bandwidth, B/s (scales with capacity banks).
+    pub l2_bw: f32,
+}
+
+impl MemorySystem {
+    pub fn new(d: &DesignPoint) -> Self {
+        let channels = d.get(Param::MemChannels) as f32;
+        let l2_mb = d.get(Param::GbufMb) as f32;
+        let hbm_bw = channels * c::HBM_BPS_PER_CHANNEL;
+        // L2 bandwidth: banked, ~4x HBM at A100-like capacity, scaling
+        // sub-linearly with capacity (more banks, same crossbar).
+        let l2_bw = 4.0 * 5.0 * c::HBM_BPS_PER_CHANNEL
+            * (l2_mb / 40.0).sqrt();
+        MemorySystem { hbm_bw, l2_bytes: l2_mb * 1024.0 * 1024.0, l2_bw }
+    }
+
+    /// L2 hit fraction for a stream with the given working set and class.
+    pub fn hit_fraction(&self, class: TrafficClass, working_set: f32) -> f32 {
+        match class {
+            TrafficClass::StreamingWeights => 0.0,
+            TrafficClass::Activations => {
+                if working_set <= 0.0 {
+                    return 0.0;
+                }
+                // Fully resident -> 90% hits (cold misses remain);
+                // gracefully degrades as the set outgrows L2.
+                (self.l2_bytes / working_set).min(1.0) * 0.9
+            }
+            TrafficClass::KvCache => {
+                if working_set <= 0.0 {
+                    return 0.0;
+                }
+                (self.l2_bytes / working_set).min(1.0) * 0.5
+            }
+        }
+    }
+
+    /// Service time for `bytes` of a traffic class, given DRAM efficiency
+    /// degraded by row-conflict behaviour (streaming is efficient, short
+    /// strided decode reads are not).
+    pub fn service_s(
+        &self,
+        class: TrafficClass,
+        bytes: f32,
+        working_set: f32,
+    ) -> f32 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        let hit = self.hit_fraction(class, working_set);
+        let dram_eff = match class {
+            TrafficClass::StreamingWeights => 0.88,
+            TrafficClass::Activations => 0.75,
+            TrafficClass::KvCache => 0.65,
+        };
+        let hbm_time =
+            bytes * (1.0 - hit) / (self.hbm_bw * dram_eff);
+        let l2_time = bytes * hit / self.l2_bw;
+        // L2 and HBM service overlap only partially (miss handling holds
+        // MSHRs): charge the max plus 20% of the minor term.
+        let (hi, lo) = if hbm_time > l2_time {
+            (hbm_time, l2_time)
+        } else {
+            (l2_time, hbm_time)
+        };
+        hi + 0.2 * lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a100_mem() -> MemorySystem {
+        MemorySystem::new(&DesignPoint::a100())
+    }
+
+    #[test]
+    fn a100_bandwidths_are_sane() {
+        let m = a100_mem();
+        assert!((m.hbm_bw - 5.0 * 408.0e9).abs() < 1e6);
+        assert!(m.l2_bw > m.hbm_bw * 2.0);
+        assert!((m.l2_bytes - 40.0 * 1048576.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn weights_never_hit_l2() {
+        let m = a100_mem();
+        assert_eq!(
+            m.hit_fraction(TrafficClass::StreamingWeights, 1e6),
+            0.0
+        );
+    }
+
+    #[test]
+    fn small_activation_set_mostly_hits() {
+        let m = a100_mem();
+        let hit =
+            m.hit_fraction(TrafficClass::Activations, 10.0 * 1048576.0);
+        assert!((hit - 0.9).abs() < 1e-6);
+        let miss_heavy =
+            m.hit_fraction(TrafficClass::Activations, 400.0 * 1048576.0);
+        assert!(miss_heavy < 0.1);
+    }
+
+    #[test]
+    fn service_time_monotone_in_bytes() {
+        let m = a100_mem();
+        let t1 =
+            m.service_s(TrafficClass::StreamingWeights, 1e8, 1e8);
+        let t2 =
+            m.service_s(TrafficClass::StreamingWeights, 2e8, 2e8);
+        assert!(t2 > t1 * 1.9);
+    }
+
+    #[test]
+    fn cached_traffic_is_faster_than_streamed() {
+        let m = a100_mem();
+        let bytes = 8.0 * 1048576.0;
+        let cached =
+            m.service_s(TrafficClass::Activations, bytes, bytes);
+        let streamed =
+            m.service_s(TrafficClass::StreamingWeights, bytes, bytes);
+        assert!(cached < streamed);
+    }
+
+    #[test]
+    fn bigger_l2_helps_kv_reads() {
+        let small = MemorySystem::new(
+            &DesignPoint::a100().with(Param::GbufMb, 32),
+        );
+        let big = MemorySystem::new(
+            &DesignPoint::a100().with(Param::GbufMb, 256),
+        );
+        let ws = 150.0 * 1048576.0;
+        let t_small = small.service_s(TrafficClass::KvCache, ws, ws);
+        let t_big = big.service_s(TrafficClass::KvCache, ws, ws);
+        assert!(t_big < t_small);
+    }
+}

@@ -1,0 +1,25 @@
+//! The detailed analytical GPU simulator ("LLMCompass-class").
+//!
+//! The paper evaluates DSE methods on two environments: a fast roofline
+//! model and LLMCompass (Zhang et al., ISCA'24), an analytical GPU
+//! simulator for LLM inference which the authors extended with critical
+//! path analysis. This module is our from-scratch equivalent: it models
+//! execution at **tile granularity** — systolic-array mapping with
+//! double-buffered SRAM staging, an L2-aware memory system, and a chunked
+//! ring-allreduce interconnect — and attributes every operator's time to
+//! a dominant stall component, producing the per-design critical-path
+//! report that LUMINA's Strategy Engine consumes.
+//!
+//! It is intentionally a *different, richer* model than `sim::roofline`
+//! (overlap, cache reuse, wave scheduling overheads), standing in for the
+//! "hours per sample" simulator of §5.3 — while still fast enough that the
+//! 20-sample budget study runs in milliseconds here.
+
+pub mod critical_path;
+pub mod engine;
+pub mod interconnect;
+pub mod memory;
+pub mod tiles;
+
+pub use critical_path::{CriticalPath, OpRecord};
+pub use engine::CompassSim;

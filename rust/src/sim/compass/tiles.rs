@@ -1,0 +1,176 @@
+//! Systolic-array tiling model: how an M x N x K (x count) matmul maps
+//! onto `cores x sublanes` weight-stationary arrays, with SRAM-capacity
+//! aware tile sizing and double-buffering analysis.
+
+use crate::arch::constants as c;
+use crate::design::{DesignPoint, Param};
+
+/// Result of mapping one matmul onto the machine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MatmulMapping {
+    /// Chosen K-chunk (elements accumulated per weight load).
+    pub k_tile: f32,
+    /// Total output tiles across all instances.
+    pub tiles: f32,
+    /// Full waves + remainder wave over all arrays.
+    pub waves: f32,
+    /// Compute seconds (systolic cycles / clock), including drain.
+    pub compute_s: f32,
+    /// Seconds spent staging weights/activations into SRAM.
+    pub stage_s: f32,
+    /// True when SRAM fits two tile working-sets so staging overlaps
+    /// compute (ping-pong buffers).
+    pub double_buffered: bool,
+    /// Effective utilization of the PE grid (0..1], for reports.
+    pub utilization: f32,
+}
+
+/// Per-tile SRAM working set (bytes): weight tile (sa x kt) + activation
+/// tile (sa x kt) + output accumulator (sa x sa, fp32).
+fn tile_working_set(sa: f32, kt: f32) -> f32 {
+    2.0 * sa * kt * c::FP16_BYTES + sa * sa * 4.0
+}
+
+/// Map an M x N x K matmul repeated `count` times onto `d`.
+pub fn map_matmul(
+    d: &DesignPoint,
+    m: f32,
+    n: f32,
+    k: f32,
+    count: f32,
+    mem_bw: f32,
+) -> MatmulMapping {
+    let sa = d.get(Param::SystolicArray) as f32;
+    let sram_bytes = d.get(Param::SramKb) as f32 * 1024.0;
+    let arrays =
+        (d.get(Param::Cores) * d.get(Param::Sublanes)) as f32;
+
+    // Largest K-chunk whose double-buffered working set fits SRAM,
+    // bounded by the canonical K_TILE and K itself.
+    let mut kt = k.min(c::K_TILE);
+    while kt > 8.0 && 2.0 * tile_working_set(sa, kt) > sram_bytes {
+        kt /= 2.0;
+    }
+    let double_buffered = 2.0 * tile_working_set(sa, kt) <= sram_bytes;
+
+    let tiles_m = (m / sa).ceil();
+    let tiles_n = (n / sa).ceil();
+    let tiles = tiles_m * tiles_n * count;
+    let waves = (tiles / arrays).ceil();
+
+    // Cycles per output tile: for each K-chunk, `kt` beats of accumulation
+    // plus `sa` drain cycles (weight-stationary reload).
+    let k_chunks = (k / kt).ceil();
+    let cycles_per_tile = k_chunks * (kt + sa);
+    let compute_s = waves * cycles_per_tile / c::CLOCK_HZ;
+
+    // Staging traffic: unique operand + output bytes (L2 multicast and
+    // loop blocking make tile re-reads hit in cache; the engine charges
+    // an inflation factor separately when the reused operand outgrows
+    // L2). This is what actually crosses the DRAM pins.
+    let stage_bytes =
+        (m * k + k * n + m * n) * count * c::FP16_BYTES;
+    let stage_s = stage_bytes / mem_bw;
+
+    // PE-grid utilization for reporting: valid MACs / (PE * cycles).
+    let valid_macs = m * n * k * count;
+    let total_pe_cycles = tiles * cycles_per_tile * sa * sa;
+    let utilization = (valid_macs / total_pe_cycles).min(1.0);
+
+    MatmulMapping {
+        k_tile: kt,
+        tiles,
+        waves,
+        compute_s,
+        stage_s,
+        double_buffered,
+        utilization,
+    }
+}
+
+impl MatmulMapping {
+    /// Wall time for the matmul: with double buffering the stage traffic
+    /// hides behind compute (whichever is longer wins); without it, the
+    /// array stalls on staging with only partial overlap.
+    pub fn wall_s(&self) -> f32 {
+        if self.double_buffered {
+            self.compute_s.max(self.stage_s)
+        } else {
+            // Serialized staging with ~30% overlap from in-flight loads.
+            self.compute_s + 0.7 * self.stage_s
+        }
+    }
+
+    /// True when staging (memory) dominates the wall time.
+    pub fn memory_bound(&self) -> bool {
+        self.stage_s > self.compute_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a100() -> DesignPoint {
+        DesignPoint::a100()
+    }
+
+    const BW: f32 = 1.5e12;
+
+    #[test]
+    fn big_prefill_matmul_is_compute_bound_and_utilized() {
+        let m = map_matmul(&a100(), 16384.0, 4608.0, 12288.0, 1.0, BW);
+        assert!(!m.memory_bound(), "{m:?}");
+        assert!(m.utilization > 0.7, "{m:?}");
+        assert!(m.double_buffered);
+    }
+
+    #[test]
+    fn decode_gemv_is_memory_bound_with_low_utilization() {
+        // M=8 onto 16x16 arrays: at most half the rows are live.
+        let m = map_matmul(&a100(), 8.0, 12288.0, 6144.0, 1.0, BW);
+        assert!(m.memory_bound(), "{m:?}");
+        assert!(m.utilization < 0.5, "{m:?}");
+    }
+
+    #[test]
+    fn giant_array_hurts_small_matmul_utilization() {
+        let small = map_matmul(&a100(), 8.0, 12288.0, 6144.0, 1.0, BW);
+        let big_d = a100().with(Param::SystolicArray, 128);
+        let big = map_matmul(&big_d, 8.0, 12288.0, 6144.0, 1.0, BW);
+        assert!(big.utilization < small.utilization / 4.0);
+    }
+
+    #[test]
+    fn tiny_sram_forces_smaller_k_tile_or_serialization() {
+        // 64x64 arrays need ~96 KB for double-buffered 128-deep chunks;
+        // a 32 KB scratchpad must shrink the chunk or serialize.
+        let wide = a100().with(Param::SystolicArray, 64);
+        let starved = wide.with(Param::SramKb, 32);
+        let m = map_matmul(&starved, 4096.0, 4096.0, 4096.0, 1.0, BW);
+        let roomy = map_matmul(&wide, 4096.0, 4096.0, 4096.0, 1.0, BW);
+        assert!(
+            m.k_tile < roomy.k_tile || !m.double_buffered,
+            "{m:?} vs {roomy:?}"
+        );
+        assert!(m.wall_s() >= roomy.wall_s());
+    }
+
+    #[test]
+    fn wall_time_scales_down_with_more_arrays() {
+        let half = a100().with(Param::Cores, 64);
+        let t_small =
+            map_matmul(&half, 16384.0, 4608.0, 12288.0, 1.0, BW).wall_s();
+        let t_big =
+            map_matmul(&a100(), 16384.0, 4608.0, 12288.0, 1.0, BW)
+                .wall_s();
+        assert!(t_big < t_small);
+    }
+
+    #[test]
+    fn count_multiplies_tiles() {
+        let one = map_matmul(&a100(), 2048.0, 2048.0, 128.0, 1.0, BW);
+        let many = map_matmul(&a100(), 2048.0, 2048.0, 128.0, 96.0, BW);
+        assert!((many.tiles / one.tiles - 96.0).abs() < 1e-3);
+    }
+}

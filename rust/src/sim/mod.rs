@@ -1,0 +1,14 @@
+//! Simulation environments.
+//!
+//! * [`roofline`] — Rust mirror of the AOT roofline artifact (test oracle
+//!   and artifact-free fallback).
+//! * [`compass`] — the detailed LLMCompass-class analytical simulator with
+//!   tile-level execution modelling and critical-path stall attribution;
+//!   the "expensive, high-fidelity" evaluator of the paper's §5.3
+//!   20-sample study.
+
+pub mod compass;
+pub mod roofline;
+
+pub use compass::CompassSim;
+pub use roofline::RooflineSim;

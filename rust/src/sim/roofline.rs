@@ -1,0 +1,241 @@
+//! Rust mirror of the roofline evaluation model.
+//!
+//! Formula-for-formula port of the L1 Pallas kernel
+//! (`python/compile/kernels/roofline.py`), in f32 with matching operation
+//! order so results agree with the artifact to float tolerance. Serves as
+//! the test oracle for the PJRT path (`tests/artifact_vs_mirror.rs`) and
+//! as the evaluator fallback when `artifacts/` has not been built.
+
+use crate::arch::constants as c;
+use crate::design::{DesignPoint, Param};
+use crate::eval::{Evaluator, Metrics};
+use crate::workload::{op_table, WorkloadSpec, MAX_OPS, N_PHASES};
+use crate::Result;
+
+/// Roofline simulator for a fixed workload.
+#[derive(Debug, Clone)]
+pub struct RooflineSim {
+    pub spec: WorkloadSpec,
+    table: [[[f32; 8]; MAX_OPS]; N_PHASES],
+}
+
+impl RooflineSim {
+    pub fn new(spec: WorkloadSpec) -> Self {
+        Self { spec, table: op_table(&spec) }
+    }
+
+    /// Evaluate one design (pure function of the design vector).
+    pub fn evaluate(&self, d: &DesignPoint) -> Metrics {
+        let links = d.get(Param::Links) as f32;
+        let cores = d.get(Param::Cores) as f32;
+        let subl = d.get(Param::Sublanes) as f32;
+        let sa = d.get(Param::SystolicArray) as f32;
+        let vecw = d.get(Param::VectorWidth) as f32;
+        let sram = d.get(Param::SramKb) as f32;
+        let gbuf = d.get(Param::GbufMb) as f32;
+        let memch = d.get(Param::MemChannels) as f32;
+
+        let arrays = cores * subl;
+        let t_peak = arrays * sa * sa * c::FLOPS_PER_PE * c::CLOCK_HZ;
+        let v_peak = arrays * vecw * c::FLOPS_PER_LANE * c::CLOCK_HZ;
+        let mem_eff = (c::MEM_EFF_BASE
+            + c::MEM_EFF_L2_SLOPE * (gbuf / 8.0).log2())
+        .clamp(c::MEM_EFF_BASE, c::MEM_EFF_MAX);
+        let m_bw = memch * c::HBM_BPS_PER_CHANNEL * mem_eff;
+        let n_bw = links * c::LINK_BPS * c::NET_EFF;
+
+        let area_core = c::AREA_CORE_BASE
+            + subl * (sa * sa * c::AREA_PER_PE + vecw * c::AREA_PER_LANE)
+            + c::AREA_REGFILE
+            + sram * c::AREA_SRAM_PER_KB;
+        let area = cores * area_core
+            + gbuf * c::AREA_L2_PER_MB
+            + memch * c::AREA_HBM_PHY
+            + links * c::AREA_LINK_PHY
+            + c::AREA_UNCORE;
+
+        let mut phase_total = [0f32; 2];
+        let mut stalls = [[0f32; 3]; 2];
+        for (p, phase) in self.table.iter().enumerate() {
+            for row in phase {
+                let kind = row[0];
+                let m = row[1].max(1.0);
+                let n = row[2].max(1.0);
+                let k = row[3].max(1.0);
+                let count = row[4].max(1.0);
+                let flops = row[5];
+                let bytes = row[6];
+                let comm = row[7];
+
+                let tiles_m = (m / sa).ceil();
+                let tiles_n = (n / sa).ceil();
+                let edge = (m * n) / (tiles_m * sa * tiles_n * sa);
+                let kt = k.min(c::K_TILE);
+                let drain = kt / (kt + sa);
+                let sram_req =
+                    (2.0 * sa * kt + sa * sa) * c::FP16_BYTES / 1024.0;
+                let sram_f =
+                    (sram / sram_req).clamp(c::SRAM_UTIL_FLOOR, 1.0);
+                let tiles = tiles_m * tiles_n * count;
+                let waves = (tiles / arrays).ceil();
+                let quant = tiles / (waves * arrays);
+
+                let t_tensor =
+                    flops / (t_peak * edge * drain * sram_f * quant);
+                let t_vec = flops / v_peak;
+                let t_mem = bytes / m_bw;
+                let t_net = comm / n_bw + c::ALLREDUCE_LAT_S;
+
+                let is_mm = kind == 0.0;
+                let is_vec = kind == 1.0;
+                let is_comm = kind == 2.0;
+
+                let t_compute = if is_mm { t_tensor } else { t_vec };
+                let mut t_op = if is_comm {
+                    t_net.max(t_mem)
+                } else {
+                    t_compute.max(t_mem)
+                };
+                t_op = if is_mm || is_vec || is_comm {
+                    t_op + c::OP_OVERHEAD_S
+                } else {
+                    0.0
+                };
+
+                let live = t_op > 0.0;
+                let comp_win = !is_comm && t_compute >= t_mem && live;
+                let net_win = is_comm && t_net >= t_mem && live;
+                let mem_win = live && !comp_win && !net_win;
+
+                phase_total[p] += t_op;
+                if comp_win {
+                    stalls[p][0] += t_op;
+                }
+                if mem_win {
+                    stalls[p][1] += t_op;
+                }
+                if net_win {
+                    stalls[p][2] += t_op;
+                }
+            }
+        }
+
+        Metrics {
+            ttft_ms: phase_total[0] * 1e3,
+            tpot_ms: phase_total[1] * 1e3,
+            area_mm2: area,
+            stalls: [
+                [
+                    stalls[0][0] * 1e3,
+                    stalls[0][1] * 1e3,
+                    stalls[0][2] * 1e3,
+                ],
+                [
+                    stalls[1][0] * 1e3,
+                    stalls[1][1] * 1e3,
+                    stalls[1][2] * 1e3,
+                ],
+            ],
+        }
+    }
+}
+
+impl Evaluator for RooflineSim {
+    fn eval_batch(&mut self, designs: &[DesignPoint]) -> Result<Vec<Metrics>> {
+        Ok(designs.iter().map(|d| self.evaluate(d)).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "roofline-rs"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{Bottleneck, Phase};
+    use crate::workload::GPT3_175B;
+
+    fn sim() -> RooflineSim {
+        RooflineSim::new(GPT3_175B)
+    }
+
+    #[test]
+    fn a100_matches_python_reference_numbers() {
+        // Values printed by the python oracle for the A100 config
+        // (see python/tests): ttft=36.70556, tpot=0.4424397, area=833.9728
+        let m = sim().evaluate(&DesignPoint::a100());
+        assert!((m.ttft_ms - 36.70556).abs() / 36.70556 < 1e-4, "{m:?}");
+        assert!((m.tpot_ms - 0.4424397).abs() / 0.4424397 < 1e-4);
+        assert!((m.area_mm2 - 833.9728).abs() / 833.9728 < 1e-4);
+    }
+
+    #[test]
+    fn a100_stall_stack_matches_python() {
+        let m = sim().evaluate(&DesignPoint::a100());
+        // prefill: [26.794, 3.634, 6.277]; decode: [0, 0.4254, 0.01706]
+        assert!((m.stalls[0][0] - 26.794451).abs() < 2e-3, "{m:?}");
+        assert!((m.stalls[0][1] - 3.6336124).abs() < 2e-3);
+        assert!((m.stalls[0][2] - 6.277494).abs() < 2e-3);
+        assert!((m.stalls[1][1] - 0.42538139).abs() < 2e-4);
+    }
+
+    #[test]
+    fn prefill_compute_bound_decode_memory_bound_on_a100() {
+        let m = sim().evaluate(&DesignPoint::a100());
+        assert_eq!(m.dominant_bottleneck(Phase::Prefill), Bottleneck::Compute);
+        assert_eq!(m.dominant_bottleneck(Phase::Decode), Bottleneck::Memory);
+    }
+
+    #[test]
+    fn paper_designs_dominate_a100() {
+        let s = sim();
+        let a100 = s.evaluate(&DesignPoint::a100());
+        for d in
+            [DesignPoint::paper_design_a(), DesignPoint::paper_design_b()]
+        {
+            let m = s.evaluate(&d);
+            assert!(m.ttft_ms < a100.ttft_ms, "{d}: {m:?}");
+            assert!(m.tpot_ms < a100.tpot_ms);
+            assert!(m.area_mm2 < a100.area_mm2);
+        }
+    }
+
+    #[test]
+    fn stall_buckets_sum_to_phase_time() {
+        let s = sim();
+        for d in [
+            DesignPoint::a100(),
+            DesignPoint::new([6, 1, 1, 4, 4, 32, 32, 1]),
+            DesignPoint::new([24, 256, 8, 128, 128, 1024, 1024, 12]),
+        ] {
+            let m = s.evaluate(&d);
+            let pf: f32 = m.stalls[0].iter().sum();
+            let dc: f32 = m.stalls[1].iter().sum();
+            assert!((pf - m.ttft_ms).abs() / m.ttft_ms < 1e-5);
+            assert!((dc - m.tpot_ms).abs() / m.tpot_ms < 1e-5);
+        }
+    }
+
+    #[test]
+    fn batch_eval_matches_single() {
+        let mut s = sim();
+        let ds = vec![
+            DesignPoint::a100(),
+            DesignPoint::paper_design_a(),
+            DesignPoint::paper_design_b(),
+        ];
+        let batch = s.eval_batch(&ds).unwrap();
+        for (d, b) in ds.iter().zip(&batch) {
+            assert_eq!(*b, s.evaluate(d));
+        }
+    }
+
+    #[test]
+    fn tiny_workload_runs() {
+        let s = RooflineSim::new(crate::workload::GPT3_TINY);
+        let m = s.evaluate(&DesignPoint::a100());
+        assert!(m.ttft_ms > 0.0 && m.tpot_ms > 0.0);
+        assert!(m.ttft_ms < sim().evaluate(&DesignPoint::a100()).ttft_ms);
+    }
+}

@@ -1,0 +1,11 @@
+//! Statistics substrate: seeded RNG, PCA (for Fig. 1/6 embeddings), and
+//! scalar summaries. Implemented from scratch — no `rand`/`ndarray`
+//! offline.
+
+pub mod pca;
+pub mod rng;
+pub mod summary;
+
+pub use pca::Pca;
+pub use rng::Pcg32;
+pub use summary::Summary;

@@ -1,0 +1,236 @@
+//! Principal Component Analysis via Jacobi eigendecomposition.
+//!
+//! Used to reproduce the paper's Figure 1 (design-space embedding) and
+//! Figure 6 (ACO-vs-LUMINA search-pattern trajectories): design vectors are
+//! standardized, the covariance matrix is eigendecomposed with cyclic
+//! Jacobi rotations (dimensions here are 8, so exactness beats speed), and
+//! points are projected onto the top-k components.
+
+/// A fitted PCA model.
+#[derive(Debug, Clone)]
+pub struct Pca {
+    pub mean: Vec<f64>,
+    pub scale: Vec<f64>,
+    /// Principal axes, row-major `[k][d]`, ordered by decreasing variance.
+    pub components: Vec<Vec<f64>>,
+    /// Explained variance per retained component.
+    pub explained: Vec<f64>,
+}
+
+impl Pca {
+    /// Fit on `data` (n rows x d columns), retaining `k` components.
+    /// Columns are standardized (z-score) before the eigendecomposition so
+    /// heterogeneous design parameters (2..1024 ranges) contribute evenly.
+    pub fn fit(data: &[Vec<f64>], k: usize) -> Pca {
+        let n = data.len();
+        assert!(n >= 2, "PCA needs at least two rows");
+        let d = data[0].len();
+        assert!(k <= d);
+
+        let mut mean = vec![0.0; d];
+        for row in data {
+            for (m, v) in mean.iter_mut().zip(row) {
+                *m += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        let mut scale = vec![0.0; d];
+        for row in data {
+            for j in 0..d {
+                let c = row[j] - mean[j];
+                scale[j] += c * c;
+            }
+        }
+        for s in &mut scale {
+            *s = (*s / (n - 1) as f64).sqrt();
+            if *s < 1e-12 {
+                *s = 1.0; // constant column: leave centered at zero
+            }
+        }
+
+        // Covariance of standardized data.
+        let mut cov = vec![vec![0.0; d]; d];
+        for row in data {
+            let z: Vec<f64> = (0..d)
+                .map(|j| (row[j] - mean[j]) / scale[j])
+                .collect();
+            for i in 0..d {
+                for j in i..d {
+                    cov[i][j] += z[i] * z[j];
+                }
+            }
+        }
+        for i in 0..d {
+            for j in i..d {
+                cov[i][j] /= (n - 1) as f64;
+                cov[j][i] = cov[i][j];
+            }
+        }
+
+        let (eigvals, eigvecs) = jacobi_eigen(cov);
+        // Sort by descending eigenvalue.
+        let mut order: Vec<usize> = (0..d).collect();
+        order.sort_by(|&a, &b| {
+            eigvals[b].partial_cmp(&eigvals[a]).unwrap()
+        });
+
+        let components: Vec<Vec<f64>> = order[..k]
+            .iter()
+            .map(|&c| (0..d).map(|r| eigvecs[r][c]).collect())
+            .collect();
+        let explained =
+            order[..k].iter().map(|&c| eigvals[c].max(0.0)).collect();
+
+        Pca { mean, scale, components, explained }
+    }
+
+    /// Project one row onto the retained components.
+    pub fn transform(&self, row: &[f64]) -> Vec<f64> {
+        let z: Vec<f64> = row
+            .iter()
+            .zip(&self.mean)
+            .zip(&self.scale)
+            .map(|((v, m), s)| (v - m) / s)
+            .collect();
+        self.components
+            .iter()
+            .map(|c| c.iter().zip(&z).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// Fraction of total variance captured by the retained components.
+    pub fn explained_ratio(&self) -> f64 {
+        let d = self.mean.len() as f64;
+        self.explained.iter().sum::<f64>() / d
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+/// Returns (eigenvalues, eigenvectors-as-columns).
+fn jacobi_eigen(mut a: Vec<Vec<f64>>) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let d = a.len();
+    let mut v = vec![vec![0.0; d]; d];
+    for (i, row) in v.iter_mut().enumerate() {
+        row[i] = 1.0;
+    }
+    for _sweep in 0..64 {
+        let mut off = 0.0;
+        for i in 0..d {
+            for j in i + 1..d {
+                off += a[i][j] * a[i][j];
+            }
+        }
+        if off < 1e-20 {
+            break;
+        }
+        for p in 0..d {
+            for q in p + 1..d {
+                if a[p][q].abs() < 1e-18 {
+                    continue;
+                }
+                let theta = (a[q][q] - a[p][p]) / (2.0 * a[p][q]);
+                let t = theta.signum()
+                    / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for k in 0..d {
+                    let akp = a[k][p];
+                    let akq = a[k][q];
+                    a[k][p] = c * akp - s * akq;
+                    a[k][q] = s * akp + c * akq;
+                }
+                for k in 0..d {
+                    let apk = a[p][k];
+                    let aqk = a[q][k];
+                    a[p][k] = c * apk - s * aqk;
+                    a[q][k] = s * apk + c * aqk;
+                }
+                for k in 0..d {
+                    let vkp = v[k][p];
+                    let vkq = v[k][q];
+                    v[k][p] = c * vkp - s * vkq;
+                    v[k][q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let vals = (0..d).map(|i| a[i][i]).collect();
+    (vals, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg32;
+
+    #[test]
+    fn identity_covariance_eigenvalues_near_one() {
+        let mut rng = Pcg32::new(1);
+        let data: Vec<Vec<f64>> = (0..4000)
+            .map(|_| (0..4).map(|_| rng.normal()).collect())
+            .collect();
+        let pca = Pca::fit(&data, 4);
+        for e in &pca.explained {
+            assert!((e - 1.0).abs() < 0.12, "eig={e}");
+        }
+    }
+
+    #[test]
+    fn recovers_dominant_direction() {
+        // Points along (1,1)/sqrt(2) with small orthogonal noise.
+        let mut rng = Pcg32::new(2);
+        let data: Vec<Vec<f64>> = (0..2000)
+            .map(|_| {
+                let t = rng.normal() * 10.0;
+                let n = rng.normal() * 0.1;
+                vec![t + n, t - n]
+            })
+            .collect();
+        let pca = Pca::fit(&data, 2);
+        let c = &pca.components[0];
+        // After standardization, dominant axis is (±1/√2, ±1/√2).
+        assert!((c[0].abs() - 0.7071).abs() < 0.02, "{c:?}");
+        assert!((c[1].abs() - 0.7071).abs() < 0.02, "{c:?}");
+        assert!(pca.explained[0] > pca.explained[1] * 50.0);
+    }
+
+    #[test]
+    fn transform_centers_the_mean() {
+        let data =
+            vec![vec![1.0, 10.0], vec![3.0, 30.0], vec![5.0, 50.0]];
+        let pca = Pca::fit(&data, 2);
+        let proj = pca.transform(&[3.0, 30.0]);
+        assert!(proj.iter().all(|p| p.abs() < 1e-9), "{proj:?}");
+    }
+
+    #[test]
+    fn constant_columns_do_not_blow_up() {
+        let data: Vec<Vec<f64>> =
+            (0..10).map(|i| vec![i as f64, 7.0]).collect();
+        let pca = Pca::fit(&data, 2);
+        let proj = pca.transform(&[4.0, 7.0]);
+        assert!(proj.iter().all(|p| p.is_finite()));
+    }
+
+    #[test]
+    fn components_are_orthonormal() {
+        let mut rng = Pcg32::new(3);
+        let data: Vec<Vec<f64>> = (0..500)
+            .map(|_| (0..6).map(|_| rng.f64() * 5.0).collect())
+            .collect();
+        let pca = Pca::fit(&data, 6);
+        for i in 0..6 {
+            for j in i..6 {
+                let dot: f64 = pca.components[i]
+                    .iter()
+                    .zip(&pca.components[j])
+                    .map(|(a, b)| a * b)
+                    .sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-6, "({i},{j}) dot={dot}");
+            }
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Wall-clock micro-bench harness (criterion is unavailable offline).
+//!
+//! Each `rust/benches/*.rs` target is `harness = false` and drives this:
+//! warmup, N timed iterations, and a median/mean/p95 report printed in a
+//! stable machine-grepable format plus CSV rows for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(name, samples)
+}
+
+/// Summarize raw per-iteration samples.
+pub fn summarize(name: &str, mut samples: Vec<f64>) -> BenchResult {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let median = samples[n / 2];
+    let p95 = samples[(n as f64 * 0.95) as usize % n];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        median_s: median,
+        p95_s: p95,
+        min_s: samples[0],
+    };
+    println!(
+        "bench {:<42} iters={:<5} mean={:>10} median={:>10} p95={:>10}",
+        r.name,
+        r.iters,
+        fmt_time(r.mean_s),
+        fmt_time(r.median_s),
+        fmt_time(r.p95_s),
+    );
+    r
+}
+
+/// Human-scale duration formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Print a section header so bench output reads like the paper's eval.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop", 1, 16, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.iters, 16);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.p95_s);
+        assert!(r.mean_s > 0.0);
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert!(fmt_time(2.0).ends_with('s'));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).ends_with("us"));
+        assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn throughput_is_items_over_mean() {
+        let r = summarize("x", vec![0.5, 0.5]);
+        assert!((r.throughput(100.0) - 200.0).abs() < 1e-9);
+    }
+}

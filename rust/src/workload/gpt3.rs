@@ -1,0 +1,302 @@
+//! Operator-table construction for a tensor-parallel GPT-3 layer.
+//!
+//! Exact mirror of `python/compile/workload.py` (f64 math, f32 storage —
+//! same rounding as numpy's `astype(float32)`).
+
+use crate::arch::constants as c;
+
+pub const MAX_OPS: usize = 16;
+pub const N_PHASES: usize = 2;
+
+/// Model + deployment hyper-parameters (paper §5.3 setup).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkloadSpec {
+    pub d_model: u64,
+    pub n_heads: u64,
+    pub d_head: u64,
+    pub d_ffn: u64,
+    pub tp: u64,
+    pub batch: u64,
+    pub prefill_seq: u64,
+    pub decode_pos: u64,
+}
+
+pub const GPT3_175B: WorkloadSpec = WorkloadSpec {
+    d_model: 12288,
+    n_heads: 96,
+    d_head: 128,
+    d_ffn: 49152,
+    tp: 8,
+    batch: 8,
+    prefill_seq: 2048,
+    decode_pos: 1024,
+};
+
+pub const GPT3_TINY: WorkloadSpec = WorkloadSpec {
+    d_model: 1024,
+    n_heads: 16,
+    d_head: 64,
+    d_ffn: 4096,
+    tp: 8,
+    batch: 8,
+    prefill_seq: 256,
+    decode_pos: 128,
+};
+
+/// Resolve a workload by its artifact name (`meta.json` `workload` key).
+pub fn spec_by_name(name: &str) -> Option<WorkloadSpec> {
+    match name {
+        "gpt3-175b" => Some(GPT3_175B),
+        "gpt3-tiny" => Some(GPT3_TINY),
+        _ => None,
+    }
+}
+
+impl WorkloadSpec {
+    pub fn heads_local(&self) -> u64 {
+        self.n_heads / self.tp
+    }
+    pub fn ffn_local(&self) -> u64 {
+        self.d_ffn / self.tp
+    }
+    pub fn kv_len(&self) -> u64 {
+        self.prefill_seq + self.decode_pos
+    }
+}
+
+/// Operator kind — matches the f32 sentinels in the shared table layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Matmul,
+    Vector,
+    Comm,
+}
+
+impl OpKind {
+    pub fn code(self) -> f32 {
+        match self {
+            OpKind::Matmul => 0.0,
+            OpKind::Vector => 1.0,
+            OpKind::Comm => 2.0,
+        }
+    }
+}
+
+/// One operator of the evaluation trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Op {
+    pub kind: OpKind,
+    /// Human name for critical-path reports and benchmark prompts.
+    pub name: &'static str,
+    pub m: f64,
+    pub n: f64,
+    pub k: f64,
+    pub count: f64,
+    pub flops: f64,
+    pub bytes: f64,
+    pub comm_bytes: f64,
+}
+
+fn matmul(name: &'static str, m: u64, n: u64, k: u64, count: u64) -> Op {
+    let (mf, nf, kf, cf) = (m as f64, n as f64, k as f64, count as f64);
+    Op {
+        kind: OpKind::Matmul,
+        name,
+        m: mf,
+        n: nf,
+        k: kf,
+        count: cf,
+        flops: 2.0 * mf * nf * kf * cf,
+        bytes: (mf * kf + kf * nf + mf * nf) * cf * c::FP16_BYTES as f64,
+        comm_bytes: 0.0,
+    }
+}
+
+fn vector(name: &'static str, elems: u64, flops_per_elem: f64) -> Op {
+    let e = elems as f64;
+    Op {
+        kind: OpKind::Vector,
+        name,
+        m: 0.0,
+        n: 0.0,
+        k: 0.0,
+        count: 1.0,
+        flops: flops_per_elem * e,
+        bytes: 2.0 * e * c::FP16_BYTES as f64,
+        comm_bytes: 0.0,
+    }
+}
+
+fn allreduce(name: &'static str, raw_bytes: f64, tp: u64) -> Op {
+    let ring = 2.0 * (tp as f64 - 1.0) / tp as f64;
+    Op {
+        kind: OpKind::Comm,
+        name,
+        m: 0.0,
+        n: 0.0,
+        k: 0.0,
+        count: 1.0,
+        flops: 0.0,
+        bytes: 2.0 * raw_bytes,
+        comm_bytes: ring * raw_bytes,
+    }
+}
+
+/// Operators of one prefill layer (TTFT phase).
+pub fn prefill_ops(w: &WorkloadSpec) -> Vec<Op> {
+    let t = w.batch * w.prefill_seq;
+    let s = w.prefill_seq;
+    let (hl, d, dh) = (w.heads_local(), w.d_model, w.d_head);
+    let ar = (t * d) as f64 * c::FP16_BYTES as f64;
+    vec![
+        vector("layernorm_1", t * d, 8.0),
+        matmul("qkv_proj", t, 3 * d / w.tp, d, 1),
+        matmul("attn_scores", s, s, dh, w.batch * hl),
+        vector("softmax", w.batch * hl * s * s, 5.0),
+        matmul("attn_value", s, dh, s, w.batch * hl),
+        matmul("out_proj", t, d, d / w.tp, 1),
+        allreduce("allreduce_attn", ar, w.tp),
+        vector("layernorm_2", t * d, 8.0),
+        matmul("mlp_up", t, w.ffn_local(), d, 1),
+        vector("gelu", t * w.ffn_local(), 8.0),
+        matmul("mlp_down", t, d, w.ffn_local(), 1),
+        allreduce("allreduce_mlp", ar, w.tp),
+    ]
+}
+
+/// Operators of one decode layer at output token `decode_pos`.
+pub fn decode_ops(w: &WorkloadSpec) -> Vec<Op> {
+    let b = w.batch;
+    let sk = w.kv_len();
+    let (hl, d, dh) = (w.heads_local(), w.d_model, w.d_head);
+    let ar = (b * d) as f64 * c::FP16_BYTES as f64;
+    vec![
+        vector("layernorm_1", b * d, 8.0),
+        matmul("qkv_proj", b, 3 * d / w.tp, d, 1),
+        matmul("attn_scores", 1, sk, dh, b * hl),
+        vector("softmax", b * hl * sk, 5.0),
+        matmul("attn_value", 1, dh, sk, b * hl),
+        matmul("out_proj", b, d, d / w.tp, 1),
+        allreduce("allreduce_attn", ar, w.tp),
+        vector("layernorm_2", b * d, 8.0),
+        matmul("mlp_up", b, w.ffn_local(), d, 1),
+        vector("gelu", b * w.ffn_local(), 8.0),
+        matmul("mlp_down", b, d, w.ffn_local(), 1),
+        allreduce("allreduce_mlp", ar, w.tp),
+    ]
+}
+
+/// Padded `[N_PHASES][MAX_OPS][8]` f32 table — byte-compatible with the
+/// Python `workload.op_table` layout (kind sentinel -1 marks padding).
+pub fn op_table(w: &WorkloadSpec) -> [[[f32; 8]; MAX_OPS]; N_PHASES] {
+    let mut tbl = [[[0.0f32; 8]; MAX_OPS]; N_PHASES];
+    for phase in &mut tbl {
+        for row in phase.iter_mut() {
+            row[0] = -1.0;
+        }
+    }
+    for (p, ops) in [prefill_ops(w), decode_ops(w)].iter().enumerate() {
+        assert!(ops.len() <= MAX_OPS, "operator table overflow");
+        for (i, op) in ops.iter().enumerate() {
+            tbl[p][i] = [
+                op.kind.code(),
+                op.m as f32,
+                op.n as f32,
+                op.k as f32,
+                op.count as f32,
+                op.flops as f32,
+                op.bytes as f32,
+                op.comm_bytes as f32,
+            ];
+        }
+    }
+    tbl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_flops_match_analytic() {
+        let w = GPT3_175B;
+        let total: f64 = prefill_ops(&w)
+            .iter()
+            .filter(|o| o.kind == OpKind::Matmul)
+            .map(|o| o.flops)
+            .sum();
+        let t = (w.batch * w.prefill_seq) as f64;
+        let d = w.d_model as f64;
+        let proj =
+            2.0 * t * (4.0 * d * d + 2.0 * d * w.d_ffn as f64) / w.tp as f64;
+        let attn = 2.0
+            * 2.0
+            * (w.batch * w.heads_local()) as f64
+            * (w.prefill_seq * w.prefill_seq) as f64
+            * w.d_head as f64;
+        let err = (total - (proj + attn)).abs() / (proj + attn);
+        assert!(err < 1e-12, "err={err}");
+    }
+
+    #[test]
+    fn decode_is_much_cheaper_than_prefill() {
+        let w = GPT3_175B;
+        let pf: f64 = prefill_ops(&w).iter().map(|o| o.flops).sum();
+        let dc: f64 = decode_ops(&w).iter().map(|o| o.flops).sum();
+        assert!(dc < pf / 500.0);
+    }
+
+    #[test]
+    fn table_padding_and_layout() {
+        let tbl = op_table(&GPT3_175B);
+        let n_pf = prefill_ops(&GPT3_175B).len();
+        for p in 0..N_PHASES {
+            for (i, row) in tbl[p].iter().enumerate() {
+                let live = if p == 0 {
+                    i < n_pf
+                } else {
+                    i < decode_ops(&GPT3_175B).len()
+                };
+                if live {
+                    assert!(row[0] >= 0.0);
+                } else {
+                    assert_eq!(row[0], -1.0);
+                    assert!(row[1..].iter().all(|&v| v == 0.0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_ring_factor() {
+        let w = GPT3_175B;
+        let ops = prefill_ops(&w);
+        let ar: Vec<&Op> =
+            ops.iter().filter(|o| o.kind == OpKind::Comm).collect();
+        assert_eq!(ar.len(), 2);
+        let raw =
+            (w.batch * w.prefill_seq * w.d_model) as f64 * 2.0;
+        let want = raw * 2.0 * 7.0 / 8.0;
+        assert!((ar[0].comm_bytes - want).abs() < 1.0);
+    }
+
+    #[test]
+    fn kv_length_tracks_decode_pos() {
+        let mut w = GPT3_175B;
+        let b0 = decode_ops(&w)[2].bytes;
+        w.decode_pos *= 2;
+        let b1 = decode_ops(&w)[2].bytes;
+        assert!(b1 > b0);
+    }
+
+    #[test]
+    fn op_names_are_unique_within_phase() {
+        for ops in [prefill_ops(&GPT3_175B), decode_ops(&GPT3_175B)] {
+            let mut names: Vec<&str> =
+                ops.iter().map(|o| o.name).collect();
+            names.sort();
+            names.dedup();
+            assert_eq!(names.len(), ops.len());
+        }
+    }
+}

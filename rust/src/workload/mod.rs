@@ -1,0 +1,14 @@
+//! GPT-3 inference workload (runtime copy).
+//!
+//! Mirrors `python/compile/workload.py`: the same per-layer operator
+//! tables for prefill/decode, used by the Rust roofline mirror, the
+//! detailed compass simulator, and the benchmark question generators.
+//! The artifact bakes the Python copy in as constants; the cross-check
+//! test compares both.
+
+pub mod gpt3;
+
+pub use gpt3::{
+    decode_ops, op_table, prefill_ops, Op, OpKind, WorkloadSpec, GPT3_175B,
+    GPT3_TINY, MAX_OPS, N_PHASES,
+};

@@ -1,0 +1,122 @@
+//! Integration tests across the AOT boundary: the lowered JAX/Pallas
+//! artifact (executed through the PJRT CPU client) must agree with the
+//! Rust mirror of the same model on random designs — this pins the
+//! Python and Rust copies of the shared constants/workload together.
+//!
+//! Requires `make artifacts` (the Makefile sequences it before
+//! `cargo test`). Tests are skipped gracefully when artifacts are absent
+//! so plain `cargo test` still passes in a fresh checkout.
+
+use lumina::design::{sample, DesignPoint, DesignSpace};
+use lumina::eval::Evaluator;
+use lumina::runtime::{ArtifactDir, PjrtEvaluator};
+use lumina::sim::RooflineSim;
+use lumina::stats::Pcg32;
+use lumina::workload::GPT3_175B;
+
+fn pjrt() -> Option<PjrtEvaluator> {
+    match PjrtEvaluator::open_default() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping PJRT test (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn assert_close(a: f32, b: f32, rtol: f32, what: &str) {
+    let denom = b.abs().max(1e-12);
+    assert!(
+        (a - b).abs() / denom < rtol,
+        "{what}: pjrt={a} mirror={b}"
+    );
+}
+
+#[test]
+fn artifact_matches_rust_mirror_on_random_designs() {
+    let Some(mut pjrt) = pjrt() else { return };
+    let mut mirror = RooflineSim::new(GPT3_175B);
+    let space = DesignSpace::table1();
+    let mut rng = Pcg32::new(4242);
+    let designs = sample::uniform_batch(&space, &mut rng, 192);
+
+    let got = pjrt.eval_batch(&designs).unwrap();
+    let want = mirror.eval_batch(&designs).unwrap();
+    for ((d, g), w) in designs.iter().zip(&got).zip(&want) {
+        assert_close(g.ttft_ms, w.ttft_ms, 1e-4, &format!("ttft {d}"));
+        assert_close(g.tpot_ms, w.tpot_ms, 1e-4, &format!("tpot {d}"));
+        assert_close(g.area_mm2, w.area_mm2, 1e-4, &format!("area {d}"));
+        for p in 0..2 {
+            for c in 0..3 {
+                let (a, b) = (g.stalls[p][c], w.stalls[p][c]);
+                if b.abs() > 1e-6 {
+                    assert_close(
+                        a,
+                        b,
+                        1e-3,
+                        &format!("stall[{p}][{c}] {d}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn artifact_a100_reference_values() {
+    let Some(mut pjrt) = pjrt() else { return };
+    let m = pjrt.eval(&DesignPoint::a100()).unwrap();
+    // Values pinned by the python oracle (see python/tests).
+    assert!((m.ttft_ms - 36.70556).abs() / 36.70556 < 1e-4, "{m:?}");
+    assert!((m.tpot_ms - 0.4424397).abs() / 0.4424397 < 1e-4);
+    assert!((m.area_mm2 - 833.9728).abs() / 833.9728 < 1e-4);
+}
+
+#[test]
+fn artifact_batch_padding_and_chunking() {
+    let Some(mut pjrt) = pjrt() else { return };
+    let mut mirror = RooflineSim::new(GPT3_175B);
+    let space = DesignSpace::table1();
+    let mut rng = Pcg32::new(99);
+    // Odd sizes force padding (to 64) and chunking (past 256).
+    for n in [1usize, 3, 63, 65, 300] {
+        let designs = sample::uniform_batch(&space, &mut rng, n);
+        let got = pjrt.eval_batch(&designs).unwrap();
+        let want = mirror.eval_batch(&designs).unwrap();
+        assert_eq!(got.len(), n);
+        for (g, w) in got.iter().zip(&want) {
+            assert_close(g.ttft_ms, w.ttft_ms, 1e-4, "padded ttft");
+        }
+    }
+}
+
+#[test]
+fn artifact_meta_describes_gpt3() {
+    let Some(_) = pjrt() else { return };
+    let art = ArtifactDir::open_default().unwrap();
+    assert_eq!(art.workload, "gpt3-175b");
+    assert_eq!(art.n_params, 8);
+    assert!(art.batches.contains_key(&1));
+    assert!(art.batches.contains_key(&64));
+}
+
+#[test]
+fn full_race_through_pjrt_smoke() {
+    // End-to-end: a small 6-method race where every evaluation flows
+    // through the compiled artifact.
+    if pjrt().is_none() {
+        return;
+    }
+    use lumina::figures::race::{run_race, EvaluatorKind, RaceConfig};
+    let results = run_race(&RaceConfig {
+        samples: 30,
+        trials: 1,
+        seed: 3,
+        evaluator: EvaluatorKind::RooflinePjrt,
+    })
+    .unwrap();
+    assert_eq!(results.len(), 6);
+    for r in &results {
+        assert_eq!(r.trajectory.len(), 30);
+    }
+}
