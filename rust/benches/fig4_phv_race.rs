@@ -7,7 +7,10 @@
 //! Output: stdout summary + `out/fig4_phv_race.csv`.
 
 use lumina::csv_row;
-use lumina::figures::race::{aggregate, run_race, EvaluatorKind, RaceConfig};
+use lumina::figures::race::{
+    aggregate, phv_curve, reference_objectives, run_race, EvaluatorKind,
+    RaceConfig,
+};
 use lumina::util::bench::section;
 use lumina::util::csv::Csv;
 
@@ -74,4 +77,19 @@ fn main() {
     }
     csv.write("out/fig4_phv_race.csv").unwrap();
     println!("wrote out/fig4_phv_race.csv");
+
+    // Per-step PHV race curves (trial 0 of each method) for the
+    // convergence plot, via the incremental archive.
+    let reference = reference_objectives(cfg.evaluator)
+        .expect("reference evaluation failed");
+    let mut curves = Csv::new(&["method", "step", "phv"]);
+    for r in results.iter().filter(|r| r.trial == 0) {
+        for (step, phv) in
+            phv_curve(&r.trajectory, &reference).iter().enumerate()
+        {
+            curves.row(csv_row![r.method, step, format!("{phv:.6}")]);
+        }
+    }
+    curves.write("out/fig4_phv_curves.csv").unwrap();
+    println!("wrote out/fig4_phv_curves.csv");
 }

@@ -1,15 +1,22 @@
 //! §Perf hot-path microbenchmarks: the batched PJRT roofline evaluator
-//! (the system's compute hot-spot), the Rust-mirror evaluator, the
-//! detailed compass simulator, the PHV kernel, and a full LUMINA
-//! iteration. Records the numbers EXPERIMENTS.md §Perf tracks.
+//! (the system's compute hot-spot), the Rust-mirror evaluator (sequential
+//! and batch-parallel), the detailed compass simulator (sequential,
+//! batch-parallel and memoized), the PHV kernel (batch and incremental
+//! archive), and a full LUMINA iteration. Records the numbers
+//! EXPERIMENTS.md §Perf tracks.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 
 use lumina::baselines::DseMethod;
 use lumina::design::{sample, DesignPoint, DesignSpace};
-use lumina::eval::{BudgetedEvaluator, Evaluator};
+use lumina::eval::parallel::default_threads;
+use lumina::eval::{
+    BudgetedEvaluator, CachedEvaluator, Evaluator, ParallelEvaluator,
+};
 use lumina::lumina::Lumina;
-use lumina::pareto::{hypervolume, normalize, Objectives, PHV_REF};
+use lumina::pareto::{
+    hypervolume, normalize, Objectives, ParetoArchive, PHV_REF,
+};
 use lumina::runtime::PjrtEvaluator;
 use lumina::sim::{CompassSim, RooflineSim};
 use lumina::stats::Pcg32;
@@ -26,7 +33,10 @@ fn main() {
     let mut csv =
         Csv::new(&["bench", "mean_s", "throughput_per_s"]);
 
-    section("Perf: evaluator hot paths");
+    section(&format!(
+        "Perf: evaluator hot paths ({} hardware threads)",
+        default_threads()
+    ));
 
     // --- PJRT batched artifact (the production path).
     match PjrtEvaluator::open_default() {
@@ -54,7 +64,7 @@ fn main() {
         Err(e) => println!("(skipping PJRT benches: {e})"),
     }
 
-    // --- Rust mirror.
+    // --- Rust mirror, sequential.
     let mut mirror = RooflineSim::new(GPT3_175B);
     let r = bench("rust roofline eval, batch=256", 2, 50, || {
         let _ = mirror.eval_batch(&batch).unwrap();
@@ -65,11 +75,50 @@ fn main() {
         format!("{:.0}", r.throughput(256.0))
     ]);
 
-    // --- Detailed simulator.
+    // --- Rust mirror, batch-parallel.
+    let mut par_mirror =
+        ParallelEvaluator::new(RooflineSim::new(GPT3_175B));
+    let r =
+        bench("rust roofline eval (parallel), batch=256", 2, 50, || {
+            let _ = par_mirror.eval_batch(&batch).unwrap();
+        });
+    csv.row(csv_row![
+        r.name,
+        format!("{:.6e}", r.mean_s),
+        format!("{:.0}", r.throughput(256.0))
+    ]);
+
+    // --- Detailed simulator, sequential.
     let mut compass = CompassSim::gpt3();
     let r = bench("compass detailed eval, batch=256", 2, 20, || {
         let _ = compass.eval_batch(&batch).unwrap();
     });
+    csv.row(csv_row![
+        r.name,
+        format!("{:.6e}", r.mean_s),
+        format!("{:.0}", r.throughput(256.0))
+    ]);
+
+    // --- Detailed simulator, batch-parallel.
+    let mut par_compass = ParallelEvaluator::new(CompassSim::gpt3());
+    let r =
+        bench("compass detailed eval (parallel), batch=256", 2, 20, || {
+            let _ = par_compass.eval_batch(&batch).unwrap();
+        });
+    csv.row(csv_row![
+        r.name,
+        format!("{:.6e}", r.mean_s),
+        format!("{:.0}", r.throughput(256.0))
+    ]);
+
+    // --- Detailed simulator behind a warm memo cache (the BO/GA/ACO
+    // revisit path: every design served from the map).
+    let mut cached = CachedEvaluator::new(CompassSim::gpt3());
+    let _ = cached.eval_batch(&batch).unwrap();
+    let r =
+        bench("compass cached eval (warm), batch=256", 2, 50, || {
+            let _ = cached.eval_batch(&batch).unwrap();
+        });
     csv.row(csv_row![
         r.name,
         format!("{:.6e}", r.mean_s),
@@ -90,6 +139,21 @@ fn main() {
     let r = bench("hypervolume, n=1000", 2, 20, || {
         let hv = hypervolume(&normalized, &PHV_REF);
         std::hint::black_box(hv);
+    });
+    csv.row(csv_row![
+        r.name,
+        format!("{:.6e}", r.mean_s),
+        format!("{:.2}", r.throughput(1.0))
+    ]);
+
+    // --- Incremental archive over the same 1,000-point trajectory
+    // (all n per-step PHV values, not just the final one).
+    let r = bench("pareto archive push+phv, n=1000", 2, 20, || {
+        let mut archive = ParetoArchive::new(PHV_REF);
+        for o in &normalized {
+            archive.push(*o);
+        }
+        std::hint::black_box(archive.hypervolume());
     });
     csv.row(csv_row![
         r.name,

@@ -40,6 +40,12 @@ pub fn score(
 /// Run the full benchmark (all three tasks, original + enhanced prompts)
 /// for the given model profiles. `scale` in (0, 1] shrinks the question
 /// counts proportionally for quick runs.
+///
+/// Model cells are independent (each builds its own seeded analysts), so
+/// profiles are scored on parallel scoped threads; each worker writes
+/// only its own row, keeping the report order — and, because the analyst
+/// seeds depend only on `seed` — the scores bit-identical to the
+/// sequential loop.
 pub fn run_benchmark(
     profiles: &[ModelProfile],
     seed: u64,
@@ -55,28 +61,46 @@ pub fn run_benchmark(
         .collect();
 
     let enhanced_system = prompts::system_enhanced();
-    let mut rows = Vec::new();
-    for profile in profiles {
-        let mut accs = Vec::new();
-        for set in &sets {
-            let mut m_orig =
-                SimulatedAnalyst::new(*profile, seed ^ 0x0f1);
-            let original =
-                score(&mut m_orig, prompts::SYSTEM_DEFAULT, &set.questions);
-            let mut m_enh =
-                SimulatedAnalyst::new(*profile, seed ^ 0x0f2);
-            let enhanced =
-                score(&mut m_enh, &enhanced_system, &set.questions);
-            accs.push(TaskAccuracy {
-                task: set.task,
-                original,
-                enhanced,
-                n: set.questions.len(),
+    let score_profile = |profile: &ModelProfile| -> Vec<TaskAccuracy> {
+        sets.iter()
+            .map(|set| {
+                let mut m_orig =
+                    SimulatedAnalyst::new(*profile, seed ^ 0x0f1);
+                let original = score(
+                    &mut m_orig,
+                    prompts::SYSTEM_DEFAULT,
+                    &set.questions,
+                );
+                let mut m_enh =
+                    SimulatedAnalyst::new(*profile, seed ^ 0x0f2);
+                let enhanced =
+                    score(&mut m_enh, &enhanced_system, &set.questions);
+                TaskAccuracy {
+                    task: set.task,
+                    original,
+                    enhanced,
+                    n: set.questions.len(),
+                }
+            })
+            .collect()
+    };
+
+    let mut rows: Vec<Option<(String, Vec<TaskAccuracy>)>> =
+        profiles.iter().map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (slot, profile) in rows.iter_mut().zip(profiles) {
+            let score_profile = &score_profile;
+            s.spawn(move || {
+                *slot = Some((profile.name.to_string(), score_profile(profile)));
             });
         }
-        rows.push((profile.name.to_string(), accs));
+    });
+    BenchmarkReport {
+        rows: rows
+            .into_iter()
+            .map(|r| r.expect("every profile row is scored"))
+            .collect(),
     }
-    BenchmarkReport { rows }
 }
 
 impl BenchmarkReport {

@@ -1,0 +1,157 @@
+//! Minimal error substrate (`anyhow` is unavailable offline).
+//!
+//! Mirrors the subset of the `anyhow` API this crate uses: a
+//! message-chaining [`Error`], the [`err!`](crate::err)/[`bail!`](crate::bail)
+//! macros, and a [`Context`] extension trait for `Result` and `Option`.
+//! Like `anyhow::Error`, [`Error`] deliberately does **not** implement
+//! `std::error::Error` so the blanket `From<E: std::error::Error>`
+//! conversion stays coherent.
+
+use std::fmt;
+
+/// An error with a chain of context messages, outermost first.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string(), cause: None }
+    }
+
+    /// Wrap this error in an outer context message.
+    pub fn context(self, msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string(), cause: Some(Box::new(self)) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut at = self.cause.as_deref();
+        while let Some(e) = at {
+            write!(f, ": {}", e.msg)?;
+            at = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Construct an [`Error`] from a format string (the `anyhow!` analogue).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> crate::Result<T>;
+    fn with_context<C, F>(self, f: F) -> crate::Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> crate::Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> crate::Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> crate::Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> crate::Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_chains_context_outermost_first() {
+        let e = Error::msg("inner").context("mid").context("outer");
+        assert_eq!(e.to_string(), "outer: mid: inner");
+        assert_eq!(format!("{e:?}"), "outer: mid: inner");
+    }
+
+    #[test]
+    fn from_std_error_via_question_mark() {
+        fn f() -> crate::Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("gone"));
+    }
+
+    #[test]
+    fn result_and_option_context() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading meta").unwrap_err();
+        assert_eq!(e.to_string(), "reading meta: gone");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+
+        let ok: Option<u32> = Some(3);
+        assert_eq!(ok.context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_and_err_macros() {
+        fn f(fail: bool) -> crate::Result<u32> {
+            if fail {
+                bail!("boom {}", 42);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap_err().to_string(), "boom 42");
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(err!("x={}", 2).to_string(), "x=2");
+    }
+}

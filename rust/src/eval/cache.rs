@@ -1,0 +1,160 @@
+//! Design-point memoization: the Table-1 space is a discrete grid, so a
+//! [`DesignPoint`] hashes exactly and revisits (BO re-probing incumbents,
+//! GA elitism, ACO trail reinforcement, LUMINA restarts) can be served
+//! from a map instead of re-running the simulator.
+//!
+//! [`CachedEvaluator`] wraps any [`Evaluator`]; unique uncached designs
+//! of a batch are forwarded to the inner evaluator in first-appearance
+//! order (so inner results stay deterministic), then every requested
+//! design — duplicates included — is assembled from the map in input
+//! order. Hit/miss counters feed [`BudgetedEvaluator`]'s accounting:
+//! hits never burn sample budget.
+//!
+//! [`BudgetedEvaluator`]: crate::eval::BudgetedEvaluator
+
+use std::collections::{HashMap, HashSet};
+
+use crate::design::DesignPoint;
+use crate::eval::{CacheCounters, Evaluator, Metrics};
+use crate::Result;
+
+/// Memoizing adapter over any evaluator.
+#[derive(Debug)]
+pub struct CachedEvaluator<E> {
+    inner: E,
+    map: HashMap<DesignPoint, Metrics>,
+    counters: CacheCounters,
+}
+
+impl<E: Evaluator> CachedEvaluator<E> {
+    pub fn new(inner: E) -> Self {
+        Self { inner, map: HashMap::new(), counters: CacheCounters::default() }
+    }
+
+    /// Lookup counters since construction.
+    pub fn counters(&self) -> CacheCounters {
+        self.counters
+    }
+
+    /// Distinct design points memoized.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> E {
+        self.inner
+    }
+
+    /// Drop all memoized entries (counters are kept).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+impl<E: Evaluator> Evaluator for CachedEvaluator<E> {
+    fn eval_batch(&mut self, designs: &[DesignPoint]) -> Result<Vec<Metrics>> {
+        // Unique uncached designs, in first-appearance order.
+        let mut fresh: Vec<DesignPoint> = Vec::new();
+        let mut seen: HashSet<DesignPoint> = HashSet::new();
+        for d in designs {
+            if !self.map.contains_key(d) && seen.insert(*d) {
+                fresh.push(*d);
+            }
+        }
+        if !fresh.is_empty() {
+            let ms = self.inner.eval_batch(&fresh)?;
+            debug_assert_eq!(ms.len(), fresh.len());
+            for (d, m) in fresh.iter().zip(ms) {
+                self.map.insert(*d, m);
+            }
+        }
+        self.counters.misses += fresh.len() as u64;
+        self.counters.hits += (designs.len() - fresh.len()) as u64;
+        Ok(designs.iter().map(|d| self.map[d]).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn is_cached(&self, d: &DesignPoint) -> bool {
+        self.map.contains_key(d)
+    }
+
+    fn cache_counters(&self) -> Option<CacheCounters> {
+        Some(self.counters)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design::Param;
+
+    /// Counts inner invocations per design to prove memoization.
+    struct CountingEval {
+        calls: usize,
+    }
+
+    impl Evaluator for CountingEval {
+        fn eval_batch(
+            &mut self,
+            designs: &[DesignPoint],
+        ) -> Result<Vec<Metrics>> {
+            self.calls += designs.len();
+            Ok(designs
+                .iter()
+                .map(|d| Metrics {
+                    ttft_ms: d.get(Param::Cores) as f32,
+                    tpot_ms: 0.5,
+                    area_mm2: 100.0,
+                    stalls: [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0]],
+                })
+                .collect())
+        }
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+    }
+
+    #[test]
+    fn memoizes_and_counts() {
+        let mut c = CachedEvaluator::new(CountingEval { calls: 0 });
+        let a = DesignPoint::a100();
+        let b = a.with(Param::Cores, 64);
+        // Batch with an in-batch duplicate: inner sees each unique once.
+        let got = c.eval_batch(&[a, b, a]).unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0], got[2]);
+        assert_eq!(c.inner().calls, 2);
+        assert_eq!(c.counters(), CacheCounters { hits: 1, misses: 2 });
+        assert!(c.is_cached(&a) && c.is_cached(&b));
+        // Full revisit: zero inner calls.
+        let again = c.eval_batch(&[b, a]).unwrap();
+        assert_eq!(again, vec![got[1], got[0]]);
+        assert_eq!(c.inner().calls, 2);
+        assert_eq!(c.counters(), CacheCounters { hits: 3, misses: 2 });
+        assert!((c.counters().hit_rate() - 0.6).abs() < 1e-12);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn clear_forgets_entries_but_keeps_counters() {
+        let mut c = CachedEvaluator::new(CountingEval { calls: 0 });
+        let a = DesignPoint::a100();
+        c.eval_batch(&[a]).unwrap();
+        c.clear();
+        assert!(c.is_empty());
+        assert!(!c.is_cached(&a));
+        c.eval_batch(&[a]).unwrap();
+        assert_eq!(c.counters().misses, 2);
+    }
+}

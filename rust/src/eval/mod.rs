@@ -1,14 +1,37 @@
-//! Evaluation façade: metrics, bottleneck/critical-path types, and the
-//! `Evaluator` trait every DSE method drives.
+//! Evaluation façade: metrics, bottleneck/critical-path types, the
+//! evaluator traits every DSE method drives, and the throughput pipeline
+//! built on top of them.
 //!
-//! Three implementations exist:
+//! Two traits split the evaluation contract:
+//! * [`EvalOne`] — the pure, thread-safe per-design function
+//!   (`&self`, `Send + Sync`); implemented by the simulators.
+//! * [`Evaluator`] — the stateful batch API (`&mut self`) used through
+//!   trait objects by the races and the CLI.
+//!
+//! Pipeline adapters compose over them:
+//! * [`parallel::ParallelEvaluator`] — shards `eval_batch` across scoped
+//!   threads with deterministic input-order assembly (bit-identical to
+//!   the sequential path),
+//! * [`cache::CachedEvaluator`] — design-point-keyed memoization with
+//!   hit/miss counters; [`BudgetedEvaluator`] charges the sample budget
+//!   only for cache misses,
+//! * [`BudgetedEvaluator`] — budget enforcement + trajectory logging so
+//!   "number of samples" means the same thing for every method.
+//!
+//! Backend implementations:
 //! * [`crate::runtime::PjrtEvaluator`] — the AOT roofline artifact
-//!   executed through PJRT (the production hot path),
+//!   executed through PJRT (the production hot path; `pjrt` feature),
 //! * [`crate::sim::roofline::RooflineSim`] — bit-level Rust mirror of the
 //!   same model (test oracle + fallback when artifacts are absent),
 //! * [`crate::sim::compass::CompassSim`] — the detailed LLMCompass-class
 //!   simulator with tile-level critical-path analysis (the "expensive"
 //!   evaluator of the paper's 20-sample study).
+
+pub mod cache;
+pub mod parallel;
+
+pub use cache::CachedEvaluator;
+pub use parallel::ParallelEvaluator;
 
 use std::fmt;
 
@@ -123,7 +146,46 @@ impl Metrics {
     }
 }
 
-/// A design-point evaluator ("simulation environment" in the paper).
+/// The pure per-design evaluation function: no mutable state, safe to
+/// call from many threads at once. Both analytical simulators implement
+/// this; [`ParallelEvaluator`] shards batches over it.
+pub trait EvalOne: Send + Sync {
+    /// Evaluate a single design (pure function of the design vector).
+    fn eval_one(&self, d: &DesignPoint) -> Metrics;
+
+    /// Short name for reports ("roofline-rs", "compass"). Named `label`
+    /// (not `name`) so types implementing both traits stay unambiguous.
+    fn label(&self) -> &'static str;
+}
+
+/// Ceiling on budget-free cache hits in a [`BudgetedEvaluator`]: the
+/// trajectory log may grow to at most `HIT_LOG_FACTOR * budget` entries
+/// before the evaluator reports exhaustion regardless of unspent miss
+/// budget. Plain (non-caching) evaluators never get near it — their log
+/// length equals their spend.
+pub const HIT_LOG_FACTOR: usize = 16;
+
+/// Cache hit/miss counters reported by memoizing evaluators.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheCounters {
+    /// Fraction of lookups served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A design-point evaluator ("simulation environment" in the paper) —
+/// the stateful batch API the DSE race drives through trait objects.
 pub trait Evaluator {
     /// Evaluate a batch of designs. Order of results matches input order.
     fn eval_batch(&mut self, designs: &[DesignPoint]) -> Result<Vec<Metrics>>;
@@ -135,23 +197,75 @@ pub trait Evaluator {
     fn eval(&mut self, d: &DesignPoint) -> Result<Metrics> {
         Ok(self.eval_batch(std::slice::from_ref(d))?[0])
     }
+
+    /// True when `d` would be served from a memo cache without invoking
+    /// the underlying simulator (see [`CachedEvaluator`]).
+    fn is_cached(&self, _d: &DesignPoint) -> bool {
+        false
+    }
+
+    /// Memoization counters, when this evaluator caches.
+    fn cache_counters(&self) -> Option<CacheCounters> {
+        None
+    }
+}
+
+/// Boxed evaluators delegate, so pipeline adapters compose over
+/// `Box<dyn Evaluator>` (e.g. `CachedEvaluator::new(kind.make())`).
+impl<E: Evaluator + ?Sized> Evaluator for Box<E> {
+    fn eval_batch(&mut self, designs: &[DesignPoint]) -> Result<Vec<Metrics>> {
+        (**self).eval_batch(designs)
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn eval(&mut self, d: &DesignPoint) -> Result<Metrics> {
+        (**self).eval(d)
+    }
+
+    fn is_cached(&self, d: &DesignPoint) -> bool {
+        (**self).is_cached(d)
+    }
+
+    fn cache_counters(&self) -> Option<CacheCounters> {
+        (**self).cache_counters()
+    }
 }
 
 /// Wrapper that enforces a sample budget and records every evaluation —
 /// the bookkeeping layer the DSE race uses so "number of samples" means
 /// the same thing for every method.
+///
+/// Budget semantics: one unit of budget is one *simulator invocation*.
+/// When the inner evaluator memoizes (see [`CachedEvaluator`]), cache
+/// hits are logged into the trajectory but charge nothing — revisiting a
+/// known point is free, exactly like the paper's "samples" accounting
+/// counts expensive simulations. An exhausted budget stops all further
+/// evaluation (including hits), and free hits are additionally bounded
+/// by [`HIT_LOG_FACTOR`] so that `while !exhausted()` search loops
+/// terminate even when a converged method proposes only cached points.
 pub struct BudgetedEvaluator<'a> {
     inner: &'a mut dyn Evaluator,
     pub budget: usize,
     pub log: Vec<(DesignPoint, Metrics)>,
+    /// Budget units consumed (simulator invocations, not log entries).
+    charged: usize,
 }
 
 impl<'a> BudgetedEvaluator<'a> {
     pub fn new(inner: &'a mut dyn Evaluator, budget: usize) -> Self {
-        Self { inner, budget, log: Vec::new() }
+        Self { inner, budget, log: Vec::new(), charged: 0 }
     }
 
+    /// Budget units consumed so far (cache hits excluded).
     pub fn spent(&self) -> usize {
+        self.charged
+    }
+
+    /// Total evaluations logged (cache hits included).
+    pub fn evaluations(&self) -> usize {
         self.log.len()
     }
 
@@ -159,21 +273,60 @@ impl<'a> BudgetedEvaluator<'a> {
         self.budget.saturating_sub(self.spent())
     }
 
+    /// True once no further evaluation is allowed: the miss budget is
+    /// spent, or free cache hits have grown the log to the
+    /// [`HIT_LOG_FACTOR`] ceiling (the termination backstop for search
+    /// loops whose every proposal hits the memo cache).
     pub fn exhausted(&self) -> bool {
         self.remaining() == 0
+            || self.log.len()
+                >= self.budget.saturating_mul(HIT_LOG_FACTOR)
+    }
+
+    /// Inner evaluator's memoization counters, when it caches.
+    pub fn cache_counters(&self) -> Option<CacheCounters> {
+        self.inner.cache_counters()
     }
 
     /// Evaluate as many of `designs` as the budget allows; returns the
-    /// evaluated prefix.
+    /// evaluated prefix. Cached designs inside the prefix ride free.
     pub fn eval_batch(
         &mut self,
         designs: &[DesignPoint],
     ) -> Result<Vec<(DesignPoint, Metrics)>> {
-        let take = designs.len().min(self.remaining());
+        let remaining = self.remaining();
+        if self.exhausted() || designs.is_empty() {
+            return Ok(Vec::new());
+        }
+        // Longest prefix whose (conservatively estimated) simulator
+        // misses fit the remaining budget. Duplicates of an uncached
+        // design within one batch are each counted as a miss here; the
+        // actual charge below uses the inner counters when available.
+        let mut take = 0usize;
+        let mut est_misses = 0usize;
+        for d in designs {
+            if self.inner.is_cached(d) {
+                take += 1;
+                continue;
+            }
+            if est_misses == remaining {
+                break;
+            }
+            est_misses += 1;
+            take += 1;
+        }
         if take == 0 {
             return Ok(Vec::new());
         }
+        let before = self.inner.cache_counters();
         let ms = self.inner.eval_batch(&designs[..take])?;
+        let charged = match (before, self.inner.cache_counters()) {
+            (Some(b), Some(a)) => {
+                (a.misses.saturating_sub(b.misses) as usize).min(est_misses)
+            }
+            _ => est_misses,
+        };
+        self.charged += charged;
         let pairs: Vec<(DesignPoint, Metrics)> =
             designs[..take].iter().copied().zip(ms).collect();
         self.log.extend(pairs.iter().copied());
@@ -244,7 +397,58 @@ mod tests {
         assert!(be.exhausted());
         assert_eq!(be.eval(&DesignPoint::a100()).unwrap(), None);
         assert_eq!(be.log.len(), 3);
+        assert_eq!(be.evaluations(), 3);
         assert_eq!(inner.0, 3);
+    }
+
+    #[test]
+    fn cache_hits_do_not_burn_budget() {
+        use crate::design::Param;
+        let mut inner = CachedEvaluator::new(StubEval(0));
+        let a = DesignPoint::a100();
+        let b = a.with(Param::Cores, 64);
+        let c = a.with(Param::Cores, 32);
+        let mut be = BudgetedEvaluator::new(&mut inner, 2);
+        // First visit: a miss, charged.
+        assert!(be.eval(&a).unwrap().is_some());
+        assert_eq!(be.spent(), 1);
+        // Revisit: a hit, logged but free.
+        assert!(be.eval(&a).unwrap().is_some());
+        assert_eq!(be.spent(), 1);
+        assert_eq!(be.evaluations(), 2);
+        // Mixed batch: cached `a` rides free, `b` charges the last unit,
+        // `c` falls off the end of the budgeted prefix.
+        let got = be.eval_batch(&[a, b, c]).unwrap();
+        assert_eq!(got.len(), 2);
+        assert!(be.exhausted());
+        // Exhausted budget stops everything, even cached points.
+        assert_eq!(be.eval(&a).unwrap(), None);
+        let counters = be.cache_counters().unwrap();
+        assert_eq!(counters.misses, 2);
+        assert_eq!(counters.hits, 2);
+    }
+
+    #[test]
+    fn free_hits_are_bounded_so_search_loops_terminate() {
+        // A converged method that proposes only cached points must still
+        // see `exhausted()` flip: free hits stop at HIT_LOG_FACTOR x
+        // budget log entries.
+        let mut inner = CachedEvaluator::new(StubEval(0));
+        let mut be = BudgetedEvaluator::new(&mut inner, 2);
+        let d = DesignPoint::a100();
+        let mut steps = 0usize;
+        while !be.exhausted() {
+            // One miss, then hits forever: budget never reaches 0.
+            assert!(be.eval(&d).unwrap().is_some());
+            steps += 1;
+            assert!(
+                steps <= 2 * HIT_LOG_FACTOR,
+                "loop failed to terminate"
+            );
+        }
+        assert_eq!(be.spent(), 1);
+        assert_eq!(be.evaluations(), 2 * HIT_LOG_FACTOR);
+        assert_eq!(steps, 2 * HIT_LOG_FACTOR);
     }
 
     #[test]

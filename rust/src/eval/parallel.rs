@@ -1,0 +1,143 @@
+//! Batch-parallel evaluation: shard `eval_batch` across scoped worker
+//! threads with deterministic, input-order result assembly.
+//!
+//! Workers split the input into contiguous chunks; chunk `i` of the
+//! output is written only by worker `i`, so assembly order never depends
+//! on thread scheduling and results are **bit-identical** to the
+//! sequential path (each design is evaluated by the same pure
+//! [`EvalOne::eval_one`] either way — see
+//! `tests/eval_pipeline.rs::parallel_matches_sequential_bitwise`).
+
+use crate::design::DesignPoint;
+use crate::eval::{EvalOne, Evaluator, Metrics};
+use crate::Result;
+
+/// Batches smaller than this run sequentially: scoped-thread spawn
+/// overhead (~10us/worker) would dominate sub-millisecond batches.
+const MIN_PARALLEL_BATCH: usize = 8;
+
+/// Worker count used by [`ParallelEvaluator::new`]: every available
+/// hardware thread.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Adapter that evaluates batches of a pure [`EvalOne`] evaluator in
+/// parallel. Single-design calls stay on the caller's thread.
+#[derive(Debug, Clone)]
+pub struct ParallelEvaluator<E> {
+    inner: E,
+    threads: usize,
+}
+
+impl<E: EvalOne> ParallelEvaluator<E> {
+    /// Wrap `inner`, using every available hardware thread.
+    pub fn new(inner: E) -> Self {
+        Self::with_threads(inner, default_threads())
+    }
+
+    /// Wrap `inner` with an explicit worker count (1 = sequential).
+    pub fn with_threads(inner: E, threads: usize) -> Self {
+        Self { inner, threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> E {
+        self.inner
+    }
+}
+
+impl<E: EvalOne> EvalOne for ParallelEvaluator<E> {
+    fn eval_one(&self, d: &DesignPoint) -> Metrics {
+        self.inner.eval_one(d)
+    }
+
+    fn label(&self) -> &'static str {
+        self.inner.label()
+    }
+}
+
+impl<E: EvalOne> Evaluator for ParallelEvaluator<E> {
+    fn eval_batch(&mut self, designs: &[DesignPoint]) -> Result<Vec<Metrics>> {
+        Ok(eval_batch_parallel(&self.inner, designs, self.threads))
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.label()
+    }
+}
+
+/// Evaluate `designs` across up to `threads` scoped workers, returning
+/// results in input order. The free-function form lets callers shard
+/// over a shared `&E` without the adapter.
+pub fn eval_batch_parallel<E: EvalOne + ?Sized>(
+    ev: &E,
+    designs: &[DesignPoint],
+    threads: usize,
+) -> Vec<Metrics> {
+    let n = designs.len();
+    let threads = threads.clamp(1, n.max(1));
+    if threads == 1 || n < MIN_PARALLEL_BATCH {
+        return designs.iter().map(|d| ev.eval_one(d)).collect();
+    }
+    // Ceiling division so every worker gets at most `chunk` designs and
+    // the chunk partition of input and output line up exactly.
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<Metrics>> = vec![None; n];
+    std::thread::scope(|s| {
+        for (src, dst) in designs.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            s.spawn(move || {
+                for (d, slot) in src.iter().zip(dst.iter_mut()) {
+                    *slot = Some(ev.eval_one(d));
+                }
+            });
+        }
+    });
+    out.into_iter()
+        .map(|m| m.expect("every output slot is covered by one worker"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design::{sample, DesignSpace};
+    use crate::sim::RooflineSim;
+    use crate::stats::rng::Pcg32;
+    use crate::workload::GPT3_175B;
+
+    #[test]
+    fn matches_sequential_on_small_and_odd_sizes() {
+        let space = DesignSpace::table1();
+        let mut rng = Pcg32::new(17);
+        let sim = RooflineSim::new(GPT3_175B);
+        for n in [0usize, 1, 5, 8, 9, 31] {
+            let ds = sample::uniform_batch(&space, &mut rng, n);
+            let seq: Vec<_> = ds.iter().map(|d| sim.eval_one(d)).collect();
+            for threads in [1usize, 2, 3, 7] {
+                let par = eval_batch_parallel(&sim, &ds, threads);
+                assert_eq!(par, seq, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn adapter_reports_inner_label_and_threads() {
+        let p = ParallelEvaluator::with_threads(
+            RooflineSim::new(GPT3_175B),
+            4,
+        );
+        assert_eq!(p.threads(), 4);
+        assert_eq!(p.label(), "roofline-rs");
+        assert_eq!(Evaluator::name(&p), "roofline-rs");
+        assert_eq!(ParallelEvaluator::with_threads(
+            RooflineSim::new(GPT3_175B), 0).threads(), 1);
+    }
+}

@@ -5,9 +5,9 @@
 
 use crate::baselines::all_methods;
 use crate::design::{DesignPoint, DesignSpace};
-use crate::eval::{BudgetedEvaluator, Evaluator};
+use crate::eval::{BudgetedEvaluator, Evaluator, ParallelEvaluator};
 use crate::pareto::{
-    self, hypervolume, normalize, sample_efficiency, Objectives, PHV_REF,
+    self, normalize, sample_efficiency, Objectives, ParetoArchive, PHV_REF,
 };
 use crate::runtime::PjrtEvaluator;
 use crate::sim::{CompassSim, RooflineSim};
@@ -27,18 +27,33 @@ pub enum EvaluatorKind {
 }
 
 impl EvaluatorKind {
+    /// Build the evaluation pipeline every DSE method drives. The pure
+    /// analytical simulators are wrapped in [`ParallelEvaluator`], which
+    /// shards batches across threads with results bit-identical to the
+    /// sequential path; PJRT does its own artifact-level batching.
+    ///
+    /// Deliberately *not* memoized: the races compare methods under
+    /// identical per-sample accounting, and a cache shared across
+    /// (method, trial) cells would hand later methods free revisits of
+    /// earlier methods' points. Single-method exploration (the CLI
+    /// `explore` command) wraps this in
+    /// [`crate::eval::CachedEvaluator`] instead.
     pub fn make(self) -> Box<dyn Evaluator> {
         match self {
             EvaluatorKind::RooflinePjrt => {
                 match PjrtEvaluator::open_default() {
                     Ok(e) => Box::new(e),
-                    Err(_) => Box::new(RooflineSim::new(GPT3_175B)),
+                    Err(_) => Box::new(ParallelEvaluator::new(
+                        RooflineSim::new(GPT3_175B),
+                    )),
                 }
             }
-            EvaluatorKind::RooflineRust => {
-                Box::new(RooflineSim::new(GPT3_175B))
+            EvaluatorKind::RooflineRust => Box::new(
+                ParallelEvaluator::new(RooflineSim::new(GPT3_175B)),
+            ),
+            EvaluatorKind::Compass => {
+                Box::new(ParallelEvaluator::new(CompassSim::gpt3()))
             }
-            EvaluatorKind::Compass => Box::new(CompassSim::gpt3()),
         }
     }
 }
@@ -118,7 +133,9 @@ pub fn run_race(cfg: &RaceConfig) -> Result<Vec<RaceResult>> {
     Ok(out)
 }
 
-/// Score one trajectory into a RaceResult.
+/// Score one trajectory into a RaceResult. PHV comes from one pass over
+/// an incremental [`ParetoArchive`] rather than a from-scratch
+/// hypervolume of the whole trajectory.
 pub fn score_trajectory(
     method: &'static str,
     trial: usize,
@@ -127,15 +144,40 @@ pub fn score_trajectory(
 ) -> RaceResult {
     let objs: Vec<Objectives> =
         trajectory.iter().map(|(_, o)| *o).collect();
-    let normalized = normalize(&objs, reference);
+    let mut archive = ParetoArchive::new(PHV_REF);
+    for o in normalize(&objs, reference) {
+        archive.push(o);
+    }
     RaceResult {
         method,
         trial,
-        phv: hypervolume(&normalized, &PHV_REF),
+        phv: archive.hypervolume(),
         sample_efficiency: sample_efficiency(&objs, reference),
         superior: pareto::superior_count(&objs, reference),
         trajectory: trajectory.to_vec(),
     }
+}
+
+/// PHV after every step of a trajectory (the Fig. 4 race curves,
+/// written by `benches/fig4_phv_race.rs`), in one incremental pass —
+/// computing each prefix from scratch would cost an O(n^2 log n)
+/// hypervolume per step.
+pub fn phv_curve(
+    trajectory: &[(DesignPoint, Objectives)],
+    reference: &Objectives,
+) -> Vec<f64> {
+    let mut archive = ParetoArchive::new(PHV_REF);
+    trajectory
+        .iter()
+        .map(|(_, o)| {
+            archive.push([
+                o[0] / reference[0],
+                o[1] / reference[1],
+                o[2] / reference[2],
+            ]);
+            archive.hypervolume()
+        })
+        .collect()
 }
 
 /// Aggregate per-method mean PHV / efficiency (Fig. 4's summary points).
@@ -224,5 +266,34 @@ mod tests {
         let r =
             reference_objectives(EvaluatorKind::RooflineRust).unwrap();
         assert!((r[0] - 36.70556).abs() < 0.01);
+    }
+
+    #[test]
+    fn phv_curve_is_monotone_and_ends_at_trajectory_phv() {
+        let cfg = RaceConfig {
+            samples: 60,
+            trials: 1,
+            seed: 13,
+            evaluator: EvaluatorKind::RooflineRust,
+        };
+        let reference =
+            reference_objectives(cfg.evaluator).unwrap();
+        let results = run_race(&cfg).unwrap();
+        for r in &results {
+            let curve = phv_curve(&r.trajectory, &reference);
+            assert_eq!(curve.len(), r.trajectory.len());
+            assert!(
+                curve.windows(2).all(|w| w[1] >= w[0] - 1e-12),
+                "{}: PHV curve not monotone",
+                r.method
+            );
+            let last = *curve.last().unwrap();
+            assert!(
+                (last - r.phv).abs() <= 1e-9 * r.phv.max(1.0),
+                "{}: curve end {last} != scored {phv}",
+                r.method,
+                phv = r.phv
+            );
+        }
     }
 }

@@ -4,7 +4,7 @@
 
 use crate::design::{DesignPoint, Param};
 use crate::eval::{Evaluator, Metrics};
-use crate::pareto::{pareto_front, Objectives};
+use crate::pareto::{Objectives, ParetoArchive};
 use crate::Result;
 
 /// One column of Table 4.
@@ -41,10 +41,14 @@ pub fn pick_top2(
         .filter(|(_, o)| (0..3).all(|i| o[i] < reference[i]))
         .collect();
     if superior.is_empty() {
-        // Fall back to the Pareto front.
-        let objs: Vec<Objectives> =
-            trajectory.iter().map(|(_, o)| *o).collect();
-        return pareto_front(&objs)
+        // Fall back to the Pareto front (incremental archive — ids are
+        // trajectory indices).
+        let mut archive = ParetoArchive::front_only();
+        for (_, o) in trajectory {
+            archive.push(*o);
+        }
+        return archive
+            .front_ids()
             .into_iter()
             .take(2)
             .map(|i| trajectory[i].0)

@@ -22,6 +22,7 @@ pub mod arch;
 pub mod baselines;
 pub mod bench_dse;
 pub mod design;
+pub mod error;
 pub mod eval;
 pub mod figures;
 pub mod llm;
@@ -33,5 +34,5 @@ pub mod stats;
 pub mod util;
 pub mod workload;
 
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result alias (see [`error`] for the `anyhow`-style API).
+pub type Result<T> = std::result::Result<T, error::Error>;

@@ -8,7 +8,7 @@ use std::collections::HashSet;
 
 use crate::design::{DesignPoint, Param};
 use crate::eval::Metrics;
-use crate::pareto::{pareto_front, Objectives};
+use crate::pareto::{Objectives, ParetoArchive};
 
 /// One trajectory entry.
 #[derive(Debug, Clone, Copy)]
@@ -34,6 +34,9 @@ pub struct TrajectoryMemory {
     pub samples: Vec<Sample>,
     seen: HashSet<DesignPoint>,
     failures: Vec<(FailedMove, u32)>,
+    /// Incrementally maintained Pareto front over the samples (ids are
+    /// sample indices) — no per-query O(n^2) front recomputation.
+    archive: ParetoArchive,
 }
 
 impl TrajectoryMemory {
@@ -43,6 +46,8 @@ impl TrajectoryMemory {
 
     pub fn record(&mut self, design: DesignPoint, metrics: Metrics, step: usize) {
         self.seen.insert(design);
+        self.archive
+            .push_with_id(self.samples.len(), metrics.objectives());
         self.samples.push(Sample { design, metrics, step });
     }
 
@@ -107,10 +112,11 @@ impl TrajectoryMemory {
         self.samples.iter().map(|s| s.metrics.objectives()).collect()
     }
 
-    /// Current Pareto-optimal samples.
+    /// Current Pareto-optimal samples (served from the incremental
+    /// archive maintained by [`TrajectoryMemory::record`]).
     pub fn pareto_samples(&self) -> Vec<&Sample> {
-        let objs = self.objectives();
-        pareto_front(&objs)
+        self.archive
+            .front_ids()
             .into_iter()
             .map(|i| &self.samples[i])
             .collect()
@@ -189,6 +195,31 @@ mod tests {
         let front = tm.pareto_samples();
         assert_eq!(front.len(), 1);
         assert_eq!(front[0].design, DesignPoint::paper_design_a());
+    }
+
+    #[test]
+    fn incremental_front_matches_batch_pareto_front() {
+        use crate::pareto::pareto_front;
+        let mut tm = TrajectoryMemory::new();
+        // A zig-zag of improving/worsening samples with a duplicate.
+        let series = [
+            (30.0, 0.40, 800.0),
+            (25.0, 0.45, 820.0),
+            (25.0, 0.45, 820.0),
+            (20.0, 0.50, 700.0),
+            (35.0, 0.39, 900.0),
+            (19.0, 0.41, 650.0),
+        ];
+        for (i, (a, b, c)) in series.iter().enumerate() {
+            tm.record(DesignPoint::a100(), m(*a, *b, *c), i);
+        }
+        let batch = pareto_front(&tm.objectives());
+        let inc: Vec<usize> = tm
+            .pareto_samples()
+            .iter()
+            .map(|s| s.step)
+            .collect();
+        assert_eq!(inc, batch);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use lumina::baselines::DseMethod;
 use lumina::bench_dse::run_benchmark;
 use lumina::design::{DesignPoint, DesignSpace, Param};
-use lumina::eval::{BudgetedEvaluator, Phase};
+use lumina::eval::{BudgetedEvaluator, CachedEvaluator, Evaluator, Phase};
 use lumina::figures::race::{
     aggregate, run_race, score_trajectory, EvaluatorKind, RaceConfig,
 };
@@ -107,9 +107,12 @@ fn cmd_explore(args: &Args) -> lumina::Result<()> {
     let kind = evaluator_kind(args);
     let space = DesignSpace::table1();
 
-    let mut ev = kind.make();
+    // Memoize over the evaluation pipeline: LUMINA restarts and
+    // sensitivity sweeps revisit grid points, and cache hits don't burn
+    // the sample budget.
+    let mut ev = CachedEvaluator::new(kind.make());
     let reference = ev.eval(&DesignPoint::a100())?.objectives();
-    let mut be = BudgetedEvaluator::new(ev.as_mut(), budget);
+    let mut be = BudgetedEvaluator::new(&mut ev, budget);
     let mut lum = Lumina::new(LuminaConfig {
         seed,
         model,
@@ -120,10 +123,13 @@ fn cmd_explore(args: &Args) -> lumina::Result<()> {
     let traj: Vec<_> =
         be.log.iter().map(|(d, m)| (*d, m.objectives())).collect();
     let r = score_trajectory("lumina", 0, &traj, &reference);
+    let counters = be.cache_counters().unwrap_or_default();
     println!(
-        "explored {} samples in {:.2}s  PHV={:.4}  eff={:.4}  \
-         superior={}",
+        "explored {} samples ({} simulated, {} cache hits) in {:.2}s  \
+         PHV={:.4}  eff={:.4}  superior={}",
         traj.len(),
+        be.spent(),
+        counters.hits,
         t0.elapsed().as_secs_f64(),
         r.phv,
         r.sample_efficiency,

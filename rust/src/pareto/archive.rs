@@ -1,0 +1,182 @@
+//! Incremental Pareto archive: maintains the non-dominated front and the
+//! dominated hypervolume under point insertion, so trajectory consumers
+//! (the PHV race, Table 4 picks, LUMINA's Trajectory Memory) never
+//! recompute either from scratch per step.
+//!
+//! Front maintenance is the classic archive update: a new point is
+//! rejected if any archived point dominates or equals it (equality keeps
+//! the *first* occurrence, matching [`pareto_front`]'s tie rule);
+//! otherwise archived points it dominates are evicted and the point is
+//! appended. Entries therefore stay in insertion order, so
+//! [`ParetoArchive::front_ids`] reproduces [`pareto_front`]'s output on
+//! the same sequence exactly.
+//!
+//! The hypervolume update adds the new point's *exclusive* contribution:
+//! for minimization, the region a point `o` dominates inside the
+//! reference box is `[o, r]`, and the part already covered by an
+//! archived point `p` is `[max(p, o), r]` — so the increment is
+//! `vol([o, r])` minus the hypervolume of the coordinate-wise-clipped
+//! front. Evicted points change nothing (their region is a subset of the
+//! new point's). Each insertion costs one O(f^2 log f) sweep over the
+//! current front `f`, which stays tiny next to the O(n^2 log n)
+//! from-scratch recomputation per step it replaces.
+//!
+//! [`pareto_front`]: crate::pareto::pareto_front
+
+use super::{dominates, hypervolume, Objectives};
+
+/// Incrementally maintained Pareto front + hypervolume.
+#[derive(Debug, Clone)]
+pub struct ParetoArchive {
+    reference: Objectives,
+    /// Non-dominated `(id, point)` entries, in insertion order.
+    entries: Vec<(usize, Objectives)>,
+    hv: f64,
+    pushed: usize,
+}
+
+impl Default for ParetoArchive {
+    /// Front-only archive (see [`ParetoArchive::front_only`]).
+    fn default() -> Self {
+        Self::front_only()
+    }
+}
+
+impl ParetoArchive {
+    /// Archive tracking hypervolume against `reference`.
+    pub fn new(reference: Objectives) -> Self {
+        Self { reference, entries: Vec::new(), hv: 0.0, pushed: 0 }
+    }
+
+    /// Archive that only maintains the front (no finite reference box,
+    /// hypervolume stays 0) — for callers that need front membership of
+    /// raw, unnormalized objectives.
+    pub fn front_only() -> Self {
+        Self::new([f64::INFINITY; 3])
+    }
+
+    /// Insert with an auto-assigned id (`0, 1, 2, ...` in push order, so
+    /// ids equal trajectory indices). Returns true iff the point joined
+    /// the front.
+    pub fn push(&mut self, o: Objectives) -> bool {
+        self.push_with_id(self.pushed, o)
+    }
+
+    /// Insert with an explicit caller id. Returns true iff the point
+    /// joined the front.
+    pub fn push_with_id(&mut self, id: usize, o: Objectives) -> bool {
+        self.pushed += 1;
+        if self
+            .entries
+            .iter()
+            .any(|(_, p)| dominates(p, &o) || *p == o)
+        {
+            return false;
+        }
+        if (0..3).all(|i| o[i] < self.reference[i])
+            && self.reference.iter().all(|r| r.is_finite())
+        {
+            let boxed: f64 =
+                (0..3).map(|i| self.reference[i] - o[i]).product();
+            let clipped: Vec<Objectives> = self
+                .entries
+                .iter()
+                .map(|(_, p)| {
+                    [p[0].max(o[0]), p[1].max(o[1]), p[2].max(o[2])]
+                })
+                .collect();
+            let covered = hypervolume(&clipped, &self.reference);
+            self.hv += (boxed - covered).max(0.0);
+        }
+        self.entries.retain(|(_, p)| !dominates(&o, p));
+        self.entries.push((id, o));
+        true
+    }
+
+    /// Dominated hypervolume w.r.t. the reference, accumulated
+    /// incrementally.
+    pub fn hypervolume(&self) -> f64 {
+        self.hv
+    }
+
+    /// Ids of the current front, in insertion order (equal to
+    /// `pareto_front` of the pushed sequence when ids are push indices).
+    pub fn front_ids(&self) -> Vec<usize> {
+        self.entries.iter().map(|(id, _)| *id).collect()
+    }
+
+    /// Objective vectors of the current front, in insertion order.
+    pub fn front(&self) -> Vec<Objectives> {
+        self.entries.iter().map(|(_, p)| *p).collect()
+    }
+
+    /// Number of points on the front.
+    pub fn front_len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Total points pushed (front or not).
+    pub fn len(&self) -> usize {
+        self.pushed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pushed == 0
+    }
+
+    pub fn reference(&self) -> &Objectives {
+        &self.reference
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pareto::pareto_front;
+
+    #[test]
+    fn front_tracks_insertion_order_and_evictions() {
+        let mut ar = ParetoArchive::front_only();
+        assert!(ar.push([3.0, 3.0, 3.0])); // id 0
+        assert!(ar.push([4.0, 1.0, 4.0])); // id 1, incomparable
+        assert!(!ar.push([5.0, 5.0, 5.0])); // dominated by id 0
+        assert!(!ar.push([3.0, 3.0, 3.0])); // duplicate: first wins
+        assert!(ar.push([2.0, 2.0, 2.0])); // id 4, evicts id 0
+        assert_eq!(ar.front_ids(), vec![1, 4]);
+        assert_eq!(ar.front_len(), 2);
+        assert_eq!(ar.len(), 5);
+        assert_eq!(ar.hypervolume(), 0.0); // front-only archives track no HV
+    }
+
+    #[test]
+    fn hv_matches_batch_on_known_boxes() {
+        // Same fixtures as pareto::tests::hv_union_of_two_boxes.
+        let r = [2.0, 2.0, 2.0];
+        let mut ar = ParetoArchive::new(r);
+        ar.push([1.0, 1.0, 1.0]);
+        assert!((ar.hypervolume() - 1.0).abs() < 1e-12);
+        ar.push([0.0, 1.5, 1.5]);
+        assert!((ar.hypervolume() - 1.25).abs() < 1e-9);
+        // Dominated and out-of-box points add nothing.
+        ar.push([1.5, 1.5, 1.5]);
+        ar.push([3.0, 0.5, 0.5]);
+        assert!((ar.hypervolume() - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ids_reproduce_batch_pareto_front() {
+        let pts = [
+            [1.0, 4.0, 4.0],
+            [4.0, 1.0, 4.0],
+            [4.0, 4.0, 1.0],
+            [3.0, 3.0, 3.0],
+            [5.0, 5.0, 5.0],
+            [1.0, 4.0, 4.0], // duplicate of 0
+        ];
+        let mut ar = ParetoArchive::front_only();
+        for p in pts {
+            ar.push(p);
+        }
+        assert_eq!(ar.front_ids(), pareto_front(&pts));
+    }
+}

@@ -6,6 +6,10 @@
 //! dominate `r` contribute. Objectives are normalized by the A100
 //! reference before PHV so the paper's "normalized PHV" comparisons hold.
 
+pub mod archive;
+
+pub use archive::ParetoArchive;
+
 /// An objective vector (minimize each lane).
 pub type Objectives = [f64; 3];
 
@@ -24,7 +28,62 @@ pub fn dominates(a: &Objectives, b: &Objectives) -> bool {
 }
 
 /// Indices of the non-dominated subset (first occurrence wins on ties).
+///
+/// Sort-based 3-objective skyline sweep, O(n log n): process points in
+/// lexicographic `(x, y, z, index)` order — every dominator of a point
+/// sorts strictly before it — and keep a Fenwick tree of the minimum `z`
+/// seen per compressed `y` rank. A point is dominated (or a repeat of an
+/// earlier identical point) exactly when some already-processed point
+/// with `y <= y_q` has `z <= z_q`.
 pub fn pareto_front(points: &[Objectives]) -> Vec<usize> {
+    let n = points.len();
+    if n <= 1 {
+        return (0..n).collect();
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        points[a]
+            .partial_cmp(&points[b])
+            .expect("objectives must not be NaN")
+            .then(a.cmp(&b))
+    });
+
+    // Compress y coordinates to Fenwick ranks.
+    let mut ys: Vec<f64> = points.iter().map(|p| p[1]).collect();
+    ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ys.dedup();
+
+    // Fenwick tree over y ranks holding prefix-minimum z (insert-only).
+    let mut tree = vec![f64::INFINITY; ys.len() + 1];
+    let mut keep = vec![false; n];
+    for &i in &order {
+        let p = &points[i];
+        // 1-based rank of the largest tree index with y <= p[1].
+        let r = ys.partition_point(|&v| v < p[1]) + 1;
+        let mut min_z = f64::INFINITY;
+        let mut j = r;
+        while j > 0 {
+            min_z = min_z.min(tree[j]);
+            j -= j & j.wrapping_neg();
+        }
+        // No earlier-sorted point covers (y, z) => non-dominated.
+        if min_z > p[2] {
+            keep[i] = true;
+        }
+        let mut j = r;
+        while j < tree.len() {
+            if p[2] < tree[j] {
+                tree[j] = p[2];
+            }
+            j += j & j.wrapping_neg();
+        }
+    }
+    (0..n).filter(|&i| keep[i]).collect()
+}
+
+/// Reference O(n^2) pairwise-dominance front — the oracle the sweep is
+/// property-tested against (`front_sweep_matches_pairwise_oracle`).
+pub fn pareto_front_pairwise(points: &[Objectives]) -> Vec<usize> {
     let mut front = Vec::new();
     'outer: for (i, p) in points.iter().enumerate() {
         for (j, q) in points.iter().enumerate() {
@@ -172,6 +231,40 @@ mod tests {
     fn front_dedups_ties() {
         let pts = vec![[1.0, 1.0, 1.0], [1.0, 1.0, 1.0]];
         assert_eq!(pareto_front(&pts), vec![0]);
+    }
+
+    #[test]
+    fn front_sweep_matches_pairwise_oracle() {
+        // Random sets with deliberate duplicates and shared coordinates
+        // (a quantized grid makes axis ties common): the O(n log n)
+        // sweep must reproduce the O(n^2) oracle exactly, including the
+        // first-occurrence tie rule.
+        prop::forall(
+            1133,
+            96,
+            |r| {
+                let n = r.range_usize(0, 40);
+                let mut pts: Vec<Objectives> = (0..n)
+                    .map(|_| {
+                        [
+                            r.range_usize(0, 6) as f64,
+                            r.range_usize(0, 6) as f64,
+                            r.range_usize(0, 6) as f64,
+                        ]
+                    })
+                    .collect();
+                // Inject exact duplicates of earlier points.
+                for _ in 0..n / 4 {
+                    let i = r.range_usize(0, pts.len().max(1));
+                    if i < pts.len() {
+                        let p = pts[i];
+                        pts.push(p);
+                    }
+                }
+                pts
+            },
+            |pts| pareto_front(pts) == pareto_front_pairwise(pts),
+        );
     }
 
     #[test]

@@ -4,7 +4,8 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context};
+use crate::bail;
+use crate::error::Context;
 
 use crate::util::json::Json;
 use crate::Result;

@@ -5,150 +5,218 @@
 //! batches are chunked to the largest artifact batch and padded up to the
 //! smallest fitting one (padding rows reuse the first design and are
 //! dropped on output).
+//!
+//! The real implementation needs the `xla` crate (plus an XLA install)
+//! and is gated behind the off-by-default `pjrt` feature so the crate
+//! builds offline with a bare toolchain. The default build ships an
+//! uninhabited stub whose constructors return `Err`; every caller
+//! (races, benches, tests) already falls back to the bit-compatible
+//! [`crate::sim::RooflineSim`] mirror on that error.
 
-use std::collections::BTreeMap;
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::collections::BTreeMap;
 
-use anyhow::Context;
+    use crate::design::{DesignPoint, N_PARAMS};
+    use crate::error::Context;
+    use crate::eval::{Evaluator, Metrics};
+    use crate::workload::{self, MAX_OPS, N_PHASES};
+    use crate::Result;
 
-use crate::design::{DesignPoint, N_PARAMS};
-use crate::eval::{Evaluator, Metrics};
-use crate::workload::{self, MAX_OPS, N_PHASES};
-use crate::Result;
+    use super::super::artifact::ArtifactDir;
 
-use super::artifact::ArtifactDir;
+    /// PJRT-backed evaluator.
+    pub struct PjrtEvaluator {
+        artifacts: ArtifactDir,
+        client: xla::PjRtClient,
+        /// batch size -> compiled executable (lazy).
+        compiled: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+        /// Flattened operator table fed as the artifact's second operand
+        /// (the lowered module takes the table at runtime — see
+        /// `python/compile/model.py::export_fn`).
+        table: Vec<f32>,
+        /// Cumulative designs evaluated (perf accounting).
+        pub evaluated: u64,
+    }
 
-/// PJRT-backed evaluator.
-pub struct PjrtEvaluator {
-    artifacts: ArtifactDir,
-    client: xla::PjRtClient,
-    /// batch size -> compiled executable (lazy).
-    compiled: BTreeMap<usize, xla::PjRtLoadedExecutable>,
-    /// Flattened operator table fed as the artifact's second operand
-    /// (the lowered module takes the table at runtime — see
-    /// `python/compile/model.py::export_fn`).
-    table: Vec<f32>,
-    /// Cumulative designs evaluated (perf accounting).
-    pub evaluated: u64,
-}
-
-impl PjrtEvaluator {
-    /// Open the artifacts directory and create the CPU client.
-    pub fn new(artifacts: ArtifactDir) -> Result<Self> {
-        let client =
-            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let spec = workload::gpt3::spec_by_name(&artifacts.workload)
-            .with_context(|| {
-                format!("unknown artifact workload {:?}", artifacts.workload)
-            })?;
-        let tbl = workload::op_table(&spec);
-        let mut table = Vec::with_capacity(N_PHASES * MAX_OPS * 8);
-        for phase in &tbl {
-            for row in phase {
-                table.extend_from_slice(row);
+    impl PjrtEvaluator {
+        /// Open the artifacts directory and create the CPU client.
+        pub fn new(artifacts: ArtifactDir) -> Result<Self> {
+            let client =
+                xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let spec = workload::gpt3::spec_by_name(&artifacts.workload)
+                .with_context(|| {
+                    format!(
+                        "unknown artifact workload {:?}",
+                        artifacts.workload
+                    )
+                })?;
+            let tbl = workload::op_table(&spec);
+            let mut table = Vec::with_capacity(N_PHASES * MAX_OPS * 8);
+            for phase in &tbl {
+                for row in phase {
+                    table.extend_from_slice(row);
+                }
             }
+            Ok(Self {
+                artifacts,
+                client,
+                compiled: BTreeMap::new(),
+                table,
+                evaluated: 0,
+            })
         }
-        Ok(Self {
-            artifacts,
-            client,
-            compiled: BTreeMap::new(),
-            table,
-            evaluated: 0,
-        })
+
+        /// Open `artifacts/` found above the working directory.
+        pub fn open_default() -> Result<Self> {
+            Self::new(ArtifactDir::open_default()?)
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        fn executable(
+            &mut self,
+            batch: usize,
+        ) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.compiled.contains_key(&batch) {
+                let path = self
+                    .artifacts
+                    .batches
+                    .get(&batch)
+                    .with_context(|| {
+                        format!("no artifact for batch {batch}")
+                    })?;
+                let proto = xla::HloModuleProto::from_text_file(path)
+                    .with_context(|| format!("parsing HLO text {path:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| {
+                        format!("compiling artifact {path:?}")
+                    })?;
+                self.compiled.insert(batch, exe);
+            }
+            Ok(&self.compiled[&batch])
+        }
+
+        /// Execute one padded chunk of exactly `batch` designs.
+        fn run_chunk(
+            &mut self,
+            batch: usize,
+            designs: &[DesignPoint],
+        ) -> Result<Vec<Metrics>> {
+            debug_assert!(designs.len() <= batch && !designs.is_empty());
+            let mut flat = Vec::with_capacity(batch * N_PARAMS);
+            for d in designs {
+                flat.extend_from_slice(&d.encode());
+            }
+            // Pad with the first design (cheap, values are valid).
+            for _ in designs.len()..batch {
+                flat.extend_from_slice(&designs[0].encode());
+            }
+
+            let input = xla::Literal::vec1(&flat)
+                .reshape(&[batch as i64, N_PARAMS as i64])?;
+            let table = xla::Literal::vec1(&self.table).reshape(&[
+                N_PHASES as i64,
+                MAX_OPS as i64,
+                8,
+            ])?;
+            let exe = self.executable(batch)?;
+            let result = exe.execute::<xla::Literal>(&[input, table])?[0][0]
+                .to_literal_sync()?;
+            let (metrics_lit, stalls_lit) = result.to_tuple2()?;
+            let metrics = metrics_lit.to_vec::<f32>()?;
+            let stalls = stalls_lit.to_vec::<f32>()?;
+
+            self.evaluated += designs.len() as u64;
+            let mut out = Vec::with_capacity(designs.len());
+            for i in 0..designs.len() {
+                let m = &metrics[i * 3..i * 3 + 3];
+                let s = &stalls[i * 6..i * 6 + 6];
+                out.push(Metrics {
+                    ttft_ms: m[0],
+                    tpot_ms: m[1],
+                    area_mm2: m[2],
+                    stalls: [[s[0], s[1], s[2]], [s[3], s[4], s[5]]],
+                });
+            }
+            Ok(out)
+        }
     }
 
-    /// Open `artifacts/` found above the working directory.
-    pub fn open_default() -> Result<Self> {
-        Self::new(ArtifactDir::open_default()?)
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn executable(
-        &mut self,
-        batch: usize,
-    ) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.compiled.contains_key(&batch) {
-            let path = self
-                .artifacts
-                .batches
-                .get(&batch)
-                .with_context(|| format!("no artifact for batch {batch}"))?;
-            let proto = xla::HloModuleProto::from_text_file(path)
-                .with_context(|| format!("parsing HLO text {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling artifact {path:?}"))?;
-            self.compiled.insert(batch, exe);
-        }
-        Ok(&self.compiled[&batch])
-    }
-
-    /// Execute one padded chunk of exactly `batch` designs.
-    fn run_chunk(
-        &mut self,
-        batch: usize,
-        designs: &[DesignPoint],
-    ) -> Result<Vec<Metrics>> {
-        debug_assert!(designs.len() <= batch && !designs.is_empty());
-        let mut flat = Vec::with_capacity(batch * N_PARAMS);
-        for d in designs {
-            flat.extend_from_slice(&d.encode());
-        }
-        // Pad with the first design (cheap, values are valid).
-        for _ in designs.len()..batch {
-            flat.extend_from_slice(&designs[0].encode());
+    impl Evaluator for PjrtEvaluator {
+        fn eval_batch(
+            &mut self,
+            designs: &[DesignPoint],
+        ) -> Result<Vec<Metrics>> {
+            let mut out = Vec::with_capacity(designs.len());
+            let max_batch = self.artifacts.largest_batch();
+            for chunk in designs.chunks(max_batch) {
+                let batch = self.artifacts.batch_for(chunk.len());
+                out.extend(self.run_chunk(batch, chunk)?);
+            }
+            Ok(out)
         }
 
-        let input = xla::Literal::vec1(&flat)
-            .reshape(&[batch as i64, N_PARAMS as i64])?;
-        let table = xla::Literal::vec1(&self.table).reshape(&[
-            N_PHASES as i64,
-            MAX_OPS as i64,
-            8,
-        ])?;
-        let exe = self.executable(batch)?;
-        let result = exe.execute::<xla::Literal>(&[input, table])?[0][0]
-            .to_literal_sync()?;
-        let (metrics_lit, stalls_lit) = result.to_tuple2()?;
-        let metrics = metrics_lit.to_vec::<f32>()?;
-        let stalls = stalls_lit.to_vec::<f32>()?;
-
-        self.evaluated += designs.len() as u64;
-        let mut out = Vec::with_capacity(designs.len());
-        for i in 0..designs.len() {
-            let m = &metrics[i * 3..i * 3 + 3];
-            let s = &stalls[i * 6..i * 6 + 6];
-            out.push(Metrics {
-                ttft_ms: m[0],
-                tpot_ms: m[1],
-                area_mm2: m[2],
-                stalls: [[s[0], s[1], s[2]], [s[3], s[4], s[5]]],
-            });
+        fn name(&self) -> &'static str {
+            "roofline-pjrt"
         }
-        Ok(out)
     }
 }
 
-impl Evaluator for PjrtEvaluator {
-    fn eval_batch(&mut self, designs: &[DesignPoint]) -> Result<Vec<Metrics>> {
-        let mut out = Vec::with_capacity(designs.len());
-        let max_batch = self.artifacts.largest_batch();
-        for chunk in designs.chunks(max_batch) {
-            let batch = self.artifacts.batch_for(chunk.len());
-            out.extend(self.run_chunk(batch, chunk)?);
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use crate::design::DesignPoint;
+    use crate::eval::{Evaluator, Metrics};
+    use crate::Result;
+
+    use super::super::artifact::ArtifactDir;
+
+    /// Uninhabited stand-in for the PJRT evaluator: constructors always
+    /// return `Err`, so callers take their documented fallback path.
+    pub enum PjrtEvaluator {}
+
+    impl PjrtEvaluator {
+        pub fn new(_artifacts: ArtifactDir) -> Result<Self> {
+            Self::open_default()
         }
-        Ok(out)
+
+        pub fn open_default() -> Result<Self> {
+            Err(crate::err!(
+                "PJRT runtime disabled: rebuild with `--features pjrt` \
+                 (requires the `xla` crate and an XLA install)"
+            ))
+        }
+
+        pub fn platform(&self) -> String {
+            match *self {}
+        }
     }
 
-    fn name(&self) -> &'static str {
-        "roofline-pjrt"
+    impl Evaluator for PjrtEvaluator {
+        fn eval_batch(
+            &mut self,
+            _designs: &[DesignPoint],
+        ) -> Result<Vec<Metrics>> {
+            match *self {}
+        }
+
+        fn name(&self) -> &'static str {
+            "roofline-pjrt"
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use real::PjrtEvaluator;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtEvaluator;
 
 // NOTE: integration coverage for this module lives in
 // rust/tests/artifact_vs_mirror.rs (requires `make artifacts` to have
-// produced the HLO text; the Makefile sequences that before cargo test).
+// produced the HLO text; tests skip gracefully when artifacts or the
+// `pjrt` feature are absent).

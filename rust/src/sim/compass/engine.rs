@@ -1,10 +1,18 @@
 //! The compass evaluation engine: walks the workload's operator list and
 //! composes the tiling, memory and interconnect models into per-operator
 //! wall times with stall attribution.
+//!
+//! The operator lists and every design-*independent* per-op quantity
+//! (operand byte counts, traffic classes, ring payloads) are prepared
+//! once in the constructor — mirroring `RooflineSim::op_table` — so the
+//! per-design hot loop touches only the design-dependent models. The
+//! arithmetic (expressions and evaluation order) is kept identical to
+//! the historical per-evaluation construction, so results are
+//! bit-identical to the pre-hoisting engine.
 
 use crate::arch::{area_mm2, constants as c};
 use crate::design::{DesignPoint, Param};
-use crate::eval::{Bottleneck, Evaluator, Metrics, Phase};
+use crate::eval::{Bottleneck, EvalOne, Evaluator, Metrics, Phase};
 use crate::workload::{
     decode_ops, prefill_ops, Op, OpKind, WorkloadSpec, GPT3_175B,
 };
@@ -19,19 +27,122 @@ use super::tiles::map_matmul;
 /// than the roofline's: includes kernel argument setup and wave ramp-up).
 const LAUNCH_OVERHEAD_S: f32 = 3.0e-6;
 
+/// Design-independent invariants of one operator, hoisted out of the
+/// per-design evaluation loop.
+#[derive(Debug, Clone, Copy)]
+enum Prepped {
+    Matmul {
+        m: f32,
+        n: f32,
+        k: f32,
+        count: f32,
+        /// Streamed (weight-side) bytes: `k * n * count` in fp16.
+        w_bytes: f32,
+        /// Activation bytes: `(m*k + m*n) * count` in fp16.
+        a_bytes: f32,
+        /// Bytes that must stay L2-resident for single-pass streaming.
+        resident: f32,
+        /// Decode attention reads the KV cache; everything else streams
+        /// weights.
+        w_class: TrafficClass,
+    },
+    Vector {
+        flops: f32,
+        bytes: f32,
+        elems: f32,
+    },
+    Comm {
+        /// Raw payload implied by the ring transport factor.
+        payload: f32,
+        bytes: f32,
+    },
+}
+
+/// One operator with its phase and precomputed invariants.
+#[derive(Debug, Clone, Copy)]
+struct PreppedOp {
+    name: &'static str,
+    phase: Phase,
+    prep: Prepped,
+}
+
+impl PreppedOp {
+    fn new(spec: &WorkloadSpec, phase: Phase, op: &Op) -> PreppedOp {
+        let prep = match op.kind {
+            OpKind::Matmul => {
+                let (m, n, k, count) = (
+                    op.m as f32,
+                    op.n as f32,
+                    op.k as f32,
+                    op.count as f32,
+                );
+                let w_bytes = k * n * count * c::FP16_BYTES;
+                let a_bytes = (m * k + m * n) * count * c::FP16_BYTES;
+                let is_attention = op.name.starts_with("attn");
+                let w_class = if is_attention && phase == Phase::Decode {
+                    TrafficClass::KvCache
+                } else {
+                    TrafficClass::StreamingWeights
+                };
+                let resident = (m * k * c::FP16_BYTES).min(w_bytes);
+                Prepped::Matmul {
+                    m,
+                    n,
+                    k,
+                    count,
+                    w_bytes,
+                    a_bytes,
+                    resident,
+                    w_class,
+                }
+            }
+            OpKind::Vector => Prepped::Vector {
+                flops: op.flops as f32,
+                bytes: op.bytes as f32,
+                elems: (op.bytes as f32) / (2.0 * c::FP16_BYTES),
+            },
+            OpKind::Comm => Prepped::Comm {
+                payload: op.comm_bytes as f32
+                    / (2.0 * (spec.tp as f32 - 1.0) / spec.tp as f32),
+                bytes: op.bytes as f32,
+            },
+        };
+        PreppedOp { name: op.name, phase, prep }
+    }
+}
+
 /// The detailed simulator.
 #[derive(Debug, Clone)]
 pub struct CompassSim {
-    pub spec: WorkloadSpec,
+    /// Private: `prepped` is derived from the spec in the constructor,
+    /// so the spec must not change underneath it (build a new sim for a
+    /// new workload).
+    spec: WorkloadSpec,
+    /// Prefill then decode operators, in execution order.
+    prepped: Vec<PreppedOp>,
 }
 
 impl CompassSim {
     pub fn new(spec: WorkloadSpec) -> Self {
-        Self { spec }
+        let mut prepped = Vec::new();
+        for (phase, ops) in [
+            (Phase::Prefill, prefill_ops(&spec)),
+            (Phase::Decode, decode_ops(&spec)),
+        ] {
+            for op in &ops {
+                prepped.push(PreppedOp::new(&spec, phase, op));
+            }
+        }
+        Self { spec, prepped }
     }
 
     pub fn gpt3() -> Self {
         Self::new(GPT3_175B)
+    }
+
+    /// The workload this simulator was built for.
+    pub fn spec(&self) -> &WorkloadSpec {
+        &self.spec
     }
 
     /// Evaluate one design, returning metrics plus the full critical-path
@@ -44,13 +155,8 @@ impl CompassSim {
         let icn = Interconnect::new(d, self.spec.tp);
         let mut cp = CriticalPath::default();
 
-        for (phase, ops) in [
-            (Phase::Prefill, prefill_ops(&self.spec)),
-            (Phase::Decode, decode_ops(&self.spec)),
-        ] {
-            for op in &ops {
-                cp.ops.push(self.run_op(d, &mem, &icn, phase, op));
-            }
+        for op in &self.prepped {
+            cp.ops.push(self.run_op(d, &mem, &icn, op));
         }
 
         let pf = cp.stall_stack(Phase::Prefill);
@@ -72,13 +178,12 @@ impl CompassSim {
         d: &DesignPoint,
         mem: &MemorySystem,
         icn: &Interconnect,
-        phase: Phase,
-        op: &Op,
+        op: &PreppedOp,
     ) -> OpRecord {
-        match op.kind {
-            OpKind::Matmul => self.run_matmul(d, mem, phase, op),
-            OpKind::Vector => self.run_vector(d, mem, phase, op),
-            OpKind::Comm => self.run_comm(mem, icn, phase, op),
+        match op.prep {
+            Prepped::Matmul { .. } => self.run_matmul(d, mem, op),
+            Prepped::Vector { .. } => self.run_vector(d, mem, op),
+            Prepped::Comm { .. } => self.run_comm(mem, icn, op),
         }
     }
 
@@ -86,28 +191,29 @@ impl CompassSim {
         &self,
         d: &DesignPoint,
         mem: &MemorySystem,
-        phase: Phase,
-        op: &Op,
+        op: &PreppedOp,
     ) -> OpRecord {
-        let (m, n, k, count) =
-            (op.m as f32, op.n as f32, op.k as f32, op.count as f32);
+        let Prepped::Matmul {
+            m,
+            n,
+            k,
+            count,
+            w_bytes,
+            a_bytes,
+            resident,
+            w_class,
+        } = op.prep
+        else {
+            unreachable!("run_matmul on non-matmul op")
+        };
 
         // Memory side: weights stream from DRAM; activations get L2
-        // reuse; decode attention reads the KV cache.
-        let w_bytes = k * n * count * c::FP16_BYTES;
-        let a_bytes = (m * k + m * n) * count * c::FP16_BYTES;
-        let is_attention = op.name.starts_with("attn");
-        let (w_class, a_ws) = if is_attention && phase == Phase::Decode {
-            (TrafficClass::KvCache, a_bytes)
-        } else {
-            (TrafficClass::StreamingWeights, a_bytes)
-        };
-        // When the streamed operand is re-traversed per L2-sized block of
-        // the other operand, charge an inflation factor.
-        let resident = (m * k * c::FP16_BYTES).min(w_bytes);
+        // reuse; decode attention reads the KV cache. When the streamed
+        // operand is re-traversed per L2-sized block of the other
+        // operand, charge an inflation factor.
         let inflation = if resident <= mem.l2_bytes { 1.0 } else { 1.6 };
         let mem_s = mem.service_s(w_class, w_bytes * inflation, w_bytes)
-            + mem.service_s(TrafficClass::Activations, a_bytes, a_ws);
+            + mem.service_s(TrafficClass::Activations, a_bytes, a_bytes);
 
         // Compute side: effective staging bandwidth for the tiling model
         // is the blended service rate implied by the memory times.
@@ -123,7 +229,7 @@ impl CompassSim {
         };
         OpRecord {
             name: op.name,
-            phase,
+            phase: op.phase,
             wall_s: wall,
             stall,
             compute_s: map.compute_s,
@@ -138,22 +244,20 @@ impl CompassSim {
         &self,
         d: &DesignPoint,
         mem: &MemorySystem,
-        phase: Phase,
-        op: &Op,
+        op: &PreppedOp,
     ) -> OpRecord {
+        let Prepped::Vector { flops, bytes, elems } = op.prep else {
+            unreachable!("run_vector on non-vector op")
+        };
         let arrays =
             (d.get(Param::Cores) * d.get(Param::Sublanes)) as f32;
         let vecw = d.get(Param::VectorWidth) as f32;
         let v_peak = arrays * vecw * c::FLOPS_PER_LANE * c::CLOCK_HZ;
         // Occupancy: tiny element counts cannot fill every lane.
-        let elems = (op.bytes as f32) / (2.0 * c::FP16_BYTES);
         let occupancy = (elems / (arrays * vecw * 4.0)).min(1.0).max(0.05);
-        let compute_s = op.flops as f32 / (v_peak * occupancy);
-        let mem_s = mem.service_s(
-            TrafficClass::Activations,
-            op.bytes as f32,
-            op.bytes as f32,
-        );
+        let compute_s = flops / (v_peak * occupancy);
+        let mem_s =
+            mem.service_s(TrafficClass::Activations, bytes, bytes);
         let wall = compute_s.max(mem_s) + LAUNCH_OVERHEAD_S;
         let stall = if compute_s >= mem_s {
             Bottleneck::Compute
@@ -162,7 +266,7 @@ impl CompassSim {
         };
         OpRecord {
             name: op.name,
-            phase,
+            phase: op.phase,
             wall_s: wall,
             stall,
             compute_s,
@@ -177,18 +281,15 @@ impl CompassSim {
         &self,
         mem: &MemorySystem,
         icn: &Interconnect,
-        phase: Phase,
-        op: &Op,
+        op: &PreppedOp,
     ) -> OpRecord {
+        let Prepped::Comm { payload, bytes } = op.prep else {
+            unreachable!("run_comm on non-comm op")
+        };
         // Ring transport; payload also crosses HBM twice on each rank.
-        let payload = op.comm_bytes as f32
-            / (2.0 * (self.spec.tp as f32 - 1.0) / self.spec.tp as f32);
         let net_s = icn.allreduce_s(payload);
-        let mem_s = mem.service_s(
-            TrafficClass::Activations,
-            op.bytes as f32,
-            op.bytes as f32,
-        );
+        let mem_s =
+            mem.service_s(TrafficClass::Activations, bytes, bytes);
         let wall = net_s.max(mem_s) + LAUNCH_OVERHEAD_S;
         let stall = if net_s >= mem_s {
             Bottleneck::Network
@@ -197,7 +298,7 @@ impl CompassSim {
         };
         OpRecord {
             name: op.name,
-            phase,
+            phase: op.phase,
             wall_s: wall,
             stall,
             compute_s: 0.0,
@@ -206,6 +307,16 @@ impl CompassSim {
             utilization: 0.0,
             latency_bound: icn.latency_bound(payload),
         }
+    }
+}
+
+impl EvalOne for CompassSim {
+    fn eval_one(&self, d: &DesignPoint) -> Metrics {
+        self.evaluate_detailed(d).0
+    }
+
+    fn label(&self) -> &'static str {
+        "compass"
     }
 }
 
@@ -315,6 +426,49 @@ mod tests {
         assert!(more.ttft_ms < base.ttft_ms);
         let tpot_gain = (base.tpot_ms - more.tpot_ms) / base.tpot_ms;
         assert!(tpot_gain < 0.10, "tpot gain {tpot_gain}");
+    }
+
+    #[test]
+    fn hoisted_op_prep_matches_direct_construction() {
+        // The constructor-prepared invariants must equal what the
+        // historical per-evaluation path computed from the raw op list.
+        let s = sim();
+        let ops = prefill_ops(&s.spec);
+        assert_eq!(s.prepped.len(), ops.len() + decode_ops(&s.spec).len());
+        for (p, op) in s.prepped.iter().zip(&ops) {
+            assert_eq!(p.name, op.name);
+            assert_eq!(p.phase, Phase::Prefill);
+            if let Prepped::Matmul { w_bytes, a_bytes, .. } = p.prep {
+                let k = op.k as f32;
+                let n = op.n as f32;
+                let m = op.m as f32;
+                let count = op.count as f32;
+                assert_eq!(w_bytes, k * n * count * c::FP16_BYTES);
+                assert_eq!(
+                    a_bytes,
+                    (m * k + m * n) * count * c::FP16_BYTES
+                );
+            }
+        }
+        // Decode attention reads the KV cache; prefill attention streams.
+        let kv_ops: Vec<&PreppedOp> = s
+            .prepped
+            .iter()
+            .filter(|p| {
+                matches!(
+                    p.prep,
+                    Prepped::Matmul {
+                        w_class: TrafficClass::KvCache,
+                        ..
+                    }
+                )
+            })
+            .collect();
+        assert!(!kv_ops.is_empty());
+        assert!(kv_ops
+            .iter()
+            .all(|p| p.phase == Phase::Decode
+                && p.name.starts_with("attn")));
     }
 
     #[test]

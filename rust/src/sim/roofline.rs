@@ -8,20 +8,28 @@
 
 use crate::arch::constants as c;
 use crate::design::{DesignPoint, Param};
-use crate::eval::{Evaluator, Metrics};
+use crate::eval::{EvalOne, Evaluator, Metrics};
 use crate::workload::{op_table, WorkloadSpec, MAX_OPS, N_PHASES};
 use crate::Result;
 
 /// Roofline simulator for a fixed workload.
 #[derive(Debug, Clone)]
 pub struct RooflineSim {
-    pub spec: WorkloadSpec,
+    /// Private: `table` is derived from the spec in the constructor, so
+    /// the spec must not change underneath it (build a new sim for a
+    /// new workload).
+    spec: WorkloadSpec,
     table: [[[f32; 8]; MAX_OPS]; N_PHASES],
 }
 
 impl RooflineSim {
     pub fn new(spec: WorkloadSpec) -> Self {
         Self { spec, table: op_table(&spec) }
+    }
+
+    /// The workload this simulator was built for.
+    pub fn spec(&self) -> &WorkloadSpec {
+        &self.spec
     }
 
     /// Evaluate one design (pure function of the design vector).
@@ -137,6 +145,16 @@ impl RooflineSim {
                 ],
             ],
         }
+    }
+}
+
+impl EvalOne for RooflineSim {
+    fn eval_one(&self, d: &DesignPoint) -> Metrics {
+        self.evaluate(d)
+    }
+
+    fn label(&self) -> &'static str {
+        "roofline-rs"
     }
 }
 

@@ -6,7 +6,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Result};
+use crate::{bail, err, Result};
 
 /// Parsed command line: a subcommand, positional args, and `--key value`
 /// options.
@@ -76,7 +76,7 @@ impl Args {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|e| anyhow!("--{key} must be an integer: {e}")),
+                .map_err(|e| err!("--{key} must be an integer: {e}")),
         }
     }
 
@@ -85,7 +85,7 @@ impl Args {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|e| anyhow!("--{key} must be a number: {e}")),
+                .map_err(|e| err!("--{key} must be a number: {e}")),
         }
     }
 
@@ -94,7 +94,7 @@ impl Args {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|e| anyhow!("--{key} must be an integer: {e}")),
+                .map_err(|e| err!("--{key} must be an integer: {e}")),
         }
     }
 }

@@ -4,7 +4,8 @@
 use std::fs;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::error::Context;
+use crate::Result;
 
 /// An in-memory CSV table with a fixed header.
 pub struct Csv {
@@ -35,19 +36,6 @@ impl Csv {
         self.rows.is_empty()
     }
 
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        out.push_str(&self.header.join(","));
-        out.push('\n');
-        for r in &self.rows {
-            let quoted: Vec<String> =
-                r.iter().map(|c| quote(c)).collect();
-            out.push_str(&quoted.join(","));
-            out.push('\n');
-        }
-        out
-    }
-
     /// Write to `path`, creating parent directories.
     pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
@@ -57,6 +45,21 @@ impl Csv {
         }
         fs::write(path, self.to_string())
             .with_context(|| format!("write {path:?}"))
+    }
+}
+
+impl std::fmt::Display for Csv {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        out.push_str(&self.header.join(","));
+        out.push('\n');
+        for r in &self.rows {
+            let quoted: Vec<String> =
+                r.iter().map(|c| quote(c)).collect();
+            out.push_str(&quoted.join(","));
+            out.push('\n');
+        }
+        f.write_str(&out)
     }
 }
 

@@ -3,12 +3,12 @@
 //! `serde` is not available offline, and the only JSON this project touches
 //! is `artifacts/meta.json` (written by our own `aot.py`) plus experiment
 //! reports we emit ourselves — a small, total parser is sufficient and
-//! keeps the dependency tree at `xla` + `anyhow`.
+//! keeps the crate dependency-free.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use anyhow::{anyhow, bail, Result};
+use crate::{bail, err, Result};
 
 /// A JSON value. Numbers are kept as f64 (this project never needs u64
 /// precision beyond 2^53).
@@ -67,7 +67,7 @@ impl Json {
     pub fn get(&self, key: &str) -> Result<&Json> {
         self.as_obj()
             .and_then(|o| o.get(key))
-            .ok_or_else(|| anyhow!("missing key {key:?}"))
+            .ok_or_else(|| err!("missing key {key:?}"))
     }
 
     /// Serialize with 2-space indentation.
@@ -199,7 +199,7 @@ impl<'a> Parser<'a> {
         self.b
             .get(self.i)
             .copied()
-            .ok_or_else(|| anyhow!("unexpected end of input"))
+            .ok_or_else(|| err!("unexpected end of input"))
     }
 
     fn eat(&mut self, c: u8) -> Result<()> {
@@ -311,7 +311,7 @@ impl<'a> Parser<'a> {
                             let hex = self
                                 .b
                                 .get(self.i..self.i + 4)
-                                .ok_or_else(|| anyhow!("bad \\u escape"))?;
+                                .ok_or_else(|| err!("bad \\u escape"))?;
                             let code = u32::from_str_radix(
                                 std::str::from_utf8(hex)?,
                                 16,
@@ -319,7 +319,7 @@ impl<'a> Parser<'a> {
                             self.i += 4;
                             s.push(
                                 char::from_u32(code)
-                                    .ok_or_else(|| anyhow!("bad codepoint"))?,
+                                    .ok_or_else(|| err!("bad codepoint"))?,
                             );
                         }
                         e => bail!("bad escape \\{}", e as char),
@@ -335,7 +335,7 @@ impl<'a> Parser<'a> {
                         let chunk = self
                             .b
                             .get(start..start + len)
-                            .ok_or_else(|| anyhow!("bad utf-8"))?;
+                            .ok_or_else(|| err!("bad utf-8"))?;
                         s.push_str(std::str::from_utf8(chunk)?);
                         self.i = start + len;
                     }
@@ -354,7 +354,7 @@ impl<'a> Parser<'a> {
         }
         let text = std::str::from_utf8(&self.b[start..self.i])?;
         Ok(Json::Num(text.parse::<f64>().map_err(|e| {
-            anyhow!("bad number {text:?} at byte {start}: {e}")
+            err!("bad number {text:?} at byte {start}: {e}")
         })?))
     }
 }

@@ -1,6 +1,7 @@
 //! Small self-contained substrates (no external crates are available
-//! offline beyond `xla` + `anyhow`): JSON, CSV, CLI parsing, a seeded
-//! property-testing mini-framework, and a wall-clock bench timer.
+//! offline; see `crate::error` for the `anyhow` stand-in): JSON, CSV,
+//! CLI parsing, a seeded property-testing mini-framework, and a
+//! wall-clock bench timer.
 
 pub mod bench;
 pub mod cli;

@@ -1,0 +1,186 @@
+//! Integration tests for the throughput evaluation pipeline: parallel
+//! sharding must be bit-identical to sequential evaluation, memoization
+//! must be deterministic and budget-neutral for hits, and the
+//! incremental Pareto archive must agree with the batch front +
+//! hypervolume functions under arbitrary insertion orders.
+
+use lumina::design::{sample, DesignPoint, DesignSpace};
+use lumina::eval::{
+    BudgetedEvaluator, CachedEvaluator, EvalOne, Evaluator,
+    ParallelEvaluator,
+};
+use lumina::pareto::{
+    hypervolume, normalize, pareto_front, Objectives, ParetoArchive,
+    PHV_REF,
+};
+use lumina::sim::{CompassSim, RooflineSim};
+use lumina::stats::Pcg32;
+use lumina::util::prop;
+use lumina::workload::GPT3_175B;
+
+fn batch(n: usize, seed: u64) -> Vec<DesignPoint> {
+    let space = DesignSpace::table1();
+    let mut rng = Pcg32::new(seed);
+    sample::uniform_batch(&space, &mut rng, n)
+}
+
+#[test]
+fn parallel_matches_sequential_bitwise_roofline_256() {
+    let designs = batch(256, 41);
+    let mut seq = RooflineSim::new(GPT3_175B);
+    let want = seq.eval_batch(&designs).unwrap();
+    for threads in [2usize, 4, 8] {
+        let mut par = ParallelEvaluator::with_threads(
+            RooflineSim::new(GPT3_175B),
+            threads,
+        );
+        let got = par.eval_batch(&designs).unwrap();
+        // Metrics is PartialEq over f32 lanes: equality here is bitwise
+        // (same pure function, same inputs, no reassociation).
+        assert_eq!(got, want, "threads={threads}");
+    }
+}
+
+#[test]
+fn parallel_matches_sequential_bitwise_compass_256() {
+    let designs = batch(256, 42);
+    let mut seq = CompassSim::gpt3();
+    let want = seq.eval_batch(&designs).unwrap();
+    let mut par = ParallelEvaluator::new(CompassSim::gpt3());
+    let got = par.eval_batch(&designs).unwrap();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn parallel_single_design_matches_eval_one() {
+    let sim = CompassSim::gpt3();
+    let d = DesignPoint::paper_design_a();
+    let want = sim.eval_one(&d);
+    let mut par = ParallelEvaluator::new(sim);
+    assert_eq!(par.eval(&d).unwrap(), want);
+}
+
+#[test]
+fn cache_is_deterministic_and_counts_hits() {
+    let designs = batch(128, 7);
+    let mut plain = RooflineSim::new(GPT3_175B);
+    let want = plain.eval_batch(&designs).unwrap();
+
+    let mut cached = CachedEvaluator::new(RooflineSim::new(GPT3_175B));
+    let first = cached.eval_batch(&designs).unwrap();
+    let second = cached.eval_batch(&designs).unwrap();
+    assert_eq!(first, want);
+    assert_eq!(second, want);
+
+    let c = cached.cache_counters().unwrap();
+    // 128 draws may contain collisions; every unique design missed once,
+    // everything else hit.
+    let unique = cached.len() as u64;
+    assert_eq!(c.misses, unique);
+    assert_eq!(c.hits, 2 * designs.len() as u64 - unique);
+    assert!(c.hit_rate() > 0.49);
+}
+
+#[test]
+fn cached_parallel_pipeline_composes() {
+    // The full pipeline: memoization over parallel sharding over the
+    // pure simulator — still bit-identical to plain sequential.
+    let designs = batch(96, 8);
+    let mut plain = CompassSim::gpt3();
+    let want = plain.eval_batch(&designs).unwrap();
+    let mut pipeline =
+        CachedEvaluator::new(ParallelEvaluator::new(CompassSim::gpt3()));
+    assert_eq!(pipeline.eval_batch(&designs).unwrap(), want);
+    assert_eq!(pipeline.eval_batch(&designs).unwrap(), want);
+    assert_eq!(pipeline.name(), "compass");
+}
+
+#[test]
+fn budget_charges_misses_only_across_pipeline() {
+    let designs = batch(24, 9);
+    let mut pipeline =
+        CachedEvaluator::new(ParallelEvaluator::new(
+            RooflineSim::new(GPT3_175B),
+        ));
+    let mut be = BudgetedEvaluator::new(&mut pipeline, 64);
+    let first = be.eval_batch(&designs).unwrap();
+    assert_eq!(first.len(), 24);
+    let spent_after_first = be.spent();
+    assert!(spent_after_first <= 24);
+    // Full revisit: logged, not charged.
+    let again = be.eval_batch(&designs).unwrap();
+    assert_eq!(again.len(), 24);
+    assert_eq!(be.spent(), spent_after_first);
+    assert_eq!(be.evaluations(), 48);
+    // At least the full second pass was served from the cache.
+    assert!(be.cache_counters().unwrap().hits >= 24);
+}
+
+#[test]
+fn archive_matches_batch_front_and_phv_on_random_trajectories() {
+    // Random insertion orders over clustered points (duplicates and
+    // dominance chains likely): after every push the archive's front and
+    // hypervolume must match the batch pareto_front/hypervolume of the
+    // prefix.
+    prop::forall(
+        2026,
+        24,
+        |r| {
+            let n = r.range_usize(1, 40);
+            (0..n)
+                .map(|_| {
+                    [
+                        (r.range_usize(0, 8) as f64) * 0.25,
+                        (r.range_usize(0, 8) as f64) * 0.25,
+                        (r.range_usize(0, 8) as f64) * 0.25,
+                    ]
+                })
+                .collect::<Vec<Objectives>>()
+        },
+        |pts| {
+            let mut archive = ParetoArchive::new(PHV_REF);
+            for (i, p) in pts.iter().enumerate() {
+                archive.push(*p);
+                let prefix = &pts[..=i];
+                if archive.front_ids() != pareto_front(prefix) {
+                    return false;
+                }
+                let batch_hv = hypervolume(prefix, &PHV_REF);
+                let inc_hv = archive.hypervolume();
+                if (inc_hv - batch_hv).abs() > 1e-9 * batch_hv.max(1.0) {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn archive_agrees_on_real_evaluator_trajectories() {
+    // End-to-end shape: normalized roofline objectives, as the race
+    // scores them.
+    let designs = batch(200, 77);
+    let mut sim = RooflineSim::new(GPT3_175B);
+    let reference = sim.eval(&DesignPoint::a100()).unwrap().objectives();
+    let objs: Vec<Objectives> = sim
+        .eval_batch(&designs)
+        .unwrap()
+        .iter()
+        .map(|m| m.objectives())
+        .collect();
+    let normalized = normalize(&objs, &reference);
+    let mut archive = ParetoArchive::new(PHV_REF);
+    for o in &normalized {
+        archive.push(*o);
+    }
+    assert_eq!(archive.front_ids(), pareto_front(&normalized));
+    let batch_hv = hypervolume(&normalized, &PHV_REF);
+    assert!(
+        (archive.hypervolume() - batch_hv).abs()
+            <= 1e-9 * batch_hv.max(1.0),
+        "incremental {} vs batch {batch_hv}",
+        archive.hypervolume()
+    );
+    assert_eq!(archive.len(), 200);
+}
