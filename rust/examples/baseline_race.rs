@@ -14,6 +14,7 @@ fn main() -> lumina::Result<()> {
         trials: 3,
         seed: 7,
         evaluator: EvaluatorKind::RooflinePjrt,
+        ..Default::default()
     };
     println!(
         "racing 6 methods, {} samples x {} trials ...",
