@@ -78,8 +78,10 @@ def main() -> None:
         "spec": {
             "d_model": spec.d_model,
             "n_heads": spec.n_heads,
+            "n_kv_heads": spec.n_kv_heads,
             "d_head": spec.d_head,
             "d_ffn": spec.d_ffn,
+            "n_layers": spec.n_layers,
             "tp": spec.tp,
             "batch": spec.batch,
             "prefill_seq": spec.prefill_seq,

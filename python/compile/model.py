@@ -13,10 +13,9 @@ import jax.numpy as jnp
 from . import workload
 from .kernels import roofline
 
-WORKLOADS = {
-    "gpt3-175b": workload.GPT3_175B,
-    "gpt3-tiny": workload.GPT3_TINY,
-}
+# The lowerable workloads ARE the scenario registry (one shared source
+# of truth with rust/src/workload/scenario.rs via workload.SCENARIOS).
+WORKLOADS = workload.SCENARIOS
 
 
 def eval_fn(spec: workload.WorkloadSpec, tile_b=roofline.DEFAULT_TILE_B):

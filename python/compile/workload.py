@@ -1,16 +1,29 @@
-"""GPT-3 inference operator tables (compile-path copy).
+"""Inference workload operator tables (compile-path copy).
 
 Builds the per-layer operator tables for the prefill (TTFT) and decode
-(TPOT) phases of a tensor-parallel GPT-3-175B layer, matching the paper's
-setup (Section 5.3): TP=8, batch 8, prefill sequence 2048, TPOT measured at
-output token 1024, FP16 everywhere.
+(TPOT) phases of one tensor-parallel transformer layer. The default
+scenario matches the paper's setup (Section 5.3): GPT-3 175B, TP=8, batch
+8, prefill sequence 2048, TPOT measured at output token 1024, FP16
+everywhere. A registry of named scenarios (``SCENARIOS``) adds
+Llama-class dense/GQA models and deployment variants (long-context
+prefill, latency-bound decode, throughput serving).
 
-MIRRORED in rust/src/workload/gpt3.rs — the Rust runtime carries the same
-table for the detailed simulator and the Rust roofline mirror; the artifact
-bakes this table in as constants at lowering time.
+Grouped-query attention folds the score/value matmuls per KV head: each
+KV head serves ``group = n_heads / n_kv_heads`` query heads, so the
+matmuls carry ``M = group * rows`` with ``count = batch *
+kv_heads_local`` — identical FLOPs to the per-query-head form, with K/V
+operand bytes counted once per KV head. For MHA (``n_kv_heads ==
+n_heads``) every formula reduces bit-for-bit to the historical
+construction.
+
+MIRRORED in rust/src/workload/ — the Rust runtime carries the same
+tables for the detailed simulator and the Rust roofline mirror; the
+artifact bakes this table in as constants at lowering time. The Rust
+integration test `op_table_matches_python_mirror_for_all_scenarios`
+cross-checks every registered scenario.
 """
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, replace
 
 import numpy as np
 
@@ -23,16 +36,56 @@ class WorkloadSpec:
 
     d_model: int = 12288
     n_heads: int = 96
+    # GQA KV heads; None (the default) means classic MHA, i.e. it tracks
+    # n_heads — a spec overriding n_heads alone must not inherit GPT-3's
+    # KV-head count. NOTE: this guard covers the constructor only;
+    # dataclasses.replace() passes the source's already-resolved
+    # n_kv_heads, so replace(spec, n_heads=...) keeps the old KV count —
+    # pass n_kv_heads explicitly when changing n_heads via replace.
+    n_kv_heads: "int | None" = None
     d_head: int = 128
     d_ffn: int = 49152
+    n_layers: int = 96         # full-model depth (evaluation is per-layer)
     tp: int = 8
     batch: int = 8
     prefill_seq: int = 2048
-    decode_pos: int = 1024  # TPOT measured at this output token
+    decode_pos: int = 1024     # TPOT measured at this output token
+
+    def __post_init__(self):
+        if self.n_kv_heads is None:
+            object.__setattr__(self, "n_kv_heads", self.n_heads)
+
+    def is_consistent(self) -> bool:
+        """Mirror of rust WorkloadSpec::is_consistent."""
+        return (
+            self.tp > 0
+            and self.batch > 0
+            and self.prefill_seq > 0
+            and self.decode_pos > 0
+            and self.d_model == self.n_heads * self.d_head
+            and self.n_heads % self.tp == 0
+            and self.n_kv_heads % self.tp == 0
+            and self.kv_heads_local > 0
+            and self.heads_local % self.kv_heads_local == 0
+            and self.d_ffn % self.tp == 0
+            and self.d_model % self.tp == 0
+            and (self.d_model + 2 * self.n_kv_heads * self.d_head)
+            % self.tp == 0
+            and self.n_layers > 0
+        )
 
     @property
     def heads_local(self) -> int:
         return self.n_heads // self.tp
+
+    @property
+    def kv_heads_local(self) -> int:
+        return self.n_kv_heads // self.tp
+
+    @property
+    def group(self) -> int:
+        """Query heads sharing one KV head (1 for MHA)."""
+        return self.heads_local // self.kv_heads_local
 
     @property
     def ffn_local(self) -> int:
@@ -42,14 +95,46 @@ class WorkloadSpec:
     def kv_len(self) -> int:
         return self.prefill_seq + self.decode_pos
 
+    @property
+    def qkv_cols(self) -> int:
+        """Per-partition QKV output width (== 3 * d_model / tp for MHA)."""
+        return (self.d_model + 2 * self.n_kv_heads * self.d_head) // self.tp
+
 
 GPT3_175B = WorkloadSpec()
 
 # A small config for fast tests / examples.
 GPT3_TINY = WorkloadSpec(
-    d_model=1024, n_heads=16, d_head=64, d_ffn=4096, tp=8,
-    batch=8, prefill_seq=256, decode_pos=128,
+    d_model=1024, n_heads=16, n_kv_heads=16, d_head=64, d_ffn=4096,
+    n_layers=4, tp=8, batch=8, prefill_seq=256, decode_pos=128,
 )
+
+# Llama-70B-class dense GQA base shared by the deployment scenarios.
+_LLAMA_70B = WorkloadSpec(
+    d_model=8192, n_heads=64, n_kv_heads=8, d_head=128, d_ffn=28672,
+    n_layers=80, tp=8, batch=8, prefill_seq=2048, decode_pos=1024,
+)
+
+# Mirror of rust/src/workload/scenario.rs::SCENARIOS (same names/specs).
+SCENARIOS = {
+    "gpt3-175b": GPT3_175B,
+    "gpt3-tiny": GPT3_TINY,
+    "llama-7b": WorkloadSpec(
+        d_model=4096, n_heads=32, n_kv_heads=32, d_head=128, d_ffn=11008,
+        n_layers=32, tp=2, batch=8, prefill_seq=2048, decode_pos=1024,
+    ),
+    "llama-70b": _LLAMA_70B,
+    "long-context": replace(
+        _LLAMA_70B, batch=1, prefill_seq=16384, decode_pos=512),
+    "latency-decode": replace(
+        _LLAMA_70B, batch=1, prefill_seq=128, decode_pos=3968),
+    "serving": replace(
+        _LLAMA_70B, batch=64, prefill_seq=512, decode_pos=1536),
+}
+
+
+def spec_by_name(name: str) -> WorkloadSpec:
+    return SCENARIOS[name]
 
 
 def _matmul(M, N, K, count=1):
@@ -75,13 +160,14 @@ def prefill_ops(w: WorkloadSpec):
     """Operator list for one layer of prefill (TTFT phase)."""
     T = w.batch * w.prefill_seq
     S = w.prefill_seq
-    hl, d, dh = w.heads_local, w.d_model, w.d_head
+    kvl, g, d, dh = w.kv_heads_local, w.group, w.d_model, w.d_head
     ops = [
         _vector(T * d),                                    # layernorm 1
-        _matmul(T, 3 * d // w.tp, d),                      # QKV projection
-        _matmul(S, S, dh, count=w.batch * hl),             # scores QK^T
-        _vector(w.batch * hl * S * S, flops_per_elem=5.0),  # softmax
-        _matmul(S, dh, S, count=w.batch * hl),             # attn @ V
+        _matmul(T, w.qkv_cols, d),                         # QKV projection
+        _matmul(g * S, S, dh, count=w.batch * kvl),        # scores QK^T
+        _vector(w.batch * w.heads_local * S * S,
+                flops_per_elem=5.0),                       # softmax
+        _matmul(g * S, dh, S, count=w.batch * kvl),        # attn @ V
         _matmul(T, d, d // w.tp),                          # output proj
         _allreduce(T * d * C.FP16_BYTES, w.tp),            # AR after attn
         _vector(T * d),                                    # layernorm 2
@@ -97,13 +183,13 @@ def decode_ops(w: WorkloadSpec):
     """Operator list for one layer of decode at output token `decode_pos`."""
     B = w.batch
     Sk = w.kv_len
-    hl, d, dh = w.heads_local, w.d_model, w.d_head
+    kvl, g, d, dh = w.kv_heads_local, w.group, w.d_model, w.d_head
     ops = [
         _vector(B * d),                                    # layernorm 1
-        _matmul(B, 3 * d // w.tp, d),                      # QKV projection
-        _matmul(1, Sk, dh, count=B * hl),                  # scores (GEMV)
-        _vector(B * hl * Sk, flops_per_elem=5.0),          # softmax
-        _matmul(1, dh, Sk, count=B * hl),                  # attn @ V
+        _matmul(B, w.qkv_cols, d),                         # QKV projection
+        _matmul(g, Sk, dh, count=B * kvl),                 # scores (GEMV)
+        _vector(B * w.heads_local * Sk, flops_per_elem=5.0),  # softmax
+        _matmul(g, dh, Sk, count=B * kvl),                 # attn @ V
         _matmul(B, d, d // w.tp),                          # output proj
         _allreduce(B * d * C.FP16_BYTES, w.tp),            # AR after attn
         _vector(B * d),                                    # layernorm 2
@@ -117,6 +203,7 @@ def decode_ops(w: WorkloadSpec):
 
 def op_table(w: WorkloadSpec = GPT3_175B) -> np.ndarray:
     """Padded [N_PHASES, MAX_OPS, N_COLS] float32 operator table."""
+    assert w.is_consistent(), f"inconsistent workload spec: {w}"
     tbl = np.full((C.N_PHASES, C.MAX_OPS, C.N_COLS), 0.0, dtype=np.float32)
     tbl[:, :, C.COL_KIND] = C.KIND_PAD
     for p, ops in enumerate((prefill_ops(w), decode_ops(w))):

@@ -29,6 +29,7 @@ fn main() {
         trials,
         seed: 31337,
         evaluator: EvaluatorKind::Compass,
+        ..Default::default()
     };
     let results = run_race(&cfg).expect("race failed");
 

@@ -24,6 +24,7 @@ fn main() {
         trials: env_usize("LUMINA_TRIALS", 5),
         seed: 2026,
         evaluator: EvaluatorKind::RooflinePjrt,
+        ..Default::default()
     };
     section(&format!(
         "Figure 4: mean PHV vs sample efficiency ({} samples x {} trials)",
@@ -80,7 +81,7 @@ fn main() {
 
     // Per-step PHV race curves (trial 0 of each method) for the
     // convergence plot, via the incremental archive.
-    let reference = reference_objectives(cfg.evaluator)
+    let reference = reference_objectives(cfg.evaluator, &cfg.workload)
         .expect("reference evaluation failed");
     let mut curves = Csv::new(&["method", "step", "phv"]);
     for r in results.iter().filter(|r| r.trial == 0) {

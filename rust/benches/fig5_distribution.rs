@@ -21,6 +21,7 @@ fn main() {
         trials: env_usize("LUMINA_TRIALS", 8),
         seed: 90210,
         evaluator: EvaluatorKind::RooflinePjrt,
+        ..Default::default()
     };
     section(&format!(
         "Figure 5: PHV / sample-efficiency distribution ({} trials)",

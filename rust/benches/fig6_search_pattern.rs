@@ -23,14 +23,17 @@ fn main() {
         trials: 1,
         seed: 6,
         evaluator: EvaluatorKind::RooflinePjrt,
+        ..Default::default()
     };
     let results = run_race(&cfg).expect("race failed");
-    let reference =
-        lumina::figures::race::reference_objectives(cfg.evaluator)
-            .unwrap();
+    let reference = lumina::figures::race::reference_objectives(
+        cfg.evaluator,
+        &cfg.workload,
+    )
+    .unwrap();
 
     let space = DesignSpace::table1();
-    let mut bg_eval = cfg.evaluator.make();
+    let mut bg_eval = cfg.evaluator.make_for(&cfg.workload);
     let emb = SpaceEmbedding::fit(&space, bg_eval.as_mut(), 2000, 61)
         .expect("embedding");
 

@@ -1,0 +1,78 @@
+//! Figure 7 (suite figure): per-scenario Pareto fronts — the same DSE
+//! pipeline run on every suite workload scenario, each front normalized
+//! by its own A100 reference. Shows how the trade-off surface shifts as
+//! the bottleneck regime flips between scenarios.
+//!
+//! Run: `cargo bench --bench fig7_scenario_fronts`
+//! Env: `LUMINA_SAMPLES` (budget per scenario, default 200),
+//!      `LUMINA_EVALUATOR` (`roofline`, `roofline-rs`, `compass`).
+
+use lumina::csv_row;
+use lumina::design::Param;
+use lumina::figures::race::EvaluatorKind;
+use lumina::figures::scenarios::scenario_fronts;
+use lumina::util::bench::section;
+use lumina::util::csv::Csv;
+use lumina::workload::suite_scenarios;
+
+fn main() {
+    let budget = std::env::var("LUMINA_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    let kind = match std::env::var("LUMINA_EVALUATOR").as_deref() {
+        Ok("compass") => EvaluatorKind::Compass,
+        Ok("roofline-rs") => EvaluatorKind::RooflineRust,
+        _ => EvaluatorKind::RooflinePjrt,
+    };
+    let scenarios = suite_scenarios();
+    section(&format!(
+        "Figure 7: per-scenario Pareto fronts ({} scenarios x {budget} \
+         samples)",
+        scenarios.len()
+    ));
+
+    let fronts = scenario_fronts(&scenarios, kind, budget, 2026)
+        .expect("scenario exploration failed");
+
+    let mut csv = Csv::new(&[
+        "scenario", "rank", "links", "cores", "sublanes", "sa", "vecw",
+        "sram_kb", "gbuf_mb", "memch", "ttft_norm", "tpot_norm",
+        "area_norm", "phv",
+    ]);
+    println!(
+        "{:<16} {:>6} {:>8} {:>24}",
+        "scenario", "front", "PHV", "reference (ttft/tpot/area)"
+    );
+    for f in &fronts {
+        println!(
+            "{:<16} {:>6} {:>8.4} {:>10.3}/{:.4}/{:.0}",
+            f.name,
+            f.front.len(),
+            f.phv,
+            f.reference[0],
+            f.reference[1],
+            f.reference[2]
+        );
+        for (rank, (d, o)) in f.front.iter().enumerate() {
+            csv.row(csv_row![
+                f.name,
+                rank,
+                d.get(Param::Links),
+                d.get(Param::Cores),
+                d.get(Param::Sublanes),
+                d.get(Param::SystolicArray),
+                d.get(Param::VectorWidth),
+                d.get(Param::SramKb),
+                d.get(Param::GbufMb),
+                d.get(Param::MemChannels),
+                format!("{:.5}", o[0]),
+                format!("{:.5}", o[1]),
+                format!("{:.5}", o[2]),
+                format!("{:.5}", f.phv)
+            ]);
+        }
+    }
+    csv.write("out/fig7_scenario_fronts.csv").unwrap();
+    println!("wrote out/fig7_scenario_fronts.csv");
+}

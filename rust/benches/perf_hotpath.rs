@@ -22,7 +22,7 @@ use lumina::sim::{CompassSim, RooflineSim};
 use lumina::stats::Pcg32;
 use lumina::util::bench::{bench, section};
 use lumina::util::csv::Csv;
-use lumina::workload::GPT3_175B;
+use lumina::workload::default_scenario;
 use lumina::csv_row;
 
 fn main() {
@@ -65,7 +65,7 @@ fn main() {
     }
 
     // --- Rust mirror, sequential.
-    let mut mirror = RooflineSim::new(GPT3_175B);
+    let mut mirror = RooflineSim::new(default_scenario().spec);
     let r = bench("rust roofline eval, batch=256", 2, 50, || {
         let _ = mirror.eval_batch(&batch).unwrap();
     });
@@ -77,7 +77,7 @@ fn main() {
 
     // --- Rust mirror, batch-parallel.
     let mut par_mirror =
-        ParallelEvaluator::new(RooflineSim::new(GPT3_175B));
+        ParallelEvaluator::new(RooflineSim::new(default_scenario().spec));
     let r =
         bench("rust roofline eval (parallel), batch=256", 2, 50, || {
             let _ = par_mirror.eval_batch(&batch).unwrap();
@@ -126,7 +126,7 @@ fn main() {
     ]);
 
     // --- PHV kernel on a 1,000-point front.
-    let mut sim = RooflineSim::new(GPT3_175B);
+    let mut sim = RooflineSim::new(default_scenario().spec);
     let objs: Vec<Objectives> = sim
         .eval_batch(&sample::uniform_batch(&space, &mut rng, 1000))
         .unwrap()
@@ -163,7 +163,7 @@ fn main() {
 
     // --- One full LUMINA run (60 samples) incl. prompts + analyst.
     let r = bench("lumina 60-sample run (rust roofline)", 1, 5, || {
-        let mut sim = RooflineSim::new(GPT3_175B);
+        let mut sim = RooflineSim::new(default_scenario().spec);
         let mut be = BudgetedEvaluator::new(&mut sim, 60);
         Lumina::with_seed(1).run(&space, &mut be).unwrap();
     });

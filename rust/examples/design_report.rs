@@ -11,7 +11,7 @@ use lumina::design::DesignPoint;
 use lumina::eval::{Evaluator, Phase};
 use lumina::figures::table4::{render, report_rows};
 use lumina::sim::{CompassSim, RooflineSim};
-use lumina::workload::GPT3_175B;
+use lumina::workload::default_scenario;
 
 fn main() -> lumina::Result<()> {
     let mut designs = vec![
@@ -33,7 +33,7 @@ fn main() -> lumina::Result<()> {
     }
 
     println!("== roofline model ==");
-    let mut roofline = RooflineSim::new(GPT3_175B);
+    let mut roofline = RooflineSim::new(default_scenario().spec);
     println!("{}", render(&report_rows(&mut roofline, &designs)?));
 
     println!("== compass (detailed) model ==");

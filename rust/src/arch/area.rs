@@ -100,7 +100,7 @@ mod tests {
         prop::forall(
             21,
             128,
-            |rng| s.decode_index(rng.next_u64() % s.size()),
+            |rng| s.decode_index(rng.next_u64() % s.size()).unwrap(),
             |d| {
                 Param::ALL.iter().all(|&p| {
                     let up = s.step(d, p, 1);

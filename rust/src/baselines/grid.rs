@@ -40,11 +40,15 @@ impl DseMethod for GridSearch {
         if budget == 0 {
             return Ok(());
         }
-        // Evenly strided indices cover every axis combination pattern.
+        // Evenly strided indices cover every axis combination pattern;
+        // the ring wrap-around is an explicit modulo here, not hidden
+        // inside the decoder.
         let stride = (total / budget).max(1);
         let mut idx = self.offset % total;
         while !eval.exhausted() {
-            let d = space.decode_index(idx % total);
+            let d = space
+                .decode_index(idx % total)
+                .expect("ring index reduced modulo size() decodes");
             eval.eval(&d)?;
             idx = idx.wrapping_add(stride);
         }

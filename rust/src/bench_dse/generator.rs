@@ -13,7 +13,7 @@ use crate::llm::analyst::analyst_area;
 use crate::llm::prompts;
 use crate::sim::RooflineSim;
 use crate::stats::rng::Pcg32;
-use crate::workload::GPT3_175B;
+use crate::workload::{default_scenario, WorkloadSpec};
 
 /// Benchmark task families (paper Figure 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -65,15 +65,27 @@ pub struct QuestionSet {
 }
 
 impl QuestionSet {
-    /// Generate the paper-sized question set for `task`.
+    /// Generate the paper-sized question set for `task` on the default
+    /// workload scenario (the paper's GPT-3 setup).
     pub fn generate(task: Task, seed: u64) -> QuestionSet {
         Self::generate_n(task, task.paper_count(), seed)
     }
 
     pub fn generate_n(task: Task, n: usize, seed: u64) -> QuestionSet {
+        Self::generate_n_for(task, n, seed, &default_scenario().spec)
+    }
+
+    /// Generate `n` questions whose ground truth is simulated under an
+    /// explicit workload (per-scenario benchmark variants).
+    pub fn generate_n_for(
+        task: Task,
+        n: usize,
+        seed: u64,
+        workload: &WorkloadSpec,
+    ) -> QuestionSet {
         let mut rng = Pcg32::with_stream(seed, task as u64 + 0xbe);
         let space = DesignSpace::table1();
-        let sim = RooflineSim::new(GPT3_175B);
+        let sim = RooflineSim::new(*workload);
         let questions = (0..n)
             .map(|_| match task {
                 Task::BottleneckAnalysis => {
@@ -264,7 +276,8 @@ fn gen_bottleneck_inner(
                 .join(" ; ")
         })
         .collect();
-    let prompt = prompts::bottleneck_question(&d, &m, phase, &choices);
+    let prompt =
+        prompts::bottleneck_question(sim.spec(), &d, &m, phase, &choices);
     Some(Question {
         task: Task::BottleneckAnalysis,
         prompt,

@@ -11,4 +11,6 @@ pub mod generator;
 pub mod runner;
 
 pub use generator::{Question, QuestionSet, Task};
-pub use runner::{run_benchmark, BenchmarkReport, TaskAccuracy};
+pub use runner::{
+    run_benchmark, run_benchmark_for, BenchmarkReport, TaskAccuracy,
+};

@@ -1,7 +1,8 @@
 //! Benchmark runner + scoring (reproduces paper Table 3).
 
-use crate::llm::{prompts, LanguageModel, ModelProfile, SimulatedAnalyst};
 use crate::llm::parse::parse_answer_letter;
+use crate::llm::{prompts, LanguageModel, ModelProfile, SimulatedAnalyst};
+use crate::workload::{default_scenario, WorkloadSpec};
 
 use super::generator::{Question, QuestionSet, Task};
 
@@ -51,12 +52,23 @@ pub fn run_benchmark(
     seed: u64,
     scale: f64,
 ) -> BenchmarkReport {
+    run_benchmark_for(profiles, seed, scale, &default_scenario().spec)
+}
+
+/// [`run_benchmark`] with the question ground truth simulated under an
+/// explicit workload scenario.
+pub fn run_benchmark_for(
+    profiles: &[ModelProfile],
+    seed: u64,
+    scale: f64,
+    workload: &WorkloadSpec,
+) -> BenchmarkReport {
     let sets: Vec<QuestionSet> = Task::ALL
         .iter()
         .map(|&t| {
             let n = ((t.paper_count() as f64 * scale).round() as usize)
                 .max(10);
-            QuestionSet::generate_n(t, n, seed)
+            QuestionSet::generate_n_for(t, n, seed, workload)
         })
         .collect();
 

@@ -11,7 +11,9 @@ use crate::stats::rng::Pcg32;
 /// Draw one uniform random grid point.
 pub fn uniform(space: &DesignSpace, rng: &mut Pcg32) -> DesignPoint {
     let idx = rng.next_u64() % space.size();
-    space.decode_index(idx)
+    space
+        .decode_index(idx)
+        .expect("index reduced modulo size() is always decodable")
 }
 
 /// Draw `n` uniform points (may repeat).

@@ -100,14 +100,23 @@ impl DesignSpace {
     }
 
     /// Decode a flat enumeration index into a point (mixed-radix).
-    pub fn decode_index(&self, mut idx: u64) -> DesignPoint {
+    ///
+    /// Returns `None` for `idx >= size()` rather than wrapping: in a
+    /// 4.7M-point space, silently aliasing out-of-range ids onto valid
+    /// points masks enumeration bugs (an off-by-N id and a legitimate
+    /// one become indistinguishable). Callers iterating a ring reduce
+    /// modulo [`Self::size`] explicitly first.
+    pub fn decode_index(&self, mut idx: u64) -> Option<DesignPoint> {
+        if idx >= self.size() {
+            return None;
+        }
         let mut values = [0u32; N_PARAMS];
         for i in (0..N_PARAMS).rev() {
             let n = self.values[i].len() as u64;
             values[i] = self.values[i][(idx % n) as usize];
             idx /= n;
         }
-        DesignPoint::new(values)
+        Some(DesignPoint::new(values))
     }
 
     /// Encode a grid point into its flat enumeration index.
@@ -202,10 +211,22 @@ mod tests {
             256,
             |rng| rng.next_u64() % size,
             |&idx| {
-                let d = s.decode_index(idx);
+                let d = s.decode_index(idx).unwrap();
                 s.contains(&d) && s.encode_index(&d) == Some(idx)
             },
         );
+    }
+
+    #[test]
+    fn decode_index_rejects_out_of_range() {
+        let s = DesignSpace::table1();
+        let size = s.size();
+        assert!(s.decode_index(size - 1).is_some());
+        // Regression: these used to wrap (idx % n per axis) and alias
+        // onto valid in-range points.
+        assert_eq!(s.decode_index(size), None);
+        assert_eq!(s.decode_index(size + 12345), None);
+        assert_eq!(s.decode_index(u64::MAX), None);
     }
 
     #[test]
@@ -214,7 +235,7 @@ mod tests {
         prop::forall(
             12,
             128,
-            |rng| s.decode_index(rng.next_u64() % s.size()),
+            |rng| s.decode_index(rng.next_u64() % s.size()).unwrap(),
             |d| {
                 let ns = s.neighbors(d);
                 !ns.is_empty()

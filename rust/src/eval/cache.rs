@@ -3,6 +3,13 @@
 //! GA elitism, ACO trail reinforcement, LUMINA restarts) can be served
 //! from a map instead of re-running the simulator.
 //!
+//! Entries are keyed on **(workload fingerprint, design)** — the metrics
+//! of a design are a function of the workload it was evaluated under, so
+//! the same design under two different workloads (a suite sweep, an
+//! evaluator whose workload is reconfigured) must never alias to one
+//! entry. The fingerprint is read from the inner evaluator on every
+//! batch via [`Evaluator::workload_fingerprint`].
+//!
 //! [`CachedEvaluator`] wraps any [`Evaluator`]; unique uncached designs
 //! of a batch are forwarded to the inner evaluator in first-appearance
 //! order (so inner results stay deterministic), then every requested
@@ -22,7 +29,7 @@ use crate::Result;
 #[derive(Debug)]
 pub struct CachedEvaluator<E> {
     inner: E,
-    map: HashMap<DesignPoint, Metrics>,
+    map: HashMap<(u64, DesignPoint), Metrics>,
     counters: CacheCounters,
 }
 
@@ -36,7 +43,7 @@ impl<E: Evaluator> CachedEvaluator<E> {
         self.counters
     }
 
-    /// Distinct design points memoized.
+    /// Distinct (workload, design) pairs memoized.
     pub fn len(&self) -> usize {
         self.map.len()
     }
@@ -47,6 +54,13 @@ impl<E: Evaluator> CachedEvaluator<E> {
 
     pub fn inner(&self) -> &E {
         &self.inner
+    }
+
+    /// Mutable access to the wrapped evaluator (e.g. to reconfigure its
+    /// workload; the cache re-reads the fingerprint on every batch, so
+    /// existing entries stay correct under their original key).
+    pub fn inner_mut(&mut self) -> &mut E {
+        &mut self.inner
     }
 
     pub fn into_inner(self) -> E {
@@ -61,11 +75,12 @@ impl<E: Evaluator> CachedEvaluator<E> {
 
 impl<E: Evaluator> Evaluator for CachedEvaluator<E> {
     fn eval_batch(&mut self, designs: &[DesignPoint]) -> Result<Vec<Metrics>> {
+        let fp = self.inner.workload_fingerprint();
         // Unique uncached designs, in first-appearance order.
         let mut fresh: Vec<DesignPoint> = Vec::new();
         let mut seen: HashSet<DesignPoint> = HashSet::new();
         for d in designs {
-            if !self.map.contains_key(d) && seen.insert(*d) {
+            if !self.map.contains_key(&(fp, *d)) && seen.insert(*d) {
                 fresh.push(*d);
             }
         }
@@ -73,12 +88,12 @@ impl<E: Evaluator> Evaluator for CachedEvaluator<E> {
             let ms = self.inner.eval_batch(&fresh)?;
             debug_assert_eq!(ms.len(), fresh.len());
             for (d, m) in fresh.iter().zip(ms) {
-                self.map.insert(*d, m);
+                self.map.insert((fp, *d), m);
             }
         }
         self.counters.misses += fresh.len() as u64;
         self.counters.hits += (designs.len() - fresh.len()) as u64;
-        Ok(designs.iter().map(|d| self.map[d]).collect())
+        Ok(designs.iter().map(|d| self.map[&(fp, *d)]).collect())
     }
 
     fn name(&self) -> &'static str {
@@ -86,11 +101,16 @@ impl<E: Evaluator> Evaluator for CachedEvaluator<E> {
     }
 
     fn is_cached(&self, d: &DesignPoint) -> bool {
-        self.map.contains_key(d)
+        self.map
+            .contains_key(&(self.inner.workload_fingerprint(), *d))
     }
 
     fn cache_counters(&self) -> Option<CacheCounters> {
         Some(self.counters)
+    }
+
+    fn workload_fingerprint(&self) -> u64 {
+        self.inner.workload_fingerprint()
     }
 }
 
@@ -156,5 +176,54 @@ mod tests {
         assert!(!c.is_cached(&a));
         c.eval_batch(&[a]).unwrap();
         assert_eq!(c.counters().misses, 2);
+    }
+
+    /// Same inner evaluator, but reporting a settable workload
+    /// fingerprint — models an evaluator reconfigured between batches.
+    struct TaggedEval {
+        inner: CountingEval,
+        tag: u64,
+    }
+
+    impl Evaluator for TaggedEval {
+        fn eval_batch(
+            &mut self,
+            designs: &[DesignPoint],
+        ) -> Result<Vec<Metrics>> {
+            let mut ms = self.inner.eval_batch(designs)?;
+            for m in &mut ms {
+                m.tpot_ms = self.tag as f32;
+            }
+            Ok(ms)
+        }
+        fn name(&self) -> &'static str {
+            "tagged"
+        }
+        fn workload_fingerprint(&self) -> u64 {
+            self.tag
+        }
+    }
+
+    #[test]
+    fn entries_are_keyed_per_workload() {
+        let mut c = CachedEvaluator::new(TaggedEval {
+            inner: CountingEval { calls: 0 },
+            tag: 1,
+        });
+        let d = DesignPoint::a100();
+        let under_a = c.eval(&d).unwrap();
+        assert!(c.is_cached(&d));
+        // Same design under a different workload: a distinct entry, not
+        // a stale hit.
+        c.inner.tag = 2;
+        assert!(!c.is_cached(&d));
+        let under_b = c.eval(&d).unwrap();
+        assert_ne!(under_a, under_b);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.counters(), CacheCounters { hits: 0, misses: 2 });
+        // Back on the first workload: served from its own entry.
+        c.inner.tag = 1;
+        assert_eq!(c.eval(&d).unwrap(), under_a);
+        assert_eq!(c.counters(), CacheCounters { hits: 1, misses: 2 });
     }
 }

@@ -29,9 +29,11 @@
 
 pub mod cache;
 pub mod parallel;
+pub mod suite;
 
 pub use cache::CachedEvaluator;
 pub use parallel::ParallelEvaluator;
+pub use suite::{ScenarioMetrics, SuiteEvaluator};
 
 use std::fmt;
 
@@ -156,6 +158,14 @@ pub trait EvalOne: Send + Sync {
     /// Short name for reports ("roofline-rs", "compass"). Named `label`
     /// (not `name`) so types implementing both traits stay unambiguous.
     fn label(&self) -> &'static str;
+
+    /// Fingerprint of the workload this evaluator is built for (see
+    /// [`crate::workload::WorkloadSpec::fingerprint`]); 0 means
+    /// workload-agnostic. Memo caches key on *(workload, design)* so the
+    /// same design under two workloads never aliases.
+    fn workload_fingerprint(&self) -> u64 {
+        0
+    }
 }
 
 /// Ceiling on budget-free cache hits in a [`BudgetedEvaluator`]: the
@@ -208,6 +218,14 @@ pub trait Evaluator {
     fn cache_counters(&self) -> Option<CacheCounters> {
         None
     }
+
+    /// Fingerprint of the workload the evaluator *currently* evaluates
+    /// (0 = workload-agnostic/unknown). [`CachedEvaluator`] keys entries
+    /// on *(workload, design)*, so evaluators whose workload can change
+    /// between batches must report it here.
+    fn workload_fingerprint(&self) -> u64 {
+        0
+    }
 }
 
 /// Boxed evaluators delegate, so pipeline adapters compose over
@@ -231,6 +249,10 @@ impl<E: Evaluator + ?Sized> Evaluator for Box<E> {
 
     fn cache_counters(&self) -> Option<CacheCounters> {
         (**self).cache_counters()
+    }
+
+    fn workload_fingerprint(&self) -> u64 {
+        (**self).workload_fingerprint()
     }
 }
 

@@ -62,6 +62,10 @@ impl<E: EvalOne> EvalOne for ParallelEvaluator<E> {
     fn label(&self) -> &'static str {
         self.inner.label()
     }
+
+    fn workload_fingerprint(&self) -> u64 {
+        self.inner.workload_fingerprint()
+    }
 }
 
 impl<E: EvalOne> Evaluator for ParallelEvaluator<E> {
@@ -71,6 +75,10 @@ impl<E: EvalOne> Evaluator for ParallelEvaluator<E> {
 
     fn name(&self) -> &'static str {
         self.inner.label()
+    }
+
+    fn workload_fingerprint(&self) -> u64 {
+        EvalOne::workload_fingerprint(&self.inner)
     }
 }
 

@@ -1,0 +1,311 @@
+//! Multi-scenario suite evaluation: one design, every registered
+//! workload scenario, one weighted composite objective.
+//!
+//! [`SuiteEvaluator`] owns one inner evaluator per scenario (built by a
+//! caller-supplied factory, so the suite composes with
+//! [`super::ParallelEvaluator`] / [`super::CachedEvaluator`] and any
+//! backend). `eval_batch` returns a **composite** [`Metrics`] per
+//! design: TTFT/TPOT are the weighted means of the per-scenario values
+//! normalized by that scenario's A100 reference (so the A100 scores
+//! exactly 1.0 on both axes and DSE methods optimize a dimensionless
+//! multi-scenario objective); stall stacks are normalized the same way,
+//! preserving the "stalls sum to phase time" invariant; area is
+//! workload-independent and taken from the first scenario. Per-scenario
+//! TTFT/TPOT reporting goes through [`SuiteEvaluator::eval_scenarios`].
+//!
+//! Composition order is fixed (registry order, f32 accumulation), so
+//! suite results are bit-deterministic and independent of whether the
+//! members are parallel, cached, or plain — covered by
+//! `tests/eval_pipeline.rs::suite_composite_is_deterministic_across_pipelines`.
+
+use crate::design::DesignPoint;
+use crate::eval::{Evaluator, Metrics};
+use crate::workload::{Scenario, WorkloadSpec};
+use crate::{bail, Result};
+
+/// One design's metrics under one named scenario.
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioMetrics {
+    pub name: &'static str,
+    pub weight: f64,
+    /// Per-layer metrics of the evaluated design under this scenario.
+    pub metrics: Metrics,
+    /// Per-layer A100 reference metrics under this scenario.
+    pub reference: Metrics,
+    /// Full-model depth for report-level scaling.
+    pub n_layers: u64,
+}
+
+impl ScenarioMetrics {
+    /// Full-model TTFT (all layers), milliseconds.
+    pub fn full_ttft_ms(&self) -> f32 {
+        self.metrics.ttft_ms * self.n_layers as f32
+    }
+
+    /// Full-model TPOT (all layers), milliseconds.
+    pub fn full_tpot_ms(&self) -> f32 {
+        self.metrics.tpot_ms * self.n_layers as f32
+    }
+}
+
+struct SuiteMember {
+    scenario: Scenario,
+    evaluator: Box<dyn Evaluator>,
+    reference: Metrics,
+}
+
+/// Weighted multi-scenario evaluator (see module docs).
+pub struct SuiteEvaluator {
+    members: Vec<SuiteMember>,
+    weight_total: f32,
+    fingerprint: u64,
+}
+
+impl SuiteEvaluator {
+    /// Build one inner evaluator per scenario via `factory` and pin each
+    /// scenario's A100 reference. Scenario weights must sum positive.
+    pub fn new(
+        scenarios: &[&Scenario],
+        factory: &mut dyn FnMut(&WorkloadSpec) -> Box<dyn Evaluator>,
+    ) -> Result<Self> {
+        if scenarios.is_empty() {
+            bail!("suite needs at least one scenario");
+        }
+        let weight_total: f32 =
+            scenarios.iter().map(|s| s.weight as f32).sum();
+        if weight_total <= 0.0 {
+            bail!("suite scenario weights must sum positive");
+        }
+        let a100 = DesignPoint::a100();
+        let mut members = Vec::with_capacity(scenarios.len());
+        let mut fingerprint: u64 = 0xcbf29ce484222325;
+        for s in scenarios {
+            let mut evaluator = factory(&s.spec);
+            let reference = evaluator.eval(&a100)?;
+            fingerprint ^= s.spec.fingerprint();
+            fingerprint = fingerprint.wrapping_mul(0x100000001b3);
+            fingerprint ^= s.weight.to_bits();
+            fingerprint = fingerprint.wrapping_mul(0x100000001b3);
+            members.push(SuiteMember {
+                scenario: **s,
+                evaluator,
+                reference,
+            });
+        }
+        Ok(Self { members, weight_total, fingerprint })
+    }
+
+    /// The scenarios of this suite, in evaluation order.
+    pub fn scenarios(&self) -> Vec<&Scenario> {
+        self.members.iter().map(|m| &m.scenario).collect()
+    }
+
+    /// Per-scenario metrics of one design (report path; the
+    /// [`Evaluator`] impl returns the composite instead).
+    pub fn eval_scenarios(
+        &mut self,
+        d: &DesignPoint,
+    ) -> Result<Vec<ScenarioMetrics>> {
+        let mut out = Vec::with_capacity(self.members.len());
+        for m in &mut self.members {
+            let metrics = m.evaluator.eval(d)?;
+            out.push(ScenarioMetrics {
+                name: m.scenario.name,
+                weight: m.scenario.weight,
+                metrics,
+                reference: m.reference,
+                n_layers: m.scenario.spec.n_layers,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Compose one design's per-member metrics (member order matches
+    /// `self.members`) into the suite objective.
+    fn composite(&self, per_member: &[Metrics]) -> Metrics {
+        debug_assert_eq!(per_member.len(), self.members.len());
+        let mut ttft = 0.0f32;
+        let mut tpot = 0.0f32;
+        let mut stalls = [[0.0f32; 3]; 2];
+        for (mem, m) in self.members.iter().zip(per_member) {
+            let wn = mem.scenario.weight as f32 / self.weight_total;
+            let r = &mem.reference;
+            ttft += wn * (m.ttft_ms / r.ttft_ms);
+            tpot += wn * (m.tpot_ms / r.tpot_ms);
+            for (p, phase_ref) in [r.ttft_ms, r.tpot_ms].into_iter().enumerate()
+            {
+                for c in 0..3 {
+                    stalls[p][c] += wn * (m.stalls[p][c] / phase_ref);
+                }
+            }
+        }
+        Metrics {
+            ttft_ms: ttft,
+            tpot_ms: tpot,
+            // Die area does not depend on the workload; every member
+            // reports the same value for a given design.
+            area_mm2: per_member[0].area_mm2,
+            stalls,
+        }
+    }
+}
+
+impl Evaluator for SuiteEvaluator {
+    fn eval_batch(&mut self, designs: &[DesignPoint]) -> Result<Vec<Metrics>> {
+        let mut per_member: Vec<Vec<Metrics>> =
+            Vec::with_capacity(self.members.len());
+        for m in &mut self.members {
+            let ms = m.evaluator.eval_batch(designs)?;
+            if ms.len() != designs.len() {
+                bail!(
+                    "suite member {} returned {} results for {} designs",
+                    m.scenario.name,
+                    ms.len(),
+                    designs.len()
+                );
+            }
+            per_member.push(ms);
+        }
+        Ok((0..designs.len())
+            .map(|i| {
+                let row: Vec<Metrics> =
+                    per_member.iter().map(|ms| ms[i]).collect();
+                self.composite(&row)
+            })
+            .collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "suite"
+    }
+
+    fn workload_fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{Bottleneck, Phase};
+    use crate::sim::RooflineSim;
+    use crate::workload::{scenario_by_name, suite_scenarios};
+
+    fn suite() -> SuiteEvaluator {
+        SuiteEvaluator::new(
+            &suite_scenarios(),
+            &mut |spec: &WorkloadSpec| -> Box<dyn Evaluator> {
+                Box::new(RooflineSim::new(*spec))
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn a100_composite_is_unity() {
+        let mut s = suite();
+        let m = s.eval(&DesignPoint::a100()).unwrap();
+        assert!((m.ttft_ms - 1.0).abs() < 1e-5, "{m:?}");
+        assert!((m.tpot_ms - 1.0).abs() < 1e-5, "{m:?}");
+        // Stall stacks keep the sum-to-phase-time invariant.
+        let pf: f32 = m.stalls[0].iter().sum();
+        let dc: f32 = m.stalls[1].iter().sum();
+        assert!((pf - m.ttft_ms).abs() < 1e-4);
+        assert!((dc - m.tpot_ms).abs() < 1e-4);
+    }
+
+    #[test]
+    fn composite_ranks_paper_designs_below_reference() {
+        let mut s = suite();
+        let a100 = s.eval(&DesignPoint::a100()).unwrap();
+        let a = s.eval(&DesignPoint::paper_design_a()).unwrap();
+        assert!(a.ttft_ms < a100.ttft_ms);
+        assert!(a.area_mm2 < a100.area_mm2);
+    }
+
+    #[test]
+    fn per_scenario_report_covers_all_members() {
+        let mut s = suite();
+        let rows = s.eval_scenarios(&DesignPoint::a100()).unwrap();
+        assert_eq!(rows.len(), suite_scenarios().len());
+        for r in &rows {
+            assert!(r.metrics.ttft_ms > 0.0);
+            assert!((r.metrics.ttft_ms - r.reference.ttft_ms).abs() < 1e-9);
+            assert!(r.full_ttft_ms() > r.metrics.ttft_ms);
+        }
+        // The long-context scenario must be prefill-dominated relative
+        // to the latency-decode one.
+        let by_name = |n: &str| {
+            rows.iter().find(|r| r.name == n).unwrap().metrics
+        };
+        let lc = by_name("long-context");
+        let ld = by_name("latency-decode");
+        assert!(lc.ttft_ms > ld.ttft_ms);
+        assert!(
+            lc.ttft_ms / lc.tpot_ms > ld.ttft_ms / ld.tpot_ms,
+            "long-context should skew toward prefill"
+        );
+    }
+
+    #[test]
+    fn scenario_regimes_flip_bottlenecks() {
+        // The suite exists to exercise different bottleneck structures;
+        // check the A100 actually sees different dominant stalls across
+        // scenarios in at least one phase.
+        let mut s = suite();
+        let rows = s.eval_scenarios(&DesignPoint::a100()).unwrap();
+        let decode_stalls: Vec<Bottleneck> = rows
+            .iter()
+            .map(|r| r.metrics.dominant_bottleneck(Phase::Decode))
+            .collect();
+        let prefill_stalls: Vec<Bottleneck> = rows
+            .iter()
+            .map(|r| r.metrics.dominant_bottleneck(Phase::Prefill))
+            .collect();
+        let distinct = |v: &[Bottleneck]| {
+            v.iter().any(|b| *b != v[0])
+        };
+        assert!(
+            distinct(&decode_stalls) || distinct(&prefill_stalls),
+            "all scenarios share one bottleneck profile: \
+             prefill {prefill_stalls:?} decode {decode_stalls:?}"
+        );
+    }
+
+    #[test]
+    fn weights_shift_the_composite() {
+        let heavy_decode = [*scenario_by_name("latency-decode").unwrap()];
+        let heavy_prefill = [*scenario_by_name("long-context").unwrap()];
+        let build = |ss: &[Scenario]| {
+            let refs: Vec<&Scenario> = ss.iter().collect();
+            SuiteEvaluator::new(
+                &refs,
+                &mut |spec: &WorkloadSpec| -> Box<dyn Evaluator> {
+                    Box::new(RooflineSim::new(*spec))
+                },
+            )
+            .unwrap()
+        };
+        // More memory channels: helps the decode-heavy suite composite
+        // TPOT more than the prefill-heavy one helps its TTFT.
+        use crate::design::Param;
+        let d = DesignPoint::a100().with(Param::MemChannels, 10);
+        let mut sd = build(&heavy_decode);
+        let mut sp = build(&heavy_prefill);
+        let md = sd.eval(&d).unwrap();
+        let mp = sp.eval(&d).unwrap();
+        assert!(md.tpot_ms < 1.0);
+        assert!(md.tpot_ms < mp.ttft_ms);
+    }
+
+    #[test]
+    fn empty_and_zero_weight_suites_are_rejected() {
+        let none: [&Scenario; 0] = [];
+        let mut factory = |spec: &WorkloadSpec| -> Box<dyn Evaluator> {
+            Box::new(RooflineSim::new(*spec))
+        };
+        assert!(SuiteEvaluator::new(&none, &mut factory).is_err());
+        let tiny = [scenario_by_name("gpt3-tiny").unwrap()];
+        assert!(SuiteEvaluator::new(&tiny, &mut factory).is_err());
+    }
+}

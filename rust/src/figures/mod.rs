@@ -4,6 +4,8 @@
 
 pub mod embedding;
 pub mod race;
+pub mod scenarios;
 pub mod table4;
 
 pub use race::{run_race, EvaluatorKind, RaceConfig, RaceResult};
+pub use scenarios::{scenario_fronts, ScenarioFront};

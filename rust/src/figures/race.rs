@@ -11,7 +11,7 @@ use crate::pareto::{
 };
 use crate::runtime::PjrtEvaluator;
 use crate::sim::{CompassSim, RooflineSim};
-use crate::workload::GPT3_175B;
+use crate::workload::{default_scenario, spec_by_name, WorkloadSpec};
 use crate::Result;
 
 /// Which simulation environment the race runs on.
@@ -38,22 +38,45 @@ impl EvaluatorKind {
     /// earlier methods' points. Single-method exploration (the CLI
     /// `explore` command) wraps this in
     /// [`crate::eval::CachedEvaluator`] instead.
+    ///
+    /// `make()` uses the default registry scenario; [`Self::make_for`]
+    /// builds the same pipeline for an explicit workload.
     pub fn make(self) -> Box<dyn Evaluator> {
+        self.make_for(&default_scenario().spec)
+    }
+
+    /// Build the evaluation pipeline for a specific workload. The PJRT
+    /// artifact is lowered for exactly one workload; when the requested
+    /// spec differs from the artifact's, the race falls back to the
+    /// bit-compatible Rust mirror rather than silently evaluating the
+    /// wrong workload. The match is probed from `meta.json` *before*
+    /// constructing the PJRT client, so non-matching scenarios (e.g.
+    /// 6 of 7 suite members) never pay client/table setup.
+    pub fn make_for(self, spec: &WorkloadSpec) -> Box<dyn Evaluator> {
         match self {
             EvaluatorKind::RooflinePjrt => {
-                match PjrtEvaluator::open_default() {
-                    Ok(e) => Box::new(e),
-                    Err(_) => Box::new(ParallelEvaluator::new(
-                        RooflineSim::new(GPT3_175B),
+                let artifact_matches =
+                    crate::runtime::ArtifactDir::open_default()
+                        .map(|a| spec_by_name(&a.workload) == Some(*spec))
+                        .unwrap_or(false);
+                let pjrt = if artifact_matches {
+                    PjrtEvaluator::open_default().ok()
+                } else {
+                    None
+                };
+                match pjrt {
+                    Some(e) => Box::new(e),
+                    None => Box::new(ParallelEvaluator::new(
+                        RooflineSim::new(*spec),
                     )),
                 }
             }
             EvaluatorKind::RooflineRust => Box::new(
-                ParallelEvaluator::new(RooflineSim::new(GPT3_175B)),
+                ParallelEvaluator::new(RooflineSim::new(*spec)),
             ),
-            EvaluatorKind::Compass => {
-                Box::new(ParallelEvaluator::new(CompassSim::gpt3()))
-            }
+            EvaluatorKind::Compass => Box::new(ParallelEvaluator::new(
+                CompassSim::new(*spec),
+            )),
         }
     }
 }
@@ -65,6 +88,8 @@ pub struct RaceConfig {
     pub trials: usize,
     pub seed: u64,
     pub evaluator: EvaluatorKind,
+    /// Workload scenario every method is raced on.
+    pub workload: WorkloadSpec,
 }
 
 impl Default for RaceConfig {
@@ -74,6 +99,7 @@ impl Default for RaceConfig {
             trials: 5,
             seed: 2026,
             evaluator: EvaluatorKind::RooflinePjrt,
+            workload: default_scenario().spec,
         }
     }
 }
@@ -93,9 +119,12 @@ pub struct RaceResult {
     pub trajectory: Vec<(DesignPoint, Objectives)>,
 }
 
-/// The A100 reference objectives under the chosen evaluator.
-pub fn reference_objectives(kind: EvaluatorKind) -> Result<Objectives> {
-    let mut ev = kind.make();
+/// The A100 reference objectives under the chosen evaluator + workload.
+pub fn reference_objectives(
+    kind: EvaluatorKind,
+    workload: &WorkloadSpec,
+) -> Result<Objectives> {
+    let mut ev = kind.make_for(workload);
     Ok(ev.eval(&DesignPoint::a100())?.objectives())
 }
 
@@ -108,8 +137,8 @@ pub fn reference_objectives(kind: EvaluatorKind) -> Result<Objectives> {
 /// function of the design.
 pub fn run_race(cfg: &RaceConfig) -> Result<Vec<RaceResult>> {
     let space = DesignSpace::table1();
-    let reference = reference_objectives(cfg.evaluator)?;
-    let mut ev = cfg.evaluator.make();
+    let reference = reference_objectives(cfg.evaluator, &cfg.workload)?;
+    let mut ev = cfg.evaluator.make_for(&cfg.workload);
     let mut out = Vec::new();
     for trial in 0..cfg.trials {
         let seed = cfg.seed
@@ -226,6 +255,7 @@ mod tests {
             trials: 2,
             seed: 5,
             evaluator: EvaluatorKind::RooflineRust,
+            ..Default::default()
         };
         let results = run_race(&cfg).unwrap();
         assert_eq!(results.len(), 6 * 2);
@@ -242,6 +272,7 @@ mod tests {
             trials: 2,
             seed: 7,
             evaluator: EvaluatorKind::RooflineRust,
+            ..Default::default()
         };
         let agg = aggregate(&run_race(&cfg).unwrap());
         let lumina = agg.iter().find(|(m, ..)| *m == "lumina").unwrap();
@@ -263,9 +294,40 @@ mod tests {
 
     #[test]
     fn reference_matches_roofline_a100() {
-        let r =
-            reference_objectives(EvaluatorKind::RooflineRust).unwrap();
+        let r = reference_objectives(
+            EvaluatorKind::RooflineRust,
+            &default_scenario().spec,
+        )
+        .unwrap();
         assert!((r[0] - 36.70556).abs() < 0.01);
+    }
+
+    #[test]
+    fn race_runs_on_non_default_workload() {
+        let cfg = RaceConfig {
+            samples: 25,
+            trials: 1,
+            seed: 21,
+            evaluator: EvaluatorKind::RooflineRust,
+            workload: spec_by_name("llama-70b").unwrap(),
+        };
+        let results = run_race(&cfg).unwrap();
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            assert_eq!(r.trajectory.len(), 25, "{}", r.method);
+        }
+        // The reference objectives differ from the GPT-3 default ones.
+        let gpt3 = reference_objectives(
+            EvaluatorKind::RooflineRust,
+            &default_scenario().spec,
+        )
+        .unwrap();
+        let llama = reference_objectives(
+            EvaluatorKind::RooflineRust,
+            &cfg.workload,
+        )
+        .unwrap();
+        assert!((gpt3[0] - llama[0]).abs() / gpt3[0] > 0.05);
     }
 
     #[test]
@@ -275,9 +337,10 @@ mod tests {
             trials: 1,
             seed: 13,
             evaluator: EvaluatorKind::RooflineRust,
+            ..Default::default()
         };
         let reference =
-            reference_objectives(cfg.evaluator).unwrap();
+            reference_objectives(cfg.evaluator, &cfg.workload).unwrap();
         let results = run_race(&cfg).unwrap();
         for r in &results {
             let curve = phv_curve(&r.trajectory, &reference);

@@ -1,0 +1,120 @@
+//! Per-scenario Pareto-front comparison (the suite figure): run the
+//! same DSE pipeline on every suite scenario and extract each
+//! scenario's normalized front, so the figure shows how the trade-off
+//! surface — and the designs that populate it — shift as the bottleneck
+//! regime flips from compute-bound prefill to bandwidth- and
+//! latency-bound decode. `benches/fig7_scenario_fronts.rs` writes the
+//! CSV this module computes.
+
+use crate::baselines::DseMethod;
+use crate::design::{DesignPoint, DesignSpace};
+use crate::eval::BudgetedEvaluator;
+use crate::lumina::Lumina;
+use crate::pareto::{Objectives, ParetoArchive, PHV_REF};
+use crate::workload::Scenario;
+use crate::Result;
+
+use super::race::EvaluatorKind;
+
+/// The normalized Pareto front one scenario's exploration produced.
+#[derive(Debug, Clone)]
+pub struct ScenarioFront {
+    pub name: &'static str,
+    /// A100 objectives under this scenario (the normalization base).
+    pub reference: Objectives,
+    /// Non-dominated samples as (design, objectives normalized by the
+    /// scenario reference), in discovery order.
+    pub front: Vec<(DesignPoint, Objectives)>,
+    /// PHV of the normalized trajectory w.r.t. [`PHV_REF`].
+    pub phv: f64,
+    /// Samples spent (equals the budget unless evaluation failed early).
+    pub samples: usize,
+}
+
+/// Run LUMINA under `budget` samples on each scenario and collect the
+/// per-scenario normalized fronts.
+pub fn scenario_fronts(
+    scenarios: &[&Scenario],
+    kind: EvaluatorKind,
+    budget: usize,
+    seed: u64,
+) -> Result<Vec<ScenarioFront>> {
+    let space = DesignSpace::table1();
+    let mut out = Vec::with_capacity(scenarios.len());
+    for s in scenarios {
+        let mut ev = kind.make_for(&s.spec);
+        let reference = ev.eval(&DesignPoint::a100())?.objectives();
+        let mut be = BudgetedEvaluator::new(ev.as_mut(), budget);
+        Lumina::with_seed(seed).run(&space, &mut be)?;
+        let traj: Vec<(DesignPoint, Objectives)> = be
+            .log
+            .iter()
+            .map(|(d, m)| {
+                let o = m.objectives();
+                (
+                    *d,
+                    [
+                        o[0] / reference[0],
+                        o[1] / reference[1],
+                        o[2] / reference[2],
+                    ],
+                )
+            })
+            .collect();
+        let mut archive = ParetoArchive::new(PHV_REF);
+        for (_, o) in &traj {
+            archive.push(*o);
+        }
+        out.push(ScenarioFront {
+            name: s.name,
+            reference,
+            front: archive
+                .front_ids()
+                .into_iter()
+                .map(|i| traj[i])
+                .collect(),
+            phv: archive.hypervolume(),
+            samples: traj.len(),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pareto::dominates;
+    use crate::workload::suite_scenarios;
+
+    #[test]
+    fn fronts_are_nondominated_and_scenario_specific() {
+        let scenarios = suite_scenarios();
+        let fronts = scenario_fronts(
+            &scenarios[..3],
+            EvaluatorKind::RooflineRust,
+            30,
+            5,
+        )
+        .unwrap();
+        assert_eq!(fronts.len(), 3);
+        for f in &fronts {
+            assert_eq!(f.samples, 30);
+            assert!(!f.front.is_empty(), "{} empty front", f.name);
+            for (i, (_, a)) in f.front.iter().enumerate() {
+                for (j, (_, b)) in f.front.iter().enumerate() {
+                    assert!(
+                        i == j || !dominates(b, a),
+                        "{}: dominated point on front",
+                        f.name
+                    );
+                }
+            }
+        }
+        // References differ across scenarios (different regimes).
+        assert!(
+            (fronts[0].reference[0] - fronts[1].reference[0]).abs()
+                / fronts[0].reference[0]
+                > 0.01
+        );
+    }
+}

@@ -548,6 +548,7 @@ mod tests {
         let mut m =
             SimulatedAnalyst::new(ModelProfile::oracle(), 1);
         let q = prompts::bottleneck_question(
+            &crate::workload::GPT3_175B,
             &DesignPoint::a100(),
             &metrics_net_bound(),
             Phase::Prefill,
@@ -575,6 +576,7 @@ mod tests {
             stalls: [[20.0, 5.0, 5.0], [0.4, 0.15, 0.05]],
         };
         let q = prompts::bottleneck_question(
+            &crate::workload::GPT3_175B,
             &d,
             &metrics,
             Phase::Decode,
@@ -689,6 +691,7 @@ mod tests {
             let mut errs = 0;
             for i in 0..200u64 {
                 let q = prompts::bottleneck_question(
+                    &crate::workload::GPT3_175B,
                     &DesignPoint::a100(),
                     &metrics_net_bound(),
                     Phase::Prefill,

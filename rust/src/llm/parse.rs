@@ -29,13 +29,30 @@ pub fn parse_assignments(text: &str) -> BTreeMap<String, f64> {
 }
 
 /// Extract the first full design embedded as `key = value` lines.
+///
+/// Parameter values are grid integers; a completion proposing `320.9`
+/// cores or `-2` links is malformed, not "roughly 320". Truncating casts
+/// used to silently round-trip such lines onto different designs (and
+/// saturate negatives to 0), so only exact non-negative integers that
+/// fit `u32` are accepted.
 pub fn parse_design_lines(text: &str) -> Option<DesignPoint> {
     let a = parse_assignments(text);
     let mut values = [0u32; N_PARAMS];
     for p in Param::ALL {
-        values[p.index()] = *a.get(p.name())? as u32;
+        values[p.index()] = exact_u32(*a.get(p.name())?)?;
     }
     Some(DesignPoint::new(values))
+}
+
+/// `v` as a `u32` iff it is an exactly-representable non-negative
+/// integer (rejects NaN/inf, fractions, negatives, and overflow).
+fn exact_u32(v: f64) -> Option<u32> {
+    if v.is_finite() && v >= 0.0 && v <= u32::MAX as f64 && v.fract() == 0.0
+    {
+        Some(v as u32)
+    } else {
+        None
+    }
 }
 
 /// Extract a compact one-line design (`k=v k=v ...`).
@@ -163,6 +180,44 @@ mod tests {
         let text = prompts::render_design(&DesignPoint::a100());
         let d = parse_design_lines(&text).unwrap();
         assert_eq!(d, DesignPoint::a100());
+    }
+
+    #[test]
+    fn design_lines_reject_non_integral_values() {
+        // Regression: `320.9` used to truncate to 320 and round-trip
+        // onto a different design instead of being rejected.
+        let mut text = prompts::render_design(&DesignPoint::a100());
+        text = text.replace("core_count = 108", "core_count = 320.9");
+        assert!(text.contains("320.9"), "fixture drifted: {text}");
+        assert_eq!(parse_design_lines(&text), None);
+    }
+
+    #[test]
+    fn design_lines_reject_negative_and_non_finite_values() {
+        let base = prompts::render_design(&DesignPoint::a100());
+        for bad in ["-2", "-0.5", "NaN", "inf", "4294967296"] {
+            let text = base
+                .replace("interconnect_link_count = 12",
+                         &format!("interconnect_link_count = {bad}"));
+            assert_ne!(text, base, "fixture drifted");
+            assert_eq!(
+                parse_design_lines(&text),
+                None,
+                "accepted {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn design_lines_accept_exact_grid_integers_only() {
+        assert_eq!(exact_u32(320.0), Some(320));
+        assert_eq!(exact_u32(0.0), Some(0));
+        assert_eq!(exact_u32(u32::MAX as f64), Some(u32::MAX));
+        assert_eq!(exact_u32(320.9), None);
+        assert_eq!(exact_u32(-1.0), None);
+        assert_eq!(exact_u32(f64::NAN), None);
+        assert_eq!(exact_u32(f64::INFINITY), None);
+        assert_eq!(exact_u32(u32::MAX as f64 + 1.0), None);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use crate::design::{DesignPoint, Param};
 use crate::eval::{Metrics, Phase};
+use crate::workload::WorkloadSpec;
 
 /// The default system prompt: provides the architectural context the
 /// paper says "already provides the necessary architectural context".
@@ -66,6 +67,25 @@ fn area_mm2(d) =
     + global_buffer_mb * 1.9 + memory_channel_count * 15.0
     + interconnect_link_count * 1.5 + 60.0 /* uncore */";
 
+/// One-line target-application description rendered into benchmark
+/// prompts — derived from the actual workload the ground truth is
+/// simulated under, so a model never reasons about a different model
+/// shape than it is scored against.
+pub fn describe_workload(w: &WorkloadSpec) -> String {
+    format!(
+        "one transformer layer: d_model {}, {} heads ({} KV), d_ffn {}, \
+         {}-way tensor parallel, batch {}, prefill {}, decode@{}",
+        w.d_model,
+        w.n_heads,
+        w.n_kv_heads,
+        w.d_ffn,
+        w.tp,
+        w.batch,
+        w.prefill_seq,
+        w.decode_pos,
+    )
+}
+
 /// Render a design's parameters as `key = value` lines.
 pub fn render_design(d: &DesignPoint) -> String {
     let mut out = String::new();
@@ -110,6 +130,7 @@ pub fn letter_index(c: char) -> Option<usize> {
 
 /// Bottleneck-analysis question (benchmark task 1).
 pub fn bottleneck_question(
+    w: &WorkloadSpec,
     d: &DesignPoint,
     m: &Metrics,
     phase: Phase,
@@ -117,13 +138,13 @@ pub fn bottleneck_question(
 ) -> String {
     format!(
         "## Task: bottleneck-analysis\n\
-         ## Target application\none GPT-3 175B layer, 8-way tensor \
-         parallel, batch 8, prefill 2048, decode@1024\n\
+         ## Target application\n{}\n\
          ## Architecture\n{}\
          ## Objective\nminimize {}\n\
          ## Performance counters ({} phase)\n{}\
          ## Question\nWhich parameter adjustment most directly mitigates \
          the dominant stall?\n{}",
+        describe_workload(w),
         render_design(d),
         m_name(phase),
         phase_name(phase),
@@ -267,6 +288,7 @@ mod tests {
     #[test]
     fn bottleneck_prompt_contains_fields() {
         let q = bottleneck_question(
+            &crate::workload::GPT3_175B,
             &DesignPoint::a100(),
             &metrics(),
             Phase::Prefill,
@@ -276,6 +298,22 @@ mod tests {
         assert!(q.contains("compute_stall_ms = 26.7900"));
         assert!(q.contains("A) increase core_count"));
         assert!(q.contains("minimize TTFT"));
+        assert!(q.contains("d_model 12288"));
+    }
+
+    #[test]
+    fn workload_description_tracks_the_simulated_scenario() {
+        let w = crate::workload::spec_by_name("llama-70b").unwrap();
+        let q = bottleneck_question(
+            &w,
+            &DesignPoint::a100(),
+            &metrics(),
+            Phase::Decode,
+            &["increase memory_channel_count".into()],
+        );
+        assert!(q.contains("d_model 8192"));
+        assert!(q.contains("64 heads (8 KV)"));
+        assert!(!q.contains("12288"));
     }
 
     #[test]

@@ -2,28 +2,38 @@
 //!
 //! Subcommands:
 //!   eval        evaluate one design point (8 raw values)
-//!   explore     run LUMINA on a sample budget
+//!   explore     run LUMINA on a sample budget (optionally --suite)
 //!   race        run all six DSE methods under identical budgets
 //!   benchmark   run the DSE Benchmark (Table 3)
 //!   sensitivity QuanE sensitivity study around a design
 //!   report      Table-4 style design report
+//!   workloads   list the registered workload scenarios
 //!
 //! All exploration traffic flows through the AOT roofline artifact via
 //! PJRT when `artifacts/` exists (`make artifacts`); `--evaluator`
-//! selects `roofline`, `roofline-rs` or `compass`.
+//! selects `roofline`, `roofline-rs` or `compass`. Every evaluating
+//! subcommand accepts `--workload <name>` (see `lumina workloads`);
+//! `explore --suite` optimizes the weighted multi-scenario composite.
 
 use lumina::baselines::DseMethod;
-use lumina::bench_dse::run_benchmark;
+use lumina::bench_dse::run_benchmark_for;
 use lumina::design::{DesignPoint, DesignSpace, Param};
-use lumina::eval::{BudgetedEvaluator, CachedEvaluator, Evaluator, Phase};
+use lumina::eval::{
+    BudgetedEvaluator, CachedEvaluator, Evaluator, Phase, SuiteEvaluator,
+};
 use lumina::figures::race::{
     aggregate, run_race, score_trajectory, EvaluatorKind, RaceConfig,
 };
 use lumina::figures::table4::{pick_top2, render, report_rows};
 use lumina::llm::ModelProfile;
 use lumina::lumina::{quale::InfluenceMap, quane::Ahk, Lumina, LuminaConfig};
+use lumina::pareto::Objectives;
 use lumina::sim::CompassSim;
 use lumina::util::cli::Args;
+use lumina::workload::{
+    scenario_by_name, scenario_matrix, suite_scenarios, Scenario,
+    WorkloadSpec, DEFAULT_SCENARIO,
+};
 
 const USAGE: &str = "\
 lumina — LLM-guided GPU architecture exploration (paper reproduction)
@@ -33,13 +43,19 @@ USAGE: lumina <command> [--options]
   eval <8 values>            evaluate links cores sublanes sa vecw
                              sram_kb gbuf_mb memch
   explore [--budget N] [--seed S] [--model qwen3|phi4|llama3.1]
-          [--evaluator roofline|roofline-rs|compass] [--verbose]
-  race [--samples N] [--trials T] [--evaluator ...]
-  benchmark [--scale F] [--seed S]
-  sensitivity [--evaluator ...]
-  report [<8 values>]        Table-4 style report (defaults: paper designs)
+          [--evaluator roofline|roofline-rs|compass]
+          [--workload NAME | --suite] [--verbose]
+  race [--samples N] [--trials T] [--evaluator ...] [--workload NAME]
+  benchmark [--scale F] [--seed S] [--workload NAME]
+  sensitivity [--evaluator ...] [--workload NAME]
+  report [<8 values>]        Table-4 style report (defaults: paper
+                             designs) [--workload NAME]
+  workloads                  list the workload scenario registry
 
 Run `make artifacts` first to enable the PJRT roofline evaluator.";
+
+/// An evaluated exploration trajectory (design, objectives) in order.
+type Trajectory = Vec<(DesignPoint, Objectives)>;
 
 fn evaluator_kind(args: &Args) -> EvaluatorKind {
     match args.str_or("evaluator", "roofline").as_str() {
@@ -47,6 +63,17 @@ fn evaluator_kind(args: &Args) -> EvaluatorKind {
         "roofline-rs" => EvaluatorKind::RooflineRust,
         _ => EvaluatorKind::RooflinePjrt,
     }
+}
+
+/// Resolve `--workload` against the scenario registry.
+fn workload_arg(args: &Args) -> lumina::Result<&'static Scenario> {
+    let name = args.str_or("workload", DEFAULT_SCENARIO);
+    scenario_by_name(&name).ok_or_else(|| {
+        lumina::err!(
+            "unknown workload {name:?}; run `lumina workloads` for the \
+             registry"
+        )
+    })
 }
 
 fn parse_design(values: &[String]) -> Option<DesignPoint> {
@@ -66,6 +93,10 @@ fn main() -> lumina::Result<()> {
         "benchmark" => cmd_benchmark(&args),
         "sensitivity" => cmd_sensitivity(&args),
         "report" => cmd_report(&args),
+        "workloads" => {
+            print!("{}", scenario_matrix());
+            Ok(())
+        }
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -76,9 +107,11 @@ fn main() -> lumina::Result<()> {
 fn cmd_eval(args: &Args) -> lumina::Result<()> {
     let d = parse_design(&args.positional)
         .unwrap_or_else(DesignPoint::a100);
-    let mut ev = evaluator_kind(args).make();
+    let scenario = workload_arg(args)?;
+    let mut ev = evaluator_kind(args).make_for(&scenario.spec);
     let m = ev.eval(&d)?;
     println!("design: {d}");
+    println!("workload: {}", scenario.name);
     println!("evaluator: {}", ev.name());
     println!(
         "TTFT {:.4} ms   TPOT {:.5} ms   area {:.1} mm^2",
@@ -99,20 +132,21 @@ fn cmd_eval(args: &Args) -> lumina::Result<()> {
     Ok(())
 }
 
-fn cmd_explore(args: &Args) -> lumina::Result<()> {
+/// Shared `explore` driver: memoized + budgeted LUMINA run, trajectory
+/// extraction, scoring, and the one-line summary. Used by both the
+/// single-workload and suite paths.
+fn run_explore(
+    args: &Args,
+    label: &'static str,
+    ev: &mut dyn Evaluator,
+) -> lumina::Result<(Trajectory, Objectives, Lumina)> {
     let budget = args.usize_or("budget", 100)?;
     let seed = args.u64_or("seed", 2026)?;
     let model = ModelProfile::by_name(&args.str_or("model", "qwen3"))
         .unwrap_or_else(ModelProfile::qwen3);
-    let kind = evaluator_kind(args);
     let space = DesignSpace::table1();
-
-    // Memoize over the evaluation pipeline: LUMINA restarts and
-    // sensitivity sweeps revisit grid points, and cache hits don't burn
-    // the sample budget.
-    let mut ev = CachedEvaluator::new(kind.make());
     let reference = ev.eval(&DesignPoint::a100())?.objectives();
-    let mut be = BudgetedEvaluator::new(&mut ev, budget);
+    let mut be = BudgetedEvaluator::new(ev, budget);
     let mut lum = Lumina::new(LuminaConfig {
         seed,
         model,
@@ -120,21 +154,45 @@ fn cmd_explore(args: &Args) -> lumina::Result<()> {
     });
     let t0 = std::time::Instant::now();
     lum.run(&space, &mut be)?;
-    let traj: Vec<_> =
+    let traj: Trajectory =
         be.log.iter().map(|(d, m)| (*d, m.objectives())).collect();
-    let r = score_trajectory("lumina", 0, &traj, &reference);
-    let counters = be.cache_counters().unwrap_or_default();
+    let r = score_trajectory(label, 0, &traj, &reference);
+    let hits = be
+        .cache_counters()
+        .map(|c| format!(", {} cache hits", c.hits))
+        .unwrap_or_default();
     println!(
-        "explored {} samples ({} simulated, {} cache hits) in {:.2}s  \
+        "explored {} samples ({} simulated{hits}) in {:.2}s  \
          PHV={:.4}  eff={:.4}  superior={}",
         traj.len(),
         be.spent(),
-        counters.hits,
         t0.elapsed().as_secs_f64(),
         r.phv,
         r.sample_efficiency,
         r.superior
     );
+    Ok((traj, reference, lum))
+}
+
+fn cmd_explore(args: &Args) -> lumina::Result<()> {
+    if args.flag("suite") {
+        if args.opt("workload").is_some() {
+            lumina::bail!(
+                "--suite runs every positive-weight scenario and \
+                 conflicts with --workload; pass one or the other"
+            );
+        }
+        return cmd_explore_suite(args);
+    }
+    let kind = evaluator_kind(args);
+    let scenario = workload_arg(args)?;
+    println!("workload: {} ({})", scenario.name, scenario.regime);
+
+    // Memoize over the evaluation pipeline: LUMINA restarts and
+    // sensitivity sweeps revisit grid points, and cache hits don't burn
+    // the sample budget.
+    let mut ev = CachedEvaluator::new(kind.make_for(&scenario.spec));
+    let (traj, reference, lum) = run_explore(args, "lumina", &mut ev)?;
     if args.flag("verbose") {
         if let Some(ahk) = &lum.ahk {
             println!("\ninfluence map:\n{}", ahk.qual.render());
@@ -160,12 +218,60 @@ fn cmd_explore(args: &Args) -> lumina::Result<()> {
     Ok(())
 }
 
+/// `explore --suite`: optimize the weighted multi-scenario composite and
+/// report the top designs per scenario.
+fn cmd_explore_suite(args: &Args) -> lumina::Result<()> {
+    let kind = evaluator_kind(args);
+    let scenarios = suite_scenarios();
+    println!(
+        "suite: {} scenarios ({})",
+        scenarios.len(),
+        scenarios
+            .iter()
+            .map(|s| s.name)
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+
+    let mut factory = |spec: &WorkloadSpec| -> Box<dyn Evaluator> {
+        kind.make_for(spec)
+    };
+    let suite = SuiteEvaluator::new(&scenarios, &mut factory)?;
+    // One sample = one design evaluated under every scenario; the memo
+    // cache keys on the suite's combined workload fingerprint.
+    let mut ev = CachedEvaluator::new(suite);
+    let (traj, reference, _lum) =
+        run_explore(args, "lumina-suite", &mut ev)?;
+
+    let picks = pick_top2(&traj, &reference);
+    let mut suite = ev.into_inner();
+    for d in &picks {
+        println!("\ntop design: {d}");
+        println!(
+            "  {:<16} {:>11} {:>11} {:>9} {:>9}",
+            "scenario", "TTFT ms/ly", "TPOT ms/ly", "vs A100", "vs A100"
+        );
+        for row in suite.eval_scenarios(d)? {
+            println!(
+                "  {:<16} {:>11.4} {:>11.5} {:>8.2}x {:>8.2}x",
+                row.name,
+                row.metrics.ttft_ms,
+                row.metrics.tpot_ms,
+                row.metrics.ttft_ms / row.reference.ttft_ms,
+                row.metrics.tpot_ms / row.reference.tpot_ms,
+            );
+        }
+    }
+    Ok(())
+}
+
 fn cmd_race(args: &Args) -> lumina::Result<()> {
     let cfg = RaceConfig {
         samples: args.usize_or("samples", 200)?,
         trials: args.usize_or("trials", 3)?,
         seed: args.u64_or("seed", 2026)?,
         evaluator: evaluator_kind(args),
+        workload: workload_arg(args)?.spec,
     };
     let results = run_race(&cfg)?;
     println!(
@@ -189,7 +295,8 @@ fn cmd_race(args: &Args) -> lumina::Result<()> {
 fn cmd_benchmark(args: &Args) -> lumina::Result<()> {
     let scale = args.f64_or("scale", 1.0)?;
     let seed = args.u64_or("seed", 2026)?;
-    let report = run_benchmark(
+    let scenario = workload_arg(args)?;
+    let report = run_benchmark_for(
         &[
             ModelProfile::phi4(),
             ModelProfile::qwen3(),
@@ -197,7 +304,9 @@ fn cmd_benchmark(args: &Args) -> lumina::Result<()> {
         ],
         seed,
         scale,
+        &scenario.spec,
     );
+    println!("workload: {}", scenario.name);
     println!("{}", report.render_table3());
     Ok(())
 }
@@ -207,7 +316,7 @@ fn cmd_sensitivity(args: &Args) -> lumina::Result<()> {
     let reference = parse_design(&args.positional)
         .unwrap_or_else(DesignPoint::a100);
     let kind = evaluator_kind(args);
-    let mut ev = kind.make();
+    let mut ev = kind.make_for(&workload_arg(args)?.spec);
     let mut be = BudgetedEvaluator::new(ev.as_mut(), 64);
     let ahk = Ahk::acquire_full(
         InfluenceMap::from_kernel(),
@@ -243,7 +352,9 @@ fn cmd_report(args: &Args) -> lumina::Result<()> {
             ("Design B".to_string(), DesignPoint::paper_design_b()),
         ],
     };
-    let mut sim = CompassSim::gpt3();
+    let scenario = workload_arg(args)?;
+    let mut sim = CompassSim::new(scenario.spec);
+    println!("workload: {}", scenario.name);
     println!("{}", render(&report_rows(&mut sim, &designs)?));
     Ok(())
 }

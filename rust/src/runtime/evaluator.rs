@@ -35,6 +35,8 @@ mod real {
         /// (the lowered module takes the table at runtime — see
         /// `python/compile/model.py::export_fn`).
         table: Vec<f32>,
+        /// Fingerprint of the artifact's workload (cache-key component).
+        fingerprint: u64,
         /// Cumulative designs evaluated (perf accounting).
         pub evaluated: u64,
     }
@@ -44,7 +46,7 @@ mod real {
         pub fn new(artifacts: ArtifactDir) -> Result<Self> {
             let client =
                 xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-            let spec = workload::gpt3::spec_by_name(&artifacts.workload)
+            let spec = workload::spec_by_name(&artifacts.workload)
                 .with_context(|| {
                     format!(
                         "unknown artifact workload {:?}",
@@ -63,6 +65,7 @@ mod real {
                 client,
                 compiled: BTreeMap::new(),
                 table,
+                fingerprint: spec.fingerprint(),
                 evaluated: 0,
             })
         }
@@ -74,6 +77,11 @@ mod real {
 
         pub fn platform(&self) -> String {
             self.client.platform_name()
+        }
+
+        /// Scenario name of the workload the artifact was lowered for.
+        pub fn workload_name(&self) -> &str {
+            &self.artifacts.workload
         }
 
         fn executable(
@@ -165,6 +173,10 @@ mod real {
         fn name(&self) -> &'static str {
             "roofline-pjrt"
         }
+
+        fn workload_fingerprint(&self) -> u64 {
+            self.fingerprint
+        }
     }
 }
 
@@ -193,6 +205,11 @@ mod stub {
         }
 
         pub fn platform(&self) -> String {
+            match *self {}
+        }
+
+        /// Scenario name of the workload the artifact was lowered for.
+        pub fn workload_name(&self) -> &str {
             match *self {}
         }
     }

@@ -14,7 +14,7 @@ use crate::arch::{area_mm2, constants as c};
 use crate::design::{DesignPoint, Param};
 use crate::eval::{Bottleneck, EvalOne, Evaluator, Metrics, Phase};
 use crate::workload::{
-    decode_ops, prefill_ops, Op, OpKind, WorkloadSpec, GPT3_175B,
+    decode_ops, default_scenario, prefill_ops, Op, OpKind, WorkloadSpec,
 };
 use crate::Result;
 
@@ -136,8 +136,10 @@ impl CompassSim {
         Self { spec, prepped }
     }
 
+    /// Convenience constructor for the default registry scenario (the
+    /// paper's GPT-3 175B setup).
     pub fn gpt3() -> Self {
-        Self::new(GPT3_175B)
+        Self::new(default_scenario().spec)
     }
 
     /// The workload this simulator was built for.
@@ -318,6 +320,10 @@ impl EvalOne for CompassSim {
     fn label(&self) -> &'static str {
         "compass"
     }
+
+    fn workload_fingerprint(&self) -> u64 {
+        self.spec.fingerprint()
+    }
 }
 
 impl Evaluator for CompassSim {
@@ -330,6 +336,10 @@ impl Evaluator for CompassSim {
 
     fn name(&self) -> &'static str {
         "compass"
+    }
+
+    fn workload_fingerprint(&self) -> u64 {
+        self.spec.fingerprint()
     }
 }
 
@@ -476,6 +486,7 @@ mod tests {
         // They are different fidelity models; identical outputs would
         // mean one is a copy of the other.
         use crate::sim::roofline::RooflineSim;
+        use crate::workload::GPT3_175B;
         let r = RooflineSim::new(GPT3_175B)
             .evaluate(&DesignPoint::a100());
         let (cm, _) = sim().evaluate_detailed(&DesignPoint::a100());

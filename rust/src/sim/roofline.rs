@@ -156,6 +156,10 @@ impl EvalOne for RooflineSim {
     fn label(&self) -> &'static str {
         "roofline-rs"
     }
+
+    fn workload_fingerprint(&self) -> u64 {
+        self.spec.fingerprint()
+    }
 }
 
 impl Evaluator for RooflineSim {
@@ -165,6 +169,10 @@ impl Evaluator for RooflineSim {
 
     fn name(&self) -> &'static str {
         "roofline-rs"
+    }
+
+    fn workload_fingerprint(&self) -> u64 {
+        self.spec.fingerprint()
     }
 }
 

@@ -1,14 +1,24 @@
-//! GPT-3 inference workload (runtime copy).
+//! Inference workloads (runtime copy).
 //!
 //! Mirrors `python/compile/workload.py`: the same per-layer operator
 //! tables for prefill/decode, used by the Rust roofline mirror, the
 //! detailed compass simulator, and the benchmark question generators.
 //! The artifact bakes the Python copy in as constants; the cross-check
 //! test compares both.
+//!
+//! [`spec`] holds the parameterized [`WorkloadSpec`] and the op-table
+//! builders; [`scenario`] is the registry of named scenarios
+//! (`gpt3-175b`, `llama-70b`, `long-context`, ...) behind the CLI
+//! `--workload` / `--suite` flags and the suite evaluator.
 
-pub mod gpt3;
+pub mod scenario;
+pub mod spec;
 
-pub use gpt3::{
+pub use scenario::{
+    all_scenarios, default_scenario, scenario_by_name, scenario_matrix,
+    spec_by_name, suite_scenarios, Scenario, DEFAULT_SCENARIO, SCENARIOS,
+};
+pub use spec::{
     decode_ops, op_table, prefill_ops, Op, OpKind, WorkloadSpec, GPT3_175B,
     GPT3_TINY, MAX_OPS, N_PHASES,
 };

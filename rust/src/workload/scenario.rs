@@ -1,0 +1,251 @@
+//! Named workload scenarios: the registry behind `--workload <name>` /
+//! `--suite`, the artifact `meta.json` `workload` key, and the
+//! [`crate::eval::SuiteEvaluator`] composite objective.
+//!
+//! Each scenario pins a full [`WorkloadSpec`] plus a suite weight and a
+//! human note on the bottleneck regime it is expected to exercise —
+//! prefill and decode flip between compute-, bandwidth- and
+//! latency-bound across the set, which is what makes multi-scenario DSE
+//! meaningfully different from the single hardwired GPT-3 run.
+
+use super::spec::{WorkloadSpec, GPT3_175B, GPT3_TINY};
+
+/// A named, documented workload configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Scenario {
+    /// Registry key (CLI `--workload` value, artifact `workload` field).
+    pub name: &'static str,
+    /// One-line description for listings.
+    pub summary: &'static str,
+    /// Expected dominant bottleneck regime (prefill / decode).
+    pub regime: &'static str,
+    /// Relative weight in the suite composite objective; 0 excludes the
+    /// scenario from `--suite` runs (it stays addressable by name).
+    pub weight: f64,
+    pub spec: WorkloadSpec,
+}
+
+/// Llama-70B-class dense GQA model, the shared base of the deployment
+/// scenarios below.
+const LLAMA_70B: WorkloadSpec = WorkloadSpec {
+    d_model: 8192,
+    n_heads: 64,
+    n_kv_heads: 8,
+    d_head: 128,
+    d_ffn: 28672,
+    n_layers: 80,
+    tp: 8,
+    batch: 8,
+    prefill_seq: 2048,
+    decode_pos: 1024,
+};
+
+/// Registry order is stable: index 0 is the default scenario.
+pub const SCENARIOS: [Scenario; 7] = [
+    Scenario {
+        name: "gpt3-175b",
+        summary: "GPT-3 175B, TP=8, batch 8 (paper §5.3 setup)",
+        regime: "prefill compute-bound / decode bandwidth-bound",
+        weight: 1.0,
+        spec: GPT3_175B,
+    },
+    Scenario {
+        name: "gpt3-tiny",
+        summary: "scaled-down GPT-3 for fast tests and examples",
+        regime: "overhead/latency-dominated at this scale",
+        weight: 0.0,
+        spec: GPT3_TINY,
+    },
+    Scenario {
+        name: "llama-7b",
+        summary: "Llama-7B-class dense MHA model, TP=2, batch 8",
+        regime: "prefill compute-bound / decode bandwidth-bound",
+        weight: 1.0,
+        spec: WorkloadSpec {
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 32,
+            d_head: 128,
+            d_ffn: 11008,
+            n_layers: 32,
+            tp: 2,
+            batch: 8,
+            prefill_seq: 2048,
+            decode_pos: 1024,
+        },
+    },
+    Scenario {
+        name: "llama-70b",
+        summary: "Llama-70B-class dense GQA model (8 KV heads), TP=8",
+        regime: "prefill compute-bound / decode bandwidth-bound (GQA)",
+        weight: 1.0,
+        spec: LLAMA_70B,
+    },
+    Scenario {
+        name: "long-context",
+        summary: "70B-class single-request 16k-token prefill",
+        regime: "prefill attention-compute-bound, O(s^2) softmax",
+        weight: 1.0,
+        spec: WorkloadSpec {
+            batch: 1,
+            prefill_seq: 16384,
+            decode_pos: 512,
+            ..LLAMA_70B
+        },
+    },
+    Scenario {
+        name: "latency-decode",
+        summary: "70B-class interactive chat: batch 1, deep decode",
+        regime: "decode latency-bound (allreduce + KV stream)",
+        weight: 1.0,
+        spec: WorkloadSpec {
+            batch: 1,
+            prefill_seq: 128,
+            decode_pos: 3968,
+            ..LLAMA_70B
+        },
+    },
+    Scenario {
+        name: "serving",
+        summary: "70B-class throughput serving: batch 64",
+        regime: "decode bandwidth/throughput-bound",
+        weight: 1.0,
+        spec: WorkloadSpec {
+            batch: 64,
+            prefill_seq: 512,
+            decode_pos: 1536,
+            ..LLAMA_70B
+        },
+    },
+];
+
+/// Name of the default scenario (registry index 0).
+pub const DEFAULT_SCENARIO: &str = SCENARIOS[0].name;
+
+/// Every registered scenario, in stable registry order.
+pub fn all_scenarios() -> &'static [Scenario] {
+    &SCENARIOS
+}
+
+/// The default scenario (the paper's GPT-3 175B setup).
+pub fn default_scenario() -> &'static Scenario {
+    &SCENARIOS[0]
+}
+
+/// Resolve a scenario by its registry name.
+pub fn scenario_by_name(name: &str) -> Option<&'static Scenario> {
+    SCENARIOS.iter().find(|s| s.name == name)
+}
+
+/// Resolve a workload spec by its scenario name (`meta.json` `workload`
+/// key, CLI `--workload` value).
+pub fn spec_by_name(name: &str) -> Option<WorkloadSpec> {
+    scenario_by_name(name).map(|s| s.spec)
+}
+
+/// Scenarios participating in `--suite` runs (positive weight).
+pub fn suite_scenarios() -> Vec<&'static Scenario> {
+    SCENARIOS.iter().filter(|s| s.weight > 0.0).collect()
+}
+
+/// Render the scenario matrix for the CLI `workloads` listing and docs.
+pub fn scenario_matrix() -> String {
+    let mut out = format!(
+        "{:<15} {:>7} {:>5}/{:<3} {:>6} {:>6} {:>3} {:>3} {:>7} \
+         {:>7} {:>3}  {}\n",
+        "name", "d_model", "heads", "kv", "d_ffn", "layers", "tp",
+        "b", "prefill", "decode", "w", "expected regime"
+    );
+    for s in &SCENARIOS {
+        let w = &s.spec;
+        out.push_str(&format!(
+            "{:<15} {:>7} {:>5}/{:<3} {:>6} {:>6} {:>3} {:>3} {:>7} \
+             {:>7} {:>3}  {}\n",
+            s.name,
+            w.d_model,
+            w.n_heads,
+            w.n_kv_heads,
+            w.d_ffn,
+            w.n_layers,
+            w.tp,
+            w.batch,
+            w.prefill_seq,
+            w.decode_pos,
+            s.weight,
+            s.regime,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{op_table, prefill_ops, MAX_OPS};
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        let mut names: Vec<&str> =
+            SCENARIOS.iter().map(|s| s.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), SCENARIOS.len());
+        for s in all_scenarios() {
+            assert_eq!(spec_by_name(s.name), Some(s.spec));
+        }
+        assert!(spec_by_name("bogus").is_none());
+        assert_eq!(default_scenario().name, DEFAULT_SCENARIO);
+        assert_eq!(spec_by_name(DEFAULT_SCENARIO), Some(GPT3_175B));
+    }
+
+    #[test]
+    fn every_scenario_is_consistent_and_fits_the_table() {
+        for s in all_scenarios() {
+            assert!(s.spec.is_consistent(), "{} inconsistent", s.name);
+            assert!(prefill_ops(&s.spec).len() <= MAX_OPS);
+            let tbl = op_table(&s.spec);
+            for phase in &tbl {
+                for row in phase {
+                    assert!(
+                        row.iter().all(|v| v.is_finite()),
+                        "{}: non-finite table entry",
+                        s.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprints_are_pairwise_distinct() {
+        for a in all_scenarios() {
+            for b in all_scenarios() {
+                if a.name != b.name {
+                    assert_ne!(
+                        a.spec.fingerprint(),
+                        b.spec.fingerprint(),
+                        "{} vs {}",
+                        a.name,
+                        b.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn suite_excludes_zero_weight_scenarios() {
+        let suite = suite_scenarios();
+        assert!(suite.len() >= 5);
+        assert!(suite.iter().all(|s| s.weight > 0.0));
+        assert!(!suite.iter().any(|s| s.name == "gpt3-tiny"));
+    }
+
+    #[test]
+    fn matrix_lists_every_scenario() {
+        let m = scenario_matrix();
+        for s in all_scenarios() {
+            assert!(m.contains(s.name), "{} missing from matrix", s.name);
+        }
+    }
+}

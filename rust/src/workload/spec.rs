@@ -1,7 +1,11 @@
-//! Operator-table construction for a tensor-parallel GPT-3 layer.
+//! Operator-table construction for one tensor-parallel transformer layer.
 //!
 //! Exact mirror of `python/compile/workload.py` (f64 math, f32 storage —
-//! same rounding as numpy's `astype(float32)`).
+//! same rounding as numpy's `astype(float32)`). The spec supports both
+//! classic multi-head attention and grouped-query attention (GQA): when
+//! `n_kv_heads == n_heads` every formula reduces bit-for-bit to the
+//! historical MHA construction, so the pinned GPT-3 oracle values are
+//! unchanged.
 
 use crate::arch::constants as c;
 
@@ -9,12 +13,17 @@ pub const MAX_OPS: usize = 16;
 pub const N_PHASES: usize = 2;
 
 /// Model + deployment hyper-parameters (paper §5.3 setup).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct WorkloadSpec {
     pub d_model: u64,
     pub n_heads: u64,
+    /// KV heads (GQA); equal to `n_heads` for classic MHA.
+    pub n_kv_heads: u64,
     pub d_head: u64,
     pub d_ffn: u64,
+    /// Decoder layers of the full model. Evaluation stays per-layer (the
+    /// artifact contract); reports multiply by this for full-model times.
+    pub n_layers: u64,
     pub tp: u64,
     pub batch: u64,
     pub prefill_seq: u64,
@@ -24,8 +33,10 @@ pub struct WorkloadSpec {
 pub const GPT3_175B: WorkloadSpec = WorkloadSpec {
     d_model: 12288,
     n_heads: 96,
+    n_kv_heads: 96,
     d_head: 128,
     d_ffn: 49152,
+    n_layers: 96,
     tp: 8,
     batch: 8,
     prefill_seq: 2048,
@@ -35,32 +46,83 @@ pub const GPT3_175B: WorkloadSpec = WorkloadSpec {
 pub const GPT3_TINY: WorkloadSpec = WorkloadSpec {
     d_model: 1024,
     n_heads: 16,
+    n_kv_heads: 16,
     d_head: 64,
     d_ffn: 4096,
+    n_layers: 4,
     tp: 8,
     batch: 8,
     prefill_seq: 256,
     decode_pos: 128,
 };
 
-/// Resolve a workload by its artifact name (`meta.json` `workload` key).
-pub fn spec_by_name(name: &str) -> Option<WorkloadSpec> {
-    match name {
-        "gpt3-175b" => Some(GPT3_175B),
-        "gpt3-tiny" => Some(GPT3_TINY),
-        _ => None,
-    }
-}
-
 impl WorkloadSpec {
     pub fn heads_local(&self) -> u64 {
         self.n_heads / self.tp
+    }
+    pub fn kv_heads_local(&self) -> u64 {
+        self.n_kv_heads / self.tp
+    }
+    /// Query heads sharing one KV head (1 for MHA).
+    pub fn group(&self) -> u64 {
+        self.heads_local() / self.kv_heads_local()
     }
     pub fn ffn_local(&self) -> u64 {
         self.d_ffn / self.tp
     }
     pub fn kv_len(&self) -> u64 {
         self.prefill_seq + self.decode_pos
+    }
+    /// Per-partition QKV projection output width: Q plus the (possibly
+    /// grouped) K and V. Equals `3 * d_model / tp` for MHA.
+    pub fn qkv_cols(&self) -> u64 {
+        (self.d_model + 2 * self.n_kv_heads * self.d_head) / self.tp
+    }
+
+    /// Structural invariants the op builders rely on (divisibility of
+    /// heads/FFN across the TP group, grouped heads, non-zero phases,
+    /// and Q width consistency: the qkv projection produces
+    /// `d_model / tp` Q columns that attention consumes as
+    /// `heads_local * d_head` — the two must agree).
+    pub fn is_consistent(&self) -> bool {
+        self.tp > 0
+            && self.batch > 0
+            && self.prefill_seq > 0
+            && self.decode_pos > 0
+            && self.d_model == self.n_heads * self.d_head
+            && self.n_heads % self.tp == 0
+            && self.n_kv_heads % self.tp == 0
+            && self.kv_heads_local() > 0
+            && self.heads_local() % self.kv_heads_local() == 0
+            && self.d_ffn % self.tp == 0
+            && self.d_model % self.tp == 0
+            && (self.d_model + 2 * self.n_kv_heads * self.d_head)
+                % self.tp
+                == 0
+            && self.n_layers > 0
+    }
+
+    /// Stable 64-bit identity of the workload, used as the cache-key
+    /// component that distinguishes the same design evaluated under
+    /// different workloads (FNV-1a over the field values).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for v in [
+            self.d_model,
+            self.n_heads,
+            self.n_kv_heads,
+            self.d_head,
+            self.d_ffn,
+            self.n_layers,
+            self.tp,
+            self.batch,
+            self.prefill_seq,
+            self.decode_pos,
+        ] {
+            h ^= v;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
     }
 }
 
@@ -143,17 +205,25 @@ fn allreduce(name: &'static str, raw_bytes: f64, tp: u64) -> Op {
 }
 
 /// Operators of one prefill layer (TTFT phase).
+///
+/// Attention is folded per KV head: each KV head's K/V tiles serve
+/// `group` query heads, so the score/value matmuls carry `m = group * s`
+/// with `count = batch * kv_heads_local` — identical FLOPs to the
+/// per-query-head form, with K/V operand bytes counted once per KV head
+/// (for MHA, `group == 1` and the construction is bit-identical to the
+/// historical one).
 pub fn prefill_ops(w: &WorkloadSpec) -> Vec<Op> {
     let t = w.batch * w.prefill_seq;
     let s = w.prefill_seq;
-    let (hl, d, dh) = (w.heads_local(), w.d_model, w.d_head);
+    let (kvl, g, d, dh) =
+        (w.kv_heads_local(), w.group(), w.d_model, w.d_head);
     let ar = (t * d) as f64 * c::FP16_BYTES as f64;
     vec![
         vector("layernorm_1", t * d, 8.0),
-        matmul("qkv_proj", t, 3 * d / w.tp, d, 1),
-        matmul("attn_scores", s, s, dh, w.batch * hl),
-        vector("softmax", w.batch * hl * s * s, 5.0),
-        matmul("attn_value", s, dh, s, w.batch * hl),
+        matmul("qkv_proj", t, w.qkv_cols(), d, 1),
+        matmul("attn_scores", g * s, s, dh, w.batch * kvl),
+        vector("softmax", w.batch * w.heads_local() * s * s, 5.0),
+        matmul("attn_value", g * s, dh, s, w.batch * kvl),
         matmul("out_proj", t, d, d / w.tp, 1),
         allreduce("allreduce_attn", ar, w.tp),
         vector("layernorm_2", t * d, 8.0),
@@ -164,18 +234,20 @@ pub fn prefill_ops(w: &WorkloadSpec) -> Vec<Op> {
     ]
 }
 
-/// Operators of one decode layer at output token `decode_pos`.
+/// Operators of one decode layer at output token `decode_pos` (same
+/// KV-head folding as [`prefill_ops`]: `m = group` rows per KV head).
 pub fn decode_ops(w: &WorkloadSpec) -> Vec<Op> {
     let b = w.batch;
     let sk = w.kv_len();
-    let (hl, d, dh) = (w.heads_local(), w.d_model, w.d_head);
+    let (kvl, g, d, dh) =
+        (w.kv_heads_local(), w.group(), w.d_model, w.d_head);
     let ar = (b * d) as f64 * c::FP16_BYTES as f64;
     vec![
         vector("layernorm_1", b * d, 8.0),
-        matmul("qkv_proj", b, 3 * d / w.tp, d, 1),
-        matmul("attn_scores", 1, sk, dh, b * hl),
-        vector("softmax", b * hl * sk, 5.0),
-        matmul("attn_value", 1, dh, sk, b * hl),
+        matmul("qkv_proj", b, w.qkv_cols(), d, 1),
+        matmul("attn_scores", g, sk, dh, b * kvl),
+        vector("softmax", b * w.heads_local() * sk, 5.0),
+        matmul("attn_value", g, dh, sk, b * kvl),
         matmul("out_proj", b, d, d / w.tp, 1),
         allreduce("allreduce_attn", ar, w.tp),
         vector("layernorm_2", b * d, 8.0),
@@ -216,6 +288,7 @@ pub fn op_table(w: &WorkloadSpec) -> [[[f32; 8]; MAX_OPS]; N_PHASES] {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::scenario::spec_by_name;
 
     #[test]
     fn prefill_flops_match_analytic() {
@@ -298,5 +371,58 @@ mod tests {
             names.dedup();
             assert_eq!(names.len(), ops.len());
         }
+    }
+
+    #[test]
+    fn mha_gqa_formulas_reduce_to_historical_shapes() {
+        // For n_kv_heads == n_heads the folded attention must reproduce
+        // the pre-GQA shapes exactly.
+        let w = GPT3_175B;
+        assert_eq!(w.group(), 1);
+        assert_eq!(w.qkv_cols(), 3 * w.d_model / w.tp);
+        let pf = prefill_ops(&w);
+        assert_eq!(pf[2].m, w.prefill_seq as f64);
+        assert_eq!(pf[2].count, (w.batch * w.heads_local()) as f64);
+        let dc = decode_ops(&w);
+        assert_eq!(dc[2].m, 1.0);
+        assert_eq!(dc[4].n, w.d_head as f64);
+    }
+
+    #[test]
+    fn gqa_preserves_flops_and_cuts_kv_bytes() {
+        // Grouping KV heads must not change attention FLOPs, but must
+        // shrink the decode KV-cache operand traffic.
+        let gqa = spec_by_name("llama-70b").unwrap();
+        let mha = WorkloadSpec { n_kv_heads: gqa.n_heads, ..gqa };
+        assert!(gqa.n_kv_heads < gqa.n_heads);
+        let flops = |w: &WorkloadSpec| -> f64 {
+            decode_ops(w)
+                .iter()
+                .filter(|o| o.name.starts_with("attn"))
+                .map(|o| o.flops)
+                .sum()
+        };
+        let bytes = |w: &WorkloadSpec| -> f64 {
+            decode_ops(w)
+                .iter()
+                .filter(|o| o.name.starts_with("attn"))
+                .map(|o| o.bytes)
+                .sum()
+        };
+        let df = (flops(&mha) - flops(&gqa)).abs() / flops(&mha);
+        assert!(df < 1e-12, "GQA changed attention FLOPs: {df}");
+        assert!(bytes(&gqa) < bytes(&mha) * 0.5);
+        // QKV projection shrinks too (smaller K/V output).
+        assert!(gqa.qkv_cols() < mha.qkv_cols());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_specs() {
+        let a = GPT3_175B.fingerprint();
+        assert_eq!(a, GPT3_175B.fingerprint());
+        assert_ne!(a, GPT3_TINY.fingerprint());
+        let mut w = GPT3_175B;
+        w.batch *= 2;
+        assert_ne!(a, w.fingerprint());
     }
 }

@@ -12,7 +12,9 @@ use lumina::eval::Evaluator;
 use lumina::runtime::{ArtifactDir, PjrtEvaluator};
 use lumina::sim::RooflineSim;
 use lumina::stats::Pcg32;
-use lumina::workload::GPT3_175B;
+use lumina::workload::{
+    all_scenarios, op_table, spec_by_name, GPT3_175B, MAX_OPS, N_PHASES,
+};
 
 fn pjrt() -> Option<PjrtEvaluator> {
     match PjrtEvaluator::open_default() {
@@ -91,6 +93,97 @@ fn artifact_batch_padding_and_chunking() {
 }
 
 #[test]
+fn spec_by_name_roundtrips_every_registered_scenario() {
+    // The artifact `meta.json` workload key and the CLI `--workload`
+    // flag both resolve through `spec_by_name`; every scenario in the
+    // registry must round-trip, and the resolved spec must be the
+    // scenario's own.
+    for s in all_scenarios() {
+        let spec = spec_by_name(s.name)
+            .unwrap_or_else(|| panic!("{} not resolvable", s.name));
+        assert_eq!(spec, s.spec, "{} resolves to a different spec", s.name);
+        assert!(spec.is_consistent(), "{} inconsistent", s.name);
+    }
+    assert_eq!(spec_by_name("gpt3-175b"), Some(GPT3_175B));
+    assert!(spec_by_name("no-such-workload").is_none());
+}
+
+/// Cross-check the Rust op tables against the Python mirror for every
+/// registered scenario (not just gpt3-175b). Runs the real
+/// `python/compile/workload.py`; skipped gracefully when python3/numpy
+/// are unavailable in the environment.
+#[test]
+fn op_table_matches_python_mirror_for_all_scenarios() {
+    let python_dir =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../python");
+    let script = "\
+import json, sys\n\
+from compile import workload\n\
+out = {}\n\
+for name, spec in workload.SCENARIOS.items():\n\
+    out[name] = [[float(v) for v in row] for phase in \
+workload.op_table(spec) for row in phase]\n\
+print(json.dumps(out))\n";
+    let output = match std::process::Command::new("python3")
+        .arg("-c")
+        .arg(script)
+        .current_dir(&python_dir)
+        .output()
+    {
+        Ok(o) if o.status.success() => o,
+        Ok(o) => {
+            eprintln!(
+                "skipping python-mirror cross-check (python failed): {}",
+                String::from_utf8_lossy(&o.stderr)
+            );
+            return;
+        }
+        Err(e) => {
+            eprintln!(
+                "skipping python-mirror cross-check (no python3): {e}"
+            );
+            return;
+        }
+    };
+    let text = String::from_utf8_lossy(&output.stdout);
+    // Minimal parse of the {"name": [[f, ...] x 32], ...} JSON payload
+    // via the vendored parser.
+    let json = lumina::util::json::Json::parse(text.trim())
+        .expect("mirror emitted invalid JSON");
+    let obj = json.as_obj().expect("mirror payload not an object");
+    assert_eq!(
+        obj.len(),
+        all_scenarios().len(),
+        "python registry diverged from the Rust one"
+    );
+    for s in all_scenarios() {
+        let rows = obj
+            .get(s.name)
+            .unwrap_or_else(|| {
+                panic!("{} missing from python registry", s.name)
+            })
+            .as_arr()
+            .expect("scenario table not an array");
+        assert_eq!(rows.len(), N_PHASES * MAX_OPS, "{}", s.name);
+        let rust = op_table(&s.spec);
+        for (flat, row) in rows.iter().enumerate() {
+            let (p, i) = (flat / MAX_OPS, flat % MAX_OPS);
+            let cells = row.as_arr().expect("row not an array");
+            assert_eq!(cells.len(), 8);
+            for (c, cell) in cells.iter().enumerate() {
+                let py = cell.as_f64().expect("cell not a number") as f32;
+                let rs = rust[p][i][c];
+                assert_eq!(
+                    py, rs,
+                    "{}: phase {p} op {i} col {c}: py={py} rust={rs}",
+                    s.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn artifact_meta_describes_gpt3() {
     let Some(_) = pjrt() else { return };
     let art = ArtifactDir::open_default().unwrap();
@@ -113,6 +206,7 @@ fn full_race_through_pjrt_smoke() {
         trials: 1,
         seed: 3,
         evaluator: EvaluatorKind::RooflinePjrt,
+        ..Default::default()
     })
     .unwrap();
     assert_eq!(results.len(), 6);

@@ -11,7 +11,7 @@ use lumina::figures::table4::{pick_top2, report_rows};
 use lumina::llm::ModelProfile;
 use lumina::lumina::Lumina;
 use lumina::sim::{CompassSim, RooflineSim};
-use lumina::workload::GPT3_175B;
+use lumina::workload::{spec_by_name, suite_scenarios, GPT3_175B};
 
 #[test]
 fn lumina_twenty_compass_samples_multiple_seeds() {
@@ -116,6 +116,53 @@ fn benchmark_selects_qwen3_as_backbone() {
         let p = r.get("phi4", task).unwrap().enhanced;
         let l = r.get("llama3.1", task).unwrap().enhanced;
         assert!(q >= p - 0.02 && q >= l - 0.02, "{task:?}");
+    }
+}
+
+#[test]
+fn explore_runs_end_to_end_on_llama_70b() {
+    // Acceptance: the `--workload llama-70b` CLI path (same code:
+    // make_for + CachedEvaluator + BudgetedEvaluator + Lumina) runs end
+    // to end on a non-default GQA workload.
+    use lumina::eval::CachedEvaluator;
+    let spec = spec_by_name("llama-70b").unwrap();
+    let space = DesignSpace::table1();
+    let mut ev =
+        CachedEvaluator::new(EvaluatorKind::RooflineRust.make_for(&spec));
+    let reference = ev.eval(&DesignPoint::a100()).unwrap().objectives();
+    let mut be = BudgetedEvaluator::new(&mut ev, 40);
+    Lumina::with_seed(3).run(&space, &mut be).unwrap();
+    assert_eq!(be.spent(), 40);
+    let traj: Vec<_> =
+        be.log.iter().map(|(d, m)| (*d, m.objectives())).collect();
+    let r = score_trajectory("lumina", 0, &traj, &reference);
+    assert_eq!(r.trajectory.len(), 40);
+    assert!(r.phv.is_finite() && r.phv >= 0.0);
+    // And the reference genuinely reflects the different workload.
+    let mut gpt3 = RooflineSim::new(GPT3_175B);
+    let g = gpt3.eval(&DesignPoint::a100()).unwrap().objectives();
+    assert!((g[0] - reference[0]).abs() / g[0] > 0.05);
+}
+
+#[test]
+fn every_suite_scenario_explores_and_evaluates() {
+    // Each registered suite scenario must support the full pipeline on
+    // both fidelity models (smoke breadth over the registry).
+    for s in suite_scenarios() {
+        let mut roof = RooflineSim::new(s.spec);
+        let m = roof.eval(&DesignPoint::a100()).unwrap();
+        assert!(
+            m.ttft_ms > 0.0 && m.tpot_ms > 0.0 && m.ttft_ms.is_finite(),
+            "{}: degenerate roofline metrics {m:?}",
+            s.name
+        );
+        let mut compass = CompassSim::new(s.spec);
+        let c = compass.eval(&DesignPoint::a100()).unwrap();
+        assert!(
+            c.ttft_ms > 0.0 && c.tpot_ms > 0.0 && c.ttft_ms.is_finite(),
+            "{}: degenerate compass metrics {c:?}",
+            s.name
+        );
     }
 }
 

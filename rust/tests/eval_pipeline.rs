@@ -6,8 +6,8 @@
 
 use lumina::design::{sample, DesignPoint, DesignSpace};
 use lumina::eval::{
-    BudgetedEvaluator, CachedEvaluator, EvalOne, Evaluator,
-    ParallelEvaluator,
+    BudgetedEvaluator, CachedEvaluator, EvalOne, Evaluator, Metrics,
+    ParallelEvaluator, SuiteEvaluator,
 };
 use lumina::pareto::{
     hypervolume, normalize, pareto_front, Objectives, ParetoArchive,
@@ -16,7 +16,9 @@ use lumina::pareto::{
 use lumina::sim::{CompassSim, RooflineSim};
 use lumina::stats::Pcg32;
 use lumina::util::prop;
-use lumina::workload::GPT3_175B;
+use lumina::workload::{
+    spec_by_name, suite_scenarios, WorkloadSpec, GPT3_175B,
+};
 
 fn batch(n: usize, seed: u64) -> Vec<DesignPoint> {
     let space = DesignSpace::table1();
@@ -114,6 +116,114 @@ fn budget_charges_misses_only_across_pipeline() {
     assert_eq!(be.evaluations(), 48);
     // At least the full second pass was served from the cache.
     assert!(be.cache_counters().unwrap().hits >= 24);
+}
+
+/// An evaluator whose workload can be switched between batches —
+/// the exact aliasing scenario the (workload, design) cache key exists
+/// for.
+struct SwitchableWorkload {
+    sims: Vec<RooflineSim>,
+    active: usize,
+}
+
+impl Evaluator for SwitchableWorkload {
+    fn eval_batch(
+        &mut self,
+        designs: &[DesignPoint],
+    ) -> lumina::Result<Vec<Metrics>> {
+        self.sims[self.active].eval_batch(designs)
+    }
+    fn name(&self) -> &'static str {
+        "switchable"
+    }
+    fn workload_fingerprint(&self) -> u64 {
+        Evaluator::workload_fingerprint(&self.sims[self.active])
+    }
+}
+
+#[test]
+fn cache_keys_distinguish_workloads_for_the_same_design() {
+    // Acceptance: one CachedEvaluator must produce distinct entries for
+    // the same design under two different workloads — keyed on
+    // (workload fingerprint, design), not design alone.
+    let llama = spec_by_name("llama-70b").unwrap();
+    let mut shared = CachedEvaluator::new(SwitchableWorkload {
+        sims: vec![RooflineSim::new(GPT3_175B), RooflineSim::new(llama)],
+        active: 0,
+    });
+    let d = DesignPoint::a100();
+
+    let a = shared.eval(&d).unwrap();
+    assert!(shared.is_cached(&d));
+    assert_eq!(shared.len(), 1);
+
+    // Same design, different workload: must miss and re-simulate.
+    shared.inner_mut().active = 1;
+    assert!(
+        !shared.is_cached(&d),
+        "stale hit: workload changed but design still cached"
+    );
+    let b = shared.eval(&d).unwrap();
+    assert_ne!(a, b, "two workloads returned identical metrics");
+    assert_eq!(shared.len(), 2, "expected one entry per workload");
+    assert_eq!(shared.counters().misses, 2);
+
+    // Revisits under each workload hit their own entry.
+    shared.inner_mut().active = 0;
+    assert_eq!(shared.eval(&d).unwrap(), a);
+    shared.inner_mut().active = 1;
+    assert_eq!(shared.eval(&d).unwrap(), b);
+    assert_eq!(shared.counters().hits, 2);
+}
+
+#[test]
+fn suite_composite_is_deterministic_across_pipelines() {
+    // Suite results must be bitwise identical whether the members are
+    // plain sequential sims, parallel-sharded, or memoized — and across
+    // repeat evaluation (cached vs uncached).
+    let scenarios = suite_scenarios();
+    let designs = batch(32, 123);
+
+    let mut plain = SuiteEvaluator::new(
+        &scenarios,
+        &mut |spec: &WorkloadSpec| -> Box<dyn Evaluator> {
+            Box::new(RooflineSim::new(*spec))
+        },
+    )
+    .unwrap();
+    let mut parallel = SuiteEvaluator::new(
+        &scenarios,
+        &mut |spec: &WorkloadSpec| -> Box<dyn Evaluator> {
+            Box::new(ParallelEvaluator::new(RooflineSim::new(*spec)))
+        },
+    )
+    .unwrap();
+    let mut cached = SuiteEvaluator::new(
+        &scenarios,
+        &mut |spec: &WorkloadSpec| -> Box<dyn Evaluator> {
+            Box::new(CachedEvaluator::new(RooflineSim::new(*spec)))
+        },
+    )
+    .unwrap();
+
+    let want = plain.eval_batch(&designs).unwrap();
+    assert_eq!(parallel.eval_batch(&designs).unwrap(), want);
+    let first = cached.eval_batch(&designs).unwrap();
+    assert_eq!(first, want);
+    // Second pass: fully served from the member caches, still bitwise.
+    assert_eq!(cached.eval_batch(&designs).unwrap(), want);
+
+    // Per-scenario reports agree across pipelines too.
+    let d = designs[0];
+    let a = plain.eval_scenarios(&d).unwrap();
+    let b = parallel.eval_scenarios(&d).unwrap();
+    let c = cached.eval_scenarios(&d).unwrap();
+    assert_eq!(a.len(), scenarios.len());
+    for ((x, y), z) in a.iter().zip(&b).zip(&c) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.metrics, y.metrics, "{}", x.name);
+        assert_eq!(x.metrics, z.metrics, "{}", x.name);
+    }
 }
 
 #[test]
