@@ -39,15 +39,9 @@ fn main() {
     );
     let mut best_other = (0.0f64, 0.0f64); // (phv, eff) best non-lumina
     let mut lumina = (0.0f64, 0.0f64);
-    for (m, phv, eff, std) in &agg {
-        let superior: usize = results
-            .iter()
-            .filter(|r| r.method == *m)
-            .map(|r| r.superior)
-            .sum::<usize>()
-            / cfg.trials;
+    for (m, phv, eff, std, superior) in &agg {
         println!(
-            "{m:<16} {phv:>10.4} {std:>10.4} {eff:>12.4} {superior:>10}"
+            "{m:<16} {phv:>10.4} {std:>10.4} {eff:>12.4} {superior:>10.1}"
         );
         if *m == "lumina" {
             lumina = (*phv, *eff);

@@ -9,9 +9,13 @@
 
 use lumina::baselines::DseMethod;
 use lumina::design::{sample, DesignPoint, DesignSpace};
+use lumina::dse::SessionState;
 use lumina::eval::parallel::default_threads;
 use lumina::eval::{
     BudgetedEvaluator, CachedEvaluator, Evaluator, ParallelEvaluator,
+};
+use lumina::figures::race::{
+    run_race, run_race_fused, EvaluatorKind, RaceConfig,
 };
 use lumina::lumina::Lumina;
 use lumina::pareto::{
@@ -171,6 +175,63 @@ fn main() {
         r.name,
         format!("{:.6e}", r.mean_s),
         format!("{:.1}", r.throughput(60.0))
+    ]);
+
+    // --- Serial vs fused race (the ask/tell payoff): same cells, same
+    // budgets, but the fused driver feeds the parallel pipeline
+    // cross-cell batches instead of singletons.
+    let race_cfg = RaceConfig {
+        samples: 100,
+        trials: 2,
+        seed: 77,
+        evaluator: EvaluatorKind::RooflineRust,
+        ..Default::default()
+    };
+    let race_evals = (6 * race_cfg.trials * race_cfg.samples) as f64;
+    let r = bench("race serial 6x2x100 (rust roofline)", 1, 3, || {
+        let _ = run_race(&race_cfg).unwrap();
+    });
+    csv.row(csv_row![
+        r.name,
+        format!("{:.6e}", r.mean_s),
+        format!("{:.0}", r.throughput(race_evals))
+    ]);
+    let r = bench("race fused 6x2x100 (rust roofline)", 1, 3, || {
+        let _ = run_race_fused(&race_cfg).unwrap();
+    });
+    csv.row(csv_row![
+        r.name,
+        format!("{:.6e}", r.mean_s),
+        format!("{:.0}", r.throughput(race_evals))
+    ]);
+
+    // --- Session checkpoint save/load round-trip (60-sample log).
+    let state = {
+        let mut sim = RooflineSim::new(default_scenario().spec);
+        let mut be = BudgetedEvaluator::new(&mut sim, 60);
+        Lumina::with_seed(1).run(&space, &mut be).unwrap();
+        SessionState {
+            method: "lumina".to_string(),
+            model: "qwen3".to_string(),
+            seed: 1,
+            budget: 60,
+            spent: be.spent(),
+            evaluator: "roofline-rs".to_string(),
+            workload_fp: 0,
+            log: be.log,
+        }
+    };
+    let ckpt = std::env::temp_dir().join("perf_hotpath_ckpt.json");
+    let r = bench("session checkpoint save+load, n=60", 2, 50, || {
+        state.save(&ckpt).unwrap();
+        let again = SessionState::load(&ckpt).unwrap();
+        std::hint::black_box(again.log.len());
+    });
+    let _ = std::fs::remove_file(&ckpt);
+    csv.row(csv_row![
+        r.name,
+        format!("{:.6e}", r.mean_s),
+        format!("{:.1}", r.throughput(1.0))
     ]);
 
     csv.write("out/perf_hotpath.csv").unwrap();

@@ -6,7 +6,9 @@
 //! make artifacts && cargo run --release --example baseline_race
 //! ```
 
-use lumina::figures::race::{aggregate, run_race, EvaluatorKind, RaceConfig};
+use lumina::figures::race::{
+    aggregate, run_race_fused, EvaluatorKind, RaceConfig,
+};
 
 fn main() -> lumina::Result<()> {
     let cfg = RaceConfig {
@@ -17,23 +19,20 @@ fn main() -> lumina::Result<()> {
         ..Default::default()
     };
     println!(
-        "racing 6 methods, {} samples x {} trials ...",
+        "racing 6 methods, {} samples x {} trials (fused) ...",
         cfg.samples, cfg.trials
     );
+    // The fused driver round-robins ask() across all 18 cells and
+    // batches their proposals into shared eval_batch calls; results are
+    // bit-identical to the serial `run_race`.
     let t0 = std::time::Instant::now();
-    let results = run_race(&cfg)?;
+    let results = run_race_fused(&cfg)?;
     println!(
         "{:<16} {:>10} {:>12} {:>10}",
         "method", "mean PHV", "sample eff", "superior"
     );
-    for (m, phv, eff, _) in aggregate(&results) {
-        let sup: usize = results
-            .iter()
-            .filter(|r| r.method == m)
-            .map(|r| r.superior)
-            .sum::<usize>()
-            / cfg.trials;
-        println!("{m:<16} {phv:>10.4} {eff:>12.4} {sup:>10}");
+    for (m, phv, eff, _, sup) in aggregate(&results) {
+        println!("{m:<16} {phv:>10.4} {eff:>12.4} {sup:>10.1}");
     }
     println!("done in {:.1}s", t0.elapsed().as_secs_f64());
     Ok(())

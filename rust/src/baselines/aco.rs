@@ -3,15 +3,16 @@
 //! reward designs by scalarized quality. The "far-to-near" behaviour the
 //! paper shows in Fig. 6 emerges from the initially uniform trails.
 
-use crate::design::{DesignPoint, DesignSpace, Param, N_PARAMS};
-use crate::eval::BudgetedEvaluator;
+use crate::design::{DesignPoint, Param, N_PARAMS};
+use crate::dse::{AskCtx, DseSession};
+use crate::eval::Metrics;
 use crate::pareto::Objectives;
 use crate::stats::rng::Pcg32;
-use crate::Result;
 
-use super::DseMethod;
-
-/// ACO over the categorical grid.
+/// ACO over the categorical grid, as an ask/tell session: each `ask`
+/// folds the previous generation's deposits into the trails and samples
+/// a whole colony; `tell` updates the running objective normalizers and
+/// parks the generation for the next deposit.
 pub struct AntColony {
     rng: Pcg32,
     /// Pheromone exponent.
@@ -22,6 +23,12 @@ pub struct AntColony {
     pub ants: usize,
     /// Top-k ants deposit per generation.
     pub elite: usize,
+    pher: Option<[Vec<f64>; N_PARAMS]>,
+    /// Running objective normalizers (means).
+    mean: Objectives,
+    seen: usize,
+    /// Last generation, awaiting its trail deposit.
+    pending: Vec<(DesignPoint, Metrics)>,
 }
 
 impl AntColony {
@@ -32,12 +39,16 @@ impl AntColony {
             rho: 0.04,
             ants: 20,
             elite: 1,
+            pher: None,
+            mean: [0.0; 3],
+            seen: 0,
+            pending: Vec::new(),
         }
     }
 
     fn sample_design(
         &mut self,
-        space: &DesignSpace,
+        space: &crate::design::DesignSpace,
         pher: &[Vec<f64>; N_PARAMS],
     ) -> DesignPoint {
         let mut values = [0u32; N_PARAMS];
@@ -59,78 +70,87 @@ impl AntColony {
         }
         DesignPoint::new(values)
     }
+
+    /// Score the parked generation, evaporate, and deposit the elite.
+    fn deposit(
+        &mut self,
+        space: &crate::design::DesignSpace,
+        pher: &mut [Vec<f64>; N_PARAMS],
+    ) {
+        let results = std::mem::take(&mut self.pending);
+        // Quality: inverse normalized scalarized objective.
+        let mut scored: Vec<(f64, &DesignPoint)> = results
+            .iter()
+            .map(|(d, m)| {
+                let o = m.objectives();
+                let s: f64 = (0..3)
+                    .map(|i| o[i] / self.mean[i].max(1e-30))
+                    .sum();
+                (1.0 / s.max(1e-9), d)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+        // Evaporate.
+        for tr in pher.iter_mut() {
+            for t in tr.iter_mut() {
+                *t = (*t * (1.0 - self.rho)).max(0.05);
+            }
+        }
+        // Elite deposit.
+        for (q, d) in scored.iter().take(self.elite) {
+            for p in Param::ALL {
+                if let Some(i) = space.index_of(p, d.get(p)) {
+                    pher[p.index()][i] += q;
+                }
+            }
+        }
+    }
 }
 
-impl DseMethod for AntColony {
+impl DseSession for AntColony {
     fn name(&self) -> &'static str {
         "ant-colony"
     }
 
-    fn run(
-        &mut self,
-        space: &DesignSpace,
-        eval: &mut BudgetedEvaluator,
-    ) -> Result<()> {
+    fn ask(&mut self, ctx: &AskCtx) -> Vec<DesignPoint> {
         // Uniform initial pheromone per axis value.
-        let mut pher: [Vec<f64>; N_PARAMS] = std::array::from_fn(|i| {
-            vec![1.0; space.values(Param::from_index(i)).len()]
+        let mut pher = self.pher.take().unwrap_or_else(|| {
+            std::array::from_fn(|i| {
+                vec![1.0; ctx.space.values(Param::from_index(i)).len()]
+            })
         });
-        // Running objective normalizers (means).
-        let mut mean: Objectives = [0.0; 3];
-        let mut seen = 0usize;
+        if !self.pending.is_empty() {
+            self.deposit(ctx.space, &mut pher);
+        }
+        let n = self.ants.min(ctx.remaining);
+        let designs: Vec<DesignPoint> = (0..n)
+            .map(|_| self.sample_design(ctx.space, &pher))
+            .collect();
+        self.pher = Some(pher);
+        designs
+    }
 
-        while !eval.exhausted() {
-            let n = self.ants.min(eval.remaining());
-            let designs: Vec<DesignPoint> = (0..n)
-                .map(|_| self.sample_design(space, &pher))
-                .collect();
-            let results = eval.eval_batch(&designs)?;
-            if results.is_empty() {
-                break;
-            }
-            // Update normalizers.
-            for (_, m) in &results {
-                let o = m.objectives();
-                seen += 1;
-                for i in 0..3 {
-                    mean[i] += (o[i] - mean[i]) / seen as f64;
-                }
-            }
-            // Quality: inverse normalized scalarized objective.
-            let mut scored: Vec<(f64, &DesignPoint)> = results
-                .iter()
-                .map(|(d, m)| {
-                    let o = m.objectives();
-                    let s: f64 = (0..3)
-                        .map(|i| o[i] / mean[i].max(1e-30))
-                        .sum();
-                    (1.0 / s.max(1e-9), d)
-                })
-                .collect();
-            scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-
-            // Evaporate.
-            for tr in pher.iter_mut() {
-                for t in tr.iter_mut() {
-                    *t = (*t * (1.0 - self.rho)).max(0.05);
-                }
-            }
-            // Elite deposit.
-            for (q, d) in scored.iter().take(self.elite) {
-                for p in Param::ALL {
-                    if let Some(i) = space.index_of(p, d.get(p)) {
-                        pher[p.index()][i] += q;
-                    }
-                }
+    fn tell(&mut self, results: &[(DesignPoint, Metrics)]) {
+        // Update normalizers; the deposit itself happens at the next
+        // ask (it needs the design space for the value indices).
+        for (_, m) in results {
+            let o = m.objectives();
+            self.seen += 1;
+            for i in 0..3 {
+                self.mean[i] += (o[i] - self.mean[i]) / self.seen as f64;
             }
         }
-        Ok(())
+        self.pending = results.to_vec();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::baselines::DseMethod;
+    use crate::design::DesignSpace;
+    use crate::eval::BudgetedEvaluator;
     use crate::sim::RooflineSim;
     use crate::workload::GPT3_175B;
 

@@ -8,14 +8,15 @@
 //! cites for BO [22].
 
 use crate::design::{sample, DesignPoint, DesignSpace, Param, N_PARAMS};
-use crate::eval::BudgetedEvaluator;
+use crate::dse::{AskCtx, DseSession};
+use crate::eval::Metrics;
 use crate::pareto::Objectives;
 use crate::stats::rng::Pcg32;
-use crate::Result;
 
-use super::DseMethod;
-
-/// BO with GP surrogate and EI acquisition.
+/// BO with GP surrogate and EI acquisition, as an ask/tell session:
+/// the first `ask` emits the space-filling init batch, every later
+/// `ask` refits the GP on the observations accumulated by `tell` and
+/// maximizes EI over a candidate pool.
 pub struct BayesOpt {
     rng: Pcg32,
     /// Initial space-filling sample count.
@@ -28,6 +29,9 @@ pub struct BayesOpt {
     pub length_scale: f64,
     /// Observation noise.
     pub noise: f64,
+    /// Everything observed so far, in evaluation order.
+    history: Vec<(DesignPoint, Objectives)>,
+    init_done: bool,
 }
 
 impl BayesOpt {
@@ -39,6 +43,8 @@ impl BayesOpt {
             max_train: 160,
             length_scale: 0.35,
             noise: 1e-4,
+            history: Vec::new(),
+            init_done: false,
         }
     }
 
@@ -63,148 +69,149 @@ impl BayesOpt {
         }
         (-d2 / (2.0 * self.length_scale * self.length_scale)).exp()
     }
+
+    /// One acquisition round: fit the GP on the history, return the EI
+    /// maximizer (or a uniform fallback on degenerate kernels).
+    fn acquire(&mut self, space: &DesignSpace) -> DesignPoint {
+        // ---- Training data: scalarize with fresh random weights each
+        // round (ParEGO) so the GP chases the whole front.
+        let all = &self.history;
+        // Normalize objectives by the observed means.
+        let mut mean = [0f64; 3];
+        for (_, o) in all {
+            for i in 0..3 {
+                mean[i] += o[i];
+            }
+        }
+        for m in &mut mean {
+            *m /= all.len() as f64;
+        }
+        let w = random_weights(&mut self.rng);
+        let scalar = |o: &Objectives| {
+            (0..3).map(|i| w[i] * o[i] / mean[i]).sum::<f64>()
+        };
+
+        // Cap the training set: keep the best half and the most recent
+        // half.
+        let mut idx: Vec<usize> = (0..all.len()).collect();
+        if all.len() > self.max_train {
+            idx.sort_by(|&a, &b| {
+                scalar(&all[a].1)
+                    .partial_cmp(&scalar(&all[b].1))
+                    .unwrap()
+            });
+            let mut keep: Vec<usize> =
+                idx[..self.max_train / 2].to_vec();
+            keep.extend(all.len() - self.max_train / 2..all.len());
+            keep.sort();
+            keep.dedup();
+            idx = keep;
+        }
+
+        let xs: Vec<[f64; N_PARAMS]> = idx
+            .iter()
+            .map(|&i| Self::features(space, &all[i].0))
+            .collect();
+        let ys: Vec<f64> =
+            idx.iter().map(|&i| scalar(&all[i].1)).collect();
+        let y_mean = ys.iter().sum::<f64>() / ys.len() as f64;
+        let yc: Vec<f64> = ys.iter().map(|y| y - y_mean).collect();
+
+        // ---- GP fit: K + noise*I, Cholesky, alpha = K^-1 y.
+        let n = xs.len();
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i * n + j] = self.kernel(&xs[i], &xs[j])
+                    + if i == j { self.noise } else { 0.0 };
+            }
+        }
+        let chol = cholesky(&mut k, n);
+        if !chol {
+            // Degenerate kernel: fall back to random proposal.
+            return sample::uniform(space, &mut self.rng);
+        }
+        let alpha = cho_solve(&k, n, &yc);
+
+        // ---- EI over a candidate pool (uniform + neighbourhood of
+        // the incumbent).
+        let best_y =
+            ys.iter().cloned().fold(f64::INFINITY, f64::min);
+        let incumbent = idx
+            .iter()
+            .min_by(|&&a, &&b| {
+                scalar(&all[a].1)
+                    .partial_cmp(&scalar(&all[b].1))
+                    .unwrap()
+            })
+            .map(|&i| all[i].0)
+            .unwrap_or_else(DesignPoint::a100);
+
+        let mut best_cand: Option<(DesignPoint, f64)> = None;
+        for c in 0..self.pool {
+            let cand = if c % 4 == 0 {
+                let ns = space.neighbors(&incumbent);
+                *self.rng.choose(&ns)
+            } else {
+                sample::uniform(space, &mut self.rng)
+            };
+            let f = Self::features(space, &cand);
+            let kv: Vec<f64> =
+                xs.iter().map(|x| self.kernel(x, &f)).collect();
+            let mu = y_mean
+                + kv.iter()
+                    .zip(&alpha)
+                    .map(|(a, b)| a * b)
+                    .sum::<f64>();
+            let v = cho_solve(&k, n, &kv);
+            let var = (self.kernel(&f, &f)
+                - kv.iter()
+                    .zip(&v)
+                    .map(|(a, b)| a * b)
+                    .sum::<f64>())
+            .max(1e-12);
+            let sigma = var.sqrt();
+            let z = (best_y - mu) / sigma;
+            let ei = sigma * (z * norm_cdf(z) + norm_pdf(z));
+            // Degenerate kernels (duplicate rows, tiny noise) can
+            // yield non-finite EI; skip those candidates.
+            if ei.is_finite()
+                && best_cand.map(|(_, b)| ei > b).unwrap_or(true)
+            {
+                best_cand = Some((cand, ei));
+            }
+        }
+        best_cand
+            .map(|(c, _)| c)
+            .unwrap_or_else(|| sample::uniform(space, &mut self.rng))
+    }
 }
 
-impl DseMethod for BayesOpt {
+impl DseSession for BayesOpt {
     fn name(&self) -> &'static str {
         "bayes-opt"
     }
 
-    fn run(
-        &mut self,
-        space: &DesignSpace,
-        eval: &mut BudgetedEvaluator,
-    ) -> Result<()> {
-        // ---- Space-filling init.
-        let init = sample::stratified(
-            space,
-            &mut self.rng,
-            self.n_init.min(eval.remaining()),
-        );
-        eval.eval_batch(&init)?;
-
-        while !eval.exhausted() {
-            // ---- Training data: scalarize with fresh random weights
-            // each round (ParEGO) so the GP chases the whole front.
-            let all: Vec<(DesignPoint, Objectives)> = eval
-                .log
-                .iter()
-                .map(|(d, m)| (*d, m.objectives()))
-                .collect();
-            // Normalize objectives by the observed means.
-            let mut mean = [0f64; 3];
-            for (_, o) in &all {
-                for i in 0..3 {
-                    mean[i] += o[i];
-                }
-            }
-            for m in &mut mean {
-                *m /= all.len() as f64;
-            }
-            let w = random_weights(&mut self.rng);
-            let scalar = |o: &Objectives| {
-                (0..3).map(|i| w[i] * o[i] / mean[i]).sum::<f64>()
-            };
-
-            // Cap the training set: keep the best half and the most
-            // recent half.
-            let mut idx: Vec<usize> = (0..all.len()).collect();
-            if all.len() > self.max_train {
-                idx.sort_by(|&a, &b| {
-                    scalar(&all[a].1)
-                        .partial_cmp(&scalar(&all[b].1))
-                        .unwrap()
-                });
-                let mut keep: Vec<usize> =
-                    idx[..self.max_train / 2].to_vec();
-                keep.extend(all.len() - self.max_train / 2..all.len());
-                keep.sort();
-                keep.dedup();
-                idx = keep;
-            }
-
-            let xs: Vec<[f64; N_PARAMS]> = idx
-                .iter()
-                .map(|&i| Self::features(space, &all[i].0))
-                .collect();
-            let ys: Vec<f64> =
-                idx.iter().map(|&i| scalar(&all[i].1)).collect();
-            let y_mean = ys.iter().sum::<f64>() / ys.len() as f64;
-            let yc: Vec<f64> = ys.iter().map(|y| y - y_mean).collect();
-
-            // ---- GP fit: K + noise*I, Cholesky, alpha = K^-1 y.
-            let n = xs.len();
-            let mut k = vec![0.0; n * n];
-            for i in 0..n {
-                for j in 0..n {
-                    k[i * n + j] = self.kernel(&xs[i], &xs[j])
-                        + if i == j { self.noise } else { 0.0 };
-                }
-            }
-            let chol = cholesky(&mut k, n);
-            let alpha = if chol {
-                cho_solve(&k, n, &yc)
-            } else {
-                // Degenerate kernel: fall back to random proposal.
-                let d = sample::uniform(space, &mut self.rng);
-                eval.eval(&d)?;
-                continue;
-            };
-
-            // ---- EI over a candidate pool (uniform + neighbourhood of
-            // the incumbent).
-            let best_y =
-                ys.iter().cloned().fold(f64::INFINITY, f64::min);
-            let incumbent = idx
-                .iter()
-                .min_by(|&&a, &&b| {
-                    scalar(&all[a].1)
-                        .partial_cmp(&scalar(&all[b].1))
-                        .unwrap()
-                })
-                .map(|&i| all[i].0)
-                .unwrap_or_else(DesignPoint::a100);
-
-            let mut best_cand: Option<(DesignPoint, f64)> = None;
-            for c in 0..self.pool {
-                let cand = if c % 4 == 0 {
-                    let ns = space.neighbors(&incumbent);
-                    *self.rng.choose(&ns)
-                } else {
-                    sample::uniform(space, &mut self.rng)
-                };
-                let f = Self::features(space, &cand);
-                let kv: Vec<f64> =
-                    xs.iter().map(|x| self.kernel(x, &f)).collect();
-                let mu = y_mean
-                    + kv.iter()
-                        .zip(&alpha)
-                        .map(|(a, b)| a * b)
-                        .sum::<f64>();
-                let v = cho_solve(&k, n, &kv);
-                let var = (self.kernel(&f, &f)
-                    - kv.iter()
-                        .zip(&v)
-                        .map(|(a, b)| a * b)
-                        .sum::<f64>())
-                .max(1e-12);
-                let sigma = var.sqrt();
-                let z = (best_y - mu) / sigma;
-                let ei = sigma * (z * norm_cdf(z) + norm_pdf(z));
-                // Degenerate kernels (duplicate rows, tiny noise) can
-                // yield non-finite EI; skip those candidates.
-                if ei.is_finite()
-                    && best_cand.map(|(_, b)| ei > b).unwrap_or(true)
-                {
-                    best_cand = Some((cand, ei));
-                }
-            }
-            let next = best_cand
-                .map(|(c, _)| c)
-                .unwrap_or_else(|| sample::uniform(space, &mut self.rng));
-            eval.eval(&next)?;
+    fn ask(&mut self, ctx: &AskCtx) -> Vec<DesignPoint> {
+        if !self.init_done {
+            // ---- Space-filling init.
+            self.init_done = true;
+            return sample::stratified(
+                ctx.space,
+                &mut self.rng,
+                self.n_init.min(ctx.remaining),
+            );
         }
-        Ok(())
+        if self.history.is_empty() {
+            // Unreachable when the init batch evaluated; guard anyway.
+            return vec![sample::uniform(ctx.space, &mut self.rng)];
+        }
+        vec![self.acquire(ctx.space)]
+    }
+
+    fn tell(&mut self, results: &[(DesignPoint, Metrics)]) {
+        self.history
+            .extend(results.iter().map(|(d, m)| (*d, m.objectives())));
     }
 }
 
@@ -283,6 +290,8 @@ fn norm_cdf(z: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::baselines::DseMethod;
+    use crate::eval::BudgetedEvaluator;
     use crate::sim::RooflineSim;
     use crate::workload::GPT3_175B;
 

@@ -4,18 +4,21 @@
 //! [14]) observe.
 
 use crate::design::{sample, DesignPoint, DesignSpace, Param};
-use crate::eval::BudgetedEvaluator;
+use crate::dse::{AskCtx, DseSession};
+use crate::eval::Metrics;
 use crate::pareto::{dominates, Objectives};
 use crate::stats::rng::Pcg32;
-use crate::Result;
 
-use super::DseMethod;
-
-/// NSGA-II-lite.
+/// NSGA-II-lite, as an ask/tell session: the first `ask` emits the
+/// whole stratified founder generation; every later `ask` breeds one
+/// child by tournament + crossover + mutation, and `tell` folds it into
+/// the population with environmental selection.
 pub struct Genetic {
     rng: Pcg32,
     pub pop_size: usize,
     pub mutation_p: f64,
+    pop: Vec<(DesignPoint, Objectives)>,
+    init_done: bool,
 }
 
 impl Genetic {
@@ -24,6 +27,8 @@ impl Genetic {
             rng: Pcg32::with_stream(seed, 0x6a),
             pop_size: 24,
             mutation_p: 0.25,
+            pop: Vec::new(),
+            init_done: false,
         }
     }
 
@@ -120,73 +125,68 @@ fn crowding(objs: &[Objectives]) -> Vec<f64> {
     dist
 }
 
-impl DseMethod for Genetic {
+impl DseSession for Genetic {
     fn name(&self) -> &'static str {
         "genetic"
     }
 
-    fn run(
-        &mut self,
-        space: &DesignSpace,
-        eval: &mut BudgetedEvaluator,
-    ) -> Result<()> {
-        let n0 = self.pop_size.min(eval.remaining());
-        if n0 == 0 {
-            return Ok(());
+    fn ask(&mut self, ctx: &AskCtx) -> Vec<DesignPoint> {
+        if !self.init_done {
+            self.init_done = true;
+            let n0 = self.pop_size.min(ctx.remaining);
+            if n0 == 0 {
+                return Vec::new();
+            }
+            return sample::stratified(ctx.space, &mut self.rng, n0);
         }
-        let init = sample::stratified(space, &mut self.rng, n0);
-        let mut pop: Vec<(DesignPoint, Objectives)> = eval
-            .eval_batch(&init)?
-            .into_iter()
-            .map(|(d, m)| (d, m.objectives()))
-            .collect();
+        if self.pop.len() < 2 {
+            return Vec::new();
+        }
+        let objs: Vec<Objectives> =
+            self.pop.iter().map(|(_, o)| *o).collect();
+        let ranks = pareto_ranks(&objs);
+        let crowd = crowding(&objs);
+        // Binary tournament by (rank, crowding).
+        let len = self.pop.len();
+        let tournament = |rng: &mut Pcg32| {
+            let a = rng.range_usize(0, len);
+            let b = rng.range_usize(0, len);
+            if (ranks[a], std::cmp::Reverse(ordered(crowd[a])))
+                < (ranks[b], std::cmp::Reverse(ordered(crowd[b])))
+            {
+                a
+            } else {
+                b
+            }
+        };
+        let pa = tournament(&mut self.rng);
+        let pb = tournament(&mut self.rng);
+        let (da, db) = (self.pop[pa].0, self.pop[pb].0);
+        let x = self.crossover(&da, &db);
+        vec![self.mutate(ctx.space, &x)]
+    }
 
-        while !eval.exhausted() && pop.len() >= 2 {
+    fn tell(&mut self, results: &[(DesignPoint, Metrics)]) {
+        for (d, m) in results {
+            self.pop.push((*d, m.objectives()));
+        }
+        // Environmental selection: drop the worst-ranked individual.
+        if self.pop.len() > self.pop_size {
             let objs: Vec<Objectives> =
-                pop.iter().map(|(_, o)| *o).collect();
+                self.pop.iter().map(|(_, o)| *o).collect();
             let ranks = pareto_ranks(&objs);
             let crowd = crowding(&objs);
-            // Binary tournament by (rank, crowding).
-            let tournament = |rng: &mut Pcg32| {
-                let a = rng.range_usize(0, pop.len());
-                let b = rng.range_usize(0, pop.len());
-                if (ranks[a], std::cmp::Reverse(ordered(crowd[a])))
-                    < (ranks[b], std::cmp::Reverse(ordered(crowd[b])))
-                {
-                    a
-                } else {
-                    b
-                }
-            };
-            let pa = tournament(&mut self.rng);
-            let pb = tournament(&mut self.rng);
-            let child = {
-                let x =
-                    self.crossover(&pop[pa].0.clone(), &pop[pb].0);
-                self.mutate(space, &x)
-            };
-            let Some(m) = eval.eval(&child)? else { break };
-            pop.push((child, m.objectives()));
-
-            // Environmental selection: drop the worst-ranked individual.
-            if pop.len() > self.pop_size {
-                let objs: Vec<Objectives> =
-                    pop.iter().map(|(_, o)| *o).collect();
-                let ranks = pareto_ranks(&objs);
-                let crowd = crowding(&objs);
-                let worst = (0..pop.len())
-                    .max_by(|&a, &b| {
-                        (ranks[a], std::cmp::Reverse(ordered(crowd[a])))
-                            .cmp(&(
-                                ranks[b],
-                                std::cmp::Reverse(ordered(crowd[b])),
-                            ))
-                    })
-                    .unwrap();
-                pop.swap_remove(worst);
-            }
+            let worst = (0..self.pop.len())
+                .max_by(|&a, &b| {
+                    (ranks[a], std::cmp::Reverse(ordered(crowd[a])))
+                        .cmp(&(
+                            ranks[b],
+                            std::cmp::Reverse(ordered(crowd[b])),
+                        ))
+                })
+                .unwrap();
+            self.pop.swap_remove(worst);
         }
-        Ok(())
     }
 }
 
@@ -203,6 +203,8 @@ fn ordered(x: f64) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::baselines::DseMethod;
+    use crate::eval::BudgetedEvaluator;
     use crate::sim::RooflineSim;
     use crate::workload::GPT3_175B;
 

@@ -2,17 +2,19 @@
 //! learning — the paper's weakest baseline ("GS consistently fails to
 //! discover high-quality designs" in a 4.7M space with a 1k budget).
 
-use crate::design::DesignSpace;
-use crate::eval::BudgetedEvaluator;
-use crate::Result;
+use crate::design::DesignPoint;
+use crate::dse::{AskCtx, DseSession};
+use crate::eval::Metrics;
 
-use super::DseMethod;
-
-/// Deterministic strided grid sweep.
+/// Deterministic strided grid sweep, as an ask/tell session: the stride
+/// is fixed from the budget on the first `ask`, then every `ask`
+/// returns the next ring index and `tell` advances the cursor.
 #[derive(Debug, Default)]
 pub struct GridSearch {
     /// Offset into the lattice (lets multiple trials differ).
     pub offset: u64,
+    /// `(ring index, stride)`, fixed on the first ask.
+    cursor: Option<(u64, u64)>,
 }
 
 impl GridSearch {
@@ -21,44 +23,51 @@ impl GridSearch {
     }
 
     pub fn with_offset(offset: u64) -> Self {
-        Self { offset }
+        Self { offset, cursor: None }
     }
 }
 
-impl DseMethod for GridSearch {
+impl DseSession for GridSearch {
     fn name(&self) -> &'static str {
         "grid-search"
     }
 
-    fn run(
-        &mut self,
-        space: &DesignSpace,
-        eval: &mut BudgetedEvaluator,
-    ) -> Result<()> {
-        let total = space.size();
-        let budget = eval.remaining() as u64;
-        if budget == 0 {
-            return Ok(());
+    fn ask(&mut self, ctx: &AskCtx) -> Vec<DesignPoint> {
+        let total = ctx.space.size();
+        if self.cursor.is_none() {
+            let budget = ctx.remaining as u64;
+            if budget == 0 {
+                return Vec::new();
+            }
+            // Evenly strided indices cover every axis combination
+            // pattern; the ring wrap-around is an explicit modulo here,
+            // not hidden inside the decoder.
+            let stride = (total / budget).max(1);
+            self.cursor = Some((self.offset % total, stride));
         }
-        // Evenly strided indices cover every axis combination pattern;
-        // the ring wrap-around is an explicit modulo here, not hidden
-        // inside the decoder.
-        let stride = (total / budget).max(1);
-        let mut idx = self.offset % total;
-        while !eval.exhausted() {
-            let d = space
-                .decode_index(idx % total)
-                .expect("ring index reduced modulo size() decodes");
-            eval.eval(&d)?;
-            idx = idx.wrapping_add(stride);
+        let (idx, _) = self.cursor.expect("cursor initialized above");
+        let d = ctx
+            .space
+            .decode_index(idx % total)
+            .expect("ring index reduced modulo size() decodes");
+        vec![d]
+    }
+
+    fn tell(&mut self, results: &[(DesignPoint, Metrics)]) {
+        if let Some((idx, stride)) = &mut self.cursor {
+            for _ in 0..results.len() {
+                *idx = idx.wrapping_add(*stride);
+            }
         }
-        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::baselines::DseMethod;
+    use crate::design::DesignSpace;
+    use crate::eval::BudgetedEvaluator;
     use crate::sim::RooflineSim;
     use crate::workload::GPT3_175B;
 

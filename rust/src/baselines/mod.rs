@@ -1,7 +1,14 @@
 //! DSE baseline methods (paper Table 2): Grid Search, Random Walker,
-//! Bayesian Optimization, Genetic Algorithm and Ant Colony Optimization —
-//! plus the [`DseMethod`] trait shared with LUMINA so every method runs
-//! under identical budget accounting in the races.
+//! Bayesian Optimization, Genetic Algorithm and Ant Colony Optimization
+//! — plus the [`DseMethod`] trait shared with LUMINA so every method
+//! runs under identical budget accounting in the races.
+//!
+//! Every method is implemented as an ask/tell
+//! [`crate::dse::DseSession`]; `DseMethod::run` is a blanket impl that
+//! drives any session through the sequential
+//! [`crate::dse::drive`] loop, so the pre-redesign blocking API (and
+//! every test/bench/CLI path built on it) keeps working with
+//! bit-identical trajectories.
 
 pub mod aco;
 pub mod bo;
@@ -16,11 +23,12 @@ pub use grid::GridSearch;
 pub use random_walk::RandomWalker;
 
 use crate::design::DesignSpace;
+use crate::dse::DseSession;
 use crate::eval::BudgetedEvaluator;
 use crate::Result;
 
-/// A DSE method: consumes the evaluator's budget, leaving its trajectory
-/// in the evaluator's log.
+/// A DSE method: consumes the evaluator's budget, leaving its
+/// trajectory in the evaluator's log.
 pub trait DseMethod {
     fn name(&self) -> &'static str;
 
@@ -32,16 +40,53 @@ pub trait DseMethod {
     ) -> Result<()>;
 }
 
-/// Construct every method in the paper's comparison, seeded.
-pub fn all_methods(seed: u64) -> Vec<Box<dyn DseMethod>> {
-    vec![
-        Box::new(GridSearch::with_offset(seed.wrapping_mul(0x2545f4914f6cdd1d))),
+/// Blanket sequential driver: every ask/tell session is a `DseMethod`.
+/// This is the compatibility shim of the control-flow inversion — the
+/// push-style API survives as one loop over the pull-style one.
+impl<S: DseSession + ?Sized> DseMethod for S {
+    fn name(&self) -> &'static str {
+        DseSession::name(self)
+    }
+
+    fn run(
+        &mut self,
+        space: &DesignSpace,
+        eval: &mut BudgetedEvaluator,
+    ) -> Result<()> {
+        crate::dse::drive(self, space, eval)
+    }
+}
+
+/// Every method in the paper's comparison as an ask/tell session (the
+/// fused race's cells), labelled with its method name. This is the one
+/// authoritative constructor list.
+pub fn all_sessions(
+    seed: u64,
+) -> Vec<(&'static str, Box<dyn DseSession>)> {
+    let sessions: Vec<Box<dyn DseSession>> = vec![
+        Box::new(GridSearch::with_offset(
+            seed.wrapping_mul(0x2545f4914f6cdd1d),
+        )),
         Box::new(RandomWalker::new(seed)),
         Box::new(BayesOpt::new(seed)),
         Box::new(Genetic::new(seed)),
         Box::new(AntColony::new(seed)),
         Box::new(crate::lumina::Lumina::with_seed(seed)),
-    ]
+    ];
+    sessions
+        .into_iter()
+        .map(|s| (DseSession::name(&*s), s))
+        .collect()
+}
+
+/// Construct every method in the paper's comparison, seeded — the same
+/// sessions as [`all_sessions`], behind the blocking `run()` API (a
+/// boxed session is itself a session, hence a method).
+pub fn all_methods(seed: u64) -> Vec<Box<dyn DseMethod>> {
+    all_sessions(seed)
+        .into_iter()
+        .map(|(_, s)| -> Box<dyn DseMethod> { Box::new(s) })
+        .collect()
 }
 
 #[cfg(test)]
@@ -79,5 +124,14 @@ mod tests {
         dedup.sort();
         dedup.dedup();
         assert_eq!(dedup.len(), names.len(), "{names:?}");
+    }
+
+    #[test]
+    fn method_names_match_session_labels() {
+        let method_names: Vec<&str> =
+            all_methods(7).iter().map(|m| m.name()).collect();
+        let session_names: Vec<&str> =
+            all_sessions(7).iter().map(|(n, _)| *n).collect();
+        assert_eq!(method_names, session_names);
     }
 }

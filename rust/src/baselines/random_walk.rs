@@ -2,56 +2,61 @@
 //! No sample learning ("chance sampling behaviour", paper Fig. 5 groups
 //! it with ACO).
 
-use crate::design::{sample, DesignSpace};
-use crate::eval::BudgetedEvaluator;
+use crate::design::{sample, DesignPoint};
+use crate::dse::{AskCtx, DseSession};
+use crate::eval::Metrics;
 use crate::stats::rng::Pcg32;
-use crate::Result;
-
-use super::DseMethod;
 
 /// Random walk over grid neighbours, restarting uniformly with
-/// probability `restart_p` per step.
+/// probability `restart_p` per step. As a session: each `ask` draws the
+/// next position (uniform start, then neighbour/restart moves) —
+/// `tell` has nothing to record, the walk is metrics-blind.
 pub struct RandomWalker {
     rng: Pcg32,
     pub restart_p: f64,
+    current: Option<DesignPoint>,
 }
 
 impl RandomWalker {
     pub fn new(seed: u64) -> Self {
-        Self { rng: Pcg32::with_stream(seed, 0x3a), restart_p: 0.05 }
+        Self {
+            rng: Pcg32::with_stream(seed, 0x3a),
+            restart_p: 0.05,
+            current: None,
+        }
     }
 }
 
-impl DseMethod for RandomWalker {
+impl DseSession for RandomWalker {
     fn name(&self) -> &'static str {
         "random-walker"
     }
 
-    fn run(
-        &mut self,
-        space: &DesignSpace,
-        eval: &mut BudgetedEvaluator,
-    ) -> Result<()> {
-        let mut current = sample::uniform(space, &mut self.rng);
-        while !eval.exhausted() {
-            if eval.eval(&current)?.is_none() {
-                break;
+    fn ask(&mut self, ctx: &AskCtx) -> Vec<DesignPoint> {
+        let next = match self.current {
+            None => sample::uniform(ctx.space, &mut self.rng),
+            Some(cur) => {
+                if self.rng.chance(self.restart_p) {
+                    sample::uniform(ctx.space, &mut self.rng)
+                } else {
+                    let ns = ctx.space.neighbors(&cur);
+                    *self.rng.choose(&ns)
+                }
             }
-            current = if self.rng.chance(self.restart_p) {
-                sample::uniform(space, &mut self.rng)
-            } else {
-                let ns = space.neighbors(&current);
-                *self.rng.choose(&ns)
-            };
-        }
-        Ok(())
+        };
+        self.current = Some(next);
+        vec![next]
     }
+
+    fn tell(&mut self, _results: &[(DesignPoint, Metrics)]) {}
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::design::Param;
+    use crate::baselines::DseMethod;
+    use crate::design::{DesignSpace, Param};
+    use crate::eval::BudgetedEvaluator;
     use crate::sim::RooflineSim;
     use crate::workload::GPT3_175B;
 
@@ -62,8 +67,8 @@ mod tests {
         let mut be = BudgetedEvaluator::new(&mut sim, 60);
         RandomWalker::new(5).run(&space, &mut be).unwrap();
         assert_eq!(be.spent(), 60);
-        // Consecutive samples differ in exactly one axis most of the time
-        // (restarts excepted).
+        // Consecutive samples differ in exactly one axis most of the
+        // time (restarts excepted).
         let mut single_axis = 0;
         for w in be.log.windows(2) {
             let diff = Param::ALL

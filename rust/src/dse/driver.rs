@@ -1,0 +1,391 @@
+//! The sequential session driver: ask -> budgeted evaluate -> tell,
+//! with observer events, optional checkpointing, and deterministic
+//! replay for resume.
+//!
+//! [`drive`] is the plain loop `DseMethod::run` blankets over (see
+//! [`crate::baselines`]); [`Driver`] adds the observable/checkpointed
+//! variant the CLI uses. Both preserve the exact budget semantics of
+//! [`BudgetedEvaluator::eval_batch`], so a session driven here produces
+//! the same trajectory as the pre-redesign blocking `run()` it
+//! replaced.
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+use crate::design::{DesignPoint, DesignSpace};
+use crate::eval::{BudgetedEvaluator, Metrics, HIT_LOG_FACTOR};
+use crate::pareto::{Objectives, ParetoArchive, PHV_REF};
+use crate::{bail, Result};
+
+use super::observer::{NullObserver, Observer};
+use super::state::SessionState;
+use super::{AskCtx, DseSession};
+
+/// Run `session` against `eval` until the budget is exhausted or the
+/// session converges — the sequential driver behind the blanket
+/// `DseMethod::run` impl.
+pub fn drive<S: DseSession + ?Sized>(
+    session: &mut S,
+    space: &DesignSpace,
+    eval: &mut BudgetedEvaluator,
+) -> Result<()> {
+    let mut obs = NullObserver;
+    Driver::new(space, &mut obs).run(session, eval)
+}
+
+/// Identity of a checkpointed run, validated on resume.
+#[derive(Debug, Clone)]
+pub struct CheckpointSink {
+    /// File the state is written to.
+    pub path: PathBuf,
+    /// LLM backbone profile name of the run.
+    pub model: String,
+    /// Seed the session was constructed with.
+    pub seed: u64,
+    /// Evaluator name of the run.
+    pub evaluator: String,
+    /// Workload fingerprint of the run.
+    pub workload_fp: u64,
+    /// Write every `every`-th driver round (0 is treated as 1). Each
+    /// write serializes the whole trajectory, so long cheap-evaluator
+    /// runs can raise this to amortize the O(log) cost per write;
+    /// [`Driver::run`] always flushes a final state regardless.
+    pub every: usize,
+}
+
+/// The observable sequential driver. One [`Driver::step`] performs one
+/// ask/evaluate/tell round; [`Driver::run`] loops until done.
+pub struct Driver<'a> {
+    space: &'a DesignSpace,
+    observer: &'a mut dyn Observer,
+    /// Trial index reported to the observer (0 for single runs).
+    pub trial: usize,
+    /// Reference objectives for live PHV front tracking; without them
+    /// no `on_front_update` events fire.
+    pub reference: Option<Objectives>,
+    /// When set, [`SessionState`] is written here after every round.
+    pub checkpoint: Option<CheckpointSink>,
+    archive: ParetoArchive,
+    last_phase: &'static str,
+    rounds: usize,
+}
+
+impl<'a> Driver<'a> {
+    pub fn new(
+        space: &'a DesignSpace,
+        observer: &'a mut dyn Observer,
+    ) -> Self {
+        Self {
+            space,
+            observer,
+            trial: 0,
+            reference: None,
+            checkpoint: None,
+            archive: ParetoArchive::new(PHV_REF),
+            last_phase: "",
+            rounds: 0,
+        }
+    }
+
+    fn write_checkpoint<S: DseSession + ?Sized>(
+        &self,
+        session: &S,
+        eval: &BudgetedEvaluator,
+    ) -> Result<()> {
+        let Some(sink) = &self.checkpoint else { return Ok(()) };
+        SessionState {
+            method: session.name().to_string(),
+            model: sink.model.clone(),
+            seed: sink.seed,
+            budget: eval.budget,
+            spent: eval.spent(),
+            evaluator: sink.evaluator.clone(),
+            workload_fp: sink.workload_fp,
+            log: eval.log.clone(),
+        }
+        .save(&sink.path)
+    }
+
+    fn emit_phase<S: DseSession + ?Sized>(&mut self, session: &S) {
+        let phase = session.phase();
+        if phase != self.last_phase {
+            self.last_phase = phase;
+            self.observer.on_phase(session.name(), self.trial, phase);
+        }
+    }
+
+    /// One ask/evaluate/tell round. Returns false when the session is
+    /// done (budget exhausted, converged, or nothing evaluable).
+    pub fn step<S: DseSession + ?Sized>(
+        &mut self,
+        session: &mut S,
+        eval: &mut BudgetedEvaluator,
+    ) -> Result<bool> {
+        if eval.exhausted() {
+            return Ok(false);
+        }
+        self.emit_phase(&*session);
+        let ctx = AskCtx {
+            space: self.space,
+            budget: eval.budget,
+            remaining: eval.remaining(),
+            evaluations: eval.evaluations(),
+        };
+        let proposals = session.ask(&ctx);
+        self.emit_phase(&*session);
+        if proposals.is_empty() {
+            return Ok(false);
+        }
+        let results = eval.eval_batch(&proposals)?;
+        if results.is_empty() {
+            return Ok(false);
+        }
+        notify_samples(
+            &mut *self.observer,
+            session.name(),
+            self.trial,
+            eval.evaluations() - results.len(),
+            &results,
+            self.reference.as_ref(),
+            &mut self.archive,
+        );
+        session.tell(&results);
+        self.emit_phase(&*session);
+        self.rounds += 1;
+        let cadence = self
+            .checkpoint
+            .as_ref()
+            .map(|s| s.every.max(1))
+            .unwrap_or(1);
+        if self.rounds % cadence == 0 {
+            self.write_checkpoint(&*session, eval)?;
+        }
+        Ok(true)
+    }
+
+    /// Drive to completion. Always flushes a final checkpoint when a
+    /// sink is configured, whatever its round cadence.
+    pub fn run<S: DseSession + ?Sized>(
+        &mut self,
+        session: &mut S,
+        eval: &mut BudgetedEvaluator,
+    ) -> Result<()> {
+        while self.step(session, eval)? {}
+        if self.rounds > 0 {
+            self.write_checkpoint(&*session, eval)?;
+        }
+        Ok(())
+    }
+}
+
+/// Deliver evaluated samples to an observer and fold them into the
+/// normalized PHV archive (`on_front_update` fires on front growth).
+/// `evals_before` is the trajectory length before these results
+/// landed. Shared by [`Driver::step`] and the fused race scatter so
+/// both drivers report identical progress for identical trajectories.
+pub(crate) fn notify_samples(
+    observer: &mut dyn Observer,
+    method: &str,
+    trial: usize,
+    evals_before: usize,
+    results: &[(DesignPoint, Metrics)],
+    reference: Option<&Objectives>,
+    archive: &mut ParetoArchive,
+) {
+    let mut evals = evals_before;
+    for (d, m) in results {
+        evals += 1;
+        observer.on_sample(method, trial, evals, d, m);
+        if let Some(r) = reference {
+            let o = m.objectives();
+            let joined = archive.push([
+                o[0] / r[0],
+                o[1] / r[1],
+                o[2] / r[2],
+            ]);
+            if joined {
+                observer.on_front_update(
+                    method,
+                    trial,
+                    evals,
+                    archive.hypervolume(),
+                );
+            }
+        }
+    }
+}
+
+/// Rebuild a session's internal state from a checkpointed trajectory by
+/// replaying ask/tell against the recorded results — no simulator
+/// invocations. Returns the budget spent, reconstructed under the memo
+/// accounting of the `explore` path (a design charges on its first
+/// appearance only; `prewarmed` designs were in the cache before the
+/// budgeted run started — e.g. the reference evaluation — and never
+/// charge).
+///
+/// Fails when the recorded trajectory diverges from what the session
+/// proposes — a wrong seed, budget, workload, or a corrupt checkpoint.
+pub fn replay<S: DseSession + ?Sized>(
+    session: &mut S,
+    space: &DesignSpace,
+    budget: usize,
+    log: &[(DesignPoint, Metrics)],
+    prewarmed: &[DesignPoint],
+) -> Result<usize> {
+    let mut seen: HashSet<DesignPoint> =
+        prewarmed.iter().copied().collect();
+    let mut spent = 0usize;
+    let mut i = 0usize;
+    while i < log.len() {
+        if spent >= budget
+            || i >= budget.saturating_mul(HIT_LOG_FACTOR)
+        {
+            bail!(
+                "checkpoint log has {} samples beyond the exhausted \
+                 budget ({budget})",
+                log.len() - i
+            );
+        }
+        let ctx = AskCtx {
+            space,
+            budget,
+            remaining: budget - spent,
+            evaluations: i,
+        };
+        let proposals = session.ask(&ctx);
+        if proposals.is_empty() {
+            bail!(
+                "session converged after {i} samples but the \
+                 checkpoint holds {}",
+                log.len()
+            );
+        }
+        // Budget-limited prefix through the same estimator the live
+        // path uses ([`crate::eval::budget_prefix`]), with the seen-set
+        // standing in for the memo cache.
+        let remaining = budget - spent;
+        let (take, _) =
+            crate::eval::budget_prefix(&proposals, remaining, true, |d| {
+                seen.contains(d)
+            });
+        if take == 0 {
+            bail!("checkpoint replay stalled at sample {i}");
+        }
+        let n = take.min(log.len() - i);
+        let batch = &log[i..i + n];
+        for (k, (d, _)) in batch.iter().enumerate() {
+            if proposals[k] != *d {
+                bail!(
+                    "checkpoint diverges at sample {}: recorded {d}, \
+                     session proposed {}",
+                    i + k,
+                    proposals[k]
+                );
+            }
+        }
+        for (d, _) in batch {
+            if seen.insert(*d) {
+                spent += 1;
+            }
+        }
+        session.tell(batch);
+        i += n;
+    }
+    Ok(spent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design::Param;
+    use crate::eval::Evaluator;
+    use crate::sim::RooflineSim;
+    use crate::workload::GPT3_175B;
+
+    /// Proposes a fixed walk along the cores axis, one design per ask.
+    struct CoresWalk {
+        at: usize,
+        told: usize,
+    }
+
+    impl DseSession for CoresWalk {
+        fn name(&self) -> &'static str {
+            "cores-walk"
+        }
+        fn ask(&mut self, ctx: &AskCtx) -> Vec<DesignPoint> {
+            let vals = ctx.space.values(Param::Cores);
+            let d = DesignPoint::a100()
+                .with(Param::Cores, vals[self.at % vals.len()]);
+            self.at += 1;
+            vec![d]
+        }
+        fn tell(&mut self, results: &[(DesignPoint, Metrics)]) {
+            self.told += results.len();
+        }
+    }
+
+    #[test]
+    fn drive_spends_exactly_the_budget() {
+        let space = DesignSpace::table1();
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let mut be = BudgetedEvaluator::new(&mut sim, 9);
+        let mut s = CoresWalk { at: 0, told: 0 };
+        drive(&mut s, &space, &mut be).unwrap();
+        assert_eq!(be.spent(), 9);
+        assert_eq!(s.told, 9);
+    }
+
+    #[test]
+    fn driver_emits_samples_and_front_updates() {
+        use super::super::observer::tests::CountingObserver;
+        let space = DesignSpace::table1();
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let reference =
+            sim.eval(&DesignPoint::a100()).unwrap().objectives();
+        let mut be = BudgetedEvaluator::new(&mut sim, 6);
+        let mut obs = CountingObserver::default();
+        let mut driver = Driver::new(&space, &mut obs);
+        driver.reference = Some(reference);
+        let mut s = CoresWalk { at: 0, told: 0 };
+        driver.run(&mut s, &mut be).unwrap();
+        assert_eq!(obs.samples, 6);
+        assert!(obs.front_updates >= 1);
+        assert_eq!(obs.phases, vec!["search"]);
+    }
+
+    #[test]
+    fn replay_reconstructs_spent_with_prewarmed_reference() {
+        let space = DesignSpace::table1();
+        // Record a run: 5 distinct designs.
+        let log = {
+            let mut sim = RooflineSim::new(GPT3_175B);
+            let mut be = BudgetedEvaluator::new(&mut sim, 5);
+            let mut s = CoresWalk { at: 0, told: 0 };
+            drive(&mut s, &space, &mut be).unwrap();
+            be.log
+        };
+        // Replay into a fresh session.
+        let mut s = CoresWalk { at: 0, told: 0 };
+        let spent = replay(&mut s, &space, 5, &log, &[]).unwrap();
+        assert_eq!(spent, 5);
+        assert_eq!(s.told, 5);
+        // A prewarmed design does not charge on replay.
+        let mut s = CoresWalk { at: 0, told: 0 };
+        let spent =
+            replay(&mut s, &space, 5, &log, &[log[0].0]).unwrap();
+        assert_eq!(spent, 4);
+    }
+
+    #[test]
+    fn replay_rejects_diverging_logs() {
+        let space = DesignSpace::table1();
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let mut be = BudgetedEvaluator::new(&mut sim, 4);
+        let mut s = CoresWalk { at: 0, told: 0 };
+        drive(&mut s, &space, &mut be).unwrap();
+        let mut log = be.log.clone();
+        log[2].0 = log[2].0.with(Param::Links, 24);
+        let mut fresh = CoresWalk { at: 0, told: 0 };
+        assert!(replay(&mut fresh, &space, 4, &log, &[]).is_err());
+    }
+}

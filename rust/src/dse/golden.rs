@@ -1,0 +1,912 @@
+//! Pinned pre-redesign golden trajectories.
+//!
+//! Before the ask/tell inversion every optimizer was a blocking
+//! `run(&mut BudgetedEvaluator)` loop. These are **verbatim copies** of
+//! those loops (PR 2 state), kept as frozen oracles: the equivalence
+//! tests below drive each new session through the sequential driver and
+//! assert its `(design, metrics)` trajectory is bit-identical to the
+//! golden loop under the same seed and budget. Do not "improve" this
+//! file — its whole value is that it does not change with the sessions.
+
+use crate::design::{sample, DesignPoint, DesignSpace, Param, N_PARAMS};
+use crate::eval::{BudgetedEvaluator, Metrics};
+use crate::llm::{LanguageModel, SimulatedAnalyst};
+use crate::lumina::explore::ExplorationEngine;
+use crate::lumina::memory::{FailedMove, TrajectoryMemory};
+use crate::lumina::quale::InfluenceMap;
+use crate::lumina::quane::Ahk;
+use crate::lumina::strategy::StrategyEngine;
+use crate::lumina::LuminaConfig;
+use crate::pareto::{dominates, Objectives};
+use crate::stats::rng::Pcg32;
+use crate::Result;
+
+// ------------------------------------------------------- grid search
+
+pub fn golden_grid(
+    offset: u64,
+    space: &DesignSpace,
+    eval: &mut BudgetedEvaluator,
+) -> Result<()> {
+    let total = space.size();
+    let budget = eval.remaining() as u64;
+    if budget == 0 {
+        return Ok(());
+    }
+    let stride = (total / budget).max(1);
+    let mut idx = offset % total;
+    while !eval.exhausted() {
+        let d = space
+            .decode_index(idx % total)
+            .expect("ring index reduced modulo size() decodes");
+        eval.eval(&d)?;
+        idx = idx.wrapping_add(stride);
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------- random walker
+
+pub fn golden_random_walk(
+    seed: u64,
+    space: &DesignSpace,
+    eval: &mut BudgetedEvaluator,
+) -> Result<()> {
+    let mut rng = Pcg32::with_stream(seed, 0x3a);
+    let restart_p = 0.05;
+    let mut current = sample::uniform(space, &mut rng);
+    while !eval.exhausted() {
+        if eval.eval(&current)?.is_none() {
+            break;
+        }
+        current = if rng.chance(restart_p) {
+            sample::uniform(space, &mut rng)
+        } else {
+            let ns = space.neighbors(&current);
+            *rng.choose(&ns)
+        };
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- bo
+
+fn features(space: &DesignSpace, d: &DesignPoint) -> [f64; N_PARAMS] {
+    let mut f = [0f64; N_PARAMS];
+    for p in Param::ALL {
+        let vals = space.values(p);
+        let idx = space
+            .index_of(p, d.get(p))
+            .unwrap_or_else(|| space.nearest_index(p, d.get(p)));
+        f[p.index()] = idx as f64 / (vals.len() - 1).max(1) as f64;
+    }
+    f
+}
+
+fn kernel(
+    length_scale: f64,
+    a: &[f64; N_PARAMS],
+    b: &[f64; N_PARAMS],
+) -> f64 {
+    let mut d2 = 0.0;
+    for i in 0..N_PARAMS {
+        let d = a[i] - b[i];
+        d2 += d * d;
+    }
+    (-d2 / (2.0 * length_scale * length_scale)).exp()
+}
+
+fn random_weights(rng: &mut Pcg32) -> [f64; 3] {
+    let a = rng.f64();
+    let b = rng.f64();
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    [lo, hi - lo, 1.0 - hi]
+}
+
+fn cholesky(k: &mut [f64], n: usize) -> bool {
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = k[i * n + j];
+            for p in 0..j {
+                s -= k[i * n + p] * k[j * n + p];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return false;
+                }
+                k[i * n + j] = s.sqrt();
+            } else {
+                k[i * n + j] = s / k[j * n + j];
+            }
+        }
+        for j in i + 1..n {
+            k[i * n + j] = 0.0;
+        }
+    }
+    true
+}
+
+fn cho_solve(k: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for j in 0..i {
+            s -= k[i * n + j] * y[j];
+        }
+        y[i] = s / k[i * n + i];
+    }
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for j in i + 1..n {
+            s -= k[j * n + i] * x[j];
+        }
+        x[i] = s / k[i * n + i];
+    }
+    x
+}
+
+fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+fn norm_cdf(z: f64) -> f64 {
+    let t = 1.0 / (1.0 + 0.2316419 * z.abs());
+    let poly = t
+        * (0.319381530
+            + t * (-0.356563782
+                + t * (1.781477937
+                    + t * (-1.821255978 + t * 1.330274429))));
+    let tail = norm_pdf(z) * poly;
+    if z >= 0.0 {
+        1.0 - tail
+    } else {
+        tail
+    }
+}
+
+pub fn golden_bo(
+    seed: u64,
+    space: &DesignSpace,
+    eval: &mut BudgetedEvaluator,
+) -> Result<()> {
+    let mut rng = Pcg32::with_stream(seed, 0xb0);
+    let n_init = 12usize;
+    let pool = 256usize;
+    let max_train = 160usize;
+    let length_scale = 0.35;
+    let noise = 1e-4;
+
+    let init =
+        sample::stratified(space, &mut rng, n_init.min(eval.remaining()));
+    eval.eval_batch(&init)?;
+
+    while !eval.exhausted() {
+        let all: Vec<(DesignPoint, Objectives)> = eval
+            .log
+            .iter()
+            .map(|(d, m)| (*d, m.objectives()))
+            .collect();
+        let mut mean = [0f64; 3];
+        for (_, o) in &all {
+            for i in 0..3 {
+                mean[i] += o[i];
+            }
+        }
+        for m in &mut mean {
+            *m /= all.len() as f64;
+        }
+        let w = random_weights(&mut rng);
+        let scalar = |o: &Objectives| {
+            (0..3).map(|i| w[i] * o[i] / mean[i]).sum::<f64>()
+        };
+
+        let mut idx: Vec<usize> = (0..all.len()).collect();
+        if all.len() > max_train {
+            idx.sort_by(|&a, &b| {
+                scalar(&all[a].1)
+                    .partial_cmp(&scalar(&all[b].1))
+                    .unwrap()
+            });
+            let mut keep: Vec<usize> = idx[..max_train / 2].to_vec();
+            keep.extend(all.len() - max_train / 2..all.len());
+            keep.sort();
+            keep.dedup();
+            idx = keep;
+        }
+
+        let xs: Vec<[f64; N_PARAMS]> = idx
+            .iter()
+            .map(|&i| features(space, &all[i].0))
+            .collect();
+        let ys: Vec<f64> =
+            idx.iter().map(|&i| scalar(&all[i].1)).collect();
+        let y_mean = ys.iter().sum::<f64>() / ys.len() as f64;
+        let yc: Vec<f64> = ys.iter().map(|y| y - y_mean).collect();
+
+        let n = xs.len();
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i * n + j] = kernel(length_scale, &xs[i], &xs[j])
+                    + if i == j { noise } else { 0.0 };
+            }
+        }
+        let chol = cholesky(&mut k, n);
+        let alpha = if chol {
+            cho_solve(&k, n, &yc)
+        } else {
+            let d = sample::uniform(space, &mut rng);
+            eval.eval(&d)?;
+            continue;
+        };
+
+        let best_y = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+        let incumbent = idx
+            .iter()
+            .min_by(|&&a, &&b| {
+                scalar(&all[a].1)
+                    .partial_cmp(&scalar(&all[b].1))
+                    .unwrap()
+            })
+            .map(|&i| all[i].0)
+            .unwrap_or_else(DesignPoint::a100);
+
+        let mut best_cand: Option<(DesignPoint, f64)> = None;
+        for c in 0..pool {
+            let cand = if c % 4 == 0 {
+                let ns = space.neighbors(&incumbent);
+                *rng.choose(&ns)
+            } else {
+                sample::uniform(space, &mut rng)
+            };
+            let f = features(space, &cand);
+            let kv: Vec<f64> = xs
+                .iter()
+                .map(|x| kernel(length_scale, x, &f))
+                .collect();
+            let mu = y_mean
+                + kv.iter()
+                    .zip(&alpha)
+                    .map(|(a, b)| a * b)
+                    .sum::<f64>();
+            let v = cho_solve(&k, n, &kv);
+            let var = (kernel(length_scale, &f, &f)
+                - kv.iter()
+                    .zip(&v)
+                    .map(|(a, b)| a * b)
+                    .sum::<f64>())
+            .max(1e-12);
+            let sigma = var.sqrt();
+            let z = (best_y - mu) / sigma;
+            let ei = sigma * (z * norm_cdf(z) + norm_pdf(z));
+            if ei.is_finite()
+                && best_cand.map(|(_, b)| ei > b).unwrap_or(true)
+            {
+                best_cand = Some((cand, ei));
+            }
+        }
+        let next = best_cand
+            .map(|(c, _)| c)
+            .unwrap_or_else(|| sample::uniform(space, &mut rng));
+        eval.eval(&next)?;
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- ga
+
+fn pareto_ranks(objs: &[Objectives]) -> Vec<usize> {
+    let n = objs.len();
+    let mut rank = vec![usize::MAX; n];
+    let mut assigned = 0;
+    let mut level = 0;
+    while assigned < n {
+        let mut this_level = Vec::new();
+        for i in 0..n {
+            if rank[i] != usize::MAX {
+                continue;
+            }
+            let dominated = (0..n).any(|j| {
+                j != i
+                    && rank[j] == usize::MAX
+                    && dominates(&objs[j], &objs[i])
+            });
+            if !dominated {
+                this_level.push(i);
+            }
+        }
+        for &i in &this_level {
+            rank[i] = level;
+        }
+        let newly = this_level.len();
+        if newly == 0 {
+            for r in rank.iter_mut() {
+                if *r == usize::MAX {
+                    *r = level;
+                }
+            }
+            break;
+        }
+        assigned += newly;
+        level += 1;
+    }
+    rank
+}
+
+fn crowding(objs: &[Objectives]) -> Vec<f64> {
+    let n = objs.len();
+    let mut dist = vec![0.0f64; n];
+    for k in 0..3 {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| {
+            objs[a][k].partial_cmp(&objs[b][k]).unwrap()
+        });
+        let span = (objs[idx[n - 1]][k] - objs[idx[0]][k]).max(1e-12);
+        dist[idx[0]] = f64::INFINITY;
+        dist[idx[n - 1]] = f64::INFINITY;
+        for w in 1..n - 1 {
+            dist[idx[w]] +=
+                (objs[idx[w + 1]][k] - objs[idx[w - 1]][k]) / span;
+        }
+    }
+    dist
+}
+
+fn ordered(x: f64) -> u64 {
+    let bits = x.to_bits();
+    if x >= 0.0 {
+        bits ^ (1 << 63)
+    } else {
+        !bits
+    }
+}
+
+pub fn golden_ga(
+    seed: u64,
+    space: &DesignSpace,
+    eval: &mut BudgetedEvaluator,
+) -> Result<()> {
+    let mut rng = Pcg32::with_stream(seed, 0x6a);
+    let pop_size = 24usize;
+    let mutation_p = 0.25;
+
+    let crossover =
+        |rng: &mut Pcg32, a: &DesignPoint, b: &DesignPoint| {
+            let mut child = *a;
+            for p in Param::ALL {
+                if rng.chance(0.5) {
+                    child.set(p, b.get(p));
+                }
+            }
+            child
+        };
+    let mutate = |rng: &mut Pcg32, d: &DesignPoint| {
+        let mut out = *d;
+        for p in Param::ALL {
+            if rng.chance(mutation_p) {
+                let delta = if rng.chance(0.5) { 1 } else { -1 };
+                out = space.step(&out, p, delta);
+            }
+        }
+        out
+    };
+
+    let n0 = pop_size.min(eval.remaining());
+    if n0 == 0 {
+        return Ok(());
+    }
+    let init = sample::stratified(space, &mut rng, n0);
+    let mut pop: Vec<(DesignPoint, Objectives)> = eval
+        .eval_batch(&init)?
+        .into_iter()
+        .map(|(d, m)| (d, m.objectives()))
+        .collect();
+
+    while !eval.exhausted() && pop.len() >= 2 {
+        let objs: Vec<Objectives> =
+            pop.iter().map(|(_, o)| *o).collect();
+        let ranks = pareto_ranks(&objs);
+        let crowd = crowding(&objs);
+        let tournament = |rng: &mut Pcg32| {
+            let a = rng.range_usize(0, pop.len());
+            let b = rng.range_usize(0, pop.len());
+            if (ranks[a], std::cmp::Reverse(ordered(crowd[a])))
+                < (ranks[b], std::cmp::Reverse(ordered(crowd[b])))
+            {
+                a
+            } else {
+                b
+            }
+        };
+        let pa = tournament(&mut rng);
+        let pb = tournament(&mut rng);
+        let child = {
+            let x = crossover(&mut rng, &pop[pa].0.clone(), &pop[pb].0);
+            mutate(&mut rng, &x)
+        };
+        let Some(m) = eval.eval(&child)? else { break };
+        pop.push((child, m.objectives()));
+
+        if pop.len() > pop_size {
+            let objs: Vec<Objectives> =
+                pop.iter().map(|(_, o)| *o).collect();
+            let ranks = pareto_ranks(&objs);
+            let crowd = crowding(&objs);
+            let worst = (0..pop.len())
+                .max_by(|&a, &b| {
+                    (ranks[a], std::cmp::Reverse(ordered(crowd[a])))
+                        .cmp(&(
+                            ranks[b],
+                            std::cmp::Reverse(ordered(crowd[b])),
+                        ))
+                })
+                .unwrap();
+            pop.swap_remove(worst);
+        }
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------------- aco
+
+fn aco_sample_design(
+    rng: &mut Pcg32,
+    alpha: f64,
+    space: &DesignSpace,
+    pher: &[Vec<f64>; N_PARAMS],
+) -> DesignPoint {
+    let mut values = [0u32; N_PARAMS];
+    for p in Param::ALL {
+        let tr = &pher[p.index()];
+        let weights: Vec<f64> =
+            tr.iter().map(|t| t.powf(alpha)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut pick = rng.f64() * total;
+        let mut idx = 0;
+        for (i, w) in weights.iter().enumerate() {
+            pick -= w;
+            if pick <= 0.0 {
+                idx = i;
+                break;
+            }
+        }
+        values[p.index()] = space.values(p)[idx];
+    }
+    DesignPoint::new(values)
+}
+
+pub fn golden_aco(
+    seed: u64,
+    space: &DesignSpace,
+    eval: &mut BudgetedEvaluator,
+) -> Result<()> {
+    let mut rng = Pcg32::with_stream(seed, 0xac0);
+    let alpha = 0.7;
+    let rho = 0.04;
+    let ants = 20usize;
+    let elite = 1usize;
+
+    let mut pher: [Vec<f64>; N_PARAMS] = std::array::from_fn(|i| {
+        vec![1.0; space.values(Param::from_index(i)).len()]
+    });
+    let mut mean: Objectives = [0.0; 3];
+    let mut seen = 0usize;
+
+    while !eval.exhausted() {
+        let n = ants.min(eval.remaining());
+        let designs: Vec<DesignPoint> = (0..n)
+            .map(|_| aco_sample_design(&mut rng, alpha, space, &pher))
+            .collect();
+        let results = eval.eval_batch(&designs)?;
+        if results.is_empty() {
+            break;
+        }
+        for (_, m) in &results {
+            let o = m.objectives();
+            seen += 1;
+            for i in 0..3 {
+                mean[i] += (o[i] - mean[i]) / seen as f64;
+            }
+        }
+        let mut scored: Vec<(f64, &DesignPoint)> = results
+            .iter()
+            .map(|(d, m)| {
+                let o = m.objectives();
+                let s: f64 = (0..3)
+                    .map(|i| o[i] / mean[i].max(1e-30))
+                    .sum();
+                (1.0 / s.max(1e-9), d)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+        for tr in pher.iter_mut() {
+            for t in tr.iter_mut() {
+                *t = (*t * (1.0 - rho)).max(0.05);
+            }
+        }
+        for (q, d) in scored.iter().take(elite) {
+            for p in Param::ALL {
+                if let Some(i) = space.index_of(p, d.get(p)) {
+                    pher[p.index()][i] += q;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------- lumina
+
+fn lum_score(m: &Metrics, reference: &Metrics, expansion: bool) -> f64 {
+    let nt = (m.ttft_ms / reference.ttft_ms) as f64;
+    let nd = (m.tpot_ms / reference.tpot_ms) as f64;
+    let na = (m.area_mm2 / reference.area_mm2) as f64;
+    if expansion {
+        nt + nd + na
+    } else {
+        nt + nd + 0.5 * na.max(1.0) * 4.0 - 2.0
+    }
+}
+
+fn lum_shrink_sweep(
+    cfg: &LuminaConfig,
+    space: &DesignSpace,
+    eval: &mut BudgetedEvaluator,
+    tm: &mut TrajectoryMemory,
+    ahk: &Ahk,
+    reference: &Metrics,
+) -> Result<()> {
+    let mut rng = Pcg32::with_stream(cfg.seed, 0x54);
+    let mut ee = ExplorationEngine::new(cfg.seed ^ 0x54);
+    let mut step = tm.len();
+    let mut anchor = tm
+        .best_weighted(&reference.objectives(), &[1.0, 1.0, 2.0])
+        .map(|s| (s.design, s.metrics))
+        .unwrap_or((DesignPoint::a100(), *reference));
+    let mut current = anchor;
+    while !eval.exhausted() {
+        let mut cands: Vec<Param> = Param::ALL
+            .iter()
+            .copied()
+            .filter(|&p| space.step(&current.0, p, -1) != current.0)
+            .collect();
+        cands.sort_by(|&a, &b| {
+            let crit = |p: Param| {
+                ahk.perf_influence(p, 0).abs()
+                    + ahk.perf_influence(p, 1).abs()
+            };
+            crit(a).partial_cmp(&crit(b)).unwrap()
+        });
+        let Some(&p) = cands.first() else { break };
+        let next = space.step(&current.0, p, -1);
+        let proposal = if tm.contains(&next) {
+            let q = *rng.choose(&cands);
+            space.step(&next, q, -1)
+        } else {
+            next
+        };
+        if tm.contains(&proposal) {
+            current = anchor;
+            let q = *rng.choose(&Param::ALL);
+            let nudged = space.step(&current.0, q, -1);
+            if tm.contains(&nudged) {
+                break;
+            }
+            if let Some(m) = ee.evaluate(eval, tm, nudged, step)? {
+                step += 1;
+                current = (nudged, m);
+            }
+            continue;
+        }
+        let Some(m) = ee.evaluate(eval, tm, proposal, step)? else {
+            break;
+        };
+        step += 1;
+        let in_box = m.ttft_ms < 2.0 * reference.ttft_ms
+            && m.tpot_ms < 2.0 * reference.tpot_ms;
+        if in_box {
+            current = (proposal, m);
+            if m.area_mm2 < anchor.1.area_mm2 {
+                anchor = current;
+            }
+        } else {
+            current = anchor;
+        }
+    }
+    Ok(())
+}
+
+pub fn golden_lumina(
+    cfg: LuminaConfig,
+    use_default_prompts: bool,
+    space: &DesignSpace,
+    eval: &mut BudgetedEvaluator,
+) -> Result<()> {
+    let mut model = SimulatedAnalyst::new(cfg.model, cfg.seed ^ 0x5e5e);
+    let mut ee = ExplorationEngine::new(cfg.seed ^ 0xe0e0);
+    let mut tm = TrajectoryMemory::new();
+
+    let reference_design = DesignPoint::a100();
+    let Some(reference) = eval.eval(&reference_design)? else {
+        return Ok(());
+    };
+    tm.record(reference_design, reference, 0);
+
+    let qual = InfluenceMap::from_kernel();
+    let mut ahk = if eval.budget >= cfg.full_quane_threshold {
+        let a = Ahk::acquire_full(qual, space, &reference_design, eval)?;
+        for (i, (d, m)) in eval.log.iter().skip(1).enumerate() {
+            tm.record(*d, *m, 1 + i);
+        }
+        a
+    } else {
+        Ahk::acquire_cheap(qual, space, &reference_design)
+    };
+
+    let mut current = reference_design;
+    let mut current_m = reference;
+    let expansion_at = eval.budget * 3 / 5;
+    let mut expansion = false;
+    let mut best_score = lum_score(&reference, &reference, expansion);
+    let mut stale = 0usize;
+    let mut step = tm.len();
+    let shrink_at = eval.budget * 4 / 5;
+
+    while !eval.exhausted() {
+        if eval.budget > 64 && eval.spent() >= shrink_at {
+            lum_shrink_sweep(
+                &cfg, space, eval, &mut tm, &ahk, &reference,
+            )?;
+            let mut rng = Pcg32::with_stream(cfg.seed, 0xf111);
+            let mut fill_step = tm.len();
+            while !eval.exhausted() {
+                let anchor = tm
+                    .best_weighted(
+                        &reference.objectives(),
+                        &[1.0, 1.0, 1.0 + rng.f64()],
+                    )
+                    .map(|s| s.design)
+                    .unwrap_or(reference_design);
+                let mut d = anchor;
+                for _ in 0..1 + rng.range_usize(0, 3) {
+                    let p = *rng.choose(&Param::ALL);
+                    let delta = if rng.chance(0.5) { 1 } else { -1 };
+                    d = space.step(&d, p, delta);
+                }
+                if tm.contains(&d) {
+                    d = sample::uniform(space, &mut rng);
+                }
+                if ee.evaluate(eval, &mut tm, d, fill_step)?.is_some()
+                {
+                    fill_step += 1;
+                }
+            }
+            break;
+        }
+        if !expansion
+            && eval.spent() >= expansion_at
+            && eval.budget > 64
+        {
+            expansion = true;
+            best_score = f64::INFINITY;
+        }
+        let directive = {
+            let mut se = StrategyEngine::new(
+                &mut model as &mut dyn LanguageModel,
+            );
+            if use_default_prompts {
+                se.system_prompt =
+                    crate::llm::prompts::SYSTEM_DEFAULT.to_string();
+                se.enforce_rules = false;
+            }
+            se.area_ceiling = if expansion {
+                2.0 * cfg.area_ceiling
+            } else {
+                cfg.area_ceiling
+            };
+            se.propose(
+                space, &current, &current_m, &reference, &ahk, &tm,
+                None,
+            )
+        };
+        let proposal = ee.materialize(space, &current, &directive, &tm);
+        let Some(m) = ee.evaluate(eval, &mut tm, proposal, step)?
+        else {
+            break;
+        };
+        step += 1;
+
+        let metric = directive.phase.index();
+        let obs = |new: f32, old: f32| ((new - old) / old) as f64;
+        let delta_metric = match metric {
+            0 => obs(m.ttft_ms, current_m.ttft_ms),
+            _ => obs(m.tpot_ms, current_m.tpot_ms),
+        };
+        let (boost, steps) = directive.boost;
+        ahk.refine(boost, metric, delta_metric / steps as f64);
+
+        if delta_metric > 0.01 {
+            tm.record_failure(FailedMove {
+                param: boost,
+                direction: 1,
+                metric,
+            });
+        }
+
+        let s = lum_score(&m, &reference, expansion);
+        if s < best_score - 1e-6 {
+            best_score = s;
+            current = proposal;
+            current_m = m;
+            stale = 0;
+        } else {
+            stale += 1;
+            if stale >= cfg.patience {
+                if let Some(best) = tm.best_weighted(
+                    &reference.objectives(),
+                    &[1.0, 1.0, 0.7],
+                ) {
+                    current = best.design;
+                    current_m = best.metrics;
+                }
+                let mut rng =
+                    Pcg32::new(cfg.seed ^ step as u64);
+                let p = *rng.choose(&Param::ALL);
+                let nudged = space.step(&current, p, 1);
+                if !tm.contains(&nudged) {
+                    if let Some(nm) =
+                        ee.evaluate(eval, &mut tm, nudged, step)?
+                    {
+                        step += 1;
+                        current = nudged;
+                        current_m = nm;
+                    }
+                }
+                stale = 0;
+            }
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------ tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{
+        AntColony, BayesOpt, DseMethod, Genetic, GridSearch,
+        RandomWalker,
+    };
+    use crate::lumina::Lumina;
+    use crate::sim::RooflineSim;
+    use crate::workload::GPT3_175B;
+
+    type Log = Vec<(DesignPoint, Metrics)>;
+
+    fn with_eval(
+        budget: usize,
+        f: impl FnOnce(&DesignSpace, &mut BudgetedEvaluator),
+    ) -> Log {
+        let space = DesignSpace::table1();
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let mut be = BudgetedEvaluator::new(&mut sim, budget);
+        f(&space, &mut be);
+        be.log
+    }
+
+    #[test]
+    fn grid_session_matches_golden_trajectory() {
+        let seed = 42u64.wrapping_mul(0x2545f4914f6cdd1d);
+        let new = with_eval(50, |space, be| {
+            GridSearch::with_offset(seed).run(space, be).unwrap();
+        });
+        let gold = with_eval(50, |space, be| {
+            golden_grid(seed, space, be).unwrap();
+        });
+        assert_eq!(new, gold);
+    }
+
+    #[test]
+    fn random_walker_session_matches_golden_trajectory() {
+        let new = with_eval(60, |space, be| {
+            RandomWalker::new(7).run(space, be).unwrap();
+        });
+        let gold = with_eval(60, |space, be| {
+            golden_random_walk(7, space, be).unwrap();
+        });
+        assert_eq!(new, gold);
+    }
+
+    #[test]
+    fn bayes_opt_session_matches_golden_trajectory() {
+        let new = with_eval(60, |space, be| {
+            BayesOpt::new(3).run(space, be).unwrap();
+        });
+        let gold = with_eval(60, |space, be| {
+            golden_bo(3, space, be).unwrap();
+        });
+        assert_eq!(new, gold);
+    }
+
+    #[test]
+    fn genetic_session_matches_golden_trajectory() {
+        let new = with_eval(60, |space, be| {
+            Genetic::new(11).run(space, be).unwrap();
+        });
+        let gold = with_eval(60, |space, be| {
+            golden_ga(11, space, be).unwrap();
+        });
+        assert_eq!(new, gold);
+    }
+
+    #[test]
+    fn ant_colony_session_matches_golden_trajectory() {
+        let new = with_eval(55, |space, be| {
+            AntColony::new(2).run(space, be).unwrap();
+        });
+        let gold = with_eval(55, |space, be| {
+            golden_aco(2, space, be).unwrap();
+        });
+        assert_eq!(new, gold);
+    }
+
+    #[test]
+    fn lumina_session_matches_golden_small_budget() {
+        // Budget 40: cheap-QuanE path, no expansion/shrink phases.
+        let new = with_eval(40, |space, be| {
+            Lumina::with_seed(11).run(space, be).unwrap();
+        });
+        let gold = with_eval(40, |space, be| {
+            golden_lumina(
+                LuminaConfig { seed: 11, ..Default::default() },
+                false,
+                space,
+                be,
+            )
+            .unwrap();
+        });
+        assert_eq!(new, gold);
+    }
+
+    #[test]
+    fn lumina_session_matches_golden_full_phase_machine() {
+        // Budget 150: full QuanE sweep, expansion at 90, shrink at
+        // 120, fill to exhaustion — every phase of the state machine.
+        let new = with_eval(150, |space, be| {
+            Lumina::with_seed(4).run(space, be).unwrap();
+        });
+        let gold = with_eval(150, |space, be| {
+            golden_lumina(
+                LuminaConfig { seed: 4, ..Default::default() },
+                false,
+                space,
+                be,
+            )
+            .unwrap();
+        });
+        assert_eq!(new.len(), gold.len());
+        assert_eq!(new, gold);
+    }
+
+    #[test]
+    fn lumina_ablation_matches_golden() {
+        let new = with_eval(50, |space, be| {
+            let mut lum = Lumina::with_seed(9);
+            lum.use_default_prompts = true;
+            lum.run(space, be).unwrap();
+        });
+        let gold = with_eval(50, |space, be| {
+            golden_lumina(
+                LuminaConfig { seed: 9, ..Default::default() },
+                true,
+                space,
+                be,
+            )
+            .unwrap();
+        });
+        assert_eq!(new, gold);
+    }
+}

@@ -1,0 +1,159 @@
+//! Ask/tell DSE sessions: the pull-style optimizer API.
+//!
+//! The original optimizer surface was a blocking
+//! `DseMethod::run(&mut BudgetedEvaluator)` monolith: each method owned
+//! its own evaluate loop, pulled one design at a time, and the harness
+//! could neither batch proposals across methods nor checkpoint nor
+//! observe a run in flight. This module inverts that control flow, the
+//! way agentic-DSE harnesses (gem5 Co-Pilot, AgentDSE) structure the
+//! loop: the *driver* owns the evaluate step and an optimizer is a
+//! resumable propose/observe agent.
+//!
+//! * [`DseSession`] — the agent: `ask()` proposes the next batch of
+//!   designs, `tell()` observes their metrics. Population methods (GA,
+//!   ACO) ask a whole generation/colony per step; point methods ask one
+//!   design. A session never touches an evaluator.
+//! * [`driver`] — the sequential driver: ask -> budgeted evaluate ->
+//!   tell, with [`observer::Observer`] event hooks and optional
+//!   checkpointing. `DseMethod::run` survives as a blanket impl over
+//!   `DseSession` (see [`crate::baselines`]), so every pre-redesign
+//!   `run()` call site works unchanged and produces bit-identical
+//!   trajectories.
+//! * [`state`] — serializable [`state::SessionState`]: checkpoint a
+//!   mid-run session to JSON and resume it by deterministic replay of
+//!   the recorded trajectory (the expensive simulator work is never
+//!   redone; the cheap ask/tell bookkeeping is).
+//! * [`race`] — the fused race driver: round-robins `ask()` across all
+//!   live (method x trial) cells, fuses the proposals into one
+//!   `eval_batch` against the shared parallel pipeline, and scatters
+//!   the `tell()`s — so a 6-method x 5-trial race feeds the evaluator
+//!   batches of dozens of designs instead of thousands of singletons.
+//! * [`observer`] — `on_sample` / `on_phase` / `on_front_update` hooks
+//!   for live progress (the CLI's `--verbose` PHV ticker).
+
+pub mod driver;
+pub mod observer;
+pub mod race;
+pub mod state;
+
+#[cfg(test)]
+mod golden;
+
+pub use driver::{drive, replay, Driver};
+pub use observer::{NullObserver, Observer, ProgressObserver};
+pub use race::{CellResult, FusedRace};
+pub use state::SessionState;
+
+use crate::design::{DesignPoint, DesignSpace};
+use crate::eval::Metrics;
+
+/// Read-only context the driver hands to [`DseSession::ask`].
+///
+/// Budget numbers mirror [`crate::eval::BudgetedEvaluator`]: `remaining`
+/// counts simulator invocations still allowed (cache hits ride free),
+/// `evaluations` counts trajectory entries (hits included).
+pub struct AskCtx<'a> {
+    /// The design space being explored.
+    pub space: &'a DesignSpace,
+    /// Total sample budget of this session's run.
+    pub budget: usize,
+    /// Budget units still unspent.
+    pub remaining: usize,
+    /// Evaluations observed so far (length of the trajectory log).
+    pub evaluations: usize,
+}
+
+impl AskCtx<'_> {
+    /// Budget units consumed so far.
+    pub fn spent(&self) -> usize {
+        self.budget - self.remaining
+    }
+}
+
+/// A DSE optimizer as a resumable propose/observe agent.
+///
+/// Contract:
+/// * `ask` returns the designs the session wants evaluated next — one
+///   for point methods, a whole generation for population methods, or
+///   an empty vec to declare convergence (the driver stops).
+/// * `tell` delivers `(design, metrics)` results *in proposal order*.
+///   Near budget exhaustion the driver may deliver only a prefix of the
+///   asked batch; sessions must accept that.
+/// * All design-space-dependent computation and every RNG draw happens
+///   in `ask`; `tell` only records. This is what makes a session
+///   replayable from its evaluated trajectory alone (see
+///   [`state::SessionState`]).
+///
+/// A session instance represents *one* run: drive it to exhaustion,
+/// then construct a fresh session for the next trial.
+pub trait DseSession {
+    /// Method name as reported in races and reports.
+    fn name(&self) -> &'static str;
+
+    /// Propose the next batch of designs to evaluate.
+    fn ask(&mut self, ctx: &AskCtx) -> Vec<DesignPoint>;
+
+    /// Observe evaluation results for (a prefix of) the last `ask`.
+    fn tell(&mut self, results: &[(DesignPoint, Metrics)]);
+
+    /// Current phase label for observers (e.g. LUMINA's
+    /// reference / ahk-acquire / refine / expansion / shrink machine).
+    fn phase(&self) -> &'static str {
+        "search"
+    }
+}
+
+/// Boxed sessions delegate (mirroring the `Box<E>: Evaluator` blanket
+/// in [`crate::eval`]), so `Box<dyn DseSession>` is itself a session —
+/// and, through the `DseMethod` blanket, a method.
+impl<S: DseSession + ?Sized> DseSession for Box<S> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn ask(&mut self, ctx: &AskCtx) -> Vec<DesignPoint> {
+        (**self).ask(ctx)
+    }
+
+    fn tell(&mut self, results: &[(DesignPoint, Metrics)]) {
+        (**self).tell(results)
+    }
+
+    fn phase(&self) -> &'static str {
+        (**self).phase()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design::DesignSpace;
+
+    struct Never;
+    impl DseSession for Never {
+        fn name(&self) -> &'static str {
+            "never"
+        }
+        fn ask(&mut self, _ctx: &AskCtx) -> Vec<DesignPoint> {
+            Vec::new()
+        }
+        fn tell(&mut self, _results: &[(DesignPoint, Metrics)]) {}
+    }
+
+    #[test]
+    fn ask_ctx_spent_is_budget_minus_remaining() {
+        let space = DesignSpace::table1();
+        let ctx = AskCtx {
+            space: &space,
+            budget: 20,
+            remaining: 15,
+            evaluations: 7,
+        };
+        assert_eq!(ctx.spent(), 5);
+    }
+
+    #[test]
+    fn default_phase_is_search() {
+        assert_eq!(Never.phase(), "search");
+    }
+}

@@ -1,0 +1,167 @@
+//! Observer hooks: live visibility into a running session without the
+//! optimizer or the driver knowing who is watching. The drivers emit
+//! three events — a sample landed, the session changed phase, the
+//! Pareto front grew — and implementations render them (the CLI's
+//! `--verbose` progress ticker) or ignore them ([`NullObserver`]).
+
+use crate::design::DesignPoint;
+use crate::eval::Metrics;
+
+/// Event sink for session drivers. All methods default to no-ops so
+/// implementations override only what they render.
+pub trait Observer {
+    /// The session entered a new phase (see
+    /// [`crate::dse::DseSession::phase`]).
+    fn on_phase(
+        &mut self,
+        _method: &str,
+        _trial: usize,
+        _phase: &'static str,
+    ) {
+    }
+
+    /// One evaluated sample landed in the trajectory. `evals` is the
+    /// trajectory length *including* this sample.
+    fn on_sample(
+        &mut self,
+        _method: &str,
+        _trial: usize,
+        _evals: usize,
+        _design: &DesignPoint,
+        _metrics: &Metrics,
+    ) {
+    }
+
+    /// The sample joined the Pareto front; `phv` is the updated
+    /// hypervolume of the normalized front.
+    fn on_front_update(
+        &mut self,
+        _method: &str,
+        _trial: usize,
+        _evals: usize,
+        _phv: f64,
+    ) {
+    }
+}
+
+/// Discards every event (the default driver observer).
+pub struct NullObserver;
+
+impl Observer for NullObserver {}
+
+/// Prints phase transitions and front growth to stdout — the
+/// `explore --verbose` / `race --fused --verbose` live ticker.
+pub struct ProgressObserver {
+    /// Also print every `sample_every`-th plain sample (0 = never).
+    pub sample_every: usize,
+}
+
+impl ProgressObserver {
+    pub fn new() -> Self {
+        Self { sample_every: 0 }
+    }
+}
+
+impl Default for ProgressObserver {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Observer for ProgressObserver {
+    fn on_phase(
+        &mut self,
+        method: &str,
+        trial: usize,
+        phase: &'static str,
+    ) {
+        println!("[{method}#{trial}] phase -> {phase}");
+    }
+
+    fn on_sample(
+        &mut self,
+        method: &str,
+        trial: usize,
+        evals: usize,
+        design: &DesignPoint,
+        _metrics: &Metrics,
+    ) {
+        if self.sample_every > 0 && evals % self.sample_every == 0 {
+            println!("[{method}#{trial}] {evals:>5} {design}");
+        }
+    }
+
+    fn on_front_update(
+        &mut self,
+        method: &str,
+        trial: usize,
+        evals: usize,
+        phv: f64,
+    ) {
+        println!("[{method}#{trial}] {evals:>5} PHV={phv:.4}");
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// Counts events — used by driver/race tests too.
+    #[derive(Default)]
+    pub struct CountingObserver {
+        pub phases: Vec<&'static str>,
+        pub samples: usize,
+        pub front_updates: usize,
+        pub last_phv: f64,
+    }
+
+    impl Observer for CountingObserver {
+        fn on_phase(
+            &mut self,
+            _method: &str,
+            _trial: usize,
+            phase: &'static str,
+        ) {
+            self.phases.push(phase);
+        }
+        fn on_sample(
+            &mut self,
+            _method: &str,
+            _trial: usize,
+            _evals: usize,
+            _design: &DesignPoint,
+            _metrics: &Metrics,
+        ) {
+            self.samples += 1;
+        }
+        fn on_front_update(
+            &mut self,
+            _method: &str,
+            _trial: usize,
+            _evals: usize,
+            phv: f64,
+        ) {
+            self.front_updates += 1;
+            self.last_phv = phv;
+        }
+    }
+
+    #[test]
+    fn null_observer_accepts_all_events() {
+        let mut o = NullObserver;
+        o.on_phase("m", 0, "p");
+        o.on_sample(
+            "m",
+            0,
+            1,
+            &DesignPoint::a100(),
+            &Metrics {
+                ttft_ms: 1.0,
+                tpot_ms: 1.0,
+                area_mm2: 1.0,
+                stalls: [[1.0, 0.0, 0.0]; 2],
+            },
+        );
+        o.on_front_update("m", 0, 1, 0.5);
+    }
+}

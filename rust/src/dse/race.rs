@@ -1,0 +1,272 @@
+//! The fused race driver: the payoff of the ask/tell inversion.
+//!
+//! The serial race (`figures::race::run_race`) grinds every
+//! (method x trial) cell to completion one evaluation at a time, so the
+//! batch-parallel pipeline underneath sees batches of size 1 on the hot
+//! path. [`FusedRace`] instead round-robins `ask()` across all live
+//! cells, fuses the proposals into **one** `eval_batch` against the
+//! shared evaluator, and scatters the results back through `tell()` —
+//! a 6-method x 5-trial race feeds the pipeline fused batches (every
+//! point method contributes 1, GA/ACO contribute whole generations)
+//! instead of thousands of singleton calls.
+//!
+//! Budget identity: every cell carries its own ledger with the exact
+//! accounting of an uncached [`crate::eval::BudgetedEvaluator`] (one
+//! unit per evaluation, prefix-truncated at exhaustion), and the
+//! evaluators on this path are pure functions of the design, so each
+//! cell's trajectory — and therefore its PHV / sample efficiency — is
+//! bit-identical to the serial race.
+
+use crate::design::{DesignPoint, DesignSpace};
+use crate::eval::{Evaluator, Metrics, HIT_LOG_FACTOR};
+use crate::pareto::{Objectives, ParetoArchive, PHV_REF};
+use crate::Result;
+
+use super::driver::notify_samples;
+use super::observer::Observer;
+use super::{AskCtx, DseSession};
+
+/// Completed trajectory of one (method, trial) cell.
+#[derive(Debug)]
+pub struct CellResult {
+    pub method: &'static str,
+    pub trial: usize,
+    /// Evaluated designs in order (the cell's trajectory log).
+    pub log: Vec<(DesignPoint, Metrics)>,
+    /// Budget units consumed.
+    pub spent: usize,
+}
+
+struct Cell {
+    method: &'static str,
+    trial: usize,
+    session: Box<dyn DseSession>,
+    budget: usize,
+    spent: usize,
+    log: Vec<(DesignPoint, Metrics)>,
+    archive: ParetoArchive,
+    last_phase: &'static str,
+    done: bool,
+}
+
+impl Cell {
+    fn exhausted(&self) -> bool {
+        self.spent >= self.budget
+            || self.log.len()
+                >= self.budget.saturating_mul(HIT_LOG_FACTOR)
+    }
+}
+
+/// Round-robin ask/tell driver over many session cells sharing one
+/// evaluator.
+pub struct FusedRace<'a> {
+    space: &'a DesignSpace,
+    cells: Vec<Cell>,
+}
+
+impl<'a> FusedRace<'a> {
+    pub fn new(space: &'a DesignSpace) -> Self {
+        Self { space, cells: Vec::new() }
+    }
+
+    /// Register one (method, trial) cell with its own sample budget.
+    pub fn add_cell(
+        &mut self,
+        method: &'static str,
+        trial: usize,
+        session: Box<dyn DseSession>,
+        budget: usize,
+    ) {
+        self.cells.push(Cell {
+            method,
+            trial,
+            session,
+            budget,
+            spent: 0,
+            log: Vec::new(),
+            archive: ParetoArchive::new(PHV_REF),
+            last_phase: "",
+            done: false,
+        });
+    }
+
+    /// Live cells still asking.
+    pub fn live(&self) -> usize {
+        self.cells.iter().filter(|c| !c.done).count()
+    }
+
+    /// Drive every cell to completion, fusing proposals across cells
+    /// into shared `eval_batch` calls. `reference` normalizes the
+    /// per-cell PHV the observer sees.
+    pub fn run(
+        &mut self,
+        eval: &mut dyn Evaluator,
+        reference: &Objectives,
+        observer: &mut dyn Observer,
+    ) -> Result<Vec<CellResult>> {
+        loop {
+            // ---- Gather: one ask per live cell, budget-truncated.
+            let mut batch: Vec<DesignPoint> = Vec::new();
+            let mut spans: Vec<(usize, usize)> = Vec::new();
+            for (i, cell) in self.cells.iter_mut().enumerate() {
+                if cell.done {
+                    continue;
+                }
+                if cell.exhausted() {
+                    cell.done = true;
+                    continue;
+                }
+                emit_phase(cell, observer);
+                let ctx = AskCtx {
+                    space: self.space,
+                    budget: cell.budget,
+                    remaining: cell.budget - cell.spent,
+                    evaluations: cell.log.len(),
+                };
+                let proposals = cell.session.ask(&ctx);
+                emit_phase(cell, observer);
+                // Uncached-path ledger: each evaluation charges one
+                // unit, so only `remaining` proposals fit.
+                let take =
+                    (cell.budget - cell.spent).min(proposals.len());
+                if take == 0 {
+                    cell.done = true;
+                    continue;
+                }
+                spans.push((i, take));
+                batch.extend_from_slice(&proposals[..take]);
+            }
+            if batch.is_empty() {
+                break;
+            }
+
+            // ---- Fuse: one shared evaluation of every proposal.
+            let metrics = eval.eval_batch(&batch)?;
+
+            // ---- Scatter: results back to their cells, in order.
+            let mut off = 0usize;
+            for (i, take) in spans {
+                let cell = &mut self.cells[i];
+                let results: Vec<(DesignPoint, Metrics)> = batch
+                    [off..off + take]
+                    .iter()
+                    .copied()
+                    .zip(metrics[off..off + take].iter().copied())
+                    .collect();
+                off += take;
+                cell.spent += take;
+                let evals_before = cell.log.len();
+                cell.log.extend(results.iter().copied());
+                notify_samples(
+                    observer,
+                    cell.method,
+                    cell.trial,
+                    evals_before,
+                    &results,
+                    Some(reference),
+                    &mut cell.archive,
+                );
+                cell.session.tell(&results);
+                emit_phase(cell, observer);
+            }
+        }
+        Ok(self
+            .cells
+            .drain(..)
+            .map(|c| CellResult {
+                method: c.method,
+                trial: c.trial,
+                log: c.log,
+                spent: c.spent,
+            })
+            .collect())
+    }
+}
+
+fn emit_phase(cell: &mut Cell, observer: &mut dyn Observer) {
+    let phase = cell.session.phase();
+    if phase != cell.last_phase {
+        cell.last_phase = phase;
+        observer.on_phase(cell.method, cell.trial, phase);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::NullObserver;
+    use crate::eval::Evaluator;
+    use crate::sim::RooflineSim;
+    use crate::workload::GPT3_175B;
+
+    #[test]
+    fn fused_cells_spend_their_own_budgets() {
+        let space = DesignSpace::table1();
+        let mut ev = RooflineSim::new(GPT3_175B);
+        let reference = ev
+            .eval(&DesignPoint::a100())
+            .unwrap()
+            .objectives();
+        let mut race = FusedRace::new(&space);
+        for (i, (name, session)) in
+            crate::baselines::all_sessions(3).into_iter().enumerate()
+        {
+            race.add_cell(name, 0, session, 20 + i);
+        }
+        let cells = race
+            .run(&mut ev, &reference, &mut NullObserver)
+            .unwrap();
+        assert_eq!(cells.len(), 6);
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.spent, 20 + i, "{}", c.method);
+            assert_eq!(c.log.len(), 20 + i, "{}", c.method);
+        }
+    }
+
+    #[test]
+    fn fused_batches_are_genuinely_fused() {
+        // The shared evaluator must see far fewer batch calls than
+        // total evaluations: every round fuses all live cells.
+        struct CountingBatches {
+            inner: RooflineSim,
+            calls: usize,
+            evals: usize,
+        }
+        impl Evaluator for CountingBatches {
+            fn eval_batch(
+                &mut self,
+                designs: &[DesignPoint],
+            ) -> Result<Vec<Metrics>> {
+                self.calls += 1;
+                self.evals += designs.len();
+                self.inner.eval_batch(designs)
+            }
+            fn name(&self) -> &'static str {
+                "counting"
+            }
+        }
+        let space = DesignSpace::table1();
+        let mut ev = CountingBatches {
+            inner: RooflineSim::new(GPT3_175B),
+            calls: 0,
+            evals: 0,
+        };
+        let reference = ev
+            .eval(&DesignPoint::a100())
+            .unwrap()
+            .objectives();
+        let (calls0, evals0) = (ev.calls, ev.evals);
+        let mut race = FusedRace::new(&space);
+        for (name, session) in crate::baselines::all_sessions(5) {
+            race.add_cell(name, 0, session, 40);
+        }
+        race.run(&mut ev, &reference, &mut NullObserver).unwrap();
+        let calls = ev.calls - calls0;
+        let evals = ev.evals - evals0;
+        assert_eq!(evals, 6 * 40);
+        assert!(
+            calls * 2 < evals,
+            "{calls} batch calls for {evals} evals — not fused"
+        );
+    }
+}

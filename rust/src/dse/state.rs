@@ -1,0 +1,309 @@
+//! Serializable session state: checkpoint a mid-run exploration and
+//! resume it later (`explore --checkpoint <path>` / `--resume`).
+//!
+//! A checkpoint does **not** serialize optimizer internals (RNG words,
+//! GP training sets, pheromone trails, LUMINA's trajectory memory).
+//! Because every [`crate::dse::DseSession`] performs all of its draws
+//! and decisions in `ask` and only records in `tell`, the internal
+//! state is a pure function of *(configuration, evaluated trajectory)*
+//! — so the checkpoint stores exactly that: the identity of the run
+//! (method, seed, budget, evaluator, workload fingerprint) plus the
+//! `(design, metrics)` log. [`crate::dse::replay`] reconstructs the
+//! session by re-running the cheap ask/tell bookkeeping against the
+//! recorded results; the expensive simulator evaluations are never
+//! redone. The same log warms the memo cache on resume so budget
+//! accounting continues bit-identically.
+//!
+//! Numbers: `u64` identities (seed, workload fingerprint) are encoded
+//! as hex strings — JSON numbers are f64 and would silently round
+//! beyond 2^53. Metrics are f32, exactly representable in f64, and the
+//! emitter prints f64 with a round-trippable shortest representation,
+//! so metric bits survive save/load exactly.
+
+use crate::design::{DesignPoint, N_PARAMS};
+use crate::eval::Metrics;
+use crate::util::json::{obj, Json};
+use crate::{bail, err, Result};
+
+/// Checkpoint format version (bump on layout changes).
+const VERSION: f64 = 1.0;
+
+/// A serializable snapshot of a budgeted session run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionState {
+    /// Session name (must match on resume).
+    pub method: String,
+    /// LLM backbone profile name the run used (must match on resume —
+    /// a different analyst proposes a different trajectory).
+    pub model: String,
+    /// Seed the session was constructed with.
+    pub seed: u64,
+    /// Total sample budget of the run.
+    pub budget: usize,
+    /// Budget units spent so far (simulator invocations).
+    pub spent: usize,
+    /// Evaluator name the run used (must match on resume).
+    pub evaluator: String,
+    /// Workload fingerprint the run evaluated under.
+    pub workload_fp: u64,
+    /// The evaluated trajectory, in order (cache hits included).
+    pub log: Vec<(DesignPoint, Metrics)>,
+}
+
+impl SessionState {
+    pub fn to_json(&self) -> Json {
+        let samples: Vec<Json> = self
+            .log
+            .iter()
+            .map(|(d, m)| {
+                obj(vec![
+                    ("design", design_to_json(d)),
+                    ("metrics", metrics_to_json(m)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("version", Json::Num(VERSION)),
+            ("method", Json::from(self.method.as_str())),
+            ("model", Json::from(self.model.as_str())),
+            ("seed", Json::Str(format!("{:#x}", self.seed))),
+            ("budget", Json::from(self.budget)),
+            ("spent", Json::from(self.spent)),
+            ("evaluator", Json::from(self.evaluator.as_str())),
+            (
+                "workload_fp",
+                Json::Str(format!("{:#x}", self.workload_fp)),
+            ),
+            ("samples", Json::Arr(samples)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SessionState> {
+        let version = j.get("version")?.as_f64().unwrap_or(0.0);
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let log = j
+            .get("samples")?
+            .as_arr()
+            .ok_or_else(|| err!("samples must be an array"))?
+            .iter()
+            .map(|s| {
+                Ok((
+                    design_from_json(s.get("design")?)?,
+                    metrics_from_json(s.get("metrics")?)?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SessionState {
+            method: str_field(j, "method")?,
+            model: str_field(j, "model")?,
+            seed: hex_field(j, "seed")?,
+            budget: usize_field(j, "budget")?,
+            spent: usize_field(j, "spent")?,
+            evaluator: str_field(j, "evaluator")?,
+            workload_fp: hex_field(j, "workload_fp")?,
+            log,
+        })
+    }
+
+    /// Write the checkpoint to disk (pretty JSON). The write is
+    /// staged through a sibling temp file and renamed into place, so
+    /// an interruption mid-write never truncates the only copy of a
+    /// live checkpoint.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut tmp = path.as_os_str().to_os_string();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, self.to_json().pretty())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load a checkpoint from disk.
+    pub fn load(path: &std::path::Path) -> Result<SessionState> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+fn str_field(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key)?
+        .as_str()
+        .ok_or_else(|| err!("{key} must be a string"))?
+        .to_string())
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    let n = j
+        .get(key)?
+        .as_f64()
+        .ok_or_else(|| err!("{key} must be a number"))?;
+    if n < 0.0 || n.fract() != 0.0 {
+        bail!("{key} must be a non-negative integer, got {n}");
+    }
+    Ok(n as usize)
+}
+
+fn hex_field(j: &Json, key: &str) -> Result<u64> {
+    let s = str_field(j, key)?;
+    let digits = s
+        .strip_prefix("0x")
+        .ok_or_else(|| err!("{key} must be a 0x-prefixed hex string"))?;
+    u64::from_str_radix(digits, 16)
+        .map_err(|e| err!("{key}: bad hex {s:?}: {e}"))
+}
+
+fn design_to_json(d: &DesignPoint) -> Json {
+    Json::Arr(d.values.iter().map(|&v| Json::Num(v as f64)).collect())
+}
+
+fn design_from_json(j: &Json) -> Result<DesignPoint> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| err!("design must be an array"))?;
+    if arr.len() != N_PARAMS {
+        bail!("design must have {N_PARAMS} values, got {}", arr.len());
+    }
+    let mut values = [0u32; N_PARAMS];
+    for (slot, v) in values.iter_mut().zip(arr) {
+        let n = v
+            .as_f64()
+            .ok_or_else(|| err!("design values must be numbers"))?;
+        if n < 0.0 || n.fract() != 0.0 || n > u32::MAX as f64 {
+            bail!("design value {n} is not a u32");
+        }
+        *slot = n as u32;
+    }
+    Ok(DesignPoint::new(values))
+}
+
+/// Metrics as a flat 9-number array:
+/// `[ttft, tpot, area, s[0][0..3], s[1][0..3]]`.
+fn metrics_to_json(m: &Metrics) -> Json {
+    let mut out = vec![
+        m.ttft_ms as f64,
+        m.tpot_ms as f64,
+        m.area_mm2 as f64,
+    ];
+    for phase in &m.stalls {
+        out.extend(phase.iter().map(|&s| s as f64));
+    }
+    Json::Arr(out.into_iter().map(Json::Num).collect())
+}
+
+fn metrics_from_json(j: &Json) -> Result<Metrics> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| err!("metrics must be an array"))?;
+    if arr.len() != 9 {
+        bail!("metrics must have 9 values, got {}", arr.len());
+    }
+    let v = arr
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|n| n as f32)
+                .ok_or_else(|| err!("metrics values must be numbers"))
+        })
+        .collect::<Result<Vec<f32>>>()?;
+    Ok(Metrics {
+        ttft_ms: v[0],
+        tpot_ms: v[1],
+        area_mm2: v[2],
+        stalls: [[v[3], v[4], v[5]], [v[6], v[7], v[8]]],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    /// Build a raw object in one expression (for malformed documents).
+    fn raw_obj(pairs: Vec<(&str, Json)>) -> BTreeMap<String, Json> {
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect()
+    }
+    use crate::design::Param;
+    use crate::eval::Evaluator;
+    use crate::sim::RooflineSim;
+    use crate::workload::GPT3_175B;
+
+    fn state() -> SessionState {
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let a = DesignPoint::a100();
+        let b = a.with(Param::Cores, 64);
+        SessionState {
+            method: "lumina".to_string(),
+            model: "qwen3".to_string(),
+            seed: 0xdead_beef_cafe_f00d,
+            budget: 40,
+            spent: 2,
+            evaluator: "roofline-rs".to_string(),
+            workload_fp: u64::MAX,
+            log: vec![
+                (a, sim.eval(&a).unwrap()),
+                (b, sim.eval(&b).unwrap()),
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        let st = state();
+        let text = st.to_json().pretty();
+        let again =
+            SessionState::from_json(&Json::parse(&text).unwrap())
+                .unwrap();
+        assert_eq!(st, again);
+        // f32 metric bits survive the f64 text roundtrip exactly.
+        for ((_, a), (_, b)) in st.log.iter().zip(&again.log) {
+            assert_eq!(a.ttft_ms.to_bits(), b.ttft_ms.to_bits());
+            assert_eq!(a.stalls, b.stalls);
+        }
+    }
+
+    #[test]
+    fn u64_identities_survive_beyond_f64_precision() {
+        let st = state();
+        let again = SessionState::from_json(&st.to_json()).unwrap();
+        assert_eq!(again.seed, 0xdead_beef_cafe_f00d);
+        assert_eq!(again.workload_fp, u64::MAX);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let st = state();
+        let dir = std::env::temp_dir();
+        let path = dir.join("lumina_state_test.json");
+        st.save(&path).unwrap();
+        let again = SessionState::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(st, again);
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        // Wrong version.
+        let bad = Json::Obj(raw_obj(vec![(
+            "version",
+            Json::Num(99.0),
+        )]));
+        assert!(SessionState::from_json(&bad).is_err());
+        // Truncated metrics array.
+        let mut st = state().to_json();
+        if let Json::Obj(o) = &mut st {
+            o.insert(
+                "samples".to_string(),
+                Json::Arr(vec![Json::Obj(raw_obj(vec![
+                    ("design", design_to_json(&DesignPoint::a100())),
+                    ("metrics", Json::Arr(vec![Json::Num(1.0)])),
+                ]))]),
+            );
+        }
+        assert!(SessionState::from_json(&st).is_err());
+    }
+}

@@ -71,6 +71,18 @@ impl<E: Evaluator> CachedEvaluator<E> {
     pub fn clear(&mut self) {
         self.map.clear();
     }
+
+    /// Seed known results under the inner evaluator's *current*
+    /// workload fingerprint without touching the hit/miss counters —
+    /// the checkpoint-resume path replays a recorded trajectory into
+    /// the cache so the resumed run charges budget exactly like the
+    /// uninterrupted one. Existing entries win on conflict.
+    pub fn warm(&mut self, pairs: &[(DesignPoint, Metrics)]) {
+        let fp = self.inner.workload_fingerprint();
+        for (d, m) in pairs {
+            self.map.entry((fp, *d)).or_insert(*m);
+        }
+    }
 }
 
 impl<E: Evaluator> Evaluator for CachedEvaluator<E> {
@@ -111,6 +123,10 @@ impl<E: Evaluator> Evaluator for CachedEvaluator<E> {
 
     fn workload_fingerprint(&self) -> u64 {
         self.inner.workload_fingerprint()
+    }
+
+    fn preload(&mut self, pairs: &[(DesignPoint, Metrics)]) {
+        self.warm(pairs);
     }
 }
 
@@ -176,6 +192,22 @@ mod tests {
         assert!(!c.is_cached(&a));
         c.eval_batch(&[a]).unwrap();
         assert_eq!(c.counters().misses, 2);
+    }
+
+    #[test]
+    fn warm_seeds_entries_without_counting() {
+        let mut c = CachedEvaluator::new(CountingEval { calls: 0 });
+        let a = DesignPoint::a100();
+        let truth = c.eval(&a).unwrap();
+        // Warm a fresh cache from the recorded pair: served without an
+        // inner call, counters untouched by the warm itself.
+        let mut c2 = CachedEvaluator::new(CountingEval { calls: 0 });
+        c2.warm(&[(a, truth)]);
+        assert!(c2.is_cached(&a));
+        assert_eq!(c2.counters(), CacheCounters::default());
+        assert_eq!(c2.eval(&a).unwrap(), truth);
+        assert_eq!(c2.inner().calls, 0);
+        assert_eq!(c2.counters().hits, 1);
     }
 
     /// Same inner evaluator, but reporting a settable workload

@@ -175,6 +175,44 @@ pub trait EvalOne: Send + Sync {
 /// length equals their spend.
 pub const HIT_LOG_FACTOR: usize = 16;
 
+/// Longest batch prefix whose estimated simulator misses fit
+/// `remaining` budget units, plus that miss estimate. `memoizes`
+/// selects memo-cache semantics — an uncached design repeated within
+/// the batch counts as one miss, because the cache forwards each
+/// unique design once; without a memo layer every occurrence really is
+/// a simulator invocation. `is_cached` reports designs already served
+/// without simulator work.
+///
+/// Shared by [`BudgetedEvaluator::eval_batch`] and checkpoint replay
+/// (`crate::dse::replay`) so budget accounting cannot drift between
+/// the live path and resume reconstruction.
+pub fn budget_prefix(
+    designs: &[DesignPoint],
+    remaining: usize,
+    memoizes: bool,
+    is_cached: impl Fn(&DesignPoint) -> bool,
+) -> (usize, usize) {
+    let mut take = 0usize;
+    let mut est_misses = 0usize;
+    let mut batch_fresh: std::collections::HashSet<DesignPoint> =
+        std::collections::HashSet::new();
+    for d in designs {
+        if is_cached(d) || (memoizes && batch_fresh.contains(d)) {
+            take += 1;
+            continue;
+        }
+        if est_misses == remaining {
+            break;
+        }
+        est_misses += 1;
+        if memoizes {
+            batch_fresh.insert(*d);
+        }
+        take += 1;
+    }
+    (take, est_misses)
+}
+
 /// Cache hit/miss counters reported by memoizing evaluators.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheCounters {
@@ -226,6 +264,12 @@ pub trait Evaluator {
     fn workload_fingerprint(&self) -> u64 {
         0
     }
+
+    /// Seed known `(design, metrics)` results into this evaluator's
+    /// memo store, if it has one (resume path: a checkpointed
+    /// trajectory warms the cache so budget accounting continues
+    /// bit-identically). No-op for non-caching evaluators.
+    fn preload(&mut self, _pairs: &[(DesignPoint, Metrics)]) {}
 }
 
 /// Boxed evaluators delegate, so pipeline adapters compose over
@@ -254,6 +298,10 @@ impl<E: Evaluator + ?Sized> Evaluator for Box<E> {
     fn workload_fingerprint(&self) -> u64 {
         (**self).workload_fingerprint()
     }
+
+    fn preload(&mut self, pairs: &[(DesignPoint, Metrics)]) {
+        (**self).preload(pairs)
+    }
 }
 
 /// Wrapper that enforces a sample budget and records every evaluation —
@@ -279,6 +327,20 @@ pub struct BudgetedEvaluator<'a> {
 impl<'a> BudgetedEvaluator<'a> {
     pub fn new(inner: &'a mut dyn Evaluator, budget: usize) -> Self {
         Self { inner, budget, log: Vec::new(), charged: 0 }
+    }
+
+    /// Rebuild a budgeted evaluator mid-run from a checkpointed
+    /// trajectory: `log` and `spent` continue exactly where the
+    /// interrupted run left off (see [`crate::dse::SessionState`]).
+    /// The caller is responsible for re-warming any memo cache with
+    /// the same log so hit/miss accounting matches.
+    pub fn resume(
+        inner: &'a mut dyn Evaluator,
+        budget: usize,
+        log: Vec<(DesignPoint, Metrics)>,
+        spent: usize,
+    ) -> Self {
+        Self { inner, budget, log, charged: spent }
     }
 
     /// Budget units consumed so far (cache hits excluded).
@@ -320,23 +382,15 @@ impl<'a> BudgetedEvaluator<'a> {
         if self.exhausted() || designs.is_empty() {
             return Ok(Vec::new());
         }
-        // Longest prefix whose (conservatively estimated) simulator
-        // misses fit the remaining budget. Duplicates of an uncached
-        // design within one batch are each counted as a miss here; the
-        // actual charge below uses the inner counters when available.
-        let mut take = 0usize;
-        let mut est_misses = 0usize;
-        for d in designs {
-            if self.inner.is_cached(d) {
-                take += 1;
-                continue;
-            }
-            if est_misses == remaining {
-                break;
-            }
-            est_misses += 1;
-            take += 1;
-        }
+        // Intra-batch duplicates of an uncached design ride free under
+        // a memo cache (fused cross-cell batches make them common);
+        // see [`budget_prefix`].
+        let memoizes = self.inner.cache_counters().is_some();
+        let inner = &self.inner;
+        let (take, est_misses) =
+            budget_prefix(designs, remaining, memoizes, |d| {
+                inner.is_cached(d)
+            });
         if take == 0 {
             return Ok(Vec::new());
         }
@@ -448,6 +502,55 @@ mod tests {
         let counters = be.cache_counters().unwrap();
         assert_eq!(counters.misses, 2);
         assert_eq!(counters.hits, 2);
+    }
+
+    #[test]
+    fn intra_batch_duplicates_estimated_as_one_miss() {
+        use crate::design::Param;
+        // Regression: the prefix estimator used to count a repeated
+        // uncached design as a miss per occurrence, truncating fused
+        // batches that the memo cache would have served with one
+        // simulator call.
+        let mut inner = CachedEvaluator::new(StubEval(0));
+        let b = DesignPoint::a100().with(Param::Cores, 64);
+        let mut be = BudgetedEvaluator::new(&mut inner, 1);
+        let got = be.eval_batch(&[b, b, b]).unwrap();
+        assert_eq!(got.len(), 3, "batch duplicates must ride free");
+        assert_eq!(be.spent(), 1);
+        assert_eq!(be.evaluations(), 3);
+        assert!(be.exhausted());
+        let counters = be.cache_counters().unwrap();
+        assert_eq!(counters.misses, 1);
+        assert_eq!(counters.hits, 2);
+    }
+
+    #[test]
+    fn duplicates_still_charge_without_memoization() {
+        // A non-caching evaluator really invokes the simulator per
+        // occurrence, so each duplicate is estimated as a miss.
+        let mut inner = StubEval(0);
+        let d = DesignPoint::a100();
+        let mut be = BudgetedEvaluator::new(&mut inner, 1);
+        let got = be.eval_batch(&[d, d]).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(be.spent(), 1);
+        assert!(be.exhausted());
+        assert_eq!(inner.0, 1);
+    }
+
+    #[test]
+    fn resume_continues_log_and_charge() {
+        let mut inner = StubEval(0);
+        let log = vec![(DesignPoint::a100(), fake_metrics())];
+        let mut be = BudgetedEvaluator::resume(&mut inner, 3, log, 1);
+        assert_eq!(be.spent(), 1);
+        assert_eq!(be.evaluations(), 1);
+        assert_eq!(be.remaining(), 2);
+        let ds = vec![DesignPoint::a100(); 5];
+        let got = be.eval_batch(&ds).unwrap();
+        assert_eq!(got.len(), 2);
+        assert!(be.exhausted());
+        assert_eq!(be.evaluations(), 3);
     }
 
     #[test]

@@ -7,5 +7,7 @@ pub mod race;
 pub mod scenarios;
 pub mod table4;
 
-pub use race::{run_race, EvaluatorKind, RaceConfig, RaceResult};
+pub use race::{
+    run_race, run_race_fused, EvaluatorKind, RaceConfig, RaceResult,
+};
 pub use scenarios::{scenario_fronts, ScenarioFront};

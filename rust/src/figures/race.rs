@@ -3,8 +3,9 @@
 //! multiple independent trials, and report PHV / sample efficiency /
 //! superior-design counts plus the raw trajectories.
 
-use crate::baselines::all_methods;
+use crate::baselines::{all_methods, all_sessions, DseMethod};
 use crate::design::{DesignPoint, DesignSpace};
+use crate::dse::{FusedRace, NullObserver, Observer};
 use crate::eval::{BudgetedEvaluator, Evaluator, ParallelEvaluator};
 use crate::pareto::{
     self, normalize, sample_efficiency, Objectives, ParetoArchive, PHV_REF,
@@ -162,6 +163,51 @@ pub fn run_race(cfg: &RaceConfig) -> Result<Vec<RaceResult>> {
     Ok(out)
 }
 
+/// [`run_race`] with the ask/tell cells fused: every driver round
+/// gathers `ask()` proposals from all live (method x trial) cells into
+/// **one** `eval_batch` against the shared pipeline (see
+/// [`crate::dse::FusedRace`]), then scatters the `tell()`s. Per-cell
+/// budget ledgers carry the exact accounting of the serial race, and
+/// the evaluators on this path are pure functions of the design, so
+/// per-cell trajectories — and the PHV / sample-efficiency scores — are
+/// bit-identical to [`run_race`].
+pub fn run_race_fused(cfg: &RaceConfig) -> Result<Vec<RaceResult>> {
+    run_race_fused_observed(cfg, &mut NullObserver)
+}
+
+/// [`run_race_fused`] with observer hooks (live per-cell PHV progress
+/// for `race --fused --verbose`).
+pub fn run_race_fused_observed(
+    cfg: &RaceConfig,
+    observer: &mut dyn Observer,
+) -> Result<Vec<RaceResult>> {
+    let space = DesignSpace::table1();
+    let reference = reference_objectives(cfg.evaluator, &cfg.workload)?;
+    let mut ev = cfg.evaluator.make_for(&cfg.workload);
+    let mut race = FusedRace::new(&space);
+    for trial in 0..cfg.trials {
+        let seed = cfg
+            .seed
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add(trial as u64);
+        for (name, session) in all_sessions(seed) {
+            race.add_cell(name, trial, session, cfg.samples);
+        }
+    }
+    let cells = race.run(ev.as_mut(), &reference, observer)?;
+    Ok(cells
+        .into_iter()
+        .map(|c| {
+            let traj: Vec<(DesignPoint, Objectives)> = c
+                .log
+                .iter()
+                .map(|(d, m)| (*d, m.objectives()))
+                .collect();
+            score_trajectory(c.method, c.trial, &traj, &reference)
+        })
+        .collect())
+}
+
 /// Score one trajectory into a RaceResult. PHV comes from one pass over
 /// an incremental [`ParetoArchive`] rather than a from-scratch
 /// hypervolume of the whole trajectory.
@@ -209,37 +255,59 @@ pub fn phv_curve(
         .collect()
 }
 
-/// Aggregate per-method mean PHV / efficiency (Fig. 4's summary points).
+/// Aggregate per-method summary (Fig. 4's summary points):
+/// `(method, mean PHV, mean sample efficiency, std PHV, mean superior
+/// count)`, methods in first-appearance order. One grouped pass over
+/// the results — the old shape re-filtered the full result vec once
+/// per method per metric.
 pub fn aggregate(
     results: &[RaceResult],
-) -> Vec<(&'static str, f64, f64, f64)> {
-    let mut methods: Vec<&'static str> = Vec::new();
-    for r in results {
-        if !methods.contains(&r.method) {
-            methods.push(r.method);
-        }
+) -> Vec<(&'static str, f64, f64, f64, f64)> {
+    struct Group {
+        method: &'static str,
+        phvs: Vec<f64>,
+        eff_sum: f64,
+        superior_sum: usize,
     }
-    methods
+    let mut groups: Vec<Group> = Vec::new();
+    for r in results {
+        let g = match groups
+            .iter_mut()
+            .find(|g| g.method == r.method)
+        {
+            Some(g) => g,
+            None => {
+                groups.push(Group {
+                    method: r.method,
+                    phvs: Vec::new(),
+                    eff_sum: 0.0,
+                    superior_sum: 0,
+                });
+                groups.last_mut().expect("just pushed")
+            }
+        };
+        g.phvs.push(r.phv);
+        g.eff_sum += r.sample_efficiency;
+        g.superior_sum += r.superior;
+    }
+    groups
         .into_iter()
-        .map(|m| {
-            let phvs: Vec<f64> = results
-                .iter()
-                .filter(|r| r.method == m)
-                .map(|r| r.phv)
-                .collect();
-            let effs: Vec<f64> = results
-                .iter()
-                .filter(|r| r.method == m)
-                .map(|r| r.sample_efficiency)
-                .collect();
-            let mean_phv = phvs.iter().sum::<f64>() / phvs.len() as f64;
-            let mean_eff = effs.iter().sum::<f64>() / effs.len() as f64;
-            let var_phv = phvs
+        .map(|g| {
+            let n = g.phvs.len() as f64;
+            let mean_phv = g.phvs.iter().sum::<f64>() / n;
+            let var_phv = g
+                .phvs
                 .iter()
                 .map(|p| (p - mean_phv) * (p - mean_phv))
                 .sum::<f64>()
-                / phvs.len() as f64;
-            (m, mean_phv, mean_eff, var_phv.sqrt())
+                / n;
+            (
+                g.method,
+                mean_phv,
+                g.eff_sum / n,
+                var_phv.sqrt(),
+                g.superior_sum as f64 / n,
+            )
         })
         .collect()
 }
@@ -276,7 +344,7 @@ mod tests {
         };
         let agg = aggregate(&run_race(&cfg).unwrap());
         let lumina = agg.iter().find(|(m, ..)| *m == "lumina").unwrap();
-        for (m, phv, eff, _) in &agg {
+        for (m, phv, eff, _, _) in &agg {
             if *m != "lumina" {
                 assert!(
                     lumina.1 >= *phv * 0.95,
@@ -290,6 +358,38 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn aggregate_groups_in_one_pass_with_mean_superior() {
+        let traj = vec![(DesignPoint::a100(), [1.0, 1.0, 1.0])];
+        let mk = |m: &'static str, t: usize, phv: f64, sup: usize| {
+            RaceResult {
+                method: m,
+                trial: t,
+                phv,
+                sample_efficiency: 0.5,
+                superior: sup,
+                trajectory: traj.clone(),
+            }
+        };
+        let agg = aggregate(&[
+            mk("a", 0, 1.0, 2),
+            mk("b", 0, 5.0, 0),
+            mk("a", 1, 3.0, 4),
+        ]);
+        assert_eq!(agg.len(), 2);
+        let (m, phv, eff, std, sup) = agg[0];
+        assert_eq!(m, "a");
+        assert!((phv - 2.0).abs() < 1e-12);
+        assert!((eff - 0.5).abs() < 1e-12);
+        assert!((std - 1.0).abs() < 1e-12);
+        assert!((sup - 3.0).abs() < 1e-12);
+        let (m, phv, _, std, sup) = agg[1];
+        assert_eq!(m, "b");
+        assert!((phv - 5.0).abs() < 1e-12);
+        assert!(std.abs() < 1e-12);
+        assert!(sup.abs() < 1e-12);
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! system:
 //!
 //! * **L3 (this crate)** — the paper's coordination contribution: the
-//!   LUMINA engines ([`lumina`]), the DSE baselines ([`baselines`]), the
+//!   LUMINA engines ([`lumina`]), the DSE baselines ([`baselines`]),
+//!   the ask/tell session drivers ([`dse`]), the
 //!   DSE Benchmark ([`bench_dse`]), Pareto analytics ([`pareto`]), the
 //!   detailed LLMCompass-class simulator with critical-path analysis
 //!   ([`sim::compass`]) and the PJRT runtime that executes the AOT
@@ -22,6 +23,7 @@ pub mod arch;
 pub mod baselines;
 pub mod bench_dse;
 pub mod design;
+pub mod dse;
 pub mod error;
 pub mod eval;
 pub mod figures;

@@ -1,12 +1,18 @@
-//! The LUMINA refinement loop (paper Figure 2): evaluate -> bottleneck
-//! analysis (SE) -> informed proposal (EE) -> Trajectory Memory -> AHK
-//! refinement -> repeat until the sample budget is spent.
+//! The LUMINA refinement loop (paper Figure 2) as an explicit ask/tell
+//! state machine: Reference -> AhkAcquire -> Refine -> Expansion ->
+//! Shrink. Each `ask` runs the cheap reasoning (bottleneck analysis,
+//! LLM directive, materialization) and proposes the next design(s);
+//! each `tell` folds the observed metrics into the Trajectory Memory,
+//! the AHK, and the hill-climb acceptance state. The blanket
+//! `DseMethod::run` drives the machine sequentially with trajectories
+//! bit-identical to the pre-redesign blocking loop (pinned by the
+//! golden tests in `crate::dse::golden`).
 
-use crate::baselines::DseMethod;
-use crate::design::{DesignPoint, DesignSpace, Param};
-use crate::eval::{BudgetedEvaluator, Metrics};
+use crate::design::{DesignPoint, Param};
+use crate::dse::{AskCtx, DseSession};
+use crate::eval::Metrics;
 use crate::llm::{LanguageModel, ModelProfile, SimulatedAnalyst};
-use crate::Result;
+use crate::stats::rng::Pcg32;
 
 use super::explore::ExplorationEngine;
 use super::memory::{FailedMove, TrajectoryMemory};
@@ -41,6 +47,49 @@ impl Default for LuminaConfig {
     }
 }
 
+/// The explicit phases of the LUMINA session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LuminaPhase {
+    /// Evaluate the reference design (the initial point).
+    Reference,
+    /// QuanE sensitivity sweep (sample-spending when the budget allows).
+    AhkAcquire,
+    /// Dominate the reference within its area envelope.
+    Refine,
+    /// Expand the Pareto front toward the 2x-area PHV reference point.
+    Expansion,
+    /// AHK-guided area shrink along the least perf-critical axes.
+    Shrink,
+    /// Spend leftover budget on near-front perturbations.
+    Fill,
+}
+
+/// What the last `ask` proposed — tells `tell` how to interpret the
+/// results it receives.
+enum Pending {
+    None,
+    Reference,
+    Sweep { slots: Vec<(Param, i32, usize)> },
+    Proposal { metric: usize, boost: Param, steps: i32 },
+    RestartNudge,
+    ShrinkProposal,
+    ShrinkNudge,
+    Fill,
+}
+
+/// Shrink-phase runtime (paper phase 3).
+struct ShrinkState {
+    rng: Pcg32,
+    /// Smallest in-box design seen (the restart anchor).
+    anchor: (DesignPoint, Metrics),
+    current: (DesignPoint, Metrics),
+}
+
+/// Fill runtime: leftover-budget perturbations around the front.
+struct FillState {
+    rng: Pcg32,
+}
+
 /// The LUMINA optimizer.
 pub struct Lumina {
     pub config: LuminaConfig,
@@ -49,10 +98,25 @@ pub struct Lumina {
     /// rule enforcement (the paper's corrective rules live in the SE;
     /// this is the "vanilla LLM agent" configuration).
     pub use_default_prompts: bool,
-    /// Filled after `run`: the acquired + refined AHK.
+    /// Filled during the run: the acquired + refined AHK.
     pub ahk: Option<Ahk>,
-    /// Filled after `run`: the trajectory memory.
+    /// Filled during the run: the trajectory memory.
     pub tm: TrajectoryMemory,
+    // ---- session runtime ----
+    model: Option<SimulatedAnalyst>,
+    ee: Option<ExplorationEngine>,
+    phase: LuminaPhase,
+    pending: Pending,
+    reference: Option<(DesignPoint, Metrics)>,
+    current: Option<(DesignPoint, Metrics)>,
+    expansion: bool,
+    best_score: f64,
+    stale: usize,
+    step: usize,
+    /// Axis drawn by a stagnation restart, nudged at the next ask.
+    restart_param: Option<Param>,
+    shrink: Option<ShrinkState>,
+    fill: Option<FillState>,
 }
 
 impl Lumina {
@@ -62,92 +126,24 @@ impl Lumina {
             use_default_prompts: false,
             ahk: None,
             tm: TrajectoryMemory::new(),
+            model: None,
+            ee: None,
+            phase: LuminaPhase::Reference,
+            pending: Pending::None,
+            reference: None,
+            current: None,
+            expansion: false,
+            best_score: f64::INFINITY,
+            stale: 0,
+            step: 0,
+            restart_param: None,
+            shrink: None,
+            fill: None,
         }
     }
 
     pub fn with_seed(seed: u64) -> Self {
         Self::new(LuminaConfig { seed, ..Default::default() })
-    }
-
-    /// Phase-3 sweep: from the best area-efficient sample, repeatedly
-    /// step the least perf-critical parameter down (per the refined AHK)
-    /// while both latencies stay within the PHV reference box, evaluating
-    /// each rung. Restarts from progressively perf-better anchors when a
-    /// walk leaves the box.
-    fn shrink_sweep(
-        &mut self,
-        space: &DesignSpace,
-        eval: &mut BudgetedEvaluator,
-        tm: &mut TrajectoryMemory,
-        ahk: &Ahk,
-        reference: &Metrics,
-    ) -> Result<()> {
-        let mut rng =
-            crate::stats::rng::Pcg32::with_stream(self.config.seed, 0x54);
-        let mut ee = ExplorationEngine::new(self.config.seed ^ 0x54);
-        let mut step = tm.len();
-        let mut anchor = tm
-            .best_weighted(&reference.objectives(), &[1.0, 1.0, 2.0])
-            .map(|s| (s.design, s.metrics))
-            .unwrap_or((DesignPoint::a100(), *reference));
-        let mut current = anchor;
-        while !eval.exhausted() {
-            // Least perf-critical downward step from the current point.
-            let mut cands: Vec<Param> = Param::ALL
-                .iter()
-                .copied()
-                .filter(|&p| space.step(&current.0, p, -1) != current.0)
-                .collect();
-            cands.sort_by(|&a, &b| {
-                let crit = |p: Param| {
-                    ahk.perf_influence(p, 0).abs()
-                        + ahk.perf_influence(p, 1).abs()
-                };
-                crit(a).partial_cmp(&crit(b)).unwrap()
-            });
-            let Some(&p) = cands.first() else { break };
-            let next = space.step(&current.0, p, -1);
-            let proposal = if tm.contains(&next) {
-                // Nudge to an unvisited neighbour deterministically.
-                let q = *rng.choose(&cands);
-                space.step(&next, q, -1)
-            } else {
-                next
-            };
-            if tm.contains(&proposal) {
-                // Walk exhausted around here: restart from a fresh
-                // perf-leaning anchor.
-                current = anchor;
-                let q = *rng.choose(&Param::ALL);
-                let nudged = space.step(&current.0, q, -1);
-                if tm.contains(&nudged) {
-                    break;
-                }
-                if let Some(m) =
-                    ee.evaluate(eval, tm, nudged, step)?
-                {
-                    step += 1;
-                    current = (nudged, m);
-                }
-                continue;
-            }
-            let Some(m) = ee.evaluate(eval, tm, proposal, step)? else {
-                break;
-            };
-            step += 1;
-            let in_box = m.ttft_ms < 2.0 * reference.ttft_ms
-                && m.tpot_ms < 2.0 * reference.tpot_ms;
-            if in_box {
-                current = (proposal, m);
-                if m.area_mm2 < anchor.1.area_mm2 {
-                    anchor = current;
-                }
-            } else {
-                // Left the box: back to the smallest in-box design seen.
-                current = anchor;
-            }
-        }
-        Ok(())
     }
 
     /// Weighted normalized score used for hill-climb acceptance (lower is
@@ -164,207 +160,409 @@ impl Lumina {
             nt + nd + 0.5 * na.max(1.0) * 4.0 - 2.0
         }
     }
-}
 
-impl DseMethod for Lumina {
-    fn name(&self) -> &'static str {
-        "lumina"
-    }
-
-    fn run(
-        &mut self,
-        space: &DesignSpace,
-        eval: &mut BudgetedEvaluator,
-    ) -> Result<()> {
-        let cfg = self.config.clone();
-        let mut model =
-            SimulatedAnalyst::new(cfg.model, cfg.seed ^ 0x5e5e);
-        let mut ee = ExplorationEngine::new(cfg.seed ^ 0xe0e0);
-        let mut tm = TrajectoryMemory::new();
-
-        // ---- Step 0: evaluate the reference design (the initial point).
-        let reference_design = DesignPoint::a100();
-        let Some(reference) = eval.eval(&reference_design)? else {
-            return Ok(());
-        };
-        tm.record(reference_design, reference, 0);
-
-        // ---- AHK acquisition (QualE is free; QuanE may spend samples).
-        let qual = InfluenceMap::from_kernel();
-        let mut ahk = if eval.budget >= cfg.full_quane_threshold {
-            let a = Ahk::acquire_full(
-                qual,
-                space,
-                &reference_design,
-                eval,
-            )?;
-            // The sensitivity sweep's samples belong in the TM too.
-            for (i, (d, m)) in eval.log.iter().skip(1).enumerate() {
-                tm.record(*d, *m, 1 + i);
+    /// ---- Refine/Expansion ask: phase transitions, then one directive
+    /// -> materialized proposal.
+    fn refine_ask(&mut self, ctx: &AskCtx) -> Vec<DesignPoint> {
+        // A stagnation restart drew an axis last tell: nudge the (new)
+        // current point there and evaluate it, unless already visited.
+        if let Some(p) = self.restart_param.take() {
+            let cur = self.current.expect("current set by reference").0;
+            let nudged = ctx.space.step(&cur, p, 1);
+            if !self.tm.contains(&nudged) {
+                self.pending = Pending::RestartNudge;
+                return vec![nudged];
             }
-            a
-        } else {
-            Ahk::acquire_cheap(qual, space, &reference_design)
-        };
-
-        // ---- Refinement loop. Two phases: dominate the reference
-        // within its area envelope first (the paper's superior-design
-        // hunt), then expand the Pareto front toward the PHV reference
-        // point (2x area) with the remaining budget.
-        let mut current = reference_design;
-        let mut current_m = reference;
-        let expansion_at = eval.budget * 3 / 5;
-        let mut expansion = false;
-        let mut best_score =
-            Self::score(&reference, &reference, expansion);
-        let mut stale = 0usize;
-        let mut step = tm.len();
-
+        }
         // Phase 3 (final 20% of large budgets): AHK-guided area shrink —
         // walk down the least perf-critical parameters while both
         // latencies stay inside the PHV reference box, populating the
         // low-area corner of the front that bottleneck-removal alone
         // never visits.
-        let shrink_at = eval.budget * 4 / 5;
-
-        while !eval.exhausted() {
-            if eval.budget > 64 && eval.spent() >= shrink_at {
-                self.shrink_sweep(space, eval, &mut tm, &ahk, &reference)?;
-                // The sweep can exhaust its local neighbourhood early;
-                // spend any leftover budget on unvisited near-front
-                // perturbations so every method consumes exactly its
-                // sample budget.
-                let mut rng = crate::stats::rng::Pcg32::with_stream(
-                    cfg.seed, 0xf111,
-                );
-                let mut fill_step = tm.len();
-                while !eval.exhausted() {
-                    let anchor = tm
-                        .best_weighted(
-                            &reference.objectives(),
-                            &[1.0, 1.0, 1.0 + rng.f64()],
-                        )
-                        .map(|s| s.design)
-                        .unwrap_or(reference_design);
-                    let mut d = anchor;
-                    for _ in 0..1 + rng.range_usize(0, 3) {
-                        let p = *rng.choose(&Param::ALL);
-                        let delta = if rng.chance(0.5) { 1 } else { -1 };
-                        d = space.step(&d, p, delta);
-                    }
-                    if tm.contains(&d) {
-                        d = crate::design::sample::uniform(
-                            space, &mut rng,
-                        );
-                    }
-                    if ee.evaluate(eval, &mut tm, d, fill_step)?.is_some()
-                    {
-                        fill_step += 1;
-                    }
-                }
-                break;
-            }
-            if !expansion
-                && eval.spent() >= expansion_at
-                && eval.budget > 64
-            {
-                expansion = true;
-                best_score = f64::INFINITY; // re-anchor acceptance
-            }
-            let directive = {
-                let mut se = StrategyEngine::new(
-                    &mut model as &mut dyn LanguageModel,
-                );
-                if self.use_default_prompts {
-                    se.system_prompt =
-                        crate::llm::prompts::SYSTEM_DEFAULT.to_string();
-                    se.enforce_rules = false;
-                }
-                se.area_ceiling = if expansion {
-                    2.0 * cfg.area_ceiling
-                } else {
-                    cfg.area_ceiling
-                };
-                se.propose(
-                    space, &current, &current_m, &reference, &ahk, &tm,
-                    None,
-                )
-            };
-            let proposal =
-                ee.materialize(space, &current, &directive, &tm);
-            let Some(m) = ee.evaluate(eval, &mut tm, proposal, step)?
-            else {
-                break;
-            };
-            step += 1;
-
-            // ---- Refinement: per-parameter observed sensitivities.
-            let metric = directive.phase.index();
-            let obs = |new: f32, old: f32| ((new - old) / old) as f64;
-            let delta_metric = match metric {
-                0 => obs(m.ttft_ms, current_m.ttft_ms),
-                _ => obs(m.tpot_ms, current_m.tpot_ms),
-            };
-            let (boost, steps) = directive.boost;
-            ahk.refine(boost, metric, delta_metric / steps as f64);
-
-            // ---- Reflection: a boost that hurt its own metric is a
-            // failure pattern.
-            if delta_metric > 0.01 {
-                tm.record_failure(FailedMove {
-                    param: boost,
-                    direction: 1,
-                    metric,
-                });
-            }
-
-            // ---- Hill-climb acceptance with restart on stagnation.
-            let s = Self::score(&m, &reference, expansion);
-            if s < best_score - 1e-6 {
-                best_score = s;
-                current = proposal;
-                current_m = m;
-                stale = 0;
-            } else {
-                stale += 1;
-                if stale >= cfg.patience {
-                    // Restart from the best weighted sample, nudged on a
-                    // random axis so the SE sees a different context.
-                    if let Some(best) = tm.best_weighted(
-                        &reference.objectives(),
-                        &[1.0, 1.0, 0.7],
-                    ) {
-                        current = best.design;
-                        current_m = best.metrics;
-                    }
-                    let mut rng = crate::stats::rng::Pcg32::new(
-                        cfg.seed ^ step as u64,
-                    );
-                    let p = *rng.choose(&Param::ALL);
-                    let nudged = space.step(&current, p, 1);
-                    if !tm.contains(&nudged) {
-                        if let Some(nm) =
-                            ee.evaluate(eval, &mut tm, nudged, step)?
-                        {
-                            step += 1;
-                            current = nudged;
-                            current_m = nm;
-                        }
-                    }
-                    stale = 0;
-                }
-            }
+        if ctx.budget > 64 && ctx.spent() >= ctx.budget * 4 / 5 {
+            self.enter_shrink();
+            return self.shrink_ask(ctx);
+        }
+        if !self.expansion
+            && ctx.spent() >= ctx.budget * 3 / 5
+            && ctx.budget > 64
+        {
+            self.expansion = true;
+            self.phase = LuminaPhase::Expansion;
+            self.best_score = f64::INFINITY; // re-anchor acceptance
         }
 
-        self.ahk = Some(ahk);
-        self.tm = tm;
-        Ok(())
+        let cfg = self.config.clone();
+        let (current, current_m) =
+            self.current.expect("current set by reference");
+        let reference_m =
+            self.reference.expect("reference evaluated").1;
+        let directive = {
+            let ahk = self.ahk.as_ref().expect("ahk acquired");
+            let model = self.model.as_mut().expect("model built");
+            let mut se =
+                StrategyEngine::new(model as &mut dyn LanguageModel);
+            if self.use_default_prompts {
+                se.system_prompt =
+                    crate::llm::prompts::SYSTEM_DEFAULT.to_string();
+                se.enforce_rules = false;
+            }
+            se.area_ceiling = if self.expansion {
+                2.0 * cfg.area_ceiling
+            } else {
+                cfg.area_ceiling
+            };
+            se.propose(
+                ctx.space, &current, &current_m, &reference_m, ahk,
+                &self.tm, None,
+            )
+        };
+        let proposal = self
+            .ee
+            .as_mut()
+            .expect("ee built")
+            .materialize(ctx.space, &current, &directive, &self.tm);
+        self.pending = Pending::Proposal {
+            metric: directive.phase.index(),
+            boost: directive.boost.0,
+            steps: directive.boost.1,
+        };
+        vec![proposal]
+    }
+
+    fn enter_shrink(&mut self) {
+        let reference = self.reference.expect("reference evaluated");
+        let anchor = self
+            .tm
+            .best_weighted(&reference.1.objectives(), &[1.0, 1.0, 2.0])
+            .map(|s| (s.design, s.metrics))
+            .unwrap_or((DesignPoint::a100(), reference.1));
+        self.shrink = Some(ShrinkState {
+            rng: Pcg32::with_stream(self.config.seed, 0x54),
+            anchor,
+            current: anchor,
+        });
+        self.step = self.tm.len();
+        self.phase = LuminaPhase::Shrink;
+    }
+
+    /// ---- Shrink ask: the least perf-critical downward step from the
+    /// current point (anchor restarts when a walk dead-ends).
+    fn shrink_ask(&mut self, ctx: &AskCtx) -> Vec<DesignPoint> {
+        enum Next {
+            Proposal(DesignPoint),
+            Nudge(DesignPoint),
+            Fill,
+        }
+        let next = {
+            let ahk = self.ahk.as_ref().expect("ahk acquired");
+            let tm = &self.tm;
+            let st = self.shrink.as_mut().expect("shrink entered");
+            // Least perf-critical downward step from the current point.
+            let mut cands: Vec<Param> = Param::ALL
+                .iter()
+                .copied()
+                .filter(|&p| {
+                    ctx.space.step(&st.current.0, p, -1) != st.current.0
+                })
+                .collect();
+            cands.sort_by(|&a, &b| {
+                let crit = |p: Param| {
+                    ahk.perf_influence(p, 0).abs()
+                        + ahk.perf_influence(p, 1).abs()
+                };
+                crit(a).partial_cmp(&crit(b)).unwrap()
+            });
+            match cands.first() {
+                None => Next::Fill,
+                Some(&p) => {
+                    let next = ctx.space.step(&st.current.0, p, -1);
+                    let proposal = if tm.contains(&next) {
+                        // Nudge to an unvisited neighbour
+                        // deterministically.
+                        let q = *st.rng.choose(&cands);
+                        ctx.space.step(&next, q, -1)
+                    } else {
+                        next
+                    };
+                    if tm.contains(&proposal) {
+                        // Walk exhausted around here: restart from a
+                        // fresh perf-leaning anchor.
+                        st.current = st.anchor;
+                        let q = *st.rng.choose(&Param::ALL);
+                        let nudged =
+                            ctx.space.step(&st.current.0, q, -1);
+                        if tm.contains(&nudged) {
+                            Next::Fill
+                        } else {
+                            Next::Nudge(nudged)
+                        }
+                    } else {
+                        Next::Proposal(proposal)
+                    }
+                }
+            }
+        };
+        match next {
+            Next::Fill => self.enter_fill(ctx),
+            Next::Nudge(d) => {
+                self.pending = Pending::ShrinkNudge;
+                vec![d]
+            }
+            Next::Proposal(d) => {
+                self.pending = Pending::ShrinkProposal;
+                vec![d]
+            }
+        }
+    }
+
+    /// ---- Fill: spend any leftover budget on unvisited near-front
+    /// perturbations so every method consumes exactly its sample
+    /// budget.
+    fn enter_fill(&mut self, ctx: &AskCtx) -> Vec<DesignPoint> {
+        self.fill = Some(FillState {
+            rng: Pcg32::with_stream(self.config.seed, 0xf111),
+        });
+        self.step = self.tm.len();
+        self.phase = LuminaPhase::Fill;
+        self.fill_ask(ctx)
+    }
+
+    fn fill_ask(&mut self, ctx: &AskCtx) -> Vec<DesignPoint> {
+        let (reference_design, reference_m) =
+            self.reference.expect("reference evaluated");
+        let d = {
+            let tm = &self.tm;
+            let st = self.fill.as_mut().expect("fill entered");
+            let anchor = tm
+                .best_weighted(
+                    &reference_m.objectives(),
+                    &[1.0, 1.0, 1.0 + st.rng.f64()],
+                )
+                .map(|s| s.design)
+                .unwrap_or(reference_design);
+            let mut d = anchor;
+            for _ in 0..1 + st.rng.range_usize(0, 3) {
+                let p = *st.rng.choose(&Param::ALL);
+                let delta = if st.rng.chance(0.5) { 1 } else { -1 };
+                d = ctx.space.step(&d, p, delta);
+            }
+            if tm.contains(&d) {
+                d = crate::design::sample::uniform(
+                    ctx.space,
+                    &mut st.rng,
+                );
+            }
+            d
+        };
+        self.pending = Pending::Fill;
+        vec![d]
+    }
+}
+
+impl DseSession for Lumina {
+    fn name(&self) -> &'static str {
+        "lumina"
+    }
+
+    fn phase(&self) -> &'static str {
+        match self.phase {
+            LuminaPhase::Reference => "reference",
+            LuminaPhase::AhkAcquire => "ahk-acquire",
+            LuminaPhase::Refine => "refine",
+            LuminaPhase::Expansion => "expansion",
+            LuminaPhase::Shrink | LuminaPhase::Fill => "shrink",
+        }
+    }
+
+    fn ask(&mut self, ctx: &AskCtx) -> Vec<DesignPoint> {
+        match self.phase {
+            LuminaPhase::Reference => {
+                // ---- Step 0: evaluate the reference design.
+                let cfg = &self.config;
+                self.model = Some(SimulatedAnalyst::new(
+                    cfg.model,
+                    cfg.seed ^ 0x5e5e,
+                ));
+                self.ee =
+                    Some(ExplorationEngine::new(cfg.seed ^ 0xe0e0));
+                self.pending = Pending::Reference;
+                vec![DesignPoint::a100()]
+            }
+            LuminaPhase::AhkAcquire => {
+                // ---- AHK acquisition (QualE is free; QuanE may spend
+                // samples). The cheap-prior AHK is built here either
+                // way; a sample-funded sweep refines it in `tell`.
+                let reference_design =
+                    self.reference.expect("reference evaluated").0;
+                let qual = InfluenceMap::from_kernel();
+                self.ahk = Some(Ahk::acquire_cheap(
+                    qual,
+                    ctx.space,
+                    &reference_design,
+                ));
+                if ctx.budget >= self.config.full_quane_threshold {
+                    let (designs, slots) = Ahk::sweep_designs(
+                        ctx.space,
+                        &reference_design,
+                    );
+                    self.pending = Pending::Sweep { slots };
+                    designs
+                } else {
+                    self.step = self.tm.len();
+                    self.phase = LuminaPhase::Refine;
+                    self.refine_ask(ctx)
+                }
+            }
+            LuminaPhase::Refine | LuminaPhase::Expansion => {
+                self.refine_ask(ctx)
+            }
+            LuminaPhase::Shrink => self.shrink_ask(ctx),
+            LuminaPhase::Fill => self.fill_ask(ctx),
+        }
+    }
+
+    fn tell(&mut self, results: &[(DesignPoint, Metrics)]) {
+        let pending =
+            std::mem::replace(&mut self.pending, Pending::None);
+        match pending {
+            Pending::None => {}
+            Pending::Reference => {
+                let Some(&(d, m)) = results.first() else { return };
+                self.tm.record(d, m, 0);
+                self.reference = Some((d, m));
+                self.current = Some((d, m));
+                self.best_score = Self::score(&m, &m, false);
+                self.stale = 0;
+                self.phase = LuminaPhase::AhkAcquire;
+            }
+            Pending::Sweep { slots } => {
+                self.ahk
+                    .as_mut()
+                    .expect("cheap prior built in ask")
+                    .absorb_sweep(&slots, results);
+                // The sensitivity sweep's samples belong in the TM too.
+                for (i, (d, m)) in results.iter().enumerate() {
+                    self.tm.record(*d, *m, 1 + i);
+                }
+                self.step = self.tm.len();
+                self.phase = LuminaPhase::Refine;
+            }
+            Pending::Proposal { metric, boost, steps } => {
+                let Some(&(proposal, m)) = results.first() else {
+                    return;
+                };
+                self.tm.record(proposal, m, self.step);
+                self.step += 1;
+                let (_, current_m) =
+                    self.current.expect("current set by reference");
+                let reference =
+                    self.reference.expect("reference evaluated").1;
+
+                // ---- Refinement: per-parameter observed
+                // sensitivities.
+                let obs =
+                    |new: f32, old: f32| ((new - old) / old) as f64;
+                let delta_metric = match metric {
+                    0 => obs(m.ttft_ms, current_m.ttft_ms),
+                    _ => obs(m.tpot_ms, current_m.tpot_ms),
+                };
+                self.ahk.as_mut().expect("ahk acquired").refine(
+                    boost,
+                    metric,
+                    delta_metric / steps as f64,
+                );
+
+                // ---- Reflection: a boost that hurt its own metric is
+                // a failure pattern.
+                if delta_metric > 0.01 {
+                    self.tm.record_failure(FailedMove {
+                        param: boost,
+                        direction: 1,
+                        metric,
+                    });
+                }
+
+                // ---- Hill-climb acceptance with restart on
+                // stagnation.
+                let s = Self::score(&m, &reference, self.expansion);
+                if s < self.best_score - 1e-6 {
+                    self.best_score = s;
+                    self.current = Some((proposal, m));
+                    self.stale = 0;
+                } else {
+                    self.stale += 1;
+                    if self.stale >= self.config.patience {
+                        // Restart from the best weighted sample,
+                        // nudged on a random axis (at the next ask) so
+                        // the SE sees a different context.
+                        if let Some(best) = self.tm.best_weighted(
+                            &reference.objectives(),
+                            &[1.0, 1.0, 0.7],
+                        ) {
+                            self.current =
+                                Some((best.design, best.metrics));
+                        }
+                        let mut rng = Pcg32::new(
+                            self.config.seed ^ self.step as u64,
+                        );
+                        self.restart_param =
+                            Some(*rng.choose(&Param::ALL));
+                        self.stale = 0;
+                    }
+                }
+            }
+            Pending::RestartNudge => {
+                let Some(&(d, m)) = results.first() else { return };
+                self.tm.record(d, m, self.step);
+                self.step += 1;
+                self.current = Some((d, m));
+            }
+            Pending::ShrinkProposal => {
+                let Some(&(d, m)) = results.first() else { return };
+                self.tm.record(d, m, self.step);
+                self.step += 1;
+                let reference =
+                    self.reference.expect("reference evaluated").1;
+                let st =
+                    self.shrink.as_mut().expect("shrink entered");
+                let in_box = m.ttft_ms < 2.0 * reference.ttft_ms
+                    && m.tpot_ms < 2.0 * reference.tpot_ms;
+                if in_box {
+                    st.current = (d, m);
+                    if m.area_mm2 < st.anchor.1.area_mm2 {
+                        st.anchor = st.current;
+                    }
+                } else {
+                    // Left the box: back to the smallest in-box design
+                    // seen.
+                    st.current = st.anchor;
+                }
+            }
+            Pending::ShrinkNudge => {
+                let Some(&(d, m)) = results.first() else { return };
+                self.tm.record(d, m, self.step);
+                self.step += 1;
+                self.shrink
+                    .as_mut()
+                    .expect("shrink entered")
+                    .current = (d, m);
+            }
+            Pending::Fill => {
+                let Some(&(d, m)) = results.first() else { return };
+                self.tm.record(d, m, self.step);
+                self.step += 1;
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::baselines::DseMethod;
+    use crate::design::DesignSpace;
+    use crate::eval::BudgetedEvaluator;
     use crate::pareto::{self, Objectives};
     use crate::sim::{CompassSim, RooflineSim};
     use crate::workload::GPT3_175B;
@@ -428,5 +626,50 @@ mod tests {
         let (a, _) = run_lumina(40, 11);
         let (b, _) = run_lumina(40, 11);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn session_walks_the_named_phases_in_order() {
+        use crate::dse::DseSession;
+        let space = DesignSpace::table1();
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let mut be = BudgetedEvaluator::new(&mut sim, 120);
+        let mut lum = Lumina::with_seed(5);
+        let mut seen: Vec<&'static str> =
+            vec![DseSession::phase(&lum)];
+        loop {
+            let ctx = crate::dse::AskCtx {
+                space: &space,
+                budget: be.budget,
+                remaining: be.remaining(),
+                evaluations: be.evaluations(),
+            };
+            if be.exhausted() {
+                break;
+            }
+            let proposals = lum.ask(&ctx);
+            if proposals.is_empty() {
+                break;
+            }
+            let results = be.eval_batch(&proposals).unwrap();
+            if results.is_empty() {
+                break;
+            }
+            lum.tell(&results);
+            let p = DseSession::phase(&lum);
+            if *seen.last().unwrap() != p {
+                seen.push(p);
+            }
+        }
+        assert_eq!(
+            seen,
+            vec![
+                "reference",
+                "ahk-acquire",
+                "refine",
+                "expansion",
+                "shrink"
+            ]
+        );
     }
 }

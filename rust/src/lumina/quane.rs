@@ -78,14 +78,15 @@ impl Ahk {
         Ahk { qual, influence, refined: [[0; 3]; N_PARAMS] }
     }
 
-    /// Full acquisition: ±1-step sensitivity study through the evaluator.
-    /// Consumes up to `2 * N_PARAMS + 1` samples of the budget.
-    pub fn acquire_full(
-        qual: InfluenceMap,
+    /// The ±1-step sensitivity sweep around `reference`: the designs to
+    /// evaluate (reference first) and the `(param, delta, index)` slots
+    /// mapping each perturbation to its result position. Shared by
+    /// [`Ahk::acquire_full`] and the LUMINA session's AhkAcquire phase
+    /// (which asks the same batch through the driver).
+    pub fn sweep_designs(
         space: &DesignSpace,
         reference: &DesignPoint,
-        eval: &mut BudgetedEvaluator,
-    ) -> Result<Ahk> {
+    ) -> (Vec<DesignPoint>, Vec<(Param, i32, usize)>) {
         let mut designs = vec![*reference];
         let mut slots: Vec<(Param, i32, usize)> = Vec::new();
         for p in Param::ALL {
@@ -97,20 +98,25 @@ impl Ahk {
                 }
             }
         }
-        let results = eval.eval_batch(&designs)?;
-        if results.is_empty() {
-            // Budget already exhausted: degrade to cheap mode.
-            return Ok(Self::acquire_cheap(qual, space, reference));
-        }
-        let base = results[0].1;
+        (designs, slots)
+    }
+
+    /// Fold an evaluated sensitivity sweep (as produced by
+    /// [`Ahk::sweep_designs`]) into the influence table. `results[0]`
+    /// is the reference; missing slots (budget-truncated sweeps) are
+    /// skipped.
+    pub fn absorb_sweep(
+        &mut self,
+        slots: &[(Param, i32, usize)],
+        results: &[(DesignPoint, crate::eval::Metrics)],
+    ) {
+        let Some((_, base)) = results.first() else { return };
         let base_v = [
             base.ttft_ms as f64,
             base.tpot_ms as f64,
             base.area_mm2 as f64,
         ];
-
-        let mut ahk = Self::acquire_cheap(qual, space, reference);
-        for (p, delta, idx) in slots {
+        for &(p, delta, idx) in slots {
             let Some((_, m)) = results.get(idx) else { continue };
             let v = [
                 m.ttft_ms as f64,
@@ -118,14 +124,12 @@ impl Ahk {
                 m.area_mm2 as f64,
             ];
             for metric in 0..3 {
-                //
-
                 // Sensitivity per +1 step (mirror -1 observations).
                 let rel =
                     (v[metric] - base_v[metric]) / base_v[metric];
                 let per_step = rel * delta as f64;
-                let cell = &mut ahk.influence[p.index()][metric];
-                let n = &mut ahk.refined[p.index()][metric];
+                let cell = &mut self.influence[p.index()][metric];
+                let n = &mut self.refined[p.index()][metric];
                 if *n == 0 {
                     *cell = per_step;
                 } else {
@@ -135,6 +139,24 @@ impl Ahk {
                 *n += 1;
             }
         }
+    }
+
+    /// Full acquisition: ±1-step sensitivity study through the evaluator.
+    /// Consumes up to `2 * N_PARAMS + 1` samples of the budget.
+    pub fn acquire_full(
+        qual: InfluenceMap,
+        space: &DesignSpace,
+        reference: &DesignPoint,
+        eval: &mut BudgetedEvaluator,
+    ) -> Result<Ahk> {
+        let (designs, slots) = Self::sweep_designs(space, reference);
+        let results = eval.eval_batch(&designs)?;
+        if results.is_empty() {
+            // Budget already exhausted: degrade to cheap mode.
+            return Ok(Self::acquire_cheap(qual, space, reference));
+        }
+        let mut ahk = Self::acquire_cheap(qual, space, reference);
+        ahk.absorb_sweep(&slots, &results);
         Ok(ahk)
     }
 

@@ -15,14 +15,18 @@
 //! subcommand accepts `--workload <name>` (see `lumina workloads`);
 //! `explore --suite` optimizes the weighted multi-scenario composite.
 
-use lumina::baselines::DseMethod;
 use lumina::bench_dse::run_benchmark_for;
 use lumina::design::{DesignPoint, DesignSpace, Param};
+use lumina::dse::{
+    self, driver::CheckpointSink, Driver, NullObserver, Observer,
+    ProgressObserver, SessionState,
+};
 use lumina::eval::{
     BudgetedEvaluator, CachedEvaluator, Evaluator, Phase, SuiteEvaluator,
 };
 use lumina::figures::race::{
-    aggregate, run_race, score_trajectory, EvaluatorKind, RaceConfig,
+    aggregate, run_race, run_race_fused, run_race_fused_observed,
+    score_trajectory, EvaluatorKind, RaceConfig,
 };
 use lumina::figures::table4::{pick_top2, render, report_rows};
 use lumina::llm::ModelProfile;
@@ -45,7 +49,9 @@ USAGE: lumina <command> [--options]
   explore [--budget N] [--seed S] [--model qwen3|phi4|llama3.1]
           [--evaluator roofline|roofline-rs|compass]
           [--workload NAME | --suite] [--verbose]
+          [--checkpoint PATH [--resume] [--checkpoint-every K]]
   race [--samples N] [--trials T] [--evaluator ...] [--workload NAME]
+       [--fused] [--verbose]
   benchmark [--scale F] [--seed S] [--workload NAME]
   sensitivity [--evaluator ...] [--workload NAME]
   report [<8 values>]        Table-4 style report (defaults: paper
@@ -132,9 +138,10 @@ fn cmd_eval(args: &Args) -> lumina::Result<()> {
     Ok(())
 }
 
-/// Shared `explore` driver: memoized + budgeted LUMINA run, trajectory
-/// extraction, scoring, and the one-line summary. Used by both the
-/// single-workload and suite paths.
+/// Shared `explore` driver: memoized + budgeted LUMINA session driven
+/// through the observable ask/tell [`Driver`], with optional
+/// `--checkpoint <path>` persistence and `--resume` replay. Used by
+/// both the single-workload and suite paths.
 fn run_explore(
     args: &Args,
     label: &'static str,
@@ -145,15 +152,100 @@ fn run_explore(
     let model = ModelProfile::by_name(&args.str_or("model", "qwen3"))
         .unwrap_or_else(ModelProfile::qwen3);
     let space = DesignSpace::table1();
+    let evaluator_name = ev.name().to_string();
+    let workload_fp = ev.workload_fingerprint();
+    let ckpt = args.opt("checkpoint").map(std::path::PathBuf::from);
+    if args.flag("resume") && ckpt.is_none() {
+        lumina::bail!(
+            "--resume needs --checkpoint <path> to know which state \
+             to reload"
+        );
+    }
+
+    // Load + validate the checkpoint and warm the memo cache *before*
+    // the reference evaluation below, so on resume no simulator work
+    // at all is redone (the recorded log always contains the a100
+    // reference).
+    let resume_state = if let (Some(path), true) =
+        (&ckpt, args.flag("resume"))
+    {
+        let st = SessionState::load(path)?;
+        if st.method != "lumina"
+            || st.model != model.name
+            || st.seed != seed
+            || st.budget != budget
+            || st.evaluator != evaluator_name
+            || st.workload_fp != workload_fp
+        {
+            lumina::bail!(
+                "checkpoint {} was written by a different run \
+                 (method/model/seed/budget/evaluator/workload \
+                 mismatch)",
+                path.display()
+            );
+        }
+        ev.preload(&st.log);
+        Some(st)
+    } else {
+        None
+    };
+
     let reference = ev.eval(&DesignPoint::a100())?.objectives();
-    let mut be = BudgetedEvaluator::new(ev, budget);
     let mut lum = Lumina::new(LuminaConfig {
         seed,
         model,
         ..Default::default()
     });
+
     let t0 = std::time::Instant::now();
-    lum.run(&space, &mut be)?;
+    let mut be = if let Some(st) = resume_state {
+        // Replay the session's ask/tell bookkeeping against the
+        // recorded trajectory and continue with the reconstructed
+        // budget ledger.
+        let spent = dse::replay(
+            &mut lum,
+            &space,
+            budget,
+            &st.log,
+            &[DesignPoint::a100()],
+        )?;
+        if spent != st.spent {
+            lumina::bail!(
+                "checkpoint records {} budget units spent but replay \
+                 reconstructed {spent}",
+                st.spent
+            );
+        }
+        println!(
+            "resumed from {} ({} samples, {} spent)",
+            ckpt.as_ref().expect("resume implies a path").display(),
+            st.log.len(),
+            spent
+        );
+        BudgetedEvaluator::resume(ev, budget, st.log, spent)
+    } else {
+        BudgetedEvaluator::new(ev, budget)
+    };
+
+    let mut observer: Box<dyn Observer> = if args.flag("verbose") {
+        Box::new(ProgressObserver::new())
+    } else {
+        Box::new(NullObserver)
+    };
+    let mut driver = Driver::new(&space, observer.as_mut());
+    driver.reference = Some(reference);
+    if let Some(path) = &ckpt {
+        driver.checkpoint = Some(CheckpointSink {
+            path: path.clone(),
+            model: model.name.to_string(),
+            seed,
+            evaluator: evaluator_name,
+            workload_fp,
+            every: args.usize_or("checkpoint-every", 1)?,
+        });
+    }
+    driver.run(&mut lum, &mut be)?;
+
     let traj: Trajectory =
         be.log.iter().map(|(d, m)| (*d, m.objectives())).collect();
     let r = score_trajectory(label, 0, &traj, &reference);
@@ -171,6 +263,9 @@ fn run_explore(
         r.sample_efficiency,
         r.superior
     );
+    if let Some(path) = &ckpt {
+        println!("checkpoint: {}", path.display());
+    }
     Ok((traj, reference, lum))
 }
 
@@ -273,20 +368,38 @@ fn cmd_race(args: &Args) -> lumina::Result<()> {
         evaluator: evaluator_kind(args),
         workload: workload_arg(args)?.spec,
     };
-    let results = run_race(&cfg)?;
+    let fused = args.flag("fused");
+    if args.flag("verbose") && !fused {
+        eprintln!(
+            "note: live progress (--verbose) is driven by the fused \
+             ask/tell observer; add --fused to see it"
+        );
+    }
+    let t0 = std::time::Instant::now();
+    let results = if fused {
+        if args.flag("verbose") {
+            let mut obs = ProgressObserver::new();
+            run_race_fused_observed(&cfg, &mut obs)?
+        } else {
+            run_race_fused(&cfg)?
+        }
+    } else {
+        run_race(&cfg)?
+    };
+    println!(
+        "{} race: 6 methods x {} trials x {} samples in {:.2}s",
+        if fused { "fused" } else { "serial" },
+        cfg.trials,
+        cfg.samples,
+        t0.elapsed().as_secs_f64()
+    );
     println!(
         "{:<16} {:>10} {:>10} {:>12} {:>9}",
         "method", "mean PHV", "std PHV", "sample eff", "superior"
     );
-    for (m, phv, eff, std) in aggregate(&results) {
-        let sup: usize = results
-            .iter()
-            .filter(|r| r.method == m)
-            .map(|r| r.superior)
-            .sum::<usize>()
-            / cfg.trials;
+    for (m, phv, eff, std, sup) in aggregate(&results) {
         println!(
-            "{m:<16} {phv:>10.4} {std:>10.4} {eff:>12.4} {sup:>9}"
+            "{m:<16} {phv:>10.4} {std:>10.4} {eff:>12.4} {sup:>9.1}"
         );
     }
     Ok(())

@@ -1,0 +1,200 @@
+//! Acceptance tests for the ask/tell redesign: the fused race must be
+//! bit-identical to the serial race, and a checkpointed + resumed
+//! explore run must land on the same final trajectory as an
+//! uninterrupted one.
+
+use lumina::design::{DesignPoint, DesignSpace};
+use lumina::dse::{
+    driver::CheckpointSink, replay, Driver, NullObserver, SessionState,
+};
+use lumina::eval::{BudgetedEvaluator, CachedEvaluator, Evaluator, Metrics};
+use lumina::figures::race::{
+    run_race, run_race_fused, EvaluatorKind, RaceConfig,
+};
+use lumina::lumina::{Lumina, LuminaConfig};
+
+#[test]
+fn fused_race_is_bit_identical_to_serial_race() {
+    let cfg = RaceConfig {
+        samples: 60,
+        trials: 2,
+        seed: 5,
+        evaluator: EvaluatorKind::RooflineRust,
+        ..Default::default()
+    };
+    let serial = run_race(&cfg).unwrap();
+    let fused = run_race_fused(&cfg).unwrap();
+    assert_eq!(serial.len(), fused.len());
+    for (s, f) in serial.iter().zip(&fused) {
+        assert_eq!(s.method, f.method);
+        assert_eq!(s.trial, f.trial);
+        assert_eq!(
+            s.trajectory, f.trajectory,
+            "{}#{} trajectory diverged",
+            s.method, s.trial
+        );
+        assert_eq!(
+            s.phv.to_bits(),
+            f.phv.to_bits(),
+            "{}#{} PHV diverged",
+            s.method,
+            s.trial
+        );
+        assert_eq!(
+            s.sample_efficiency.to_bits(),
+            f.sample_efficiency.to_bits(),
+            "{}#{} sample efficiency diverged",
+            s.method,
+            s.trial
+        );
+        assert_eq!(s.superior, f.superior);
+    }
+}
+
+/// Mirror of the CLI `explore` wiring: memoized evaluator, the
+/// reference evaluated outside the budget, Lumina driven by the
+/// observable driver.
+struct ExploreRig {
+    ev: CachedEvaluator<Box<dyn Evaluator>>,
+    space: DesignSpace,
+    seed: u64,
+}
+
+impl ExploreRig {
+    fn new(seed: u64) -> Self {
+        let mut ev = CachedEvaluator::new(
+            EvaluatorKind::RooflineRust.make(),
+        );
+        ev.eval(&DesignPoint::a100()).unwrap();
+        Self { ev, space: DesignSpace::table1(), seed }
+    }
+
+    fn sink(&self, path: &std::path::Path) -> CheckpointSink {
+        CheckpointSink {
+            path: path.to_path_buf(),
+            model: "qwen3".to_string(),
+            seed: self.seed,
+            evaluator: self.ev.name().to_string(),
+            workload_fp: self.ev.workload_fingerprint(),
+            every: 1,
+        }
+    }
+}
+
+#[test]
+fn checkpoint_resume_reaches_the_uninterrupted_trajectory() {
+    let budget = 120usize;
+    let seed = 2026u64;
+    let path =
+        std::env::temp_dir().join("lumina_ckpt_equivalence.json");
+
+    // ---- Run A: uninterrupted.
+    let full_log: Vec<(DesignPoint, Metrics)> = {
+        let mut rig = ExploreRig::new(seed);
+        let mut lum = Lumina::new(LuminaConfig {
+            seed,
+            ..Default::default()
+        });
+        let mut be = BudgetedEvaluator::new(&mut rig.ev, budget);
+        let mut obs = NullObserver;
+        Driver::new(&rig.space, &mut obs)
+            .run(&mut lum, &mut be)
+            .unwrap();
+        assert_eq!(be.spent(), budget);
+        be.log
+    };
+
+    // ---- Run B1: checkpoint every round, stop after 30 rounds
+    // (mid-refine, well past the QuanE sweep).
+    {
+        let mut rig = ExploreRig::new(seed);
+        let sink = rig.sink(&path);
+        let mut lum = Lumina::new(LuminaConfig {
+            seed,
+            ..Default::default()
+        });
+        let mut be = BudgetedEvaluator::new(&mut rig.ev, budget);
+        let mut obs = NullObserver;
+        let mut driver = Driver::new(&rig.space, &mut obs);
+        driver.checkpoint = Some(sink);
+        for _ in 0..30 {
+            assert!(driver.step(&mut lum, &mut be).unwrap());
+        }
+        assert!(be.spent() < budget, "interrupted run finished early");
+    }
+
+    // ---- Run B2: fresh process state — load, warm, replay, resume.
+    let resumed_log: Vec<(DesignPoint, Metrics)> = {
+        let st = SessionState::load(&path).unwrap();
+        assert_eq!(st.method, "lumina");
+        assert_eq!(st.budget, budget);
+        assert!(st.spent > 0 && st.spent < budget);
+        let mut rig = ExploreRig::new(seed);
+        rig.ev.preload(&st.log);
+        let mut lum = Lumina::new(LuminaConfig {
+            seed,
+            ..Default::default()
+        });
+        let spent = replay(
+            &mut lum,
+            &rig.space,
+            budget,
+            &st.log,
+            &[DesignPoint::a100()],
+        )
+        .unwrap();
+        assert_eq!(spent, st.spent, "replay charge reconstruction");
+        let mut be = BudgetedEvaluator::resume(
+            &mut rig.ev,
+            budget,
+            st.log,
+            spent,
+        );
+        let mut obs = NullObserver;
+        Driver::new(&rig.space, &mut obs)
+            .run(&mut lum, &mut be)
+            .unwrap();
+        assert_eq!(be.spent(), budget);
+        be.log
+    };
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(
+        full_log, resumed_log,
+        "resumed trajectory diverged from the uninterrupted run"
+    );
+}
+
+#[test]
+fn resume_rejects_mismatched_identity() {
+    let path = std::env::temp_dir().join("lumina_ckpt_mismatch.json");
+    let budget = 30usize;
+    {
+        let mut rig = ExploreRig::new(1);
+        let sink = rig.sink(&path);
+        let mut lum = Lumina::with_seed(1);
+        let mut be = BudgetedEvaluator::new(&mut rig.ev, budget);
+        let mut obs = NullObserver;
+        let mut driver = Driver::new(&rig.space, &mut obs);
+        driver.checkpoint = Some(sink);
+        for _ in 0..5 {
+            driver.step(&mut lum, &mut be).unwrap();
+        }
+    }
+    let st = SessionState::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    // Replaying under the wrong budget must fail loudly, not silently
+    // continue a different search: budget 200 crosses the full-QuanE
+    // threshold, so the session proposes a 17-design sweep where the
+    // checkpoint recorded single refine proposals.
+    let space = DesignSpace::table1();
+    let mut wrong = Lumina::with_seed(1);
+    let err = replay(
+        &mut wrong,
+        &space,
+        200,
+        &st.log,
+        &[DesignPoint::a100()],
+    );
+    assert!(err.is_err(), "wrong-budget replay must diverge");
+}
