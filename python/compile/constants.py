@@ -30,6 +30,20 @@ ALLREDUCE_LAT_S = 5.0e-6        # per-collective base latency
 OP_OVERHEAD_S = 2.0e-6          # per-operator launch/dispatch overhead
 FP16_BYTES = 2.0
 
+# ---------------------------------------------------------------- energy
+# Per-operation dynamic energy (J per FLOP / per byte moved) and a
+# leakage density proportional to die area — mirrored in
+# rust/src/arch/{constants,power}.rs. Calibrated to land the A100
+# reference at a plausible inference power envelope.
+E_J_PER_FLOP_SYSTOLIC = 0.45e-12
+E_J_PER_FLOP_VECTOR = 1.1e-12
+E_J_PER_BYTE_SRAM = 0.18e-12
+SRAM_BYTES_PER_FLOP = 2.0       # fp16 operand bytes staged per FLOP
+E_J_PER_BYTE_L2 = 1.5e-12
+E_J_PER_BYTE_HBM = 31.0e-12
+E_J_PER_BYTE_LINK = 60.0e-12
+LEAKAGE_W_PER_MM2 = 0.05
+
 # ------------------------------------------------------------------ area
 # Calibrated so the A100 reference config lands at ~826 mm^2 (see the
 # calibration tests on both sides).
@@ -72,3 +86,9 @@ KIND_MATMUL = 0.0
 KIND_VECTOR = 1.0
 KIND_COMM = 2.0
 KIND_PAD = -1.0
+
+# Per-phase report columns of the second kernel output: three stall
+# buckets (ms) plus the phase energy (mJ). Pre-PPA artifacts emitted
+# only the 3 stall columns; the Rust runtime accepts both strides.
+N_STALL_COLS = 3
+N_PHASE_COLS = 4

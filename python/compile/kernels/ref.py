@@ -15,8 +15,9 @@ table   : f32[2, 16, 8] padded operator table (see constants.COL_*)
 Outputs
 -------
 metrics : f32[B, 3]   (TTFT ms, TPOT ms, area mm^2)
-stalls  : f32[B, 2, 3] per-phase (prefill, decode) time attributed to
-                      (compute, memory, network), in ms
+report  : f32[B, 2, 4] per-phase (prefill, decode): time attributed to
+                      (compute, memory, network) in ms, plus the phase
+                      energy (dynamic + leakage) in mJ
 """
 
 import jax.numpy as jnp
@@ -121,12 +122,14 @@ def evaluate(designs, table):
     v_peak = vector_peak(designs)
     m_bw = mem_bandwidth(designs)
     n_bw = net_bandwidth(designs)
+    area = area_mm2(designs)
 
     phase_time = []
     stalls = []
     for p in range(C.N_PHASES):
         total = jnp.zeros((B,), jnp.float32)
         bucket = [jnp.zeros((B,), jnp.float32) for _ in range(3)]
+        energy = jnp.zeros((B,), jnp.float32)
         for o in range(C.MAX_OPS):
             row = table[p, o]
             kind = row[C.COL_KIND]
@@ -166,12 +169,27 @@ def evaluate(designs, table):
             bucket[0] = bucket[0] + jnp.where(comp_win, t_op, 0.0)
             bucket[1] = bucket[1] + jnp.where(mem_win, t_op, 0.0)
             bucket[2] = bucket[2] + jnp.where(net_win, t_op, 0.0)
+
+            # Dynamic energy (J), mirroring the kernel's pricing.
+            e_tensor = flops * (C.E_J_PER_FLOP_SYSTOLIC
+                                + C.SRAM_BYTES_PER_FLOP
+                                * C.E_J_PER_BYTE_SRAM)
+            e_vec = flops * C.E_J_PER_FLOP_VECTOR
+            e_mem = bytes_ * (C.E_J_PER_BYTE_HBM + C.E_J_PER_BYTE_L2)
+            e_net = comm * C.E_J_PER_BYTE_LINK
+            e_op = jnp.where(is_mm, e_tensor,
+                             jnp.where(is_vec, e_vec, e_net)) + e_mem
+            e_op = jnp.where(is_mm | is_vec | is_comm, e_op, 0.0)
+            energy = energy + e_op
+        energy = energy + C.LEAKAGE_W_PER_MM2 * area * total
         phase_time.append(total)
-        stalls.append(jnp.stack(bucket, axis=-1))
+        stalls.append(jnp.stack(bucket + [energy], axis=-1))
 
     metrics = jnp.stack(
-        [phase_time[0] * 1e3, phase_time[1] * 1e3, area_mm2(designs)],
+        [phase_time[0] * 1e3, phase_time[1] * 1e3, area],
         axis=-1,
     )
-    stalls = jnp.stack(stalls, axis=1) * 1e3  # [B, 2, 3] in ms
+    # [B, 2, 4]: stall ms in cols 0..3, phase energy mJ in col 3 (one
+    # 1e3 scale converts both s -> ms and J -> mJ).
+    stalls = jnp.stack(stalls, axis=1) * 1e3
     return metrics, stalls

@@ -36,7 +36,9 @@ def _kernel(d_ref, t_ref, m_ref, s_ref):
     d_ref: f32[TILE, 8]  designs
     t_ref: f32[2, 16, 8] operator table (broadcast to every grid step)
     m_ref: f32[TILE, 3]  out metrics (ttft ms, tpot ms, area mm^2)
-    s_ref: f32[TILE, 2, 3] out stall buckets (ms)
+    s_ref: f32[TILE, 2, 4] out per-phase report: stall buckets (ms) in
+           cols 0..3 plus the phase energy (mJ, dynamic + leakage) in
+           col 3
     """
     d = d_ref[...]
     links = d[:, C.IDX_LINKS]
@@ -76,6 +78,7 @@ def _kernel(d_ref, t_ref, m_ref, s_ref):
     for p in range(C.N_PHASES):
         total = zeros
         b_comp, b_mem, b_net = zeros, zeros, zeros
+        b_energy = zeros
         for o in range(C.MAX_OPS):
             kind = t_ref[p, o, C.COL_KIND]
             M = jnp.maximum(t_ref[p, o, C.COL_M], 1.0)
@@ -123,11 +126,31 @@ def _kernel(d_ref, t_ref, m_ref, s_ref):
             b_comp = b_comp + jnp.where(comp_win, t_op, 0.0)
             b_mem = b_mem + jnp.where(mem_win, t_op, 0.0)
             b_net = b_net + jnp.where(net_win, t_op, 0.0)
+
+            # Dynamic energy of the op (J): FLOPs priced per execution
+            # unit (systolic MACs include SRAM operand staging), HBM
+            # traffic crosses L2 once, comm payload crosses the links.
+            e_tensor = flops * (C.E_J_PER_FLOP_SYSTOLIC
+                                + C.SRAM_BYTES_PER_FLOP
+                                * C.E_J_PER_BYTE_SRAM)
+            e_vec = flops * C.E_J_PER_FLOP_VECTOR
+            e_mem = bytes_ * (C.E_J_PER_BYTE_HBM + C.E_J_PER_BYTE_L2)
+            e_net = comm * C.E_J_PER_BYTE_LINK
+            e_op = jnp.where(is_mm, e_tensor,
+                             jnp.where(is_vec, e_vec, e_net)) + e_mem
+            e_op = jnp.where(is_mm | is_vec | is_comm, e_op, 0.0)
+            b_energy = b_energy + e_op
+        # Static leakage: area-proportional draw over the phase wall
+        # time.
+        b_energy = b_energy + C.LEAKAGE_W_PER_MM2 * area * total
         phase_totals.append(total)
-        buckets.append(jnp.stack([b_comp, b_mem, b_net], axis=-1))
+        buckets.append(
+            jnp.stack([b_comp, b_mem, b_net, b_energy], axis=-1))
 
     m_ref[...] = jnp.stack(
         [phase_totals[0] * 1e3, phase_totals[1] * 1e3, area], axis=-1)
+    # One 1e3 scale serves both units: stall seconds -> ms, energy
+    # joules -> mJ.
     s_ref[...] = jnp.stack(buckets, axis=1) * 1e3
 
 
@@ -137,7 +160,8 @@ def evaluate(designs, table, tile_b=DEFAULT_TILE_B):
 
     designs: f32[B, 8]  (B must be a multiple of tile_b, or < tile_b)
     table:   f32[2, 16, 8]
-    returns (metrics f32[B, 3], stalls f32[B, 2, 3])
+    returns (metrics f32[B, 3], phase report f32[B, 2, 4] — stall
+    buckets in ms plus the phase energy in mJ)
 
     tile_b=None selects the grid-less single-block lowering: the whole
     batch is one VMEM block and no grid loop is emitted. This is what
@@ -153,7 +177,7 @@ def evaluate(designs, table, tile_b=DEFAULT_TILE_B):
     table = table.astype(jnp.float32)
     out_shape = [
         jax.ShapeDtypeStruct((B, 3), jnp.float32),
-        jax.ShapeDtypeStruct((B, C.N_PHASES, 3), jnp.float32),
+        jax.ShapeDtypeStruct((B, C.N_PHASES, C.N_PHASE_COLS), jnp.float32),
     ]
     if tile_b is None or tile_b >= B:
         # Single block, no grid: safe for the PJRT-0.5.1 runtime.
@@ -175,7 +199,7 @@ def evaluate(designs, table, tile_b=DEFAULT_TILE_B):
         ],
         out_specs=[
             pl.BlockSpec((tile, 3), lambda i: (i, 0)),
-            pl.BlockSpec((tile, C.N_PHASES, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, C.N_PHASES, C.N_PHASE_COLS), lambda i: (i, 0, 0)),
         ],
         out_shape=out_shape,
         interpret=True,  # CPU PJRT cannot run Mosaic custom-calls

@@ -28,7 +28,7 @@ def test_hlo_text_structure(hlo_b1):
     assert "f32[1,8]" in hlo_b1
     assert "f32[2,16,8]" in hlo_b1
     assert "f32[1,3]" in hlo_b1
-    assert "f32[1,2,3]" in hlo_b1
+    assert "f32[1,2,4]" in hlo_b1
 
 
 def test_export_fn_matches_eval_fn():

@@ -151,8 +151,26 @@ class TestModelProperties:
         ])
         m, s = ref.evaluate(designs, TBL_175B)
         m, s = np.asarray(m), np.asarray(s)
-        np.testing.assert_allclose(s[:, 0, :].sum(-1), m[:, 0], rtol=1e-5)
-        np.testing.assert_allclose(s[:, 1, :].sum(-1), m[:, 1], rtol=1e-5)
+        np.testing.assert_allclose(
+            s[:, 0, :C.N_STALL_COLS].sum(-1), m[:, 0], rtol=1e-5)
+        np.testing.assert_allclose(
+            s[:, 1, :C.N_STALL_COLS].sum(-1), m[:, 1], rtol=1e-5)
+
+    def test_phase_energy_column_is_positive_and_scales(self):
+        """Col 3 of the phase report is the phase energy (mJ): positive
+        for live phases, and prefill (compute-heavy) must dwarf one
+        decode step."""
+        _, s = ref.evaluate(A100[None, :], TBL_175B)
+        s = np.asarray(s)
+        e_pf, e_dc = s[0, 0, 3], s[0, 1, 3]
+        assert e_pf > 0.0 and e_dc > 0.0
+        assert e_pf > 50.0 * e_dc
+        # Leakage floor: phase energy exceeds the leakage-only draw
+        # (W * ms = mJ).
+        m, _ = ref.evaluate(A100[None, :], TBL_175B)
+        m = np.asarray(m)
+        leak_pf = C.LEAKAGE_W_PER_MM2 * m[0, 2] * m[0, 0]
+        assert e_pf > leak_pf
 
     def test_a100_area_calibration(self):
         m, _ = ref.evaluate(A100[None, :], TBL_175B)

@@ -5,12 +5,14 @@
 //!
 //! Run: `cargo bench --bench fig7_scenario_fronts`
 //! Env: `LUMINA_SAMPLES` (budget per scenario, default 200),
-//!      `LUMINA_EVALUATOR` (`roofline`, `roofline-rs`, `compass`).
+//!      `LUMINA_EVALUATOR` (`roofline`, `roofline-rs`, `compass`),
+//!      `LUMINA_OBJECTIVES` (`latency-area` or `ppa` — 4-D fronts).
 
 use lumina::csv_row;
 use lumina::design::Param;
 use lumina::figures::race::EvaluatorKind;
-use lumina::figures::scenarios::scenario_fronts;
+use lumina::figures::scenarios::scenario_fronts_mode;
+use lumina::pareto::ObjectiveMode;
 use lumina::util::bench::section;
 use lumina::util::csv::Csv;
 use lumina::workload::suite_scenarios;
@@ -25,20 +27,24 @@ fn main() {
         Ok("roofline-rs") => EvaluatorKind::RooflineRust,
         _ => EvaluatorKind::RooflinePjrt,
     };
+    let mode = std::env::var("LUMINA_OBJECTIVES")
+        .ok()
+        .and_then(|v| ObjectiveMode::parse(&v))
+        .unwrap_or(ObjectiveMode::LatencyArea);
     let scenarios = suite_scenarios();
     section(&format!(
         "Figure 7: per-scenario Pareto fronts ({} scenarios x {budget} \
-         samples)",
+         samples, {mode})",
         scenarios.len()
     ));
 
-    let fronts = scenario_fronts(&scenarios, kind, budget, 2026)
+    let fronts = scenario_fronts_mode(&scenarios, kind, budget, 2026, mode)
         .expect("scenario exploration failed");
 
     let mut csv = Csv::new(&[
         "scenario", "rank", "links", "cores", "sublanes", "sa", "vecw",
         "sram_kb", "gbuf_mb", "memch", "ttft_norm", "tpot_norm",
-        "area_norm", "phv",
+        "area_norm", "energy_norm", "phv",
     ]);
     println!(
         "{:<16} {:>6} {:>8} {:>24}",
@@ -69,6 +75,7 @@ fn main() {
                 format!("{:.5}", o[0]),
                 format!("{:.5}", o[1]),
                 format!("{:.5}", o[2]),
+                format!("{:.5}", f.front_energy[rank]),
                 format!("{:.5}", f.phv)
             ]);
         }

@@ -19,7 +19,7 @@ use lumina::figures::race::{
 };
 use lumina::lumina::Lumina;
 use lumina::pareto::{
-    hypervolume, normalize, Objectives, ParetoArchive, PHV_REF,
+    hypervolume, normalize, phv_ref, Objectives, ParetoArchive, PHV_REF,
 };
 use lumina::runtime::PjrtEvaluator;
 use lumina::sim::{CompassSim, RooflineSim};
@@ -165,6 +165,101 @@ fn main() {
         format!("{:.2}", r.throughput(1.0))
     ]);
 
+    // --- 4-D (PPA) archive insertion over the same trajectory: the
+    // energy lane appended, pairwise-front + recursive-slicing HV.
+    let mut sim4 = RooflineSim::new(default_scenario().spec);
+    let ms4 = sim4
+        .eval_batch(&sample::uniform_batch(&space, &mut rng, 1000))
+        .unwrap();
+    let ref4 = sim4.eval(&DesignPoint::a100()).unwrap().objectives_ppa();
+    let normalized4: Vec<[f64; 4]> = ms4
+        .iter()
+        .map(|m| {
+            let o = m.objectives_ppa();
+            std::array::from_fn(|i| o[i] / ref4[i])
+        })
+        .collect();
+    let r = bench("pareto archive push+phv 4-D, n=1000", 2, 20, || {
+        let mut archive: ParetoArchive<4> =
+            ParetoArchive::new(phv_ref::<4>());
+        for o in &normalized4 {
+            archive.push(*o);
+        }
+        std::hint::black_box(archive.hypervolume());
+    });
+    csv.row(csv_row![
+        r.name,
+        format!("{:.6e}", r.mean_s),
+        format!("{:.2}", r.throughput(1.0))
+    ]);
+
+    // --- Energy-enabled evaluation + mode scoring: the PPA guard.
+    // Energy attribution rides the same per-op loop in both modes, so
+    // the only mode delta is the scoring dimensionality; the guard
+    // asserts ppa end-to-end (compass eval + archive scoring) stays
+    // within 10% of latency-area.
+    let mut guard_sim = CompassSim::gpt3();
+    let guard_batch: Vec<DesignPoint> =
+        sample::uniform_batch(&space, &mut rng, 128);
+    let guard_ref = guard_sim.eval(&DesignPoint::a100()).unwrap();
+    let r_la =
+        bench("compass eval+score latency-area, batch=128", 2, 10, || {
+            let ms = guard_sim.eval_batch(&guard_batch).unwrap();
+            let mut archive = ParetoArchive::new(PHV_REF);
+            let ro = guard_ref.objectives();
+            for m in &ms {
+                let o = m.objectives();
+                archive.push(std::array::from_fn(|i| o[i] / ro[i]));
+            }
+            std::hint::black_box(archive.hypervolume());
+        });
+    csv.row(csv_row![
+        r_la.name,
+        format!("{:.6e}", r_la.mean_s),
+        format!("{:.0}", r_la.throughput(128.0))
+    ]);
+    let r_ppa = bench("compass eval+score ppa, batch=128", 2, 10, || {
+        let ms = guard_sim.eval_batch(&guard_batch).unwrap();
+        let mut archive: ParetoArchive<4> =
+            ParetoArchive::new(phv_ref::<4>());
+        let ro = guard_ref.objectives_ppa();
+        for m in &ms {
+            let o = m.objectives_ppa();
+            archive.push(std::array::from_fn(|i| o[i] / ro[i]));
+        }
+        std::hint::black_box(archive.hypervolume());
+    });
+    csv.row(csv_row![
+        r_ppa.name,
+        format!("{:.6e}", r_ppa.mean_s),
+        format!("{:.0}", r_ppa.throughput(128.0))
+    ]);
+    // Guard: PPA mode must stay within 10% of latency-area. Recorded
+    // as a pass/fail row (wall-clock ratios are noisy on shared hosts,
+    // and a panic here would truncate the CSV); set
+    // LUMINA_STRICT_PERF_GUARD=1 to turn a failure into a hard error.
+    let overhead = r_ppa.mean_s / r_la.mean_s - 1.0;
+    let guard_ok = r_ppa.mean_s <= r_la.mean_s * 1.10 + 1e-4;
+    csv.row(csv_row![
+        "ppa overhead guard (<10%)",
+        format!("{:.4}", overhead),
+        if guard_ok { "pass" } else { "FAIL" }
+    ]);
+    println!(
+        "ppa guard: {:.2}% over latency-area (limit 10%) — {}",
+        overhead * 100.0,
+        if guard_ok { "pass" } else { "FAIL" }
+    );
+    if std::env::var("LUMINA_STRICT_PERF_GUARD").as_deref() == Ok("1") {
+        assert!(
+            guard_ok,
+            "PPA-mode evaluation+scoring regressed >10% over \
+             latency-area: {:.6e}s vs {:.6e}s",
+            r_ppa.mean_s,
+            r_la.mean_s
+        );
+    }
+
     // --- One full LUMINA run (60 samples) incl. prompts + analyst.
     let r = bench("lumina 60-sample run (rust roofline)", 1, 5, || {
         let mut sim = RooflineSim::new(default_scenario().spec);
@@ -218,6 +313,7 @@ fn main() {
             spent: be.spent(),
             evaluator: "roofline-rs".to_string(),
             workload_fp: 0,
+            objectives: lumina::pareto::ObjectiveMode::LatencyArea,
             log: be.log,
         }
     };

@@ -59,7 +59,8 @@ fn main() {
     let mut csv = Csv::new(&[
         "label", "links", "cores", "sublanes", "sa", "vecw", "sram_kb",
         "gbuf_mb", "memch", "norm_ttft", "norm_tpot", "norm_area",
-        "ttft_per_area", "tpot_per_area",
+        "norm_energy", "norm_power", "ttft_per_area", "tpot_per_area",
+        "tokens_per_joule",
     ]);
     for r in &rows {
         csv.row(csv_row![
@@ -75,8 +76,11 @@ fn main() {
             format!("{:.4}", r.norm_ttft),
             format!("{:.4}", r.norm_tpot),
             format!("{:.4}", r.norm_area),
+            format!("{:.4}", r.norm_energy),
+            format!("{:.4}", r.norm_power),
             format!("{:.4}", r.ttft_per_area()),
-            format!("{:.4}", r.tpot_per_area())
+            format!("{:.4}", r.tpot_per_area()),
+            format!("{:.4}", r.tokens_per_joule())
         ]);
     }
     csv.write("out/table4_top_designs.csv").unwrap();

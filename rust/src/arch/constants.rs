@@ -30,6 +30,22 @@ pub const ALLREDUCE_LAT_S: f32 = 5.0e-6;
 pub const OP_OVERHEAD_S: f32 = 2.0e-6;
 pub const FP16_BYTES: f32 = 2.0;
 
+// ---------------------------------------------------------------- energy
+// Per-operation dynamic energy (joules per FLOP / per byte moved) and a
+// leakage density proportional to die area. Calibrated to land the A100
+// reference at a plausible inference power envelope (see the sanity
+// tests in `arch::power` and EXPERIMENTS.md §PPA).
+pub const E_J_PER_FLOP_SYSTOLIC: f32 = 0.45e-12;
+pub const E_J_PER_FLOP_VECTOR: f32 = 1.1e-12;
+pub const E_J_PER_BYTE_SRAM: f32 = 0.18e-12;
+/// Operand bytes staged through SRAM per FLOP of systolic work
+/// (one MAC = 2 FLOPs reads two fp16 operands = 4 bytes).
+pub const SRAM_BYTES_PER_FLOP: f32 = 2.0;
+pub const E_J_PER_BYTE_L2: f32 = 1.5e-12;
+pub const E_J_PER_BYTE_HBM: f32 = 31.0e-12;
+pub const E_J_PER_BYTE_LINK: f32 = 60.0e-12;
+pub const LEAKAGE_W_PER_MM2: f32 = 0.05;
+
 // ------------------------------------------------------------------ area
 pub const AREA_CORE_BASE: f32 = 1.5;
 pub const AREA_PER_PE: f32 = 0.0004;

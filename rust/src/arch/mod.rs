@@ -1,7 +1,13 @@
-//! Architecture model: the shared performance/area constants (mirror of
-//! `python/compile/constants.py`) and the component-wise area model.
+//! Architecture model: the shared performance/area/energy constants
+//! (mirror of `python/compile/constants.py`), the component-wise area
+//! model, and the energy/power model (per-op dynamic energy pricing and
+//! the static peak-power proxy the PPA objective mode uses).
 
 pub mod area;
 pub mod constants;
+pub mod power;
 
 pub use area::{area_breakdown, area_mm2, AreaBreakdown};
+pub use power::{
+    avg_power_w, power_breakdown, tdp_w, EnergyBreakdown, PowerBreakdown,
+};

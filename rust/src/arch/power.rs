@@ -1,0 +1,225 @@
+//! Component-wise energy/power model, the PPA counterpart of
+//! [`super::area`].
+//!
+//! Two kinds of quantity live here:
+//!
+//! * **Per-evaluation energy** — [`EnergyBreakdown`], the component
+//!   attribution (compute, SRAM staging, L2, HBM, link, leakage) of the
+//!   dynamic + static energy a simulated phase consumed. The simulators
+//!   accumulate per-op dynamic energy from the same hoisted invariants
+//!   that feed their timing models (see `sim::roofline` and
+//!   `sim::compass::engine`); this module holds the shared constants
+//!   glue so both backends and the Python kernel mirror price a FLOP or
+//!   a byte identically.
+//! * **Static peak power** — [`tdp_w`], a design-only proxy (every
+//!   component drawing at its peak rate, plus leakage). It needs no
+//!   simulation, is monotone in every parameter like [`super::area_mm2`],
+//!   and is what the Strategy Engine's power envelope checks project
+//!   against when vetoing/funding a boost in `--objectives ppa` mode.
+
+use super::constants as c;
+use crate::design::{DesignPoint, Param};
+
+/// Per-component energy of one evaluated phase, millijoules.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct EnergyBreakdown {
+    pub compute_mj: f32,
+    pub sram_mj: f32,
+    pub l2_mj: f32,
+    pub hbm_mj: f32,
+    pub link_mj: f32,
+    pub leakage_mj: f32,
+}
+
+impl EnergyBreakdown {
+    pub fn total_mj(&self) -> f32 {
+        self.compute_mj
+            + self.sram_mj
+            + self.l2_mj
+            + self.hbm_mj
+            + self.link_mj
+            + self.leakage_mj
+    }
+}
+
+/// Per-component peak power draw, watts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerBreakdown {
+    pub tensor: f32,
+    pub vector: f32,
+    pub sram: f32,
+    pub l2: f32,
+    pub hbm: f32,
+    pub link: f32,
+    pub leakage: f32,
+}
+
+impl PowerBreakdown {
+    pub fn total_w(&self) -> f32 {
+        self.tensor
+            + self.vector
+            + self.sram
+            + self.l2
+            + self.hbm
+            + self.link
+            + self.leakage
+    }
+}
+
+/// Peak L2 (global-buffer) bandwidth, B/s: banked, ~4x HBM at
+/// A100-like capacity, scaling sub-linearly with capacity (more banks,
+/// same crossbar). The **single** definition shared by the detailed
+/// memory timing model (`sim::compass::memory::MemorySystem`) and the
+/// peak-power proxy below, so the two can never drift.
+pub fn l2_peak_bps(gbuf_mb: f32) -> f32 {
+    4.0 * 5.0 * c::HBM_BPS_PER_CHANNEL * (gbuf_mb / 40.0).sqrt()
+}
+
+/// Static peak-power breakdown of a design (TDP-style proxy): every
+/// compute/memory/link resource drawing at its peak rate, plus leakage
+/// proportional to die area. Needs no workload or simulation.
+pub fn power_breakdown(d: &DesignPoint) -> PowerBreakdown {
+    let links = d.get(Param::Links) as f32;
+    let cores = d.get(Param::Cores) as f32;
+    let subl = d.get(Param::Sublanes) as f32;
+    let sa = d.get(Param::SystolicArray) as f32;
+    let vecw = d.get(Param::VectorWidth) as f32;
+    let gbuf = d.get(Param::GbufMb) as f32;
+    let memch = d.get(Param::MemChannels) as f32;
+
+    let arrays = cores * subl;
+    let t_peak = arrays * sa * sa * c::FLOPS_PER_PE * c::CLOCK_HZ;
+    let v_peak = arrays * vecw * c::FLOPS_PER_LANE * c::CLOCK_HZ;
+    let l2_bw = l2_peak_bps(gbuf);
+    PowerBreakdown {
+        tensor: t_peak * c::E_J_PER_FLOP_SYSTOLIC,
+        vector: v_peak * c::E_J_PER_FLOP_VECTOR,
+        sram: t_peak * c::SRAM_BYTES_PER_FLOP * c::E_J_PER_BYTE_SRAM,
+        l2: l2_bw * c::E_J_PER_BYTE_L2,
+        hbm: memch * c::HBM_BPS_PER_CHANNEL * c::E_J_PER_BYTE_HBM,
+        link: links * c::LINK_BPS * c::E_J_PER_BYTE_LINK,
+        leakage: c::LEAKAGE_W_PER_MM2 * super::area_mm2(d),
+    }
+}
+
+/// Total static peak power, watts (the Strategy Engine's power-envelope
+/// projection, analogous to [`super::area_mm2`]).
+pub fn tdp_w(d: &DesignPoint) -> f32 {
+    power_breakdown(d).total_w()
+}
+
+/// Normalize `v` by a reference lane, degrading to the **neutral 1.0**
+/// when the reference lane is non-positive — the single definition of
+/// how degenerate zero-energy references (pre-PPA PJRT artifacts load
+/// with zero energy lanes) are scored. Used by the suite composite,
+/// Table-4 rows and the scenario-front CSVs;
+/// `Metrics::objectives_ppa_vs` applies the same policy pairwise for
+/// front tracking.
+pub fn norm_or_neutral(v: f32, r: f32) -> f32 {
+    if r > 0.0 {
+        v / r
+    } else {
+        1.0
+    }
+}
+
+/// Time-averaged power over prefill + one decode step, watts
+/// (mJ / ms = W). The single definition every metrics producer uses, so
+/// the derived field can never drift between backends, the suite
+/// composite, and checkpoint reads.
+pub fn avg_power_w(
+    prefill_energy_mj: f32,
+    energy_per_token_mj: f32,
+    ttft_ms: f32,
+    tpot_ms: f32,
+) -> f32 {
+    let t = ttft_ms + tpot_ms;
+    if t <= 0.0 {
+        0.0
+    } else {
+        (prefill_energy_mj + energy_per_token_mj) / t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_tdp_is_in_a_plausible_envelope() {
+        // A100-class peak envelope: a few hundred watts.
+        let w = tdp_w(&DesignPoint::a100());
+        assert!(w > 150.0 && w < 900.0, "A100 tdp proxy {w} W");
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let b = power_breakdown(&DesignPoint::a100());
+        assert!((b.total_w() - tdp_w(&DesignPoint::a100())).abs() < 1e-3);
+        assert!(b.leakage > 0.0 && b.hbm > 0.0 && b.tensor > 0.0);
+    }
+
+    #[test]
+    fn monotone_in_every_parameter() {
+        use crate::design::DesignSpace;
+        use crate::util::prop;
+        let s = DesignSpace::table1();
+        prop::forall(
+            23,
+            128,
+            |rng| s.decode_index(rng.next_u64() % s.size()).unwrap(),
+            |d| {
+                Param::ALL.iter().all(|&p| {
+                    let up = s.step(d, p, 1);
+                    up == *d || tdp_w(&up) >= tdp_w(d)
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn wider_systolic_arrays_dominate_the_power_envelope() {
+        // The utilization pitfall has a power twin: doubling the array
+        // dim quadruples peak MAC power, which is exactly what the
+        // power-aware corrective rule must see to veto decode-bound
+        // systolic growth in ppa mode.
+        let base = power_breakdown(&DesignPoint::a100());
+        let wide = power_breakdown(
+            &DesignPoint::a100().with(Param::SystolicArray, 32),
+        );
+        assert!(wide.tensor > base.tensor * 3.5);
+        assert!(wide.total_w() > base.total_w() * 1.3);
+        // Memory channels are the power-cheap boost by comparison.
+        let chan = power_breakdown(
+            &DesignPoint::a100().with(Param::MemChannels, 6),
+        );
+        assert!(chan.total_w() < base.total_w() * 1.1);
+    }
+
+    #[test]
+    fn avg_power_is_energy_over_time() {
+        assert_eq!(avg_power_w(30.0, 10.0, 3.0, 1.0), 10.0);
+        assert_eq!(avg_power_w(1.0, 1.0, 0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn norm_or_neutral_degrades_zero_references_to_unity() {
+        assert_eq!(norm_or_neutral(2.0, 4.0), 0.5);
+        assert_eq!(norm_or_neutral(5.0, 0.0), 1.0);
+        assert_eq!(norm_or_neutral(0.0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn energy_breakdown_totals() {
+        let e = EnergyBreakdown {
+            compute_mj: 1.0,
+            sram_mj: 2.0,
+            l2_mj: 3.0,
+            hbm_mj: 4.0,
+            link_mj: 5.0,
+            leakage_mj: 6.0,
+        };
+        assert!((e.total_mj() - 21.0).abs() < 1e-6);
+        assert_eq!(EnergyBreakdown::default().total_mj(), 0.0);
+    }
+}

@@ -63,6 +63,19 @@ impl<S: DseSession + ?Sized> DseMethod for S {
 pub fn all_sessions(
     seed: u64,
 ) -> Vec<(&'static str, Box<dyn DseSession>)> {
+    all_sessions_mode(seed, crate::pareto::ObjectiveMode::LatencyArea)
+}
+
+/// [`all_sessions`] under an objective mode. The five baselines are
+/// objective-agnostic (they optimize whatever the race scores); LUMINA
+/// is the one method with mode-aware *search* — in `ppa` it runs the
+/// power-aware configuration (energy-aware acceptance, power envelope,
+/// prompt power column). `latency-area` reproduces [`all_sessions`]
+/// bit-identically.
+pub fn all_sessions_mode(
+    seed: u64,
+    mode: crate::pareto::ObjectiveMode,
+) -> Vec<(&'static str, Box<dyn DseSession>)> {
     let sessions: Vec<Box<dyn DseSession>> = vec![
         Box::new(GridSearch::with_offset(
             seed.wrapping_mul(0x2545f4914f6cdd1d),
@@ -71,7 +84,13 @@ pub fn all_sessions(
         Box::new(BayesOpt::new(seed)),
         Box::new(Genetic::new(seed)),
         Box::new(AntColony::new(seed)),
-        Box::new(crate::lumina::Lumina::with_seed(seed)),
+        Box::new(crate::lumina::Lumina::new(
+            crate::lumina::LuminaConfig {
+                seed,
+                objectives: mode,
+                ..Default::default()
+            },
+        )),
     ];
     sessions
         .into_iter()
@@ -83,7 +102,16 @@ pub fn all_sessions(
 /// sessions as [`all_sessions`], behind the blocking `run()` API (a
 /// boxed session is itself a session, hence a method).
 pub fn all_methods(seed: u64) -> Vec<Box<dyn DseMethod>> {
-    all_sessions(seed)
+    all_methods_mode(seed, crate::pareto::ObjectiveMode::LatencyArea)
+}
+
+/// [`all_methods`] under an objective mode (see
+/// [`all_sessions_mode`]).
+pub fn all_methods_mode(
+    seed: u64,
+    mode: crate::pareto::ObjectiveMode,
+) -> Vec<Box<dyn DseMethod>> {
+    all_sessions_mode(seed, mode)
         .into_iter()
         .map(|(_, s)| -> Box<dyn DseMethod> { Box::new(s) })
         .collect()

@@ -11,6 +11,7 @@ use crate::design::{sample, DesignPoint, DesignSpace, Param};
 use crate::eval::{Metrics, Phase};
 use crate::llm::analyst::analyst_area;
 use crate::llm::prompts;
+use crate::pareto::ObjectiveMode;
 use crate::sim::RooflineSim;
 use crate::stats::rng::Pcg32;
 use crate::workload::{default_scenario, WorkloadSpec};
@@ -83,6 +84,27 @@ impl QuestionSet {
         seed: u64,
         workload: &WorkloadSpec,
     ) -> QuestionSet {
+        Self::generate_n_mode(
+            task,
+            n,
+            seed,
+            workload,
+            ObjectiveMode::LatencyArea,
+        )
+    }
+
+    /// [`QuestionSet::generate_n_for`] under an objective mode: `ppa`
+    /// extends the prediction task with `avg_power_w` questions (the
+    /// energy model is part of the skill surface the benchmark
+    /// measures); `latency-area` generates the historical sets
+    /// bit-identically.
+    pub fn generate_n_mode(
+        task: Task,
+        n: usize,
+        seed: u64,
+        workload: &WorkloadSpec,
+        mode: ObjectiveMode,
+    ) -> QuestionSet {
         let mut rng = Pcg32::with_stream(seed, task as u64 + 0xbe);
         let space = DesignSpace::table1();
         let sim = RooflineSim::new(*workload);
@@ -92,7 +114,7 @@ impl QuestionSet {
                     gen_bottleneck(&space, &sim, &mut rng)
                 }
                 Task::PerfAreaPrediction => {
-                    gen_prediction(&space, &sim, &mut rng)
+                    gen_prediction(&space, &sim, &mut rng, mode)
                 }
                 Task::ParameterTuning => {
                     gen_tuning(&space, &sim, &mut rng)
@@ -290,19 +312,28 @@ fn gen_prediction(
     space: &DesignSpace,
     sim: &RooflineSim,
     rng: &mut Pcg32,
+    mode: ObjectiveMode,
 ) -> Question {
     let (reference, ref_m) = sample_design(space, sim, rng);
-    let metric_kind = rng.range_usize(0, 5); // 0-2 area, 3 ttft, 4 tpot
+    // 0-2 area, 3 ttft, 4 tpot; ppa adds 5 = average power. The
+    // latency-area draw range is unchanged so historical question sets
+    // stay bit-identical.
+    let metric_kind = match mode {
+        ObjectiveMode::LatencyArea => rng.range_usize(0, 5),
+        ObjectiveMode::Ppa => rng.range_usize(0, 6),
+    };
     let (metric, ref_v): (&str, f64) = match metric_kind {
         0..=2 => ("area_mm2", ref_m.area_mm2 as f64),
         3 => ("TTFT_ms", ref_m.ttft_ms as f64),
-        _ => ("TPOT_ms", ref_m.tpot_ms as f64),
+        4 => ("TPOT_ms", ref_m.tpot_ms as f64),
+        _ => ("avg_power_w", ref_m.avg_power_w as f64),
     };
     let value_of = |m: &Metrics| -> f64 {
         match metric_kind {
             0..=2 => m.area_mm2 as f64,
             3 => m.ttft_ms as f64,
-            _ => m.tpot_ms as f64,
+            4 => m.tpot_ms as f64,
+            _ => m.avg_power_w as f64,
         }
     };
 

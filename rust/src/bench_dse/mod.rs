@@ -12,5 +12,6 @@ pub mod runner;
 
 pub use generator::{Question, QuestionSet, Task};
 pub use runner::{
-    run_benchmark, run_benchmark_for, BenchmarkReport, TaskAccuracy,
+    run_benchmark, run_benchmark_for, run_benchmark_mode,
+    BenchmarkReport, TaskAccuracy,
 };

@@ -2,6 +2,7 @@
 
 use crate::llm::parse::parse_answer_letter;
 use crate::llm::{prompts, LanguageModel, ModelProfile, SimulatedAnalyst};
+use crate::pareto::ObjectiveMode;
 use crate::workload::{default_scenario, WorkloadSpec};
 
 use super::generator::{Question, QuestionSet, Task};
@@ -63,12 +64,32 @@ pub fn run_benchmark_for(
     scale: f64,
     workload: &WorkloadSpec,
 ) -> BenchmarkReport {
+    run_benchmark_mode(
+        profiles,
+        seed,
+        scale,
+        workload,
+        ObjectiveMode::LatencyArea,
+    )
+}
+
+/// [`run_benchmark_for`] under an objective mode: `ppa` folds
+/// average-power prediction questions into the Perf/Area task (the
+/// benchmark then measures the full PPA skill surface), `latency-area`
+/// scores the historical sets bit-identically.
+pub fn run_benchmark_mode(
+    profiles: &[ModelProfile],
+    seed: u64,
+    scale: f64,
+    workload: &WorkloadSpec,
+    mode: ObjectiveMode,
+) -> BenchmarkReport {
     let sets: Vec<QuestionSet> = Task::ALL
         .iter()
         .map(|&t| {
             let n = ((t.paper_count() as f64 * scale).round() as usize)
                 .max(10);
-            QuestionSet::generate_n_for(t, n, seed, workload)
+            QuestionSet::generate_n_mode(t, n, seed, workload, mode)
         })
         .collect();
 
@@ -239,6 +260,46 @@ mod tests {
                 a.enhanced
             );
         }
+    }
+
+    #[test]
+    fn ppa_mode_adds_power_predictions_the_oracle_still_nails() {
+        // The ppa benchmark folds avg_power_w predictions into the
+        // Perf/Area task; the linear-slope prediction path is metric
+        // generic, so the oracle stays near-perfect on them.
+        let sets = QuestionSet::generate_n_mode(
+            Task::PerfAreaPrediction,
+            60,
+            11,
+            &default_scenario().spec,
+            ObjectiveMode::Ppa,
+        );
+        let n_power = sets
+            .questions
+            .iter()
+            .filter(|q| q.prompt.contains("Predict avg_power_w"))
+            .count();
+        assert!(n_power >= 5, "only {n_power}/60 power questions");
+        let mut oracle =
+            SimulatedAnalyst::new(ModelProfile::oracle(), 5);
+        let acc = score(
+            &mut oracle,
+            prompts::SYSTEM_DEFAULT,
+            &sets.questions,
+        );
+        assert!(acc > 0.8, "oracle ppa prediction accuracy {acc:.2}");
+        // Default mode generates no power questions (bit-identical
+        // historical sets).
+        let base = QuestionSet::generate_n_for(
+            Task::PerfAreaPrediction,
+            60,
+            11,
+            &default_scenario().spec,
+        );
+        assert!(base
+            .questions
+            .iter()
+            .all(|q| !q.prompt.contains("avg_power_w")));
     }
 
     #[test]

@@ -14,7 +14,9 @@ use std::path::PathBuf;
 
 use crate::design::{DesignPoint, DesignSpace};
 use crate::eval::{BudgetedEvaluator, Metrics, HIT_LOG_FACTOR};
-use crate::pareto::{Objectives, ParetoArchive, PHV_REF};
+use crate::pareto::{
+    phv_ref, ObjectiveMode, Objectives, ParetoArchive, PHV_REF,
+};
 use crate::{bail, Result};
 
 use super::observer::{NullObserver, Observer};
@@ -46,11 +48,60 @@ pub struct CheckpointSink {
     pub evaluator: String,
     /// Workload fingerprint of the run.
     pub workload_fp: u64,
+    /// Objective mode of the run.
+    pub objectives: ObjectiveMode,
     /// Write every `every`-th driver round (0 is treated as 1). Each
     /// write serializes the whole trajectory, so long cheap-evaluator
     /// runs can raise this to amortize the O(log) cost per write;
     /// [`Driver::run`] always flushes a final state regardless.
     pub every: usize,
+}
+
+/// Mode-dispatched normalized PHV front: the 3-D latency-area archive
+/// or the 4-D ppa one, behind one `push` that normalizes a sample by
+/// the reference and reports the updated hypervolume when the front
+/// grew. Shared by [`Driver`] and the fused race cells so both drivers
+/// report identical progress for identical trajectories.
+pub enum FrontTracker {
+    D3 { reference: Objectives, archive: ParetoArchive },
+    /// The ppa tracker keeps the reference `Metrics` so every push can
+    /// route through [`Metrics::objectives_ppa_vs`], which guards the
+    /// energy lane against zero-energy pre-PPA data (no NaN fronts).
+    D4 { reference: Metrics, archive: ParetoArchive<4> },
+}
+
+impl FrontTracker {
+    /// Tracker for `mode`, normalizing by the reference metrics.
+    pub fn new(mode: ObjectiveMode, reference: &Metrics) -> Self {
+        match mode {
+            ObjectiveMode::LatencyArea => FrontTracker::D3 {
+                reference: reference.objectives(),
+                archive: ParetoArchive::new(PHV_REF),
+            },
+            ObjectiveMode::Ppa => FrontTracker::D4 {
+                reference: *reference,
+                archive: ParetoArchive::new(phv_ref::<4>()),
+            },
+        }
+    }
+
+    /// Push one sample; `Some(phv)` when it joined the front.
+    pub fn push(&mut self, m: &Metrics) -> Option<f64> {
+        match self {
+            FrontTracker::D3 { reference, archive } => {
+                let o = m.objectives();
+                archive
+                    .push(std::array::from_fn(|i| o[i] / reference[i]))
+                    .then(|| archive.hypervolume())
+            }
+            FrontTracker::D4 { reference, archive } => {
+                let (o, r) = m.objectives_ppa_vs(reference);
+                archive
+                    .push(std::array::from_fn(|i| o[i] / r[i]))
+                    .then(|| archive.hypervolume())
+            }
+        }
+    }
 }
 
 /// The observable sequential driver. One [`Driver::step`] performs one
@@ -60,12 +111,11 @@ pub struct Driver<'a> {
     observer: &'a mut dyn Observer,
     /// Trial index reported to the observer (0 for single runs).
     pub trial: usize,
-    /// Reference objectives for live PHV front tracking; without them
-    /// no `on_front_update` events fire.
-    pub reference: Option<Objectives>,
+    /// Normalized PHV front tracking (set via [`Driver::track`]);
+    /// without it no `on_front_update` events fire.
+    pub tracker: Option<FrontTracker>,
     /// When set, [`SessionState`] is written here after every round.
     pub checkpoint: Option<CheckpointSink>,
-    archive: ParetoArchive,
     last_phase: &'static str,
     rounds: usize,
 }
@@ -79,12 +129,16 @@ impl<'a> Driver<'a> {
             space,
             observer,
             trial: 0,
-            reference: None,
+            tracker: None,
             checkpoint: None,
-            archive: ParetoArchive::new(PHV_REF),
             last_phase: "",
             rounds: 0,
         }
+    }
+
+    /// Enable live front/PHV tracking against `reference` in `mode`.
+    pub fn track(&mut self, mode: ObjectiveMode, reference: &Metrics) {
+        self.tracker = Some(FrontTracker::new(mode, reference));
     }
 
     fn write_checkpoint<S: DseSession + ?Sized>(
@@ -101,6 +155,7 @@ impl<'a> Driver<'a> {
             spent: eval.spent(),
             evaluator: sink.evaluator.clone(),
             workload_fp: sink.workload_fp,
+            objectives: sink.objectives,
             log: eval.log.clone(),
         }
         .save(&sink.path)
@@ -146,8 +201,7 @@ impl<'a> Driver<'a> {
             self.trial,
             eval.evaluations() - results.len(),
             &results,
-            self.reference.as_ref(),
-            &mut self.archive,
+            self.tracker.as_mut(),
         );
         session.tell(&results);
         self.emit_phase(&*session);
@@ -179,37 +233,26 @@ impl<'a> Driver<'a> {
 }
 
 /// Deliver evaluated samples to an observer and fold them into the
-/// normalized PHV archive (`on_front_update` fires on front growth).
-/// `evals_before` is the trajectory length before these results
-/// landed. Shared by [`Driver::step`] and the fused race scatter so
-/// both drivers report identical progress for identical trajectories.
+/// mode-aware normalized PHV tracker (`on_front_update` fires on front
+/// growth). `evals_before` is the trajectory length before these
+/// results landed. Shared by [`Driver::step`] and the fused race
+/// scatter so both drivers report identical progress for identical
+/// trajectories.
 pub(crate) fn notify_samples(
     observer: &mut dyn Observer,
     method: &str,
     trial: usize,
     evals_before: usize,
     results: &[(DesignPoint, Metrics)],
-    reference: Option<&Objectives>,
-    archive: &mut ParetoArchive,
+    mut tracker: Option<&mut FrontTracker>,
 ) {
     let mut evals = evals_before;
     for (d, m) in results {
         evals += 1;
         observer.on_sample(method, trial, evals, d, m);
-        if let Some(r) = reference {
-            let o = m.objectives();
-            let joined = archive.push([
-                o[0] / r[0],
-                o[1] / r[1],
-                o[2] / r[2],
-            ]);
-            if joined {
-                observer.on_front_update(
-                    method,
-                    trial,
-                    evals,
-                    archive.hypervolume(),
-                );
+        if let Some(t) = tracker.as_deref_mut() {
+            if let Some(phv) = t.push(m) {
+                observer.on_front_update(method, trial, evals, phv);
             }
         }
     }
@@ -340,17 +383,33 @@ mod tests {
         use super::super::observer::tests::CountingObserver;
         let space = DesignSpace::table1();
         let mut sim = RooflineSim::new(GPT3_175B);
-        let reference =
-            sim.eval(&DesignPoint::a100()).unwrap().objectives();
+        let reference = sim.eval(&DesignPoint::a100()).unwrap();
         let mut be = BudgetedEvaluator::new(&mut sim, 6);
         let mut obs = CountingObserver::default();
         let mut driver = Driver::new(&space, &mut obs);
-        driver.reference = Some(reference);
+        driver.track(ObjectiveMode::LatencyArea, &reference);
         let mut s = CoresWalk { at: 0, told: 0 };
         driver.run(&mut s, &mut be).unwrap();
         assert_eq!(obs.samples, 6);
         assert!(obs.front_updates >= 1);
         assert_eq!(obs.phases, vec!["search"]);
+    }
+
+    #[test]
+    fn ppa_tracker_emits_4d_front_updates() {
+        use super::super::observer::tests::CountingObserver;
+        let space = DesignSpace::table1();
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let reference = sim.eval(&DesignPoint::a100()).unwrap();
+        let mut be = BudgetedEvaluator::new(&mut sim, 6);
+        let mut obs = CountingObserver::default();
+        let mut driver = Driver::new(&space, &mut obs);
+        driver.track(ObjectiveMode::Ppa, &reference);
+        let mut s = CoresWalk { at: 0, told: 0 };
+        driver.run(&mut s, &mut be).unwrap();
+        assert_eq!(obs.samples, 6);
+        assert!(obs.front_updates >= 1);
+        assert!(obs.last_phv.is_finite() && obs.last_phv >= 0.0);
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub mod state;
 #[cfg(test)]
 mod golden;
 
-pub use driver::{drive, replay, Driver};
+pub use driver::{drive, replay, Driver, FrontTracker};
 pub use observer::{NullObserver, Observer, ProgressObserver};
 pub use race::{CellResult, FusedRace};
 pub use state::SessionState;

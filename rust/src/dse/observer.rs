@@ -160,6 +160,7 @@ pub(crate) mod tests {
                 tpot_ms: 1.0,
                 area_mm2: 1.0,
                 stalls: [[1.0, 0.0, 0.0]; 2],
+                ..Default::default()
             },
         );
         o.on_front_update("m", 0, 1, 0.5);

@@ -19,10 +19,10 @@
 
 use crate::design::{DesignPoint, DesignSpace};
 use crate::eval::{Evaluator, Metrics, HIT_LOG_FACTOR};
-use crate::pareto::{Objectives, ParetoArchive, PHV_REF};
+use crate::pareto::ObjectiveMode;
 use crate::Result;
 
-use super::driver::notify_samples;
+use super::driver::{notify_samples, FrontTracker};
 use super::observer::Observer;
 use super::{AskCtx, DseSession};
 
@@ -44,7 +44,7 @@ struct Cell {
     budget: usize,
     spent: usize,
     log: Vec<(DesignPoint, Metrics)>,
-    archive: ParetoArchive,
+    tracker: Option<FrontTracker>,
     last_phase: &'static str,
     done: bool,
 }
@@ -84,7 +84,7 @@ impl<'a> FusedRace<'a> {
             budget,
             spent: 0,
             log: Vec::new(),
-            archive: ParetoArchive::new(PHV_REF),
+            tracker: None,
             last_phase: "",
             done: false,
         });
@@ -97,13 +97,17 @@ impl<'a> FusedRace<'a> {
 
     /// Drive every cell to completion, fusing proposals across cells
     /// into shared `eval_batch` calls. `reference` normalizes the
-    /// per-cell PHV the observer sees.
+    /// per-cell PHV the observer sees, in the objective `mode`.
     pub fn run(
         &mut self,
         eval: &mut dyn Evaluator,
-        reference: &Objectives,
+        reference: &Metrics,
+        mode: ObjectiveMode,
         observer: &mut dyn Observer,
     ) -> Result<Vec<CellResult>> {
+        for cell in &mut self.cells {
+            cell.tracker = Some(FrontTracker::new(mode, reference));
+        }
         loop {
             // ---- Gather: one ask per live cell, budget-truncated.
             let mut batch: Vec<DesignPoint> = Vec::new();
@@ -163,8 +167,7 @@ impl<'a> FusedRace<'a> {
                     cell.trial,
                     evals_before,
                     &results,
-                    Some(reference),
-                    &mut cell.archive,
+                    cell.tracker.as_mut(),
                 );
                 cell.session.tell(&results);
                 emit_phase(cell, observer);
@@ -203,10 +206,7 @@ mod tests {
     fn fused_cells_spend_their_own_budgets() {
         let space = DesignSpace::table1();
         let mut ev = RooflineSim::new(GPT3_175B);
-        let reference = ev
-            .eval(&DesignPoint::a100())
-            .unwrap()
-            .objectives();
+        let reference = ev.eval(&DesignPoint::a100()).unwrap();
         let mut race = FusedRace::new(&space);
         for (i, (name, session)) in
             crate::baselines::all_sessions(3).into_iter().enumerate()
@@ -214,7 +214,12 @@ mod tests {
             race.add_cell(name, 0, session, 20 + i);
         }
         let cells = race
-            .run(&mut ev, &reference, &mut NullObserver)
+            .run(
+                &mut ev,
+                &reference,
+                ObjectiveMode::LatencyArea,
+                &mut NullObserver,
+            )
             .unwrap();
         assert_eq!(cells.len(), 6);
         for (i, c) in cells.iter().enumerate() {
@@ -251,16 +256,19 @@ mod tests {
             calls: 0,
             evals: 0,
         };
-        let reference = ev
-            .eval(&DesignPoint::a100())
-            .unwrap()
-            .objectives();
+        let reference = ev.eval(&DesignPoint::a100()).unwrap();
         let (calls0, evals0) = (ev.calls, ev.evals);
         let mut race = FusedRace::new(&space);
         for (name, session) in crate::baselines::all_sessions(5) {
             race.add_cell(name, 0, session, 40);
         }
-        race.run(&mut ev, &reference, &mut NullObserver).unwrap();
+        race.run(
+            &mut ev,
+            &reference,
+            ObjectiveMode::LatencyArea,
+            &mut NullObserver,
+        )
+        .unwrap();
         let calls = ev.calls - calls0;
         let evals = ev.evals - evals0;
         assert_eq!(evals, 6 * 40);

@@ -22,10 +22,16 @@
 
 use crate::design::{DesignPoint, N_PARAMS};
 use crate::eval::Metrics;
+use crate::pareto::ObjectiveMode;
 use crate::util::json::{obj, Json};
 use crate::{bail, err, Result};
 
-/// Checkpoint format version (bump on layout changes).
+/// Checkpoint format version. Still 1.0 after the PPA extension: the
+/// layout only *gained* fields (an optional `objectives` mode string,
+/// metrics arrays of 12 instead of 9 numbers), and reads accept both
+/// shapes — a PR-3-era checkpoint without them loads with zero energy
+/// fields and `latency-area` mode, which replays bit-identically
+/// because default-mode session decisions never read the energy lanes.
 const VERSION: f64 = 1.0;
 
 /// A serializable snapshot of a budgeted session run.
@@ -46,6 +52,10 @@ pub struct SessionState {
     pub evaluator: String,
     /// Workload fingerprint the run evaluated under.
     pub workload_fp: u64,
+    /// Objective mode the run optimized (must match on resume — a
+    /// power-aware session proposes a different trajectory). Absent in
+    /// pre-PPA checkpoints, which read as the default `latency-area`.
+    pub objectives: ObjectiveMode,
     /// The evaluated trajectory, in order (cache hits included).
     pub log: Vec<(DesignPoint, Metrics)>,
 }
@@ -74,6 +84,7 @@ impl SessionState {
                 "workload_fp",
                 Json::Str(format!("{:#x}", self.workload_fp)),
             ),
+            ("objectives", Json::from(self.objectives.name())),
             ("samples", Json::Arr(samples)),
         ])
     }
@@ -95,6 +106,18 @@ impl SessionState {
                 ))
             })
             .collect::<Result<Vec<_>>>()?;
+        // Pre-PPA checkpoints carry no mode: default latency-area.
+        let objectives = match j.get("objectives") {
+            Ok(v) => {
+                let name = v.as_str().ok_or_else(|| {
+                    err!("objectives must be a string")
+                })?;
+                ObjectiveMode::parse(name).ok_or_else(|| {
+                    err!("unknown objective mode {name:?}")
+                })?
+            }
+            Err(_) => ObjectiveMode::LatencyArea,
+        };
         Ok(SessionState {
             method: str_field(j, "method")?,
             model: str_field(j, "model")?,
@@ -103,6 +126,7 @@ impl SessionState {
             spent: usize_field(j, "spent")?,
             evaluator: str_field(j, "evaluator")?,
             workload_fp: hex_field(j, "workload_fp")?,
+            objectives,
             log,
         })
     }
@@ -178,8 +202,12 @@ fn design_from_json(j: &Json) -> Result<DesignPoint> {
     Ok(DesignPoint::new(values))
 }
 
-/// Metrics as a flat 9-number array:
-/// `[ttft, tpot, area, s[0][0..3], s[1][0..3]]`.
+/// Metrics as a flat 12-number array:
+/// `[ttft, tpot, area, s[0][0..3], s[1][0..3], e_prefill, e_token,
+/// p_avg]`. Back-compat is **old-to-new only**: [`metrics_from_json`]
+/// accepts the historical 9-value shape (power fields read as 0), but
+/// a PR-3-era reader rejects 12-value arrays — don't expect new
+/// checkpoints to load in old binaries.
 fn metrics_to_json(m: &Metrics) -> Json {
     let mut out = vec![
         m.ttft_ms as f64,
@@ -189,6 +217,9 @@ fn metrics_to_json(m: &Metrics) -> Json {
     for phase in &m.stalls {
         out.extend(phase.iter().map(|&s| s as f64));
     }
+    out.push(m.prefill_energy_mj as f64);
+    out.push(m.energy_per_token_mj as f64);
+    out.push(m.avg_power_w as f64);
     Json::Arr(out.into_iter().map(Json::Num).collect())
 }
 
@@ -196,8 +227,8 @@ fn metrics_from_json(j: &Json) -> Result<Metrics> {
     let arr = j
         .as_arr()
         .ok_or_else(|| err!("metrics must be an array"))?;
-    if arr.len() != 9 {
-        bail!("metrics must have 9 values, got {}", arr.len());
+    if arr.len() != 9 && arr.len() != 12 {
+        bail!("metrics must have 9 or 12 values, got {}", arr.len());
     }
     let v = arr
         .iter()
@@ -207,10 +238,18 @@ fn metrics_from_json(j: &Json) -> Result<Metrics> {
                 .ok_or_else(|| err!("metrics values must be numbers"))
         })
         .collect::<Result<Vec<f32>>>()?;
+    let (e_pf, e_dc, p_avg) = if v.len() == 12 {
+        (v[9], v[10], v[11])
+    } else {
+        (0.0, 0.0, 0.0)
+    };
     Ok(Metrics {
         ttft_ms: v[0],
         tpot_ms: v[1],
         area_mm2: v[2],
+        energy_per_token_mj: e_dc,
+        prefill_energy_mj: e_pf,
+        avg_power_w: p_avg,
         stalls: [[v[3], v[4], v[5]], [v[6], v[7], v[8]]],
     })
 }
@@ -244,6 +283,7 @@ mod tests {
             spent: 2,
             evaluator: "roofline-rs".to_string(),
             workload_fp: u64::MAX,
+            objectives: ObjectiveMode::Ppa,
             log: vec![
                 (a, sim.eval(&a).unwrap()),
                 (b, sim.eval(&b).unwrap()),
@@ -259,11 +299,68 @@ mod tests {
             SessionState::from_json(&Json::parse(&text).unwrap())
                 .unwrap();
         assert_eq!(st, again);
-        // f32 metric bits survive the f64 text roundtrip exactly.
+        // f32 metric bits survive the f64 text roundtrip exactly —
+        // including the new power fields and the objective mode.
         for ((_, a), (_, b)) in st.log.iter().zip(&again.log) {
             assert_eq!(a.ttft_ms.to_bits(), b.ttft_ms.to_bits());
             assert_eq!(a.stalls, b.stalls);
+            assert_eq!(
+                a.energy_per_token_mj.to_bits(),
+                b.energy_per_token_mj.to_bits()
+            );
+            assert_eq!(
+                a.prefill_energy_mj.to_bits(),
+                b.prefill_energy_mj.to_bits()
+            );
+            assert_eq!(a.avg_power_w.to_bits(), b.avg_power_w.to_bits());
         }
+        assert_eq!(again.objectives, ObjectiveMode::Ppa);
+    }
+
+    /// Pinned verbatim PR-3-era checkpoint document (no `objectives`
+    /// field, 9-value metrics arrays): it must still load, with the
+    /// power fields zeroed and the default latency-area mode, so an old
+    /// checkpoint resumes bit-identically (default-mode session
+    /// decisions never read the energy lanes).
+    const OLD_FORMAT_FIXTURE: &str = r#"{
+  "budget": 40,
+  "evaluator": "roofline-rs",
+  "method": "lumina",
+  "model": "qwen3",
+  "samples": [
+    {
+      "design": [12, 108, 4, 16, 32, 192, 40, 5],
+      "metrics": [36.70556, 0.4424397, 833.9728, 26.794451,
+                  3.6336124, 6.277494, 0, 0.42538139, 0.017058346]
+    }
+  ],
+  "seed": "0xdeadbeefcafef00d",
+  "spent": 1,
+  "version": 1,
+  "workload_fp": "0xffffffffffffffff"
+}"#;
+
+    #[test]
+    fn pre_ppa_checkpoint_loads_with_default_mode_and_zero_energy() {
+        let st = SessionState::from_json(
+            &Json::parse(OLD_FORMAT_FIXTURE).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(st.objectives, ObjectiveMode::LatencyArea);
+        assert_eq!(st.method, "lumina");
+        assert_eq!(st.seed, 0xdead_beef_cafe_f00d);
+        assert_eq!(st.log.len(), 1);
+        let (d, m) = &st.log[0];
+        assert_eq!(*d, DesignPoint::a100());
+        assert_eq!(m.ttft_ms, 36.70556);
+        assert_eq!(m.stalls[1][1], 0.42538139);
+        assert_eq!(m.energy_per_token_mj, 0.0);
+        assert_eq!(m.prefill_energy_mj, 0.0);
+        assert_eq!(m.avg_power_w, 0.0);
+        // And it re-saves in the new 12-value shape without loss of the
+        // original timing bits.
+        let again = SessionState::from_json(&st.to_json()).unwrap();
+        assert_eq!(st, again);
     }
 
     #[test]

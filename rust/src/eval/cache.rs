@@ -153,6 +153,7 @@ mod tests {
                     tpot_ms: 0.5,
                     area_mm2: 100.0,
                     stalls: [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0]],
+                    ..Default::default()
                 })
                 .collect())
         }

@@ -102,11 +102,25 @@ impl Phase {
 }
 
 /// Evaluation result for one design point.
-#[derive(Debug, Clone, Copy, PartialEq)]
+///
+/// Energy fields are produced by the same per-op loops that produce the
+/// timing (see `sim::roofline` / `sim::compass::engine`), so they are
+/// always populated; whether they participate in optimization is the
+/// [`crate::pareto::ObjectiveMode`] decision (`latency-area` ignores
+/// them, `ppa` adds energy/token as a fourth minimized lane).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Metrics {
     pub ttft_ms: f32,
     pub tpot_ms: f32,
     pub area_mm2: f32,
+    /// Decode-step (one generated token, per layer) energy, mJ —
+    /// dynamic + leakage.
+    pub energy_per_token_mj: f32,
+    /// Prefill-phase energy, mJ — dynamic + leakage.
+    pub prefill_energy_mj: f32,
+    /// Time-averaged power over prefill + one decode step, W (always
+    /// derived via [`crate::arch::power::avg_power_w`]).
+    pub avg_power_w: f32,
     /// `stalls[phase][component]` — time (ms) attributed to the component
     /// on the phase's critical path.
     pub stalls: [[f32; 3]; 2],
@@ -116,6 +130,43 @@ impl Metrics {
     /// (TTFT, TPOT, area) as a minimization objective vector.
     pub fn objectives(&self) -> Objectives {
         [self.ttft_ms as f64, self.tpot_ms as f64, self.area_mm2 as f64]
+    }
+
+    /// (TTFT, TPOT, area, energy/token) — the 4-D `ppa` objective
+    /// vector.
+    pub fn objectives_ppa(&self) -> Objectives<4> {
+        [
+            self.ttft_ms as f64,
+            self.tpot_ms as f64,
+            self.area_mm2 as f64,
+            self.energy_per_token_mj as f64,
+        ]
+    }
+
+    /// `(self, reference)` as 4-D ppa vectors, guarded for pre-PPA
+    /// data: when the reference's energy lane is non-positive (old
+    /// PJRT artifacts load with zero energy), both vectors carry the
+    /// neutral 1.0 on lane 3 — ppa scoring and front tracking then
+    /// degrade to latency-area instead of emitting NaN/inf.
+    pub fn objectives_ppa_vs(
+        &self,
+        reference: &Metrics,
+    ) -> (Objectives<4>, Objectives<4>) {
+        let mut o = self.objectives_ppa();
+        let mut r = reference.objectives_ppa();
+        if r[3] <= 0.0 {
+            o[3] = 1.0;
+            r[3] = 1.0;
+        }
+        (o, r)
+    }
+
+    /// Energy of a phase, mJ.
+    pub fn phase_energy_mj(&self, phase: Phase) -> f32 {
+        match phase {
+            Phase::Prefill => self.prefill_energy_mj,
+            Phase::Decode => self.energy_per_token_mj,
+        }
     }
 
     pub fn phase_time_ms(&self, phase: Phase) -> f32 {
@@ -428,6 +479,9 @@ mod tests {
             ttft_ms: 30.0,
             tpot_ms: 0.5,
             area_mm2: 800.0,
+            energy_per_token_mj: 40.0,
+            prefill_energy_mj: 8000.0,
+            avg_power_w: 263.6,
             stalls: [[20.0, 4.0, 6.0], [0.01, 0.4, 0.09]],
         }
     }
@@ -580,5 +634,25 @@ mod tests {
     fn objectives_vector_order() {
         let o = fake_metrics().objectives();
         assert_eq!(o, [30.0, 0.5, 800.0]);
+    }
+
+    #[test]
+    fn ppa_objectives_append_energy_per_token() {
+        let m = fake_metrics();
+        assert_eq!(m.objectives_ppa(), [30.0, 0.5, 800.0, 40.0]);
+        assert_eq!(m.phase_energy_mj(Phase::Prefill), 8000.0);
+        assert_eq!(m.phase_energy_mj(Phase::Decode), 40.0);
+        // Guarded pair against a live reference: lanes pass through.
+        let (o, r) = m.objectives_ppa_vs(&m);
+        assert_eq!(o, m.objectives_ppa());
+        assert_eq!(r, m.objectives_ppa());
+        // Against a zero-energy (pre-PPA) reference: lane 3 neutral on
+        // both sides — no NaN, degrades to latency-area.
+        let mut old = fake_metrics();
+        old.energy_per_token_mj = 0.0;
+        let (o, r) = m.objectives_ppa_vs(&old);
+        assert_eq!(o[3], 1.0);
+        assert_eq!(r[3], 1.0);
+        assert!(o.iter().chain(r.iter()).all(|v| v.is_finite()));
     }
 }

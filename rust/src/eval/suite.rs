@@ -126,12 +126,32 @@ impl SuiteEvaluator {
         debug_assert_eq!(per_member.len(), self.members.len());
         let mut ttft = 0.0f32;
         let mut tpot = 0.0f32;
+        let mut e_pf = 0.0f32;
+        let mut e_dc = 0.0f32;
         let mut stalls = [[0.0f32; 3]; 2];
         for (mem, m) in self.members.iter().zip(per_member) {
             let wn = mem.scenario.weight as f32 / self.weight_total;
             let r = &mem.reference;
             ttft += wn * (m.ttft_ms / r.ttft_ms);
             tpot += wn * (m.tpot_ms / r.tpot_ms);
+            // Energy composes like the latencies: weighted means of the
+            // per-scenario values normalized by that scenario's A100
+            // reference, so the A100 composite is exactly 1.0 per phase.
+            // A member whose reference energy is zero (a pre-PPA PJRT
+            // artifact deliberately loads with zero energy lanes)
+            // contributes the neutral 1.0 — not NaN, and not a
+            // partial weight that would deflate the energy lane in a
+            // mixed artifact/mirror suite.
+            e_pf += wn
+                * crate::arch::power::norm_or_neutral(
+                    m.prefill_energy_mj,
+                    r.prefill_energy_mj,
+                );
+            e_dc += wn
+                * crate::arch::power::norm_or_neutral(
+                    m.energy_per_token_mj,
+                    r.energy_per_token_mj,
+                );
             for (p, phase_ref) in [r.ttft_ms, r.tpot_ms].into_iter().enumerate()
             {
                 for c in 0..3 {
@@ -145,6 +165,13 @@ impl SuiteEvaluator {
             // Die area does not depend on the workload; every member
             // reports the same value for a given design.
             area_mm2: per_member[0].area_mm2,
+            energy_per_token_mj: e_dc,
+            prefill_energy_mj: e_pf,
+            // On normalized lanes the helper yields a dimensionless
+            // "normalized power"; A100 scores exactly 1.0.
+            avg_power_w: crate::arch::power::avg_power_w(
+                e_pf, e_dc, ttft, tpot,
+            ),
             stalls,
         }
     }
@@ -207,6 +234,10 @@ mod tests {
         let m = s.eval(&DesignPoint::a100()).unwrap();
         assert!((m.ttft_ms - 1.0).abs() < 1e-5, "{m:?}");
         assert!((m.tpot_ms - 1.0).abs() < 1e-5, "{m:?}");
+        // Energy lanes are reference-normalized the same way.
+        assert!((m.prefill_energy_mj - 1.0).abs() < 1e-5, "{m:?}");
+        assert!((m.energy_per_token_mj - 1.0).abs() < 1e-5, "{m:?}");
+        assert!((m.avg_power_w - 1.0).abs() < 1e-5, "{m:?}");
         // Stall stacks keep the sum-to-phase-time invariant.
         let pf: f32 = m.stalls[0].iter().sum();
         let dc: f32 = m.stalls[1].iter().sum();
@@ -296,6 +327,91 @@ mod tests {
         let mp = sp.eval(&d).unwrap();
         assert!(md.tpot_ms < 1.0);
         assert!(md.tpot_ms < mp.ttft_ms);
+    }
+
+    #[test]
+    fn zero_energy_references_compose_without_nan() {
+        // Pre-PPA PJRT artifacts load with zero energy lanes; the
+        // composite must stay finite (and serializable) rather than
+        // propagate 0/0 NaN into checkpoints.
+        struct ZeroEnergy(RooflineSim);
+        impl Evaluator for ZeroEnergy {
+            fn eval_batch(
+                &mut self,
+                designs: &[DesignPoint],
+            ) -> crate::Result<Vec<Metrics>> {
+                let mut ms = self.0.eval_batch(designs)?;
+                for m in &mut ms {
+                    m.energy_per_token_mj = 0.0;
+                    m.prefill_energy_mj = 0.0;
+                    m.avg_power_w = 0.0;
+                }
+                Ok(ms)
+            }
+            fn name(&self) -> &'static str {
+                "zero-energy"
+            }
+            fn workload_fingerprint(&self) -> u64 {
+                Evaluator::workload_fingerprint(&self.0)
+            }
+        }
+        let mut s = SuiteEvaluator::new(
+            &suite_scenarios(),
+            &mut |spec: &WorkloadSpec| -> Box<dyn Evaluator> {
+                Box::new(ZeroEnergy(RooflineSim::new(*spec)))
+            },
+        )
+        .unwrap();
+        let m = s.eval(&DesignPoint::a100()).unwrap();
+        assert!(m.ttft_ms.is_finite() && (m.ttft_ms - 1.0).abs() < 1e-5);
+        // Zero-energy members contribute the neutral 1.0, so the A100
+        // composite invariant holds even without energy data.
+        assert!((m.prefill_energy_mj - 1.0).abs() < 1e-5, "{m:?}");
+        assert!((m.energy_per_token_mj - 1.0).abs() < 1e-5, "{m:?}");
+        assert!((m.avg_power_w - 1.0).abs() < 1e-5, "{m:?}");
+    }
+
+    #[test]
+    fn mixed_energy_suite_keeps_the_unity_invariant() {
+        // One real member + zero-energy members (the mixed
+        // artifact/mirror case): the A100 energy composite must stay
+        // exactly 1.0, not a partial weighted sum.
+        struct MaybeZero(RooflineSim, bool);
+        impl Evaluator for MaybeZero {
+            fn eval_batch(
+                &mut self,
+                designs: &[DesignPoint],
+            ) -> crate::Result<Vec<Metrics>> {
+                let mut ms = self.0.eval_batch(designs)?;
+                if self.1 {
+                    for m in &mut ms {
+                        m.energy_per_token_mj = 0.0;
+                        m.prefill_energy_mj = 0.0;
+                        m.avg_power_w = 0.0;
+                    }
+                }
+                Ok(ms)
+            }
+            fn name(&self) -> &'static str {
+                "maybe-zero"
+            }
+            fn workload_fingerprint(&self) -> u64 {
+                Evaluator::workload_fingerprint(&self.0)
+            }
+        }
+        let mut first = true;
+        let mut s = SuiteEvaluator::new(
+            &suite_scenarios(),
+            &mut |spec: &WorkloadSpec| -> Box<dyn Evaluator> {
+                let zero = !first;
+                first = false;
+                Box::new(MaybeZero(RooflineSim::new(*spec), zero))
+            },
+        )
+        .unwrap();
+        let m = s.eval(&DesignPoint::a100()).unwrap();
+        assert!((m.prefill_energy_mj - 1.0).abs() < 1e-5, "{m:?}");
+        assert!((m.energy_per_token_mj - 1.0).abs() < 1e-5, "{m:?}");
     }
 
     #[test]

@@ -3,12 +3,15 @@
 //! multiple independent trials, and report PHV / sample efficiency /
 //! superior-design counts plus the raw trajectories.
 
-use crate::baselines::{all_methods, all_sessions, DseMethod};
+use crate::baselines::{all_methods_mode, all_sessions_mode, DseMethod};
 use crate::design::{DesignPoint, DesignSpace};
 use crate::dse::{FusedRace, NullObserver, Observer};
-use crate::eval::{BudgetedEvaluator, Evaluator, ParallelEvaluator};
+use crate::eval::{
+    BudgetedEvaluator, Evaluator, Metrics, ParallelEvaluator,
+};
 use crate::pareto::{
-    self, normalize, sample_efficiency, Objectives, ParetoArchive, PHV_REF,
+    normalize, phv_ref, sample_efficiency, superior_count,
+    ObjectiveMode, Objectives, ParetoArchive, PHV_REF,
 };
 use crate::runtime::PjrtEvaluator;
 use crate::sim::{CompassSim, RooflineSim};
@@ -91,6 +94,9 @@ pub struct RaceConfig {
     pub evaluator: EvaluatorKind,
     /// Workload scenario every method is raced on.
     pub workload: WorkloadSpec,
+    /// Objective vector the race scores (3-D latency-area by default,
+    /// 4-D PPA with `--objectives ppa`).
+    pub objectives: ObjectiveMode,
 }
 
 impl Default for RaceConfig {
@@ -101,6 +107,7 @@ impl Default for RaceConfig {
             seed: 2026,
             evaluator: EvaluatorKind::RooflinePjrt,
             workload: default_scenario().spec,
+            objectives: ObjectiveMode::LatencyArea,
         }
     }
 }
@@ -120,13 +127,24 @@ pub struct RaceResult {
     pub trajectory: Vec<(DesignPoint, Objectives)>,
 }
 
-/// The A100 reference objectives under the chosen evaluator + workload.
+/// The A100 reference metrics under the chosen evaluator + workload
+/// (carries every objective lane; mode-specific vectors derive from
+/// it).
+pub fn reference_metrics(
+    kind: EvaluatorKind,
+    workload: &WorkloadSpec,
+) -> Result<Metrics> {
+    let mut ev = kind.make_for(workload);
+    ev.eval(&DesignPoint::a100())
+}
+
+/// The A100 reference objectives (3-D) under the chosen evaluator +
+/// workload.
 pub fn reference_objectives(
     kind: EvaluatorKind,
     workload: &WorkloadSpec,
 ) -> Result<Objectives> {
-    let mut ev = kind.make_for(workload);
-    Ok(ev.eval(&DesignPoint::a100())?.objectives())
+    Ok(reference_metrics(kind, workload)?.objectives())
 }
 
 /// Run the full race: every method in the paper's comparison x trials.
@@ -138,25 +156,23 @@ pub fn reference_objectives(
 /// function of the design.
 pub fn run_race(cfg: &RaceConfig) -> Result<Vec<RaceResult>> {
     let space = DesignSpace::table1();
-    let reference = reference_objectives(cfg.evaluator, &cfg.workload)?;
+    let reference = reference_metrics(cfg.evaluator, &cfg.workload)?;
     let mut ev = cfg.evaluator.make_for(&cfg.workload);
     let mut out = Vec::new();
     for trial in 0..cfg.trials {
         let seed = cfg.seed
             .wrapping_mul(0x9e3779b97f4a7c15)
             .wrapping_add(trial as u64);
-        for mut method in all_methods(seed) {
+        for mut method in all_methods_mode(seed, cfg.objectives) {
             let mut be =
                 BudgetedEvaluator::new(ev.as_mut(), cfg.samples);
             method.run(&space, &mut be)?;
-            out.push(score_trajectory(
+            out.push(score_log(
                 method.name(),
                 trial,
-                &be.log
-                    .iter()
-                    .map(|(d, m)| (*d, m.objectives()))
-                    .collect::<Vec<_>>(),
+                &be.log,
                 &reference,
+                cfg.objectives,
             ));
         }
     }
@@ -182,7 +198,7 @@ pub fn run_race_fused_observed(
     observer: &mut dyn Observer,
 ) -> Result<Vec<RaceResult>> {
     let space = DesignSpace::table1();
-    let reference = reference_objectives(cfg.evaluator, &cfg.workload)?;
+    let reference = reference_metrics(cfg.evaluator, &cfg.workload)?;
     let mut ev = cfg.evaluator.make_for(&cfg.workload);
     let mut race = FusedRace::new(&space);
     for trial in 0..cfg.trials {
@@ -190,20 +206,24 @@ pub fn run_race_fused_observed(
             .seed
             .wrapping_mul(0x9e3779b97f4a7c15)
             .wrapping_add(trial as u64);
-        for (name, session) in all_sessions(seed) {
+        for (name, session) in
+            all_sessions_mode(seed, cfg.objectives)
+        {
             race.add_cell(name, trial, session, cfg.samples);
         }
     }
-    let cells = race.run(ev.as_mut(), &reference, observer)?;
+    let cells =
+        race.run(ev.as_mut(), &reference, cfg.objectives, observer)?;
     Ok(cells
         .into_iter()
         .map(|c| {
-            let traj: Vec<(DesignPoint, Objectives)> = c
-                .log
-                .iter()
-                .map(|(d, m)| (*d, m.objectives()))
-                .collect();
-            score_trajectory(c.method, c.trial, &traj, &reference)
+            score_log(
+                c.method,
+                c.trial,
+                &c.log,
+                &reference,
+                cfg.objectives,
+            )
         })
         .collect())
 }
@@ -219,18 +239,85 @@ pub fn score_trajectory(
 ) -> RaceResult {
     let objs: Vec<Objectives> =
         trajectory.iter().map(|(_, o)| *o).collect();
-    let mut archive = ParetoArchive::new(PHV_REF);
-    for o in normalize(&objs, reference) {
-        archive.push(o);
-    }
+    let (phv, sample_efficiency, superior) =
+        score_vectors(&objs, reference);
     RaceResult {
         method,
         trial,
-        phv: archive.hypervolume(),
-        sample_efficiency: sample_efficiency(&objs, reference),
-        superior: pareto::superior_count(&objs, reference),
+        phv,
+        sample_efficiency,
+        superior,
         trajectory: trajectory.to_vec(),
     }
+}
+
+/// Score a raw `(design, metrics)` log under an objective mode. The
+/// latency-area arm reproduces [`score_trajectory`] exactly; the ppa
+/// arm scores the 4-D (TTFT, TPOT, area, energy/token) vectors against
+/// `phv_ref::<4>()`. `RaceResult::trajectory` stays 3-D in both modes
+/// (the Fig. 6 search-pattern consumers are latency-area plots).
+pub fn score_log(
+    method: &'static str,
+    trial: usize,
+    log: &[(DesignPoint, Metrics)],
+    reference: &Metrics,
+    mode: ObjectiveMode,
+) -> RaceResult {
+    let trajectory: Vec<(DesignPoint, Objectives)> =
+        log.iter().map(|(d, m)| (*d, m.objectives())).collect();
+    match mode {
+        ObjectiveMode::LatencyArea => score_trajectory(
+            method,
+            trial,
+            &trajectory,
+            &reference.objectives(),
+        ),
+        ObjectiveMode::Ppa => {
+            // Degenerate zero-energy reference (pre-PPA artifact
+            // data): the energy lane carries no information, so ppa
+            // scoring degrades to the latency-area scores entirely —
+            // a neutral constant lane would instead zero
+            // sample-efficiency/superior under their strict-< rule.
+            if reference.energy_per_token_mj <= 0.0 {
+                return score_trajectory(
+                    method,
+                    trial,
+                    &trajectory,
+                    &reference.objectives(),
+                );
+            }
+            let objs: Vec<Objectives<4>> =
+                log.iter().map(|(_, m)| m.objectives_ppa()).collect();
+            let (phv, sample_efficiency, superior) =
+                score_vectors(&objs, &reference.objectives_ppa());
+            RaceResult {
+                method,
+                trial,
+                phv,
+                sample_efficiency,
+                superior,
+                trajectory,
+            }
+        }
+    }
+}
+
+/// Dimension-generic trajectory scoring: normalized incremental PHV
+/// against `[2.0; D]`, sample efficiency, superior count.
+fn score_vectors<const D: usize>(
+    objs: &[Objectives<D>],
+    reference: &Objectives<D>,
+) -> (f64, f64, usize) {
+    let mut archive: ParetoArchive<D> =
+        ParetoArchive::new(phv_ref::<D>());
+    for o in normalize(objs, reference) {
+        archive.push(o);
+    }
+    (
+        archive.hypervolume(),
+        sample_efficiency(objs, reference),
+        superior_count(objs, reference),
+    )
 }
 
 /// PHV after every step of a trajectory (the Fig. 4 race curves,
@@ -428,6 +515,76 @@ mod tests {
         )
         .unwrap();
         assert!((gpt3[0] - llama[0]).abs() / gpt3[0] > 0.05);
+    }
+
+    #[test]
+    fn ppa_race_scores_a_4d_objective() {
+        let base = RaceConfig {
+            samples: 40,
+            trials: 1,
+            seed: 5,
+            evaluator: EvaluatorKind::RooflineRust,
+            ..Default::default()
+        };
+        let ppa = RaceConfig {
+            objectives: ObjectiveMode::Ppa,
+            ..base.clone()
+        };
+        let r3 = run_race(&base).unwrap();
+        let r4 = run_race(&ppa).unwrap();
+        assert_eq!(r3.len(), r4.len());
+        for (a, b) in r3.iter().zip(&r4) {
+            assert_eq!(a.method, b.method);
+            assert_eq!(a.trajectory.len(), b.trajectory.len());
+            assert!(b.phv.is_finite() && b.phv >= 0.0);
+            if a.method != "lumina" {
+                // The baselines are objective-agnostic: same designs,
+                // only the scoring changes — so the 4-D superior count
+                // is at most the 3-D one (one more lane to strictly
+                // beat).
+                assert_eq!(a.trajectory, b.trajectory, "{}", a.method);
+                assert!(b.superior <= a.superior, "{}", a.method);
+            }
+        }
+        // LUMINA is the mode-aware searcher: the ppa race runs its
+        // power-aware configuration, so its trajectory diverges.
+        let (la, pa) = r3
+            .iter()
+            .zip(&r4)
+            .find(|(a, _)| a.method == "lumina")
+            .unwrap();
+        assert_ne!(
+            la.trajectory, pa.trajectory,
+            "ppa race did not engage power-aware LUMINA"
+        );
+        // The 4-D PHV differs from the 3-D PHV for at least one cell
+        // (the energy lane genuinely participates).
+        assert!(
+            r3.iter()
+                .zip(&r4)
+                .any(|(a, b)| (a.phv - b.phv).abs() > 1e-9),
+            "ppa scoring identical to latency-area"
+        );
+    }
+
+    #[test]
+    fn fused_ppa_race_matches_serial_ppa_race() {
+        let cfg = RaceConfig {
+            samples: 30,
+            trials: 1,
+            seed: 9,
+            evaluator: EvaluatorKind::RooflineRust,
+            objectives: ObjectiveMode::Ppa,
+            ..Default::default()
+        };
+        let serial = run_race(&cfg).unwrap();
+        let fused = run_race_fused(&cfg).unwrap();
+        for (s, f) in serial.iter().zip(&fused) {
+            assert_eq!(s.method, f.method);
+            assert_eq!(s.trajectory, f.trajectory);
+            assert_eq!(s.phv.to_bits(), f.phv.to_bits());
+            assert_eq!(s.superior, f.superior);
+        }
     }
 
     #[test]

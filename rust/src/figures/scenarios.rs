@@ -9,8 +9,10 @@
 use crate::baselines::DseMethod;
 use crate::design::{DesignPoint, DesignSpace};
 use crate::eval::BudgetedEvaluator;
-use crate::lumina::Lumina;
-use crate::pareto::{Objectives, ParetoArchive, PHV_REF};
+use crate::lumina::{Lumina, LuminaConfig};
+use crate::pareto::{
+    phv_ref, ObjectiveMode, Objectives, ParetoArchive, PHV_REF,
+};
 use crate::workload::Scenario;
 use crate::Result;
 
@@ -25,27 +27,58 @@ pub struct ScenarioFront {
     /// Non-dominated samples as (design, objectives normalized by the
     /// scenario reference), in discovery order.
     pub front: Vec<(DesignPoint, Objectives)>,
-    /// PHV of the normalized trajectory w.r.t. [`PHV_REF`].
+    /// Normalized energy/token of each front point (the 4th PPA lane),
+    /// aligned with `front`.
+    pub front_energy: Vec<f64>,
+    /// PHV of the normalized trajectory w.r.t. [`PHV_REF`] (or its 4-D
+    /// analogue in ppa mode).
     pub phv: f64,
     /// Samples spent (equals the budget unless evaluation failed early).
     pub samples: usize,
 }
 
 /// Run LUMINA under `budget` samples on each scenario and collect the
-/// per-scenario normalized fronts.
+/// per-scenario normalized fronts (latency-area mode).
 pub fn scenario_fronts(
     scenarios: &[&Scenario],
     kind: EvaluatorKind,
     budget: usize,
     seed: u64,
 ) -> Result<Vec<ScenarioFront>> {
+    scenario_fronts_mode(
+        scenarios,
+        kind,
+        budget,
+        seed,
+        ObjectiveMode::LatencyArea,
+    )
+}
+
+/// [`scenario_fronts`] under an objective mode: `ppa` runs the
+/// power-aware LUMINA configuration and selects/scores the front in
+/// 4-D (TTFT, TPOT, area, energy/token); `front` still reports the 3-D
+/// projection for plot compatibility, with the energy lane alongside
+/// in `front_energy`.
+pub fn scenario_fronts_mode(
+    scenarios: &[&Scenario],
+    kind: EvaluatorKind,
+    budget: usize,
+    seed: u64,
+    mode: ObjectiveMode,
+) -> Result<Vec<ScenarioFront>> {
     let space = DesignSpace::table1();
     let mut out = Vec::with_capacity(scenarios.len());
     for s in scenarios {
         let mut ev = kind.make_for(&s.spec);
-        let reference = ev.eval(&DesignPoint::a100())?.objectives();
+        let reference_m = ev.eval(&DesignPoint::a100())?;
+        let reference = reference_m.objectives();
         let mut be = BudgetedEvaluator::new(ev.as_mut(), budget);
-        Lumina::with_seed(seed).run(&space, &mut be)?;
+        Lumina::new(LuminaConfig {
+            seed,
+            objectives: mode,
+            ..Default::default()
+        })
+        .run(&space, &mut be)?;
         let traj: Vec<(DesignPoint, Objectives)> = be
             .log
             .iter()
@@ -61,19 +94,47 @@ pub fn scenario_fronts(
                 )
             })
             .collect();
-        let mut archive = ParetoArchive::new(PHV_REF);
-        for (_, o) in &traj {
-            archive.push(*o);
-        }
+        // A zero reference energy (pre-PPA PJRT artifact) normalizes
+        // to the neutral 1.0 rather than NaN (shared policy, see
+        // arch::power::norm_or_neutral), keeping the CSV and the 4-D
+        // front selection well-defined.
+        let ref_energy = reference_m.energy_per_token_mj;
+        let energies: Vec<f64> = be
+            .log
+            .iter()
+            .map(|(_, m)| {
+                crate::arch::power::norm_or_neutral(
+                    m.energy_per_token_mj,
+                    ref_energy,
+                ) as f64
+            })
+            .collect();
+        let (front_ids, phv) = match mode {
+            ObjectiveMode::LatencyArea => {
+                let mut archive = ParetoArchive::new(PHV_REF);
+                for (_, o) in &traj {
+                    archive.push(*o);
+                }
+                (archive.front_ids(), archive.hypervolume())
+            }
+            ObjectiveMode::Ppa => {
+                let mut archive: ParetoArchive<4> =
+                    ParetoArchive::new(phv_ref::<4>());
+                for ((_, o), e) in traj.iter().zip(&energies) {
+                    archive.push([o[0], o[1], o[2], *e]);
+                }
+                (archive.front_ids(), archive.hypervolume())
+            }
+        };
         out.push(ScenarioFront {
             name: s.name,
             reference,
-            front: archive
-                .front_ids()
-                .into_iter()
-                .map(|i| traj[i])
+            front: front_ids.iter().map(|&i| traj[i]).collect(),
+            front_energy: front_ids
+                .iter()
+                .map(|&i| energies[i])
                 .collect(),
-            phv: archive.hypervolume(),
+            phv,
             samples: traj.len(),
         });
     }
@@ -116,5 +177,47 @@ mod tests {
                 / fronts[0].reference[0]
                 > 0.01
         );
+    }
+
+    #[test]
+    fn ppa_fronts_carry_the_energy_lane_and_4d_nondominance() {
+        let scenarios = suite_scenarios();
+        let fronts = scenario_fronts_mode(
+            &scenarios[..2],
+            EvaluatorKind::RooflineRust,
+            25,
+            7,
+            ObjectiveMode::Ppa,
+        )
+        .unwrap();
+        for f in &fronts {
+            assert_eq!(f.front.len(), f.front_energy.len());
+            assert!(f.front_energy.iter().all(|&e| e > 0.0));
+            // 4-D non-dominance of the reported front.
+            for i in 0..f.front.len() {
+                for j in 0..f.front.len() {
+                    if i == j {
+                        continue;
+                    }
+                    let a = [
+                        f.front[i].1[0],
+                        f.front[i].1[1],
+                        f.front[i].1[2],
+                        f.front_energy[i],
+                    ];
+                    let b = [
+                        f.front[j].1[0],
+                        f.front[j].1[1],
+                        f.front[j].1[2],
+                        f.front_energy[j],
+                    ];
+                    assert!(
+                        !dominates(&b, &a),
+                        "{}: 4-D dominated point on ppa front",
+                        f.name
+                    );
+                }
+            }
+        }
     }
 }

@@ -16,6 +16,10 @@ pub struct DesignReportRow {
     pub norm_ttft: f64,
     pub norm_tpot: f64,
     pub norm_area: f64,
+    /// Energy/token relative to the reference (the PPA column).
+    pub norm_energy: f64,
+    /// Average power relative to the reference.
+    pub norm_power: f64,
 }
 
 impl DesignReportRow {
@@ -26,6 +30,12 @@ impl DesignReportRow {
 
     pub fn tpot_per_area(&self) -> f64 {
         1.0 / (self.norm_tpot * self.norm_area)
+    }
+
+    /// Tokens-per-joule efficiency relative to the reference
+    /// (>1 = better).
+    pub fn tokens_per_joule(&self) -> f64 {
+        1.0 / self.norm_energy
     }
 }
 
@@ -80,6 +90,12 @@ pub fn report_rows(
     designs: &[(String, DesignPoint)],
 ) -> Result<Vec<DesignReportRow>> {
     let reference = eval.eval(&DesignPoint::a100())?;
+    // A pre-PPA artifact evaluator reports zero energy lanes; normalize
+    // to 1.0 (neutral) instead of dividing into NaN (shared policy,
+    // see arch::power::norm_or_neutral).
+    let norm = |v: f32, r: f32| {
+        crate::arch::power::norm_or_neutral(v, r) as f64
+    };
     let mut rows = Vec::new();
     for (label, d) in designs {
         let m = eval.eval(d)?;
@@ -90,6 +106,11 @@ pub fn report_rows(
             norm_ttft: (m.ttft_ms / reference.ttft_ms) as f64,
             norm_tpot: (m.tpot_ms / reference.tpot_ms) as f64,
             norm_area: (m.area_mm2 / reference.area_mm2) as f64,
+            norm_energy: norm(
+                m.energy_per_token_mj,
+                reference.energy_per_token_mj,
+            ),
+            norm_power: norm(m.avg_power_w, reference.avg_power_w),
         });
     }
     rows.push(DesignReportRow {
@@ -99,6 +120,8 @@ pub fn report_rows(
         norm_ttft: 1.0,
         norm_tpot: 1.0,
         norm_area: 1.0,
+        norm_energy: 1.0,
+        norm_power: 1.0,
     });
     Ok(rows)
 }
@@ -122,10 +145,12 @@ pub fn render(rows: &[DesignReportRow]) -> String {
         }
         out.push('\n');
     }
-    let metric_rows: [(&str, fn(&DesignReportRow) -> f64); 5] = [
+    let metric_rows: [(&str, fn(&DesignReportRow) -> f64); 7] = [
         ("Normalized TTFT", |r| r.norm_ttft),
         ("Normalized TPOT", |r| r.norm_tpot),
         ("Normalized Area", |r| r.norm_area),
+        ("Normalized Energy/token", |r| r.norm_energy),
+        ("Normalized Power", |r| r.norm_power),
         ("TTFT/Area", |r| r.ttft_per_area()),
         ("TPOT/Area", |r| r.tpot_per_area()),
     ];
@@ -159,9 +184,18 @@ mod tests {
         let a = &rows[0];
         assert!(a.norm_ttft < 1.0 && a.norm_tpot < 1.0 && a.norm_area < 1.0);
         assert!(a.ttft_per_area() > 1.0);
+        // PPA columns: populated and self-consistent.
+        assert!(a.norm_energy > 0.0 && a.norm_power > 0.0);
+        assert!(
+            (a.tokens_per_joule() - 1.0 / a.norm_energy).abs() < 1e-12
+        );
+        let reference = rows.last().unwrap();
+        assert_eq!(reference.norm_energy, 1.0);
         let table = render(&rows);
         assert!(table.contains("Design A") && table.contains("A100"));
         assert!(table.contains("Interconnect Link Count"));
+        assert!(table.contains("Normalized Energy/token"));
+        assert!(table.contains("Normalized Power"));
     }
 
     #[test]

@@ -540,6 +540,7 @@ mod tests {
             tpot_ms: 0.4,
             area_mm2: 834.0,
             stalls: [[8.0, 4.0, 18.0], [0.0, 0.3, 0.1]],
+            ..Default::default()
         }
     }
 
@@ -574,6 +575,7 @@ mod tests {
             tpot_ms: 0.6,
             area_mm2: 900.0,
             stalls: [[20.0, 5.0, 5.0], [0.4, 0.15, 0.05]],
+            ..Default::default()
         };
         let q = prompts::bottleneck_question(
             &crate::workload::GPT3_175B,
@@ -652,6 +654,7 @@ mod tests {
              influence: core_count 0.6\ninfluence: sram_kb 0.05\n",
             "(no failures recorded)\n",
             50.0,
+            None,
         );
         let a = m.complete(&prompts::system_enhanced(), &q);
         let adj = parse::parse_adjustments(&a);
@@ -675,6 +678,7 @@ mod tests {
              influence: core_count 0.2\n",
             "banned: interconnect_link_count +1\n",
             50.0,
+            None,
         );
         let a = m.complete(&prompts::system_enhanced(), &q);
         let adj = parse::parse_adjustments(&a);

@@ -238,6 +238,13 @@ fn phase_name(phase: Phase) -> &'static str {
 
 /// LUMINA Strategy-Engine request: critical path + influence map +
 /// trajectory reflection, asking for a mitigation directive.
+///
+/// `power` is `Some((avg_power_w, power_headroom_w))` only in the
+/// `ppa` objective mode: it renders the power column into the metrics
+/// section. `None` (latency-area) produces the historical prompt
+/// byte-for-byte, which is what keeps default-mode LLM trajectories
+/// pinned.
+#[allow(clippy::too_many_arguments)]
 pub fn strategy_request(
     d: &DesignPoint,
     m: &Metrics,
@@ -246,12 +253,22 @@ pub fn strategy_request(
     influence: &str,
     reflection: &str,
     area_headroom_mm2: f64,
+    power: Option<(f64, f64)>,
 ) -> String {
+    let power_lines = match power {
+        Some((avg_w, headroom_w)) => format!(
+            "avg_power_w = {avg_w:.2}\n\
+             energy_per_token_mj = {:.4}\n\
+             power_headroom_w = {headroom_w:.2}\n",
+            m.energy_per_token_mj,
+        ),
+        None => String::new(),
+    };
     format!(
         "## Task: bottleneck-mitigation-strategy\n\
          ## Current design\n{}\
          ## Current metrics\nTTFT_ms = {:.4}\nTPOT_ms = {:.4}\n\
-         area_mm2 = {:.2}\narea_headroom_mm2 = {:.2}\n\
+         area_mm2 = {:.2}\narea_headroom_mm2 = {:.2}\n{}\
          ## Optimization target\nminimize {}\n\
          ## Critical path\n{}\
          ## Architectural heuristic knowledge (influence factors)\n{}\
@@ -265,6 +282,7 @@ pub fn strategy_request(
         m.tpot_ms,
         m.area_mm2,
         area_headroom_mm2,
+        power_lines,
         m_name(phase),
         critical_path,
         influence,
@@ -282,6 +300,7 @@ mod tests {
             tpot_ms: 0.44,
             area_mm2: 834.0,
             stalls: [[26.79, 3.63, 6.28], [0.0, 0.43, 0.02]],
+            ..Default::default()
         }
     }
 
@@ -346,8 +365,28 @@ mod tests {
             "inf",
             "none",
             120.0,
+            None,
         );
         assert!(q.contains("area_headroom_mm2 = 120.00"));
         assert!(q.contains("RULE 1") && q.contains("RULE 3"));
+        // Latency-area prompts carry no power column.
+        assert!(!q.contains("avg_power_w"));
+    }
+
+    #[test]
+    fn strategy_request_renders_power_column_in_ppa_mode() {
+        let q = strategy_request(
+            &DesignPoint::a100(),
+            &metrics(),
+            Phase::Prefill,
+            "cp",
+            "inf",
+            "none",
+            120.0,
+            Some((219.59, 35.5)),
+        );
+        assert!(q.contains("avg_power_w = 219.59"));
+        assert!(q.contains("power_headroom_w = 35.50"));
+        assert!(q.contains("energy_per_token_mj"));
     }
 }

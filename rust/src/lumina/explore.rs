@@ -121,6 +121,7 @@ mod tests {
             tpot_ms: 1.0,
             area_mm2: 1.0,
             stalls: [[1.0, 0.0, 0.0]; 2],
+            ..Default::default()
         };
         tm.record(first, fake, 0);
         let second = ee.materialize(

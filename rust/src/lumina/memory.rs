@@ -151,6 +151,7 @@ mod tests {
             tpot_ms: tpot,
             area_mm2: area,
             stalls: [[ttft, 0.0, 0.0], [0.0, tpot, 0.0]],
+            ..Default::default()
         }
     }
 

@@ -14,23 +14,32 @@
 //!   20-sample LLMCompass budget. The refinement loop then calibrates
 //!   the priors from observed trajectory data.
 
-use crate::arch::area_mm2;
+use crate::arch::{area_mm2, tdp_w};
 use crate::design::{DesignPoint, DesignSpace, Param, N_PARAMS};
 use crate::eval::{BudgetedEvaluator, Phase};
 use crate::Result;
 
 use super::quale::InfluenceMap;
 
+/// Metric lanes of the AHK influence table.
+pub const AHK_METRICS: usize = 4;
+/// Index of the power lane (average watts / static peak watts).
+pub const METRIC_POWER: usize = 3;
+
 /// Architectural Heuristic Knowledge: the structural map plus numeric
 /// influence factors (relative metric change per +1 grid step).
 #[derive(Debug, Clone)]
 pub struct Ahk {
     pub qual: InfluenceMap,
-    /// `influence[param][metric]`, metric in {0: TTFT, 1: TPOT, 2: area}.
-    /// Positive = metric increases when the parameter is stepped up.
-    pub influence: [[f64; 3]; N_PARAMS],
+    /// `influence[param][metric]`, metric in {0: TTFT, 1: TPOT,
+    /// 2: area, 3: power}. Positive = metric increases when the
+    /// parameter is stepped up. The power column is acquired at zero
+    /// sample cost from the analytic peak-power model (the paper's
+    /// "focus on estimating only power and area" cheap mode) and
+    /// refined from observed `avg_power_w` when a sweep runs.
+    pub influence: [[f64; AHK_METRICS]; N_PARAMS],
     /// How many observations refined each (param, metric) cell.
-    pub refined: [[u32; 3]; N_PARAMS],
+    pub refined: [[u32; AHK_METRICS]; N_PARAMS],
 }
 
 impl Ahk {
@@ -40,12 +49,17 @@ impl Ahk {
         space: &DesignSpace,
         reference: &DesignPoint,
     ) -> Ahk {
-        let mut influence = [[0.0f64; 3]; N_PARAMS];
+        let mut influence = [[0.0f64; AHK_METRICS]; N_PARAMS];
         let ref_area = area_mm2(reference) as f64;
+        let ref_power = tdp_w(reference) as f64;
         for p in Param::ALL {
             let up = space.step(reference, p, 1);
             let da = (area_mm2(&up) as f64 - ref_area) / ref_area;
             influence[p.index()][2] = da;
+            // Power column: analytic peak-power deltas, zero samples
+            // (like area, monotone in every parameter).
+            influence[p.index()][METRIC_POWER] =
+                (tdp_w(&up) as f64 - ref_power) / ref_power;
             // Structural performance priors (negative = reduces time).
             // Primary rate-setting resources per QualE component —
             // channels for memory bandwidth, links for the interconnect,
@@ -75,7 +89,7 @@ impl Ahk {
                 }
             }
         }
-        Ahk { qual, influence, refined: [[0; 3]; N_PARAMS] }
+        Ahk { qual, influence, refined: [[0; AHK_METRICS]; N_PARAMS] }
     }
 
     /// The ±1-step sensitivity sweep around `reference`: the designs to
@@ -115,15 +129,21 @@ impl Ahk {
             base.ttft_ms as f64,
             base.tpot_ms as f64,
             base.area_mm2 as f64,
+            base.avg_power_w as f64,
         ];
+        // Pre-PPA trajectories (e.g. a resumed old checkpoint) carry
+        // zero power fields; skip the power lane rather than divide by
+        // zero.
+        let lanes = if base.avg_power_w > 0.0 { 4 } else { 3 };
         for &(p, delta, idx) in slots {
             let Some((_, m)) = results.get(idx) else { continue };
             let v = [
                 m.ttft_ms as f64,
                 m.tpot_ms as f64,
                 m.area_mm2 as f64,
+                m.avg_power_w as f64,
             ];
-            for metric in 0..3 {
+            for metric in 0..lanes {
                 // Sensitivity per +1 step (mirror -1 observations).
                 let rel =
                     (v[metric] - base_v[metric]) / base_v[metric];
@@ -178,6 +198,11 @@ impl Ahk {
         self.influence[p.index()][2]
     }
 
+    /// Relative power change per +1 grid step of `p`.
+    pub fn power_influence(&self, p: Param) -> f64 {
+        self.influence[p.index()][METRIC_POWER]
+    }
+
     /// Render the quantitative factors for the strategy prompt:
     /// `influence: <param> <benefit-per-step>` for the target metric.
     pub fn render_for(&self, metric: usize) -> String {
@@ -221,6 +246,46 @@ mod tests {
                 ahk.area_influence(p)
             );
         }
+    }
+
+    #[test]
+    fn cheap_mode_power_column_is_analytic_and_ranked() {
+        let (space, reference, qual) = setup();
+        let ahk = Ahk::acquire_cheap(qual, &space, &reference);
+        // Every parameter grows peak power when stepped up (zero
+        // sample cost, like area).
+        for p in Param::ALL {
+            assert!(
+                ahk.power_influence(p) > 0.0,
+                "{p}: {}",
+                ahk.power_influence(p)
+            );
+        }
+        // Doubling the systolic dim quadruples MAC power: it must be
+        // the most power-expensive step by far.
+        let sa = ahk.power_influence(Param::SystolicArray);
+        assert!(sa > ahk.power_influence(Param::MemChannels));
+        assert!(sa > ahk.power_influence(Param::Links));
+        assert!(sa > ahk.power_influence(Param::SramKb));
+    }
+
+    #[test]
+    fn full_mode_refines_the_power_lane_from_observations() {
+        let (space, reference, qual) = setup();
+        let mut sim = RooflineSim::new(GPT3_175B);
+        let mut be = BudgetedEvaluator::new(&mut sim, 64);
+        let ahk =
+            Ahk::acquire_full(qual, &space, &reference, &mut be).unwrap();
+        // The sweep observed avg_power_w deltas for every parameter.
+        for p in Param::ALL {
+            assert!(
+                ahk.refined[p.index()][METRIC_POWER] > 0,
+                "{p} power lane unrefined"
+            );
+        }
+        // More memory channels raise observed power (more HBM draw on
+        // the same traffic in less time).
+        assert!(ahk.power_influence(Param::MemChannels) != 0.0);
     }
 
     #[test]

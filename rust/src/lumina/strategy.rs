@@ -12,6 +12,16 @@
 //! * RULE 4 — systolic-array growth is vetoed for decode-bound targets
 //!   (utilization pitfall).
 //!
+//! In `ppa` objective mode the SE additionally enforces a **power
+//! envelope**: a boost whose projected design exceeds
+//! [`StrategyEngine::power_ceiling_w`] (static peak-power proxy,
+//! [`crate::arch::tdp_w`]) is funded/vetoed exactly like an area
+//! overrun — the same RULE 3 funding loop shrinks the least-critical
+//! resource until both envelopes hold, and an unfundable boost falls
+//! through to the next-best relevant parameter. The default ceiling is
+//! infinite, so latency-area runs are bit-identical to the pre-power
+//! engine.
+//!
 //! The SE also sets the search *aggressiveness* (how many grid steps the
 //! boost takes) from the dominance of the stall.
 
@@ -41,6 +51,12 @@ pub struct StrategyEngine<'m> {
     /// discovered designs all *reduce* area, so LUMINA trades within the
     /// reference envelope).
     pub area_ceiling: f64,
+    /// Absolute power envelope, watts, checked against the static
+    /// peak-power proxy [`crate::arch::tdp_w`] of the projected design.
+    /// Infinite by default (latency-area mode — no power constraint and
+    /// bit-identical directives); the ppa exploration sets it to a
+    /// multiple of the reference design's proxy.
+    pub power_ceiling_w: f64,
     /// Enforce the §5.2 corrective rules on the model's directives
     /// (RULE 1/3/4). Disabled only by the ablation study — without it
     /// the raw LLM adjustments are applied as-is, which is exactly the
@@ -54,6 +70,7 @@ impl<'m> StrategyEngine<'m> {
             model,
             system_prompt: prompts::system_enhanced(),
             area_ceiling: 1.0,
+            power_ceiling_w: f64::INFINITY,
             enforce_rules: true,
         }
     }
@@ -91,6 +108,16 @@ impl<'m> StrategyEngine<'m> {
             .map(str::to_string)
             .unwrap_or_else(|| render_stall_cp(metrics, phase));
 
+        // Power column: rendered only under a finite envelope, so
+        // latency-area prompts stay byte-identical to the pre-power
+        // engine.
+        let power = self.power_ceiling_w.is_finite().then(|| {
+            (
+                metrics.avg_power_w as f64,
+                self.power_ceiling_w
+                    - crate::arch::tdp_w(current) as f64,
+            )
+        });
         let prompt = prompts::strategy_request(
             current,
             metrics,
@@ -99,6 +126,7 @@ impl<'m> StrategyEngine<'m> {
             &ahk.render_for(metric),
             &tm.render_reflection(metric),
             headroom,
+            power,
         );
         let completion =
             self.model.complete(&self.system_prompt, &prompt);
@@ -161,11 +189,17 @@ impl<'m> StrategyEngine<'m> {
         let want_steps = if frac > 0.65 && cheap { 2 } else { 1 };
 
         // ---- RULE 3: fund the boost from the least-critical resources
-        // until the projection fits under the area ceiling. A design
-        // over the reference area can never dominate the reference, so
-        // an unfundable boost is *rejected*: retry with one step, then
-        // with the next-best relevant parameter.
+        // until the projection fits under the area ceiling — and, in
+        // ppa mode, under the power envelope (a boost that blows the
+        // envelope is funded or vetoed exactly like an area overrun).
+        // A design over the reference area can never dominate the
+        // reference, so an unfundable boost is *rejected*: retry with
+        // one step, then with the next-best relevant parameter.
         let ceiling = self.area_ceiling * reference.area_mm2 as f64;
+        let over_envelope = |d: &DesignPoint| {
+            crate::arch::area_mm2(d) as f64 > ceiling
+                || crate::arch::tdp_w(d) as f64 > self.power_ceiling_w
+        };
         let llm_fund = adjustments
             .iter()
             .find(|a| a.steps < 0 && a.param != boost)
@@ -203,9 +237,7 @@ impl<'m> StrategyEngine<'m> {
                 }
                 let mut projected = project(space, current, b, steps, &fund);
                 let mut guard = 0;
-                while crate::arch::area_mm2(&projected) as f64 > ceiling
-                    && guard < 8
-                {
+                while over_envelope(&projected) && guard < 8 {
                     let Some(f) = least_critical(
                         space, &projected, ahk, metric, b, &banned,
                     ) else {
@@ -215,9 +247,7 @@ impl<'m> StrategyEngine<'m> {
                     projected = project(space, current, b, steps, &fund);
                     guard += 1;
                 }
-                if crate::arch::area_mm2(&projected) as f64 <= ceiling
-                    && projected != *current
-                {
+                if !over_envelope(&projected) && projected != *current {
                     return Directive {
                         phase,
                         bottleneck,
@@ -323,6 +353,9 @@ mod tests {
             ttft_ms: 40.0,
             tpot_ms: 0.40,
             area_mm2: 834.0,
+            energy_per_token_mj: 45.0,
+            prefill_energy_mj: 8500.0,
+            avg_power_w: 211.5,
             stalls: [[10.0, 5.0, 25.0], [0.0, 0.35, 0.05]],
         }
     }
@@ -332,6 +365,9 @@ mod tests {
             ttft_ms: 36.7,
             tpot_ms: 0.44,
             area_mm2: 834.0,
+            energy_per_token_mj: 41.4,
+            prefill_energy_mj: 8116.0,
+            avg_power_w: 219.6,
             stalls: [[26.8, 3.6, 6.3], [0.0, 0.43, 0.02]],
         }
     }
@@ -429,6 +465,63 @@ mod tests {
             None,
         );
         assert_ne!(d.boost.0, Param::Links, "{d:?}");
+    }
+
+    #[test]
+    fn power_envelope_funds_or_vetoes_expensive_boosts() {
+        use crate::arch::tdp_w;
+        let (space, reference, ahk, tm) = fixture();
+        let ceiling = tdp_w(&reference) as f64;
+        // Compute-bound prefill would normally boost a tensor-grid
+        // resource; with the power envelope pinned at the reference the
+        // projected design must still fit under it.
+        let compute_bound = Metrics {
+            ttft_ms: 60.0,
+            tpot_ms: 0.44,
+            area_mm2: 834.0,
+            energy_per_token_mj: 41.4,
+            prefill_energy_mj: 9000.0,
+            avg_power_w: 220.0,
+            stalls: [[50.0, 5.0, 5.0], [0.0, 0.43, 0.01]],
+        };
+        let mut model = SimulatedAnalyst::new(ModelProfile::oracle(), 8);
+        let mut se = StrategyEngine::new(&mut model);
+        se.power_ceiling_w = ceiling;
+        let d = se.propose(
+            &space,
+            &reference,
+            &compute_bound,
+            &a100_like(),
+            &ahk,
+            &tm,
+            None,
+        );
+        if d.boost.1 > 0 {
+            let projected =
+                project(&space, &reference, d.boost.0, d.boost.1, &d.fund);
+            assert!(
+                tdp_w(&projected) as f64 <= ceiling * 1.0 + 1e-9,
+                "{d:?} projects {} W over ceiling {ceiling}",
+                tdp_w(&projected)
+            );
+        }
+        // Same directive engine without the envelope: identical inputs
+        // must reproduce the historical (area-only) behaviour.
+        let mut model2 =
+            SimulatedAnalyst::new(ModelProfile::oracle(), 8);
+        let mut se2 = StrategyEngine::new(&mut model2);
+        assert!(se2.power_ceiling_w.is_infinite());
+        let d2 = se2.propose(
+            &space,
+            &reference,
+            &compute_bound,
+            &a100_like(),
+            &ahk,
+            &tm,
+            None,
+        );
+        assert_eq!(d2.phase, d.phase);
+        assert_eq!(d2.bottleneck, d.bottleneck);
     }
 
     #[test]

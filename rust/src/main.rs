@@ -15,7 +15,7 @@
 //! subcommand accepts `--workload <name>` (see `lumina workloads`);
 //! `explore --suite` optimizes the weighted multi-scenario composite.
 
-use lumina::bench_dse::run_benchmark_for;
+use lumina::bench_dse::run_benchmark_mode;
 use lumina::design::{DesignPoint, DesignSpace, Param};
 use lumina::dse::{
     self, driver::CheckpointSink, Driver, NullObserver, Observer,
@@ -26,12 +26,12 @@ use lumina::eval::{
 };
 use lumina::figures::race::{
     aggregate, run_race, run_race_fused, run_race_fused_observed,
-    score_trajectory, EvaluatorKind, RaceConfig,
+    score_log, EvaluatorKind, RaceConfig,
 };
 use lumina::figures::table4::{pick_top2, render, report_rows};
 use lumina::llm::ModelProfile;
 use lumina::lumina::{quale::InfluenceMap, quane::Ahk, Lumina, LuminaConfig};
-use lumina::pareto::Objectives;
+use lumina::pareto::{ObjectiveMode, Objectives};
 use lumina::sim::CompassSim;
 use lumina::util::cli::Args;
 use lumina::workload::{
@@ -49,14 +49,20 @@ USAGE: lumina <command> [--options]
   explore [--budget N] [--seed S] [--model qwen3|phi4|llama3.1]
           [--evaluator roofline|roofline-rs|compass]
           [--workload NAME | --suite] [--verbose]
+          [--objectives latency-area|ppa]
           [--checkpoint PATH [--resume] [--checkpoint-every K]]
   race [--samples N] [--trials T] [--evaluator ...] [--workload NAME]
-       [--fused] [--verbose]
+       [--objectives latency-area|ppa] [--fused] [--verbose]
   benchmark [--scale F] [--seed S] [--workload NAME]
+            [--objectives latency-area|ppa]
   sensitivity [--evaluator ...] [--workload NAME]
-  report [<8 values>]        Table-4 style report (defaults: paper
+  report [<8 values>]        Table-4 style PPA report (defaults: paper
                              designs) [--workload NAME]
   workloads                  list the workload scenario registry
+
+Objective modes: latency-area (default) optimizes the 3-D (TTFT, TPOT,
+area) vector; ppa adds energy/token as a 4th minimized objective, arms
+LUMINA's power envelope, and scores 4-D hypervolume.
 
 Run `make artifacts` first to enable the PJRT roofline evaluator.";
 
@@ -69,6 +75,16 @@ fn evaluator_kind(args: &Args) -> EvaluatorKind {
         "roofline-rs" => EvaluatorKind::RooflineRust,
         _ => EvaluatorKind::RooflinePjrt,
     }
+}
+
+/// Resolve `--objectives` (default latency-area).
+fn objectives_arg(args: &Args) -> lumina::Result<ObjectiveMode> {
+    let name = args.str_or("objectives", "latency-area");
+    ObjectiveMode::parse(&name).ok_or_else(|| {
+        lumina::err!(
+            "unknown objective mode {name:?}; use latency-area or ppa"
+        )
+    })
 }
 
 /// Resolve `--workload` against the scenario registry.
@@ -123,6 +139,14 @@ fn cmd_eval(args: &Args) -> lumina::Result<()> {
         "TTFT {:.4} ms   TPOT {:.5} ms   area {:.1} mm^2",
         m.ttft_ms, m.tpot_ms, m.area_mm2
     );
+    println!(
+        "energy/token {:.3} mJ   prefill energy {:.1} mJ   \
+         avg power {:.1} W   peak (tdp proxy) {:.1} W",
+        m.energy_per_token_mj,
+        m.prefill_energy_mj,
+        m.avg_power_w,
+        lumina::arch::tdp_w(&d)
+    );
     for phase in Phase::ALL {
         let s = &m.stalls[phase.index()];
         println!(
@@ -134,6 +158,24 @@ fn cmd_eval(args: &Args) -> lumina::Result<()> {
             s[2],
             m.dominant_bottleneck(phase)
         );
+    }
+    // The detailed simulator can attribute energy per component.
+    if ev.name() == "compass" {
+        let sim = CompassSim::new(scenario.spec);
+        for phase in Phase::ALL {
+            let b = sim.energy_breakdown(&d, phase);
+            println!(
+                "{:<4} energy: compute {:.2} / sram {:.2} / l2 {:.2} / \
+                 hbm {:.2} / link {:.2} / leakage {:.2} mJ",
+                phase.metric_name(),
+                b.compute_mj,
+                b.sram_mj,
+                b.l2_mj,
+                b.hbm_mj,
+                b.link_mj,
+                b.leakage_mj
+            );
+        }
     }
     Ok(())
 }
@@ -149,6 +191,7 @@ fn run_explore(
 ) -> lumina::Result<(Trajectory, Objectives, Lumina)> {
     let budget = args.usize_or("budget", 100)?;
     let seed = args.u64_or("seed", 2026)?;
+    let objectives = objectives_arg(args)?;
     let model = ModelProfile::by_name(&args.str_or("model", "qwen3"))
         .unwrap_or_else(ModelProfile::qwen3);
     let space = DesignSpace::table1();
@@ -176,11 +219,12 @@ fn run_explore(
             || st.budget != budget
             || st.evaluator != evaluator_name
             || st.workload_fp != workload_fp
+            || st.objectives != objectives
         {
             lumina::bail!(
                 "checkpoint {} was written by a different run \
-                 (method/model/seed/budget/evaluator/workload \
-                 mismatch)",
+                 (method/model/seed/budget/evaluator/workload/\
+                 objectives mismatch)",
                 path.display()
             );
         }
@@ -190,10 +234,12 @@ fn run_explore(
         None
     };
 
-    let reference = ev.eval(&DesignPoint::a100())?.objectives();
+    let reference_m = ev.eval(&DesignPoint::a100())?;
+    let reference = reference_m.objectives();
     let mut lum = Lumina::new(LuminaConfig {
         seed,
         model,
+        objectives,
         ..Default::default()
     });
 
@@ -233,7 +279,7 @@ fn run_explore(
         Box::new(NullObserver)
     };
     let mut driver = Driver::new(&space, observer.as_mut());
-    driver.reference = Some(reference);
+    driver.track(objectives, &reference_m);
     if let Some(path) = &ckpt {
         driver.checkpoint = Some(CheckpointSink {
             path: path.clone(),
@@ -241,6 +287,7 @@ fn run_explore(
             seed,
             evaluator: evaluator_name,
             workload_fp,
+            objectives,
             every: args.usize_or("checkpoint-every", 1)?,
         });
     }
@@ -248,14 +295,14 @@ fn run_explore(
 
     let traj: Trajectory =
         be.log.iter().map(|(d, m)| (*d, m.objectives())).collect();
-    let r = score_trajectory(label, 0, &traj, &reference);
+    let r = score_log(label, 0, &be.log, &reference_m, objectives);
     let hits = be
         .cache_counters()
         .map(|c| format!(", {} cache hits", c.hits))
         .unwrap_or_default();
     println!(
         "explored {} samples ({} simulated{hits}) in {:.2}s  \
-         PHV={:.4}  eff={:.4}  superior={}",
+         [{objectives}] PHV={:.4}  eff={:.4}  superior={}",
         traj.len(),
         be.spent(),
         t0.elapsed().as_secs_f64(),
@@ -367,6 +414,7 @@ fn cmd_race(args: &Args) -> lumina::Result<()> {
         seed: args.u64_or("seed", 2026)?,
         evaluator: evaluator_kind(args),
         workload: workload_arg(args)?.spec,
+        objectives: objectives_arg(args)?,
     };
     let fused = args.flag("fused");
     if args.flag("verbose") && !fused {
@@ -387,10 +435,11 @@ fn cmd_race(args: &Args) -> lumina::Result<()> {
         run_race(&cfg)?
     };
     println!(
-        "{} race: 6 methods x {} trials x {} samples in {:.2}s",
+        "{} race: 6 methods x {} trials x {} samples [{}] in {:.2}s",
         if fused { "fused" } else { "serial" },
         cfg.trials,
         cfg.samples,
+        cfg.objectives,
         t0.elapsed().as_secs_f64()
     );
     println!(
@@ -409,7 +458,8 @@ fn cmd_benchmark(args: &Args) -> lumina::Result<()> {
     let scale = args.f64_or("scale", 1.0)?;
     let seed = args.u64_or("seed", 2026)?;
     let scenario = workload_arg(args)?;
-    let report = run_benchmark_for(
+    let objectives = objectives_arg(args)?;
+    let report = run_benchmark_mode(
         &[
             ModelProfile::phi4(),
             ModelProfile::qwen3(),
@@ -418,8 +468,9 @@ fn cmd_benchmark(args: &Args) -> lumina::Result<()> {
         seed,
         scale,
         &scenario.spec,
+        objectives,
     );
-    println!("workload: {}", scenario.name);
+    println!("workload: {} [{objectives}]", scenario.name);
     println!("{}", report.render_table3());
     Ok(())
 }
@@ -442,16 +493,18 @@ fn cmd_sensitivity(args: &Args) -> lumina::Result<()> {
         be.spent()
     );
     println!(
-        "{:<28} {:>11} {:>11} {:>11}",
-        "parameter", "dTTFT/step", "dTPOT/step", "dArea/step"
+        "{:<28} {:>11} {:>11} {:>11} {:>11}",
+        "parameter", "dTTFT/step", "dTPOT/step", "dArea/step",
+        "dPower/step"
     );
     for p in Param::ALL {
         println!(
-            "{:<28} {:>10.3}% {:>10.3}% {:>10.3}%",
+            "{:<28} {:>10.3}% {:>10.3}% {:>10.3}% {:>10.3}%",
             p.name(),
             ahk.perf_influence(p, 0) * 100.0,
             ahk.perf_influence(p, 1) * 100.0,
-            ahk.area_influence(p) * 100.0
+            ahk.area_influence(p) * 100.0,
+            ahk.power_influence(p) * 100.0
         );
     }
     Ok(())

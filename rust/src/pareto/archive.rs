@@ -25,26 +25,28 @@
 
 use super::{dominates, hypervolume, Objectives};
 
-/// Incrementally maintained Pareto front + hypervolume.
+/// Incrementally maintained Pareto front + hypervolume, generic over the
+/// objective dimensionality (3-D latency-area by default, 4-D for the
+/// `ppa` mode).
 #[derive(Debug, Clone)]
-pub struct ParetoArchive {
-    reference: Objectives,
+pub struct ParetoArchive<const D: usize = 3> {
+    reference: Objectives<D>,
     /// Non-dominated `(id, point)` entries, in insertion order.
-    entries: Vec<(usize, Objectives)>,
+    entries: Vec<(usize, Objectives<D>)>,
     hv: f64,
     pushed: usize,
 }
 
-impl Default for ParetoArchive {
+impl<const D: usize> Default for ParetoArchive<D> {
     /// Front-only archive (see [`ParetoArchive::front_only`]).
     fn default() -> Self {
         Self::front_only()
     }
 }
 
-impl ParetoArchive {
+impl<const D: usize> ParetoArchive<D> {
     /// Archive tracking hypervolume against `reference`.
-    pub fn new(reference: Objectives) -> Self {
+    pub fn new(reference: Objectives<D>) -> Self {
         Self { reference, entries: Vec::new(), hv: 0.0, pushed: 0 }
     }
 
@@ -52,19 +54,19 @@ impl ParetoArchive {
     /// hypervolume stays 0) — for callers that need front membership of
     /// raw, unnormalized objectives.
     pub fn front_only() -> Self {
-        Self::new([f64::INFINITY; 3])
+        Self::new([f64::INFINITY; D])
     }
 
     /// Insert with an auto-assigned id (`0, 1, 2, ...` in push order, so
     /// ids equal trajectory indices). Returns true iff the point joined
     /// the front.
-    pub fn push(&mut self, o: Objectives) -> bool {
+    pub fn push(&mut self, o: Objectives<D>) -> bool {
         self.push_with_id(self.pushed, o)
     }
 
     /// Insert with an explicit caller id. Returns true iff the point
     /// joined the front.
-    pub fn push_with_id(&mut self, id: usize, o: Objectives) -> bool {
+    pub fn push_with_id(&mut self, id: usize, o: Objectives<D>) -> bool {
         self.pushed += 1;
         if self
             .entries
@@ -73,16 +75,16 @@ impl ParetoArchive {
         {
             return false;
         }
-        if (0..3).all(|i| o[i] < self.reference[i])
+        if (0..D).all(|i| o[i] < self.reference[i])
             && self.reference.iter().all(|r| r.is_finite())
         {
             let boxed: f64 =
-                (0..3).map(|i| self.reference[i] - o[i]).product();
-            let clipped: Vec<Objectives> = self
+                (0..D).map(|i| self.reference[i] - o[i]).product();
+            let clipped: Vec<Objectives<D>> = self
                 .entries
                 .iter()
                 .map(|(_, p)| {
-                    [p[0].max(o[0]), p[1].max(o[1]), p[2].max(o[2])]
+                    std::array::from_fn(|i| p[i].max(o[i]))
                 })
                 .collect();
             let covered = hypervolume(&clipped, &self.reference);
@@ -106,7 +108,7 @@ impl ParetoArchive {
     }
 
     /// Objective vectors of the current front, in insertion order.
-    pub fn front(&self) -> Vec<Objectives> {
+    pub fn front(&self) -> Vec<Objectives<D>> {
         self.entries.iter().map(|(_, p)| *p).collect()
     }
 
@@ -124,7 +126,7 @@ impl ParetoArchive {
         self.pushed == 0
     }
 
-    pub fn reference(&self) -> &Objectives {
+    pub fn reference(&self) -> &Objectives<D> {
         &self.reference
     }
 }
@@ -161,6 +163,34 @@ mod tests {
         ar.push([1.5, 1.5, 1.5]);
         ar.push([3.0, 0.5, 0.5]);
         assert!((ar.hypervolume() - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn four_dimensional_archive_tracks_hv_incrementally() {
+        // The ppa-mode archive: same update rule, one more lane. HV of
+        // each prefix must match a from-scratch batch hypervolume.
+        use crate::pareto::hypervolume;
+        let r = [2.0, 2.0, 2.0, 2.0];
+        let pts: Vec<[f64; 4]> = vec![
+            [1.0, 1.0, 1.0, 1.0],
+            [0.5, 1.5, 1.5, 1.5],
+            [1.5, 0.5, 1.5, 0.5],
+            [1.2, 1.2, 1.2, 1.2], // dominated by the first point
+            [3.0, 0.1, 0.1, 0.1], // on the front, outside the ref box
+        ];
+        let mut ar: ParetoArchive<4> = ParetoArchive::new(r);
+        for (i, p) in pts.iter().enumerate() {
+            ar.push(*p);
+            let batch = hypervolume(&pts[..=i], &r);
+            assert!(
+                (ar.hypervolume() - batch).abs() < 1e-9,
+                "prefix {i}: incremental {} vs batch {batch}",
+                ar.hypervolume()
+            );
+        }
+        // Front keeps the out-of-box point (fronts are reference-free);
+        // only the dominated one is excluded.
+        assert_eq!(ar.front_len(), 4);
     }
 
     #[test]

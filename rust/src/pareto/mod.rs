@@ -1,22 +1,81 @@
 //! Pareto analytics: dominance, frontier extraction, hypervolume (PHV) and
 //! the paper's Sample Efficiency metric.
 //!
-//! Conventions: all objectives are **minimized** (TTFT ms, TPOT ms, area
-//! mm^2). PHV is computed against a reference point `r`; only points that
-//! dominate `r` contribute. Objectives are normalized by the A100
-//! reference before PHV so the paper's "normalized PHV" comparisons hold.
+//! Conventions: all objectives are **minimized**. The objective vector is
+//! dimension-generic (`Objectives<D>`, a `[f64; D]`): the default 3-D
+//! vector is (TTFT ms, TPOT ms, area mm^2) and the 4-D `ppa` mode appends
+//! energy/token mJ (see [`ObjectiveMode`]). PHV is computed against a
+//! reference point `r`; only points that dominate `r` contribute.
+//! Objectives are normalized by the A100 reference before PHV so the
+//! paper's "normalized PHV" comparisons hold.
+//!
+//! The 3-D hot paths (Fenwick skyline front sweep, slab-sliced exact
+//! hypervolume) are kept verbatim and dispatched to from the generic
+//! entry points, so default-mode results are bit-identical to the
+//! pre-generalization implementation; other dimensions use a pairwise
+//! front and a recursive last-axis slicing hypervolume, cross-checked by
+//! a Monte-Carlo oracle at D=3 and D=4.
 
 pub mod archive;
 
 pub use archive::ParetoArchive;
 
-/// An objective vector (minimize each lane).
-pub type Objectives = [f64; 3];
+/// An objective vector (minimize each lane). `Objectives` with no
+/// argument is the historical 3-D (TTFT, TPOT, area) vector.
+pub type Objectives<const D: usize = 3> = [f64; D];
+
+/// Which objective vector exploration optimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ObjectiveMode {
+    /// 3-D (TTFT, TPOT, area) — the historical default.
+    #[default]
+    LatencyArea,
+    /// 4-D (TTFT, TPOT, area, energy/token) — full PPA.
+    Ppa,
+}
+
+impl ObjectiveMode {
+    pub const ALL: [ObjectiveMode; 2] =
+        [ObjectiveMode::LatencyArea, ObjectiveMode::Ppa];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ObjectiveMode::LatencyArea => "latency-area",
+            ObjectiveMode::Ppa => "ppa",
+        }
+    }
+
+    /// Objective-vector dimensionality.
+    pub fn dim(self) -> usize {
+        match self {
+            ObjectiveMode::LatencyArea => 3,
+            ObjectiveMode::Ppa => 4,
+        }
+    }
+
+    /// Parse a CLI/`SessionState` name.
+    pub fn parse(s: &str) -> Option<ObjectiveMode> {
+        match s {
+            "latency-area" => Some(ObjectiveMode::LatencyArea),
+            "ppa" => Some(ObjectiveMode::Ppa),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ObjectiveMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// True iff `a` dominates `b` (<= everywhere, < somewhere).
-pub fn dominates(a: &Objectives, b: &Objectives) -> bool {
+pub fn dominates<const D: usize>(
+    a: &Objectives<D>,
+    b: &Objectives<D>,
+) -> bool {
     let mut strictly = false;
-    for i in 0..3 {
+    for i in 0..D {
         if a[i] > b[i] {
             return false;
         }
@@ -29,13 +88,29 @@ pub fn dominates(a: &Objectives, b: &Objectives) -> bool {
 
 /// Indices of the non-dominated subset (first occurrence wins on ties).
 ///
-/// Sort-based 3-objective skyline sweep, O(n log n): process points in
-/// lexicographic `(x, y, z, index)` order — every dominator of a point
-/// sorts strictly before it — and keep a Fenwick tree of the minimum `z`
-/// seen per compressed `y` rank. A point is dominated (or a repeat of an
-/// earlier identical point) exactly when some already-processed point
-/// with `y <= y_q` has `z <= z_q`.
-pub fn pareto_front(points: &[Objectives]) -> Vec<usize> {
+/// D=3 dispatches to the sort-based Fenwick skyline sweep (O(n log n),
+/// unchanged from the 3-D-only implementation); other dimensions use the
+/// pairwise oracle (O(n^2) — D=4 sets are front-reduction inputs of a
+/// few hundred points, far from the sweep's break-even).
+pub fn pareto_front<const D: usize>(points: &[Objectives<D>]) -> Vec<usize> {
+    if D == 3 {
+        return pareto_front3(points);
+    }
+    pareto_front_pairwise(points)
+}
+
+/// The 3-objective skyline sweep: process points in lexicographic
+/// `(x, y, z, index)` order — every dominator of a point sorts strictly
+/// before it — and keep a Fenwick tree of the minimum `z` seen per
+/// compressed `y` rank. A point is dominated (or a repeat of an earlier
+/// identical point) exactly when some already-processed point with
+/// `y <= y_q` has `z <= z_q`.
+///
+/// Generic over `D` only so the `D == 3` dispatch avoids copying the
+/// input (lanes 0..3 are indexed directly; callers guarantee `D == 3`,
+/// where the whole-array lexicographic sort is exactly the historical
+/// 3-lane sort).
+fn pareto_front3<const D: usize>(points: &[Objectives<D>]) -> Vec<usize> {
     let n = points.len();
     if n <= 1 {
         return (0..n).collect();
@@ -82,8 +157,11 @@ pub fn pareto_front(points: &[Objectives]) -> Vec<usize> {
 }
 
 /// Reference O(n^2) pairwise-dominance front — the oracle the sweep is
-/// property-tested against (`front_sweep_matches_pairwise_oracle`).
-pub fn pareto_front_pairwise(points: &[Objectives]) -> Vec<usize> {
+/// property-tested against (`front_sweep_matches_pairwise_oracle`) and
+/// the execution path for D != 3.
+pub fn pareto_front_pairwise<const D: usize>(
+    points: &[Objectives<D>],
+) -> Vec<usize> {
     let mut front = Vec::new();
     'outer: for (i, p) in points.iter().enumerate() {
         for (j, q) in points.iter().enumerate() {
@@ -96,28 +174,45 @@ pub fn pareto_front_pairwise(points: &[Objectives]) -> Vec<usize> {
     front
 }
 
-/// Exact 3-D hypervolume dominated by `points` w.r.t. reference `r`
-/// (minimization). Points not strictly better than `r` in all objectives
-/// contribute nothing. O(n^2 log n) slicing — fine for n <= a few 1000.
-pub fn hypervolume(points: &[Objectives], r: &Objectives) -> f64 {
+/// Exact D-dimensional hypervolume dominated by `points` w.r.t. reference
+/// `r` (minimization). Points not strictly better than `r` in all
+/// objectives contribute nothing. D=3 runs the historical slab-slicing
+/// implementation verbatim (bit-identical results); other dimensions
+/// recurse on the last axis down to the same 2-D staircase base case.
+pub fn hypervolume<const D: usize>(
+    points: &[Objectives<D>],
+    r: &Objectives<D>,
+) -> f64 {
     // Keep only points that improve on the reference everywhere.
-    let mut pts: Vec<Objectives> = points
+    let mut pts: Vec<Objectives<D>> = points
         .iter()
-        .filter(|p| (0..3).all(|i| p[i] < r[i]))
+        .filter(|p| (0..D).all(|i| p[i] < r[i]))
         .copied()
         .collect();
     if pts.is_empty() {
         return 0.0;
     }
     // Dominated points contribute no volume; reducing to the front first
-    // cuts the O(n^2 log n) sweep to the (much smaller) front size.
+    // cuts the slicing sweep to the (much smaller) front size.
     // (§Perf iteration 1: 624us -> ~60us on 1,000-point trajectories.)
     if pts.len() > 64 {
         pts = pareto_front(&pts).into_iter().map(|i| pts[i]).collect();
     }
-    // Slice along z: between consecutive z-levels, the xy cross-section is
-    // the union of rectangles [x_i, rx] x [y_i, ry] for points with z_i <=
-    // slab bottom.
+    if D == 3 {
+        return hv3(&pts, r);
+    }
+    let dyn_pts: Vec<Vec<f64>> =
+        pts.iter().map(|p| p.to_vec()).collect();
+    hv_slices(&dyn_pts, r)
+}
+
+/// The historical 3-D implementation: slice along z — between
+/// consecutive z-levels, the xy cross-section is the union of rectangles
+/// [x_i, rx] x [y_i, ry] for points with z_i <= slab bottom.
+/// O(n^2 log n) slicing — fine for n <= a few 1000. Generic over `D`
+/// only so the `D == 3` dispatch avoids copying (callers guarantee
+/// `D == 3`; lanes 0..3 are indexed directly).
+fn hv3<const D: usize>(pts: &[Objectives<D>], r: &Objectives<D>) -> f64 {
     let mut zs: Vec<f64> = pts.iter().map(|p| p[2]).collect();
     zs.push(r[2]);
     zs.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -132,6 +227,40 @@ pub fn hypervolume(points: &[Objectives], r: &Objectives) -> f64 {
             .map(|p| [p[0], p[1]])
             .collect();
         vol += area2d(&live, r[0], r[1]) * (z1 - z0);
+    }
+    vol
+}
+
+/// Recursive last-axis slicing for D >= 3 (dim read from `r.len()`),
+/// bottoming out in the same 2-D staircase the 3-D path uses. Points are
+/// assumed pre-filtered to the reference box by [`hypervolume`].
+fn hv_slices(pts: &[Vec<f64>], r: &[f64]) -> f64 {
+    let d = r.len();
+    if pts.is_empty() {
+        return 0.0;
+    }
+    if d == 1 {
+        let min = pts.iter().map(|p| p[0]).fold(f64::INFINITY, f64::min);
+        return r[0] - min;
+    }
+    if d == 2 {
+        let xy: Vec<[f64; 2]> =
+            pts.iter().map(|p| [p[0], p[1]]).collect();
+        return area2d(&xy, r[0], r[1]);
+    }
+    let mut zs: Vec<f64> = pts.iter().map(|p| p[d - 1]).collect();
+    zs.push(r[d - 1]);
+    zs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    zs.dedup();
+
+    let mut vol = 0.0;
+    for w in zs.windows(2) {
+        let live: Vec<Vec<f64>> = pts
+            .iter()
+            .filter(|p| p[d - 1] <= w[0])
+            .map(|p| p[..d - 1].to_vec())
+            .collect();
+        vol += hv_slices(&live, &r[..d - 1]) * (w[1] - w[0]);
     }
     vol
 }
@@ -160,38 +289,67 @@ fn area2d(pts: &[[f64; 2]], rx: f64, ry: f64) -> f64 {
     area
 }
 
+/// Monte-Carlo hypervolume estimate — the brute-force oracle the exact
+/// implementations are cross-checked against at D=3 and D=4 (and what
+/// the `--objectives ppa` acceptance test compares an explored 4-D
+/// front's PHV to).
+pub fn hypervolume_mc<const D: usize>(
+    points: &[Objectives<D>],
+    r: &Objectives<D>,
+    samples: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = crate::stats::rng::Pcg32::new(seed);
+    let mut hits = 0usize;
+    for _ in 0..samples {
+        let x: Objectives<D> =
+            std::array::from_fn(|i| rng.f64() * r[i]);
+        if points
+            .iter()
+            .any(|p| (0..D).all(|i| p[i] < r[i] && p[i] <= x[i]))
+        {
+            hits += 1;
+        }
+    }
+    let box_vol: f64 = r.iter().product();
+    hits as f64 / samples as f64 * box_vol
+}
+
 /// Paper §5.3: fraction of evaluated designs strictly better than the
 /// reference point in **all** objectives.
-pub fn sample_efficiency(points: &[Objectives], reference: &Objectives) -> f64 {
+pub fn sample_efficiency<const D: usize>(
+    points: &[Objectives<D>],
+    reference: &Objectives<D>,
+) -> f64 {
     if points.is_empty() {
         return 0.0;
     }
     let better = points
         .iter()
-        .filter(|p| (0..3).all(|i| p[i] < reference[i]))
+        .filter(|p| (0..D).all(|i| p[i] < reference[i]))
         .count();
     better as f64 / points.len() as f64
 }
 
 /// Count of designs strictly better than the reference in all objectives.
-pub fn superior_count(points: &[Objectives], reference: &Objectives) -> usize {
+pub fn superior_count<const D: usize>(
+    points: &[Objectives<D>],
+    reference: &Objectives<D>,
+) -> usize {
     points
         .iter()
-        .filter(|p| (0..3).all(|i| p[i] < reference[i]))
+        .filter(|p| (0..D).all(|i| p[i] < reference[i]))
         .count()
 }
 
 /// Normalize objective vectors by a baseline (A100), so PHV is unitless.
-pub fn normalize(points: &[Objectives], baseline: &Objectives) -> Vec<Objectives> {
+pub fn normalize<const D: usize>(
+    points: &[Objectives<D>],
+    baseline: &Objectives<D>,
+) -> Vec<Objectives<D>> {
     points
         .iter()
-        .map(|p| {
-            [
-                p[0] / baseline[0],
-                p[1] / baseline[1],
-                p[2] / baseline[2],
-            ]
-        })
+        .map(|p| std::array::from_fn(|i| p[i] / baseline[i]))
         .collect()
 }
 
@@ -199,6 +357,12 @@ pub fn normalize(points: &[Objectives], baseline: &Objectives) -> Vec<Objectives
 /// every normalized objective (designs worse than 2x A100 in any metric
 /// contribute no volume).
 pub const PHV_REF: Objectives = [2.0, 2.0, 2.0];
+
+/// [`PHV_REF`] at any dimensionality (the 4-D `ppa` races use
+/// `phv_ref::<4>()`).
+pub const fn phv_ref<const D: usize>() -> Objectives<D> {
+    [2.0; D]
+}
 
 #[cfg(test)]
 mod tests {
@@ -212,6 +376,22 @@ mod tests {
         assert!(dominates(&[1.0, 2.0, 2.0], &[2.0, 2.0, 2.0]));
         assert!(!dominates(&[2.0, 2.0, 2.0], &[2.0, 2.0, 2.0]));
         assert!(!dominates(&[1.0, 3.0, 1.0], &[2.0, 2.0, 2.0]));
+        // Any dimensionality.
+        assert!(dominates(&[1.0, 1.0, 1.0, 1.0], &[1.0, 1.0, 1.0, 2.0]));
+        assert!(!dominates(
+            &[1.0, 1.0, 1.0, 3.0],
+            &[2.0, 2.0, 2.0, 2.0]
+        ));
+    }
+
+    #[test]
+    fn objective_mode_roundtrip() {
+        for m in ObjectiveMode::ALL {
+            assert_eq!(ObjectiveMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ObjectiveMode::parse("bogus"), None);
+        assert_eq!(ObjectiveMode::default().dim(), 3);
+        assert_eq!(ObjectiveMode::Ppa.dim(), 4);
     }
 
     #[test]
@@ -231,6 +411,18 @@ mod tests {
     fn front_dedups_ties() {
         let pts = vec![[1.0, 1.0, 1.0], [1.0, 1.0, 1.0]];
         assert_eq!(pareto_front(&pts), vec![0]);
+    }
+
+    #[test]
+    fn front_4d_matches_pairwise_semantics() {
+        let pts: Vec<Objectives<4>> = vec![
+            [1.0, 4.0, 4.0, 4.0],
+            [4.0, 1.0, 4.0, 4.0],
+            [4.0, 4.0, 4.0, 1.0],
+            [5.0, 5.0, 5.0, 5.0], // dominated
+            [1.0, 4.0, 4.0, 4.0], // duplicate of 0
+        ];
+        assert_eq!(pareto_front(&pts), vec![0, 1, 2]);
     }
 
     #[test]
@@ -271,6 +463,11 @@ mod tests {
     fn hv_single_point_box() {
         let hv = hypervolume(&[[1.0, 1.0, 1.0]], &[2.0, 2.0, 2.0]);
         assert!((hv - 1.0).abs() < 1e-12);
+        let hv4 = hypervolume(
+            &[[1.0, 1.0, 1.0, 1.5]],
+            &[2.0, 2.0, 2.0, 2.0],
+        );
+        assert!((hv4 - 0.5).abs() < 1e-12, "hv4={hv4}");
     }
 
     #[test]
@@ -301,6 +498,26 @@ mod tests {
             &[2.0, 2.0, 2.0],
         );
         assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hv_4d_degenerate_axis_reduces_to_3d() {
+        // Points sharing the 4th coordinate at c: HV4 = HV3 * (r3 - c).
+        let pts3: Vec<Objectives> =
+            vec![[0.3, 1.2, 0.9], [1.0, 0.2, 1.4], [0.8, 0.8, 0.4]];
+        let r3 = [1.8, 1.6, 1.7];
+        let c = 0.5;
+        let pts4: Vec<Objectives<4>> = pts3
+            .iter()
+            .map(|p| [p[0], p[1], p[2], c])
+            .collect();
+        let r4 = [r3[0], r3[1], r3[2], 2.0];
+        let hv3 = hypervolume(&pts3, &r3);
+        let hv4 = hypervolume(&pts4, &r4);
+        assert!(
+            (hv4 - hv3 * (2.0 - c)).abs() < 1e-9,
+            "hv4={hv4} hv3={hv3}"
+        );
     }
 
     #[test]
@@ -350,28 +567,49 @@ mod tests {
         ];
         let r = [1.8, 1.6, 1.7];
         let exact = hypervolume(&pts, &r);
-        // Monte-Carlo estimate.
-        let mut rng = Pcg32::new(99);
-        let n = 200_000;
-        let mut hits = 0usize;
-        for _ in 0..n {
-            let x = [
-                rng.f64() * r[0],
-                rng.f64() * r[1],
-                rng.f64() * r[2],
-            ];
-            if pts
-                .iter()
-                .any(|p| (0..3).all(|i| p[i] < r[i] && p[i] <= x[i]))
-            {
-                hits += 1;
-            }
-        }
-        let mc = hits as f64 / n as f64 * (r[0] * r[1] * r[2]);
+        let mc = hypervolume_mc(&pts, &r, 200_000, 99);
         assert!(
             (exact - mc).abs() / exact < 0.02,
             "exact={exact} mc={mc}"
         );
+    }
+
+    #[test]
+    fn hv_4d_monte_carlo_agreement_on_random_fronts() {
+        // The satellite invariant: the const-generic exact HV at D=4
+        // (recursive slicing) agrees with the brute-force Monte-Carlo
+        // oracle on random point sets; and at D=3 the generic entry
+        // point (the historical implementation) agrees with both.
+        let mut rng = Pcg32::new(2026);
+        for case in 0..4u64 {
+            let n = 3 + rng.range_usize(0, 8);
+            let pts4: Vec<Objectives<4>> = (0..n)
+                .map(|_| {
+                    std::array::from_fn(|_| 0.1 + rng.f64() * 1.7)
+                })
+                .collect();
+            let r4 = [1.9, 1.9, 1.9, 1.9];
+            let exact = hypervolume(&pts4, &r4);
+            if exact <= 1e-6 {
+                continue;
+            }
+            let mc = hypervolume_mc(&pts4, &r4, 300_000, 7 + case);
+            assert!(
+                (exact - mc).abs() / exact < 0.03,
+                "case {case}: exact={exact} mc={mc}"
+            );
+            // 3-D projection cross-check with shared 4th coordinate.
+            let pts3: Vec<Objectives> =
+                pts4.iter().map(|p| [p[0], p[1], p[2]]).collect();
+            let r3 = [1.9, 1.9, 1.9];
+            let exact3 = hypervolume(&pts3, &r3);
+            let mc3 = hypervolume_mc(&pts3, &r3, 300_000, 77 + case);
+            assert!(
+                exact3 <= 1e-6
+                    || (exact3 - mc3).abs() / exact3 < 0.03,
+                "case {case}: exact3={exact3} mc3={mc3}"
+            );
+        }
     }
 
     #[test]
@@ -392,5 +630,14 @@ mod tests {
         let pts = vec![[2.0, 4.0, 8.0]];
         let n = normalize(&pts, &[2.0, 2.0, 2.0]);
         assert_eq!(n[0], [1.0, 2.0, 4.0]);
+        let pts4: Vec<Objectives<4>> = vec![[2.0, 4.0, 8.0, 16.0]];
+        let n4 = normalize(&pts4, &[2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(n4[0], [1.0, 2.0, 4.0, 8.0]);
+    }
+
+    #[test]
+    fn phv_ref_matches_constant() {
+        assert_eq!(phv_ref::<3>(), PHV_REF);
+        assert_eq!(phv_ref::<4>(), [2.0; 4]);
     }
 }

@@ -140,16 +140,34 @@ mod real {
             let metrics = metrics_lit.to_vec::<f32>()?;
             let stalls = stalls_lit.to_vec::<f32>()?;
 
+            // Per-design phase-report stride: pre-PPA artifacts emit
+            // [B,2,3] (stall buckets only), current ones [B,2,4] with
+            // the phase energy (mJ) in column 3. Old artifacts load
+            // with zero energy rather than failing.
+            let cols = stalls.len() / (batch * 2);
             self.evaluated += designs.len() as u64;
             let mut out = Vec::with_capacity(designs.len());
             for i in 0..designs.len() {
                 let m = &metrics[i * 3..i * 3 + 3];
-                let s = &stalls[i * 6..i * 6 + 6];
+                let s = &stalls[i * 2 * cols..(i + 1) * 2 * cols];
+                let (e_pf, e_dc) = if cols > 3 {
+                    (s[3], s[cols + 3])
+                } else {
+                    (0.0, 0.0)
+                };
                 out.push(Metrics {
                     ttft_ms: m[0],
                     tpot_ms: m[1],
                     area_mm2: m[2],
-                    stalls: [[s[0], s[1], s[2]], [s[3], s[4], s[5]]],
+                    energy_per_token_mj: e_dc,
+                    prefill_energy_mj: e_pf,
+                    avg_power_w: crate::arch::power::avg_power_w(
+                        e_pf, e_dc, m[0], m[1],
+                    ),
+                    stalls: [
+                        [s[0], s[1], s[2]],
+                        [s[cols], s[cols + 1], s[cols + 2]],
+                    ],
                 });
             }
             Ok(out)

@@ -21,6 +21,10 @@ pub struct OpRecord {
     pub compute_s: f32,
     pub memory_s: f32,
     pub network_s: f32,
+    /// Dynamic energy attributed to this operator, joules (compute +
+    /// SRAM staging + memory traffic + link traffic; leakage is
+    /// phase-level, see [`CriticalPath::phase_energy_j`]'s caller).
+    pub energy_j: f32,
     /// PE-grid utilization if this was a tensor op, else 0.
     pub utilization: f32,
     /// For network ops: latency-bound collectives can't be fixed with
@@ -42,6 +46,13 @@ impl CriticalPath {
     /// Total wall time of a phase, seconds.
     pub fn phase_total_s(&self, phase: Phase) -> f32 {
         self.phase_ops(phase).map(|o| o.wall_s).sum()
+    }
+
+    /// Total dynamic energy of a phase, joules (sum of the per-op
+    /// attributions; the engine adds area-proportional leakage on top
+    /// when it assembles `Metrics`).
+    pub fn phase_energy_j(&self, phase: Phase) -> f32 {
+        self.phase_ops(phase).map(|o| o.energy_j).sum()
     }
 
     /// Stall stack of a phase: seconds per component.
@@ -115,6 +126,7 @@ mod tests {
             compute_s: 0.0,
             memory_s: 0.0,
             network_s: 0.0,
+            energy_j: 0.1,
             utilization: 0.5,
             latency_bound: false,
         }
@@ -138,6 +150,13 @@ mod tests {
         assert!((cp.phase_total_s(Phase::Prefill) - 9.0).abs() < 1e-6);
         let s = cp.stall_stack(Phase::Prefill);
         assert_eq!(s, [7.0, 0.0, 2.0]);
+        // Per-op energies sum per phase (3 prefill ops at 0.1 J each).
+        assert!(
+            (cp.phase_energy_j(Phase::Prefill) - 0.3).abs() < 1e-6
+        );
+        assert!(
+            (cp.phase_energy_j(Phase::Decode) - 0.2).abs() < 1e-6
+        );
     }
 
     #[test]

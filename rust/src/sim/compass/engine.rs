@@ -10,7 +10,7 @@
 //! the historical per-evaluation construction, so results are
 //! bit-identical to the pre-hoisting engine.
 
-use crate::arch::{area_mm2, constants as c};
+use crate::arch::{area_mm2, constants as c, EnergyBreakdown};
 use crate::design::{DesignPoint, Param};
 use crate::eval::{Bottleneck, EvalOne, Evaluator, Metrics, Phase};
 use crate::workload::{
@@ -25,7 +25,9 @@ use super::tiles::map_matmul;
 
 /// Per-operator launch/dispatch overhead in the detailed model (larger
 /// than the roofline's: includes kernel argument setup and wave ramp-up).
-const LAUNCH_OVERHEAD_S: f32 = 3.0e-6;
+/// Public so the stall/energy accounting invariant tests can subtract it
+/// from per-op wall times.
+pub const LAUNCH_OVERHEAD_S: f32 = 3.0e-6;
 
 /// Design-independent invariants of one operator, hoisted out of the
 /// per-design evaluation loop.
@@ -36,6 +38,9 @@ enum Prepped {
         n: f32,
         k: f32,
         count: f32,
+        /// Total MAC work: `2 * m * n * k * count` FLOPs (hoisted for
+        /// the per-op energy attribution).
+        flops: f32,
         /// Streamed (weight-side) bytes: `k * n * count` in fp16.
         w_bytes: f32,
         /// Activation bytes: `(m*k + m*n) * count` in fp16.
@@ -85,11 +90,13 @@ impl PreppedOp {
                     TrafficClass::StreamingWeights
                 };
                 let resident = (m * k * c::FP16_BYTES).min(w_bytes);
+                let flops = 2.0 * m * n * k * count;
                 Prepped::Matmul {
                     m,
                     n,
                     k,
                     count,
+                    flops,
                     w_bytes,
                     a_bytes,
                     resident,
@@ -108,6 +115,94 @@ impl PreppedOp {
             },
         };
         PreppedOp { name: op.name, phase, prep }
+    }
+}
+
+/// Per-op dynamic energy components, joules. The **single** pricing
+/// implementation: the hot path sums it into [`OpRecord::energy_j`]
+/// (via `run_op`) and the report-path [`CompassSim::energy_breakdown`]
+/// aggregates the same components, so the two can never drift.
+struct OpEnergy {
+    compute: f32,
+    sram: f32,
+    hbm: f32,
+    l2: f32,
+    link: f32,
+}
+
+impl OpEnergy {
+    fn total(&self) -> f32 {
+        self.compute + self.sram + self.hbm + self.l2 + self.link
+    }
+}
+
+/// Price one operator's dynamic energy from its hoisted invariants and
+/// the design's memory/interconnect models (the same hit split and
+/// inflation factor the timing model charges).
+fn op_energy(
+    prep: &Prepped,
+    mem: &MemorySystem,
+    icn: &Interconnect,
+) -> OpEnergy {
+    match *prep {
+        Prepped::Matmul {
+            flops,
+            w_bytes,
+            a_bytes,
+            resident,
+            w_class,
+            ..
+        } => {
+            let inflation =
+                if resident <= mem.l2_bytes { 1.0 } else { 1.6 };
+            let (w_hbm, w_l2) = mem.energy_split_j(
+                w_class,
+                w_bytes * inflation,
+                w_bytes,
+            );
+            let (a_hbm, a_l2) = mem.energy_split_j(
+                TrafficClass::Activations,
+                a_bytes,
+                a_bytes,
+            );
+            OpEnergy {
+                compute: flops * c::E_J_PER_FLOP_SYSTOLIC,
+                sram: flops
+                    * c::SRAM_BYTES_PER_FLOP
+                    * c::E_J_PER_BYTE_SRAM,
+                hbm: w_hbm + a_hbm,
+                l2: w_l2 + a_l2,
+                link: 0.0,
+            }
+        }
+        Prepped::Vector { flops, bytes, .. } => {
+            let (hbm, l2) = mem.energy_split_j(
+                TrafficClass::Activations,
+                bytes,
+                bytes,
+            );
+            OpEnergy {
+                compute: flops * c::E_J_PER_FLOP_VECTOR,
+                sram: 0.0,
+                hbm,
+                l2,
+                link: 0.0,
+            }
+        }
+        Prepped::Comm { payload, bytes } => {
+            let (hbm, l2) = mem.energy_split_j(
+                TrafficClass::Activations,
+                bytes,
+                bytes,
+            );
+            OpEnergy {
+                compute: 0.0,
+                sram: 0.0,
+                hbm,
+                l2,
+                link: icn.allreduce_energy_j(payload),
+            }
+        }
     }
 }
 
@@ -163,16 +258,68 @@ impl CompassSim {
 
         let pf = cp.stall_stack(Phase::Prefill);
         let dc = cp.stall_stack(Phase::Decode);
+        let area = area_mm2(d);
+        let ttft_ms = cp.phase_total_s(Phase::Prefill) * 1e3;
+        let tpot_ms = cp.phase_total_s(Phase::Decode) * 1e3;
+        // Phase energy = per-op dynamic attributions + area-proportional
+        // leakage over the phase wall time (W * ms = mJ).
+        let prefill_energy_mj = cp.phase_energy_j(Phase::Prefill) * 1e3
+            + c::LEAKAGE_W_PER_MM2 * area * ttft_ms;
+        let energy_per_token_mj = cp.phase_energy_j(Phase::Decode) * 1e3
+            + c::LEAKAGE_W_PER_MM2 * area * tpot_ms;
         let metrics = Metrics {
-            ttft_ms: cp.phase_total_s(Phase::Prefill) * 1e3,
-            tpot_ms: cp.phase_total_s(Phase::Decode) * 1e3,
-            area_mm2: area_mm2(d),
+            ttft_ms,
+            tpot_ms,
+            area_mm2: area,
+            energy_per_token_mj,
+            prefill_energy_mj,
+            avg_power_w: crate::arch::power::avg_power_w(
+                prefill_energy_mj,
+                energy_per_token_mj,
+                ttft_ms,
+                tpot_ms,
+            ),
             stalls: [
                 [pf[0] * 1e3, pf[1] * 1e3, pf[2] * 1e3],
                 [dc[0] * 1e3, dc[1] * 1e3, dc[2] * 1e3],
             ],
         };
         (metrics, cp)
+    }
+
+    /// Component-wise energy attribution of one phase — the PPA report
+    /// path (Table 4 / `lumina eval`), not the hot loop. The totals
+    /// match the per-op accounting of [`CompassSim::evaluate_detailed`]:
+    /// `breakdown.total_mj() == Metrics::phase_energy_mj(phase)` up to
+    /// f32 accumulation order.
+    pub fn energy_breakdown(
+        &self,
+        d: &DesignPoint,
+        phase: Phase,
+    ) -> EnergyBreakdown {
+        let mem = MemorySystem::new(d);
+        let icn = Interconnect::new(d, self.spec.tp);
+        let mut out = EnergyBreakdown::default();
+        let mut phase_s = 0f32;
+        for op in self.prepped.iter().filter(|o| o.phase == phase) {
+            let e = op_energy(&op.prep, &mem, &icn);
+            out.compute_mj += e.compute * 1e3;
+            out.sram_mj += e.sram * 1e3;
+            out.hbm_mj += e.hbm * 1e3;
+            out.l2_mj += e.l2 * 1e3;
+            out.link_mj += e.link * 1e3;
+            // Timing dispatch only (the energy above is already
+            // priced; `run_op` would price it a second time).
+            let rec = match op.prep {
+                Prepped::Matmul { .. } => self.run_matmul(d, &mem, op),
+                Prepped::Vector { .. } => self.run_vector(d, &mem, op),
+                Prepped::Comm { .. } => self.run_comm(&mem, &icn, op),
+            };
+            phase_s += rec.wall_s;
+        }
+        out.leakage_mj +=
+            c::LEAKAGE_W_PER_MM2 * area_mm2(d) * phase_s * 1e3;
+        out
     }
 
     fn run_op(
@@ -182,11 +329,13 @@ impl CompassSim {
         icn: &Interconnect,
         op: &PreppedOp,
     ) -> OpRecord {
-        match op.prep {
+        let mut rec = match op.prep {
             Prepped::Matmul { .. } => self.run_matmul(d, mem, op),
             Prepped::Vector { .. } => self.run_vector(d, mem, op),
             Prepped::Comm { .. } => self.run_comm(mem, icn, op),
-        }
+        };
+        rec.energy_j = op_energy(&op.prep, mem, icn).total();
+        rec
     }
 
     fn run_matmul(
@@ -204,6 +353,7 @@ impl CompassSim {
             a_bytes,
             resident,
             w_class,
+            ..
         } = op.prep
         else {
             unreachable!("run_matmul on non-matmul op")
@@ -229,6 +379,8 @@ impl CompassSim {
         } else {
             Bottleneck::Compute
         };
+        // energy_j is attributed by `run_op` through the shared
+        // `op_energy` pricing.
         OpRecord {
             name: op.name,
             phase: op.phase,
@@ -237,6 +389,7 @@ impl CompassSim {
             compute_s: map.compute_s,
             memory_s: mem_s,
             network_s: 0.0,
+            energy_j: 0.0,
             utilization: map.utilization,
             latency_bound: false,
         }
@@ -274,6 +427,7 @@ impl CompassSim {
             compute_s,
             memory_s: mem_s,
             network_s: 0.0,
+            energy_j: 0.0,
             utilization: occupancy,
             latency_bound: false,
         }
@@ -306,6 +460,7 @@ impl CompassSim {
             compute_s: 0.0,
             memory_s: mem_s,
             network_s: net_s,
+            energy_j: 0.0,
             utilization: 0.0,
             latency_bound: icn.latency_bound(payload),
         }
@@ -479,6 +634,108 @@ mod tests {
             .iter()
             .all(|p| p.phase == Phase::Decode
                 && p.name.starts_with("attn")));
+    }
+
+    #[test]
+    fn per_op_energies_sum_to_phase_energy() {
+        // The satellite accounting invariant: per-op dynamic energies
+        // plus the phase-level leakage reproduce the Metrics energy
+        // fields exactly (up to f32 accumulation).
+        let s = sim();
+        for d in [
+            DesignPoint::a100(),
+            DesignPoint::paper_design_a(),
+            DesignPoint::new([6, 1, 1, 4, 4, 32, 32, 1]),
+        ] {
+            let (m, cp) = s.evaluate_detailed(&d);
+            for phase in Phase::ALL {
+                let dynamic_mj = cp.phase_energy_j(phase) * 1e3;
+                let leak_mj = c::LEAKAGE_W_PER_MM2
+                    * m.area_mm2
+                    * m.phase_time_ms(phase);
+                let want = dynamic_mj + leak_mj;
+                let got = m.phase_energy_mj(phase);
+                assert!(
+                    (got - want).abs() / want.max(1e-6) < 1e-5,
+                    "{d} {phase:?}: {got} vs {want}"
+                );
+                assert!(cp
+                    .phase_ops(phase)
+                    .all(|o| o.energy_j > 0.0));
+            }
+            assert_eq!(
+                m.avg_power_w,
+                crate::arch::power::avg_power_w(
+                    m.prefill_energy_mj,
+                    m.energy_per_token_mj,
+                    m.ttft_ms,
+                    m.tpot_ms
+                )
+            );
+        }
+    }
+
+    #[test]
+    fn per_op_stall_components_sum_to_wall_minus_launch_overhead() {
+        // Each op's wall time decomposes into its winning candidate
+        // component plus the fixed launch overhead; summed per phase,
+        // the stall stack reproduces the phase wall time exactly.
+        let s = sim();
+        let (m, cp) = s.evaluate_detailed(&DesignPoint::a100());
+        for phase in Phase::ALL {
+            let n_ops = cp.phase_ops(phase).count() as f32;
+            let stack: f32 = cp.stall_stack(phase).iter().sum();
+            let total = cp.phase_total_s(phase);
+            assert!((stack - total).abs() / total < 1e-5);
+            assert!(
+                (total * 1e3 - m.phase_time_ms(phase)).abs()
+                    / m.phase_time_ms(phase)
+                    < 1e-5
+            );
+            // Work time (wall minus launch overhead) is at least the
+            // largest candidate component of every op, with equality
+            // for the overlap-free vector/comm paths.
+            let mut work = 0f32;
+            for op in cp.phase_ops(phase) {
+                let t = op.wall_s - LAUNCH_OVERHEAD_S;
+                assert!(t > 0.0, "{}", op.name);
+                let cand = op
+                    .compute_s
+                    .max(op.memory_s)
+                    .max(op.network_s);
+                if op.compute_s == 0.0 {
+                    // Comm ops: wall = max(candidates) + launch.
+                    assert!(
+                        (t - cand).abs() / cand < 1e-5,
+                        "{}: {t} vs {cand}",
+                        op.name
+                    );
+                }
+                work += t;
+            }
+            let want = total - n_ops * LAUNCH_OVERHEAD_S;
+            assert!((work - want).abs() / want < 1e-4);
+        }
+    }
+
+    #[test]
+    fn energy_breakdown_matches_per_op_accounting() {
+        let s = sim();
+        let (m, _) = s.evaluate_detailed(&DesignPoint::a100());
+        for phase in Phase::ALL {
+            let b = s.energy_breakdown(&DesignPoint::a100(), phase);
+            let want = m.phase_energy_mj(phase);
+            assert!(
+                (b.total_mj() - want).abs() / want < 1e-4,
+                "{phase:?}: breakdown {} vs metrics {want}",
+                b.total_mj()
+            );
+            assert!(b.compute_mj > 0.0 && b.hbm_mj > 0.0);
+            assert!(b.leakage_mj > 0.0);
+        }
+        // Decode is traffic-dominated: HBM energy beats MAC energy.
+        let dc = s.energy_breakdown(&DesignPoint::a100(), Phase::Decode);
+        assert!(dc.hbm_mj > dc.compute_mj, "{dc:?}");
     }
 
     #[test]

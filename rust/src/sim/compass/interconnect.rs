@@ -45,6 +45,17 @@ impl Interconnect {
         bw_term + lat_term
     }
 
+    /// Link energy of one ring allreduce, joules: every rank puts
+    /// `2(tp-1)` chunks of `bytes / tp` on the wire.
+    pub fn allreduce_energy_j(&self, bytes: f32) -> f32 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        let steps = 2.0 * (self.tp - 1.0);
+        let chunk = bytes / self.tp;
+        steps * chunk * c::E_J_PER_BYTE_LINK
+    }
+
     /// True when the transfer is latency- (not bandwidth-) dominated;
     /// the critical-path report uses this to tell the Strategy Engine
     /// that adding links will not help.
@@ -90,6 +101,18 @@ mod tests {
         let i = icn(12);
         assert!(i.allreduce_s(2e8) > i.allreduce_s(1e8));
         assert_eq!(i.allreduce_s(0.0), 0.0);
+    }
+
+    #[test]
+    fn allreduce_energy_scales_with_payload_not_links() {
+        // Wire energy is payload-bound: more links speed the collective
+        // but move the same bytes.
+        let e12 = icn(12).allreduce_energy_j(2e8);
+        let e24 = icn(24).allreduce_energy_j(2e8);
+        assert_eq!(e12, e24);
+        assert!((icn(12).allreduce_energy_j(4e8) - 2.0 * e12).abs()
+            < e12 * 1e-5);
+        assert_eq!(icn(12).allreduce_energy_j(0.0), 0.0);
     }
 
     #[test]

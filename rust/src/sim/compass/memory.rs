@@ -35,10 +35,10 @@ impl MemorySystem {
         let channels = d.get(Param::MemChannels) as f32;
         let l2_mb = d.get(Param::GbufMb) as f32;
         let hbm_bw = channels * c::HBM_BPS_PER_CHANNEL;
-        // L2 bandwidth: banked, ~4x HBM at A100-like capacity, scaling
-        // sub-linearly with capacity (more banks, same crossbar).
-        let l2_bw = 4.0 * 5.0 * c::HBM_BPS_PER_CHANNEL
-            * (l2_mb / 40.0).sqrt();
+        // L2 bandwidth: the shared banked-crossbar model (single
+        // definition with the peak-power proxy — see
+        // `crate::arch::power::l2_peak_bps`).
+        let l2_bw = crate::arch::power::l2_peak_bps(l2_mb);
         MemorySystem { hbm_bw, l2_bytes: l2_mb * 1024.0 * 1024.0, l2_bw }
     }
 
@@ -92,6 +92,36 @@ impl MemorySystem {
             (l2_time, hbm_time)
         };
         hi + 0.2 * lo
+    }
+
+    /// Energy split of a traffic stream: `(hbm_j, l2_j)` — bytes that
+    /// miss L2 pay the HBM pJ/byte, hits pay the (much cheaper) L2
+    /// rate. Same hit model as [`MemorySystem::service_s`].
+    pub fn energy_split_j(
+        &self,
+        class: TrafficClass,
+        bytes: f32,
+        working_set: f32,
+    ) -> (f32, f32) {
+        if bytes <= 0.0 {
+            return (0.0, 0.0);
+        }
+        let hit = self.hit_fraction(class, working_set);
+        (
+            bytes * (1.0 - hit) * c::E_J_PER_BYTE_HBM,
+            bytes * hit * c::E_J_PER_BYTE_L2,
+        )
+    }
+
+    /// Total memory energy of a traffic stream, joules.
+    pub fn energy_j(
+        &self,
+        class: TrafficClass,
+        bytes: f32,
+        working_set: f32,
+    ) -> f32 {
+        let (hbm, l2) = self.energy_split_j(class, bytes, working_set);
+        hbm + l2
     }
 }
 
@@ -150,6 +180,24 @@ mod tests {
         let streamed =
             m.service_s(TrafficClass::StreamingWeights, bytes, bytes);
         assert!(cached < streamed);
+    }
+
+    #[test]
+    fn cached_traffic_is_cheaper_energy_too() {
+        let m = a100_mem();
+        let bytes = 8.0 * 1048576.0;
+        let cached =
+            m.energy_j(TrafficClass::Activations, bytes, bytes);
+        let streamed =
+            m.energy_j(TrafficClass::StreamingWeights, bytes, bytes);
+        assert!(cached < streamed);
+        let (hbm, l2) =
+            m.energy_split_j(TrafficClass::Activations, bytes, bytes);
+        assert!((hbm + l2 - cached).abs() < cached * 1e-6);
+        assert_eq!(
+            m.energy_j(TrafficClass::KvCache, 0.0, 0.0),
+            0.0
+        );
     }
 
     #[test]

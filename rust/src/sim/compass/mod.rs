@@ -22,4 +22,4 @@ pub mod memory;
 pub mod tiles;
 
 pub use critical_path::{CriticalPath, OpRecord};
-pub use engine::CompassSim;
+pub use engine::{CompassSim, LAUNCH_OVERHEAD_S};

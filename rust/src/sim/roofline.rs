@@ -64,6 +64,7 @@ impl RooflineSim {
 
         let mut phase_total = [0f32; 2];
         let mut stalls = [[0f32; 3]; 2];
+        let mut energy = [0f32; 2];
         for (p, phase) in self.table.iter().enumerate() {
             for row in phase {
                 let kind = row[0];
@@ -125,13 +126,48 @@ impl RooflineSim {
                 if net_win {
                     stalls[p][2] += t_op;
                 }
+
+                // Dynamic energy (J), mirroring the kernel's pricing:
+                // FLOPs per execution unit (systolic MACs include SRAM
+                // operand staging), HBM traffic crosses L2 once, comm
+                // payload crosses the links. Pad rows contribute 0.
+                if is_mm || is_vec || is_comm {
+                    let e_compute = if is_mm {
+                        flops
+                            * (c::E_J_PER_FLOP_SYSTOLIC
+                                + c::SRAM_BYTES_PER_FLOP
+                                    * c::E_J_PER_BYTE_SRAM)
+                    } else if is_vec {
+                        flops * c::E_J_PER_FLOP_VECTOR
+                    } else {
+                        comm * c::E_J_PER_BYTE_LINK
+                    };
+                    let e_mem = bytes
+                        * (c::E_J_PER_BYTE_HBM + c::E_J_PER_BYTE_L2);
+                    energy[p] += e_compute + e_mem;
+                }
             }
+            // Static leakage: area-proportional draw over the phase
+            // wall time.
+            energy[p] += c::LEAKAGE_W_PER_MM2 * area * phase_total[p];
         }
 
+        let prefill_energy_mj = energy[0] * 1e3;
+        let energy_per_token_mj = energy[1] * 1e3;
+        let ttft_ms = phase_total[0] * 1e3;
+        let tpot_ms = phase_total[1] * 1e3;
         Metrics {
-            ttft_ms: phase_total[0] * 1e3,
-            tpot_ms: phase_total[1] * 1e3,
+            ttft_ms,
+            tpot_ms,
             area_mm2: area,
+            energy_per_token_mj,
+            prefill_energy_mj,
+            avg_power_w: crate::arch::power::avg_power_w(
+                prefill_energy_mj,
+                energy_per_token_mj,
+                ttft_ms,
+                tpot_ms,
+            ),
             stalls: [
                 [
                     stalls[0][0] * 1e3,
@@ -194,6 +230,69 @@ mod tests {
         assert!((m.ttft_ms - 36.70556).abs() / 36.70556 < 1e-4, "{m:?}");
         assert!((m.tpot_ms - 0.4424397).abs() / 0.4424397 < 1e-4);
         assert!((m.area_mm2 - 833.9728).abs() / 833.9728 < 1e-4);
+    }
+
+    #[test]
+    fn a100_energy_matches_python_reference_numbers() {
+        // Values printed by the python oracle (kernels/ref.py) for the
+        // A100 config: prefill 8116.046 mJ, decode 41.352123 mJ/token,
+        // avg power 219.59186 W.
+        let m = sim().evaluate(&DesignPoint::a100());
+        assert!(
+            (m.prefill_energy_mj - 8116.046).abs() / 8116.046 < 1e-4,
+            "{m:?}"
+        );
+        assert!(
+            (m.energy_per_token_mj - 41.352123).abs() / 41.352123
+                < 1e-4
+        );
+        assert!((m.avg_power_w - 219.59186).abs() / 219.59186 < 1e-4);
+        // The derived field is exactly the shared helper's output.
+        assert_eq!(
+            m.avg_power_w,
+            crate::arch::power::avg_power_w(
+                m.prefill_energy_mj,
+                m.energy_per_token_mj,
+                m.ttft_ms,
+                m.tpot_ms
+            )
+        );
+    }
+
+    #[test]
+    fn tiny_workload_energy_matches_python() {
+        // Python oracle, gpt3-tiny on A100: [14.875684, 1.7696981] mJ.
+        let m = RooflineSim::new(crate::workload::GPT3_TINY)
+            .evaluate(&DesignPoint::a100());
+        assert!(
+            (m.prefill_energy_mj - 14.875684).abs() / 14.875684 < 1e-4,
+            "{m:?}"
+        );
+        assert!(
+            (m.energy_per_token_mj - 1.7696981).abs() / 1.7696981
+                < 1e-4
+        );
+    }
+
+    #[test]
+    fn energy_exceeds_leakage_floor_and_tracks_traffic() {
+        use crate::arch::constants as c;
+        let s = sim();
+        let m = s.evaluate(&DesignPoint::a100());
+        // Each phase's energy is at least its leakage-only draw
+        // (W * ms = mJ).
+        let leak_pf = c::LEAKAGE_W_PER_MM2 * m.area_mm2 * m.ttft_ms;
+        let leak_dc = c::LEAKAGE_W_PER_MM2 * m.area_mm2 * m.tpot_ms;
+        assert!(m.prefill_energy_mj > leak_pf);
+        assert!(m.energy_per_token_mj > leak_dc);
+        // More memory channels cut decode *time* but the dominant
+        // decode energy term (HBM traffic) is byte-count-bound, so
+        // energy/token must not grow with time savings.
+        let fast = s.evaluate(
+            &DesignPoint::a100().with(Param::MemChannels, 10),
+        );
+        assert!(fast.tpot_ms < m.tpot_ms);
+        assert!(fast.energy_per_token_mj < m.energy_per_token_mj * 1.05);
     }
 
     #[test]

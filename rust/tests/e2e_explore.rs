@@ -180,6 +180,128 @@ fn all_methods_run_on_both_environments() {
 }
 
 #[test]
+fn ppa_explore_front_hypervolume_matches_monte_carlo_oracle() {
+    // Acceptance (PPA tentpole): an end-to-end `explore --objectives
+    // ppa` run produces a 4-D front whose exact hypervolume agrees with
+    // the brute-force Monte-Carlo oracle, and whose energy accounting
+    // satisfies the per-op sum invariants on both simulator backends.
+    use lumina::eval::CachedEvaluator;
+    use lumina::lumina::LuminaConfig;
+    use lumina::pareto::{
+        hypervolume, hypervolume_mc, phv_ref, ObjectiveMode,
+        ParetoArchive,
+    };
+    let space = DesignSpace::table1();
+    let mut ev =
+        CachedEvaluator::new(EvaluatorKind::RooflineRust.make());
+    let reference = ev.eval(&DesignPoint::a100()).unwrap();
+    let mut be = BudgetedEvaluator::new(&mut ev, 60);
+    Lumina::new(LuminaConfig {
+        seed: 17,
+        objectives: ObjectiveMode::Ppa,
+        ..Default::default()
+    })
+    .run(&space, &mut be)
+    .unwrap();
+    assert_eq!(be.spent(), 60);
+
+    // Normalized 4-D objective vectors + incremental front.
+    let r4 = reference.objectives_ppa();
+    let objs: Vec<[f64; 4]> = be
+        .log
+        .iter()
+        .map(|(_, m)| {
+            let o = m.objectives_ppa();
+            std::array::from_fn(|i| o[i] / r4[i])
+        })
+        .collect();
+    let mut archive: ParetoArchive<4> =
+        ParetoArchive::new(phv_ref::<4>());
+    for o in &objs {
+        archive.push(*o);
+    }
+    let front = archive.front();
+    assert!(!front.is_empty());
+    let exact = hypervolume(&front, &phv_ref::<4>());
+    assert!(
+        (exact - archive.hypervolume()).abs()
+            <= 1e-9 * exact.max(1.0),
+        "incremental {} vs batch {exact}",
+        archive.hypervolume()
+    );
+    // Monte-Carlo oracle agreement within tolerance.
+    let mc = hypervolume_mc(&front, &phv_ref::<4>(), 400_000, 4242);
+    assert!(exact > 0.0, "empty 4-D hypervolume");
+    assert!(
+        (exact - mc).abs() / exact < 0.03,
+        "exact={exact} mc={mc}"
+    );
+}
+
+#[test]
+fn energy_accounting_invariants_hold_on_both_backends() {
+    use lumina::arch::constants as c;
+    use lumina::eval::Phase;
+    use lumina::sim::compass::LAUNCH_OVERHEAD_S;
+    let designs = [
+        DesignPoint::a100(),
+        DesignPoint::paper_design_a(),
+        DesignPoint::paper_design_b(),
+    ];
+    // Roofline: phase energy exceeds the leakage floor and the derived
+    // power field is exactly the shared helper of the phase energies.
+    let roof = RooflineSim::new(GPT3_175B);
+    for d in &designs {
+        let m = roof.evaluate(d);
+        for phase in Phase::ALL {
+            let leak = c::LEAKAGE_W_PER_MM2
+                * m.area_mm2
+                * m.phase_time_ms(phase);
+            assert!(m.phase_energy_mj(phase) > leak, "{d} {phase:?}");
+        }
+        assert_eq!(
+            m.avg_power_w,
+            lumina::arch::avg_power_w(
+                m.prefill_energy_mj,
+                m.energy_per_token_mj,
+                m.ttft_ms,
+                m.tpot_ms
+            )
+        );
+    }
+    // Compass: per-op energies + phase leakage sum to the Metrics
+    // energy, and per-op stall components reproduce the phase wall
+    // time minus the launch overhead.
+    let compass = CompassSim::gpt3();
+    for d in &designs {
+        let (m, cp) = compass.evaluate_detailed(d);
+        for phase in Phase::ALL {
+            let dynamic_mj = cp.phase_energy_j(phase) * 1e3;
+            let leak_mj = c::LEAKAGE_W_PER_MM2
+                * m.area_mm2
+                * m.phase_time_ms(phase);
+            let want = dynamic_mj + leak_mj;
+            let got = m.phase_energy_mj(phase);
+            assert!(
+                (got - want).abs() / want < 1e-5,
+                "{d} {phase:?}: {got} vs {want}"
+            );
+            let n_ops = cp.phase_ops(phase).count() as f32;
+            let work: f32 = cp
+                .phase_ops(phase)
+                .map(|o| o.wall_s - LAUNCH_OVERHEAD_S)
+                .sum();
+            let want_s =
+                cp.phase_total_s(phase) - n_ops * LAUNCH_OVERHEAD_S;
+            assert!(
+                (work - want_s).abs() / want_s < 1e-4,
+                "{d} {phase:?} stall sum"
+            );
+        }
+    }
+}
+
+#[test]
 fn roofline_and_compass_agree_on_winner_ordering() {
     // Fidelity sanity: both environments must agree that the paper's
     // designs beat the A100 (shape-level cross-model consistency).

@@ -76,6 +76,7 @@ impl ExploreRig {
             seed: self.seed,
             evaluator: self.ev.name().to_string(),
             workload_fp: self.ev.workload_fingerprint(),
+            objectives: lumina::pareto::ObjectiveMode::LatencyArea,
             every: 1,
         }
     }
@@ -162,6 +163,79 @@ fn checkpoint_resume_reaches_the_uninterrupted_trajectory() {
     assert_eq!(
         full_log, resumed_log,
         "resumed trajectory diverged from the uninterrupted run"
+    );
+}
+
+#[test]
+fn ppa_checkpoint_resume_reaches_the_uninterrupted_trajectory() {
+    use lumina::pareto::ObjectiveMode;
+    let budget = 80usize;
+    let seed = 31u64;
+    let path = std::env::temp_dir()
+        .join("lumina_ckpt_equivalence_ppa.json");
+    let cfg = || LuminaConfig {
+        seed,
+        objectives: ObjectiveMode::Ppa,
+        ..Default::default()
+    };
+
+    let full_log: Vec<(DesignPoint, Metrics)> = {
+        let mut rig = ExploreRig::new(seed);
+        let mut lum = Lumina::new(cfg());
+        let mut be = BudgetedEvaluator::new(&mut rig.ev, budget);
+        let mut obs = NullObserver;
+        Driver::new(&rig.space, &mut obs)
+            .run(&mut lum, &mut be)
+            .unwrap();
+        be.log
+    };
+
+    {
+        let mut rig = ExploreRig::new(seed);
+        let mut sink = rig.sink(&path);
+        sink.objectives = ObjectiveMode::Ppa;
+        let mut lum = Lumina::new(cfg());
+        let mut be = BudgetedEvaluator::new(&mut rig.ev, budget);
+        let mut obs = NullObserver;
+        let mut driver = Driver::new(&rig.space, &mut obs);
+        driver.checkpoint = Some(sink);
+        for _ in 0..20 {
+            assert!(driver.step(&mut lum, &mut be).unwrap());
+        }
+    }
+
+    let resumed_log: Vec<(DesignPoint, Metrics)> = {
+        let st = SessionState::load(&path).unwrap();
+        assert_eq!(st.objectives, ObjectiveMode::Ppa);
+        let mut rig = ExploreRig::new(seed);
+        rig.ev.preload(&st.log);
+        let mut lum = Lumina::new(cfg());
+        let spent = replay(
+            &mut lum,
+            &rig.space,
+            budget,
+            &st.log,
+            &[DesignPoint::a100()],
+        )
+        .unwrap();
+        assert_eq!(spent, st.spent);
+        let mut be = BudgetedEvaluator::resume(
+            &mut rig.ev,
+            budget,
+            st.log,
+            spent,
+        );
+        let mut obs = NullObserver;
+        Driver::new(&rig.space, &mut obs)
+            .run(&mut lum, &mut be)
+            .unwrap();
+        be.log
+    };
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(
+        full_log, resumed_log,
+        "resumed ppa trajectory diverged from the uninterrupted run"
     );
 }
 
