@@ -16,6 +16,14 @@
 //! evaluators on this path are pure functions of the design, so each
 //! cell's trajectory — and therefore its PHV / sample efficiency — is
 //! bit-identical to the serial race.
+//!
+//! Thread budget: the fused batches shard over the process-wide
+//! [`crate::eval::WorkerPool`], which all (method x trial) cells share
+//! through the one race evaluator — total evaluation threads are
+//! capped at `available_parallelism` (pool workers + the driver
+//! thread), where the PR-1 scoped-spawn sharder re-claimed every
+//! hardware thread per `eval_batch` call (see
+//! `tests/soa_pool.rs::fused_race_never_exceeds_the_worker_cap`).
 
 use crate::design::{DesignPoint, DesignSpace};
 use crate::eval::{Evaluator, Metrics, HIT_LOG_FACTOR};

@@ -10,46 +10,182 @@
 //! entry. The fingerprint is read from the inner evaluator on every
 //! batch via [`Evaluator::workload_fingerprint`].
 //!
-//! [`CachedEvaluator`] wraps any [`Evaluator`]; unique uncached designs
-//! of a batch are forwarded to the inner evaluator in first-appearance
-//! order (so inner results stay deterministic), then every requested
-//! design — duplicates included — is assembled from the map in input
-//! order. Hit/miss counters feed [`BudgetedEvaluator`]'s accounting:
-//! hits never burn sample budget.
+//! The store itself is a [`SharedCache`]: a sharded-`RwLock` concurrent
+//! map with atomic hit/miss counters. That makes the cache usable
+//! through `&self` from pool worker threads, so memoization composes on
+//! *either* side of the parallel layer:
+//!
+//! * `CachedEvaluator<ParallelEvaluator<_>>` — the historical
+//!   composition; unique misses of a batch are forwarded as one inner
+//!   batch.
+//! * `ParallelEvaluator<CachedEvaluator<_>>` — the CLI `explore` stack:
+//!   the parallel layer probes the memo store up front, serves hits on
+//!   the caller thread **without touching the worker pool**, and
+//!   evaluates only unique misses in parallel (each exactly once, so
+//!   observable results *and* counters are deterministic and identical
+//!   to the sequential caching path).
+//!
+//! `SharedCache` is `Arc`-cloneable, so several evaluators (or several
+//! threads) can share one memo store; keys never alias across workloads
+//! thanks to the fingerprint lane.
+//!
+//! Batch semantics (both compositions): unique uncached designs are
+//! forwarded to the inner evaluator in first-appearance order (so inner
+//! results stay deterministic), then every requested design —
+//! duplicates included — is assembled from the map in input order.
+//! Hit/miss counters feed [`BudgetedEvaluator`]'s accounting: hits
+//! never burn sample budget.
 //!
 //! [`BudgetedEvaluator`]: crate::eval::BudgetedEvaluator
 
+use std::collections::hash_map::DefaultHasher;
 use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 use crate::design::DesignPoint;
-use crate::eval::{CacheCounters, Evaluator, Metrics};
+use crate::eval::{CacheCounters, EvalOne, Evaluator, Metrics};
 use crate::Result;
 
-/// Memoizing adapter over any evaluator.
-#[derive(Debug)]
-pub struct CachedEvaluator<E> {
-    inner: E,
-    map: HashMap<(u64, DesignPoint), Metrics>,
-    counters: CacheCounters,
+/// Shard count: enough to make write contention negligible at the
+/// pool's lane counts, small enough that `len()`/`clear()` sweeps stay
+/// trivial.
+const N_SHARDS: usize = 16;
+
+type Shard = RwLock<HashMap<(u64, DesignPoint), Metrics>>;
+
+#[derive(Debug, Default)]
+struct CacheInner {
+    shards: [Shard; N_SHARDS],
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
-impl<E: Evaluator> CachedEvaluator<E> {
-    pub fn new(inner: E) -> Self {
-        Self { inner, map: HashMap::new(), counters: CacheCounters::default() }
+/// Concurrent sharded memo store keyed on (workload fingerprint,
+/// design). Cloning shares the underlying map and counters.
+#[derive(Debug, Clone, Default)]
+pub struct SharedCache {
+    inner: Arc<CacheInner>,
+}
+
+impl SharedCache {
+    pub fn new() -> Self {
+        Self::default()
     }
 
-    /// Lookup counters since construction.
+    fn shard(&self, key: &(u64, DesignPoint)) -> &Shard {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.inner.shards[(h.finish() as usize) % N_SHARDS]
+    }
+
+    /// Silent lookup (no counter effects; see [`SharedCache::record`]).
+    pub fn get(&self, fp: u64, d: &DesignPoint) -> Option<Metrics> {
+        let key = (fp, *d);
+        self.shard(&key)
+            .read()
+            .expect("cache shard poisoned")
+            .get(&key)
+            .copied()
+    }
+
+    pub fn contains(&self, fp: u64, d: &DesignPoint) -> bool {
+        self.get(fp, d).is_some()
+    }
+
+    /// Insert, overwriting any existing entry (evaluators are pure, so
+    /// a racing double-insert writes the same bits).
+    pub fn insert(&self, fp: u64, d: &DesignPoint, m: Metrics) {
+        let key = (fp, *d);
+        self.shard(&key)
+            .write()
+            .expect("cache shard poisoned")
+            .insert(key, m);
+    }
+
+    /// Insert unless present (warm path: existing entries win).
+    pub fn insert_if_absent(&self, fp: u64, d: &DesignPoint, m: Metrics) {
+        let key = (fp, *d);
+        self.shard(&key)
+            .write()
+            .expect("cache shard poisoned")
+            .entry(key)
+            .or_insert(m);
+    }
+
+    /// Bump the lookup counters.
+    pub fn record(&self, hits: u64, misses: u64) {
+        if hits > 0 {
+            self.inner.hits.fetch_add(hits, Ordering::Relaxed);
+        }
+        if misses > 0 {
+            self.inner.misses.fetch_add(misses, Ordering::Relaxed);
+        }
+    }
+
     pub fn counters(&self) -> CacheCounters {
-        self.counters
+        CacheCounters {
+            hits: self.inner.hits.load(Ordering::Relaxed),
+            misses: self.inner.misses.load(Ordering::Relaxed),
+        }
     }
 
     /// Distinct (workload, design) pairs memoized.
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.inner
+            .shards
+            .iter()
+            .map(|s| s.read().expect("cache shard poisoned").len())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.len() == 0
+    }
+
+    /// Drop all memoized entries (counters are kept).
+    pub fn clear(&self) {
+        for s in &self.inner.shards {
+            s.write().expect("cache shard poisoned").clear();
+        }
+    }
+}
+
+/// Memoizing adapter over any evaluator (see module docs).
+#[derive(Debug)]
+pub struct CachedEvaluator<E> {
+    inner: E,
+    cache: SharedCache,
+}
+
+impl<E> CachedEvaluator<E> {
+    pub fn new(inner: E) -> Self {
+        Self { inner, cache: SharedCache::new() }
+    }
+
+    /// Wrap `inner` over an existing (possibly shared) memo store.
+    pub fn with_cache(inner: E, cache: SharedCache) -> Self {
+        Self { inner, cache }
+    }
+
+    /// Handle to the memo store (clone to share it).
+    pub fn cache(&self) -> &SharedCache {
+        &self.cache
+    }
+
+    /// Lookup counters since the store's construction.
+    pub fn counters(&self) -> CacheCounters {
+        self.cache.counters()
+    }
+
+    /// Distinct (workload, design) pairs memoized.
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
     }
 
     pub fn inner(&self) -> &E {
@@ -69,43 +205,89 @@ impl<E: Evaluator> CachedEvaluator<E> {
 
     /// Drop all memoized entries (counters are kept).
     pub fn clear(&mut self) {
-        self.map.clear();
+        self.cache.clear();
     }
 
+    /// Seed known results under `fp` without touching the hit/miss
+    /// counters; existing entries win on conflict.
+    fn warm_with_fp(&self, fp: u64, pairs: &[(DesignPoint, Metrics)]) {
+        for (d, m) in pairs {
+            self.cache.insert_if_absent(fp, d, *m);
+        }
+    }
+}
+
+/// Shared batch algorithm of both trait impls: forward unique uncached
+/// designs (first-appearance order) through `run_fresh`, memoize the
+/// results, assemble every requested slot from the map in input order,
+/// and count `hits = designs - fresh`, `misses = fresh`. A free
+/// function so `Evaluator::eval_batch` can pass a closure that mutably
+/// borrows the inner evaluator while the store is borrowed shared.
+fn batch_via(
+    cache: &SharedCache,
+    fp: u64,
+    designs: &[DesignPoint],
+    run_fresh: impl FnOnce(&[DesignPoint]) -> Result<Vec<Metrics>>,
+) -> Result<Vec<Metrics>> {
+    // One locked probe per design; the pure-hit path never touches the
+    // store again (fresh results are assembled from the local vec, not
+    // re-read through the shard locks).
+    let mut slots: Vec<Option<Metrics>> =
+        Vec::with_capacity(designs.len());
+    let mut fresh: Vec<DesignPoint> = Vec::new();
+    let mut seen: HashSet<DesignPoint> = HashSet::new();
+    for d in designs {
+        let hit = cache.get(fp, d);
+        if hit.is_none() && seen.insert(*d) {
+            fresh.push(*d);
+        }
+        slots.push(hit);
+    }
+    let fresh_ms = if fresh.is_empty() {
+        Vec::new()
+    } else {
+        run_fresh(&fresh)?
+    };
+    debug_assert_eq!(fresh_ms.len(), fresh.len());
+    for (d, m) in fresh.iter().zip(&fresh_ms) {
+        cache.insert(fp, d, *m);
+    }
+    cache.record(
+        (designs.len() - fresh.len()) as u64,
+        fresh.len() as u64,
+    );
+    let by_design: HashMap<DesignPoint, Metrics> =
+        fresh.into_iter().zip(fresh_ms).collect();
+    Ok(designs
+        .iter()
+        .zip(slots)
+        .map(|(d, slot)| match slot {
+            Some(m) => m,
+            None => by_design[d],
+        })
+        .collect())
+}
+
+impl<E: Evaluator> CachedEvaluator<E> {
     /// Seed known results under the inner evaluator's *current*
     /// workload fingerprint without touching the hit/miss counters —
     /// the checkpoint-resume path replays a recorded trajectory into
     /// the cache so the resumed run charges budget exactly like the
     /// uninterrupted one. Existing entries win on conflict.
     pub fn warm(&mut self, pairs: &[(DesignPoint, Metrics)]) {
-        let fp = self.inner.workload_fingerprint();
-        for (d, m) in pairs {
-            self.map.entry((fp, *d)).or_insert(*m);
-        }
+        self.warm_with_fp(self.inner.workload_fingerprint(), pairs);
     }
 }
 
 impl<E: Evaluator> Evaluator for CachedEvaluator<E> {
     fn eval_batch(&mut self, designs: &[DesignPoint]) -> Result<Vec<Metrics>> {
         let fp = self.inner.workload_fingerprint();
-        // Unique uncached designs, in first-appearance order.
-        let mut fresh: Vec<DesignPoint> = Vec::new();
-        let mut seen: HashSet<DesignPoint> = HashSet::new();
-        for d in designs {
-            if !self.map.contains_key(&(fp, *d)) && seen.insert(*d) {
-                fresh.push(*d);
-            }
-        }
-        if !fresh.is_empty() {
-            let ms = self.inner.eval_batch(&fresh)?;
-            debug_assert_eq!(ms.len(), fresh.len());
-            for (d, m) in fresh.iter().zip(ms) {
-                self.map.insert((fp, *d), m);
-            }
-        }
-        self.counters.misses += fresh.len() as u64;
-        self.counters.hits += (designs.len() - fresh.len()) as u64;
-        Ok(designs.iter().map(|d| self.map[&(fp, *d)]).collect())
+        // Split borrow: the store is borrowed shared while the closure
+        // mutates the inner evaluator.
+        let inner = &mut self.inner;
+        batch_via(&self.cache, fp, designs, |fresh| {
+            inner.eval_batch(fresh)
+        })
     }
 
     fn name(&self) -> &'static str {
@@ -113,12 +295,12 @@ impl<E: Evaluator> Evaluator for CachedEvaluator<E> {
     }
 
     fn is_cached(&self, d: &DesignPoint) -> bool {
-        self.map
-            .contains_key(&(self.inner.workload_fingerprint(), *d))
+        self.cache
+            .contains(self.inner.workload_fingerprint(), d)
     }
 
     fn cache_counters(&self) -> Option<CacheCounters> {
-        Some(self.counters)
+        Some(self.cache.counters())
     }
 
     fn workload_fingerprint(&self) -> u64 {
@@ -126,7 +308,73 @@ impl<E: Evaluator> Evaluator for CachedEvaluator<E> {
     }
 
     fn preload(&mut self, pairs: &[(DesignPoint, Metrics)]) {
-        self.warm(pairs);
+        self.warm_with_fp(self.inner.workload_fingerprint(), pairs);
+    }
+}
+
+/// The thread-safe face: a memoizing *pure* evaluator, usable inside
+/// [`crate::eval::ParallelEvaluator`] — pool workers evaluate misses
+/// through `&self`, the parallel batch layer serves hits without
+/// dispatching, and the memo hooks keep counters deterministic.
+impl<E: EvalOne> EvalOne for CachedEvaluator<E> {
+    fn eval_one(&self, d: &DesignPoint) -> Metrics {
+        let fp = EvalOne::workload_fingerprint(&self.inner);
+        if let Some(m) = self.cache.get(fp, d) {
+            self.cache.record(1, 0);
+            return m;
+        }
+        let m = self.inner.eval_one(d);
+        self.cache.insert(fp, d, m);
+        self.cache.record(0, 1);
+        m
+    }
+
+    fn label(&self) -> &'static str {
+        self.inner.label()
+    }
+
+    fn workload_fingerprint(&self) -> u64 {
+        EvalOne::workload_fingerprint(&self.inner)
+    }
+
+    fn eval_chunk(&self, designs: &[DesignPoint], out: &mut [Metrics]) {
+        // Same dedup/assemble algorithm as the batch path, with the
+        // misses evaluated through the inner SoA chunk kernel. When
+        // called from the parallel layer's memo-aware path the chunk is
+        // all-fresh (the orchestrator deduplicated), so this records
+        // misses only.
+        let fp = EvalOne::workload_fingerprint(&self.inner);
+        let ms = batch_via(&self.cache, fp, designs, |fresh| {
+            let mut fresh_ms = vec![Metrics::default(); fresh.len()];
+            self.inner.eval_chunk(fresh, &mut fresh_ms);
+            Ok(fresh_ms)
+        })
+        .expect("infallible inner chunk");
+        out.copy_from_slice(&ms);
+    }
+
+    fn probe(&self, d: &DesignPoint) -> Option<Metrics> {
+        self.cache
+            .get(EvalOne::workload_fingerprint(&self.inner), d)
+    }
+
+    fn memoizes(&self) -> bool {
+        true
+    }
+
+    fn count_hits(&self, n: u64) {
+        self.cache.record(n, 0);
+    }
+
+    fn memo_counters(&self) -> Option<CacheCounters> {
+        Some(self.cache.counters())
+    }
+
+    fn memo_warm(&self, pairs: &[(DesignPoint, Metrics)]) {
+        self.warm_with_fp(
+            EvalOne::workload_fingerprint(&self.inner),
+            pairs,
+        );
     }
 }
 
@@ -258,5 +506,49 @@ mod tests {
         c.inner.tag = 1;
         assert_eq!(c.eval(&d).unwrap(), under_a);
         assert_eq!(c.counters(), CacheCounters { hits: 1, misses: 2 });
+    }
+
+    #[test]
+    fn shared_cache_is_shared_across_evaluators() {
+        let store = SharedCache::new();
+        let mut c1 = CachedEvaluator::with_cache(
+            CountingEval { calls: 0 },
+            store.clone(),
+        );
+        let a = DesignPoint::a100();
+        let truth = c1.eval(&a).unwrap();
+        assert_eq!(c1.inner().calls, 1);
+        // A second evaluator over the same store: pure hit.
+        let mut c2 = CachedEvaluator::with_cache(
+            CountingEval { calls: 0 },
+            store.clone(),
+        );
+        assert!(c2.is_cached(&a));
+        assert_eq!(c2.eval(&a).unwrap(), truth);
+        assert_eq!(c2.inner().calls, 0);
+        // Counters are shared too: 1 miss (c1) + 1 hit (c2).
+        assert_eq!(
+            store.counters(),
+            CacheCounters { hits: 1, misses: 1 }
+        );
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn eval_one_face_memoizes_with_the_same_counters() {
+        use crate::sim::RooflineSim;
+        use crate::workload::GPT3_175B;
+        let c = CachedEvaluator::new(RooflineSim::new(GPT3_175B));
+        let a = DesignPoint::a100();
+        let m1 = EvalOne::eval_one(&c, &a);
+        let m2 = EvalOne::eval_one(&c, &a);
+        assert_eq!(m1, m2);
+        assert_eq!(c.counters(), CacheCounters { hits: 1, misses: 1 });
+        assert_eq!(EvalOne::probe(&c, &a), Some(m1));
+        assert!(EvalOne::memoizes(&c));
+        assert_eq!(
+            EvalOne::memo_counters(&c),
+            Some(c.counters())
+        );
     }
 }

@@ -9,12 +9,19 @@
 //!   trait objects by the races and the CLI.
 //!
 //! Pipeline adapters compose over them:
-//! * [`parallel::ParallelEvaluator`] — shards `eval_batch` across scoped
-//!   threads with deterministic input-order assembly (bit-identical to
-//!   the sequential path),
-//! * [`cache::CachedEvaluator`] — design-point-keyed memoization with
-//!   hit/miss counters; [`BudgetedEvaluator`] charges the sample budget
-//!   only for cache misses,
+//! * [`pool::WorkerPool`] — the persistent worker pool every parallel
+//!   batch dispatches to (one process-wide instance, capped at
+//!   `available_parallelism` lanes including the caller),
+//! * [`parallel::ParallelEvaluator`] — shards `eval_batch` across the
+//!   pool in contiguous chunks with deterministic input-order assembly
+//!   (bit-identical to the sequential path); when the inner evaluator
+//!   memoizes, batches are deduplicated and hits served on the caller
+//!   thread without touching the pool,
+//! * [`cache::CachedEvaluator`] — (workload, design)-keyed memoization
+//!   over a concurrent sharded [`cache::SharedCache`], with hit/miss
+//!   counters; [`BudgetedEvaluator`] charges the sample budget only for
+//!   cache misses. Composes on either side of the parallel layer
+//!   (`ParallelEvaluator<CachedEvaluator<_>>` is the CLI stack),
 //! * [`BudgetedEvaluator`] — budget enforcement + trajectory logging so
 //!   "number of samples" means the same thing for every method.
 //!
@@ -29,10 +36,12 @@
 
 pub mod cache;
 pub mod parallel;
+pub mod pool;
 pub mod suite;
 
-pub use cache::CachedEvaluator;
+pub use cache::{CachedEvaluator, SharedCache};
 pub use parallel::ParallelEvaluator;
+pub use pool::WorkerPool;
 pub use suite::{ScenarioMetrics, SuiteEvaluator};
 
 use std::fmt;
@@ -201,7 +210,24 @@ impl Metrics {
 
 /// The pure per-design evaluation function: no mutable state, safe to
 /// call from many threads at once. Both analytical simulators implement
-/// this; [`ParallelEvaluator`] shards batches over it.
+/// this; [`ParallelEvaluator`] shards batches over it via the
+/// [`WorkerPool`].
+///
+/// Beyond `eval_one`, the trait carries two groups of provided methods:
+///
+/// * **Chunk evaluation** — [`EvalOne::eval_chunk`] is what pool
+///   workers actually run; the simulators override it with their
+///   batched structure-of-arrays kernels (`eval_batch_soa`), which are
+///   bit-identical to per-design `eval_one` but walk the prepped op
+///   table once per chunk.
+/// * **Memo hooks** — `probe`/`memoizes`/`count_hits`/`memo_counters`/
+///   `memo_warm` let a thread-safe caching layer
+///   ([`CachedEvaluator`] over a [`SharedCache`]) sit *inside* the
+///   parallel layer: the batch path deduplicates against the memo
+///   store up front, serves hits on the caller thread without touching
+///   the pool, and evaluates only unique misses in parallel — with
+///   counters identical to the sequential caching path. Non-caching
+///   evaluators keep the no-op defaults.
 pub trait EvalOne: Send + Sync {
     /// Evaluate a single design (pure function of the design vector).
     fn eval_one(&self, d: &DesignPoint) -> Metrics;
@@ -217,6 +243,45 @@ pub trait EvalOne: Send + Sync {
     fn workload_fingerprint(&self) -> u64 {
         0
     }
+
+    /// Evaluate a contiguous chunk into `out` (same length). The
+    /// default is the per-design loop; simulators override it with
+    /// their SoA batch kernels. Must be bit-identical to `eval_one`
+    /// per design.
+    fn eval_chunk(&self, designs: &[DesignPoint], out: &mut [Metrics]) {
+        debug_assert_eq!(designs.len(), out.len());
+        for (d, slot) in designs.iter().zip(out.iter_mut()) {
+            *slot = self.eval_one(d);
+        }
+    }
+
+    /// Memo-store probe: `Some(m)` when `d` is already memoized under
+    /// the current workload. Silent — no counter effects (counting is
+    /// the caller's decision; see [`EvalOne::count_hits`]).
+    fn probe(&self, _d: &DesignPoint) -> Option<Metrics> {
+        None
+    }
+
+    /// True when a memo layer is present; enables the dedup/hit-bypass
+    /// batch path in [`ParallelEvaluator`].
+    fn memoizes(&self) -> bool {
+        false
+    }
+
+    /// Record `n` lookups served from the memo store by an
+    /// orchestrating batch layer (the hits it resolved via
+    /// [`EvalOne::probe`] plus intra-batch duplicates of fresh
+    /// designs). No-op without a memo layer.
+    fn count_hits(&self, _n: u64) {}
+
+    /// Memoization counters, when this evaluator caches.
+    fn memo_counters(&self) -> Option<CacheCounters> {
+        None
+    }
+
+    /// Seed known results into the memo store (checkpoint-resume path);
+    /// no-op without one.
+    fn memo_warm(&self, _pairs: &[(DesignPoint, Metrics)]) {}
 }
 
 /// Ceiling on budget-free cache hits in a [`BudgetedEvaluator`]: the

@@ -1,29 +1,51 @@
-//! Batch-parallel evaluation: shard `eval_batch` across scoped worker
-//! threads with deterministic, input-order result assembly.
+//! Batch-parallel evaluation: shard `eval_batch` across the persistent
+//! [`WorkerPool`] with deterministic, input-order result assembly.
 //!
-//! Workers split the input into contiguous chunks; chunk `i` of the
-//! output is written only by worker `i`, so assembly order never depends
-//! on thread scheduling and results are **bit-identical** to the
-//! sequential path (each design is evaluated by the same pure
-//! [`EvalOne::eval_one`] either way — see
+//! Lanes split the input into contiguous chunks; chunk `i` of the
+//! output is written only by the lane that ran chunk `i`, so assembly
+//! order never depends on thread scheduling and results are
+//! **bit-identical** to the sequential path (each design is evaluated
+//! by the same pure [`EvalOne`] evaluation either way — see
 //! `tests/eval_pipeline.rs::parallel_matches_sequential_bitwise`).
+//! Chunks run through [`EvalOne::eval_chunk`], which the simulators
+//! override with their SoA batch kernels, so pool parallelism and SoA
+//! vectorization compose.
+//!
+//! When the inner evaluator memoizes ([`EvalOne::memoizes`], see
+//! [`crate::eval::CachedEvaluator`]), `eval_batch` takes the memo-aware
+//! path: probe every design on the caller thread, serve hits **without
+//! touching the pool**, and dispatch only the unique uncached designs —
+//! each evaluated exactly once, so observable results and hit/miss
+//! counters are deterministic and identical to the sequential caching
+//! path.
+//!
+//! The PR-1 scoped-spawn sharder survives as
+//! [`eval_batch_parallel`] — the benchmark baseline (`perf_hotpath`
+//! compares pool dispatch against spawn-per-batch) and a second test
+//! oracle; the adapter itself always dispatches to the shared pool.
+
+use std::collections::{HashMap, HashSet};
 
 use crate::design::DesignPoint;
-use crate::eval::{EvalOne, Evaluator, Metrics};
+use crate::eval::{
+    CacheCounters, EvalOne, Evaluator, Metrics, WorkerPool,
+};
 use crate::Result;
 
-/// Batches smaller than this run sequentially: scoped-thread spawn
-/// overhead (~10us/worker) would dominate sub-millisecond batches.
+/// Batches smaller than this run sequentially on the caller: even pool
+/// dispatch (a queue push + condvar wake per lane) would dominate
+/// sub-microsecond chunks.
 const MIN_PARALLEL_BATCH: usize = 8;
 
 /// Worker count used by [`ParallelEvaluator::new`]: every available
-/// hardware thread.
+/// hardware thread (the caller lane plus the global pool's workers).
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 /// Adapter that evaluates batches of a pure [`EvalOne`] evaluator in
-/// parallel. Single-design calls stay on the caller's thread.
+/// parallel on the process-wide [`WorkerPool`]. Single-design calls
+/// stay on the caller's thread.
 #[derive(Debug, Clone)]
 pub struct ParallelEvaluator<E> {
     inner: E,
@@ -36,7 +58,7 @@ impl<E: EvalOne> ParallelEvaluator<E> {
         Self::with_threads(inner, default_threads())
     }
 
-    /// Wrap `inner` with an explicit worker count (1 = sequential).
+    /// Wrap `inner` with an explicit lane count (1 = sequential).
     pub fn with_threads(inner: E, threads: usize) -> Self {
         Self { inner, threads: threads.max(1) }
     }
@@ -66,25 +88,129 @@ impl<E: EvalOne> EvalOne for ParallelEvaluator<E> {
     fn workload_fingerprint(&self) -> u64 {
         self.inner.workload_fingerprint()
     }
+
+    fn eval_chunk(&self, designs: &[DesignPoint], out: &mut [Metrics]) {
+        self.inner.eval_chunk(designs, out);
+    }
+
+    fn probe(&self, d: &DesignPoint) -> Option<Metrics> {
+        self.inner.probe(d)
+    }
+
+    fn memoizes(&self) -> bool {
+        self.inner.memoizes()
+    }
+
+    fn count_hits(&self, n: u64) {
+        self.inner.count_hits(n);
+    }
+
+    fn memo_counters(&self) -> Option<CacheCounters> {
+        self.inner.memo_counters()
+    }
+
+    fn memo_warm(&self, pairs: &[(DesignPoint, Metrics)]) {
+        self.inner.memo_warm(pairs);
+    }
 }
 
 impl<E: EvalOne> Evaluator for ParallelEvaluator<E> {
     fn eval_batch(&mut self, designs: &[DesignPoint]) -> Result<Vec<Metrics>> {
-        Ok(eval_batch_parallel(&self.inner, designs, self.threads))
+        Ok(eval_batch_pooled(&self.inner, designs, self.threads))
     }
 
     fn name(&self) -> &'static str {
         self.inner.label()
     }
 
+    fn is_cached(&self, d: &DesignPoint) -> bool {
+        self.inner.probe(d).is_some()
+    }
+
+    fn cache_counters(&self) -> Option<CacheCounters> {
+        self.inner.memo_counters()
+    }
+
     fn workload_fingerprint(&self) -> u64 {
         EvalOne::workload_fingerprint(&self.inner)
     }
+
+    fn preload(&mut self, pairs: &[(DesignPoint, Metrics)]) {
+        self.inner.memo_warm(pairs);
+    }
 }
 
-/// Evaluate `designs` across up to `threads` scoped workers, returning
-/// results in input order. The free-function form lets callers shard
-/// over a shared `&E` without the adapter.
+/// Evaluate `designs` on the global [`WorkerPool`] across up to
+/// `threads` lanes, returning results in input order. Memoizing inner
+/// evaluators get the dedup/hit-bypass path (see module docs). The
+/// free-function form lets callers shard over a shared `&E` without
+/// the adapter.
+pub fn eval_batch_pooled<E: EvalOne + ?Sized>(
+    ev: &E,
+    designs: &[DesignPoint],
+    threads: usize,
+) -> Vec<Metrics> {
+    let n = designs.len();
+    if !ev.memoizes() {
+        let mut out = vec![Metrics::default(); n];
+        dispatch(ev, designs, &mut out, threads);
+        return out;
+    }
+    // Memo-aware path: hits resolve on this thread, only unique
+    // uncached designs are dispatched (each exactly once, so the
+    // hit/miss counters match the sequential caching path: one miss
+    // per unique fresh design, everything else a hit).
+    let mut out: Vec<Option<Metrics>> = Vec::with_capacity(n);
+    let mut fresh: Vec<DesignPoint> = Vec::new();
+    let mut seen: HashSet<DesignPoint> = HashSet::new();
+    for d in designs {
+        match ev.probe(d) {
+            Some(m) => out.push(Some(m)),
+            None => {
+                if seen.insert(*d) {
+                    fresh.push(*d);
+                }
+                out.push(None);
+            }
+        }
+    }
+    let mut fresh_ms = vec![Metrics::default(); fresh.len()];
+    // The memo layer's own `eval_chunk` runs on the pool lanes: it
+    // misses on every (all-fresh) design, evaluates through the inner
+    // SoA kernel and memoizes + counts the misses.
+    dispatch(ev, &fresh, &mut fresh_ms, threads);
+    ev.count_hits((n - fresh.len()) as u64);
+    let by_design: HashMap<DesignPoint, Metrics> =
+        fresh.iter().copied().zip(fresh_ms).collect();
+    designs
+        .iter()
+        .zip(out)
+        .map(|(d, slot)| match slot {
+            Some(m) => m,
+            None => by_design[d],
+        })
+        .collect()
+}
+
+/// Chunked pool dispatch (sequential below the batch-size floor).
+fn dispatch<E: EvalOne + ?Sized>(
+    ev: &E,
+    designs: &[DesignPoint],
+    out: &mut [Metrics],
+    threads: usize,
+) {
+    if threads <= 1 || designs.len() < MIN_PARALLEL_BATCH {
+        ev.eval_chunk(designs, out);
+    } else {
+        WorkerPool::global().eval_on(ev, designs, out, threads);
+    }
+}
+
+/// Evaluate `designs` across up to `threads` *freshly spawned* scoped
+/// workers, returning results in input order. This is the PR-1
+/// implementation, kept as the spawn-per-batch baseline the
+/// `perf_hotpath` pool rows are compared against and as an independent
+/// oracle for the pool's assembly order.
 pub fn eval_batch_parallel<E: EvalOne + ?Sized>(
     ev: &E,
     designs: &[DesignPoint],
@@ -117,6 +243,7 @@ pub fn eval_batch_parallel<E: EvalOne + ?Sized>(
 mod tests {
     use super::*;
     use crate::design::{sample, DesignSpace};
+    use crate::eval::CachedEvaluator;
     use crate::sim::RooflineSim;
     use crate::stats::rng::Pcg32;
     use crate::workload::GPT3_175B;
@@ -131,7 +258,9 @@ mod tests {
             let seq: Vec<_> = ds.iter().map(|d| sim.eval_one(d)).collect();
             for threads in [1usize, 2, 3, 7] {
                 let par = eval_batch_parallel(&sim, &ds, threads);
-                assert_eq!(par, seq, "n={n} threads={threads}");
+                assert_eq!(par, seq, "spawn: n={n} threads={threads}");
+                let pooled = eval_batch_pooled(&sim, &ds, threads);
+                assert_eq!(pooled, seq, "pool: n={n} threads={threads}");
             }
         }
     }
@@ -147,5 +276,82 @@ mod tests {
         assert_eq!(Evaluator::name(&p), "roofline-rs");
         assert_eq!(ParallelEvaluator::with_threads(
             RooflineSim::new(GPT3_175B), 0).threads(), 1);
+    }
+
+    /// EvalOne wrapper counting how many designs reach the simulator —
+    /// the memo-bypass proof (thread-safe: the pool may call it).
+    struct CountingSim {
+        sim: RooflineSim,
+        evals: std::sync::atomic::AtomicUsize,
+    }
+
+    impl CountingSim {
+        fn evals(&self) -> usize {
+            self.evals.load(std::sync::atomic::Ordering::Relaxed)
+        }
+    }
+
+    impl EvalOne for CountingSim {
+        fn eval_one(&self, d: &DesignPoint) -> Metrics {
+            self.evals
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.sim.eval_one(d)
+        }
+        fn label(&self) -> &'static str {
+            "counting-sim"
+        }
+        fn workload_fingerprint(&self) -> u64 {
+            EvalOne::workload_fingerprint(&self.sim)
+        }
+        fn eval_chunk(
+            &self,
+            designs: &[DesignPoint],
+            out: &mut [Metrics],
+        ) {
+            self.evals.fetch_add(
+                designs.len(),
+                std::sync::atomic::Ordering::Relaxed,
+            );
+            self.sim.eval_chunk(designs, out);
+        }
+    }
+
+    #[test]
+    fn memo_aware_batch_serves_hits_without_dispatch() {
+        let space = DesignSpace::table1();
+        let mut rng = Pcg32::new(23);
+        let ds = sample::uniform_batch(&space, &mut rng, 64);
+        let mut plain = RooflineSim::new(GPT3_175B);
+        let want = plain.eval_batch(&ds).unwrap();
+
+        let mut stack = ParallelEvaluator::new(CachedEvaluator::new(
+            CountingSim {
+                sim: RooflineSim::new(GPT3_175B),
+                evals: std::sync::atomic::AtomicUsize::new(0),
+            },
+        ));
+        let cold = stack.eval_batch(&ds).unwrap();
+        assert_eq!(cold, want);
+        let unique = stack.inner().len();
+        assert_eq!(
+            stack.inner().inner().evals(),
+            unique,
+            "each unique design simulated exactly once"
+        );
+        let c = Evaluator::cache_counters(&stack).unwrap();
+        assert_eq!(c.misses, unique as u64);
+        assert_eq!(c.hits, ds.len() as u64 - unique as u64);
+        // Warm revisit: bit-identical, served entirely from the memo
+        // store — the simulator (and therefore the pool) sees nothing.
+        let warm = stack.eval_batch(&ds).unwrap();
+        assert_eq!(warm, want);
+        assert_eq!(
+            stack.inner().inner().evals(),
+            unique,
+            "hit path must bypass evaluation entirely"
+        );
+        let c = Evaluator::cache_counters(&stack).unwrap();
+        assert_eq!(c.misses, unique as u64);
+        assert_eq!(c.hits, 2 * ds.len() as u64 - unique as u64);
     }
 }

@@ -1,0 +1,426 @@
+//! Persistent worker pool for batch evaluation.
+//!
+//! PR-1's [`super::parallel::eval_batch_parallel`] spawned fresh scoped
+//! threads on **every** `eval_batch` call (~10us per worker per call),
+//! and every live `ParallelEvaluator` could claim every hardware thread
+//! at once — N concurrent evaluators meant N x `available_parallelism`
+//! threads. This module replaces that with one process-wide pool of
+//! long-lived workers:
+//!
+//! * **Long-lived workers.** [`WorkerPool::global`] spawns
+//!   `available_parallelism - 1` workers exactly once; every batch after
+//!   the first pays only a queue push + condvar wake, not thread
+//!   creation. The caller itself executes chunks too (it would otherwise
+//!   idle), so total active threads per batch is capped at
+//!   `available_parallelism` no matter how many evaluators share the
+//!   pool — the fused race's (method x trial) cells, the suite's
+//!   per-scenario members and the bench drivers all draw from the same
+//!   fixed worker set.
+//! * **Chunked distribution, deterministic assembly.** A batch is split
+//!   into contiguous chunks; chunk `i` writes only output slots
+//!   `[i*chunk, (i+1)*chunk)`, so results are assembled in input order
+//!   regardless of which worker ran which chunk — bit-identical to the
+//!   sequential path (each design goes through the same pure
+//!   [`EvalOne`] evaluation either way).
+//! * **SoA chunk kernels.** Workers call [`EvalOne::eval_chunk`], which
+//!   the simulators override with their batched structure-of-arrays
+//!   kernels (`eval_batch_soa`), so pool parallelism and SoA
+//!   vectorization compose.
+//!
+//! Safety: tasks carry raw pointers into the caller's stack (the
+//! evaluator reference, the input slice, the output buffer).
+//! [`WorkerPool::eval_on`] does not return until the batch latch counts
+//! every chunk complete — including chunks whose evaluation panicked
+//! (the panic is caught, the latch still fires, and the caller re-raises
+//! after the batch drains) — so the pointed-to data strictly outlives
+//! every access.
+
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use crate::design::DesignPoint;
+use crate::eval::{EvalOne, Metrics};
+
+use super::parallel::default_threads;
+
+/// Completion latch of one in-flight batch.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(chunks: usize) -> Self {
+        Self {
+            remaining: Mutex::new(chunks),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    /// One chunk finished (evaluated or panicked).
+    fn complete_one(&self) {
+        let mut left =
+            self.remaining.lock().expect("latch lock poisoned");
+        *left -= 1;
+        if *left == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every chunk completed.
+    fn wait(&self) {
+        let mut left =
+            self.remaining.lock().expect("latch lock poisoned");
+        while *left > 0 {
+            left = self.done.wait(left).expect("latch lock poisoned");
+        }
+    }
+}
+
+/// One chunk of a batch, type-erased for the queue. The pointers stay
+/// valid until `latch` fires (see module docs).
+struct Task {
+    /// Monomorphized trampoline: casts `ev` back to `&E` and runs
+    /// [`EvalOne::eval_chunk`] over the chunk.
+    run: unsafe fn(*const (), *const DesignPoint, *mut Metrics, usize),
+    /// Thin pointer to the caller's `&E` (itself possibly a fat
+    /// reference — hence the extra indirection).
+    ev: *const (),
+    src: *const DesignPoint,
+    dst: *mut Metrics,
+    len: usize,
+    latch: Arc<Latch>,
+}
+
+// Safety: the pointers are only dereferenced while the owning
+// `eval_on` call blocks on the latch, and `EvalOne: Send + Sync`
+// makes the shared evaluator reference sound across threads.
+unsafe impl Send for Task {}
+
+unsafe fn run_chunk<E: EvalOne + ?Sized>(
+    ev: *const (),
+    src: *const DesignPoint,
+    dst: *mut Metrics,
+    len: usize,
+) {
+    // Safety: contract of `Task` / `eval_on` (pointers valid, types
+    // match the monomorphization that created this trampoline).
+    let ev: &E = unsafe { *(ev as *const &E) };
+    let src = unsafe { std::slice::from_raw_parts(src, len) };
+    let dst = unsafe { std::slice::from_raw_parts_mut(dst, len) };
+    ev.eval_chunk(src, dst);
+}
+
+/// Queue + instrumentation shared between the pool handle and workers.
+struct Shared {
+    state: Mutex<QueueState>,
+    available: Condvar,
+    /// Worker threads currently executing a task (callers helping with
+    /// their own batch are not counted — they are the caller's own
+    /// thread, not pool capacity).
+    active_workers: AtomicUsize,
+    /// High-water mark of `active_workers` — the oversubscription
+    /// regression tests assert this never exceeds the worker count.
+    peak_workers: AtomicUsize,
+    /// Batches dispatched through the pool since construction.
+    dispatches: AtomicU64,
+}
+
+struct QueueState {
+    tasks: VecDeque<Task>,
+    shutdown: bool,
+}
+
+/// Persistent evaluation worker pool (see module docs).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Process-wide pool instance.
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+impl WorkerPool {
+    /// The process-wide pool: `available_parallelism - 1` workers (the
+    /// caller thread is the final lane), spawned once on first use.
+    pub fn global() -> &'static WorkerPool {
+        GLOBAL.get_or_init(|| {
+            WorkerPool::new(default_threads().saturating_sub(1))
+        })
+    }
+
+    /// Build a private pool with exactly `workers` threads (0 = every
+    /// batch runs inline on the caller). Prefer [`WorkerPool::global`]
+    /// outside tests — private pools add threads beyond the global cap.
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                tasks: VecDeque::new(),
+                shutdown: false,
+            }),
+            available: Condvar::new(),
+            active_workers: AtomicUsize::new(0),
+            peak_workers: AtomicUsize::new(0),
+            dispatches: AtomicU64::new(0),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name("lumina-eval".into())
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, handles }
+    }
+
+    /// Number of long-lived worker threads.
+    pub fn worker_count(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// High-water mark of concurrently busy workers since construction.
+    pub fn peak_worker_tasks(&self) -> usize {
+        self.shared.peak_workers.load(Ordering::Relaxed)
+    }
+
+    /// Batches dispatched through the pool since construction.
+    pub fn dispatches(&self) -> u64 {
+        self.shared.dispatches.load(Ordering::Relaxed)
+    }
+
+    /// Evaluate `designs` into `out` (same length) across up to
+    /// `threads` lanes (the caller plus pool workers), chunked
+    /// contiguously with input-order assembly. Blocks until the whole
+    /// batch is done; re-raises if any chunk panicked.
+    pub fn eval_on<E: EvalOne + ?Sized>(
+        &self,
+        ev: &E,
+        designs: &[DesignPoint],
+        out: &mut [Metrics],
+        threads: usize,
+    ) {
+        let n = designs.len();
+        assert_eq!(n, out.len(), "output buffer length mismatch");
+        if n == 0 {
+            return;
+        }
+        let lanes = threads.clamp(1, n).min(self.worker_count() + 1);
+        if lanes == 1 {
+            ev.eval_chunk(designs, out);
+            return;
+        }
+        self.shared.dispatches.fetch_add(1, Ordering::Relaxed);
+        // Ceiling division: every lane gets at most `chunk` designs and
+        // the chunk partitions of input and output line up exactly.
+        let chunk = n.div_ceil(lanes);
+        let n_chunks = n.div_ceil(chunk);
+        let latch = Arc::new(Latch::new(n_chunks));
+        let ev_ref: &E = ev;
+        let ev_ptr = (&ev_ref as *const &E).cast::<()>();
+        {
+            let mut state =
+                self.shared.state.lock().expect("pool lock poisoned");
+            for (src, dst) in
+                designs.chunks(chunk).zip(out.chunks_mut(chunk))
+            {
+                state.tasks.push_back(Task {
+                    run: run_chunk::<E>,
+                    ev: ev_ptr,
+                    src: src.as_ptr(),
+                    dst: dst.as_mut_ptr(),
+                    len: src.len(),
+                    latch: Arc::clone(&latch),
+                });
+            }
+        }
+        self.shared.available.notify_all();
+        // The caller is a lane too: steal back chunks of its own batch
+        // while workers drain the rest (with zero workers this runs the
+        // whole batch inline).
+        while let Some(task) = self.steal_own(&latch) {
+            execute(task, None);
+        }
+        latch.wait();
+        if latch.panicked.load(Ordering::Acquire) {
+            panic!("evaluation panicked in a pool worker chunk");
+        }
+    }
+
+    /// Pop one queued task belonging to `latch`, if any.
+    fn steal_own(&self, latch: &Arc<Latch>) -> Option<Task> {
+        let mut state =
+            self.shared.state.lock().expect("pool lock poisoned");
+        let pos = state
+            .tasks
+            .iter()
+            .position(|t| Arc::ptr_eq(&t.latch, latch))?;
+        state.tasks.remove(pos)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut state =
+                self.shared.state.lock().expect("pool lock poisoned");
+            state.shutdown = true;
+        }
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let task = {
+            let mut state =
+                shared.state.lock().expect("pool lock poisoned");
+            loop {
+                if let Some(t) = state.tasks.pop_front() {
+                    break t;
+                }
+                // Exit only with an empty queue, so no latch is left
+                // hanging by a shutdown racing an in-flight batch.
+                if state.shutdown {
+                    return;
+                }
+                state = shared
+                    .available
+                    .wait(state)
+                    .expect("pool lock poisoned");
+            }
+        };
+        execute(task, Some(shared));
+    }
+}
+
+/// Run one task with panic isolation; `shared` is set when a pool
+/// worker (not a helping caller) executes, to drive the busy counters.
+fn execute(task: Task, shared: Option<&Shared>) {
+    if let Some(s) = shared {
+        let busy = s.active_workers.fetch_add(1, Ordering::Relaxed) + 1;
+        s.peak_workers.fetch_max(busy, Ordering::Relaxed);
+    }
+    let result = panic::catch_unwind(AssertUnwindSafe(|| unsafe {
+        (task.run)(task.ev, task.src, task.dst, task.len)
+    }));
+    if let Some(s) = shared {
+        s.active_workers.fetch_sub(1, Ordering::Relaxed);
+    }
+    if result.is_err() {
+        task.latch.panicked.store(true, Ordering::Release);
+    }
+    task.latch.complete_one();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design::{sample, DesignSpace};
+    use crate::sim::RooflineSim;
+    use crate::stats::rng::Pcg32;
+    use crate::workload::GPT3_175B;
+
+    fn designs(n: usize) -> Vec<DesignPoint> {
+        let space = DesignSpace::table1();
+        let mut rng = Pcg32::new(5);
+        sample::uniform_batch(&space, &mut rng, n)
+    }
+
+    #[test]
+    fn pool_matches_sequential_on_odd_sizes_and_lane_counts() {
+        let sim = RooflineSim::new(GPT3_175B);
+        let pool = WorkerPool::new(3);
+        for n in [0usize, 1, 2, 7, 8, 31, 64] {
+            let ds = designs(n);
+            let want: Vec<Metrics> =
+                ds.iter().map(|d| sim.eval_one(d)).collect();
+            for threads in [1usize, 2, 4, 16] {
+                let mut out = vec![Metrics::default(); n];
+                pool.eval_on(&sim, &ds, &mut out, threads);
+                assert_eq!(out, want, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let sim = RooflineSim::new(GPT3_175B);
+        let pool = WorkerPool::new(0);
+        let ds = designs(16);
+        let mut out = vec![Metrics::default(); 16];
+        pool.eval_on(&sim, &ds, &mut out, 8);
+        let want: Vec<Metrics> =
+            ds.iter().map(|d| sim.eval_one(d)).collect();
+        assert_eq!(out, want);
+        // All inline: never counted as a dispatch, workers never busy.
+        assert_eq!(pool.worker_count(), 0);
+        assert_eq!(pool.peak_worker_tasks(), 0);
+    }
+
+    #[test]
+    fn workers_are_reused_across_batches() {
+        let sim = RooflineSim::new(GPT3_175B);
+        let pool = WorkerPool::new(2);
+        let ds = designs(32);
+        let mut out = vec![Metrics::default(); 32];
+        for _ in 0..10 {
+            pool.eval_on(&sim, &ds, &mut out, 3);
+        }
+        assert_eq!(pool.worker_count(), 2, "no threads added per batch");
+        assert_eq!(pool.dispatches(), 10);
+        assert!(pool.peak_worker_tasks() <= 2);
+    }
+
+    #[test]
+    fn panicking_chunk_propagates_and_pool_survives() {
+        struct Bomb;
+        impl EvalOne for Bomb {
+            fn eval_one(&self, d: &DesignPoint) -> Metrics {
+                use crate::design::Param;
+                assert!(d.get(Param::Cores) != 0, "boom");
+                Metrics::default()
+            }
+            fn label(&self) -> &'static str {
+                "bomb"
+            }
+        }
+        let pool = WorkerPool::new(2);
+        let mut bad = designs(16);
+        use crate::design::Param;
+        bad[11] = bad[11].with(Param::Cores, 0);
+        let mut out = vec![Metrics::default(); 16];
+        let err = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.eval_on(&Bomb, &bad, &mut out, 4)
+        }));
+        assert!(err.is_err(), "panic must propagate to the caller");
+        // The pool still works afterwards.
+        let sim = RooflineSim::new(GPT3_175B);
+        let ds = designs(16);
+        let mut out = vec![Metrics::default(); 16];
+        pool.eval_on(&sim, &ds, &mut out, 4);
+        let want: Vec<Metrics> =
+            ds.iter().map(|d| sim.eval_one(d)).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn global_pool_is_capped_at_available_parallelism() {
+        let pool = WorkerPool::global();
+        assert_eq!(
+            pool.worker_count(),
+            default_threads().saturating_sub(1),
+            "global pool must leave one lane for the caller"
+        );
+        assert!(pool.peak_worker_tasks() <= pool.worker_count());
+    }
+}

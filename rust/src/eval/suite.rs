@@ -4,7 +4,10 @@
 //! [`SuiteEvaluator`] owns one inner evaluator per scenario (built by a
 //! caller-supplied factory, so the suite composes with
 //! [`super::ParallelEvaluator`] / [`super::CachedEvaluator`] and any
-//! backend). `eval_batch` returns a **composite** [`Metrics`] per
+//! backend; pool-backed parallel members all dispatch to the one
+//! process-wide [`super::WorkerPool`], so a 7-member suite cannot
+//! oversubscribe the host). `eval_batch` returns a **composite**
+//! [`Metrics`] per
 //! design: TTFT/TPOT are the weighted means of the per-scenario values
 //! normalized by that scenario's A100 reference (so the A100 scores
 //! exactly 1.0 on both axes and DSE methods optimize a dimensionless

@@ -7,7 +7,8 @@ use crate::baselines::{all_methods_mode, all_sessions_mode, DseMethod};
 use crate::design::{DesignPoint, DesignSpace};
 use crate::dse::{FusedRace, NullObserver, Observer};
 use crate::eval::{
-    BudgetedEvaluator, Evaluator, Metrics, ParallelEvaluator,
+    BudgetedEvaluator, CachedEvaluator, Evaluator, Metrics,
+    ParallelEvaluator,
 };
 use crate::pareto::{
     normalize, phv_ref, sample_efficiency, superior_count,
@@ -32,21 +33,60 @@ pub enum EvaluatorKind {
 
 impl EvaluatorKind {
     /// Build the evaluation pipeline every DSE method drives. The pure
-    /// analytical simulators are wrapped in [`ParallelEvaluator`], which
-    /// shards batches across threads with results bit-identical to the
-    /// sequential path; PJRT does its own artifact-level batching.
+    /// analytical simulators are wrapped in [`ParallelEvaluator`],
+    /// which shards SoA chunks across the persistent
+    /// [`crate::eval::WorkerPool`] with results bit-identical to the
+    /// sequential path; PJRT does its own artifact-level batching. All
+    /// pipelines built here draw from the one process-wide pool, so a
+    /// race's (method x trial) cells can never oversubscribe the host.
     ///
     /// Deliberately *not* memoized: the races compare methods under
     /// identical per-sample accounting, and a cache shared across
     /// (method, trial) cells would hand later methods free revisits of
     /// earlier methods' points. Single-method exploration (the CLI
-    /// `explore` command) wraps this in
-    /// [`crate::eval::CachedEvaluator`] instead.
+    /// `explore` command) uses [`Self::make_cached_for`] instead.
     ///
     /// `make()` uses the default registry scenario; [`Self::make_for`]
     /// builds the same pipeline for an explicit workload.
     pub fn make(self) -> Box<dyn Evaluator> {
         self.make_for(&default_scenario().spec)
+    }
+
+    /// Build the memoized exploration stack for a workload:
+    /// `ParallelEvaluator<CachedEvaluator<Sim>>` — the parallel layer
+    /// probes the concurrent sharded memo store up front, serves hits
+    /// on the caller thread without touching the worker pool, and
+    /// evaluates only unique misses in parallel through the SoA chunk
+    /// kernels. Counters and results are bit-identical to the
+    /// sequential caching path, so
+    /// [`crate::eval::BudgetedEvaluator`]'s hits-ride-free accounting
+    /// is unchanged. The PJRT artifact (which batches internally and
+    /// is not a pure per-design function) keeps the historical
+    /// cache-outside composition.
+    pub fn make_cached_for(
+        self,
+        spec: &WorkloadSpec,
+    ) -> Box<dyn Evaluator> {
+        match self {
+            EvaluatorKind::RooflinePjrt => {
+                match open_matching_pjrt(spec) {
+                    Some(e) => Box::new(CachedEvaluator::new(e)),
+                    None => Box::new(ParallelEvaluator::new(
+                        CachedEvaluator::new(RooflineSim::new(*spec)),
+                    )),
+                }
+            }
+            EvaluatorKind::RooflineRust => {
+                Box::new(ParallelEvaluator::new(CachedEvaluator::new(
+                    RooflineSim::new(*spec),
+                )))
+            }
+            EvaluatorKind::Compass => {
+                Box::new(ParallelEvaluator::new(CachedEvaluator::new(
+                    CompassSim::new(*spec),
+                )))
+            }
+        }
     }
 
     /// Build the evaluation pipeline for a specific workload. The PJRT
@@ -59,16 +99,7 @@ impl EvaluatorKind {
     pub fn make_for(self, spec: &WorkloadSpec) -> Box<dyn Evaluator> {
         match self {
             EvaluatorKind::RooflinePjrt => {
-                let artifact_matches =
-                    crate::runtime::ArtifactDir::open_default()
-                        .map(|a| spec_by_name(&a.workload) == Some(*spec))
-                        .unwrap_or(false);
-                let pjrt = if artifact_matches {
-                    PjrtEvaluator::open_default().ok()
-                } else {
-                    None
-                };
-                match pjrt {
+                match open_matching_pjrt(spec) {
                     Some(e) => Box::new(e),
                     None => Box::new(ParallelEvaluator::new(
                         RooflineSim::new(*spec),
@@ -82,6 +113,22 @@ impl EvaluatorKind {
                 CompassSim::new(*spec),
             )),
         }
+    }
+}
+
+/// The single artifact-match policy shared by [`EvaluatorKind::make_for`]
+/// and [`EvaluatorKind::make_cached_for`]: open the PJRT evaluator only
+/// when the default artifact was lowered for exactly `spec` (probed from
+/// `meta.json` *before* constructing the PJRT client, so non-matching
+/// scenarios never pay client/table setup).
+fn open_matching_pjrt(spec: &WorkloadSpec) -> Option<PjrtEvaluator> {
+    let artifact_matches = crate::runtime::ArtifactDir::open_default()
+        .map(|a| spec_by_name(&a.workload) == Some(*spec))
+        .unwrap_or(false);
+    if artifact_matches {
+        PjrtEvaluator::open_default().ok()
+    } else {
+        None
     }
 }
 

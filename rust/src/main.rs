@@ -330,11 +330,15 @@ fn cmd_explore(args: &Args) -> lumina::Result<()> {
     let scenario = workload_arg(args)?;
     println!("workload: {} ({})", scenario.name, scenario.regime);
 
-    // Memoize over the evaluation pipeline: LUMINA restarts and
-    // sensitivity sweeps revisit grid points, and cache hits don't burn
-    // the sample budget.
-    let mut ev = CachedEvaluator::new(kind.make_for(&scenario.spec));
-    let (traj, reference, lum) = run_explore(args, "lumina", &mut ev)?;
+    // The composed memoized stack
+    // (`ParallelEvaluator<CachedEvaluator<_>>`): LUMINA restarts and
+    // sensitivity sweeps revisit grid points — hits are served from the
+    // concurrent memo store without touching the worker pool and don't
+    // burn the sample budget, while fresh proposals evaluate in
+    // parallel through the SoA chunk kernels.
+    let mut ev = kind.make_cached_for(&scenario.spec);
+    let (traj, reference, lum) =
+        run_explore(args, "lumina", ev.as_mut())?;
     if args.flag("verbose") {
         if let Some(ahk) = &lum.ahk {
             println!("\ninfluence map:\n{}", ahk.qual.render());
@@ -375,12 +379,17 @@ fn cmd_explore_suite(args: &Args) -> lumina::Result<()> {
             .join(", ")
     );
 
+    // Per-scenario members are pool-backed parallel pipelines: every
+    // member's batch shards over the same process-wide worker pool, so
+    // a 7-scenario suite cannot oversubscribe the host.
     let mut factory = |spec: &WorkloadSpec| -> Box<dyn Evaluator> {
         kind.make_for(spec)
     };
     let suite = SuiteEvaluator::new(&scenarios, &mut factory)?;
-    // One sample = one design evaluated under every scenario; the memo
-    // cache keys on the suite's combined workload fingerprint.
+    // One sample = one design evaluated under every scenario; the
+    // composite is memoized *outside* the members (keyed on the
+    // suite's combined workload fingerprint) so a revisited design
+    // skips all members at once and rides free on the budget.
     let mut ev = CachedEvaluator::new(suite);
     let (traj, reference, _lum) =
         run_explore(args, "lumina-suite", &mut ev)?;

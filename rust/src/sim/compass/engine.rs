@@ -287,6 +287,133 @@ impl CompassSim {
         (metrics, cp)
     }
 
+    /// Evaluate a batch with the structure-of-arrays kernel: **one**
+    /// walk of the prepped op table per batch (not per design), with
+    /// the design-dependent intermediates laid out across designs so
+    /// the per-op inner loops stay hot (one op kind's code path runs
+    /// back-to-back over all designs) and auto-vectorize where the
+    /// models allow.
+    ///
+    /// Bit-identity: every per-design quantity is produced by the same
+    /// functions (`run_matmul` / `run_vector` / `run_comm` /
+    /// `op_energy`) in the same per-design accumulation order as
+    /// [`CompassSim::evaluate_detailed`] — ops in table order, phase
+    /// totals / stall buckets / energies summed op-by-op — so results
+    /// equal `eval_one` bitwise (asserted per scenario in
+    /// `tests/soa_pool.rs`). What the batch form *removes* is the
+    /// per-design `CriticalPath` allocation and the six summation
+    /// re-passes over its records.
+    pub fn eval_batch_soa(&self, designs: &[DesignPoint]) -> Vec<Metrics> {
+        let mut out = vec![Metrics::default(); designs.len()];
+        self.eval_soa_into(designs, &mut out);
+        out
+    }
+
+    /// [`CompassSim::eval_batch_soa`] writing into a caller buffer (the
+    /// pool-worker chunk path).
+    pub fn eval_soa_into(
+        &self,
+        designs: &[DesignPoint],
+        out: &mut [Metrics],
+    ) {
+        debug_assert_eq!(designs.len(), out.len());
+        let n = designs.len();
+        if n == 0 {
+            return;
+        }
+        // Per-design models, built once per batch.
+        let mems: Vec<MemorySystem> =
+            designs.iter().map(MemorySystem::new).collect();
+        let icns: Vec<Interconnect> = designs
+            .iter()
+            .map(|d| Interconnect::new(d, self.spec.tp))
+            .collect();
+        // SoA accumulators: per phase, wall time / stall buckets /
+        // dynamic energy across designs.
+        let mut wall_s: [Vec<f32>; 2] =
+            std::array::from_fn(|_| vec![0f32; n]);
+        let mut stall_s: [[Vec<f32>; 3]; 2] = std::array::from_fn(|_| {
+            std::array::from_fn(|_| vec![0f32; n])
+        });
+        let mut energy_j: [Vec<f32>; 2] =
+            std::array::from_fn(|_| vec![0f32; n]);
+        for op in &self.prepped {
+            let p = op.phase.index();
+            // Dispatch on the op kind once per op, not once per
+            // (op, design); each arm runs the exact per-design record
+            // construction of `run_op`.
+            match op.prep {
+                Prepped::Matmul { .. } => {
+                    for i in 0..n {
+                        let rec =
+                            self.run_matmul(&designs[i], &mems[i], op);
+                        let e = op_energy(&op.prep, &mems[i], &icns[i]);
+                        wall_s[p][i] += rec.wall_s;
+                        stall_s[p][rec.stall.index()][i] += rec.wall_s;
+                        energy_j[p][i] += e.total();
+                    }
+                }
+                Prepped::Vector { .. } => {
+                    for i in 0..n {
+                        let rec =
+                            self.run_vector(&designs[i], &mems[i], op);
+                        let e = op_energy(&op.prep, &mems[i], &icns[i]);
+                        wall_s[p][i] += rec.wall_s;
+                        stall_s[p][rec.stall.index()][i] += rec.wall_s;
+                        energy_j[p][i] += e.total();
+                    }
+                }
+                Prepped::Comm { .. } => {
+                    for i in 0..n {
+                        let rec =
+                            self.run_comm(&mems[i], &icns[i], op);
+                        let e = op_energy(&op.prep, &mems[i], &icns[i]);
+                        wall_s[p][i] += rec.wall_s;
+                        stall_s[p][rec.stall.index()][i] += rec.wall_s;
+                        energy_j[p][i] += e.total();
+                    }
+                }
+            }
+        }
+        // Assembly: the exact tail expressions of `evaluate_detailed`.
+        for (i, (d, slot)) in
+            designs.iter().zip(out.iter_mut()).enumerate()
+        {
+            let area = area_mm2(d);
+            let ttft_ms = wall_s[0][i] * 1e3;
+            let tpot_ms = wall_s[1][i] * 1e3;
+            let prefill_energy_mj = energy_j[0][i] * 1e3
+                + c::LEAKAGE_W_PER_MM2 * area * ttft_ms;
+            let energy_per_token_mj = energy_j[1][i] * 1e3
+                + c::LEAKAGE_W_PER_MM2 * area * tpot_ms;
+            *slot = Metrics {
+                ttft_ms,
+                tpot_ms,
+                area_mm2: area,
+                energy_per_token_mj,
+                prefill_energy_mj,
+                avg_power_w: crate::arch::power::avg_power_w(
+                    prefill_energy_mj,
+                    energy_per_token_mj,
+                    ttft_ms,
+                    tpot_ms,
+                ),
+                stalls: [
+                    [
+                        stall_s[0][0][i] * 1e3,
+                        stall_s[0][1][i] * 1e3,
+                        stall_s[0][2][i] * 1e3,
+                    ],
+                    [
+                        stall_s[1][0][i] * 1e3,
+                        stall_s[1][1][i] * 1e3,
+                        stall_s[1][2][i] * 1e3,
+                    ],
+                ],
+            };
+        }
+    }
+
     /// Component-wise energy attribution of one phase — the PPA report
     /// path (Table 4 / `lumina eval`), not the hot loop. The totals
     /// match the per-op accounting of [`CompassSim::evaluate_detailed`]:
@@ -479,14 +606,15 @@ impl EvalOne for CompassSim {
     fn workload_fingerprint(&self) -> u64 {
         self.spec.fingerprint()
     }
+
+    fn eval_chunk(&self, designs: &[DesignPoint], out: &mut [Metrics]) {
+        self.eval_soa_into(designs, out);
+    }
 }
 
 impl Evaluator for CompassSim {
     fn eval_batch(&mut self, designs: &[DesignPoint]) -> Result<Vec<Metrics>> {
-        Ok(designs
-            .iter()
-            .map(|d| self.evaluate_detailed(d).0)
-            .collect())
+        Ok(self.eval_batch_soa(designs))
     }
 
     fn name(&self) -> &'static str {
@@ -736,6 +864,27 @@ mod tests {
         // Decode is traffic-dominated: HBM energy beats MAC energy.
         let dc = s.energy_breakdown(&DesignPoint::a100(), Phase::Decode);
         assert!(dc.hbm_mj > dc.compute_mj, "{dc:?}");
+    }
+
+    #[test]
+    fn soa_batch_is_bitwise_identical_to_eval_one() {
+        let s = sim();
+        let designs = [
+            DesignPoint::a100(),
+            DesignPoint::paper_design_a(),
+            DesignPoint::paper_design_b(),
+            DesignPoint::new([6, 1, 1, 4, 4, 32, 32, 1]),
+            DesignPoint::new([24, 256, 8, 128, 128, 1024, 1024, 12]),
+        ];
+        let soa = s.eval_batch_soa(&designs);
+        for (d, got) in designs.iter().zip(&soa) {
+            assert_eq!(*got, s.eval_one(d), "{d}");
+        }
+        // Chunk form writes through the same kernel.
+        let mut out = vec![Metrics::default(); designs.len()];
+        s.eval_chunk(&designs, &mut out);
+        assert_eq!(out, soa);
+        assert!(s.eval_batch_soa(&[]).is_empty());
     }
 
     #[test]

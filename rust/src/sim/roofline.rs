@@ -184,6 +184,224 @@ impl RooflineSim {
     }
 }
 
+/// Per-design derived machine scalars of the roofline model, hoisted
+/// once per batch by the SoA kernel — exactly the quantities
+/// [`RooflineSim::evaluate`] computes before its table walk, produced
+/// by the same expressions in the same order.
+struct Derived {
+    arrays: f32,
+    t_peak: f32,
+    v_peak: f32,
+    m_bw: f32,
+    n_bw: f32,
+    sa: f32,
+    sram: f32,
+    area: f32,
+}
+
+impl Derived {
+    fn new(d: &DesignPoint) -> Derived {
+        let links = d.get(Param::Links) as f32;
+        let cores = d.get(Param::Cores) as f32;
+        let subl = d.get(Param::Sublanes) as f32;
+        let sa = d.get(Param::SystolicArray) as f32;
+        let vecw = d.get(Param::VectorWidth) as f32;
+        let sram = d.get(Param::SramKb) as f32;
+        let gbuf = d.get(Param::GbufMb) as f32;
+        let memch = d.get(Param::MemChannels) as f32;
+
+        let arrays = cores * subl;
+        let t_peak = arrays * sa * sa * c::FLOPS_PER_PE * c::CLOCK_HZ;
+        let v_peak = arrays * vecw * c::FLOPS_PER_LANE * c::CLOCK_HZ;
+        let mem_eff = (c::MEM_EFF_BASE
+            + c::MEM_EFF_L2_SLOPE * (gbuf / 8.0).log2())
+        .clamp(c::MEM_EFF_BASE, c::MEM_EFF_MAX);
+        let m_bw = memch * c::HBM_BPS_PER_CHANNEL * mem_eff;
+        let n_bw = links * c::LINK_BPS * c::NET_EFF;
+
+        let area_core = c::AREA_CORE_BASE
+            + subl * (sa * sa * c::AREA_PER_PE + vecw * c::AREA_PER_LANE)
+            + c::AREA_REGFILE
+            + sram * c::AREA_SRAM_PER_KB;
+        let area = cores * area_core
+            + gbuf * c::AREA_L2_PER_MB
+            + memch * c::AREA_HBM_PHY
+            + links * c::AREA_LINK_PHY
+            + c::AREA_UNCORE;
+        Derived { arrays, t_peak, v_peak, m_bw, n_bw, sa, sram, area }
+    }
+}
+
+impl RooflineSim {
+    /// Evaluate a batch with the structure-of-arrays kernel: the
+    /// machine scalars are derived once per design, then the op table
+    /// is walked **once per batch** with a design-inner loop per row —
+    /// the row constants (operand shapes, FLOPs, bytes, per-row energy
+    /// prices) stay in registers and the design-lane arithmetic
+    /// auto-vectorizes. Padding rows (kind sentinel `-1`, which
+    /// contribute exactly `0.0` in [`RooflineSim::evaluate`]) are
+    /// skipped whole.
+    ///
+    /// Bit-identity: per design, every expression and accumulation
+    /// order matches `evaluate` verbatim (rows in table order, then
+    /// the phase leakage term), so results equal `eval_one` bitwise —
+    /// asserted for every registered scenario in `tests/soa_pool.rs`.
+    pub fn eval_batch_soa(&self, designs: &[DesignPoint]) -> Vec<Metrics> {
+        let mut out = vec![Metrics::default(); designs.len()];
+        self.eval_soa_into(designs, &mut out);
+        out
+    }
+
+    /// [`RooflineSim::eval_batch_soa`] writing into a caller buffer
+    /// (the pool-worker chunk path).
+    pub fn eval_soa_into(
+        &self,
+        designs: &[DesignPoint],
+        out: &mut [Metrics],
+    ) {
+        debug_assert_eq!(designs.len(), out.len());
+        let n = designs.len();
+        if n == 0 {
+            return;
+        }
+        let derived: Vec<Derived> =
+            designs.iter().map(Derived::new).collect();
+        let mut phase_total: [Vec<f32>; 2] =
+            std::array::from_fn(|_| vec![0f32; n]);
+        let mut stalls: [[Vec<f32>; 3]; 2] = std::array::from_fn(|_| {
+            std::array::from_fn(|_| vec![0f32; n])
+        });
+        let mut energy: [Vec<f32>; 2] =
+            std::array::from_fn(|_| vec![0f32; n]);
+        for (p, phase) in self.table.iter().enumerate() {
+            for row in phase {
+                // Row constants (design-independent), hoisted out of
+                // the design lane.
+                let kind = row[0];
+                let is_mm = kind == 0.0;
+                let is_vec = kind == 1.0;
+                let is_comm = kind == 2.0;
+                if !(is_mm || is_vec || is_comm) {
+                    // Padding row: contributes exactly 0.0 everywhere
+                    // in the scalar path.
+                    continue;
+                }
+                let m = row[1].max(1.0);
+                let nn = row[2].max(1.0);
+                let k = row[3].max(1.0);
+                let count = row[4].max(1.0);
+                let flops = row[5];
+                let bytes = row[6];
+                let comm = row[7];
+                let kt = k.min(c::K_TILE);
+                // Per-row dynamic-energy prices (J), identical to the
+                // scalar path's expressions — design-independent, so
+                // priced once per row.
+                let e_compute = if is_mm {
+                    flops
+                        * (c::E_J_PER_FLOP_SYSTOLIC
+                            + c::SRAM_BYTES_PER_FLOP
+                                * c::E_J_PER_BYTE_SRAM)
+                } else if is_vec {
+                    flops * c::E_J_PER_FLOP_VECTOR
+                } else {
+                    comm * c::E_J_PER_BYTE_LINK
+                };
+                let e_mem =
+                    bytes * (c::E_J_PER_BYTE_HBM + c::E_J_PER_BYTE_L2);
+
+                for (i, dv) in derived.iter().enumerate() {
+                    let sa = dv.sa;
+                    let tiles_m = (m / sa).ceil();
+                    let tiles_n = (nn / sa).ceil();
+                    let edge =
+                        (m * nn) / (tiles_m * sa * tiles_n * sa);
+                    let drain = kt / (kt + sa);
+                    let sram_req = (2.0 * sa * kt + sa * sa)
+                        * c::FP16_BYTES
+                        / 1024.0;
+                    let sram_f = (dv.sram / sram_req)
+                        .clamp(c::SRAM_UTIL_FLOOR, 1.0);
+                    let tiles = tiles_m * tiles_n * count;
+                    let waves = (tiles / dv.arrays).ceil();
+                    let quant = tiles / (waves * dv.arrays);
+
+                    let t_tensor = flops
+                        / (dv.t_peak * edge * drain * sram_f * quant);
+                    let t_vec = flops / dv.v_peak;
+                    let t_mem = bytes / dv.m_bw;
+                    let t_net = comm / dv.n_bw + c::ALLREDUCE_LAT_S;
+
+                    let t_compute = if is_mm { t_tensor } else { t_vec };
+                    let mut t_op = if is_comm {
+                        t_net.max(t_mem)
+                    } else {
+                        t_compute.max(t_mem)
+                    };
+                    t_op += c::OP_OVERHEAD_S;
+
+                    let live = t_op > 0.0;
+                    let comp_win = !is_comm && t_compute >= t_mem && live;
+                    let net_win = is_comm && t_net >= t_mem && live;
+                    let mem_win = live && !comp_win && !net_win;
+
+                    phase_total[p][i] += t_op;
+                    if comp_win {
+                        stalls[p][0][i] += t_op;
+                    }
+                    if mem_win {
+                        stalls[p][1][i] += t_op;
+                    }
+                    if net_win {
+                        stalls[p][2][i] += t_op;
+                    }
+                    energy[p][i] += e_compute + e_mem;
+                }
+            }
+            // Static leakage: area-proportional draw over the phase
+            // wall time (added after the phase's rows, as in the
+            // scalar path).
+            for (i, dv) in derived.iter().enumerate() {
+                energy[p][i] +=
+                    c::LEAKAGE_W_PER_MM2 * dv.area * phase_total[p][i];
+            }
+        }
+        for (i, (dv, slot)) in
+            derived.iter().zip(out.iter_mut()).enumerate()
+        {
+            let prefill_energy_mj = energy[0][i] * 1e3;
+            let energy_per_token_mj = energy[1][i] * 1e3;
+            let ttft_ms = phase_total[0][i] * 1e3;
+            let tpot_ms = phase_total[1][i] * 1e3;
+            *slot = Metrics {
+                ttft_ms,
+                tpot_ms,
+                area_mm2: dv.area,
+                energy_per_token_mj,
+                prefill_energy_mj,
+                avg_power_w: crate::arch::power::avg_power_w(
+                    prefill_energy_mj,
+                    energy_per_token_mj,
+                    ttft_ms,
+                    tpot_ms,
+                ),
+                stalls: [
+                    [
+                        stalls[0][0][i] * 1e3,
+                        stalls[0][1][i] * 1e3,
+                        stalls[0][2][i] * 1e3,
+                    ],
+                    [
+                        stalls[1][0][i] * 1e3,
+                        stalls[1][1][i] * 1e3,
+                        stalls[1][2][i] * 1e3,
+                    ],
+                ],
+            };
+        }
+    }
+}
+
 impl EvalOne for RooflineSim {
     fn eval_one(&self, d: &DesignPoint) -> Metrics {
         self.evaluate(d)
@@ -196,11 +414,15 @@ impl EvalOne for RooflineSim {
     fn workload_fingerprint(&self) -> u64 {
         self.spec.fingerprint()
     }
+
+    fn eval_chunk(&self, designs: &[DesignPoint], out: &mut [Metrics]) {
+        self.eval_soa_into(designs, out);
+    }
 }
 
 impl Evaluator for RooflineSim {
     fn eval_batch(&mut self, designs: &[DesignPoint]) -> Result<Vec<Metrics>> {
-        Ok(designs.iter().map(|d| self.evaluate(d)).collect())
+        Ok(self.eval_batch_soa(designs))
     }
 
     fn name(&self) -> &'static str {
@@ -354,6 +576,26 @@ mod tests {
         for (d, b) in ds.iter().zip(&batch) {
             assert_eq!(*b, s.evaluate(d));
         }
+    }
+
+    #[test]
+    fn soa_batch_is_bitwise_identical_to_eval_one() {
+        let s = sim();
+        let designs = [
+            DesignPoint::a100(),
+            DesignPoint::paper_design_a(),
+            DesignPoint::paper_design_b(),
+            DesignPoint::new([6, 1, 1, 4, 4, 32, 32, 1]),
+            DesignPoint::new([24, 256, 8, 128, 128, 1024, 1024, 12]),
+        ];
+        let soa = s.eval_batch_soa(&designs);
+        for (d, got) in designs.iter().zip(&soa) {
+            assert_eq!(*got, s.evaluate(d), "{d}");
+        }
+        let mut out = vec![Metrics::default(); designs.len()];
+        s.eval_chunk(&designs, &mut out);
+        assert_eq!(out, soa);
+        assert!(s.eval_batch_soa(&[]).is_empty());
     }
 
     #[test]

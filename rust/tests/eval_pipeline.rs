@@ -85,8 +85,9 @@ fn cache_is_deterministic_and_counts_hits() {
 
 #[test]
 fn cached_parallel_pipeline_composes() {
-    // The full pipeline: memoization over parallel sharding over the
-    // pure simulator — still bit-identical to plain sequential.
+    // The cache-outside composition: memoization over parallel
+    // sharding over the pure simulator — still bit-identical to plain
+    // sequential.
     let designs = batch(96, 8);
     let mut plain = CompassSim::gpt3();
     let want = plain.eval_batch(&designs).unwrap();
@@ -95,6 +96,80 @@ fn cached_parallel_pipeline_composes() {
     assert_eq!(pipeline.eval_batch(&designs).unwrap(), want);
     assert_eq!(pipeline.eval_batch(&designs).unwrap(), want);
     assert_eq!(pipeline.name(), "compass");
+}
+
+#[test]
+fn parallel_over_cached_pipeline_composes() {
+    // The cache-inside composition (the CLI `explore` stack): the
+    // parallel layer dedups against the concurrent memo store, serves
+    // hits on the caller thread and evaluates only unique misses on
+    // the pool — bit-identical to plain sequential, with the same
+    // counters as the sequential caching path.
+    let designs = batch(96, 8);
+    let mut plain = CompassSim::gpt3();
+    let want = plain.eval_batch(&designs).unwrap();
+    let mut stack =
+        ParallelEvaluator::new(CachedEvaluator::new(CompassSim::gpt3()));
+    assert_eq!(stack.eval_batch(&designs).unwrap(), want);
+    assert_eq!(stack.eval_batch(&designs).unwrap(), want);
+    assert_eq!(Evaluator::name(&stack), "compass");
+
+    // Counter parity with the sequential caching oracle on the same
+    // schedule.
+    let mut oracle = CachedEvaluator::new(CompassSim::gpt3());
+    oracle.eval_batch(&designs).unwrap();
+    oracle.eval_batch(&designs).unwrap();
+    assert_eq!(
+        Evaluator::cache_counters(&stack).unwrap(),
+        oracle.cache_counters().unwrap()
+    );
+}
+
+#[test]
+fn budget_accounting_is_unchanged_on_the_composed_stack() {
+    // BudgetedEvaluator semantics through
+    // ParallelEvaluator<CachedEvaluator<_>> must match the historical
+    // CachedEvaluator<...> stack: hits ride free, intra-batch
+    // duplicates of an uncached design charge once, is_cached/preload
+    // flow through the parallel layer.
+    let designs = batch(24, 9);
+    let mut stack = ParallelEvaluator::new(CachedEvaluator::new(
+        RooflineSim::new(GPT3_175B),
+    ));
+    let mut be = BudgetedEvaluator::new(&mut stack, 64);
+    let first = be.eval_batch(&designs).unwrap();
+    assert_eq!(first.len(), 24);
+    let spent_after_first = be.spent();
+    assert!(spent_after_first <= 24);
+    // Full revisit: logged, not charged.
+    let again = be.eval_batch(&designs).unwrap();
+    assert_eq!(again.len(), 24);
+    assert_eq!(be.spent(), spent_after_first);
+    assert_eq!(be.evaluations(), 48);
+    assert!(be.cache_counters().unwrap().hits >= 24);
+
+    // Intra-batch duplicates of one fresh design: one charge.
+    let mut stack = ParallelEvaluator::new(CachedEvaluator::new(
+        RooflineSim::new(GPT3_175B),
+    ));
+    let d = DesignPoint::paper_design_a();
+    let mut be = BudgetedEvaluator::new(&mut stack, 1);
+    let got = be.eval_batch(&[d, d, d]).unwrap();
+    assert_eq!(got.len(), 3, "batch duplicates must ride free");
+    assert_eq!(be.spent(), 1);
+    assert!(be.exhausted());
+
+    // preload warms the memo store through the parallel layer, so a
+    // resumed run charges nothing for recorded designs.
+    let mut warm_stack = ParallelEvaluator::new(CachedEvaluator::new(
+        RooflineSim::new(GPT3_175B),
+    ));
+    let truth = got[0].1;
+    Evaluator::preload(&mut warm_stack, &[(d, truth)]);
+    assert!(Evaluator::is_cached(&warm_stack, &d));
+    let mut be = BudgetedEvaluator::new(&mut warm_stack, 4);
+    assert_eq!(be.eval(&d).unwrap(), Some(truth));
+    assert_eq!(be.spent(), 0, "preloaded design must ride free");
 }
 
 #[test]

@@ -7,11 +7,12 @@ use lumina::design::{DesignPoint, DesignSpace};
 use lumina::dse::{
     driver::CheckpointSink, replay, Driver, NullObserver, SessionState,
 };
-use lumina::eval::{BudgetedEvaluator, CachedEvaluator, Evaluator, Metrics};
+use lumina::eval::{BudgetedEvaluator, Evaluator, Metrics};
 use lumina::figures::race::{
     run_race, run_race_fused, EvaluatorKind, RaceConfig,
 };
 use lumina::lumina::{Lumina, LuminaConfig};
+use lumina::workload::default_scenario;
 
 #[test]
 fn fused_race_is_bit_identical_to_serial_race() {
@@ -51,20 +52,20 @@ fn fused_race_is_bit_identical_to_serial_race() {
     }
 }
 
-/// Mirror of the CLI `explore` wiring: memoized evaluator, the
-/// reference evaluated outside the budget, Lumina driven by the
-/// observable driver.
+/// Mirror of the CLI `explore` wiring: the composed memoized stack
+/// (`ParallelEvaluator<CachedEvaluator<_>>` over the shared worker
+/// pool, via `make_cached_for`), the reference evaluated outside the
+/// budget, Lumina driven by the observable driver.
 struct ExploreRig {
-    ev: CachedEvaluator<Box<dyn Evaluator>>,
+    ev: Box<dyn Evaluator>,
     space: DesignSpace,
     seed: u64,
 }
 
 impl ExploreRig {
     fn new(seed: u64) -> Self {
-        let mut ev = CachedEvaluator::new(
-            EvaluatorKind::RooflineRust.make(),
-        );
+        let mut ev = EvaluatorKind::RooflineRust
+            .make_cached_for(&default_scenario().spec);
         ev.eval(&DesignPoint::a100()).unwrap();
         Self { ev, space: DesignSpace::table1(), seed }
     }
