@@ -8,28 +8,33 @@
 //! Records the numbers EXPERIMENTS.md §Perf tracks.
 //!
 //! Outputs: `out/perf_hotpath.csv` (bench, mean_s, throughput_per_s)
-//! and the machine-readable `BENCH_5.json` snapshot at the repo root
-//! (format documented in EXPERIMENTS.md §Perf).
+//! and the machine-readable `BENCH_6.json` snapshot at the repo root
+//! (format documented in EXPERIMENTS.md §Perf). `lumina bench check`
+//! holds the snapshot's machine-independent rows (speedup ratios,
+//! alloc counts, guard pass flags) to `BENCH_BASELINE.json`.
 //!
 //! Env:
 //! * `LUMINA_BENCH_QUICK=1` — reduced batch (64) and iteration counts
 //!   for CI smoke runs.
 //! * `LUMINA_STRICT_PERF_GUARD=1` — turn the acceptance guard rows
 //!   (compass SoA >= 2x sequential, pool <= spawn dispatch, ppa
-//!   overhead < 10%) into hard asserts. The roofline SoA guard is
-//!   recorded but never asserted (it is not an acceptance criterion).
+//!   overhead < 10%, zero warm-arena allocations) into hard asserts.
+//!   The roofline SoA guard is recorded but never asserted (it is not
+//!   an acceptance criterion).
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use lumina::baselines::DseMethod;
 use lumina::design::{sample, DesignPoint, DesignSpace};
 use lumina::dse::SessionState;
 use lumina::eval::parallel::{default_threads, eval_batch_parallel};
 use lumina::eval::{
-    BudgetedEvaluator, CachedEvaluator, EvalOne, Evaluator,
-    ParallelEvaluator,
+    BudgetedEvaluator, CachedEvaluator, EvalOne, EvalScratch,
+    Evaluator, Metrics, ParallelEvaluator,
 };
 use lumina::figures::race::{
     run_race, run_race_fused, EvaluatorKind, RaceConfig,
@@ -46,6 +51,46 @@ use lumina::util::csv::Csv;
 use lumina::util::json::Json;
 use lumina::workload::default_scenario;
 use lumina::csv_row;
+
+/// Counting wrapper around the system allocator: the arena rows
+/// record how many heap allocations one batch SoA evaluation costs
+/// (cold arena vs warm — warm must be zero).
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc_zeroed(layout) }
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
 
 /// CSV + JSON row collector (one source for both outputs).
 struct Rows {
@@ -232,6 +277,123 @@ fn main() {
             compass_speedup >= 2.0,
             "compass SoA kernel below the 2x acceptance floor: \
              {compass_speedup:.2}x"
+        );
+    }
+
+    // --- Lane-width kernels head-to-head: the vectorized window
+    // (L = 8) vs the same kernel at L = 1, both through one reused
+    // scratch arena and a preallocated output buffer, so the rows
+    // time the kernel alone. The ratio rows carry batch-free names:
+    // they are enrolled in BENCH_BASELINE.json, which must compare
+    // across quick (batch=64) and full (batch=256) runs.
+    let mut scratch = EvalScratch::new();
+    let mut lane_out = vec![Metrics::default(); nb];
+    compass.eval_soa_into_lanes::<8>(&batch, &mut lane_out, &mut scratch);
+    let r = bench(
+        &format!("compass soa lanes L=8, batch={nb}"),
+        2,
+        it(20),
+        || {
+            compass.eval_soa_into_lanes::<8>(
+                &batch,
+                &mut lane_out,
+                &mut scratch,
+            );
+            std::hint::black_box(&lane_out);
+        },
+    );
+    rows.put(&r, nb as f64);
+    let compass_l8 = r;
+    let r = bench(
+        &format!("compass soa lanes L=1, batch={nb}"),
+        2,
+        it(20),
+        || {
+            compass.eval_soa_into_lanes::<1>(
+                &batch,
+                &mut lane_out,
+                &mut scratch,
+            );
+            std::hint::black_box(&lane_out);
+        },
+    );
+    rows.put(&r, nb as f64);
+    let compass_l1 = r;
+    let r = bench(
+        &format!("roofline soa lanes L=8, batch={nb}"),
+        2,
+        it(50),
+        || {
+            mirror.eval_soa_into_lanes::<8>(
+                &batch,
+                &mut lane_out,
+                &mut scratch,
+            );
+            std::hint::black_box(&lane_out);
+        },
+    );
+    rows.put(&r, nb as f64);
+    let roofline_l8 = r;
+    let r = bench(
+        &format!("roofline soa lanes L=1, batch={nb}"),
+        2,
+        it(50),
+        || {
+            mirror.eval_soa_into_lanes::<1>(
+                &batch,
+                &mut lane_out,
+                &mut scratch,
+            );
+            std::hint::black_box(&lane_out);
+        },
+    );
+    rows.put(&r, nb as f64);
+    let roofline_l1 = r;
+    // Vectorized lanes must at least not lose to the scalar window
+    // (identical math, so any loss is codegen noise — 10% slack).
+    let compass_lane = compass_l1.mean_s / compass_l8.mean_s;
+    let roofline_lane = roofline_l1.mean_s / roofline_l8.mean_s;
+    rows.guard(
+        "compass soa lane speedup (L=8 vs L=1)",
+        compass_lane,
+        compass_l8.mean_s <= compass_l1.mean_s * 1.10 + 1e-5,
+    );
+    rows.guard(
+        "roofline soa lane speedup (L=8 vs L=1)",
+        roofline_lane,
+        roofline_l8.mean_s <= roofline_l1.mean_s * 1.10 + 1e-5,
+    );
+    println!(
+        "lane speedup (L=8 vs L=1): compass {compass_lane:.2}x, \
+         roofline {roofline_lane:.2}x"
+    );
+
+    // --- Arena accounting: one batch SoA evaluation through a cold
+    // arena allocates exactly once (the arena's backing buffer); a
+    // warm arena plus preallocated output allocates nothing at all
+    // (the PR-5 kernels paid ~a dozen Vec allocations per batch).
+    let mut fresh = EvalScratch::new();
+    let before = alloc_count();
+    compass.eval_soa_into(&batch, &mut lane_out, &mut fresh);
+    let cold = alloc_count() - before;
+    // Grow the arena to the roofline's (larger) carve before the
+    // counted warm window, or its resize would show up as a warm
+    // allocation.
+    mirror.eval_soa_into(&batch, &mut lane_out, &mut fresh);
+    let before = alloc_count();
+    compass.eval_soa_into(&batch, &mut lane_out, &mut fresh);
+    mirror.eval_soa_into(&batch, &mut lane_out, &mut fresh);
+    let warm = alloc_count() - before;
+    rows.guard("soa scratch allocations (cold)", cold as f64, cold >= 1);
+    rows.guard("soa scratch allocations (warm)", warm as f64, warm == 0);
+    println!(
+        "soa batch allocations: cold {cold}, warm {warm} (target: 0 \
+         warm)"
+    );
+    if strict {
+        assert_eq!(
+            warm, 0,
+            "warm-arena SoA batch evaluation must not allocate"
         );
     }
 
@@ -469,7 +631,7 @@ fn main() {
         "bench".to_string(),
         Json::Str("perf_hotpath".to_string()),
     );
-    snapshot.insert("issue".to_string(), Json::Num(5.0));
+    snapshot.insert("issue".to_string(), Json::Num(6.0));
     snapshot.insert(
         "hardware_threads".to_string(),
         Json::Num(default_threads() as f64),
@@ -480,9 +642,9 @@ fn main() {
     // `cargo bench` runs from rust/; land the snapshot at the repo
     // root when it is where we expect, else alongside the CSV.
     let path = if std::path::Path::new("../ROADMAP.md").exists() {
-        "../BENCH_5.json"
+        "../BENCH_6.json"
     } else {
-        "BENCH_5.json"
+        "BENCH_6.json"
     };
     std::fs::write(path, Json::Obj(snapshot).pretty()).unwrap();
     println!("wrote {path}");

@@ -1,0 +1,42 @@
+//! Benchmark regression ratchet.
+//!
+//! `benches/perf_hotpath.rs` writes a machine-readable snapshot
+//! (`BENCH_<issue>.json`) per run; this subsystem holds it to the
+//! best-known rows committed in `BENCH_BASELINE.json` at the repo
+//! root. The CLI face is `lumina bench {check,update,show}`:
+//!
+//! * `check` — fail (non-zero exit) when any baseline row regressed
+//!   past its tolerance band, per [`ratchet::is_regression`];
+//! * `update` — ratchet the baseline forward to the snapshot's
+//!   measured values (the escape hatch for intentional trade-offs);
+//! * `show` — render the baseline and the snapshot side by side.
+//!
+//! Only *machine-independent* rows belong in the baseline (speedup
+//! ratios, allocation counts, pass/fail guards) — absolute wall times
+//! vary across CI hosts and would make the ratchet flaky. See
+//! `EXPERIMENTS.md` §Bench ratchet for the workflow.
+
+pub mod ratchet;
+
+pub use ratchet::{
+    is_regression, Baseline, BaselineRow, CheckReport, Direction,
+    RowStatus,
+};
+
+use std::path::{Path, PathBuf};
+
+/// Resolve a repo-root file from either the repo root or `rust/`
+/// (where `cargo run` / the bench harness execute): try `name`, then
+/// `../name`. Falls back to `name` when neither exists yet (the
+/// `update` path may be creating it).
+pub fn resolve_existing(name: &str) -> PathBuf {
+    let direct = PathBuf::from(name);
+    if direct.exists() {
+        return direct;
+    }
+    let parent = Path::new("..").join(name);
+    if parent.exists() {
+        return parent;
+    }
+    direct
+}

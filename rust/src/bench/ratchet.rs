@@ -1,0 +1,543 @@
+//! The ratchet proper: baseline file model, per-row regression
+//! predicate, and the `check` / `update` operations.
+//!
+//! A baseline row names one snapshot row and the metric key to read
+//! out of it (`value` / `pass` for guard rows, `mean_s` /
+//! `throughput_per_s` for timed rows), the direction in which bigger
+//! numbers are better, the best value ever accepted, and an optional
+//! per-row tolerance overriding the file-wide one. `check` compares
+//! the snapshot against every baseline row — a baseline row missing
+//! from the snapshot is a failure (a renamed or deleted bench row
+//! must be ratcheted deliberately, not silently dropped). `update`
+//! adopts the snapshot's measured value for every row it finds,
+//! which guarantees `update` → `check` on the same snapshot passes.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::{obj, Json};
+use crate::{err, Result};
+
+/// Which way "better" points for a row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Bigger is better (speedup ratios, pass flags).
+    Higher,
+    /// Smaller is better (allocation counts, overhead ratios).
+    Lower,
+}
+
+impl Direction {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Direction::Higher => "higher",
+            Direction::Lower => "lower",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Direction> {
+        match s {
+            "higher" => Ok(Direction::Higher),
+            "lower" => Ok(Direction::Lower),
+            other => Err(err!("unknown direction {other:?}")),
+        }
+    }
+}
+
+/// Has `measured` regressed past `best` by more than the tolerance
+/// band? The band is relative: a higher-is-better row fails below
+/// `best * (1 - tol)`, a lower-is-better row fails above
+/// `best * (1 + tol)`. A lower-is-better best of `0` (e.g. "zero
+/// steady-state allocations") leaves no band: any positive measured
+/// value regresses.
+pub fn is_regression(
+    direction: Direction,
+    best: f64,
+    measured: f64,
+    tol: f64,
+) -> bool {
+    match direction {
+        Direction::Higher => measured < best * (1.0 - tol),
+        Direction::Lower => measured > best * (1.0 + tol),
+    }
+}
+
+/// One tracked row of the baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BaselineRow {
+    /// Key to read from the snapshot row object (`value`, `pass`,
+    /// `mean_s`, `throughput_per_s`). Boolean metrics read as 1/0.
+    pub metric: String,
+    pub direction: Direction,
+    /// Best value ever accepted by `update`.
+    pub best: f64,
+    /// Per-row tolerance override (fraction, e.g. `0.25`); rows
+    /// without one use the file-wide [`Baseline::tolerance`].
+    pub tol: Option<f64>,
+}
+
+/// The checked-in `BENCH_BASELINE.json` model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Baseline {
+    /// Bench the rows come from (`perf_hotpath`).
+    pub bench: String,
+    /// File-wide relative tolerance band.
+    pub tolerance: f64,
+    /// Issue number of the PR that last ratcheted the file.
+    pub updated_by_issue: u64,
+    pub rows: BTreeMap<String, BaselineRow>,
+}
+
+impl Baseline {
+    pub fn from_json(j: &Json) -> Result<Baseline> {
+        let bench = j
+            .get("bench")?
+            .as_str()
+            .ok_or_else(|| err!("baseline: bench must be a string"))?
+            .to_string();
+        let tolerance = j
+            .get("tolerance")?
+            .as_f64()
+            .ok_or_else(|| err!("baseline: tolerance not a number"))?;
+        let updated_by_issue = j
+            .get("updated_by_issue")?
+            .as_f64()
+            .ok_or_else(|| err!("baseline: issue not a number"))?
+            as u64;
+        let rows_obj = j
+            .get("rows")?
+            .as_obj()
+            .ok_or_else(|| err!("baseline: rows must be an object"))?;
+        let mut rows = BTreeMap::new();
+        for (name, row) in rows_obj {
+            let metric = row
+                .get("metric")?
+                .as_str()
+                .ok_or_else(|| err!("row {name:?}: bad metric"))?
+                .to_string();
+            let direction = Direction::parse(
+                row.get("direction")?
+                    .as_str()
+                    .ok_or_else(|| err!("row {name:?}: bad direction"))?,
+            )?;
+            let best = row
+                .get("best")?
+                .as_f64()
+                .ok_or_else(|| err!("row {name:?}: bad best"))?;
+            let tol = match row.as_obj().and_then(|o| o.get("tol")) {
+                Some(v) => Some(v.as_f64().ok_or_else(|| {
+                    err!("row {name:?}: tol not a number")
+                })?),
+                None => None,
+            };
+            rows.insert(
+                name.clone(),
+                BaselineRow { metric, direction, best, tol },
+            );
+        }
+        Ok(Baseline { bench, tolerance, updated_by_issue, rows })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows: BTreeMap<String, Json> = self
+            .rows
+            .iter()
+            .map(|(name, r)| {
+                let mut pairs = vec![
+                    ("metric", Json::from(r.metric.as_str())),
+                    ("direction", Json::from(r.direction.as_str())),
+                    ("best", Json::from(r.best)),
+                ];
+                if let Some(t) = r.tol {
+                    pairs.push(("tol", Json::from(t)));
+                }
+                (name.clone(), obj(pairs))
+            })
+            .collect();
+        obj(vec![
+            ("bench", Json::from(self.bench.as_str())),
+            ("tolerance", Json::from(self.tolerance)),
+            (
+                "updated_by_issue",
+                Json::from(self.updated_by_issue as usize),
+            ),
+            ("rows", Json::Obj(rows)),
+        ])
+    }
+
+    pub fn load(path: &Path) -> Result<Baseline> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            err!("reading baseline {}: {e}", path.display())
+        })?;
+        Baseline::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut text = self.to_json().pretty();
+        text.push('\n');
+        std::fs::write(path, text).map_err(|e| {
+            err!("writing baseline {}: {e}", path.display())
+        })
+    }
+
+    /// Effective tolerance of one row.
+    fn tol_of(&self, row: &BaselineRow) -> f64 {
+        row.tol.unwrap_or(self.tolerance)
+    }
+}
+
+/// Verdict of one baseline row against a snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowStatus {
+    /// Within the tolerance band of best.
+    Ok,
+    /// Strictly better than best (a candidate for `update`).
+    Improved,
+    /// Past the tolerance band — the check fails.
+    Regressed,
+    /// Row (or its metric key) absent from the snapshot — fails.
+    Missing,
+}
+
+/// One row's check outcome, for rendering and for tests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowReport {
+    pub name: String,
+    pub status: RowStatus,
+    pub best: f64,
+    pub measured: Option<f64>,
+    pub tol: f64,
+}
+
+/// The full `check` outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckReport {
+    pub rows: Vec<RowReport>,
+}
+
+impl CheckReport {
+    /// True when any row regressed or went missing.
+    pub fn failed(&self) -> bool {
+        self.rows.iter().any(|r| {
+            matches!(r.status, RowStatus::Regressed | RowStatus::Missing)
+        })
+    }
+
+    /// Human-readable table (one line per row).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.rows {
+            let status = match r.status {
+                RowStatus::Ok => "ok       ",
+                RowStatus::Improved => "improved ",
+                RowStatus::Regressed => "REGRESSED",
+                RowStatus::Missing => "MISSING  ",
+            };
+            let measured = match r.measured {
+                Some(v) => format!("{v:.6}"),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "{status}  {name}  best={best:.6} measured={measured} \
+                 tol={tol}\n",
+                name = r.name,
+                best = r.best,
+                tol = r.tol,
+            ));
+        }
+        out
+    }
+}
+
+/// Read one metric out of a snapshot's `rows` object. Guard rows
+/// store booleans (`pass`), which read as 1.0 / 0.0.
+fn snapshot_value(
+    snapshot: &Json,
+    row_name: &str,
+    metric: &str,
+) -> Option<f64> {
+    let row = snapshot.as_obj()?.get("rows")?.as_obj()?.get(row_name)?;
+    match row.as_obj()?.get(metric)? {
+        Json::Bool(b) => Some(if *b { 1.0 } else { 0.0 }),
+        v => v.as_f64(),
+    }
+}
+
+/// Compare `snapshot` against every baseline row. Rows the snapshot
+/// does not contain come back [`RowStatus::Missing`] (and fail the
+/// check); snapshot rows the baseline does not track are ignored —
+/// the ratchet only guards what was deliberately enrolled.
+pub fn check(baseline: &Baseline, snapshot: &Json) -> CheckReport {
+    let rows = baseline
+        .rows
+        .iter()
+        .map(|(name, row)| {
+            let tol = baseline.tol_of(row);
+            let measured = snapshot_value(snapshot, name, &row.metric);
+            let status = match measured {
+                None => RowStatus::Missing,
+                Some(v) => {
+                    if is_regression(row.direction, row.best, v, tol) {
+                        RowStatus::Regressed
+                    } else {
+                        let improved = match row.direction {
+                            Direction::Higher => v > row.best,
+                            Direction::Lower => v < row.best,
+                        };
+                        if improved {
+                            RowStatus::Improved
+                        } else {
+                            RowStatus::Ok
+                        }
+                    }
+                }
+            };
+            RowReport {
+                name: name.clone(),
+                status,
+                best: row.best,
+                measured,
+                tol,
+            }
+        })
+        .collect();
+    CheckReport { rows }
+}
+
+/// Ratchet the baseline to the snapshot: every baseline row present
+/// in the snapshot adopts the measured value as its new best —
+/// including downward, which is the deliberate escape hatch for
+/// intentional trade-offs. Returns the updated and missing row
+/// names; missing rows keep their old best.
+pub fn update(
+    baseline: &mut Baseline,
+    snapshot: &Json,
+    issue: u64,
+) -> (Vec<String>, Vec<String>) {
+    let mut updated = Vec::new();
+    let mut missing = Vec::new();
+    for (name, row) in baseline.rows.iter_mut() {
+        match snapshot_value(snapshot, name, &row.metric) {
+            Some(v) => {
+                row.best = v;
+                updated.push(name.clone());
+            }
+            None => missing.push(name.clone()),
+        }
+    }
+    baseline.updated_by_issue = issue;
+    (updated, missing)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snapshot(rows: Vec<(&str, Json)>) -> Json {
+        obj(vec![
+            ("bench", Json::from("perf_hotpath")),
+            ("rows", obj(rows)),
+        ])
+    }
+
+    fn guard_row(value: f64, pass: bool) -> Json {
+        obj(vec![
+            ("value", Json::from(value)),
+            ("pass", Json::from(pass)),
+        ])
+    }
+
+    fn baseline_one(
+        name: &str,
+        metric: &str,
+        direction: Direction,
+        best: f64,
+        tol: Option<f64>,
+    ) -> Baseline {
+        let mut rows = BTreeMap::new();
+        rows.insert(
+            name.to_string(),
+            BaselineRow {
+                metric: metric.to_string(),
+                direction,
+                best,
+                tol,
+            },
+        );
+        Baseline {
+            bench: "perf_hotpath".to_string(),
+            tolerance: 0.10,
+            updated_by_issue: 6,
+            rows,
+        }
+    }
+
+    #[test]
+    fn faster_row_passes_as_improved() {
+        let b = baseline_one(
+            "speedup",
+            "value",
+            Direction::Higher,
+            2.0,
+            None,
+        );
+        let s = snapshot(vec![("speedup", guard_row(2.5, true))]);
+        let r = check(&b, &s);
+        assert!(!r.failed());
+        assert_eq!(r.rows[0].status, RowStatus::Improved);
+    }
+
+    #[test]
+    fn within_band_row_passes_past_band_fails() {
+        let b = baseline_one(
+            "speedup",
+            "value",
+            Direction::Higher,
+            2.0,
+            None,
+        );
+        // 1.85 >= 2.0 * (1 - 0.10) = 1.8: inside the band.
+        let s = snapshot(vec![("speedup", guard_row(1.85, true))]);
+        let r = check(&b, &s);
+        assert!(!r.failed());
+        assert_eq!(r.rows[0].status, RowStatus::Ok);
+        // 1.7 < 1.8: past the band.
+        let s = snapshot(vec![("speedup", guard_row(1.7, true))]);
+        let r = check(&b, &s);
+        assert!(r.failed());
+        assert_eq!(r.rows[0].status, RowStatus::Regressed);
+        // A per-row tol override widens the band: 1.7 >= 2.0 * 0.75.
+        let b = baseline_one(
+            "speedup",
+            "value",
+            Direction::Higher,
+            2.0,
+            Some(0.25),
+        );
+        assert!(!check(&b, &s).failed());
+    }
+
+    #[test]
+    fn lower_is_better_and_zero_best_have_no_slack() {
+        assert!(!is_regression(Direction::Lower, 10.0, 10.9, 0.10));
+        assert!(is_regression(Direction::Lower, 10.0, 11.1, 0.10));
+        // best = 0 (zero allocations): any positive count regresses.
+        assert!(!is_regression(Direction::Lower, 0.0, 0.0, 0.10));
+        assert!(is_regression(Direction::Lower, 0.0, 1.0, 0.10));
+    }
+
+    #[test]
+    fn pass_flag_reads_as_binary_and_false_fails() {
+        let b = baseline_one(
+            "guard",
+            "pass",
+            Direction::Higher,
+            1.0,
+            None,
+        );
+        let s = snapshot(vec![("guard", guard_row(3.0, true))]);
+        assert!(!check(&b, &s).failed());
+        let s = snapshot(vec![("guard", guard_row(3.0, false))]);
+        assert!(check(&b, &s).failed());
+    }
+
+    #[test]
+    fn missing_row_fails_check() {
+        let b = baseline_one(
+            "gone",
+            "value",
+            Direction::Higher,
+            1.0,
+            None,
+        );
+        let s = snapshot(vec![("other", guard_row(1.0, true))]);
+        let r = check(&b, &s);
+        assert!(r.failed());
+        assert_eq!(r.rows[0].status, RowStatus::Missing);
+        assert_eq!(r.rows[0].measured, None);
+    }
+
+    #[test]
+    fn update_then_check_always_passes() {
+        // Regressed, improved and unchanged rows all adopt the
+        // snapshot value, so the round trip can never fail.
+        let mut rows = BTreeMap::new();
+        for (name, best, dir) in [
+            ("regressed", 5.0, Direction::Higher),
+            ("improved", 1.0, Direction::Higher),
+            ("allocs", 0.0, Direction::Lower),
+        ] {
+            rows.insert(
+                name.to_string(),
+                BaselineRow {
+                    metric: "value".to_string(),
+                    direction: dir,
+                    best,
+                    tol: None,
+                },
+            );
+        }
+        let mut b = Baseline {
+            bench: "perf_hotpath".to_string(),
+            tolerance: 0.10,
+            updated_by_issue: 5,
+            rows,
+        };
+        let s = snapshot(vec![
+            ("regressed", guard_row(1.0, true)),
+            ("improved", guard_row(9.0, true)),
+            ("allocs", guard_row(7.0, true)),
+        ]);
+        assert!(check(&b, &s).failed());
+        let (updated, missing) = update(&mut b, &s, 6);
+        assert_eq!(updated.len(), 3);
+        assert!(missing.is_empty());
+        assert_eq!(b.updated_by_issue, 6);
+        assert_eq!(b.rows["regressed"].best, 1.0);
+        assert_eq!(b.rows["allocs"].best, 7.0);
+        assert!(!check(&b, &s).failed());
+    }
+
+    #[test]
+    fn hand_edited_regressed_row_fails_the_committed_check() {
+        // The acceptance scenario: take the committed baseline file,
+        // raise one row's best past what the snapshot measures, and
+        // the check must fail.
+        let mut b = baseline_one(
+            "compass soa speedup guard (>=2x)",
+            "value",
+            Direction::Higher,
+            2.0,
+            None,
+        );
+        let s = snapshot(vec![(
+            "compass soa speedup guard (>=2x)",
+            guard_row(2.4, true),
+        )]);
+        assert!(!check(&b, &s).failed());
+        b.rows
+            .get_mut("compass soa speedup guard (>=2x)")
+            .unwrap()
+            .best = 100.0;
+        assert!(check(&b, &s).failed());
+    }
+
+    #[test]
+    fn baseline_json_round_trips() {
+        let b = baseline_one(
+            "speedup",
+            "value",
+            Direction::Higher,
+            2.25,
+            Some(0.25),
+        );
+        let j = b.to_json();
+        let back = Baseline::from_json(&j).unwrap();
+        assert_eq!(back, b);
+        // And through the serialized text form.
+        let reparsed =
+            Baseline::from_json(&Json::parse(&j.pretty()).unwrap())
+                .unwrap();
+        assert_eq!(reparsed, b);
+    }
+}

@@ -45,6 +45,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::design::DesignPoint;
+use crate::eval::scratch::EvalScratch;
 use crate::eval::{CacheCounters, EvalOne, Evaluator, Metrics};
 use crate::Result;
 
@@ -337,7 +338,12 @@ impl<E: EvalOne> EvalOne for CachedEvaluator<E> {
         EvalOne::workload_fingerprint(&self.inner)
     }
 
-    fn eval_chunk(&self, designs: &[DesignPoint], out: &mut [Metrics]) {
+    fn eval_chunk(
+        &self,
+        designs: &[DesignPoint],
+        out: &mut [Metrics],
+        scratch: &mut EvalScratch,
+    ) {
         // Same dedup/assemble algorithm as the batch path, with the
         // misses evaluated through the inner SoA chunk kernel. When
         // called from the parallel layer's memo-aware path the chunk is
@@ -346,7 +352,7 @@ impl<E: EvalOne> EvalOne for CachedEvaluator<E> {
         let fp = EvalOne::workload_fingerprint(&self.inner);
         let ms = batch_via(&self.cache, fp, designs, |fresh| {
             let mut fresh_ms = vec![Metrics::default(); fresh.len()];
-            self.inner.eval_chunk(fresh, &mut fresh_ms);
+            self.inner.eval_chunk(fresh, &mut fresh_ms, scratch);
             Ok(fresh_ms)
         })
         .expect("infallible inner chunk");

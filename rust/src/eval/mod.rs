@@ -23,7 +23,10 @@
 //!   cache misses. Composes on either side of the parallel layer
 //!   (`ParallelEvaluator<CachedEvaluator<_>>` is the CLI stack),
 //! * [`BudgetedEvaluator`] — budget enforcement + trajectory logging so
-//!   "number of samples" means the same thing for every method.
+//!   "number of samples" means the same thing for every method,
+//! * [`scratch::EvalScratch`] — the per-lane reusable arena threaded
+//!   through [`EvalOne::eval_chunk`] so the SoA kernels allocate
+//!   nothing in steady state.
 //!
 //! Backend implementations:
 //! * [`crate::runtime::PjrtEvaluator`] — the AOT roofline artifact
@@ -37,11 +40,13 @@
 pub mod cache;
 pub mod parallel;
 pub mod pool;
+pub mod scratch;
 pub mod suite;
 
 pub use cache::{CachedEvaluator, SharedCache};
 pub use parallel::ParallelEvaluator;
 pub use pool::WorkerPool;
+pub use scratch::{with_caller_scratch, EvalScratch, SOA_LANES};
 pub use suite::{ScenarioMetrics, SuiteEvaluator};
 
 use std::fmt;
@@ -247,8 +252,16 @@ pub trait EvalOne: Send + Sync {
     /// Evaluate a contiguous chunk into `out` (same length). The
     /// default is the per-design loop; simulators override it with
     /// their SoA batch kernels. Must be bit-identical to `eval_one`
-    /// per design.
-    fn eval_chunk(&self, designs: &[DesignPoint], out: &mut [Metrics]) {
+    /// per design. `scratch` is the calling lane's reusable arena
+    /// (pool workers own one for life, the caller thread keeps a
+    /// thread-local one) so steady-state chunks allocate nothing; the
+    /// default loop has no batch state and ignores it.
+    fn eval_chunk(
+        &self,
+        designs: &[DesignPoint],
+        out: &mut [Metrics],
+        _scratch: &mut EvalScratch,
+    ) {
         debug_assert_eq!(designs.len(), out.len());
         for (d, slot) in designs.iter().zip(out.iter_mut()) {
             *slot = self.eval_one(d);

@@ -27,6 +27,7 @@
 use std::collections::{HashMap, HashSet};
 
 use crate::design::DesignPoint;
+use crate::eval::scratch::{with_caller_scratch, EvalScratch};
 use crate::eval::{
     CacheCounters, EvalOne, Evaluator, Metrics, WorkerPool,
 };
@@ -89,8 +90,13 @@ impl<E: EvalOne> EvalOne for ParallelEvaluator<E> {
         self.inner.workload_fingerprint()
     }
 
-    fn eval_chunk(&self, designs: &[DesignPoint], out: &mut [Metrics]) {
-        self.inner.eval_chunk(designs, out);
+    fn eval_chunk(
+        &self,
+        designs: &[DesignPoint],
+        out: &mut [Metrics],
+        scratch: &mut EvalScratch,
+    ) {
+        self.inner.eval_chunk(designs, out, scratch);
     }
 
     fn probe(&self, d: &DesignPoint) -> Option<Metrics> {
@@ -200,7 +206,7 @@ fn dispatch<E: EvalOne + ?Sized>(
     threads: usize,
 ) {
     if threads <= 1 || designs.len() < MIN_PARALLEL_BATCH {
-        ev.eval_chunk(designs, out);
+        with_caller_scratch(|s| ev.eval_chunk(designs, out, s));
     } else {
         WorkerPool::global().eval_on(ev, designs, out, threads);
     }
@@ -307,12 +313,13 @@ mod tests {
             &self,
             designs: &[DesignPoint],
             out: &mut [Metrics],
+            scratch: &mut EvalScratch,
         ) {
             self.evals.fetch_add(
                 designs.len(),
                 std::sync::atomic::Ordering::Relaxed,
             );
-            self.sim.eval_chunk(designs, out);
+            self.sim.eval_chunk(designs, out, scratch);
         }
     }
 

@@ -45,6 +45,7 @@ use crate::design::DesignPoint;
 use crate::eval::{EvalOne, Metrics};
 
 use super::parallel::default_threads;
+use super::scratch::{with_caller_scratch, EvalScratch};
 
 /// Completion latch of one in-flight batch.
 struct Latch {
@@ -86,8 +87,15 @@ impl Latch {
 /// valid until `latch` fires (see module docs).
 struct Task {
     /// Monomorphized trampoline: casts `ev` back to `&E` and runs
-    /// [`EvalOne::eval_chunk`] over the chunk.
-    run: unsafe fn(*const (), *const DesignPoint, *mut Metrics, usize),
+    /// [`EvalOne::eval_chunk`] over the chunk with the executing
+    /// lane's scratch arena.
+    run: unsafe fn(
+        *const (),
+        *const DesignPoint,
+        *mut Metrics,
+        usize,
+        &mut EvalScratch,
+    ),
     /// Thin pointer to the caller's `&E` (itself possibly a fat
     /// reference — hence the extra indirection).
     ev: *const (),
@@ -107,13 +115,14 @@ unsafe fn run_chunk<E: EvalOne + ?Sized>(
     src: *const DesignPoint,
     dst: *mut Metrics,
     len: usize,
+    scratch: &mut EvalScratch,
 ) {
     // Safety: contract of `Task` / `eval_on` (pointers valid, types
     // match the monomorphization that created this trampoline).
     let ev: &E = unsafe { *(ev as *const &E) };
     let src = unsafe { std::slice::from_raw_parts(src, len) };
     let dst = unsafe { std::slice::from_raw_parts_mut(dst, len) };
-    ev.eval_chunk(src, dst);
+    ev.eval_chunk(src, dst, scratch);
 }
 
 /// Queue + instrumentation shared between the pool handle and workers.
@@ -213,7 +222,7 @@ impl WorkerPool {
         }
         let lanes = threads.clamp(1, n).min(self.worker_count() + 1);
         if lanes == 1 {
-            ev.eval_chunk(designs, out);
+            with_caller_scratch(|s| ev.eval_chunk(designs, out, s));
             return;
         }
         self.shared.dispatches.fetch_add(1, Ordering::Relaxed);
@@ -244,9 +253,11 @@ impl WorkerPool {
         // The caller is a lane too: steal back chunks of its own batch
         // while workers drain the rest (with zero workers this runs the
         // whole batch inline).
-        while let Some(task) = self.steal_own(&latch) {
-            execute(task, None);
-        }
+        with_caller_scratch(|scratch| {
+            while let Some(task) = self.steal_own(&latch) {
+                execute(task, None, scratch);
+            }
+        });
         latch.wait();
         if latch.panicked.load(Ordering::Acquire) {
             panic!("evaluation panicked in a pool worker chunk");
@@ -280,6 +291,9 @@ impl Drop for WorkerPool {
 }
 
 fn worker_loop(shared: &Shared) {
+    // One arena per worker for its whole lifetime: steady-state batch
+    // evaluation on this lane performs zero heap allocations.
+    let mut scratch = EvalScratch::new();
     loop {
         let task = {
             let mut state =
@@ -299,19 +313,19 @@ fn worker_loop(shared: &Shared) {
                     .expect("pool lock poisoned");
             }
         };
-        execute(task, Some(shared));
+        execute(task, Some(shared), &mut scratch);
     }
 }
 
 /// Run one task with panic isolation; `shared` is set when a pool
 /// worker (not a helping caller) executes, to drive the busy counters.
-fn execute(task: Task, shared: Option<&Shared>) {
+fn execute(task: Task, shared: Option<&Shared>, scratch: &mut EvalScratch) {
     if let Some(s) = shared {
         let busy = s.active_workers.fetch_add(1, Ordering::Relaxed) + 1;
         s.peak_workers.fetch_max(busy, Ordering::Relaxed);
     }
     let result = panic::catch_unwind(AssertUnwindSafe(|| unsafe {
-        (task.run)(task.ev, task.src, task.dst, task.len)
+        (task.run)(task.ev, task.src, task.dst, task.len, scratch)
     }));
     if let Some(s) = shared {
         s.active_workers.fetch_sub(1, Ordering::Relaxed);

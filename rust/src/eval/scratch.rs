@@ -1,0 +1,145 @@
+//! Reusable batch-evaluation scratch arena.
+//!
+//! The PR-5 SoA kernels allocated their accumulator lanes
+//! (`wall_s`/`stall_s`/`energy_j` and the derived per-design model
+//! scalars) as fresh `Vec`s on **every** batch — a dozen heap
+//! round-trips per chunk on the hottest path in the system. This
+//! module replaces them with one flat `f32` arena per evaluation
+//! thread, carved into fixed-count lanes on demand:
+//!
+//! * [`EvalScratch::lanes`] resizes the arena once (it only ever
+//!   grows), zeroes the carved region, and hands back `K` disjoint
+//!   `&mut [f32]` lanes of length `n` — after warm-up a batch
+//!   evaluation performs **zero** heap allocations (asserted in
+//!   `tests/soa_pool.rs` with a counting global allocator).
+//! * Each pool worker owns one `EvalScratch` for its whole lifetime
+//!   (see `super::pool::worker_loop`); the caller lane borrows a
+//!   thread-local one through [`with_caller_scratch`].
+//!
+//! The arena holds plain `f32`s with no per-batch layout state, so
+//! reusing it across batches, workloads and simulators is safe by
+//! construction: every carve re-zeroes the lanes it returns.
+
+use std::cell::RefCell;
+
+/// Default lane width of the SoA kernels' design-inner loops
+/// (`eval_soa_into_lanes::<SOA_LANES>`): eight `f32`s fill one AVX2
+/// register and two NEON registers, and the tests sweep L=1/4/8 to
+/// assert the width never changes results.
+pub const SOA_LANES: usize = 8;
+
+/// A growable flat arena of `f32` lanes for one evaluation thread.
+#[derive(Debug)]
+pub struct EvalScratch {
+    buf: Vec<f32>,
+}
+
+impl EvalScratch {
+    /// An empty arena (no allocation until the first carve).
+    pub const fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    /// Current arena capacity in `f32` slots (diagnostics/tests).
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Carve `K` zeroed lanes of length `n` out of the arena. Grows
+    /// the backing buffer only when the request exceeds every prior
+    /// one; steady-state batches reuse the allocation and pay only
+    /// the `fill(0.0)`.
+    pub fn lanes<const K: usize>(&mut self, n: usize) -> [&mut [f32]; K] {
+        assert!(n > 0, "lane length must be positive");
+        let need = K * n;
+        if self.buf.len() < need {
+            self.buf.resize(need, 0.0);
+        }
+        self.buf[..need].fill(0.0);
+        let mut chunks = self.buf[..need].chunks_exact_mut(n);
+        std::array::from_fn(|_| {
+            chunks.next().expect("exact carve of K lanes")
+        })
+    }
+}
+
+impl Default for EvalScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+thread_local! {
+    /// The caller lane's scratch: batches evaluated inline (below the
+    /// parallel floor, single-threaded dispatch, or the caller helping
+    /// its own pooled batch) reuse this arena across calls.
+    static CALLER_SCRATCH: RefCell<EvalScratch> =
+        const { RefCell::new(EvalScratch::new()) };
+}
+
+/// Run `f` with this thread's persistent [`EvalScratch`]. The arena is
+/// *taken* out of the thread-local slot for the duration (not borrowed),
+/// so a re-entrant acquisition — an evaluator whose `eval_chunk` calls
+/// back into a batch API — gets a fresh empty arena instead of
+/// panicking on a double borrow.
+pub fn with_caller_scratch<R>(f: impl FnOnce(&mut EvalScratch) -> R) -> R {
+    CALLER_SCRATCH.with(|cell| {
+        let mut scratch = cell.take();
+        let out = f(&mut scratch);
+        cell.replace(scratch);
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_are_zeroed_disjoint_and_sized() {
+        let mut s = EvalScratch::new();
+        let [a, b, c] = s.lanes::<3>(5);
+        assert_eq!(a.len(), 5);
+        assert_eq!(b.len(), 5);
+        assert_eq!(c.len(), 5);
+        assert!(a.iter().chain(b.iter()).all(|&v| v == 0.0));
+        a[0] = 1.0;
+        b[4] = 2.0;
+        c[2] = 3.0;
+        assert_eq!((a[0], b[4], c[2]), (1.0, 2.0, 3.0));
+        assert_eq!(b[0], 0.0, "lanes must not alias");
+    }
+
+    #[test]
+    fn carves_rezero_and_arena_only_grows() {
+        let mut s = EvalScratch::new();
+        {
+            let [a, _b] = s.lanes::<2>(4);
+            a.fill(9.0);
+        }
+        let cap = s.capacity();
+        assert_eq!(cap, 8);
+        // Smaller carve reuses the buffer and re-zeroes its region.
+        let [a] = s.lanes::<1>(3);
+        assert!(a.iter().all(|&v| v == 0.0));
+        assert_eq!(s.capacity(), cap, "smaller carve must not shrink");
+        // Larger carve grows.
+        let _ = s.lanes::<4>(4);
+        assert_eq!(s.capacity(), 16);
+    }
+
+    #[test]
+    fn caller_scratch_is_reused_and_reentrant() {
+        let cap = with_caller_scratch(|s| {
+            let _ = s.lanes::<2>(16);
+            // Re-entrant acquisition sees a fresh arena, not a panic.
+            let nested = with_caller_scratch(|inner| inner.capacity());
+            assert_eq!(nested, 0);
+            s.capacity()
+        });
+        assert!(cap >= 32);
+        // The outer arena survived the call and is served again.
+        let cap2 = with_caller_scratch(|s| s.capacity());
+        assert!(cap2 >= 32);
+    }
+}

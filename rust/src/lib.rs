@@ -21,6 +21,7 @@
 
 pub mod arch;
 pub mod baselines;
+pub mod bench;
 pub mod bench_dse;
 pub mod design;
 pub mod dse;

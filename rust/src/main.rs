@@ -8,6 +8,7 @@
 //!   sensitivity QuanE sensitivity study around a design
 //!   report      Table-4 style design report
 //!   workloads   list the registered workload scenarios
+//!   bench       check/update/show the perf-bench regression ratchet
 //!
 //! All exploration traffic flows through the AOT roofline artifact via
 //! PJRT when `artifacts/` exists (`make artifacts`); `--evaluator`
@@ -15,6 +16,7 @@
 //! subcommand accepts `--workload <name>` (see `lumina workloads`);
 //! `explore --suite` optimizes the weighted multi-scenario composite.
 
+use lumina::bench::{ratchet, resolve_existing, Baseline};
 use lumina::bench_dse::run_benchmark_mode;
 use lumina::design::{DesignPoint, DesignSpace, Param};
 use lumina::dse::{
@@ -34,6 +36,7 @@ use lumina::lumina::{quale::InfluenceMap, quane::Ahk, Lumina, LuminaConfig};
 use lumina::pareto::{ObjectiveMode, Objectives};
 use lumina::sim::CompassSim;
 use lumina::util::cli::Args;
+use lumina::util::json::Json;
 use lumina::workload::{
     scenario_by_name, scenario_matrix, suite_scenarios, Scenario,
     WorkloadSpec, DEFAULT_SCENARIO,
@@ -59,6 +62,10 @@ USAGE: lumina <command> [--options]
   report [<8 values>]        Table-4 style PPA report (defaults: paper
                              designs) [--workload NAME]
   workloads                  list the workload scenario registry
+  bench [check|update|show]  hold BENCH_6.json to BENCH_BASELINE.json
+        [--snapshot PATH] [--baseline PATH] [--issue N]
+                             check: non-zero exit on any regressed row
+                             update: ratchet the baseline forward
 
 Objective modes: latency-area (default) optimizes the 3-D (TTFT, TPOT,
 area) vector; ppa adds energy/token as a 4th minimized objective, arms
@@ -119,6 +126,7 @@ fn main() -> lumina::Result<()> {
             print!("{}", scenario_matrix());
             Ok(())
         }
+        "bench" => cmd_bench(&args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -517,6 +525,81 @@ fn cmd_sensitivity(args: &Args) -> lumina::Result<()> {
         );
     }
     Ok(())
+}
+
+/// `lumina bench {check,update,show}` — the perf regression ratchet.
+/// `check` exits non-zero when any enrolled `BENCH_6.json` row
+/// regressed past `BENCH_BASELINE.json`'s tolerance band; `update`
+/// adopts the snapshot's values as the new baseline (the escape hatch
+/// for intentional trade-offs — commit the result).
+fn cmd_bench(args: &Args) -> lumina::Result<()> {
+    let verb = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("check");
+    let baseline_path = args
+        .opt("baseline")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| resolve_existing("BENCH_BASELINE.json"));
+    let snapshot_path = args
+        .opt("snapshot")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| resolve_existing("BENCH_6.json"));
+    let mut baseline = Baseline::load(&baseline_path)?;
+    let text =
+        std::fs::read_to_string(&snapshot_path).map_err(|e| {
+            lumina::err!(
+                "reading snapshot {}: {e} (run `cargo bench --bench \
+                 perf_hotpath` first)",
+                snapshot_path.display()
+            )
+        })?;
+    let snapshot = Json::parse(&text)?;
+    match verb {
+        "check" => {
+            let report = ratchet::check(&baseline, &snapshot);
+            print!("{}", report.render());
+            if report.failed() {
+                lumina::bail!(
+                    "bench ratchet: regression vs {} (intentional \
+                     trade-off? ratchet with `lumina bench update` \
+                     and commit the new baseline)",
+                    baseline_path.display()
+                );
+            }
+            println!(
+                "bench ratchet: all {} rows within tolerance",
+                report.rows.len()
+            );
+            Ok(())
+        }
+        "update" => {
+            let issue =
+                args.u64_or("issue", baseline.updated_by_issue)?;
+            let (updated, missing) =
+                ratchet::update(&mut baseline, &snapshot, issue);
+            baseline.save(&baseline_path)?;
+            println!(
+                "ratcheted {} rows in {}",
+                updated.len(),
+                baseline_path.display()
+            );
+            for name in &missing {
+                println!("  missing from snapshot (kept): {name}");
+            }
+            Ok(())
+        }
+        "show" => {
+            println!("baseline: {}", baseline_path.display());
+            println!("snapshot: {}", snapshot_path.display());
+            print!("{}", ratchet::check(&baseline, &snapshot).render());
+            Ok(())
+        }
+        other => Err(lumina::err!(
+            "unknown bench verb {other:?}; use check, update or show"
+        )),
+    }
 }
 
 fn cmd_report(args: &Args) -> lumina::Result<()> {

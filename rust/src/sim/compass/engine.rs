@@ -12,7 +12,10 @@
 
 use crate::arch::{area_mm2, constants as c, EnergyBreakdown};
 use crate::design::{DesignPoint, Param};
-use crate::eval::{Bottleneck, EvalOne, Evaluator, Metrics, Phase};
+use crate::eval::{
+    with_caller_scratch, Bottleneck, EvalOne, EvalScratch, Evaluator,
+    Metrics, Phase, SOA_LANES,
+};
 use crate::workload::{
     decode_ops, default_scenario, prefill_ops, Op, OpKind, WorkloadSpec,
 };
@@ -289,9 +292,10 @@ impl CompassSim {
 
     /// Evaluate a batch with the structure-of-arrays kernel: **one**
     /// walk of the prepped op table per batch (not per design), with
-    /// the design-dependent intermediates laid out across designs so
-    /// the per-op inner loops stay hot (one op kind's code path runs
-    /// back-to-back over all designs) and auto-vectorize where the
+    /// the design-dependent model scalars laid out across designs in
+    /// the caller's [`EvalScratch`] arena and the design-inner loop
+    /// windowed over `[f32; L]` lanes so one op kind's code path runs
+    /// back-to-back over all designs and auto-vectorizes where the
     /// models allow.
     ///
     /// Bit-identity: every per-design quantity is produced by the same
@@ -299,93 +303,104 @@ impl CompassSim {
     /// `op_energy`) in the same per-design accumulation order as
     /// [`CompassSim::evaluate_detailed`] — ops in table order, phase
     /// totals / stall buckets / energies summed op-by-op — so results
-    /// equal `eval_one` bitwise (asserted per scenario in
-    /// `tests/soa_pool.rs`). What the batch form *removes* is the
-    /// per-design `CriticalPath` allocation and the six summation
-    /// re-passes over its records.
+    /// equal `eval_one` bitwise (asserted per scenario and across lane
+    /// widths in `tests/soa_pool.rs`). What the batch form *removes*
+    /// is the per-design `CriticalPath` allocation and the six
+    /// summation re-passes over its records.
     pub fn eval_batch_soa(&self, designs: &[DesignPoint]) -> Vec<Metrics> {
         let mut out = vec![Metrics::default(); designs.len()];
-        self.eval_soa_into(designs, &mut out);
+        with_caller_scratch(|s| self.eval_soa_into(designs, &mut out, s));
         out
     }
 
     /// [`CompassSim::eval_batch_soa`] writing into a caller buffer (the
-    /// pool-worker chunk path).
+    /// pool-worker chunk path), carving all model/accumulator lanes out
+    /// of the reusable `scratch` arena — zero heap allocations once the
+    /// arena is warm.
     pub fn eval_soa_into(
         &self,
         designs: &[DesignPoint],
         out: &mut [Metrics],
+        scratch: &mut EvalScratch,
     ) {
+        self.eval_soa_into_lanes::<SOA_LANES>(designs, out, scratch);
+    }
+
+    /// The SoA kernel at an explicit lane width `L`. Lane math is
+    /// elementwise, so every width produces bitwise-identical results;
+    /// the remainder (`n % L` designs) runs through the same window
+    /// body at `L = 1`.
+    pub fn eval_soa_into_lanes<const L: usize>(
+        &self,
+        designs: &[DesignPoint],
+        out: &mut [Metrics],
+        scratch: &mut EvalScratch,
+    ) {
+        assert!(L > 0, "lane width must be positive");
         debug_assert_eq!(designs.len(), out.len());
         let n = designs.len();
         if n == 0 {
             return;
         }
-        // Per-design models, built once per batch.
-        let mems: Vec<MemorySystem> =
-            designs.iter().map(MemorySystem::new).collect();
-        let icns: Vec<Interconnect> = designs
-            .iter()
-            .map(|d| Interconnect::new(d, self.spec.tp))
-            .collect();
-        // SoA accumulators: per phase, wall time / stall buckets /
-        // dynamic energy across designs.
-        let mut wall_s: [Vec<f32>; 2] =
-            std::array::from_fn(|_| vec![0f32; n]);
-        let mut stall_s: [[Vec<f32>; 3]; 2] = std::array::from_fn(|_| {
-            std::array::from_fn(|_| vec![0f32; n])
-        });
-        let mut energy_j: [Vec<f32>; 2] =
-            std::array::from_fn(|_| vec![0f32; n]);
-        for op in &self.prepped {
-            let p = op.phase.index();
-            // Dispatch on the op kind once per op, not once per
-            // (op, design); each arm runs the exact per-design record
-            // construction of `run_op`.
-            match op.prep {
-                Prepped::Matmul { .. } => {
-                    for i in 0..n {
-                        let rec =
-                            self.run_matmul(&designs[i], &mems[i], op);
-                        let e = op_energy(&op.prep, &mems[i], &icns[i]);
-                        wall_s[p][i] += rec.wall_s;
-                        stall_s[p][rec.stall.index()][i] += rec.wall_s;
-                        energy_j[p][i] += e.total();
-                    }
+        // 14 lanes: 4 per-design model scalars (the `Copy` fields of
+        // `MemorySystem` / `Interconnect`, rebuilt per lane window) +
+        // 2 phases x (wall time, 3 stall buckets, energy) accumulators.
+        let [
+            hbm_bw, l2_bytes, l2_bw, icn_bw, wall0, wall1, st00, st01,
+            st02, st10, st11, st12, en0, en1,
+        ] = scratch.lanes::<14>(n);
+        for (j, d) in designs.iter().enumerate() {
+            let mem = MemorySystem::new(d);
+            hbm_bw[j] = mem.hbm_bw;
+            l2_bytes[j] = mem.l2_bytes;
+            l2_bw[j] = mem.l2_bw;
+            icn_bw[j] = Interconnect::new(d, self.spec.tp).bw;
+        }
+        {
+            let mut phases = [
+                (
+                    &mut *wall0,
+                    [&mut *st00, &mut *st01, &mut *st02],
+                    &mut *en0,
+                ),
+                (
+                    &mut *wall1,
+                    [&mut *st10, &mut *st11, &mut *st12],
+                    &mut *en1,
+                ),
+            ];
+            for op in &self.prepped {
+                let p = op.phase.index();
+                let (pt, st, en) = &mut phases[p];
+                let [s0, s1, s2] = st;
+                let mut i = 0;
+                while i + L <= n {
+                    self.op_window::<L>(
+                        i, op, designs, hbm_bw, l2_bytes, l2_bw,
+                        icn_bw, pt, s0, s1, s2, en,
+                    );
+                    i += L;
                 }
-                Prepped::Vector { .. } => {
-                    for i in 0..n {
-                        let rec =
-                            self.run_vector(&designs[i], &mems[i], op);
-                        let e = op_energy(&op.prep, &mems[i], &icns[i]);
-                        wall_s[p][i] += rec.wall_s;
-                        stall_s[p][rec.stall.index()][i] += rec.wall_s;
-                        energy_j[p][i] += e.total();
-                    }
-                }
-                Prepped::Comm { .. } => {
-                    for i in 0..n {
-                        let rec =
-                            self.run_comm(&mems[i], &icns[i], op);
-                        let e = op_energy(&op.prep, &mems[i], &icns[i]);
-                        wall_s[p][i] += rec.wall_s;
-                        stall_s[p][rec.stall.index()][i] += rec.wall_s;
-                        energy_j[p][i] += e.total();
-                    }
+                while i < n {
+                    self.op_window::<1>(
+                        i, op, designs, hbm_bw, l2_bytes, l2_bw,
+                        icn_bw, pt, s0, s1, s2, en,
+                    );
+                    i += 1;
                 }
             }
         }
         // Assembly: the exact tail expressions of `evaluate_detailed`.
-        for (i, (d, slot)) in
+        for (j, (d, slot)) in
             designs.iter().zip(out.iter_mut()).enumerate()
         {
             let area = area_mm2(d);
-            let ttft_ms = wall_s[0][i] * 1e3;
-            let tpot_ms = wall_s[1][i] * 1e3;
-            let prefill_energy_mj = energy_j[0][i] * 1e3
-                + c::LEAKAGE_W_PER_MM2 * area * ttft_ms;
-            let energy_per_token_mj = energy_j[1][i] * 1e3
-                + c::LEAKAGE_W_PER_MM2 * area * tpot_ms;
+            let ttft_ms = wall0[j] * 1e3;
+            let tpot_ms = wall1[j] * 1e3;
+            let prefill_energy_mj =
+                en0[j] * 1e3 + c::LEAKAGE_W_PER_MM2 * area * ttft_ms;
+            let energy_per_token_mj =
+                en1[j] * 1e3 + c::LEAKAGE_W_PER_MM2 * area * tpot_ms;
             *slot = Metrics {
                 ttft_ms,
                 tpot_ms,
@@ -399,18 +414,77 @@ impl CompassSim {
                     tpot_ms,
                 ),
                 stalls: [
-                    [
-                        stall_s[0][0][i] * 1e3,
-                        stall_s[0][1][i] * 1e3,
-                        stall_s[0][2][i] * 1e3,
-                    ],
-                    [
-                        stall_s[1][0][i] * 1e3,
-                        stall_s[1][1][i] * 1e3,
-                        stall_s[1][2][i] * 1e3,
-                    ],
+                    [st00[j] * 1e3, st01[j] * 1e3, st02[j] * 1e3],
+                    [st10[j] * 1e3, st11[j] * 1e3, st12[j] * 1e3],
                 ],
             };
+        }
+    }
+
+    /// One lane window of the op walk: evaluate designs `i..i + L`
+    /// against one prepped op through the exact `run_*` / `op_energy`
+    /// record construction of `run_op` (models rebuilt per lane from
+    /// their SoA scalar fields — `Copy` structs, so identical by
+    /// construction), staging per-lane wall times, stall buckets and
+    /// energies, then accumulating with branch-free selects. The
+    /// select form `acc += if hit { w } else { 0.0 }` equals the
+    /// scalar `if hit { acc += w }` bitwise because accumulators start
+    /// at `+0.0` and only ever add non-negative wall times.
+    #[allow(clippy::too_many_arguments)]
+    #[inline(always)]
+    fn op_window<const L: usize>(
+        &self,
+        i: usize,
+        op: &PreppedOp,
+        designs: &[DesignPoint],
+        hbm_bw: &[f32],
+        l2_bytes: &[f32],
+        l2_bw: &[f32],
+        icn_bw: &[f32],
+        pt: &mut [f32],
+        st0: &mut [f32],
+        st1: &mut [f32],
+        st2: &mut [f32],
+        en: &mut [f32],
+    ) {
+        let mut wall = [0f32; L];
+        let mut bucket = [0usize; L];
+        let mut e_tot = [0f32; L];
+        for l in 0..L {
+            let j = i + l;
+            let mem = MemorySystem {
+                hbm_bw: hbm_bw[j],
+                l2_bytes: l2_bytes[j],
+                l2_bw: l2_bw[j],
+            };
+            let icn = Interconnect {
+                bw: icn_bw[j],
+                hop_latency: 1.0e-6,
+                tp: self.spec.tp as f32,
+            };
+            // The op-kind branch predicts perfectly inside a window
+            // (it is constant per op).
+            let rec = match op.prep {
+                Prepped::Matmul { .. } => {
+                    self.run_matmul(&designs[j], &mem, op)
+                }
+                Prepped::Vector { .. } => {
+                    self.run_vector(&designs[j], &mem, op)
+                }
+                Prepped::Comm { .. } => self.run_comm(&mem, &icn, op),
+            };
+            wall[l] = rec.wall_s;
+            bucket[l] = rec.stall.index();
+            e_tot[l] = op_energy(&op.prep, &mem, &icn).total();
+        }
+        for l in 0..L {
+            let j = i + l;
+            let w = wall[l];
+            pt[j] += w;
+            st0[j] += if bucket[l] == 0 { w } else { 0.0 };
+            st1[j] += if bucket[l] == 1 { w } else { 0.0 };
+            st2[j] += if bucket[l] == 2 { w } else { 0.0 };
+            en[j] += e_tot[l];
         }
     }
 
@@ -607,8 +681,13 @@ impl EvalOne for CompassSim {
         self.spec.fingerprint()
     }
 
-    fn eval_chunk(&self, designs: &[DesignPoint], out: &mut [Metrics]) {
-        self.eval_soa_into(designs, out);
+    fn eval_chunk(
+        &self,
+        designs: &[DesignPoint],
+        out: &mut [Metrics],
+        scratch: &mut EvalScratch,
+    ) {
+        self.eval_soa_into(designs, out, scratch);
     }
 }
 
@@ -882,7 +961,7 @@ mod tests {
         }
         // Chunk form writes through the same kernel.
         let mut out = vec![Metrics::default(); designs.len()];
-        s.eval_chunk(&designs, &mut out);
+        s.eval_chunk(&designs, &mut out, &mut EvalScratch::new());
         assert_eq!(out, soa);
         assert!(s.eval_batch_soa(&[]).is_empty());
     }

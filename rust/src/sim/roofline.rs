@@ -8,7 +8,10 @@
 
 use crate::arch::constants as c;
 use crate::design::{DesignPoint, Param};
-use crate::eval::{EvalOne, Evaluator, Metrics};
+use crate::eval::{
+    with_caller_scratch, EvalOne, EvalScratch, Evaluator, Metrics,
+    SOA_LANES,
+};
 use crate::workload::{op_table, WorkloadSpec, MAX_OPS, N_PHASES};
 use crate::Result;
 
@@ -232,151 +235,263 @@ impl Derived {
     }
 }
 
+/// Design-independent constants of one live op-table row, hoisted out
+/// of the design-inner lane loop by the SoA kernel. Produced by the
+/// exact expressions [`RooflineSim::evaluate`] computes per row.
+#[derive(Clone, Copy)]
+struct RowConsts {
+    is_mm: bool,
+    is_comm: bool,
+    m: f32,
+    nn: f32,
+    count: f32,
+    flops: f32,
+    bytes: f32,
+    comm: f32,
+    kt: f32,
+    /// Dynamic energy (J) this row adds to every design: the scalar
+    /// path's `e_compute + e_mem`, priced once per row.
+    e_row: f32,
+}
+
+/// One lane window of the roofline row walk: evaluate designs
+/// `i..i + L` against one op row, staging `[f32; L]` op times and
+/// `[bool; L]` win flags, then accumulate with branch-free selects.
+///
+/// Bit-identity with [`RooflineSim::evaluate`]: every per-design
+/// expression is verbatim, and the select accumulation
+/// `acc += if win { t } else { 0.0 }` equals the scalar `if win
+/// { acc += t }` bitwise because the accumulators start at `+0.0` and
+/// only ever add non-negative op times (`x + 0.0 == x` for every
+/// non-`-0.0` float).
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn row_window<const L: usize>(
+    i: usize,
+    rc: RowConsts,
+    sa: &[f32],
+    sram: &[f32],
+    arrays: &[f32],
+    t_peak: &[f32],
+    v_peak: &[f32],
+    m_bw: &[f32],
+    n_bw: &[f32],
+    pt: &mut [f32],
+    st_comp: &mut [f32],
+    st_mem: &mut [f32],
+    st_net: &mut [f32],
+    energy: &mut [f32],
+) {
+    let mut t_op = [0f32; L];
+    let mut comp_win = [false; L];
+    let mut net_win = [false; L];
+    let mut mem_win = [false; L];
+    for l in 0..L {
+        let j = i + l;
+        let sa_j = sa[j];
+        let tiles_m = (rc.m / sa_j).ceil();
+        let tiles_n = (rc.nn / sa_j).ceil();
+        let edge = (rc.m * rc.nn) / (tiles_m * sa_j * tiles_n * sa_j);
+        let drain = rc.kt / (rc.kt + sa_j);
+        let sram_req =
+            (2.0 * sa_j * rc.kt + sa_j * sa_j) * c::FP16_BYTES / 1024.0;
+        let sram_f =
+            (sram[j] / sram_req).clamp(c::SRAM_UTIL_FLOOR, 1.0);
+        let tiles = tiles_m * tiles_n * rc.count;
+        let waves = (tiles / arrays[j]).ceil();
+        let quant = tiles / (waves * arrays[j]);
+
+        let t_tensor =
+            rc.flops / (t_peak[j] * edge * drain * sram_f * quant);
+        let t_vec = rc.flops / v_peak[j];
+        let t_mem = rc.bytes / m_bw[j];
+        let t_net = rc.comm / n_bw[j] + c::ALLREDUCE_LAT_S;
+
+        let t_compute = if rc.is_mm { t_tensor } else { t_vec };
+        let mut top = if rc.is_comm {
+            t_net.max(t_mem)
+        } else {
+            t_compute.max(t_mem)
+        };
+        top += c::OP_OVERHEAD_S;
+
+        let live = top > 0.0;
+        comp_win[l] = !rc.is_comm && t_compute >= t_mem && live;
+        net_win[l] = rc.is_comm && t_net >= t_mem && live;
+        mem_win[l] = live && !comp_win[l] && !net_win[l];
+        t_op[l] = top;
+    }
+    for l in 0..L {
+        let j = i + l;
+        let t = t_op[l];
+        pt[j] += t;
+        st_comp[j] += if comp_win[l] { t } else { 0.0 };
+        st_mem[j] += if mem_win[l] { t } else { 0.0 };
+        st_net[j] += if net_win[l] { t } else { 0.0 };
+        energy[j] += rc.e_row;
+    }
+}
+
 impl RooflineSim {
     /// Evaluate a batch with the structure-of-arrays kernel: the
     /// machine scalars are derived once per design, then the op table
-    /// is walked **once per batch** with a design-inner loop per row —
-    /// the row constants (operand shapes, FLOPs, bytes, per-row energy
-    /// prices) stay in registers and the design-lane arithmetic
-    /// auto-vectorizes. Padding rows (kind sentinel `-1`, which
+    /// is walked **once per batch** with a lane-vectorized design-inner
+    /// loop per row — the row constants (operand shapes, FLOPs, bytes,
+    /// per-row energy prices) stay in registers and the `[f32; L]` lane
+    /// windows auto-vectorize. Padding rows (kind sentinel `-1`, which
     /// contribute exactly `0.0` in [`RooflineSim::evaluate`]) are
     /// skipped whole.
     ///
     /// Bit-identity: per design, every expression and accumulation
     /// order matches `evaluate` verbatim (rows in table order, then
     /// the phase leakage term), so results equal `eval_one` bitwise —
-    /// asserted for every registered scenario in `tests/soa_pool.rs`.
+    /// asserted for every registered scenario and across lane widths
+    /// in `tests/soa_pool.rs`.
     pub fn eval_batch_soa(&self, designs: &[DesignPoint]) -> Vec<Metrics> {
         let mut out = vec![Metrics::default(); designs.len()];
-        self.eval_soa_into(designs, &mut out);
+        with_caller_scratch(|s| self.eval_soa_into(designs, &mut out, s));
         out
     }
 
     /// [`RooflineSim::eval_batch_soa`] writing into a caller buffer
-    /// (the pool-worker chunk path).
+    /// (the pool-worker chunk path), carving all accumulator lanes out
+    /// of the reusable `scratch` arena — zero heap allocations once the
+    /// arena is warm.
     pub fn eval_soa_into(
         &self,
         designs: &[DesignPoint],
         out: &mut [Metrics],
+        scratch: &mut EvalScratch,
     ) {
+        self.eval_soa_into_lanes::<SOA_LANES>(designs, out, scratch);
+    }
+
+    /// The SoA kernel at an explicit lane width `L`. Lane math is
+    /// elementwise, so every width produces bitwise-identical results;
+    /// the remainder (`n % L` designs) runs through the same window
+    /// body at `L = 1`.
+    pub fn eval_soa_into_lanes<const L: usize>(
+        &self,
+        designs: &[DesignPoint],
+        out: &mut [Metrics],
+        scratch: &mut EvalScratch,
+    ) {
+        assert!(L > 0, "lane width must be positive");
         debug_assert_eq!(designs.len(), out.len());
         let n = designs.len();
         if n == 0 {
             return;
         }
-        let derived: Vec<Derived> =
-            designs.iter().map(Derived::new).collect();
-        let mut phase_total: [Vec<f32>; 2] =
-            std::array::from_fn(|_| vec![0f32; n]);
-        let mut stalls: [[Vec<f32>; 3]; 2] = std::array::from_fn(|_| {
-            std::array::from_fn(|_| vec![0f32; n])
-        });
-        let mut energy: [Vec<f32>; 2] =
-            std::array::from_fn(|_| vec![0f32; n]);
-        for (p, phase) in self.table.iter().enumerate() {
-            for row in phase {
-                // Row constants (design-independent), hoisted out of
-                // the design lane.
-                let kind = row[0];
-                let is_mm = kind == 0.0;
-                let is_vec = kind == 1.0;
-                let is_comm = kind == 2.0;
-                if !(is_mm || is_vec || is_comm) {
-                    // Padding row: contributes exactly 0.0 everywhere
-                    // in the scalar path.
-                    continue;
-                }
-                let m = row[1].max(1.0);
-                let nn = row[2].max(1.0);
-                let k = row[3].max(1.0);
-                let count = row[4].max(1.0);
-                let flops = row[5];
-                let bytes = row[6];
-                let comm = row[7];
-                let kt = k.min(c::K_TILE);
-                // Per-row dynamic-energy prices (J), identical to the
-                // scalar path's expressions — design-independent, so
-                // priced once per row.
-                let e_compute = if is_mm {
-                    flops
-                        * (c::E_J_PER_FLOP_SYSTOLIC
-                            + c::SRAM_BYTES_PER_FLOP
-                                * c::E_J_PER_BYTE_SRAM)
-                } else if is_vec {
-                    flops * c::E_J_PER_FLOP_VECTOR
-                } else {
-                    comm * c::E_J_PER_BYTE_LINK
-                };
-                let e_mem =
-                    bytes * (c::E_J_PER_BYTE_HBM + c::E_J_PER_BYTE_L2);
-
-                for (i, dv) in derived.iter().enumerate() {
-                    let sa = dv.sa;
-                    let tiles_m = (m / sa).ceil();
-                    let tiles_n = (nn / sa).ceil();
-                    let edge =
-                        (m * nn) / (tiles_m * sa * tiles_n * sa);
-                    let drain = kt / (kt + sa);
-                    let sram_req = (2.0 * sa * kt + sa * sa)
-                        * c::FP16_BYTES
-                        / 1024.0;
-                    let sram_f = (dv.sram / sram_req)
-                        .clamp(c::SRAM_UTIL_FLOOR, 1.0);
-                    let tiles = tiles_m * tiles_n * count;
-                    let waves = (tiles / dv.arrays).ceil();
-                    let quant = tiles / (waves * dv.arrays);
-
-                    let t_tensor = flops
-                        / (dv.t_peak * edge * drain * sram_f * quant);
-                    let t_vec = flops / dv.v_peak;
-                    let t_mem = bytes / dv.m_bw;
-                    let t_net = comm / dv.n_bw + c::ALLREDUCE_LAT_S;
-
-                    let t_compute = if is_mm { t_tensor } else { t_vec };
-                    let mut t_op = if is_comm {
-                        t_net.max(t_mem)
+        // 18 lanes: 8 derived machine scalars + 2 phases x (wall time,
+        // 3 stall buckets, energy) accumulators.
+        let [
+            arrays, t_peak, v_peak, m_bw, n_bw, sa, sram, area, pt0,
+            pt1, s00, s01, s02, s10, s11, s12, en0, en1,
+        ] = scratch.lanes::<18>(n);
+        for (j, d) in designs.iter().enumerate() {
+            let dv = Derived::new(d);
+            arrays[j] = dv.arrays;
+            t_peak[j] = dv.t_peak;
+            v_peak[j] = dv.v_peak;
+            m_bw[j] = dv.m_bw;
+            n_bw[j] = dv.n_bw;
+            sa[j] = dv.sa;
+            sram[j] = dv.sram;
+            area[j] = dv.area;
+        }
+        {
+            let phases = [
+                (
+                    &mut *pt0,
+                    [&mut *s00, &mut *s01, &mut *s02],
+                    &mut *en0,
+                ),
+                (
+                    &mut *pt1,
+                    [&mut *s10, &mut *s11, &mut *s12],
+                    &mut *en1,
+                ),
+            ];
+            for ((pt, st, en), phase) in
+                phases.into_iter().zip(self.table.iter())
+            {
+                let [st_comp, st_mem, st_net] = st;
+                for row in phase {
+                    // Row constants (design-independent), hoisted out
+                    // of the design lane.
+                    let kind = row[0];
+                    let is_mm = kind == 0.0;
+                    let is_vec = kind == 1.0;
+                    let is_comm = kind == 2.0;
+                    if !(is_mm || is_vec || is_comm) {
+                        // Padding row: contributes exactly 0.0
+                        // everywhere in the scalar path.
+                        continue;
+                    }
+                    let flops = row[5];
+                    let bytes = row[6];
+                    let comm = row[7];
+                    // Per-row dynamic-energy price (J), identical to
+                    // the scalar path's expressions.
+                    let e_compute = if is_mm {
+                        flops
+                            * (c::E_J_PER_FLOP_SYSTOLIC
+                                + c::SRAM_BYTES_PER_FLOP
+                                    * c::E_J_PER_BYTE_SRAM)
+                    } else if is_vec {
+                        flops * c::E_J_PER_FLOP_VECTOR
                     } else {
-                        t_compute.max(t_mem)
+                        comm * c::E_J_PER_BYTE_LINK
                     };
-                    t_op += c::OP_OVERHEAD_S;
-
-                    let live = t_op > 0.0;
-                    let comp_win = !is_comm && t_compute >= t_mem && live;
-                    let net_win = is_comm && t_net >= t_mem && live;
-                    let mem_win = live && !comp_win && !net_win;
-
-                    phase_total[p][i] += t_op;
-                    if comp_win {
-                        stalls[p][0][i] += t_op;
+                    let e_mem = bytes
+                        * (c::E_J_PER_BYTE_HBM + c::E_J_PER_BYTE_L2);
+                    let rc = RowConsts {
+                        is_mm,
+                        is_comm,
+                        m: row[1].max(1.0),
+                        nn: row[2].max(1.0),
+                        count: row[4].max(1.0),
+                        flops,
+                        bytes,
+                        comm,
+                        kt: row[3].max(1.0).min(c::K_TILE),
+                        e_row: e_compute + e_mem,
+                    };
+                    let mut i = 0;
+                    while i + L <= n {
+                        row_window::<L>(
+                            i, rc, sa, sram, arrays, t_peak, v_peak,
+                            m_bw, n_bw, pt, st_comp, st_mem, st_net,
+                            en,
+                        );
+                        i += L;
                     }
-                    if mem_win {
-                        stalls[p][1][i] += t_op;
+                    while i < n {
+                        row_window::<1>(
+                            i, rc, sa, sram, arrays, t_peak, v_peak,
+                            m_bw, n_bw, pt, st_comp, st_mem, st_net,
+                            en,
+                        );
+                        i += 1;
                     }
-                    if net_win {
-                        stalls[p][2][i] += t_op;
-                    }
-                    energy[p][i] += e_compute + e_mem;
                 }
-            }
-            // Static leakage: area-proportional draw over the phase
-            // wall time (added after the phase's rows, as in the
-            // scalar path).
-            for (i, dv) in derived.iter().enumerate() {
-                energy[p][i] +=
-                    c::LEAKAGE_W_PER_MM2 * dv.area * phase_total[p][i];
+                // Static leakage: area-proportional draw over the
+                // phase wall time (added after the phase's rows, as in
+                // the scalar path).
+                for j in 0..n {
+                    en[j] += c::LEAKAGE_W_PER_MM2 * area[j] * pt[j];
+                }
             }
         }
-        for (i, (dv, slot)) in
-            derived.iter().zip(out.iter_mut()).enumerate()
-        {
-            let prefill_energy_mj = energy[0][i] * 1e3;
-            let energy_per_token_mj = energy[1][i] * 1e3;
-            let ttft_ms = phase_total[0][i] * 1e3;
-            let tpot_ms = phase_total[1][i] * 1e3;
+        for (j, slot) in out.iter_mut().enumerate() {
+            let prefill_energy_mj = en0[j] * 1e3;
+            let energy_per_token_mj = en1[j] * 1e3;
+            let ttft_ms = pt0[j] * 1e3;
+            let tpot_ms = pt1[j] * 1e3;
             *slot = Metrics {
                 ttft_ms,
                 tpot_ms,
-                area_mm2: dv.area,
+                area_mm2: area[j],
                 energy_per_token_mj,
                 prefill_energy_mj,
                 avg_power_w: crate::arch::power::avg_power_w(
@@ -386,16 +501,8 @@ impl RooflineSim {
                     tpot_ms,
                 ),
                 stalls: [
-                    [
-                        stalls[0][0][i] * 1e3,
-                        stalls[0][1][i] * 1e3,
-                        stalls[0][2][i] * 1e3,
-                    ],
-                    [
-                        stalls[1][0][i] * 1e3,
-                        stalls[1][1][i] * 1e3,
-                        stalls[1][2][i] * 1e3,
-                    ],
+                    [s00[j] * 1e3, s01[j] * 1e3, s02[j] * 1e3],
+                    [s10[j] * 1e3, s11[j] * 1e3, s12[j] * 1e3],
                 ],
             };
         }
@@ -415,8 +522,13 @@ impl EvalOne for RooflineSim {
         self.spec.fingerprint()
     }
 
-    fn eval_chunk(&self, designs: &[DesignPoint], out: &mut [Metrics]) {
-        self.eval_soa_into(designs, out);
+    fn eval_chunk(
+        &self,
+        designs: &[DesignPoint],
+        out: &mut [Metrics],
+        scratch: &mut EvalScratch,
+    ) {
+        self.eval_soa_into(designs, out, scratch);
     }
 }
 
@@ -593,7 +705,7 @@ mod tests {
             assert_eq!(*got, s.evaluate(d), "{d}");
         }
         let mut out = vec![Metrics::default(); designs.len()];
-        s.eval_chunk(&designs, &mut out);
+        s.eval_chunk(&designs, &mut out, &mut EvalScratch::new());
         assert_eq!(out, soa);
         assert!(s.eval_batch_soa(&[]).is_empty());
     }

@@ -8,18 +8,73 @@
 //!   interleavings;
 //! * the persistent worker pool must cap total evaluation threads at
 //!   `available_parallelism` — the fused race (all method x trial
-//!   cells) reuses one fixed worker set instead of spawning per batch.
+//!   cells) reuses one fixed worker set instead of spawning per batch;
+//! * the lane-vectorized kernels (`eval_soa_into_lanes::<L>`) must be
+//!   bitwise identical at every lane width, and a warm `EvalScratch`
+//!   arena must make repeat batches deterministic and allocation-free.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
 
 use lumina::design::{sample, DesignPoint, DesignSpace};
 use lumina::eval::parallel::{default_threads, eval_batch_pooled};
 use lumina::eval::{
-    CachedEvaluator, EvalOne, Evaluator, Metrics, ParallelEvaluator,
-    SharedCache, WorkerPool,
+    CachedEvaluator, EvalOne, EvalScratch, Evaluator, Metrics,
+    ParallelEvaluator, SharedCache, WorkerPool,
 };
 use lumina::figures::race::{EvaluatorKind, RaceConfig};
 use lumina::sim::{CompassSim, RooflineSim};
 use lumina::stats::Pcg32;
 use lumina::workload::all_scenarios;
+
+/// Per-thread allocation counter: the warm-arena test must observe
+/// *its own* thread allocating nothing, while the libtest harness
+/// runs sibling tests (which allocate freely) on other threads in
+/// this same process. `const`-initialized so the first access inside
+/// `alloc` cannot itself allocate; `try_with` keeps allocations
+/// during TLS teardown from panicking.
+struct CountingAlloc;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<usize> = const { Cell::new(0) };
+}
+
+fn bump() {
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        bump();
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        unsafe { System.alloc_zeroed(layout) }
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> usize {
+    THREAD_ALLOCS.with(|c| c.get())
+}
 
 fn batch(n: usize, seed: u64) -> Vec<DesignPoint> {
     let space = DesignSpace::table1();
@@ -232,4 +287,69 @@ fn fused_race_never_exceeds_the_worker_cap() {
         );
         assert_eq!(pool.worker_count(), cap);
     }
+}
+
+#[test]
+fn lane_width_sweep_is_bitwise_identical_to_eval_one() {
+    // The vectorized window must not change a single bit at any lane
+    // width: L=1 degenerates to the pure remainder loop, L=4 and L=8
+    // exercise real windows, and the 13-design slice forces a
+    // non-empty remainder tail at both widths. `assert_soa_bitwise`
+    // also covers both objective modes' lanes.
+    let mut scratch = EvalScratch::new();
+    for (si, scenario) in all_scenarios().iter().enumerate() {
+        let designs = batch(256, 0x1a7e + si as u64);
+        let roofline = RooflineSim::new(scenario.spec);
+        let compass = CompassSim::new(scenario.spec);
+        let mut out = vec![Metrics::default(); designs.len()];
+        for slice in [&designs[..], &designs[..13]] {
+            let o = &mut out[..slice.len()];
+            roofline.eval_soa_into_lanes::<1>(slice, o, &mut scratch);
+            assert_soa_bitwise(&roofline, o, slice, scenario.name);
+            roofline.eval_soa_into_lanes::<4>(slice, o, &mut scratch);
+            assert_soa_bitwise(&roofline, o, slice, scenario.name);
+            roofline.eval_soa_into_lanes::<8>(slice, o, &mut scratch);
+            assert_soa_bitwise(&roofline, o, slice, scenario.name);
+            compass.eval_soa_into_lanes::<1>(slice, o, &mut scratch);
+            assert_soa_bitwise(&compass, o, slice, scenario.name);
+            compass.eval_soa_into_lanes::<4>(slice, o, &mut scratch);
+            assert_soa_bitwise(&compass, o, slice, scenario.name);
+            compass.eval_soa_into_lanes::<8>(slice, o, &mut scratch);
+            assert_soa_bitwise(&compass, o, slice, scenario.name);
+        }
+    }
+}
+
+#[test]
+fn warm_scratch_reuse_is_deterministic_and_allocation_free() {
+    // One arena, same batch twice: the second pass must produce
+    // identical bytes and perform zero heap allocations on this
+    // thread (the arena is carved in place, the kernels are pure
+    // arithmetic, and the output buffer is preallocated).
+    let designs = batch(128, 0xa11);
+    let scenario = &all_scenarios()[0];
+    let compass = CompassSim::new(scenario.spec);
+    let roofline = RooflineSim::new(scenario.spec);
+    let mut scratch = EvalScratch::new();
+    let mut first = vec![Metrics::default(); designs.len()];
+    let mut second = vec![Metrics::default(); designs.len()];
+    // Cold passes grow the arena to the larger (roofline) carve.
+    compass.eval_soa_into(&designs, &mut first, &mut scratch);
+    roofline.eval_soa_into(&designs, &mut first, &mut scratch);
+    compass.eval_soa_into(&designs, &mut first, &mut scratch);
+    let cap = scratch.capacity();
+
+    let before = thread_allocs();
+    compass.eval_soa_into(&designs, &mut second, &mut scratch);
+    let compass_allocs = thread_allocs() - before;
+    assert_eq!(compass_allocs, 0, "warm compass pass allocated");
+    assert_eq!(second, first, "warm compass pass changed results");
+
+    roofline.eval_soa_into(&designs, &mut first, &mut scratch);
+    let before = thread_allocs();
+    roofline.eval_soa_into(&designs, &mut second, &mut scratch);
+    let roofline_allocs = thread_allocs() - before;
+    assert_eq!(roofline_allocs, 0, "warm roofline pass allocated");
+    assert_eq!(second, first, "warm roofline pass changed results");
+    assert_eq!(scratch.capacity(), cap, "warm passes regrew the arena");
 }
