@@ -1,0 +1,281 @@
+//! Comment- and string-stripping lexer for the determinism lint.
+//!
+//! In the style of the hand-rolled [`crate::util::json`] parser: a
+//! small, total, dependency-free byte scanner — not a full Rust lexer.
+//! It produces the token stream the rule scanner needs (identifiers
+//! and punctuation with line numbers) while discarding exactly the
+//! contexts that cause false positives (string literals, char
+//! literals, block comments) and *capturing* line comments for the
+//! waiver parser (see [`crate::analysis::waiver`] for the syntax).
+//!
+//! Deliberate approximations, safe for linting purposes:
+//! * numeric literals lex as identifier-like tokens (`0x54`, `1e15`);
+//!   no rule matches them;
+//! * a raw identifier `r#type` lexes as `r`, `#`, `type`;
+//! * lifetimes drop their tick, so `'a` lexes as the ident `a`.
+
+/// Token class — the scanner only distinguishes words from symbols.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier-like: `[A-Za-z0-9_]+` (includes keywords, numbers).
+    Ident,
+    /// Single punctuation char, or the two-char path separator `::`.
+    Punct,
+}
+
+/// One lexed token, borrowing from the source text.
+#[derive(Debug, Clone, Copy)]
+pub struct Tok<'a> {
+    pub kind: TokKind,
+    pub text: &'a str,
+    /// 1-based source line of the token's first byte.
+    pub line: u32,
+}
+
+impl<'a> Tok<'a> {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+}
+
+/// Lexer output: the token stream plus every `//` comment (with its
+/// line), which the waiver parser consumes.
+#[derive(Debug, Default)]
+pub struct Lexed<'a> {
+    pub toks: Vec<Tok<'a>>,
+    pub comments: Vec<(u32, &'a str)>,
+}
+
+fn ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Byte length of the UTF-8 char starting with `first` (total: never
+/// more than what keeps slicing on a char boundary).
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+/// Lex `src` into tokens + captured line comments.
+pub fn lex(src: &str) -> Lexed<'_> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment: capture for the waiver parser.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            out.comments.push((line, &src[start..i]));
+            continue;
+        }
+        // Block comment (nested, like Rust's).
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/'
+                {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string r"..." / r#"..."# (any number of hashes).
+        if c == b'r' {
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == b'"' {
+                j += 1;
+                while j < n {
+                    if b[j] == b'"'
+                        && j + 1 + hashes <= n
+                        && b[j + 1..j + 1 + hashes]
+                            .iter()
+                            .all(|&h| h == b'#')
+                    {
+                        j += 1 + hashes;
+                        break;
+                    }
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+            // Not a raw string: fall through (ident starting with r,
+            // or a raw identifier's `r` + `#`).
+        }
+        // Plain string literal.
+        if c == b'"' {
+            i += 1;
+            while i < n {
+                match b[i] {
+                    b'\\' => {
+                        // Escaped char; a `\<newline>` continuation
+                        // still advances the line counter.
+                        if i + 1 < n && b[i + 1] == b'\n' {
+                            line += 1;
+                        }
+                        i += 2;
+                    }
+                    b'"' => {
+                        i += 1;
+                        break;
+                    }
+                    b'\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime tick.
+        if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                // Escaped char literal: skip to the closing quote.
+                let mut j = i + 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                i = (j + 1).min(n);
+                continue;
+            }
+            if i + 1 < n && b[i + 1] != b'\'' {
+                let len = utf8_len(b[i + 1]);
+                if i + 1 + len < n && b[i + 1 + len] == b'\'' {
+                    // One char between quotes: a char literal.
+                    i += len + 2;
+                    continue;
+                }
+            }
+            // A lifetime: drop the tick, lex the ident next round.
+            i += 1;
+            continue;
+        }
+        if ident_byte(c) {
+            let start = i;
+            while i < n && ident_byte(b[i]) {
+                i += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: &src[start..i],
+                line,
+            });
+            continue;
+        }
+        if c == b':' && i + 1 < n && b[i + 1] == b':' {
+            out.toks.push(Tok {
+                kind: TokKind::Punct,
+                text: &src[i..i + 2],
+                line,
+            });
+            i += 2;
+            continue;
+        }
+        // Single punctuation char (full UTF-8 char so slicing stays
+        // on a boundary even for stray non-ASCII bytes).
+        let len = utf8_len(c).min(n - i);
+        out.toks.push(Tok {
+            kind: TokKind::Punct,
+            text: &src[i..i + len],
+            line,
+        });
+        i += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.iter().map(|t| t.text.to_string()).collect()
+    }
+
+    #[test]
+    fn strips_strings_and_comments() {
+        let l = lex("let x = \"a.unwrap()\"; // lumina: allow(X) y\n");
+        let t: Vec<_> = l.toks.iter().map(|t| t.text).collect();
+        assert_eq!(t, vec!["let", "x", "=", ";"]);
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(l.comments[0].0, 1);
+        assert!(l.comments[0].1.contains("allow(X)"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_raw_strings() {
+        let src = "a /* x /* y */ z */ b r#\"s \"quoted\" t\"# c";
+        assert_eq!(texts(src), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let src = "m('\\n'); f::<'a>(x); push('}'); q('\u{e9}')";
+        let t = texts(src);
+        assert!(t.contains(&"a".to_string())); // lifetime ident kept
+        // no brace tokens leaked from the char literals:
+        assert!(!t.contains(&"}".to_string()));
+        assert!(!t.contains(&"\u{e9}".to_string()));
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_constructs() {
+        let src = "a\n\"two\nlines\"\n/* c\nc */\nb";
+        let l = lex(src);
+        assert_eq!(l.toks[0].line, 1);
+        assert_eq!(l.toks[1].line, 6);
+    }
+
+    #[test]
+    fn path_separator_is_one_token() {
+        assert_eq!(
+            texts("Instant::now()"),
+            vec!["Instant", "::", "now", "(", ")"]
+        );
+    }
+
+    #[test]
+    fn numbers_lex_as_ident_like_tokens() {
+        assert_eq!(texts("0x54 1e15"), vec!["0x54", "1e15"]);
+        assert_eq!(texts("1.5"), vec!["1", ".", "5"]);
+    }
+}

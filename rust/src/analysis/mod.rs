@@ -1,0 +1,161 @@
+//! Determinism lint: a dependency-free static-analysis pass over the
+//! crate's own sources (`lumina lint`).
+//!
+//! The repo's test strategy — golden ask/tell trajectories, bitwise
+//! SoA equivalence, checkpoint replay — rests on determinism
+//! invariants that used to be conventions. This subsystem turns them
+//! into checked rules:
+//!
+//! | rule | severity | invariant |
+//! |------|----------|-----------|
+//! | D001 | error    | no hash-container iteration in det modules |
+//! | D002 | warning  | wall-clock only via `util::bench` |
+//! | D003 | error    | no entropy RNG anywhere |
+//! | D004 | error    | no RNG draws in `DseSession::tell` |
+//! | F001 | error    | no float reduction over unordered iters |
+//! | P001 | warning  | no unwrap/expect in library code |
+//! | W001 | warning  | waivers must be well-formed + reasoned |
+//!
+//! Findings can be waived inline (`// lumina: allow(D002) reason`,
+//! see [`waiver`]); the CI gate runs `lumina lint --deny-warnings`
+//! and requires zero unwaivered findings.
+//!
+//! Pipeline: [`lexer`] strips comments/strings and tokenizes,
+//! [`scan`] matches rules with region tracking, [`waiver`] applies
+//! inline suppressions, [`report`] aggregates and serializes.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod scan;
+pub mod waiver;
+
+pub use report::{Counts, Report};
+pub use rules::{Rule, Severity, RULES};
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::Context;
+use crate::Result;
+
+/// One lint finding, waiver state already resolved.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule id, e.g. `"D001"`.
+    pub rule: String,
+    pub severity: Severity,
+    /// Path relative to the lint root, forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: u32,
+    pub message: String,
+    /// True when an applicable reasoned waiver covers this finding.
+    pub waived: bool,
+    pub waiver_reason: Option<String>,
+}
+
+/// Lint a single in-memory source file. `relpath` scopes the
+/// path-sensitive rules (D001/D002/P001), so pass the path the file
+/// would have under `src/`.
+pub fn lint_source(relpath: &str, src: &str) -> Vec<Finding> {
+    scan::scan_file(relpath, src)
+}
+
+/// Lint every `.rs` file under `root` (recursively, sorted walk) and
+/// aggregate into a [`Report`]. Deterministic: same tree in, same
+/// report out, independent of directory-entry order.
+pub fn lint_tree(root: &Path) -> Result<Report> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut findings: Vec<Finding> = Vec::new();
+    for path in &files {
+        let rel = rel_of(root, path);
+        let text = fs::read_to_string(path).with_context(|| {
+            format!("lint: read {}", path.display())
+        })?;
+        findings.extend(scan::scan_file(&rel, &text));
+    }
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, &a.rule, &a.message)
+            .cmp(&(&b.file, b.line, &b.rule, &b.message))
+    });
+    Ok(Report {
+        root: root.display().to_string().replace('\\', "/"),
+        files: files.len(),
+        findings,
+    })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = fs::read_dir(dir).with_context(|| {
+        format!("lint: read dir {}", dir.display())
+    })?;
+    for entry in entries {
+        let entry = entry.with_context(|| {
+            format!("lint: walk {}", dir.display())
+        })?;
+        let path = entry.path();
+        let ty = entry.file_type().with_context(|| {
+            format!("lint: stat {}", path.display())
+        })?;
+        if ty.is_dir() {
+            if path
+                .file_name()
+                .is_some_and(|d| d == "target" || d == "out")
+            {
+                continue;
+            }
+            collect_rs(&path, out)?;
+        } else if ty.is_file()
+            && path.extension().is_some_and(|e| e == "rs")
+        {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_of(root: &Path, path: &Path) -> String {
+    let p = path.strip_prefix(root).unwrap_or(path);
+    p.to_string_lossy().replace('\\', "/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lint_source_scopes_rules_by_relpath() {
+        let src = "fn f() { let t = Instant::now(); }";
+        assert_eq!(lint_source("runtime/x.rs", src).len(), 1);
+        assert_eq!(lint_source("util/bench.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn lint_tree_walks_sorted_and_reports_counts() {
+        let dir = std::env::temp_dir().join(format!(
+            "lumina_lint_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let sub = dir.join("eval");
+        fs::create_dir_all(&sub).expect("mkdir");
+        fs::write(
+            sub.join("b.rs"),
+            "fn f(x: Option<u32>) -> u32 { x.unwrap() }",
+        )
+        .expect("write b.rs");
+        fs::write(dir.join("a.rs"), "fn ok() {}")
+            .expect("write a.rs");
+        let report = lint_tree(&dir).expect("lint_tree");
+        fs::remove_dir_all(&dir).expect("cleanup");
+        assert_eq!(report.files, 2);
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].file, "eval/b.rs");
+        assert_eq!(report.findings[0].rule, "P001");
+        assert!(report.failed(true));
+        assert!(!report.failed(false));
+    }
+}

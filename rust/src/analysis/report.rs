@@ -1,0 +1,221 @@
+//! Lint report: aggregation, text rendering, and the machine-read
+//! JSON findings format (CI uploads it as an artifact).
+//!
+//! The JSON layout is stable and golden-tested: keys are emitted in
+//! `util::json`'s sorted-object order, so byte-for-byte comparison
+//! against a committed golden file is meaningful.
+
+use crate::analysis::rules::Severity;
+use crate::analysis::Finding;
+use crate::util::json::{obj, Json};
+
+/// The outcome of linting a tree.
+#[derive(Debug)]
+pub struct Report {
+    /// Lint root as given (forward slashes). Tests overwrite this
+    /// before golden comparison so the file is machine-independent.
+    pub root: String,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// All findings, waived included, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+}
+
+/// Unwaivered error/warning counts plus the waived total.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Counts {
+    pub errors: usize,
+    pub warnings: usize,
+    pub waived: usize,
+}
+
+impl Report {
+    pub fn counts(&self) -> Counts {
+        let mut c = Counts { errors: 0, warnings: 0, waived: 0 };
+        for f in &self.findings {
+            if f.waived {
+                c.waived += 1;
+            } else if f.severity == Severity::Error {
+                c.errors += 1;
+            } else {
+                c.warnings += 1;
+            }
+        }
+        c
+    }
+
+    /// Gate check: errors always fail; `--deny-warnings` (the CI
+    /// mode) fails on any unwaivered finding.
+    pub fn failed(&self, deny_warnings: bool) -> bool {
+        let c = self.counts();
+        c.errors > 0 || (deny_warnings && c.warnings > 0)
+    }
+
+    /// Human-facing rendering: one line per unwaivered finding plus
+    /// a summary trailer.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            if f.waived {
+                continue;
+            }
+            out.push_str(&format!(
+                "{}:{}: {} {}: {}\n",
+                f.file,
+                f.line,
+                f.severity.as_str(),
+                f.rule,
+                f.message
+            ));
+        }
+        let c = self.counts();
+        out.push_str(&format!(
+            "lint: {} files, {} findings ({} errors, {} warnings, \
+             {} waived)\n",
+            self.files,
+            self.findings.len(),
+            c.errors,
+            c.warnings,
+            c.waived
+        ));
+        out
+    }
+
+    /// Machine-readable findings document (waived included, so the
+    /// artifact is a full audit trail).
+    pub fn to_json(&self) -> Json {
+        let c = self.counts();
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                obj(vec![
+                    ("file", Json::Str(f.file.clone())),
+                    ("line", Json::Num(f.line as f64)),
+                    ("message", Json::Str(f.message.clone())),
+                    ("rule", Json::Str(f.rule.clone())),
+                    (
+                        "severity",
+                        Json::Str(f.severity.as_str().to_string()),
+                    ),
+                    ("waived", Json::Bool(f.waived)),
+                    (
+                        "waiver_reason",
+                        match &f.waiver_reason {
+                            Some(r) => Json::Str(r.clone()),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect();
+        obj(vec![
+            (
+                "counts",
+                obj(vec![
+                    ("errors", Json::Num(c.errors as f64)),
+                    ("waived", Json::Num(c.waived as f64)),
+                    ("warnings", Json::Num(c.warnings as f64)),
+                ]),
+            ),
+            ("files", Json::Num(self.files as f64)),
+            ("findings", Json::Arr(findings)),
+            ("root", Json::Str(self.root.clone())),
+            ("version", Json::Num(1.0)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(
+        rule: &str,
+        sev: Severity,
+        waived: bool,
+    ) -> Finding {
+        Finding {
+            rule: rule.to_string(),
+            severity: sev,
+            file: "x/y.rs".to_string(),
+            line: 3,
+            message: "msg".to_string(),
+            waived,
+            waiver_reason: if waived {
+                Some("reason".to_string())
+            } else {
+                None
+            },
+        }
+    }
+
+    #[test]
+    fn counts_and_gate() {
+        let r = Report {
+            root: "src".to_string(),
+            files: 2,
+            findings: vec![
+                finding("D001", Severity::Error, false),
+                finding("P001", Severity::Warning, false),
+                finding("P001", Severity::Warning, true),
+            ],
+        };
+        let c = r.counts();
+        assert_eq!(
+            c,
+            Counts { errors: 1, warnings: 1, waived: 1 }
+        );
+        assert!(r.failed(false));
+        assert!(r.failed(true));
+
+        let warn_only = Report {
+            root: "src".to_string(),
+            files: 1,
+            findings: vec![finding(
+                "P001",
+                Severity::Warning,
+                false,
+            )],
+        };
+        assert!(!warn_only.failed(false));
+        assert!(warn_only.failed(true));
+    }
+
+    #[test]
+    fn text_hides_waived_but_summary_counts_them() {
+        let r = Report {
+            root: "src".to_string(),
+            files: 1,
+            findings: vec![
+                finding("D001", Severity::Error, false),
+                finding("P001", Severity::Warning, true),
+            ],
+        };
+        let text = r.render_text();
+        assert!(text.contains("error D001"));
+        assert!(!text.contains("P001"));
+        assert!(text.contains("1 waived"));
+    }
+
+    #[test]
+    fn json_round_trips_through_the_parser() {
+        let r = Report {
+            root: "src".to_string(),
+            files: 1,
+            findings: vec![finding(
+                "D001",
+                Severity::Error,
+                false,
+            )],
+        };
+        let text = r.to_json().pretty();
+        let back = Json::parse(&text).expect("own output parses");
+        let findings =
+            back.get("findings").expect("findings key present");
+        match findings.as_arr() {
+            Some(a) => assert_eq!(a.len(), 1),
+            None => panic!("findings is not an array"),
+        }
+    }
+}

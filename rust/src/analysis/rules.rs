@@ -1,0 +1,179 @@
+//! Rule registry for the determinism lint: ids, severities, and the
+//! identifier/method vocabularies each rule matches on.
+//!
+//! The vocabularies are grounded in this repo, not generic Rust:
+//! [`RNG_METHODS`] is exactly the public surface of
+//! [`crate::stats::rng::Pcg32`], and [`DET_MODULES`] is the set of
+//! top-level modules whose outputs are pinned bit-for-bit by golden
+//! tests (ask/tell trajectories, SoA equivalence, checkpoint replay).
+
+/// Finding severity. `--deny-warnings` (the CI gate) promotes
+/// warnings to failures; without it only errors fail the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One lint rule: stable id, severity, and human-facing docs (the
+/// README rule table is generated from this registry's fields).
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    pub id: &'static str,
+    pub severity: Severity,
+    pub title: &'static str,
+    pub rationale: &'static str,
+}
+
+/// Every rule the scanner can emit, in id order.
+pub const RULES: [Rule; 7] = [
+    Rule {
+        id: "D001",
+        severity: Severity::Error,
+        title: "hash-container iteration in a deterministic module",
+        rationale: "HashMap/HashSet iteration order varies per \
+                    process; inside eval/, dse/, pareto/, sim/, \
+                    baselines/ it can leak into golden-tested \
+                    results. Keyed lookup is fine; drains are not.",
+    },
+    Rule {
+        id: "D002",
+        severity: Severity::Warning,
+        title: "wall-clock read outside util/bench.rs",
+        rationale: "Instant::now/SystemTime make output depend on \
+                    the host; all timing goes through the \
+                    util::bench helpers so replay stays bit-exact.",
+    },
+    Rule {
+        id: "D003",
+        severity: Severity::Error,
+        title: "entropy-seeded RNG",
+        rationale: "thread_rng/from_entropy/OsRng break replay \
+                    everywhere, tests included; all randomness \
+                    routes through the seeded stats::rng::Pcg32.",
+    },
+    Rule {
+        id: "D004",
+        severity: Severity::Error,
+        title: "RNG draw inside a DseSession tell body",
+        rationale: "the checkpoint-replay invariant: all draws \
+                    happen in ask, tell only records. A draw in \
+                    tell desynchronizes resumed trajectories.",
+    },
+    Rule {
+        id: "F001",
+        severity: Severity::Error,
+        title: "float reduction over an unordered container",
+        rationale: "float addition is not associative; summing a \
+                    hash container's values in iteration order \
+                    yields run-dependent bits.",
+    },
+    Rule {
+        id: "P001",
+        severity: Severity::Warning,
+        title: "unwrap/expect in library code",
+        rationale: "library paths return crate::error::Error so \
+                    callers can handle failure; panics are for \
+                    provably-unreachable states, which need a \
+                    reasoned waiver.",
+    },
+    Rule {
+        id: "W001",
+        severity: Severity::Warning,
+        title: "malformed or unjustified waiver",
+        rationale: "a waiver without a reason (or naming an \
+                    unknown rule) is ignored and flagged; the \
+                    audit trail is the point. W001 itself cannot \
+                    be waived.",
+    },
+];
+
+/// Look up a rule by id.
+pub fn by_id(id: &str) -> Option<&'static Rule> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// Severity for a rule id (unknown ids are treated as errors; the
+/// scanner only emits ids from [`RULES`]).
+pub fn severity_of(id: &str) -> Severity {
+    match by_id(id) {
+        Some(r) => r.severity,
+        None => Severity::Error,
+    }
+}
+
+/// Iteration-order-sensitive methods on hash containers (D001 and
+/// F001 receivers). Keyed ops (`get`, `insert`, `contains_key`,
+/// `remove`) are deliberately absent: keyed lookup is deterministic.
+pub const ORDER_METHODS: [&str; 8] = [
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "retain",
+];
+
+/// The draw surface of `stats::rng::Pcg32` (D004). `fork` is here
+/// because forking advances parent state just like a draw.
+pub const RNG_METHODS: [&str; 10] = [
+    "next_u32",
+    "next_u64",
+    "f64",
+    "range_usize",
+    "choose",
+    "chance",
+    "normal",
+    "shuffle",
+    "sample_indices",
+    "fork",
+];
+
+/// Entropy sources (D003): any appearance is a finding — these are
+/// the std/rand idents a future dependency or hand-rolled shim would
+/// surface under.
+pub const ENTROPY_IDENTS: [&str; 5] = [
+    "thread_rng",
+    "ThreadRng",
+    "from_entropy",
+    "OsRng",
+    "getrandom",
+];
+
+/// Top-level modules under `src/` whose results are pinned by golden
+/// tests; D001/F001 only fire inside these.
+pub const DET_MODULES: [&str; 5] =
+    ["eval", "dse", "pareto", "sim", "baselines"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_sorted_and_unique() {
+        for w in RULES.windows(2) {
+            assert!(w[0].id < w[1].id);
+        }
+    }
+
+    #[test]
+    fn lookup_round_trips() {
+        for r in &RULES {
+            assert_eq!(by_id(r.id).map(|x| x.id), Some(r.id));
+            assert_eq!(severity_of(r.id), r.severity);
+        }
+        assert!(by_id("D999").is_none());
+        assert_eq!(severity_of("D999"), Severity::Error);
+    }
+}

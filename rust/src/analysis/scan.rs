@@ -1,0 +1,609 @@
+//! The token scanner: walks one file's token stream, tracks regions
+//! (`#[cfg(test)]` bodies, `impl DseSession` blocks, `fn tell`
+//! bodies), and emits rule findings.
+//!
+//! The scanner is a heuristic token matcher, not a type checker. Its
+//! contract is: no false positives on this repo's idioms (enforced by
+//! the self-lint test over `rust/src`), and every true positive class
+//! covered by a fixture under `tests/lint_fixtures/`.
+
+use crate::analysis::lexer::{lex, Tok, TokKind};
+use crate::analysis::rules::{
+    self, DET_MODULES, ENTROPY_IDENTS, ORDER_METHODS, RNG_METHODS,
+};
+use crate::analysis::waiver;
+use crate::analysis::Finding;
+
+/// Path key for rule scoping: forward slashes, `src/` prefix
+/// stripped so the same file keys identically whether the lint root
+/// is `src` or `rust/src`.
+fn relkey(rel: &str) -> &str {
+    let r = rel.strip_prefix("src/").unwrap_or(rel);
+    r.strip_prefix("rust/src/").unwrap_or(r)
+}
+
+/// D001/F001 scope: top-level modules with golden-pinned outputs.
+pub fn is_det_module(rel: &str) -> bool {
+    let key = relkey(rel);
+    let top = key.split('/').next().unwrap_or(key);
+    DET_MODULES.contains(&top)
+}
+
+/// D002 allowlist: the one sanctioned timing module plus benches.
+pub fn d002_allowed(rel: &str) -> bool {
+    let key = relkey(rel);
+    key == "util/bench.rs"
+        || key.starts_with("bench/")
+        || key.contains("benches/")
+}
+
+/// P001 exemptions: binaries, golden-trajectory oracles, test and
+/// bench trees. (`#[cfg(test)]` regions are exempted separately.)
+pub fn p001_exempt(rel: &str) -> bool {
+    let key = relkey(rel);
+    let base = key.rsplit('/').next().unwrap_or(key);
+    base == "main.rs"
+        || base == "golden.rs"
+        || key.contains("tests/")
+        || key.contains("benches/")
+}
+
+fn punct(t: &Tok<'_>, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+/// Scan one file and return its complete findings, waivers already
+/// applied. `relpath` is the path relative to the lint root.
+pub fn scan_file(relpath: &str, src: &str) -> Vec<Finding> {
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let n = toks.len();
+    // (rule id, line, message)
+    let mut raw: Vec<(&'static str, u32, String)> = Vec::new();
+
+    // Pre-pass: identifiers bound to a hash-container type, found by
+    // walking back from a `HashMap`/`HashSet` token over an optional
+    // `::`-path to a `:` (type ascription) or `=` (init), then to
+    // the bound name. `use` imports and type aliases don't match —
+    // they have no `:`/`=` immediately before the path.
+    let mut hash_idents: Vec<&str> = Vec::new();
+    for k in 0..n {
+        let t = &toks[k];
+        if t.kind != TokKind::Ident
+            || (t.text != "HashMap" && t.text != "HashSet")
+        {
+            continue;
+        }
+        let mut j = k as isize - 1;
+        while j >= 1 && punct(&toks[j as usize], "::") {
+            j -= 1;
+            if j >= 0 && toks[j as usize].kind == TokKind::Ident {
+                j -= 1;
+            }
+        }
+        if j >= 0
+            && (punct(&toks[j as usize], ":")
+                || punct(&toks[j as usize], "="))
+        {
+            j -= 1;
+            if j >= 0 {
+                let p = &toks[j as usize];
+                if p.kind == TokKind::Ident
+                    && p.text != "mut"
+                    && !hash_idents.contains(&p.text)
+                {
+                    hash_idents.push(p.text);
+                }
+            }
+        }
+    }
+
+    // Region tracking: stacks of brace depths.
+    let mut depth = 0u32;
+    let mut test_regions: Vec<u32> = Vec::new();
+    let mut impl_dse: Vec<u32> = Vec::new();
+    let mut tell_body: Vec<u32> = Vec::new();
+    let mut pending_test = false;
+    let mut pending_impl_dse = false;
+    let mut pending_fn_tell = false;
+
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        let in_test = !test_regions.is_empty();
+
+        if punct(t, "{") {
+            depth += 1;
+            if pending_test {
+                test_regions.push(depth);
+                pending_test = false;
+            }
+            if pending_impl_dse {
+                impl_dse.push(depth);
+                pending_impl_dse = false;
+            }
+            if pending_fn_tell {
+                tell_body.push(depth);
+                pending_fn_tell = false;
+            }
+            i += 1;
+            continue;
+        }
+        if punct(t, "}") {
+            if test_regions.last() == Some(&depth) {
+                test_regions.pop();
+            }
+            if impl_dse.last() == Some(&depth) {
+                impl_dse.pop();
+            }
+            if tell_body.last() == Some(&depth) {
+                tell_body.pop();
+            }
+            depth = depth.saturating_sub(1);
+            i += 1;
+            continue;
+        }
+        if punct(t, ";") {
+            // An item ended before any body opened.
+            pending_test = false;
+            pending_impl_dse = false;
+            pending_fn_tell = false;
+            i += 1;
+            continue;
+        }
+
+        // Attribute: `#[...]`. A `test` token inside (covers both
+        // `#[test]` and `#[cfg(test)]`) marks the next body as a
+        // test region — unless negated, as in `#[cfg(not(test))]`.
+        if punct(t, "#") && i + 1 < n && punct(&toks[i + 1], "[") {
+            let mut j = i + 2;
+            let mut d = 1u32;
+            let mut has_test = false;
+            let mut has_not = false;
+            while j < n && d > 0 {
+                let a = &toks[j];
+                if punct(a, "[") {
+                    d += 1;
+                } else if punct(a, "]") {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                } else if a.is_ident("test") {
+                    has_test = true;
+                } else if a.is_ident("not") {
+                    has_not = true;
+                }
+                j += 1;
+            }
+            if has_test && !has_not {
+                pending_test = true;
+            }
+            i = j + 1;
+            continue;
+        }
+
+        // `impl ... DseSession ... {` opens a D004-tracked impl.
+        if t.is_ident("impl") && !in_test {
+            let mut j = i + 1;
+            let mut seen_dse = false;
+            while j < n
+                && !punct(&toks[j], "{")
+                && !punct(&toks[j], ";")
+            {
+                if toks[j].is_ident("DseSession") {
+                    seen_dse = true;
+                }
+                j += 1;
+            }
+            if seen_dse && j < n && punct(&toks[j], "{") {
+                pending_impl_dse = true;
+            }
+            i += 1;
+            continue;
+        }
+
+        // `fn tell` inside a tracked impl: next `{` opens the body.
+        if t.is_ident("fn")
+            && !impl_dse.is_empty()
+            && i + 1 < n
+            && toks[i + 1].is_ident("tell")
+        {
+            pending_fn_tell = true;
+            i += 2;
+            continue;
+        }
+
+        if t.kind == TokKind::Ident {
+            // D003: entropy sources, everywhere — tests included,
+            // since test replay matters as much as library replay.
+            if ENTROPY_IDENTS.contains(&t.text) {
+                raw.push((
+                    "D003",
+                    t.line,
+                    format!(
+                        "entropy RNG `{}`; seed a \
+                         stats::rng::Pcg32 instead",
+                        t.text
+                    ),
+                ));
+            }
+            // D002: wall-clock reads outside the allowlist.
+            if !in_test && !d002_allowed(relpath) {
+                if t.text == "SystemTime" || t.text == "UNIX_EPOCH" {
+                    raw.push((
+                        "D002",
+                        t.line,
+                        format!(
+                            "wall-clock `{}` outside \
+                             util/bench.rs",
+                            t.text
+                        ),
+                    ));
+                }
+                if t.text == "Instant"
+                    && i + 2 < n
+                    && punct(&toks[i + 1], "::")
+                    && toks[i + 2].is_ident("now")
+                {
+                    raw.push((
+                        "D002",
+                        t.line,
+                        "wall-clock `Instant::now` outside \
+                         util/bench.rs"
+                            .to_string(),
+                    ));
+                }
+            }
+        }
+
+        // Method call: `. name (`.
+        if punct(t, ".")
+            && i + 2 < n
+            && toks[i + 1].kind == TokKind::Ident
+            && punct(&toks[i + 2], "(")
+        {
+            let m = toks[i + 1].text;
+            let mline = toks[i + 1].line;
+            let recv = if i > 0 && toks[i - 1].kind == TokKind::Ident
+            {
+                Some(toks[i - 1].text)
+            } else {
+                None
+            };
+            if !in_test {
+                if (m == "unwrap" || m == "expect")
+                    && !p001_exempt(relpath)
+                {
+                    raw.push((
+                        "P001",
+                        mline,
+                        format!(
+                            "`.{m}(` may panic in library code; \
+                             return crate::error::Error or waive \
+                             with a proof"
+                        ),
+                    ));
+                }
+                if !tell_body.is_empty() && RNG_METHODS.contains(&m)
+                {
+                    raw.push((
+                        "D004",
+                        mline,
+                        format!(
+                            "RNG draw `.{m}(` inside a `tell` \
+                             body; draws belong in `ask`"
+                        ),
+                    ));
+                }
+                if let Some(r) = recv {
+                    if hash_idents.contains(&r)
+                        && ORDER_METHODS.contains(&m)
+                    {
+                        if is_det_module(relpath) {
+                            raw.push((
+                                "D001",
+                                mline,
+                                format!(
+                                    "`{r}.{m}()` iterates an \
+                                     unordered hash container"
+                                ),
+                            ));
+                        }
+                        scan_float_reduction(
+                            toks, i, r, m, relpath, &mut raw,
+                        );
+                    }
+                }
+            }
+            i += 1;
+            continue;
+        }
+
+        // `for pat in <hash ident> {` — iteration without a method.
+        if t.is_ident("for") && !in_test && is_det_module(relpath) {
+            let mut j = i + 1;
+            while j < n
+                && !toks[j].is_ident("in")
+                && !punct(&toks[j], "{")
+            {
+                j += 1;
+            }
+            if j < n && toks[j].is_ident("in") && j + 1 < n {
+                let mut core: Vec<&Tok<'_>> = Vec::new();
+                let mut k = j + 1;
+                while k < n && !punct(&toks[k], "{") {
+                    let x = &toks[k];
+                    if !punct(x, "&") && !x.is_ident("mut") {
+                        core.push(x);
+                    }
+                    k += 1;
+                }
+                if core.len() == 1
+                    && core[0].kind == TokKind::Ident
+                    && hash_idents.contains(&core[0].text)
+                {
+                    raw.push((
+                        "D001",
+                        core[0].line,
+                        format!(
+                            "`for _ in {}` iterates an unordered \
+                             hash container",
+                            core[0].text
+                        ),
+                    ));
+                }
+            }
+        }
+        i += 1;
+    }
+
+    // Apply waivers; malformed waivers surface as W001.
+    let (waivers, w001) = waiver::parse(&lexed.comments);
+    let mut out: Vec<Finding> = Vec::new();
+    for (rule, line, message) in raw {
+        let w = waivers.iter().find(|wv| {
+            wv.rule == rule
+                && (wv.line == line || wv.line + 1 == line)
+        });
+        out.push(Finding {
+            rule: rule.to_string(),
+            severity: rules::severity_of(rule),
+            file: relpath.to_string(),
+            line,
+            message,
+            waived: w.is_some(),
+            waiver_reason: w.map(|wv| wv.reason.clone()),
+        });
+    }
+    for (line, message) in w001 {
+        out.push(Finding {
+            rule: "W001".to_string(),
+            severity: rules::severity_of("W001"),
+            file: relpath.to_string(),
+            line,
+            message,
+            waived: false,
+            waiver_reason: None,
+        });
+    }
+    out.sort_by(|a, b| {
+        (a.line, &a.rule, &a.message)
+            .cmp(&(b.line, &b.rule, &b.message))
+    });
+    out
+}
+
+/// F001: from the call `recv.m(` at token index `i` (of the `.`),
+/// scan the rest of the expression for a chained `.sum`/`.fold`.
+/// Depth-counts brackets so closure bodies inside the chain don't
+/// terminate the scan; stops at the statement boundary (`;` or a
+/// block opening at depth zero, or an enclosing closer).
+fn scan_float_reduction(
+    toks: &[Tok<'_>],
+    i: usize,
+    recv: &str,
+    m: &str,
+    relpath: &str,
+    raw: &mut Vec<(&'static str, u32, String)>,
+) {
+    let n = toks.len();
+    let mut j = i + 2; // the call's own `(` — counted below
+    let mut d = 0i32;
+    while j < n {
+        let t = &toks[j];
+        if punct(t, "(") || punct(t, "[") {
+            d += 1;
+        } else if punct(t, ")") || punct(t, "]") || punct(t, "}") {
+            d -= 1;
+            if d < 0 {
+                break;
+            }
+        } else if punct(t, "{") {
+            if d == 0 {
+                break;
+            }
+            d += 1;
+        } else if punct(t, ";") && d == 0 {
+            break;
+        } else if punct(t, ".")
+            && d == 0
+            && j + 1 < n
+            && (toks[j + 1].is_ident("sum")
+                || toks[j + 1].is_ident("fold"))
+        {
+            if is_det_module(relpath) {
+                raw.push((
+                    "F001",
+                    toks[j + 1].line,
+                    format!(
+                        "float reduction `.{}(` over unordered \
+                         `{recv}.{m}()`",
+                        toks[j + 1].text
+                    ),
+                ));
+            }
+            break;
+        }
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(rel: &str, src: &str) -> Vec<(String, bool)> {
+        scan_file(rel, src)
+            .into_iter()
+            .map(|f| (f.rule, f.waived))
+            .collect()
+    }
+
+    #[test]
+    fn d001_flags_hash_iteration_in_det_modules_only() {
+        let src = "fn f() { let m: HashMap<u32, f64> = \
+                   HashMap::new(); for v in m.values() { use_(v); } \
+                   }";
+        assert_eq!(
+            ids("eval/x.rs", src),
+            vec![("D001".to_string(), false)]
+        );
+        assert!(ids("util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d001_keyed_lookup_is_clean() {
+        let src = "fn f(m: &HashMap<u32, f64>) -> Option<&f64> { \
+                   m.get(&3) }";
+        assert!(ids("eval/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d001_for_loop_over_hash_set() {
+        let src = "fn f() { let s: HashSet<u32> = HashSet::new(); \
+                   for k in &s { use_(k); } }";
+        assert_eq!(
+            ids("dse/x.rs", src),
+            vec![("D001".to_string(), false)]
+        );
+    }
+
+    #[test]
+    fn d002_instant_now_flagged_outside_bench() {
+        let src = "fn f() { let t = Instant::now(); }";
+        assert_eq!(
+            ids("runtime/x.rs", src),
+            vec![("D002".to_string(), false)]
+        );
+        assert!(ids("util/bench.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d003_everywhere_even_in_tests() {
+        let src = "#[cfg(test)] mod tests { #[test] fn t() { let r \
+                   = thread_rng(); } }";
+        assert_eq!(
+            ids("util/x.rs", src),
+            vec![("D003".to_string(), false)]
+        );
+    }
+
+    #[test]
+    fn d004_rng_draw_in_tell_body() {
+        let src = "impl DseSession for S { fn ask(&mut self) -> \
+                   u32 { self.rng.next_u32() } fn tell(&mut self, \
+                   o: f64) { let x = self.rng.choose(&P); } }";
+        assert_eq!(
+            ids("dse/x.rs", src),
+            vec![("D004".to_string(), false)]
+        );
+    }
+
+    #[test]
+    fn d004_ignores_plain_impls() {
+        let src = "impl S { fn tell(&mut self, o: f64) { let x = \
+                   self.rng.choose(&P); } }";
+        assert!(ids("dse/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn p001_unwrap_in_library_flagged_main_exempt() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        assert_eq!(
+            ids("util/x.rs", src),
+            vec![("P001".to_string(), false)]
+        );
+        assert!(ids("main.rs", src).is_empty());
+        assert!(ids("dse/golden.rs", src).is_empty());
+    }
+
+    #[test]
+    fn p001_cfg_test_region_exempt() {
+        let src = "#[cfg(test)] mod tests { fn h(x: Option<u32>) \
+                   -> u32 { x.unwrap() } }";
+        assert!(ids("util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_not_test_region_is_not_exempt() {
+        let src = "#[cfg(not(test))] mod real { fn h(x: \
+                   Option<u32>) -> u32 { x.unwrap() } }";
+        assert_eq!(
+            ids("util/x.rs", src),
+            vec![("P001".to_string(), false)]
+        );
+    }
+
+    #[test]
+    fn f001_sum_over_hash_values() {
+        let src = "fn f() { let m: HashMap<u32, f64> = \
+                   HashMap::new(); let s: f64 = \
+                   m.values().sum::<f64>(); }";
+        let got = ids("eval/x.rs", src);
+        assert!(got.contains(&("F001".to_string(), false)));
+        assert!(got.contains(&("D001".to_string(), false)));
+    }
+
+    #[test]
+    fn waiver_on_line_above_applies() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // lumina: \
+                   allow(P001) init-checked upstream\n    \
+                   x.unwrap()\n}";
+        assert_eq!(
+            ids("util/x.rs", src),
+            vec![("P001".to_string(), true)]
+        );
+        let f = &scan_file("util/x.rs", src)[0];
+        assert_eq!(
+            f.waiver_reason.as_deref(),
+            Some("init-checked upstream")
+        );
+    }
+
+    #[test]
+    fn trailing_waiver_on_same_line_applies() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap() \
+                   // lumina: allow(P001) checked above\n}";
+        assert_eq!(
+            ids("util/x.rs", src),
+            vec![("P001".to_string(), true)]
+        );
+    }
+
+    #[test]
+    fn reasonless_waiver_leaves_finding_and_adds_w001() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // lumina: \
+                   allow(P001)\n    x.unwrap()\n}";
+        let got = ids("util/x.rs", src);
+        assert!(got.contains(&("P001".to_string(), false)));
+        assert!(got.contains(&("W001".to_string(), false)));
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_trip_rules() {
+        let src = "fn f() -> &'static str { /* x.unwrap() */ \
+                   \"thread_rng Instant::now\" }";
+        assert!(ids("util/x.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,141 @@
+//! Inline waiver syntax: `// lumina: allow(D002) <reason>`.
+//!
+//! A waiver suppresses findings of the named rule(s) on its own line
+//! or on the line directly below it (so it can sit above the
+//! offending statement or trail it). Several ids may be listed,
+//! comma-separated: `// lumina: allow(P001, D001) reason`.
+//!
+//! Enforcement is part of the syntax: a waiver with no reason, an
+//! unknown rule id, or a missing `)` does **not** apply and instead
+//! produces a `W001` finding. `W001` itself cannot be waived — the
+//! audit trail must stay un-silence-able.
+
+use crate::analysis::rules;
+
+/// A well-formed waiver: rule id, comment line, justification.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub rule: String,
+    pub line: u32,
+    pub reason: String,
+}
+
+/// Parse waivers out of captured line comments.
+///
+/// Returns the applicable waivers plus the `W001` findings as
+/// `(line, message)` pairs.
+pub fn parse(
+    comments: &[(u32, &str)],
+) -> (Vec<Waiver>, Vec<(u32, String)>) {
+    let mut waivers = Vec::new();
+    let mut w001 = Vec::new();
+    for &(line, text) in comments {
+        let Some(pos) = text.find("lumina:") else { continue };
+        let rest = text[pos + "lumina:".len()..].trim_start();
+        let Some(body) = rest.strip_prefix("allow(") else {
+            continue;
+        };
+        let Some(close) = body.find(')') else {
+            w001.push((
+                line,
+                "waiver is missing its closing `)`".to_string(),
+            ));
+            continue;
+        };
+        let ids: Vec<&str> = body[..close]
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .collect();
+        let reason = body[close + 1..].trim();
+        if ids.is_empty() {
+            w001.push((line, "waiver lists no rule id".to_string()));
+            continue;
+        }
+        for id in ids {
+            if id == "W001" {
+                w001.push((
+                    line,
+                    "waiver may not target W001".to_string(),
+                ));
+                continue;
+            }
+            if rules::by_id(id).is_none() {
+                w001.push((
+                    line,
+                    format!("waiver names unknown rule `{id}`"),
+                ));
+                continue;
+            }
+            if reason.is_empty() {
+                w001.push((
+                    line,
+                    format!("waiver for {id} gives no reason"),
+                ));
+                continue;
+            }
+            waivers.push(Waiver {
+                rule: id.to_string(),
+                line,
+                reason: reason.to_string(),
+            });
+        }
+    }
+    (waivers, w001)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn well_formed_waiver_parses() {
+        let (w, bad) =
+            parse(&[(7, "// lumina: allow(D002) bench timing")]);
+        assert_eq!(bad.len(), 0);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].rule, "D002");
+        assert_eq!(w[0].line, 7);
+        assert_eq!(w[0].reason, "bench timing");
+    }
+
+    #[test]
+    fn multiple_ids_share_one_reason() {
+        let (w, bad) =
+            parse(&[(3, "// lumina: allow(P001, D001) proven safe")]);
+        assert_eq!(bad.len(), 0);
+        let ids: Vec<&str> =
+            w.iter().map(|x| x.rule.as_str()).collect();
+        assert_eq!(ids, vec!["P001", "D001"]);
+    }
+
+    #[test]
+    fn reasonless_waiver_is_a_finding_and_does_not_apply() {
+        let (w, bad) = parse(&[(9, "// lumina: allow(P001)")]);
+        assert!(w.is_empty());
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].1.contains("no reason"));
+    }
+
+    #[test]
+    fn unknown_rule_and_w001_target_are_findings() {
+        let (w, bad) = parse(&[
+            (1, "// lumina: allow(D999) whatever"),
+            (2, "// lumina: allow(W001) silence the auditor"),
+            (3, "// lumina: allow() empty"),
+            (4, "// lumina: allow(D001 unterminated"),
+        ]);
+        assert!(w.is_empty());
+        assert_eq!(bad.len(), 4);
+    }
+
+    #[test]
+    fn ordinary_comments_are_ignored() {
+        let (w, bad) = parse(&[
+            (1, "// normal comment"),
+            (2, "// lumina: disallow(D001) not the marker"),
+        ]);
+        assert!(w.is_empty());
+        assert!(bad.is_empty());
+    }
+}

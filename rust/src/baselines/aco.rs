@@ -89,7 +89,7 @@ impl AntColony {
                 (1.0 / s.max(1e-9), d)
             })
             .collect();
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scored.sort_by(|a, b| b.0.total_cmp(&a.0));
 
         // Evaporate.
         for tr in pher.iter_mut() {

@@ -96,9 +96,7 @@ impl BayesOpt {
         let mut idx: Vec<usize> = (0..all.len()).collect();
         if all.len() > self.max_train {
             idx.sort_by(|&a, &b| {
-                scalar(&all[a].1)
-                    .partial_cmp(&scalar(&all[b].1))
-                    .unwrap()
+                scalar(&all[a].1).total_cmp(&scalar(&all[b].1))
             });
             let mut keep: Vec<usize> =
                 idx[..self.max_train / 2].to_vec();
@@ -140,9 +138,7 @@ impl BayesOpt {
         let incumbent = idx
             .iter()
             .min_by(|&&a, &&b| {
-                scalar(&all[a].1)
-                    .partial_cmp(&scalar(&all[b].1))
-                    .unwrap()
+                scalar(&all[a].1).total_cmp(&scalar(&all[b].1))
             })
             .map(|&i| all[i].0)
             .unwrap_or_else(DesignPoint::a100);

@@ -110,9 +110,7 @@ fn crowding(objs: &[Objectives]) -> Vec<f64> {
     let mut dist = vec![0.0f64; n];
     for k in 0..3 {
         let mut idx: Vec<usize> = (0..n).collect();
-        idx.sort_by(|&a, &b| {
-            objs[a][k].partial_cmp(&objs[b][k]).unwrap()
-        });
+        idx.sort_by(|&a, &b| objs[a][k].total_cmp(&objs[b][k]));
         let span =
             (objs[idx[n - 1]][k] - objs[idx[0]][k]).max(1e-12);
         dist[idx[0]] = f64::INFINITY;
@@ -184,6 +182,7 @@ impl DseSession for Genetic {
                             std::cmp::Reverse(ordered(crowd[b])),
                         ))
                 })
+                // lumina: allow(P001) max_by over the population, which is non-empty here
                 .unwrap();
             self.pop.swap_remove(worst);
         }

@@ -45,10 +45,12 @@ impl DseSession for GridSearch {
             let stride = (total / budget).max(1);
             self.cursor = Some((self.offset % total, stride));
         }
+        // lumina: allow(P001) cursor is set by the branch directly above
         let (idx, _) = self.cursor.expect("cursor initialized above");
         let d = ctx
             .space
             .decode_index(idx % total)
+            // lumina: allow(P001) index reduced modulo size() always decodes
             .expect("ring index reduced modulo size() decodes");
         vec![d]
     }

@@ -13,6 +13,7 @@ pub fn uniform(space: &DesignSpace, rng: &mut Pcg32) -> DesignPoint {
     let idx = rng.next_u64() % space.size();
     space
         .decode_index(idx)
+        // lumina: allow(P001) index reduced modulo size() always decodes
         .expect("index reduced modulo size() is always decodable")
 }
 

@@ -86,6 +86,7 @@ impl SharedCache {
         let key = (fp, *d);
         self.shard(&key)
             .read()
+            // lumina: allow(P001) poison propagates a panic from a peer thread
             .expect("cache shard poisoned")
             .get(&key)
             .copied()
@@ -101,6 +102,7 @@ impl SharedCache {
         let key = (fp, *d);
         self.shard(&key)
             .write()
+            // lumina: allow(P001) poison propagates a panic from a peer thread
             .expect("cache shard poisoned")
             .insert(key, m);
     }
@@ -110,6 +112,7 @@ impl SharedCache {
         let key = (fp, *d);
         self.shard(&key)
             .write()
+            // lumina: allow(P001) poison propagates a panic from a peer thread
             .expect("cache shard poisoned")
             .entry(key)
             .or_insert(m);
@@ -137,6 +140,7 @@ impl SharedCache {
         self.inner
             .shards
             .iter()
+            // lumina: allow(P001) poison propagates a panic from a peer thread
             .map(|s| s.read().expect("cache shard poisoned").len())
             .sum()
     }
@@ -148,6 +152,7 @@ impl SharedCache {
     /// Drop all memoized entries (counters are kept).
     pub fn clear(&self) {
         for s in &self.inner.shards {
+            // lumina: allow(P001) poison propagates a panic from a peer thread
             s.write().expect("cache shard poisoned").clear();
         }
     }
@@ -355,6 +360,7 @@ impl<E: EvalOne> EvalOne for CachedEvaluator<E> {
             self.inner.eval_chunk(fresh, &mut fresh_ms, scratch);
             Ok(fresh_ms)
         })
+        // lumina: allow(P001) the closure is Ok-returning; batch_via cannot fail
         .expect("infallible inner chunk");
         out.copy_from_slice(&ms);
     }

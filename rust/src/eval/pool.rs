@@ -66,6 +66,7 @@ impl Latch {
     /// One chunk finished (evaluated or panicked).
     fn complete_one(&self) {
         let mut left =
+            // lumina: allow(P001) poison propagates a panic from a peer thread
             self.remaining.lock().expect("latch lock poisoned");
         *left -= 1;
         if *left == 0 {
@@ -76,8 +77,10 @@ impl Latch {
     /// Block until every chunk completed.
     fn wait(&self) {
         let mut left =
+            // lumina: allow(P001) poison propagates a panic from a peer thread
             self.remaining.lock().expect("latch lock poisoned");
         while *left > 0 {
+            // lumina: allow(P001) poison propagates a panic from a peer thread
             left = self.done.wait(left).expect("latch lock poisoned");
         }
     }
@@ -183,6 +186,7 @@ impl WorkerPool {
                 std::thread::Builder::new()
                     .name("lumina-eval".into())
                     .spawn(move || worker_loop(&shared))
+                    // lumina: allow(P001) spawn failure at pool init is unrecoverable
                     .expect("spawn pool worker")
             })
             .collect();
@@ -235,6 +239,7 @@ impl WorkerPool {
         let ev_ptr = (&ev_ref as *const &E).cast::<()>();
         {
             let mut state =
+                // lumina: allow(P001) poison propagates a panic from a peer thread
                 self.shared.state.lock().expect("pool lock poisoned");
             for (src, dst) in
                 designs.chunks(chunk).zip(out.chunks_mut(chunk))
@@ -267,6 +272,7 @@ impl WorkerPool {
     /// Pop one queued task belonging to `latch`, if any.
     fn steal_own(&self, latch: &Arc<Latch>) -> Option<Task> {
         let mut state =
+            // lumina: allow(P001) poison propagates a panic from a peer thread
             self.shared.state.lock().expect("pool lock poisoned");
         let pos = state
             .tasks
@@ -280,6 +286,7 @@ impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
             let mut state =
+                // lumina: allow(P001) poison propagates a panic from a peer thread
                 self.shared.state.lock().expect("pool lock poisoned");
             state.shutdown = true;
         }
@@ -297,6 +304,7 @@ fn worker_loop(shared: &Shared) {
     loop {
         let task = {
             let mut state =
+                // lumina: allow(P001) poison propagates a panic from a peer thread
                 shared.state.lock().expect("pool lock poisoned");
             loop {
                 if let Some(t) = state.tasks.pop_front() {
@@ -310,6 +318,7 @@ fn worker_loop(shared: &Shared) {
                 state = shared
                     .available
                     .wait(state)
+                    // lumina: allow(P001) poison propagates a panic from a peer thread
                     .expect("pool lock poisoned");
             }
         };

@@ -58,6 +58,7 @@ impl EvalScratch {
         self.buf[..need].fill(0.0);
         let mut chunks = self.buf[..need].chunks_exact_mut(n);
         std::array::from_fn(|_| {
+            // lumina: allow(P001) buf was sized to exactly K*n above
             chunks.next().expect("exact carve of K lanes")
         })
     }

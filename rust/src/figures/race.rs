@@ -417,6 +417,7 @@ pub fn aggregate(
                     eff_sum: 0.0,
                     superior_sum: 0,
                 });
+                // lumina: allow(P001) last_mut on the vec pushed one line up
                 groups.last_mut().expect("just pushed")
             }
         };

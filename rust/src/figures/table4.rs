@@ -69,12 +69,14 @@ pub fn pick_top2(
     };
     let design_a = superior
         .iter()
-        .max_by(|a, b| eff(&a.1).partial_cmp(&eff(&b.1)).unwrap())
+        .max_by(|a, b| eff(&a.1).total_cmp(&eff(&b.1)))
+        // lumina: allow(P001) superior is non-empty (early return above)
         .unwrap()
         .0;
     let design_b = superior
         .iter()
-        .min_by(|a, b| a.1[0].partial_cmp(&b.1[0]).unwrap())
+        .min_by(|a, b| a.1[0].total_cmp(&b.1[0]))
+        // lumina: allow(P001) superior is non-empty (early return above)
         .unwrap()
         .0;
     if design_a == design_b {

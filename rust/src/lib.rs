@@ -19,6 +19,7 @@
 //! See `DESIGN.md` for the system inventory and the experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod analysis;
 pub mod arch;
 pub mod baselines;
 pub mod bench;

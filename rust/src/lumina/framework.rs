@@ -126,8 +126,9 @@ pub struct Lumina {
     best_score: f64,
     stale: usize,
     step: usize,
-    /// Axis drawn by a stagnation restart, nudged at the next ask.
-    restart_param: Option<Param>,
+    /// Set by a stagnation restart in `tell`; the next ask draws the
+    /// nudge axis (all RNG lives in ask — the D004/replay invariant).
+    restart_pending: bool,
     shrink: Option<ShrinkState>,
     fill: Option<FillState>,
 }
@@ -149,7 +150,7 @@ impl Lumina {
             best_score: f64::INFINITY,
             stale: 0,
             step: 0,
-            restart_param: None,
+            restart_pending: false,
             shrink: None,
             fill: None,
         }
@@ -201,9 +202,17 @@ impl Lumina {
     /// ---- Refine/Expansion ask: phase transitions, then one directive
     /// -> materialized proposal.
     fn refine_ask(&mut self, ctx: &AskCtx) -> Vec<DesignPoint> {
-        // A stagnation restart drew an axis last tell: nudge the (new)
-        // current point there and evaluate it, unless already visited.
-        if let Some(p) = self.restart_param.take() {
+        // A stagnation restart was flagged last tell: draw the nudge
+        // axis now (the draw belongs in ask, not tell — rule D004; the
+        // one-shot stream is keyed on `step`, which tell already
+        // advanced, so the drawn axis is identical to the pre-lint
+        // draw-at-tell behavior) and evaluate the nudged point unless
+        // already visited.
+        if std::mem::take(&mut self.restart_pending) {
+            let mut rng =
+                Pcg32::new(self.config.seed ^ self.step as u64);
+            let p = *rng.choose(&Param::ALL);
+            // lumina: allow(P001) phase invariant: Refine implies the reference tell ran
             let cur = self.current.expect("current set by reference").0;
             let nudged = ctx.space.step(&cur, p, 1);
             if !self.tm.contains(&nudged) {
@@ -231,11 +240,15 @@ impl Lumina {
 
         let cfg = self.config.clone();
         let (current, current_m) =
+            // lumina: allow(P001) phase invariant: Refine implies the reference tell ran
             self.current.expect("current set by reference");
         let reference_m =
+            // lumina: allow(P001) phase invariant: Refine implies the reference tell ran
             self.reference.expect("reference evaluated").1;
         let directive = {
+            // lumina: allow(P001) phase invariant: AhkAcquire built the AHK before Refine
             let ahk = self.ahk.as_ref().expect("ahk acquired");
+            // lumina: allow(P001) phase invariant: the Reference ask built the model
             let model = self.model.as_mut().expect("model built");
             let mut se =
                 StrategyEngine::new(model as &mut dyn LanguageModel);
@@ -253,6 +266,7 @@ impl Lumina {
                 // Power envelope relative to the reference design's
                 // static proxy, doubled during expansion like area.
                 let reference_design =
+                    // lumina: allow(P001) phase invariant: Refine implies the reference tell ran
                     self.reference.expect("reference evaluated").0;
                 let scale = if self.expansion { 2.0 } else { 1.0 };
                 se.power_ceiling_w = scale
@@ -267,6 +281,7 @@ impl Lumina {
         let proposal = self
             .ee
             .as_mut()
+            // lumina: allow(P001) phase invariant: the Reference ask built the engine
             .expect("ee built")
             .materialize(ctx.space, &current, &directive, &self.tm);
         self.pending = Pending::Proposal {
@@ -278,6 +293,7 @@ impl Lumina {
     }
 
     fn enter_shrink(&mut self) {
+        // lumina: allow(P001) phase invariant: shrink starts after the reference tell
         let reference = self.reference.expect("reference evaluated");
         let anchor = self
             .tm
@@ -302,8 +318,10 @@ impl Lumina {
             Fill,
         }
         let next = {
+            // lumina: allow(P001) phase invariant: AhkAcquire precedes Shrink
             let ahk = self.ahk.as_ref().expect("ahk acquired");
             let tm = &self.tm;
+            // lumina: allow(P001) phase invariant: enter_shrink set the state
             let st = self.shrink.as_mut().expect("shrink entered");
             // Least perf-critical downward step from the current point.
             let mut cands: Vec<Param> = Param::ALL
@@ -318,7 +336,7 @@ impl Lumina {
                     ahk.perf_influence(p, 0).abs()
                         + ahk.perf_influence(p, 1).abs()
                 };
-                crit(a).partial_cmp(&crit(b)).unwrap()
+                crit(a).total_cmp(&crit(b))
             });
             match cands.first() {
                 None => Next::Fill,
@@ -377,9 +395,11 @@ impl Lumina {
 
     fn fill_ask(&mut self, ctx: &AskCtx) -> Vec<DesignPoint> {
         let (reference_design, reference_m) =
+            // lumina: allow(P001) phase invariant: Fill starts after the reference tell
             self.reference.expect("reference evaluated");
         let d = {
             let tm = &self.tm;
+            // lumina: allow(P001) phase invariant: enter_fill set the state
             let st = self.fill.as_mut().expect("fill entered");
             let anchor = tm
                 .best_weighted(
@@ -441,6 +461,7 @@ impl DseSession for Lumina {
                 // samples). The cheap-prior AHK is built here either
                 // way; a sample-funded sweep refines it in `tell`.
                 let reference_design =
+                    // lumina: allow(P001) phase invariant: AhkAcquire follows the reference tell
                     self.reference.expect("reference evaluated").0;
                 let qual = InfluenceMap::from_kernel();
                 self.ahk = Some(Ahk::acquire_cheap(
@@ -491,6 +512,7 @@ impl DseSession for Lumina {
             Pending::Sweep { slots } => {
                 self.ahk
                     .as_mut()
+                    // lumina: allow(P001) the Sweep ask built the cheap prior
                     .expect("cheap prior built in ask")
                     .absorb_sweep(&slots, results);
                 // The sensitivity sweep's samples belong in the TM too.
@@ -507,8 +529,10 @@ impl DseSession for Lumina {
                 self.tm.record(proposal, m, self.step);
                 self.step += 1;
                 let (_, current_m) =
+                    // lumina: allow(P001) phase invariant: a Proposal tell follows the reference tell
                     self.current.expect("current set by reference");
                 let reference =
+                    // lumina: allow(P001) phase invariant: a Proposal tell follows the reference tell
                     self.reference.expect("reference evaluated").1;
 
                 // ---- Refinement: per-parameter observed
@@ -519,6 +543,7 @@ impl DseSession for Lumina {
                     0 => obs(m.ttft_ms, current_m.ttft_ms),
                     _ => obs(m.tpot_ms, current_m.tpot_ms),
                 };
+                // lumina: allow(P001) phase invariant: AhkAcquire precedes proposals
                 self.ahk.as_mut().expect("ahk acquired").refine(
                     boost,
                     metric,
@@ -560,11 +585,7 @@ impl DseSession for Lumina {
                             self.current =
                                 Some((best.design, best.metrics));
                         }
-                        let mut rng = Pcg32::new(
-                            self.config.seed ^ self.step as u64,
-                        );
-                        self.restart_param =
-                            Some(*rng.choose(&Param::ALL));
+                        self.restart_pending = true;
                         self.stale = 0;
                     }
                 }
@@ -580,8 +601,10 @@ impl DseSession for Lumina {
                 self.tm.record(d, m, self.step);
                 self.step += 1;
                 let reference =
+                    // lumina: allow(P001) phase invariant: Shrink follows the reference tell
                     self.reference.expect("reference evaluated").1;
                 let st =
+                    // lumina: allow(P001) phase invariant: enter_shrink set the state
                     self.shrink.as_mut().expect("shrink entered");
                 let in_box = m.ttft_ms < 2.0 * reference.ttft_ms
                     && m.tpot_ms < 2.0 * reference.tpot_ms;
@@ -602,6 +625,7 @@ impl DseSession for Lumina {
                 self.step += 1;
                 self.shrink
                     .as_mut()
+                    // lumina: allow(P001) phase invariant: enter_shrink set the state
                     .expect("shrink entered")
                     .current = (d, m);
             }

@@ -136,7 +136,7 @@ impl TrajectoryMemory {
                     .map(|i| weights[i] * o[i] / baseline[i])
                     .sum::<f64>()
             };
-            score(a).partial_cmp(&score(b)).unwrap()
+            score(a).total_cmp(&score(b))
         })
     }
 }

@@ -169,8 +169,7 @@ impl<'m> StrategyEngine<'m> {
                     .filter(|p| !banned.contains(&(*p, 1)))
                     .min_by(|a, b| {
                         ahk.perf_influence(*a, metric)
-                            .partial_cmp(&ahk.perf_influence(*b, metric))
-                            .unwrap()
+                            .total_cmp(&ahk.perf_influence(*b, metric))
                     })
             })
             .unwrap_or(Param::MemChannels);
@@ -218,8 +217,7 @@ impl<'m> StrategyEngine<'m> {
             .collect();
         rest.sort_by(|a, b| {
             ahk.perf_influence(*a, metric)
-                .partial_cmp(&ahk.perf_influence(*b, metric))
-                .unwrap()
+                .total_cmp(&ahk.perf_influence(*b, metric))
         });
         boost_order.extend(rest);
 
@@ -311,7 +309,7 @@ fn least_critical(
                 ahk.perf_influence(p, metric).abs()
                     / ahk.area_influence(p).max(1e-6)
             };
-            crit(a).partial_cmp(&crit(b)).unwrap()
+            crit(a).total_cmp(&crit(b))
         })
 }
 

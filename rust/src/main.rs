@@ -9,6 +9,7 @@
 //!   report      Table-4 style design report
 //!   workloads   list the registered workload scenarios
 //!   bench       check/update/show the perf-bench regression ratchet
+//!   lint        determinism static-analysis pass over the sources
 //!
 //! All exploration traffic flows through the AOT roofline artifact via
 //! PJRT when `artifacts/` exists (`make artifacts`); `--evaluator`
@@ -16,6 +17,7 @@
 //! subcommand accepts `--workload <name>` (see `lumina workloads`);
 //! `explore --suite` optimizes the weighted multi-scenario composite.
 
+use lumina::analysis;
 use lumina::bench::{ratchet, resolve_existing, Baseline};
 use lumina::bench_dse::run_benchmark_mode;
 use lumina::design::{DesignPoint, DesignSpace, Param};
@@ -35,6 +37,7 @@ use lumina::llm::ModelProfile;
 use lumina::lumina::{quale::InfluenceMap, quane::Ahk, Lumina, LuminaConfig};
 use lumina::pareto::{ObjectiveMode, Objectives};
 use lumina::sim::CompassSim;
+use lumina::util::bench::Stopwatch;
 use lumina::util::cli::Args;
 use lumina::util::json::Json;
 use lumina::workload::{
@@ -66,6 +69,11 @@ USAGE: lumina <command> [--options]
         [--snapshot PATH] [--baseline PATH] [--issue N]
                              check: non-zero exit on any regressed row
                              update: ratchet the baseline forward
+  lint [--root PATH] [--format text|json] [--out PATH]
+       [--deny-warnings]     determinism lint over the sources; writes
+                             findings JSON (default
+                             out/lint_findings.json); --deny-warnings
+                             fails on any unwaivered finding (CI mode)
 
 Objective modes: latency-area (default) optimizes the 3-D (TTFT, TPOT,
 area) vector; ppa adds energy/token as a 4th minimized objective, arms
@@ -127,6 +135,7 @@ fn main() -> lumina::Result<()> {
             Ok(())
         }
         "bench" => cmd_bench(&args),
+        "lint" => cmd_lint(&args),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -251,7 +260,7 @@ fn run_explore(
         ..Default::default()
     });
 
-    let t0 = std::time::Instant::now();
+    let t0 = Stopwatch::start();
     let mut be = if let Some(st) = resume_state {
         // Replay the session's ask/tell bookkeeping against the
         // recorded trajectory and continue with the reconstructed
@@ -313,7 +322,7 @@ fn run_explore(
          [{objectives}] PHV={:.4}  eff={:.4}  superior={}",
         traj.len(),
         be.spent(),
-        t0.elapsed().as_secs_f64(),
+        t0.elapsed_s(),
         r.phv,
         r.sample_efficiency,
         r.superior
@@ -440,7 +449,7 @@ fn cmd_race(args: &Args) -> lumina::Result<()> {
              ask/tell observer; add --fused to see it"
         );
     }
-    let t0 = std::time::Instant::now();
+    let t0 = Stopwatch::start();
     let results = if fused {
         if args.flag("verbose") {
             let mut obs = ProgressObserver::new();
@@ -457,7 +466,7 @@ fn cmd_race(args: &Args) -> lumina::Result<()> {
         cfg.trials,
         cfg.samples,
         cfg.objectives,
-        t0.elapsed().as_secs_f64()
+        t0.elapsed_s()
     );
     println!(
         "{:<16} {:>10} {:>10} {:>12} {:>9}",
@@ -600,6 +609,76 @@ fn cmd_bench(args: &Args) -> lumina::Result<()> {
             "unknown bench verb {other:?}; use check, update or show"
         )),
     }
+}
+
+/// `lumina lint` — the determinism static-analysis pass over the
+/// crate's own sources (see `src/analysis/`). Always writes the
+/// machine-readable findings JSON (CI uploads it as an artifact);
+/// `--deny-warnings` is the CI gate: any unwaivered finding fails.
+fn cmd_lint(args: &Args) -> lumina::Result<()> {
+    let root = args
+        .opt("root")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_lint_root);
+    if !root.is_dir() {
+        lumina::bail!(
+            "lint root {} is not a directory (pass --root <dir>)",
+            root.display()
+        );
+    }
+    let report = analysis::lint_tree(&root)?;
+
+    let out_path = args
+        .opt("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            std::path::PathBuf::from("out/lint_findings.json")
+        });
+    if let Some(dir) = out_path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| {
+                lumina::err!("creating {}: {e}", dir.display())
+            })?;
+        }
+    }
+    let json = report.to_json().pretty() + "\n";
+    std::fs::write(&out_path, &json).map_err(|e| {
+        lumina::err!("writing {}: {e}", out_path.display())
+    })?;
+
+    match args.str_or("format", "text").as_str() {
+        "json" => print!("{json}"),
+        "text" => {
+            print!("{}", report.render_text());
+            println!("findings JSON: {}", out_path.display());
+        }
+        other => lumina::bail!(
+            "unknown lint format {other:?}; use text or json"
+        ),
+    }
+
+    if report.failed(args.flag("deny-warnings")) {
+        let c = report.counts();
+        lumina::bail!(
+            "lint: {} unwaivered findings ({} errors, {} warnings); \
+             fix them or waive with `// lumina: allow(RULE) reason`",
+            c.errors + c.warnings,
+            c.errors,
+            c.warnings
+        );
+    }
+    Ok(())
+}
+
+/// The lint root when `--root` is absent: `src` when invoked from
+/// `rust/`, `rust/src` from the repo root (mirrors how the bench
+/// ratchet resolves its snapshot paths).
+fn default_lint_root() -> std::path::PathBuf {
+    let nested = std::path::PathBuf::from("rust/src");
+    if nested.is_dir() {
+        return nested;
+    }
+    std::path::PathBuf::from("src")
 }
 
 fn cmd_report(args: &Args) -> lumina::Result<()> {

@@ -117,15 +117,20 @@ fn pareto_front3<const D: usize>(points: &[Objectives<D>]) -> Vec<usize> {
     }
     let mut order: Vec<usize> = (0..n).collect();
     order.sort_by(|&a, &b| {
+        // Elementwise total_cmp chain: identical to the array's
+        // lexicographic PartialOrd on NaN-free data, total on all.
         points[a]
-            .partial_cmp(&points[b])
-            .expect("objectives must not be NaN")
+            .iter()
+            .zip(points[b].iter())
+            .map(|(x, y)| x.total_cmp(y))
+            .find(|o| o.is_ne())
+            .unwrap_or(std::cmp::Ordering::Equal)
             .then(a.cmp(&b))
     });
 
     // Compress y coordinates to Fenwick ranks.
     let mut ys: Vec<f64> = points.iter().map(|p| p[1]).collect();
-    ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ys.sort_by(f64::total_cmp);
     ys.dedup();
 
     // Fenwick tree over y ranks holding prefix-minimum z (insert-only).
@@ -215,7 +220,7 @@ pub fn hypervolume<const D: usize>(
 fn hv3<const D: usize>(pts: &[Objectives<D>], r: &Objectives<D>) -> f64 {
     let mut zs: Vec<f64> = pts.iter().map(|p| p[2]).collect();
     zs.push(r[2]);
-    zs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    zs.sort_by(f64::total_cmp);
     zs.dedup();
 
     let mut vol = 0.0;
@@ -250,7 +255,7 @@ fn hv_slices(pts: &[Vec<f64>], r: &[f64]) -> f64 {
     }
     let mut zs: Vec<f64> = pts.iter().map(|p| p[d - 1]).collect();
     zs.push(r[d - 1]);
-    zs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    zs.sort_by(f64::total_cmp);
     zs.dedup();
 
     let mut vol = 0.0;
@@ -272,7 +277,7 @@ fn area2d(pts: &[[f64; 2]], rx: f64, ry: f64) -> f64 {
     }
     let mut sorted: Vec<[f64; 2]> = pts.to_vec();
     // Sort by x ascending; sweep keeping the lowest y seen so far.
-    sorted.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+    sorted.sort_by(|a, b| a[0].total_cmp(&b[0]));
     let mut area = 0.0;
     let mut best_y = ry;
     let mut prev_x = sorted[0][0];

@@ -67,7 +67,7 @@ impl CriticalPath {
     /// The single operator contributing the most time to the phase.
     pub fn dominant_op(&self, phase: Phase) -> Option<&OpRecord> {
         self.phase_ops(phase)
-            .max_by(|a, b| a.wall_s.partial_cmp(&b.wall_s).unwrap())
+            .max_by(|a, b| a.wall_s.total_cmp(&b.wall_s))
     }
 
     /// The dominant stall component of a phase.

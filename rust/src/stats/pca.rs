@@ -72,9 +72,7 @@ impl Pca {
         let (eigvals, eigvecs) = jacobi_eigen(cov);
         // Sort by descending eigenvalue.
         let mut order: Vec<usize> = (0..d).collect();
-        order.sort_by(|&a, &b| {
-            eigvals[b].partial_cmp(&eigvals[a]).unwrap()
-        });
+        order.sort_by(|&a, &b| eigvals[b].total_cmp(&eigvals[a]));
 
         let components: Vec<Vec<f64>> = order[..k]
             .iter()

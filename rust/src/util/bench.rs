@@ -6,6 +6,27 @@
 
 use std::time::Instant;
 
+/// The crate's one sanctioned wall-clock handle. All elapsed-time
+/// measurement outside `benches/` goes through this so the D002 lint
+/// can keep `std::time` confined to this module — replayed runs and
+/// golden tests never see host time except through here.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Stopwatch {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    /// Seconds elapsed since [`Stopwatch::start`].
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -45,7 +66,7 @@ pub fn bench(
 /// Summarize raw per-iteration samples.
 pub fn summarize(name: &str, mut samples: Vec<f64>) -> BenchResult {
     assert!(!samples.is_empty());
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(f64::total_cmp);
     let n = samples.len();
     let mean = samples.iter().sum::<f64>() / n as f64;
     let median = samples[n / 2];
@@ -99,6 +120,16 @@ mod tests {
         assert_eq!(r.iters, 16);
         assert!(r.min_s <= r.median_s && r.median_s <= r.p95_s);
         assert!(r.mean_s > 0.0);
+    }
+
+    #[test]
+    fn stopwatch_measures_nonnegative_time() {
+        let sw = Stopwatch::start();
+        std::hint::black_box(1 + 1);
+        let a = sw.elapsed_s();
+        let b = sw.elapsed_s();
+        assert!(a >= 0.0);
+        assert!(b >= a);
     }
 
     #[test]

@@ -23,10 +23,8 @@ impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
         let mut it = raw.into_iter().peekable();
         let mut args = Args::default();
-        if let Some(first) = it.peek() {
-            if !first.starts_with('-') {
-                args.command = it.next().unwrap();
-            }
+        if let Some(first) = it.next_if(|f| !f.starts_with('-')) {
+            args.command = first;
         }
         while let Some(tok) = it.next() {
             if let Some(rest) = tok.strip_prefix("--") {
@@ -38,12 +36,11 @@ impl Args {
                 } else {
                     // `--key value` if the next token is not an option,
                     // otherwise a boolean flag.
-                    match it.peek() {
-                        Some(v) if !v.starts_with("--") => {
-                            let v = it.next().unwrap();
+                    match it.next_if(|v| !v.starts_with("--")) {
+                        Some(v) => {
                             args.options.insert(rest.to_string(), v);
                         }
-                        _ => args.flags.push(rest.to_string()),
+                        None => args.flags.push(rest.to_string()),
                     }
                 }
             } else {

@@ -1,0 +1,25 @@
+//! D004 clean: draws in `ask` are fine; a `tell` on a plain impl (not
+//! a `DseSession`) is out of the rule's scope.
+
+use crate::stats::rng::Pcg32;
+
+pub struct Plain {
+    rng: Pcg32,
+    last: f64,
+}
+
+impl Plain {
+    fn tell(&mut self, obs: f64) {
+        self.last = obs + self.rng.f64();
+    }
+}
+
+impl DseSession for Plain {
+    fn ask(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    fn tell(&mut self, obs: f64) {
+        self.last = obs;
+    }
+}

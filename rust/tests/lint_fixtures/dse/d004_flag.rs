@@ -1,0 +1,21 @@
+//! D004 flagged: an RNG draw inside `DseSession::tell` — the replay
+//! invariant requires all draws to happen in `ask`.
+
+use crate::stats::rng::Pcg32;
+
+pub struct Walker {
+    rng: Pcg32,
+    last: f64,
+}
+
+impl DseSession for Walker {
+    fn ask(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    fn tell(&mut self, obs: f64) {
+        if obs > self.last {
+            self.last = obs + self.rng.f64();
+        }
+    }
+}

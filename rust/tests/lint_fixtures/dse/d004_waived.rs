@@ -1,0 +1,16 @@
+//! D004 waived: a tell-side draw behind a reasoned waiver.
+
+use crate::stats::rng::Pcg32;
+
+pub struct Nudger {
+    rng: Pcg32,
+    axis: u32,
+}
+
+impl DseSession for Nudger {
+    fn tell(&mut self, obs: f64) {
+        // lumina: allow(D004) one-shot nudge; replayed bit-exactly from the seed
+        self.axis = self.rng.next_u32();
+        let _ = obs;
+    }
+}

@@ -1,0 +1,12 @@
+//! D001 clean: keyed access into a hash map never observes bucket
+//! order, so none of it is flagged.
+
+use std::collections::HashMap;
+
+pub fn lookup(k: u32) -> Option<u32> {
+    let mut m: HashMap<u32, u32> = HashMap::new();
+    m.insert(k, k * 2);
+    let n = m.len();
+    let _ = n;
+    m.get(&k).copied()
+}

@@ -1,0 +1,16 @@
+//! D001 flagged: hash-container iteration inside a det module.
+
+use std::collections::HashMap;
+
+pub fn keys_in_hash_order() -> Vec<u32> {
+    let mut m: HashMap<u32, u32> = HashMap::new();
+    m.insert(1, 2);
+    let mut out = Vec::new();
+    for k in &m {
+        out.push(*k.0);
+    }
+    for v in m.values() {
+        out.push(*v);
+    }
+    out
+}

@@ -1,0 +1,7 @@
+//! F001 clean: the same reduction over an ordered container.
+
+use std::collections::BTreeMap;
+
+pub fn total(m: BTreeMap<u32, f64>) -> f64 {
+    m.values().sum::<f64>()
+}

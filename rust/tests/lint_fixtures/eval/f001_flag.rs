@@ -1,0 +1,8 @@
+//! F001 flagged: float sum over unordered hash values — the
+//! accumulation order, and so the rounding, depends on bucket layout.
+
+use std::collections::HashMap;
+
+pub fn total(m: HashMap<u32, f64>) -> f64 {
+    m.values().sum::<f64>()
+}

@@ -1,0 +1,9 @@
+//! F001 waived: a multi-id waiver covering the iteration finding and
+//! the reduction finding with one shared reason.
+
+use std::collections::HashMap;
+
+pub fn mass(m: HashMap<u32, f64>) -> f64 {
+    // lumina: allow(D001, F001) values are exact powers of two; the sum is order-exact
+    m.values().sum::<f64>()
+}

@@ -1,0 +1,6 @@
+//! P001 clean: `main.rs` is exempt — a binary's top level may panic.
+
+fn main() {
+    let v: Option<u32> = parse_first_arg();
+    println!("{}", v.unwrap());
+}

@@ -1,0 +1,9 @@
+//! D002 flagged: wall-clock reads outside util/bench.rs — one per
+//! entry point (`Instant::now`, `SystemTime`, `UNIX_EPOCH`).
+
+pub fn stamp() -> u64 {
+    let t0 = Instant::now();
+    let wall = SystemTime::now();
+    let _ = (t0, wall, UNIX_EPOCH);
+    0
+}

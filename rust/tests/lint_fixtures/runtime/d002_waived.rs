@@ -1,0 +1,7 @@
+//! D002 waived: a debug-only timestamp with a reasoned waiver.
+
+pub fn debug_stamp() -> String {
+    // lumina: allow(D002) debug-only stamp; never feeds a result
+    let t = SystemTime::now();
+    format!("{t:?}")
+}

@@ -1,0 +1,7 @@
+//! D002 clean: util/bench.rs is the one sanctioned wall-clock site.
+
+use std::time::Instant;
+
+pub fn start() -> Instant {
+    Instant::now()
+}

@@ -1,0 +1,8 @@
+//! D003 clean: the sanctioned seeded generator.
+
+use crate::stats::rng::Pcg32;
+
+pub fn draw(seed: u64) -> u64 {
+    let mut r = Pcg32::new(seed);
+    r.next_u64()
+}

@@ -1,0 +1,15 @@
+//! D003 flagged: entropy RNG, including inside test regions — seeded
+//! replay matters for tests as much as for library code.
+
+pub fn seed() -> u64 {
+    let mut r = thread_rng();
+    r.next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn entropy_is_flagged_even_here() {
+        let _ = OsRng;
+    }
+}

@@ -1,0 +1,7 @@
+//! P001 flagged: panicking extractors in library code.
+
+pub fn get(xs: &[u32], i: usize) -> u32 {
+    let head = xs.first().expect("non-empty");
+    let _ = head;
+    xs.get(i).copied().unwrap()
+}

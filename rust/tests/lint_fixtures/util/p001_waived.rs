@@ -1,0 +1,6 @@
+//! P001 waived: a proven-infallible expect with its proof inline.
+
+pub fn pick(xs: &[u32]) -> u32 {
+    // lumina: allow(P001) caller guarantees xs is non-empty
+    *xs.first().expect("non-empty")
+}

@@ -1,0 +1,5 @@
+//! W001 clean: a well-formed, reasoned waiver produces no finding —
+//! even when there is nothing on the next line for it to suppress.
+
+// lumina: allow(D002) documentation example of the waiver syntax
+pub fn ok() {}

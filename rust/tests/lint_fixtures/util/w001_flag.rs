@@ -1,0 +1,12 @@
+//! W001 flagged: every malformed-waiver variant. A reasonless waiver
+//! does not apply, so the P001 below it stays unwaivered too.
+
+pub fn f(x: Option<u32>) -> u32 {
+    // lumina: allow(P001)
+    x.unwrap()
+}
+
+// lumina: allow(D999) imaginary rule
+// lumina: allow(W001) silence the auditor
+// lumina: allow(D001 missing close
+pub fn g() {}
