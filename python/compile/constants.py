@@ -1,8 +1,10 @@
 """Shared performance/area model constants.
 
 MIRRORED in rust/src/arch/constants.rs — keep the two in lockstep. The Rust
-integration test `artifact_matches_rust_mirror` cross-checks the lowered
-artifact against the Rust mirror on random designs, which catches drift.
+integration test `artifact_matches_rust_mirror_on_random_designs`
+(tests/artifact_vs_mirror.rs) cross-checks the lowered artifact against the
+Rust mirror on random designs; `lumina lint --mirror` proves the constants
+equal statically (pair `arch-constants`).
 
 Units: seconds, bytes, FLOPs, mm^2. Frequencies in Hz, bandwidths in B/s.
 All math is done in float32 on both sides.
@@ -58,7 +60,8 @@ AREA_LINK_PHY = 1.5         # per interconnect link
 AREA_UNCORE = 60.0          # command processors, PCIe, misc uncore
 
 # ------------------------------------------------------ design encoding
-# Design vector layout (f32[8]) — order shared with rust/src/design/point.rs
+# Design vector layout (f32[8]) — MIRRORED in rust/src/design/point.rs
+# (same order; pair `design-params` checks N_PARAMS statically)
 IDX_LINKS = 0
 IDX_CORES = 1
 IDX_SUBLANES = 2

@@ -1,0 +1,808 @@
+//! Constant/registry extractor for the mirror-drift analyzer.
+//!
+//! Parses both sides of a declared mirror pair into typed symbol
+//! tables: Rust module-level `const NAME: T = <value>;` items
+//! (including struct-literal registries like
+//! `const SCENARIOS: [Scenario; N]`) and Python module-level
+//! `NAME = <value>` assignments, `SCENARIOS = {...}` dicts, and
+//! dataclass field defaults. The extractor is total: anything it
+//! cannot parse becomes [`Value::Opaque`], which the differ treats
+//! as presence-only (never a value-drift finding).
+//!
+//! Numeric literals arrive from the lexers split at `.` and sign
+//! chars (`0.45e-12` lexes as `0`, `.`, `45e`, `-`, `12`);
+//! [`join_number`] re-joins them and keeps the source spelling so
+//! findings can show the literal exactly as written on each side.
+
+use crate::analysis::lexer::{self, Tok, TokKind};
+use crate::analysis::pylex;
+
+/// A parsed right-hand side. `Num` keeps both the parsed value (for
+/// comparison) and the source text (for display, exactly as
+/// written). Everything unrecognized is `Opaque`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Num {
+        v: f64,
+        text: String,
+        /// 1-based line of the literal (finding anchor).
+        line: u32,
+    },
+    Str {
+        s: String,
+        /// 1-based line of the literal (finding anchor).
+        line: u32,
+    },
+    NoneLit,
+    /// Bare (possibly dotted/pathed) identifier reference.
+    Ref(String),
+    /// Python call: `Name(arg, kw=value, ...)`.
+    Call {
+        name: String,
+        args: Vec<Value>,
+        kwargs: Vec<(String, Value)>,
+    },
+    /// Rust struct literal: `Name { field: value, ..BASE }`.
+    Struct {
+        name: String,
+        fields: Vec<(String, Value)>,
+        base: Option<String>,
+    },
+    /// Array / list / tuple.
+    Arr(Vec<Value>),
+    /// Python dict, entries in source order.
+    Dict(Vec<(Value, Value)>),
+    Opaque,
+}
+
+/// One extracted symbol: a Rust const, a Python module-level
+/// assignment, or a dataclass field default.
+#[derive(Debug, Clone)]
+pub struct Sym {
+    pub name: String,
+    /// 1-based line of the declaration's name.
+    pub line: u32,
+    pub value: Value,
+}
+
+/// A Python class region with its annotated field defaults (the
+/// dataclass pattern `name: ann = default`).
+#[derive(Debug, Clone)]
+pub struct PyClass {
+    pub name: String,
+    pub line: u32,
+    pub fields: Vec<Sym>,
+}
+
+/// Extraction result for one Python module.
+#[derive(Debug, Clone, Default)]
+pub struct PyModule {
+    pub syms: Vec<Sym>,
+    pub classes: Vec<PyClass>,
+}
+
+fn punct(t: &Tok<'_>, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+fn digit_start(t: &Tok<'_>) -> bool {
+    t.kind == TokKind::Ident
+        && t.text.as_bytes().first().is_some_and(u8::is_ascii_digit)
+}
+
+/// Re-join a numeric literal starting at `toks[i]` (optionally
+/// signed). Returns `(value, source_text, next_index)`; `None` when
+/// the tokens there do not form a parseable number (hex literals,
+/// suffixed literals, non-numbers).
+pub fn join_number(
+    toks: &[Tok<'_>],
+    i: usize,
+) -> Option<(f64, String, usize)> {
+    let n = toks.len();
+    let mut k = i;
+    let mut neg = false;
+    if k < n && punct(&toks[k], "-") {
+        neg = true;
+        k += 1;
+    }
+    if k >= n || !digit_start(&toks[k]) {
+        return None;
+    }
+    let mut s = toks[k].text.to_string();
+    k += 1;
+    if !s.contains('.')
+        && k + 1 < n
+        && punct(&toks[k], ".")
+        && digit_start(&toks[k + 1])
+    {
+        s.push('.');
+        s.push_str(toks[k + 1].text);
+        k += 2;
+    }
+    if (s.ends_with('e') || s.ends_with('E'))
+        && k + 1 < n
+        && (punct(&toks[k], "-") || punct(&toks[k], "+"))
+        && digit_start(&toks[k + 1])
+    {
+        s.push_str(toks[k].text);
+        s.push_str(toks[k + 1].text);
+        k += 2;
+    }
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    let v: f64 = cleaned.parse().ok()?;
+    let text = if neg { format!("-{s}") } else { s };
+    Some((if neg { -v } else { v }, text, k))
+}
+
+/// Index of the next `,`, `;`, or unmatched closing bracket at
+/// relative depth 0 — the structural end of one expression/element.
+fn expr_end(toks: &[Tok<'_>], i: usize) -> usize {
+    let mut d = 0i32;
+    let mut j = i;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.kind == TokKind::Punct {
+            match t.text {
+                "(" | "[" | "{" => d += 1,
+                ")" | "]" | "}" => {
+                    if d == 0 {
+                        return j;
+                    }
+                    d -= 1;
+                }
+                "," | ";" if d == 0 => return j,
+                _ => {}
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Like [`expr_end`] but also ends at the first token on a later
+/// line while at relative depth 0 — the Python statement rule
+/// (newlines only continue an expression inside brackets).
+fn py_expr_end(toks: &[Tok<'_>], i: usize) -> usize {
+    let n = toks.len();
+    if i >= n {
+        return i;
+    }
+    let mut d = 0i32;
+    let mut cur = toks[i].line;
+    let mut j = i;
+    while j < n {
+        let t = &toks[j];
+        if d == 0 && t.line > cur {
+            return j;
+        }
+        if t.kind == TokKind::Punct {
+            match t.text {
+                "(" | "[" | "{" => d += 1,
+                ")" | "]" | "}" => {
+                    if d == 0 {
+                        return j;
+                    }
+                    d -= 1;
+                }
+                "," | ";" if d == 0 => return j,
+                _ => {}
+            }
+        }
+        if d == 0 {
+            cur = t.line;
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Parse one element whose structural end is `end`; anything that
+/// does not consume exactly the whole span is `Opaque` (so `8 * 64`
+/// never half-parses as `8`).
+fn elem<F>(toks: &[Tok<'_>], i: usize, end: usize, f: F) -> Value
+where
+    F: Fn(&[Tok<'_>], usize) -> (Value, usize),
+{
+    let (v, next) = f(toks, i);
+    if next == end {
+        v
+    } else {
+        Value::Opaque
+    }
+}
+
+/// Collect a (possibly pathed) identifier: `A`, `A::B`, `a.b`.
+/// Returns `(joined_name, next_index)`.
+fn path(toks: &[Tok<'_>], i: usize, sep: &str) -> (String, usize) {
+    let mut name = toks[i].text.to_string();
+    let mut j = i + 1;
+    while j + 1 < toks.len()
+        && punct(&toks[j], sep)
+        && toks[j + 1].kind == TokKind::Ident
+    {
+        name.push_str(sep);
+        name.push_str(toks[j + 1].text);
+        j += 2;
+    }
+    (name, j)
+}
+
+// ---------------------------------------------------------------
+// Rust side
+// ---------------------------------------------------------------
+
+/// Extract every module-level `const NAME: T = value;` from Rust
+/// source (with or without `pub`; items nested in blocks are
+/// intentionally skipped — mirrors are module-level by convention).
+pub fn extract_rust(src: &str) -> Vec<Sym> {
+    let lexed = lexer::lex_full(src);
+    let toks = &lexed.toks;
+    let n = toks.len();
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            match t.text {
+                "{" | "(" | "[" => depth += 1,
+                "}" | ")" | "]" => depth -= 1,
+                _ => {}
+            }
+        }
+        if depth == 0
+            && t.is_ident("const")
+            && i + 2 < n
+            && toks[i + 1].kind == TokKind::Ident
+            && punct(&toks[i + 2], ":")
+        {
+            let name = toks[i + 1].text.to_string();
+            let line = toks[i + 1].line;
+            // Skip the type: everything up to `=` at relative
+            // bracket depth 0 (`[Scenario; 7]` contains `;`).
+            let mut j = i + 3;
+            let mut bd = 0i32;
+            while j < n {
+                let tt = &toks[j];
+                if tt.kind == TokKind::Punct {
+                    match tt.text {
+                        "[" | "(" | "<" => bd += 1,
+                        "]" | ")" | ">" => bd -= 1,
+                        "=" if bd == 0 => break,
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            let vstart = j + 1;
+            let end = expr_end(toks, vstart);
+            let value = elem(toks, vstart, end, parse_rust_value);
+            out.push(Sym { name, line, value });
+            i = end;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+fn parse_rust_value(
+    toks: &[Tok<'_>],
+    i: usize,
+) -> (Value, usize) {
+    let n = toks.len();
+    if i >= n {
+        return (Value::Opaque, i);
+    }
+    if punct(&toks[i], "&") {
+        return parse_rust_value(toks, i + 1);
+    }
+    if let Some((v, text, next)) = join_number(toks, i) {
+        let line = toks[i].line;
+        return (Value::Num { v, text, line }, next);
+    }
+    if toks[i].kind == TokKind::Str {
+        let line = toks[i].line;
+        return (
+            Value::Str { s: toks[i].text.to_string(), line },
+            i + 1,
+        );
+    }
+    if punct(&toks[i], "[") {
+        let mut items = Vec::new();
+        let mut j = i + 1;
+        while j < n && !punct(&toks[j], "]") {
+            let end = expr_end(toks, j);
+            items.push(elem(toks, j, end, parse_rust_value));
+            j = end;
+            if j < n && punct(&toks[j], ",") {
+                j += 1;
+            }
+        }
+        return (Value::Arr(items), (j + 1).min(n));
+    }
+    if toks[i].kind == TokKind::Ident {
+        let (name, mut j) = path(toks, i, "::");
+        if j < n && punct(&toks[j], "{") {
+            let mut fields = Vec::new();
+            let mut base = None;
+            j += 1;
+            while j < n && !punct(&toks[j], "}") {
+                if punct(&toks[j], ".")
+                    && j + 2 < n
+                    && punct(&toks[j + 1], ".")
+                    && toks[j + 2].kind == TokKind::Ident
+                {
+                    let (b, nj) = path(toks, j + 2, "::");
+                    base = Some(b);
+                    j = nj;
+                    continue;
+                }
+                if toks[j].kind == TokKind::Ident
+                    && j + 1 < n
+                    && punct(&toks[j + 1], ":")
+                {
+                    let fname = toks[j].text.to_string();
+                    let vstart = j + 2;
+                    let end = expr_end(toks, vstart);
+                    fields.push((
+                        fname,
+                        elem(toks, vstart, end, parse_rust_value),
+                    ));
+                    j = end;
+                } else {
+                    j = expr_end(toks, j);
+                }
+                if j < n && punct(&toks[j], ",") {
+                    j += 1;
+                }
+            }
+            return (
+                Value::Struct { name, fields, base },
+                (j + 1).min(n),
+            );
+        }
+        if j < n && punct(&toks[j], "(") {
+            let mut args = Vec::new();
+            j += 1;
+            while j < n && !punct(&toks[j], ")") {
+                let end = expr_end(toks, j);
+                args.push(elem(toks, j, end, parse_rust_value));
+                j = end;
+                if j < n && punct(&toks[j], ",") {
+                    j += 1;
+                }
+            }
+            return (
+                Value::Call { name, args, kwargs: Vec::new() },
+                (j + 1).min(n),
+            );
+        }
+        return (Value::Ref(name), j);
+    }
+    (Value::Opaque, i + 1)
+}
+
+// ---------------------------------------------------------------
+// Python side
+// ---------------------------------------------------------------
+
+const PY_KEYWORDS: [&str; 22] = [
+    "assert", "class", "def", "del", "elif", "else", "except",
+    "finally", "for", "from", "global", "if", "import", "lambda",
+    "nonlocal", "pass", "print", "raise", "return", "try", "while",
+    "with",
+];
+
+fn py_keyword(s: &str) -> bool {
+    PY_KEYWORDS.contains(&s)
+}
+
+/// Extract module-level assignments and class field defaults from
+/// Python source.
+pub fn extract_py(src: &str) -> PyModule {
+    let lexed = pylex::lex_py(src);
+    let toks = &lexed.toks;
+    let n = toks.len();
+    let mut out = PyModule::default();
+    let mut depth = 0i32;
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            match t.text {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth -= 1,
+                _ => {}
+            }
+        }
+        if depth == 0 && t.col == 1 && t.kind == TokKind::Ident {
+            if t.text == "class"
+                && i + 1 < n
+                && toks[i + 1].kind == TokKind::Ident
+            {
+                let (class, next) = extract_py_class(toks, i);
+                out.classes.push(class);
+                i = next;
+                continue;
+            }
+            if !py_keyword(t.text) {
+                if let Some(vstart) = assign_rhs(toks, i) {
+                    let end = py_expr_end(toks, vstart);
+                    out.syms.push(Sym {
+                        name: t.text.to_string(),
+                        line: t.line,
+                        value: elem(toks, vstart, end, parse_py_value),
+                    });
+                    i = end;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// For `NAME = value` or `NAME: ann = value` starting at `i`,
+/// return the index of the value start. Rejects `==` (the lexers
+/// split it into two `=` puncts).
+fn assign_rhs(toks: &[Tok<'_>], i: usize) -> Option<usize> {
+    let n = toks.len();
+    if i + 1 >= n {
+        return None;
+    }
+    if punct(&toks[i + 1], "=")
+        && !(i + 2 < n && punct(&toks[i + 2], "="))
+    {
+        return Some(i + 2);
+    }
+    if punct(&toks[i + 1], ":") {
+        // Annotated: find `=` later on the same line, outside any
+        // comparison (annotations contain no `=`).
+        let mut k = i + 2;
+        while k < n && toks[k].line == toks[i].line {
+            if punct(&toks[k], "=")
+                && !(k + 1 < n && punct(&toks[k + 1], "="))
+            {
+                return Some(k + 1);
+            }
+            k += 1;
+        }
+    }
+    None
+}
+
+/// Parse a `class Name:` region starting at the `class` keyword.
+/// The region ends at the next column-1 token at depth 0.
+fn extract_py_class(
+    toks: &[Tok<'_>],
+    i: usize,
+) -> (PyClass, usize) {
+    let n = toks.len();
+    let name = toks[i + 1].text.to_string();
+    let line = toks[i + 1].line;
+    let mut fields = Vec::new();
+    let mut d = 0i32;
+    let mut j = i + 2;
+    let mut prev_line = toks[i].line;
+    while j < n {
+        let t = &toks[j];
+        if t.kind == TokKind::Punct {
+            match t.text {
+                "(" | "[" | "{" => d += 1,
+                ")" | "]" | "}" => d -= 1,
+                _ => {}
+            }
+        }
+        if d == 0 && t.col == 1 && t.line > toks[i].line {
+            break; // next module-level statement
+        }
+        // A field default: first ident on its line, inside the
+        // class body, not a keyword, with `: ann = value`.
+        if d == 0
+            && t.kind == TokKind::Ident
+            && t.line > prev_line
+            && t.col > 1
+            && !py_keyword(t.text)
+        {
+            if let Some(vstart) = assign_rhs(toks, j) {
+                let end = py_expr_end(toks, vstart);
+                fields.push(Sym {
+                    name: t.text.to_string(),
+                    line: t.line,
+                    value: elem(toks, vstart, end, parse_py_value),
+                });
+                prev_line = toks[end.saturating_sub(1)]
+                    .line
+                    .max(t.line);
+                j = end;
+                continue;
+            }
+        }
+        prev_line = prev_line.max(t.line);
+        j += 1;
+    }
+    (PyClass { name, line, fields }, j)
+}
+
+fn parse_py_value(toks: &[Tok<'_>], i: usize) -> (Value, usize) {
+    let n = toks.len();
+    if i >= n {
+        return (Value::Opaque, i);
+    }
+    if let Some((v, text, next)) = join_number(toks, i) {
+        let line = toks[i].line;
+        return (Value::Num { v, text, line }, next);
+    }
+    if toks[i].kind == TokKind::Str {
+        let line = toks[i].line;
+        return (
+            Value::Str { s: toks[i].text.to_string(), line },
+            i + 1,
+        );
+    }
+    if punct(&toks[i], "{") {
+        let mut entries = Vec::new();
+        let mut j = i + 1;
+        while j < n && !punct(&toks[j], "}") {
+            let (key, nk) = parse_py_value(toks, j);
+            if nk >= n || !punct(&toks[nk], ":") {
+                j = expr_end(toks, j);
+                if j < n && punct(&toks[j], ",") {
+                    j += 1;
+                }
+                continue;
+            }
+            let vstart = nk + 1;
+            let end = expr_end(toks, vstart);
+            entries
+                .push((key, elem(toks, vstart, end, parse_py_value)));
+            j = end;
+            if j < n && punct(&toks[j], ",") {
+                j += 1;
+            }
+        }
+        return (Value::Dict(entries), (j + 1).min(n));
+    }
+    if punct(&toks[i], "[") || punct(&toks[i], "(") {
+        let close = if punct(&toks[i], "[") { "]" } else { ")" };
+        let mut items = Vec::new();
+        let mut j = i + 1;
+        while j < n && !punct(&toks[j], close) {
+            let end = expr_end(toks, j);
+            items.push(elem(toks, j, end, parse_py_value));
+            j = end;
+            if j < n && punct(&toks[j], ",") {
+                j += 1;
+            }
+        }
+        return (Value::Arr(items), (j + 1).min(n));
+    }
+    if toks[i].kind == TokKind::Ident {
+        if toks[i].text == "None" {
+            return (Value::NoneLit, i + 1);
+        }
+        let (name, mut j) = path(toks, i, ".");
+        if j < n && punct(&toks[j], "(") {
+            let mut args = Vec::new();
+            let mut kwargs = Vec::new();
+            j += 1;
+            while j < n && !punct(&toks[j], ")") {
+                let end = expr_end(toks, j);
+                if toks[j].kind == TokKind::Ident
+                    && j + 1 < end
+                    && punct(&toks[j + 1], "=")
+                    && !(j + 2 < n && punct(&toks[j + 2], "="))
+                {
+                    kwargs.push((
+                        toks[j].text.to_string(),
+                        elem(toks, j + 2, end, parse_py_value),
+                    ));
+                } else {
+                    args.push(elem(toks, j, end, parse_py_value));
+                }
+                j = end;
+                if j < n && punct(&toks[j], ",") {
+                    j += 1;
+                }
+            }
+            return (
+                Value::Call { name, args, kwargs },
+                (j + 1).min(n),
+            );
+        }
+        return (Value::Ref(name), j);
+    }
+    (Value::Opaque, i + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn num(v: &Value) -> f64 {
+        match v {
+            Value::Num { v, .. } => *v,
+            other => panic!("expected Num, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rust_consts_with_split_literals() {
+        let src = "\
+pub const CLOCK_HZ: f32 = 1.41e9;
+pub const BASE_LEAK: f32 = 0.45e-12;
+pub const MAX_OPS: usize = 16;
+const NEG: f32 = -2.5;
+pub const HEX: u32 = 0x54;
+";
+        let syms = extract_rust(src);
+        let names: Vec<_> =
+            syms.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["CLOCK_HZ", "BASE_LEAK", "MAX_OPS", "NEG", "HEX"]
+        );
+        assert_eq!(num(&syms[0].value), 1.41e9);
+        assert_eq!(num(&syms[1].value), 0.45e-12);
+        match &syms[1].value {
+            Value::Num { text, .. } => assert_eq!(text, "0.45e-12"),
+            _ => unreachable!(),
+        }
+        assert_eq!(num(&syms[2].value), 16.0);
+        assert_eq!(num(&syms[3].value), -2.5);
+        // Hex does not parse as f64: presence-only.
+        assert_eq!(syms[4].value, Value::Opaque);
+        assert_eq!(syms[0].line, 1);
+        assert_eq!(syms[3].line, 4);
+    }
+
+    #[test]
+    fn rust_const_inside_fn_is_skipped() {
+        let src = "fn f() { const X: u32 = 1; }\n\
+                   pub const Y: u32 = 2;\n";
+        let syms = extract_rust(src);
+        assert_eq!(syms.len(), 1);
+        assert_eq!(syms[0].name, "Y");
+    }
+
+    #[test]
+    fn rust_registry_structs_with_base_update() {
+        let src = "\
+pub const SCENARIOS: [Scenario; 2] = [
+    Scenario { name: \"a\", spec: BASE },
+    Scenario {
+        name: \"b\",
+        spec: WorkloadSpec { batch: 1, ..BASE },
+    },
+];
+";
+        let syms = extract_rust(src);
+        assert_eq!(syms.len(), 1);
+        let arr = match &syms[0].value {
+            Value::Arr(items) => items,
+            v => panic!("want Arr, got {v:?}"),
+        };
+        assert_eq!(arr.len(), 2);
+        match &arr[1] {
+            Value::Struct { name, fields, .. } => {
+                assert_eq!(name, "Scenario");
+                match &fields[0].1 {
+                    Value::Str { s, .. } => assert_eq!(s, "b"),
+                    v => panic!("want Str, got {v:?}"),
+                }
+                match &fields[1].1 {
+                    Value::Struct { base, fields, .. } => {
+                        assert_eq!(base.as_deref(), Some("BASE"));
+                        assert_eq!(num(&fields[0].1), 1.0);
+                    }
+                    v => panic!("want Struct, got {v:?}"),
+                }
+            }
+            v => panic!("want Struct, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn rust_arithmetic_rhs_is_opaque_not_half_parsed() {
+        let syms = extract_rust("pub const X: usize = 8 * 64;\n");
+        assert_eq!(syms[0].value, Value::Opaque);
+    }
+
+    #[test]
+    fn py_module_constants_and_dict() {
+        let src = "\
+\"\"\"doc\"\"\"
+CLOCK_HZ = 1.41e9
+MEM_EFF_BASE = 0.55  # tuned
+SCENARIOS = {
+    \"a\": BASE,
+    \"b\": replace(BASE, batch=1, prefill_seq=16384),
+}
+if __name__ == \"__main__\":
+    X = 9
+";
+        let m = extract_py(src);
+        let names: Vec<_> =
+            m.syms.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["CLOCK_HZ", "MEM_EFF_BASE", "SCENARIOS"]
+        );
+        assert_eq!(num(&m.syms[1].value), 0.55);
+        assert_eq!(m.syms[1].line, 3);
+        let entries = match &m.syms[2].value {
+            Value::Dict(e) => e,
+            v => panic!("want Dict, got {v:?}"),
+        };
+        assert_eq!(entries.len(), 2);
+        match &entries[0].0 {
+            Value::Str { s, .. } => assert_eq!(s, "a"),
+            v => panic!("want Str, got {v:?}"),
+        }
+        assert_eq!(entries[0].1, Value::Ref("BASE".to_string()));
+        match &entries[1].1 {
+            Value::Call { name, args, kwargs } => {
+                assert_eq!(name, "replace");
+                assert_eq!(args[0], Value::Ref("BASE".to_string()));
+                assert_eq!(kwargs[0].0, "batch");
+                assert_eq!(num(&kwargs[0].1), 1.0);
+                assert_eq!(num(&kwargs[1].1), 16384.0);
+            }
+            v => panic!("want Call, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn py_dataclass_fields_and_call_kwargs() {
+        let src = "\
+from dataclasses import dataclass
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    d_model: int = 12288
+    n_kv_heads: int | None = None
+
+    def __post_init__(self):
+        if self.n_kv_heads is None:
+            pass
+
+GPT3 = WorkloadSpec()
+TINY = WorkloadSpec(d_model=1024)
+";
+        let m = extract_py(src);
+        assert_eq!(m.classes.len(), 1);
+        let c = &m.classes[0];
+        assert_eq!(c.name, "WorkloadSpec");
+        let fnames: Vec<_> =
+            c.fields.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(fnames, vec!["d_model", "n_kv_heads"]);
+        assert_eq!(num(&c.fields[0].value), 12288.0);
+        assert_eq!(c.fields[1].value, Value::NoneLit);
+        assert_eq!(m.syms.len(), 2);
+        match &m.syms[1].value {
+            Value::Call { name, kwargs, .. } => {
+                assert_eq!(name, "WorkloadSpec");
+                assert_eq!(kwargs[0].0, "d_model");
+                assert_eq!(num(&kwargs[0].1), 1024.0);
+            }
+            v => panic!("want Call, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn join_number_shapes() {
+        let l = pylex::lex_py("0.45e-12 1_000 16 -3.5 0x54");
+        let t = &l.toks;
+        let (v, s, k) = join_number(t, 0).expect("sci");
+        assert_eq!((v, s.as_str()), (0.45e-12, "0.45e-12"));
+        let (v, s, k2) = join_number(t, k).expect("underscore");
+        assert_eq!((v, s.as_str()), (1000.0, "1_000"));
+        let (v, _, k3) = join_number(t, k2).expect("int");
+        assert_eq!(v, 16.0);
+        let (v, s, k4) = join_number(t, k3).expect("neg");
+        assert_eq!((v, s.as_str()), (-3.5, "-3.5"));
+        assert!(join_number(t, k4).is_none());
+    }
+}

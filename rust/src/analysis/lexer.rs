@@ -8,19 +8,28 @@
 //! literals, block comments) and *capturing* line comments for the
 //! waiver parser (see [`crate::analysis::waiver`] for the syntax).
 //!
+//! Two entry points share one scanner: [`lex`] drops string literals
+//! entirely (the determinism rules must never match inside them),
+//! while [`lex_full`] keeps each one as a [`TokKind::Str`] token so
+//! the mirror extractor can read scenario names and doc strings.
+//!
 //! Deliberate approximations, safe for linting purposes:
 //! * numeric literals lex as identifier-like tokens (`0x54`, `1e15`);
 //!   no rule matches them;
 //! * a raw identifier `r#type` lexes as `r`, `#`, `type`;
 //! * lifetimes drop their tick, so `'a` lexes as the ident `a`.
 
-/// Token class — the scanner only distinguishes words from symbols.
+/// Token class — the scanner only distinguishes words from symbols,
+/// plus (under [`lex_full`]) string literals.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TokKind {
     /// Identifier-like: `[A-Za-z0-9_]+` (includes keywords, numbers).
     Ident,
     /// Single punctuation char, or the two-char path separator `::`.
     Punct,
+    /// String literal (only emitted by [`lex_full`]); `text` is the
+    /// content between the quotes, escapes left as written.
+    Str,
 }
 
 /// One lexed token, borrowing from the source text.
@@ -30,6 +39,8 @@ pub struct Tok<'a> {
     pub text: &'a str,
     /// 1-based source line of the token's first byte.
     pub line: u32,
+    /// 1-based byte column of the token's first byte on its line.
+    pub col: u32,
 }
 
 impl<'a> Tok<'a> {
@@ -61,24 +72,38 @@ fn utf8_len(first: u8) -> usize {
     }
 }
 
-/// Lex `src` into tokens + captured line comments.
+/// Lex `src` into tokens + captured line comments, dropping string
+/// literals (the determinism scanner's view).
 pub fn lex(src: &str) -> Lexed<'_> {
+    lex_impl(src, false)
+}
+
+/// Like [`lex`] but keeps every string literal as a [`TokKind::Str`]
+/// token (the mirror extractor's view).
+pub fn lex_full(src: &str) -> Lexed<'_> {
+    lex_impl(src, true)
+}
+
+fn lex_impl(src: &str, keep_strings: bool) -> Lexed<'_> {
     let b = src.as_bytes();
     let n = b.len();
     let mut out = Lexed::default();
     let mut i = 0usize;
     let mut line = 1u32;
+    let mut line_start = 0usize;
     while i < n {
         let c = b[i];
         if c == b'\n' {
             line += 1;
             i += 1;
+            line_start = i;
             continue;
         }
         if c.is_ascii_whitespace() {
             i += 1;
             continue;
         }
+        let col = (i - line_start + 1) as u32;
         // Line comment: capture for the waiver parser.
         if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
             let start = i;
@@ -103,22 +128,27 @@ pub fn lex(src: &str) -> Lexed<'_> {
                 } else {
                     if b[i] == b'\n' {
                         line += 1;
+                        line_start = i + 1;
                     }
                     i += 1;
                 }
             }
             continue;
         }
-        // Raw string r"..." / r#"..."# (any number of hashes).
-        if c == b'r' {
-            let mut j = i + 1;
+        // Raw string r"..." / r#"..."# (any number of hashes), and
+        // the byte-string spelling br"..." / br#"..."#.
+        if c == b'r' || (c == b'b' && i + 1 < n && b[i + 1] == b'r') {
+            let mut j = i + 1 + usize::from(c == b'b');
             let mut hashes = 0usize;
             while j < n && b[j] == b'#' {
                 hashes += 1;
                 j += 1;
             }
             if j < n && b[j] == b'"' {
+                let tok_line = line;
                 j += 1;
+                let inner_start = j;
+                let mut inner_end = n;
                 while j < n {
                     if b[j] == b'"'
                         && j + 1 + hashes <= n
@@ -126,23 +156,36 @@ pub fn lex(src: &str) -> Lexed<'_> {
                             .iter()
                             .all(|&h| h == b'#')
                     {
+                        inner_end = j;
                         j += 1 + hashes;
                         break;
                     }
                     if b[j] == b'\n' {
                         line += 1;
+                        line_start = j + 1;
                     }
                     j += 1;
+                }
+                if keep_strings {
+                    out.toks.push(Tok {
+                        kind: TokKind::Str,
+                        text: &src[inner_start..inner_end],
+                        line: tok_line,
+                        col,
+                    });
                 }
                 i = j;
                 continue;
             }
-            // Not a raw string: fall through (ident starting with r,
-            // or a raw identifier's `r` + `#`).
+            // Not a raw string: fall through (ident starting with r
+            // or b, or a raw identifier's `r` + `#`).
         }
         // Plain string literal.
         if c == b'"' {
+            let tok_line = line;
             i += 1;
+            let inner_start = i;
+            let mut inner_end = n;
             while i < n {
                 match b[i] {
                     b'\\' => {
@@ -150,19 +193,30 @@ pub fn lex(src: &str) -> Lexed<'_> {
                         // still advances the line counter.
                         if i + 1 < n && b[i + 1] == b'\n' {
                             line += 1;
+                            line_start = i + 2;
                         }
                         i += 2;
                     }
                     b'"' => {
+                        inner_end = i;
                         i += 1;
                         break;
                     }
                     b'\n' => {
                         line += 1;
                         i += 1;
+                        line_start = i;
                     }
                     _ => i += 1,
                 }
+            }
+            if keep_strings {
+                out.toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: &src[inner_start..inner_end.min(n)],
+                    line: tok_line,
+                    col,
+                });
             }
             continue;
         }
@@ -198,6 +252,7 @@ pub fn lex(src: &str) -> Lexed<'_> {
                 kind: TokKind::Ident,
                 text: &src[start..i],
                 line,
+                col,
             });
             continue;
         }
@@ -206,6 +261,7 @@ pub fn lex(src: &str) -> Lexed<'_> {
                 kind: TokKind::Punct,
                 text: &src[i..i + 2],
                 line,
+                col,
             });
             i += 2;
             continue;
@@ -217,6 +273,7 @@ pub fn lex(src: &str) -> Lexed<'_> {
             kind: TokKind::Punct,
             text: &src[i..i + len],
             line,
+            col,
         });
         i += len;
     }
@@ -277,5 +334,69 @@ mod tests {
     fn numbers_lex_as_ident_like_tokens() {
         assert_eq!(texts("0x54 1e15"), vec!["0x54", "1e15"]);
         assert_eq!(texts("1.5"), vec!["1", ".", "5"]);
+    }
+
+    // ---- hardening: raw strings, byte strings, nesting ----------
+
+    #[test]
+    fn raw_string_with_trailing_backslash_does_not_escape() {
+        // In a raw string `\` is literal, so the quote after it
+        // closes the literal; `x` must survive as a token.
+        assert_eq!(texts("a r\"c:\\\" x"), vec!["a", "x"]);
+    }
+
+    #[test]
+    fn raw_byte_strings_are_skipped_whole() {
+        // `br"..."` used to lex as ident `br` + plain string, so an
+        // inner `\"` was mis-read as an escape and leaked tokens.
+        assert_eq!(texts("a br\"x \\\" y\" b"), vec!["a", "b"]);
+        assert_eq!(
+            texts("a br#\"q \"inner\" r\"# b"),
+            vec!["a", "b"]
+        );
+        // A bare `br` ident (no quote) still lexes as an ident.
+        assert_eq!(texts("let br = 1;"), vec!["let", "br", "=", ";"]);
+    }
+
+    #[test]
+    fn nested_block_comments_with_string_like_content() {
+        let src = "a /* \" /* 'x */ \" still comment */ b";
+        assert_eq!(texts(src), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn multiline_raw_string_keeps_line_count() {
+        let l = lex("a r#\"one\ntwo\nthree\"# b");
+        assert_eq!(l.toks[0].line, 1);
+        assert_eq!(l.toks[1].line, 3);
+    }
+
+    #[test]
+    fn lex_full_keeps_string_contents() {
+        let l = lex_full("let s = \"name\"; r#\"raw \"q\" t\"#");
+        let strs: Vec<_> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| t.text)
+            .collect();
+        assert_eq!(strs, vec!["name", "raw \"q\" t"]);
+        // And `lex` drops the same literals entirely.
+        let stripped = lex("let s = \"name\";");
+        assert!(stripped
+            .toks
+            .iter()
+            .all(|t| t.kind != TokKind::Str));
+    }
+
+    #[test]
+    fn columns_are_one_based_byte_offsets() {
+        let l = lex("ab cd\n  ef::gh");
+        let pos: Vec<(u32, u32)> =
+            l.toks.iter().map(|t| (t.line, t.col)).collect();
+        assert_eq!(
+            pos,
+            vec![(1, 1), (1, 4), (2, 3), (2, 5), (2, 7)]
+        );
     }
 }

@@ -1,0 +1,1014 @@
+//! Cross-language mirror-drift differ (`lumina lint --mirror`).
+//!
+//! The Rust simulators and the Python compiler share one model
+//! contract: architecture constants, design-encoding bounds, and the
+//! scenario registry are declared twice, once per language, and the
+//! pair must stay in lockstep. This engine proves the contract
+//! statically: it parses both sides of every pair declared in
+//! [`crate::analysis::mirrors`] into typed symbol tables
+//! ([`crate::analysis::extract`]) and diffs them:
+//!
+//! * **M001** — same symbol, different literal (exact `file:line`
+//!   on both sides);
+//! * **M002** — a symbol or registry entry exists on one side only;
+//! * **M003** — a named oracle pin (A100 reference values) drifted
+//!   between the Rust files that duplicate it;
+//! * **M004** — a MIRROR doc pointer names a path, symbol, or test
+//!   that no longer exists.
+//!
+//! Findings flow through the same tail as the determinism lint:
+//! inline waivers (`// lumina: allow(M001) reason`, also `#`
+//! comments on the Python side), the sorted [`Report`], the JSON
+//! artifact, and the `--deny-warnings` CI gate.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::analysis::extract::{self, PyClass, Sym, Value};
+use crate::analysis::lexer::{Tok, TokKind};
+use crate::analysis::mirrors::{
+    MirrorKind, MirrorPair, OraclePin, PAIRS, PINS,
+};
+use crate::analysis::{lexer, pylex, rules, waiver, Finding, Report};
+use crate::error::Context;
+use crate::Result;
+
+/// Doc-comment path words are only treated as repo paths when they
+/// start with one of these roots; everything else ("names/specs" in
+/// prose) is left alone.
+const PATH_ROOTS: [&str; 4] = ["rust/", "python/", "tests/", "src/"];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Lang {
+    Rust,
+    Py,
+}
+
+struct SrcFile {
+    lang: Lang,
+    text: String,
+}
+
+/// A finding before waiver application.
+struct Raw {
+    rule: &'static str,
+    file: String,
+    line: u32,
+    message: String,
+}
+
+/// A resolved numeric field: value for comparison, source text for
+/// display, declaration site for the finding anchor.
+#[derive(Debug, Clone)]
+struct Lit {
+    v: f64,
+    text: String,
+    file: String,
+    line: u32,
+}
+
+/// A fully resolved scenario spec: field name -> literal.
+type Spec = BTreeMap<String, Lit>;
+
+/// Check the production manifest against the repo at `root` (the
+/// directory holding `rust/` and `python/`).
+pub fn check_repo(root: &Path) -> Result<Report> {
+    check(root, &PAIRS, &PINS)
+}
+
+/// Check an explicit manifest (fixture corpora use their own).
+pub fn check(
+    root: &Path,
+    pairs: &[MirrorPair],
+    pins: &[OraclePin],
+) -> Result<Report> {
+    let mut files: BTreeMap<String, SrcFile> = BTreeMap::new();
+    for pair in pairs {
+        load(&mut files, root, pair.rust_path)?;
+        for aux in pair.rust_aux {
+            load(&mut files, root, aux)?;
+        }
+        load(&mut files, root, pair.python_path)?;
+    }
+    for pin in pins {
+        for f in pin.files {
+            load(&mut files, root, f)?;
+        }
+    }
+
+    let mut raw: Vec<Raw> = Vec::new();
+    for pair in pairs {
+        check_pair(pair, &files, &mut raw);
+    }
+    for pin in pins {
+        check_pin(pin, &files, &mut raw);
+    }
+    check_docs(root, pairs, &files, &mut raw);
+
+    let mut findings: Vec<Finding> = Vec::new();
+    for (rel, f) in &files {
+        let lexed = match f.lang {
+            Lang::Rust => lexer::lex(&f.text),
+            Lang::Py => pylex::lex_py(&f.text),
+        };
+        let (waivers, w001) = waiver::parse(&lexed.comments);
+        for r in raw.iter().filter(|r| &r.file == rel) {
+            let w = waivers.iter().find(|wv| {
+                wv.rule == r.rule
+                    && (wv.line == r.line || wv.line + 1 == r.line)
+            });
+            findings.push(Finding {
+                rule: r.rule.to_string(),
+                severity: rules::severity_of(r.rule),
+                file: r.file.clone(),
+                line: r.line,
+                message: r.message.clone(),
+                waived: w.is_some(),
+                waiver_reason: w.map(|wv| wv.reason.clone()),
+            });
+        }
+        for (line, message) in w001 {
+            findings.push(Finding {
+                rule: "W001".to_string(),
+                severity: rules::severity_of("W001"),
+                file: rel.clone(),
+                line,
+                message,
+                waived: false,
+                waiver_reason: None,
+            });
+        }
+    }
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, &a.rule, &a.message)
+            .cmp(&(&b.file, b.line, &b.rule, &b.message))
+    });
+    Ok(Report {
+        engine: "mirror".to_string(),
+        root: root.display().to_string().replace('\\', "/"),
+        files: files.len(),
+        findings,
+    })
+}
+
+fn load(
+    files: &mut BTreeMap<String, SrcFile>,
+    root: &Path,
+    rel: &str,
+) -> Result<()> {
+    if files.contains_key(rel) {
+        return Ok(());
+    }
+    let path = root.join(rel);
+    let text = fs::read_to_string(&path).with_context(|| {
+        format!("mirror: read {}", path.display())
+    })?;
+    let lang = if rel.ends_with(".py") {
+        Lang::Py
+    } else {
+        Lang::Rust
+    };
+    files.insert(rel.to_string(), SrcFile { lang, text });
+    Ok(())
+}
+
+fn check_pair(
+    pair: &MirrorPair,
+    files: &BTreeMap<String, SrcFile>,
+    raw: &mut Vec<Raw>,
+) {
+    match pair.kind {
+        MirrorKind::Consts => diff_consts(pair, files, raw),
+        MirrorKind::Registry { symbol } => {
+            diff_registry(pair, symbol, files, raw);
+        }
+    }
+}
+
+// ---------------------------------------------------------------
+// Flat constant pairs (M001/M002 per symbol)
+// ---------------------------------------------------------------
+
+fn diff_consts(
+    pair: &MirrorPair,
+    files: &BTreeMap<String, SrcFile>,
+    raw: &mut Vec<Raw>,
+) {
+    let Some(rf) = files.get(pair.rust_path) else { return };
+    let Some(pf) = files.get(pair.python_path) else { return };
+    let rsyms = extract::extract_rust(&rf.text);
+    let pmod = extract::extract_py(&pf.text);
+    let rmap: BTreeMap<&str, &Sym> = rsyms
+        .iter()
+        .filter(|s| pair.rust_filter.keeps(&s.name))
+        .map(|s| (s.name.as_str(), s))
+        .collect();
+    let pmap: BTreeMap<&str, &Sym> = pmod
+        .syms
+        .iter()
+        .filter(|s| pair.python_filter.keeps(&s.name))
+        .map(|s| (s.name.as_str(), s))
+        .collect();
+    let names: BTreeSet<&str> =
+        rmap.keys().chain(pmap.keys()).copied().collect();
+    for name in names {
+        match (rmap.get(name), pmap.get(name)) {
+            (Some(r), Some(p)) => {
+                diff_values(pair, name, r, p, raw);
+            }
+            (Some(r), None) => raw.push(Raw {
+                rule: "M002",
+                file: pair.rust_path.to_string(),
+                line: r.line,
+                message: format!(
+                    "`{}` only declared in {}; missing from {} \
+                     (mirror pair `{}`)",
+                    name, pair.rust_path, pair.python_path, pair.name
+                ),
+            }),
+            (None, Some(p)) => raw.push(Raw {
+                rule: "M002",
+                file: pair.python_path.to_string(),
+                line: p.line,
+                message: format!(
+                    "`{}` only declared in {}; missing from {} \
+                     (mirror pair `{}`)",
+                    name, pair.python_path, pair.rust_path, pair.name
+                ),
+            }),
+            (None, None) => {}
+        }
+    }
+}
+
+/// Compare two same-named symbols. Only like kinds are compared
+/// (number vs number, string vs string); anything else — arrays,
+/// structs, hex literals, expressions — is presence-only.
+fn diff_values(
+    pair: &MirrorPair,
+    name: &str,
+    r: &Sym,
+    p: &Sym,
+    raw: &mut Vec<Raw>,
+) {
+    let drift = match (&r.value, &p.value) {
+        (
+            Value::Num { v: rv, text: rt, .. },
+            Value::Num { v: pv, text: pt, .. },
+        ) => (rv != pv).then(|| (rt.clone(), pt.clone())),
+        (Value::Str { s: rs, .. }, Value::Str { s: ps, .. }) => {
+            (rs != ps).then(|| {
+                (format!("\"{rs}\""), format!("\"{ps}\""))
+            })
+        }
+        _ => None,
+    };
+    if let Some((rt, pt)) = drift {
+        raw.push(Raw {
+            rule: "M001",
+            file: pair.rust_path.to_string(),
+            line: r.line,
+            message: format!(
+                "`{}` drifted: {}:{} has `{}`, {}:{} has `{}`",
+                name,
+                pair.rust_path,
+                r.line,
+                rt,
+                pair.python_path,
+                p.line,
+                pt
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------
+// Scenario registries (named specs resolved on both sides)
+// ---------------------------------------------------------------
+
+/// Last path segment: `spec::GPT3_175B` -> `GPT3_175B`,
+/// `dataclasses.replace` -> `replace`.
+fn tail(name: &str) -> &str {
+    let t = name.rsplit("::").next().unwrap_or(name);
+    t.rsplit('.').next().unwrap_or(t)
+}
+
+fn resolve_rust_spec(
+    v: &Value,
+    env: &BTreeMap<String, Spec>,
+    file: &str,
+) -> Spec {
+    match v {
+        Value::Ref(r) => {
+            env.get(tail(r)).cloned().unwrap_or_default()
+        }
+        Value::Struct { fields, base, .. } => {
+            let mut spec = match base {
+                Some(b) => {
+                    env.get(tail(b)).cloned().unwrap_or_default()
+                }
+                None => Spec::new(),
+            };
+            for (fname, fval) in fields {
+                if let Value::Num { v, text, line } = fval {
+                    spec.insert(
+                        fname.clone(),
+                        Lit {
+                            v: *v,
+                            text: text.clone(),
+                            file: file.to_string(),
+                            line: *line,
+                        },
+                    );
+                }
+            }
+            spec
+        }
+        _ => Spec::new(),
+    }
+}
+
+/// Extract the Rust side of a registry pair: every scenario name
+/// with its fully resolved spec. Named specs may live in aux files
+/// (processed first, source order preserved within each file).
+fn rust_scenarios(
+    pair: &MirrorPair,
+    symbol: &str,
+    files: &BTreeMap<String, SrcFile>,
+) -> Vec<(String, u32, Spec)> {
+    let mut env: BTreeMap<String, Spec> = BTreeMap::new();
+    let mut reg: Option<(String, Value)> = None;
+    let mut sources: Vec<&str> = pair.rust_aux.to_vec();
+    sources.push(pair.rust_path);
+    for rel in sources {
+        let Some(f) = files.get(rel) else { continue };
+        for sym in extract::extract_rust(&f.text) {
+            if sym.name == symbol {
+                reg = Some((rel.to_string(), sym.value));
+                continue;
+            }
+            let spec = resolve_rust_spec(&sym.value, &env, rel);
+            if !spec.is_empty() {
+                env.insert(sym.name, spec);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    let Some((reg_file, Value::Arr(items))) = reg else {
+        return out;
+    };
+    for item in &items {
+        let Value::Struct { fields, .. } = item else { continue };
+        let mut name: Option<(String, u32)> = None;
+        let mut spec = Spec::new();
+        for (fname, fval) in fields {
+            if fname == "name" {
+                if let Value::Str { s, line } = fval {
+                    name = Some((s.clone(), *line));
+                }
+            } else if fname == "spec" {
+                spec = resolve_rust_spec(fval, &env, &reg_file);
+            }
+        }
+        if let Some((n, line)) = name {
+            out.push((n, line, spec));
+        }
+    }
+    out
+}
+
+fn py_class_defaults(c: &PyClass, file: &str) -> Spec {
+    let mut spec = Spec::new();
+    for f in &c.fields {
+        if let Value::Num { v, text, line } = &f.value {
+            spec.insert(
+                f.name.clone(),
+                Lit {
+                    v: *v,
+                    text: text.clone(),
+                    file: file.to_string(),
+                    line: *line,
+                },
+            );
+        }
+    }
+    spec
+}
+
+/// `WorkloadSpec.__post_init__` models GQA: a `n_kv_heads` left at
+/// its `None` default resolves to `n_heads`. Replicated here so
+/// defaulted Python scenarios compare field-complete against the
+/// always-explicit Rust structs.
+fn gqa_default(spec: &mut Spec) {
+    if !spec.contains_key("n_kv_heads") {
+        if let Some(h) = spec.get("n_heads").cloned() {
+            spec.insert("n_kv_heads".to_string(), h);
+        }
+    }
+}
+
+fn resolve_py_spec(
+    v: &Value,
+    env: &BTreeMap<String, Spec>,
+    classes: &BTreeMap<String, Spec>,
+    file: &str,
+) -> Spec {
+    match v {
+        Value::Ref(r) => {
+            env.get(tail(r)).cloned().unwrap_or_default()
+        }
+        Value::Call { name, args, kwargs } => {
+            let callee = tail(name);
+            let mut spec = if callee == "replace" {
+                match args.first() {
+                    Some(base) => {
+                        resolve_py_spec(base, env, classes, file)
+                    }
+                    None => Spec::new(),
+                }
+            } else {
+                match classes.get(callee) {
+                    Some(defaults) => defaults.clone(),
+                    None => return Spec::new(),
+                }
+            };
+            for (kname, kval) in kwargs {
+                if let Value::Num { v, text, line } = kval {
+                    spec.insert(
+                        kname.clone(),
+                        Lit {
+                            v: *v,
+                            text: text.clone(),
+                            file: file.to_string(),
+                            line: *line,
+                        },
+                    );
+                }
+                // An explicit `field=None` falls back to the
+                // post-init default: drop it so gqa_default
+                // re-fills.
+                if matches!(kval, Value::NoneLit) {
+                    spec.remove(kname);
+                }
+            }
+            gqa_default(&mut spec);
+            spec
+        }
+        _ => Spec::new(),
+    }
+}
+
+/// Extract the Python side of a registry pair: `symbol` must be a
+/// module-level dict of name -> spec expression.
+fn py_scenarios(
+    pair: &MirrorPair,
+    symbol: &str,
+    files: &BTreeMap<String, SrcFile>,
+) -> Vec<(String, u32, Spec)> {
+    let Some(f) = files.get(pair.python_path) else {
+        return Vec::new();
+    };
+    let module = extract::extract_py(&f.text);
+    let classes: BTreeMap<String, Spec> = module
+        .classes
+        .iter()
+        .map(|c| {
+            (c.name.clone(), py_class_defaults(c, pair.python_path))
+        })
+        .collect();
+    let mut env: BTreeMap<String, Spec> = BTreeMap::new();
+    let mut reg: Option<&Value> = None;
+    for sym in &module.syms {
+        if sym.name == symbol {
+            reg = Some(&sym.value);
+            continue;
+        }
+        let spec = resolve_py_spec(
+            &sym.value,
+            &env,
+            &classes,
+            pair.python_path,
+        );
+        if !spec.is_empty() {
+            env.insert(sym.name.clone(), spec);
+        }
+    }
+    let mut out = Vec::new();
+    let Some(Value::Dict(entries)) = reg else { return out };
+    for (key, val) in entries {
+        let Value::Str { s, line } = key else { continue };
+        let spec = resolve_py_spec(
+            val,
+            &env,
+            &classes,
+            pair.python_path,
+        );
+        out.push((s.clone(), *line, spec));
+    }
+    out
+}
+
+fn diff_registry(
+    pair: &MirrorPair,
+    symbol: &str,
+    files: &BTreeMap<String, SrcFile>,
+    raw: &mut Vec<Raw>,
+) {
+    let rs = rust_scenarios(pair, symbol, files);
+    let py = py_scenarios(pair, symbol, files);
+    let rmap: BTreeMap<&str, (u32, &Spec)> = rs
+        .iter()
+        .map(|(n, l, s)| (n.as_str(), (*l, s)))
+        .collect();
+    let pmap: BTreeMap<&str, (u32, &Spec)> = py
+        .iter()
+        .map(|(n, l, s)| (n.as_str(), (*l, s)))
+        .collect();
+    let names: BTreeSet<&str> =
+        rmap.keys().chain(pmap.keys()).copied().collect();
+    for name in names {
+        match (rmap.get(name), pmap.get(name)) {
+            (Some((_, rspec)), Some((_, pspec))) => {
+                if rspec.is_empty() || pspec.is_empty() {
+                    // Resolution failed on one side (unknown base,
+                    // opaque expression): presence-only.
+                    continue;
+                }
+                diff_specs(pair, name, rspec, pspec, raw);
+            }
+            (Some((rl, _)), None) => raw.push(Raw {
+                rule: "M002",
+                file: pair.rust_path.to_string(),
+                line: *rl,
+                message: format!(
+                    "scenario `{}` only registered in {}; missing \
+                     from {} (mirror pair `{}`)",
+                    name,
+                    pair.rust_path,
+                    pair.python_path,
+                    pair.name
+                ),
+            }),
+            (None, Some((pl, _))) => raw.push(Raw {
+                rule: "M002",
+                file: pair.python_path.to_string(),
+                line: *pl,
+                message: format!(
+                    "scenario `{}` only registered in {}; missing \
+                     from {} (mirror pair `{}`)",
+                    name,
+                    pair.python_path,
+                    pair.rust_path,
+                    pair.name
+                ),
+            }),
+            (None, None) => {}
+        }
+    }
+}
+
+fn diff_specs(
+    pair: &MirrorPair,
+    name: &str,
+    rspec: &Spec,
+    pspec: &Spec,
+    raw: &mut Vec<Raw>,
+) {
+    let fields: BTreeSet<&str> = rspec
+        .keys()
+        .chain(pspec.keys())
+        .map(String::as_str)
+        .collect();
+    for fname in fields {
+        match (rspec.get(fname), pspec.get(fname)) {
+            (Some(r), Some(p)) => {
+                if r.v != p.v {
+                    raw.push(Raw {
+                        rule: "M001",
+                        file: r.file.clone(),
+                        line: r.line,
+                        message: format!(
+                            "scenario `{}` field `{}` drifted: \
+                             {}:{} has `{}`, {}:{} has `{}`",
+                            name, fname, r.file, r.line, r.text,
+                            p.file, p.line, p.text
+                        ),
+                    });
+                }
+            }
+            (Some(r), None) => raw.push(Raw {
+                rule: "M002",
+                file: r.file.clone(),
+                line: r.line,
+                message: format!(
+                    "scenario `{}` field `{}` only set in {}; \
+                     missing from {} (mirror pair `{}`)",
+                    name, fname, r.file, pair.python_path, pair.name
+                ),
+            }),
+            (None, Some(p)) => raw.push(Raw {
+                rule: "M002",
+                file: p.file.clone(),
+                line: p.line,
+                message: format!(
+                    "scenario `{}` field `{}` only set in {}; \
+                     missing from {} (mirror pair `{}`)",
+                    name, fname, p.file, pair.rust_path, pair.name
+                ),
+            }),
+            (None, None) => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------
+// Oracle pins (M003)
+// ---------------------------------------------------------------
+
+fn is_punct(t: &Tok<'_>, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+/// Scan one Rust file for `(m.<field> - <literal>)` pin sites. A
+/// file passes if ANY occurrence matches the canonical value (files
+/// legitimately pin other scenarios on the same fields); otherwise
+/// the occurrence closest to the canonical value anchors the
+/// finding.
+fn check_pin(
+    pin: &OraclePin,
+    files: &BTreeMap<String, SrcFile>,
+    raw: &mut Vec<Raw>,
+) {
+    let Ok(want) = pin.value.parse::<f64>() else { return };
+    for rel in pin.files {
+        let Some(f) = files.get(*rel) else { continue };
+        let lexed = lexer::lex(&f.text);
+        let toks = &lexed.toks;
+        let mut occs: Vec<(f64, String, u32)> = Vec::new();
+        for i in 0..toks.len() {
+            if !toks[i].is_ident(pin.field) {
+                continue;
+            }
+            if i + 2 >= toks.len() || !is_punct(&toks[i + 1], "-") {
+                continue;
+            }
+            if let Some((v, text, _)) =
+                extract::join_number(toks, i + 2)
+            {
+                occs.push((v, text, toks[i + 2].line));
+            }
+        }
+        if occs.is_empty() {
+            raw.push(Raw {
+                rule: "M003",
+                file: rel.to_string(),
+                line: 1,
+                message: format!(
+                    "oracle pin `{}` (`{}`) not found in {}",
+                    pin.name, pin.field, rel
+                ),
+            });
+            continue;
+        }
+        if occs.iter().any(|o| o.0 == want) {
+            continue;
+        }
+        let mut best = &occs[0];
+        for o in &occs[1..] {
+            if (o.0 - want).abs() < (best.0 - want).abs() {
+                best = o;
+            }
+        }
+        raw.push(Raw {
+            rule: "M003",
+            file: rel.to_string(),
+            line: best.2,
+            message: format!(
+                "oracle pin `{}` (`{}`) diverged: found `{}`, \
+                 canonical is `{}`",
+                pin.name, pin.field, best.1, pin.value
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------
+// Stale mirror declarations (M004)
+// ---------------------------------------------------------------
+
+fn check_docs(
+    root: &Path,
+    pairs: &[MirrorPair],
+    files: &BTreeMap<String, SrcFile>,
+    raw: &mut Vec<Raw>,
+) {
+    let mut members: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for pair in pairs {
+        members.entry(pair.rust_path).or_default().push(pair.name);
+        members
+            .entry(pair.python_path)
+            .or_default()
+            .push(pair.name);
+    }
+    let corpus = test_corpus(root, files);
+    for (rel, pair_names) in &members {
+        let Some(f) = files.get(*rel) else { continue };
+        let lines = doc_lines(f);
+        let has_marker = lines.iter().any(|(_, t)| {
+            t.to_ascii_lowercase().contains("mirror")
+        });
+        if !has_marker {
+            raw.push(Raw {
+                rule: "M004",
+                file: rel.to_string(),
+                line: 1,
+                message: format!(
+                    "mirror pair file carries no MIRROR marker \
+                     comment (pairs: {})",
+                    pair_names.join(", ")
+                ),
+            });
+        }
+        for (line, text) in &lines {
+            check_doc_line(root, rel, *line, text, &corpus, raw);
+        }
+    }
+}
+
+/// Comment lines (plus the module docstring, for Python) with their
+/// 1-based line numbers.
+fn doc_lines(f: &SrcFile) -> Vec<(u32, String)> {
+    let mut out: Vec<(u32, String)> = Vec::new();
+    match f.lang {
+        Lang::Rust => {
+            for (line, text) in lexer::lex(&f.text).comments {
+                out.push((line, text.to_string()));
+            }
+        }
+        Lang::Py => {
+            let lexed = pylex::lex_py(&f.text);
+            for (line, text) in &lexed.comments {
+                out.push((*line, (*text).to_string()));
+            }
+            if let Some(t) = lexed.toks.first() {
+                if t.kind == TokKind::Str {
+                    for (k, seg) in t.text.split('\n').enumerate() {
+                        out.push((
+                            t.line + k as u32,
+                            seg.to_string(),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out.sort_by_key(|(l, _)| *l);
+    out
+}
+
+/// A doc line is checked when it mentions "mirror", or names a test
+/// in backticks. Two checks: path-shaped words must exist (relative
+/// to the repo root or its `rust/` subtree, `::SYMBOL` suffixes
+/// must resolve inside the target file), and backticked snake_case
+/// idents on test lines must name a live `fn`/`def`.
+fn check_doc_line(
+    root: &Path,
+    rel: &str,
+    line: u32,
+    text: &str,
+    corpus: &[(Lang, String)],
+    raw: &mut Vec<Raw>,
+) {
+    let lower = text.to_ascii_lowercase();
+    let mentions_test = lower.contains("test") && text.contains('`');
+    if !lower.contains("mirror") && !mentions_test {
+        return;
+    }
+    for word in text.split_whitespace() {
+        let w = word
+            .trim_matches(|c: char| "`()\",;:'<>".contains(c))
+            .trim_end_matches(['.', ',']);
+        if w.contains('{') || w.contains('*') {
+            // Brace-glob shorthand, not a literal path.
+            continue;
+        }
+        if !PATH_ROOTS.iter().any(|p| w.starts_with(p)) {
+            continue;
+        }
+        let (path, sym) = match w.split_once("::") {
+            Some((p, s)) => (p, Some(s)),
+            None => (w, None),
+        };
+        let path = path.trim_end_matches('/');
+        let Some(target) = resolve_path(root, path) else {
+            raw.push(Raw {
+                rule: "M004",
+                file: rel.to_string(),
+                line,
+                message: format!(
+                    "stale mirror reference: `{path}` does not \
+                     exist"
+                ),
+            });
+            continue;
+        };
+        if let Some(sym) = sym {
+            let found = fs::read_to_string(&target)
+                .map(|t| t.contains(sym))
+                .unwrap_or(false);
+            if !found {
+                raw.push(Raw {
+                    rule: "M004",
+                    file: rel.to_string(),
+                    line,
+                    message: format!(
+                        "stale mirror reference: `{path}` has no \
+                         symbol `{sym}`"
+                    ),
+                });
+            }
+        }
+    }
+    if !mentions_test {
+        return;
+    }
+    for (k, part) in text.split('`').enumerate() {
+        if k % 2 == 0 || !snake_ident(part) {
+            continue;
+        }
+        let fn_pat = format!("fn {part}(");
+        let def_pat = format!("def {part}(");
+        let found = corpus.iter().any(|(lang, t)| match lang {
+            Lang::Rust => t.contains(&fn_pat),
+            Lang::Py => t.contains(&def_pat),
+        });
+        if !found {
+            raw.push(Raw {
+                rule: "M004",
+                file: rel.to_string(),
+                line,
+                message: format!(
+                    "stale mirror reference: no function or test \
+                     named `{part}`"
+                ),
+            });
+        }
+    }
+}
+
+fn resolve_path(root: &Path, rel: &str) -> Option<PathBuf> {
+    let a = root.join(rel);
+    if a.exists() {
+        return Some(a);
+    }
+    let b = root.join("rust").join(rel);
+    if b.exists() {
+        return Some(b);
+    }
+    None
+}
+
+/// Lowercase snake_case ident of useful length — the shape of every
+/// test and helper name the doc comments point at. Uppercase words
+/// (const names) and pathy strings are excluded on purpose.
+fn snake_ident(s: &str) -> bool {
+    s.len() >= 4
+        && s.contains('_')
+        && s.bytes().next().is_some_and(|c| {
+            c.is_ascii_lowercase() || c == b'_'
+        })
+        && s.bytes().all(|c| {
+            c.is_ascii_lowercase()
+                || c.is_ascii_digit()
+                || c == b'_'
+        })
+}
+
+/// Sources searched for `fn X(` / `def X(`: every loaded mirror
+/// file plus the integration-test trees.
+fn test_corpus(
+    root: &Path,
+    files: &BTreeMap<String, SrcFile>,
+) -> Vec<(Lang, String)> {
+    let mut out: Vec<(Lang, String)> = files
+        .values()
+        .map(|f| (f.lang, f.text.clone()))
+        .collect();
+    for dir in ["rust/tests", "tests"] {
+        let Ok(entries) = fs::read_dir(root.join(dir)) else {
+            continue;
+        };
+        let mut paths: Vec<PathBuf> = entries
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|e| e == "rs"))
+            .collect();
+        paths.sort();
+        for p in paths {
+            if let Ok(t) = fs::read_to_string(&p) {
+                out.push((Lang::Rust, t));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tail_strips_rust_and_python_paths() {
+        assert_eq!(tail("GPT3_175B"), "GPT3_175B");
+        assert_eq!(tail("spec::GPT3_175B"), "GPT3_175B");
+        assert_eq!(tail("dataclasses.replace"), "replace");
+    }
+
+    #[test]
+    fn snake_ident_shape() {
+        assert!(snake_ident("artifact_matches_rust_mirror"));
+        assert!(snake_ident("op_table_v2"));
+        assert!(!snake_ident("SCENARIOS"));
+        assert!(!snake_ident("abc"));
+        assert!(!snake_ident("cargo test"));
+        assert!(!snake_ident("tests/artifact.rs"));
+        assert!(!snake_ident("nounderscore"));
+    }
+
+    fn lit(v: f64, text: &str, line: u32) -> Lit {
+        Lit {
+            v,
+            text: text.to_string(),
+            file: "f.py".to_string(),
+            line,
+        }
+    }
+
+    #[test]
+    fn gqa_default_copies_n_heads_when_absent() {
+        let mut spec = Spec::new();
+        spec.insert("n_heads".to_string(), lit(96.0, "96", 4));
+        gqa_default(&mut spec);
+        assert_eq!(spec["n_kv_heads"].v, 96.0);
+        // Explicit values win.
+        let mut spec = Spec::new();
+        spec.insert("n_heads".to_string(), lit(64.0, "64", 4));
+        spec.insert("n_kv_heads".to_string(), lit(8.0, "8", 5));
+        gqa_default(&mut spec);
+        assert_eq!(spec["n_kv_heads"].v, 8.0);
+    }
+
+    #[test]
+    fn rust_spec_resolution_applies_base_then_overrides() {
+        let mut env: BTreeMap<String, Spec> = BTreeMap::new();
+        let mut base = Spec::new();
+        base.insert("batch".to_string(), lit(8.0, "8", 2));
+        base.insert("seq".to_string(), lit(2048.0, "2048", 3));
+        env.insert("BASE".to_string(), base);
+        let v = Value::Struct {
+            name: "WorkloadSpec".to_string(),
+            fields: vec![(
+                "batch".to_string(),
+                Value::Num {
+                    v: 1.0,
+                    text: "1".to_string(),
+                    line: 9,
+                },
+            )],
+            base: Some("BASE".to_string()),
+        };
+        let spec = resolve_rust_spec(&v, &env, "s.rs");
+        assert_eq!(spec["batch"].v, 1.0);
+        assert_eq!(spec["batch"].file, "s.rs");
+        assert_eq!(spec["batch"].line, 9);
+        assert_eq!(spec["seq"].v, 2048.0);
+    }
+
+    #[test]
+    fn py_replace_resolves_base_from_env() {
+        let mut env: BTreeMap<String, Spec> = BTreeMap::new();
+        let mut base = Spec::new();
+        base.insert("batch".to_string(), lit(8.0, "8", 2));
+        base.insert("n_heads".to_string(), lit(64.0, "64", 3));
+        base.insert("n_kv_heads".to_string(), lit(8.0, "8", 4));
+        env.insert("_LLAMA".to_string(), base);
+        let classes: BTreeMap<String, Spec> = BTreeMap::new();
+        let v = Value::Call {
+            name: "replace".to_string(),
+            args: vec![Value::Ref("_LLAMA".to_string())],
+            kwargs: vec![(
+                "batch".to_string(),
+                Value::Num {
+                    v: 64.0,
+                    text: "64".to_string(),
+                    line: 12,
+                },
+            )],
+        };
+        let spec = resolve_py_spec(&v, &env, &classes, "w.py");
+        assert_eq!(spec["batch"].v, 64.0);
+        assert_eq!(spec["batch"].line, 12);
+        assert_eq!(spec["n_kv_heads"].v, 8.0);
+    }
+}

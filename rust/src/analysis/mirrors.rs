@@ -1,0 +1,202 @@
+//! Checked-in mirror manifest: which Rust↔Python file pairs must
+//! stay in lockstep, and which named oracle literals are pinned
+//! across Rust files.
+//!
+//! Adding a pair is one entry here — the differ
+//! ([`crate::analysis::mirror`]) does the rest. Paths are relative
+//! to the repo root (the directory holding `rust/` and `python/`).
+
+/// Which symbols of a file participate in a mirror pair.
+#[derive(Debug, Clone, Copy)]
+pub enum Filter {
+    /// Every extracted symbol.
+    All,
+    /// Only the listed symbols.
+    Named(&'static [&'static str]),
+    /// Every symbol except those starting with one of the prefixes
+    /// (for files that also hold side-local definitions).
+    ExceptPrefixes(&'static [&'static str]),
+}
+
+impl Filter {
+    pub fn keeps(&self, name: &str) -> bool {
+        match self {
+            Filter::All => true,
+            Filter::Named(names) => names.contains(&name),
+            Filter::ExceptPrefixes(prefixes) => {
+                !prefixes.iter().any(|p| name.starts_with(p))
+            }
+        }
+    }
+}
+
+/// How the pair's symbol tables are compared.
+#[derive(Debug, Clone, Copy)]
+pub enum MirrorKind {
+    /// Flat named constants on both sides (M001/M002 per symbol).
+    Consts,
+    /// A scenario registry: Rust `[Scenario; N]` array vs Python
+    /// dict under `symbol`, compared entry-by-entry and
+    /// field-by-field after resolving named specs, struct bases,
+    /// dataclass defaults, and `replace()` overrides.
+    Registry { symbol: &'static str },
+}
+
+/// One declared mirror pair.
+#[derive(Debug, Clone, Copy)]
+pub struct MirrorPair {
+    /// Stable name, used in finding messages.
+    pub name: &'static str,
+    pub rust_path: &'static str,
+    pub rust_filter: Filter,
+    /// Extra Rust files whose consts feed named-spec resolution
+    /// (e.g. `GPT3_175B` lives in `spec.rs`, not the registry file).
+    pub rust_aux: &'static [&'static str],
+    pub python_path: &'static str,
+    pub python_filter: Filter,
+    pub kind: MirrorKind,
+}
+
+/// The production manifest: every contract the repo relies on.
+pub const PAIRS: [MirrorPair; 4] = [
+    MirrorPair {
+        name: "arch-constants",
+        rust_path: "rust/src/arch/constants.rs",
+        rust_filter: Filter::All,
+        rust_aux: &[],
+        python_path: "python/compile/constants.py",
+        // The python file also holds the design-encoding /
+        // op-table-layout block, mirrored structurally (field
+        // order, enum codes) rather than by named constant.
+        python_filter: Filter::ExceptPrefixes(&[
+            "IDX_", "COL_", "KIND_", "MAX_", "N_",
+        ]),
+        kind: MirrorKind::Consts,
+    },
+    MirrorPair {
+        name: "design-params",
+        rust_path: "rust/src/design/point.rs",
+        rust_filter: Filter::Named(&["N_PARAMS"]),
+        rust_aux: &[],
+        python_path: "python/compile/constants.py",
+        python_filter: Filter::Named(&["N_PARAMS"]),
+        kind: MirrorKind::Consts,
+    },
+    MirrorPair {
+        name: "op-table-bounds",
+        rust_path: "rust/src/workload/spec.rs",
+        rust_filter: Filter::Named(&["MAX_OPS", "N_PHASES"]),
+        rust_aux: &[],
+        python_path: "python/compile/constants.py",
+        python_filter: Filter::Named(&["MAX_OPS", "N_PHASES"]),
+        kind: MirrorKind::Consts,
+    },
+    MirrorPair {
+        name: "scenario-registry",
+        rust_path: "rust/src/workload/scenario.rs",
+        rust_filter: Filter::All,
+        rust_aux: &["rust/src/workload/spec.rs"],
+        python_path: "python/compile/workload.py",
+        python_filter: Filter::All,
+        kind: MirrorKind::Registry { symbol: "SCENARIOS" },
+    },
+];
+
+/// A named oracle literal duplicated across Rust files: every file
+/// must pin `field` to exactly `value` at least once (M003).
+#[derive(Debug, Clone, Copy)]
+pub struct OraclePin {
+    /// Stable name, used in finding messages.
+    pub name: &'static str,
+    /// The metric field the pin asserts on
+    /// (`(m.<field> - <value>).abs() / <value> < rtol` idiom).
+    pub field: &'static str,
+    /// Canonical literal, exactly as the python oracle prints it.
+    pub value: &'static str,
+    pub files: &'static [&'static str],
+}
+
+/// Files carrying the A100 reference pins.
+const A100_PIN_FILES: &[&str] = &[
+    "rust/src/sim/roofline.rs",
+    "rust/tests/artifact_vs_mirror.rs",
+];
+
+/// The A100 reference values printed by the python oracle
+/// (`python/tests`), duplicated in the roofline tests and the
+/// artifact integration tests.
+pub const PINS: [OraclePin; 6] = [
+    OraclePin {
+        name: "a100-ttft",
+        field: "ttft_ms",
+        value: "36.70556",
+        files: A100_PIN_FILES,
+    },
+    OraclePin {
+        name: "a100-tpot",
+        field: "tpot_ms",
+        value: "0.4424397",
+        files: A100_PIN_FILES,
+    },
+    OraclePin {
+        name: "a100-area",
+        field: "area_mm2",
+        value: "833.9728",
+        files: A100_PIN_FILES,
+    },
+    OraclePin {
+        name: "a100-prefill-energy",
+        field: "prefill_energy_mj",
+        value: "8116.046",
+        files: A100_PIN_FILES,
+    },
+    OraclePin {
+        name: "a100-decode-energy",
+        field: "energy_per_token_mj",
+        value: "41.352123",
+        files: A100_PIN_FILES,
+    },
+    OraclePin {
+        name: "a100-avg-power",
+        field: "avg_power_w",
+        value: "219.59186",
+        files: A100_PIN_FILES,
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filters_behave() {
+        assert!(Filter::All.keeps("ANYTHING"));
+        let named = Filter::Named(&["A", "B"]);
+        assert!(named.keeps("A"));
+        assert!(!named.keeps("C"));
+        let exc = Filter::ExceptPrefixes(&["IDX_", "N_"]);
+        assert!(exc.keeps("CLOCK_HZ"));
+        assert!(!exc.keeps("IDX_CORES"));
+        assert!(!exc.keeps("N_PARAMS"));
+    }
+
+    #[test]
+    fn manifest_names_are_unique() {
+        let mut names: Vec<&str> =
+            PAIRS.iter().map(|p| p.name).collect();
+        names.extend(PINS.iter().map(|p| p.name));
+        let total = names.len();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), total);
+    }
+
+    #[test]
+    fn pin_values_parse_as_finite_floats() {
+        for pin in &PINS {
+            let v: f64 = pin.value.parse().expect(pin.name);
+            assert!(v.is_finite() && v > 0.0, "{}", pin.name);
+            assert!(!pin.files.is_empty());
+        }
+    }
+}

@@ -23,8 +23,25 @@
 //! Pipeline: [`lexer`] strips comments/strings and tokenizes,
 //! [`scan`] matches rules with region tracking, [`waiver`] applies
 //! inline suppressions, [`report`] aggregates and serializes.
+//!
+//! A second engine shares that pipeline tail: the cross-language
+//! mirror-drift differ (`lumina lint --mirror`). [`pylex`] lexes
+//! Python with the same token types, [`extract`] parses both sides
+//! of every pair declared in [`mirrors`] into typed symbol tables,
+//! and [`mirror`] diffs them into M001-M004 findings:
+//!
+//! | rule | severity | invariant |
+//! |------|----------|-----------|
+//! | M001 | error    | mirrored constants carry equal literals |
+//! | M002 | error    | mirror symbols exist on both sides |
+//! | M003 | error    | duplicated oracle pins agree everywhere |
+//! | M004 | warning  | MIRROR doc pointers name live targets |
 
+pub mod extract;
 pub mod lexer;
+pub mod mirror;
+pub mod mirrors;
+pub mod pylex;
 pub mod report;
 pub mod rules;
 pub mod scan;
@@ -82,6 +99,7 @@ pub fn lint_tree(root: &Path) -> Result<Report> {
             .cmp(&(&b.file, b.line, &b.rule, &b.message))
     });
     Ok(Report {
+        engine: "determinism".to_string(),
         root: root.display().to_string().replace('\\', "/"),
         files: files.len(),
         findings,

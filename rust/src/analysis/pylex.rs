@@ -1,0 +1,276 @@
+//! Python lexer for the mirror-drift analyzer.
+//!
+//! Sibling of [`crate::analysis::lexer`], same idiom and token
+//! types: a small, total, dependency-free byte scanner producing
+//! [`Tok`] streams — not a full Python lexer. It keeps string
+//! literals (the extractor reads dict keys and docstrings from
+//! them), captures `#` comments for the waiver parser (the waiver
+//! syntax is comment-marker-agnostic, so
+//! `# lumina: allow(M002) reason` works unchanged), and tracks
+//! 1-based byte columns so the extractor can tell module level
+//! (column 1) from class and function bodies.
+//!
+//! Deliberate approximations, safe for extraction purposes:
+//! * numeric literals lex as identifier-like tokens, split at `.`
+//!   and sign chars exactly like the Rust lexer (`1.5` is three
+//!   tokens) — the extractor re-joins them;
+//! * f-string interpolation is not parsed; the content is kept as
+//!   one [`TokKind::Str`] token;
+//! * indentation is not tokenized — column tracking subsumes it.
+
+use crate::analysis::lexer::{Lexed, Tok, TokKind};
+
+fn ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+/// True for the letters Python allows as string-literal prefixes.
+fn prefix_byte(c: u8) -> bool {
+    matches!(
+        c,
+        b'r' | b'b' | b'f' | b'u' | b'R' | b'B' | b'F' | b'U'
+    )
+}
+
+/// Lex Python `src` into tokens (strings kept) + `#` comments.
+pub fn lex_py(src: &str) -> Lexed<'_> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut line_start = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            line_start = i;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        let col = (i - line_start + 1) as u32;
+        // Comment: capture for the waiver parser.
+        if c == b'#' {
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            out.comments.push((line, &src[start..i]));
+            continue;
+        }
+        // Line continuation: `\` at end of line joins lines without
+        // producing a token.
+        if c == b'\\' && i + 1 < n && b[i + 1] == b'\n' {
+            line += 1;
+            i += 2;
+            line_start = i;
+            continue;
+        }
+        // String literal, with optional 1-2 letter prefix (r, b, f,
+        // u and combinations, any case).
+        if c == b'"' || c == b'\'' || prefix_byte(c) {
+            let mut q = i;
+            while q < n && q < i + 2 && prefix_byte(b[q]) {
+                q += 1;
+            }
+            if q < n && (b[q] == b'"' || b[q] == b'\'') {
+                let quote = b[q];
+                let tok_line = line;
+                let triple = q + 2 < n
+                    && b[q + 1] == quote
+                    && b[q + 2] == quote;
+                let mut j = q + if triple { 3 } else { 1 };
+                let inner_start = j;
+                let mut inner_end = n;
+                while j < n {
+                    if b[j] == b'\\' {
+                        if j + 1 < n && b[j + 1] == b'\n' {
+                            line += 1;
+                            line_start = j + 2;
+                        }
+                        j += 2;
+                        continue;
+                    }
+                    if triple {
+                        if b[j] == quote
+                            && j + 2 < n
+                            && b[j + 1] == quote
+                            && b[j + 2] == quote
+                        {
+                            inner_end = j;
+                            j += 3;
+                            break;
+                        }
+                        if b[j] == b'\n' {
+                            line += 1;
+                            line_start = j + 1;
+                        }
+                    } else {
+                        if b[j] == quote {
+                            inner_end = j;
+                            j += 1;
+                            break;
+                        }
+                        if b[j] == b'\n' {
+                            // Unterminated single-quoted string:
+                            // stop at the newline.
+                            inner_end = j;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: &src[inner_start..inner_end.min(n)],
+                    line: tok_line,
+                    col,
+                });
+                i = j;
+                continue;
+            }
+            // Prefix letters not followed by a quote: fall through
+            // to the ident scanner (plain identifier like `replace`).
+        }
+        if ident_byte(c) {
+            let start = i;
+            while i < n && ident_byte(b[i]) {
+                i += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: &src[start..i],
+                line,
+                col,
+            });
+            continue;
+        }
+        // Single punctuation char (UTF-8 safe).
+        let len = utf8_len(c).min(n - i);
+        out.toks.push(Tok {
+            kind: TokKind::Punct,
+            text: &src[i..i + len],
+            line,
+            col,
+        });
+        i += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex_py(src)
+            .toks
+            .iter()
+            .map(|t| t.text.to_string())
+            .collect()
+    }
+
+    #[test]
+    fn idents_numbers_and_puncts() {
+        assert_eq!(
+            texts("X = 1.5e-3\n"),
+            vec!["X", "=", "1", ".", "5e", "-", "3"]
+        );
+    }
+
+    #[test]
+    fn comments_are_captured_not_tokenized() {
+        let l = lex_py("A = 1  # lumina: allow(M001) pinned\nB = 2");
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(l.comments[0].0, 1);
+        assert!(l.comments[0].1.contains("allow(M001)"));
+        let t: Vec<_> = l.toks.iter().map(|t| t.text).collect();
+        assert_eq!(t, vec!["A", "=", "1", "B", "=", "2"]);
+    }
+
+    #[test]
+    fn strings_kept_with_content_and_prefixes() {
+        let l = lex_py("s = \"abc\"\nt = r'd\\e'\nu = f\"x{y}\"");
+        let strs: Vec<_> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| (t.text, t.line))
+            .collect();
+        assert_eq!(
+            strs,
+            vec![("abc", 1), ("d\\e", 2), ("x{y}", 3)]
+        );
+    }
+
+    #[test]
+    fn triple_quoted_docstring_spans_lines() {
+        let src = "\"\"\"Doc line one.\n\nSee foo.\n\"\"\"\nX = 1\n";
+        let l = lex_py(src);
+        assert_eq!(l.toks[0].kind, TokKind::Str);
+        assert_eq!(l.toks[0].line, 1);
+        assert!(l.toks[0].text.contains("Doc line one."));
+        assert!(l.toks[0].text.contains("See foo."));
+        let x = &l.toks[1];
+        assert!(x.is_ident("X"));
+        assert_eq!(x.line, 5);
+        assert_eq!(x.col, 1);
+    }
+
+    #[test]
+    fn triple_quotes_containing_single_quotes() {
+        let src = "d = '''it's \"fine\"'''\nY = 2";
+        let l = lex_py(src);
+        let s = l
+            .toks
+            .iter()
+            .find(|t| t.kind == TokKind::Str)
+            .expect("str tok");
+        assert_eq!(s.text, "it's \"fine\"");
+        assert!(l.toks.iter().any(|t| t.is_ident("Y")));
+    }
+
+    #[test]
+    fn columns_distinguish_module_level_from_bodies() {
+        let src = "A = 1\nclass C:\n    b: int = 2\n";
+        let l = lex_py(src);
+        let a = l.toks.iter().find(|t| t.is_ident("A")).expect("A");
+        let bfield =
+            l.toks.iter().find(|t| t.is_ident("b")).expect("b");
+        assert_eq!(a.col, 1);
+        assert_eq!(bfield.col, 5);
+    }
+
+    #[test]
+    fn escaped_quote_does_not_close_string() {
+        let l = lex_py("s = 'a\\'b'\nZ = 1");
+        let s = l
+            .toks
+            .iter()
+            .find(|t| t.kind == TokKind::Str)
+            .expect("str tok");
+        assert_eq!(s.text, "a\\'b");
+        assert!(l.toks.iter().any(|t| t.is_ident("Z")));
+    }
+
+    #[test]
+    fn line_continuation_joins_lines() {
+        let l = lex_py("A = 1 + \\\n    2\nB = 3");
+        let bt = l.toks.iter().find(|t| t.is_ident("B")).expect("B");
+        assert_eq!(bt.line, 3);
+        assert_eq!(bt.col, 1);
+    }
+}

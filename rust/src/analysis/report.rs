@@ -12,10 +12,14 @@ use crate::util::json::{obj, Json};
 /// The outcome of linting a tree.
 #[derive(Debug)]
 pub struct Report {
+    /// Which analysis produced the findings: `"determinism"` (the
+    /// single-file rule scanner) or `"mirror"` (the cross-language
+    /// mirror-drift differ).
+    pub engine: String,
     /// Lint root as given (forward slashes). Tests overwrite this
     /// before golden comparison so the file is machine-independent.
     pub root: String,
-    /// Number of `.rs` files scanned.
+    /// Number of files scanned.
     pub files: usize,
     /// All findings, waived included, sorted by (file, line, rule).
     pub findings: Vec<Finding>,
@@ -118,10 +122,11 @@ impl Report {
                     ("warnings", Json::Num(c.warnings as f64)),
                 ]),
             ),
+            ("engine", Json::Str(self.engine.clone())),
             ("files", Json::Num(self.files as f64)),
             ("findings", Json::Arr(findings)),
             ("root", Json::Str(self.root.clone())),
-            ("version", Json::Num(1.0)),
+            ("version", Json::Num(2.0)),
         ])
     }
 }
@@ -153,6 +158,7 @@ mod tests {
     #[test]
     fn counts_and_gate() {
         let r = Report {
+            engine: "determinism".to_string(),
             root: "src".to_string(),
             files: 2,
             findings: vec![
@@ -170,6 +176,7 @@ mod tests {
         assert!(r.failed(true));
 
         let warn_only = Report {
+            engine: "determinism".to_string(),
             root: "src".to_string(),
             files: 1,
             findings: vec![finding(
@@ -185,6 +192,7 @@ mod tests {
     #[test]
     fn text_hides_waived_but_summary_counts_them() {
         let r = Report {
+            engine: "determinism".to_string(),
             root: "src".to_string(),
             files: 1,
             findings: vec![
@@ -201,6 +209,7 @@ mod tests {
     #[test]
     fn json_round_trips_through_the_parser() {
         let r = Report {
+            engine: "mirror".to_string(),
             root: "src".to_string(),
             files: 1,
             findings: vec![finding(

@@ -35,7 +35,7 @@ pub struct Rule {
 }
 
 /// Every rule the scanner can emit, in id order.
-pub const RULES: [Rule; 7] = [
+pub const RULES: [Rule; 11] = [
     Rule {
         id: "D001",
         severity: Severity::Error,
@@ -76,6 +76,43 @@ pub const RULES: [Rule; 7] = [
         rationale: "float addition is not associative; summing a \
                     hash container's values in iteration order \
                     yields run-dependent bits.",
+    },
+    Rule {
+        id: "M001",
+        severity: Severity::Error,
+        title: "mirrored constant value drift",
+        rationale: "a symbol declared on both sides of a mirror \
+                    pair carries different literals; the Rust \
+                    simulators and the Python kernels would \
+                    silently disagree. The finding names the exact \
+                    declaration site on both sides.",
+    },
+    Rule {
+        id: "M002",
+        severity: Severity::Error,
+        title: "one-sided mirror symbol",
+        rationale: "a symbol (or registry entry) exists in only one \
+                    half of a declared mirror pair; the other side \
+                    either lost it or never gained it — both break \
+                    the cross-language contract.",
+    },
+    Rule {
+        id: "M003",
+        severity: Severity::Error,
+        title: "pinned-oracle divergence",
+        rationale: "the same named oracle literal (A100 reference \
+                    pins) is duplicated across Rust files; if one \
+                    copy drifts, tests pin different physics than \
+                    the docs claim.",
+    },
+    Rule {
+        id: "M004",
+        severity: Severity::Warning,
+        title: "stale mirror declaration",
+        rationale: "a MIRROR-of doc comment names a path, symbol, \
+                    or test that no longer exists; stale pointers \
+                    send maintainers to the wrong place exactly \
+                    when drift happens.",
     },
     Rule {
         id: "P001",

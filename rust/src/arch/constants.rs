@@ -1,9 +1,11 @@
 //! Performance/area model constants.
 //!
 //! MIRROR of `python/compile/constants.py` — keep in lockstep. The
-//! integration test `tests/artifact_vs_mirror.rs` cross-checks the lowered
-//! artifact against `sim::roofline` (which consumes these constants) on
-//! random designs, so any drift fails `cargo test`.
+//! integration test `artifact_matches_rust_mirror_on_random_designs`
+//! (`tests/artifact_vs_mirror.rs`) cross-checks the lowered artifact
+//! against `sim::roofline` (which consumes these constants) on random
+//! designs, so any drift fails `cargo test`; `lumina lint --mirror`
+//! proves the literals equal statically (pair `arch-constants`).
 //!
 //! All math on both sides is float32; units are seconds / bytes / FLOPs /
 //! mm^2, frequencies in Hz, bandwidths in B/s.

@@ -1,8 +1,9 @@
 //! Design points and parameters.
 //!
 //! The encoding order (and the meaning of each lane of the f32 design
-//! vector) is shared with `python/compile/constants.py` — the artifact and
-//! every simulator consume the same layout.
+//! vector) is a MIRROR of `python/compile/constants.py` — the artifact
+//! and every simulator consume the same layout. Pair `design-params`
+//! in `lumina lint --mirror` checks `N_PARAMS` statically.
 
 use std::fmt;
 

@@ -10,6 +10,7 @@
 //!   workloads   list the registered workload scenarios
 //!   bench       check/update/show the perf-bench regression ratchet
 //!   lint        determinism static-analysis pass over the sources
+//!   mirror      cross-language mirror-drift check (lint --mirror)
 //!
 //! All exploration traffic flows through the AOT roofline artifact via
 //! PJRT when `artifacts/` exists (`make artifacts`); `--evaluator`
@@ -74,6 +75,13 @@ USAGE: lumina <command> [--options]
                              findings JSON (default
                              out/lint_findings.json); --deny-warnings
                              fails on any unwaivered finding (CI mode)
+       [--mirror]            run the cross-language mirror-drift
+                             differ instead: checks every declared
+                             Rust<->Python mirror pair and oracle pin
+                             (M001-M004); --root is the repo root,
+                             findings default to
+                             out/mirror_findings.json
+  mirror [...]               alias for `lint --mirror`
 
 Objective modes: latency-area (default) optimizes the 3-D (TTFT, TPOT,
 area) vector; ppa adds energy/token as a 4th minimized objective, arms
@@ -135,7 +143,8 @@ fn main() -> lumina::Result<()> {
             Ok(())
         }
         "bench" => cmd_bench(&args),
-        "lint" => cmd_lint(&args),
+        "lint" => cmd_lint(&args, args.flag("mirror")),
+        "mirror" => cmd_lint(&args, true),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -611,29 +620,40 @@ fn cmd_bench(args: &Args) -> lumina::Result<()> {
     }
 }
 
-/// `lumina lint` — the determinism static-analysis pass over the
-/// crate's own sources (see `src/analysis/`). Always writes the
-/// machine-readable findings JSON (CI uploads it as an artifact);
-/// `--deny-warnings` is the CI gate: any unwaivered finding fails.
-fn cmd_lint(args: &Args) -> lumina::Result<()> {
-    let root = args
-        .opt("root")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(default_lint_root);
+/// `lumina lint` — the static-analysis pass over the crate's own
+/// sources (see `src/analysis/`). Two engines share the pipeline
+/// tail: the default determinism rule scanner, and (`--mirror` /
+/// `lumina mirror`) the cross-language mirror-drift differ, whose
+/// root is the repo root rather than a source tree. Always writes
+/// the machine-readable findings JSON (CI uploads it as an
+/// artifact); `--deny-warnings` is the CI gate: any unwaivered
+/// finding fails.
+fn cmd_lint(args: &Args, mirror: bool) -> lumina::Result<()> {
+    let root = match args.opt("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None if mirror => default_mirror_root(),
+        None => default_lint_root(),
+    };
     if !root.is_dir() {
         lumina::bail!(
             "lint root {} is not a directory (pass --root <dir>)",
             root.display()
         );
     }
-    let report = analysis::lint_tree(&root)?;
+    let report = if mirror {
+        analysis::mirror::check_repo(&root)?
+    } else {
+        analysis::lint_tree(&root)?
+    };
 
-    let out_path = args
-        .opt("out")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(|| {
-            std::path::PathBuf::from("out/lint_findings.json")
-        });
+    let out_path = args.path_or(
+        "out",
+        if mirror {
+            "out/mirror_findings.json"
+        } else {
+            "out/lint_findings.json"
+        },
+    );
     if let Some(dir) = out_path.parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir).map_err(|e| {
@@ -679,6 +699,17 @@ fn default_lint_root() -> std::path::PathBuf {
         return nested;
     }
     std::path::PathBuf::from("src")
+}
+
+/// The mirror root when `--root` is absent: the manifest paths are
+/// repo-root-relative (`rust/...`, `python/...`), so `.` when
+/// invoked from the repo root, `..` when invoked from `rust/`.
+fn default_mirror_root() -> std::path::PathBuf {
+    let here = std::path::Path::new("rust/src");
+    if here.is_dir() && std::path::Path::new("python").is_dir() {
+        return std::path::PathBuf::from(".");
+    }
+    std::path::PathBuf::from("..")
 }
 
 fn cmd_report(args: &Args) -> lumina::Result<()> {

@@ -68,6 +68,15 @@ impl Args {
         self.opt(key).unwrap_or(default).to_string()
     }
 
+    /// `--key <path>` with a default, as a `PathBuf`.
+    pub fn path_or(
+        &self,
+        key: &str,
+        default: &str,
+    ) -> std::path::PathBuf {
+        std::path::PathBuf::from(self.str_or(key, default))
+    }
+
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.opt(key) {
             None => Ok(default),
@@ -132,6 +141,19 @@ mod tests {
         let a = parse("x --n abc");
         assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
         assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn path_or_builds_pathbufs() {
+        let a = parse("lint --out custom/findings.json");
+        assert_eq!(
+            a.path_or("out", "out/lint_findings.json"),
+            std::path::PathBuf::from("custom/findings.json")
+        );
+        assert_eq!(
+            a.path_or("root", "."),
+            std::path::PathBuf::from(".")
+        );
     }
 
     #[test]

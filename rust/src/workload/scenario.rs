@@ -7,6 +7,10 @@
 //! prefill and decode flip between compute-, bandwidth- and
 //! latency-bound across the set, which is what makes multi-scenario DSE
 //! meaningfully different from the single hardwired GPT-3 run.
+//!
+//! MIRROR of `python/compile/workload.py::SCENARIOS` — same names,
+//! same resolved specs. Pair `scenario-registry` in
+//! `lumina lint --mirror` proves the registries equal statically.
 
 use super::spec::{WorkloadSpec, GPT3_175B, GPT3_TINY};
 

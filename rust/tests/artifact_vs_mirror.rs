@@ -152,14 +152,20 @@ print(json.dumps(out))\n";
         Ok(o) if o.status.success() => o,
         Ok(o) => {
             eprintln!(
-                "skipping python-mirror cross-check (python failed): {}",
-                String::from_utf8_lossy(&o.stderr)
+                "SKIPPED: python3/numpy missing — python-mirror \
+                 cross-check not run (python exited nonzero: {}); \
+                 the static `lumina lint --mirror` gate still covers \
+                 registry drift",
+                String::from_utf8_lossy(&o.stderr).trim()
             );
             return;
         }
         Err(e) => {
             eprintln!(
-                "skipping python-mirror cross-check (no python3): {e}"
+                "SKIPPED: python3/numpy missing — python-mirror \
+                 cross-check not run (python3 unavailable: {e}); \
+                 the static `lumina lint --mirror` gate still covers \
+                 registry drift"
             );
             return;
         }

@@ -1,0 +1,5 @@
+"""MIRROR of rust/src/consts_clean.rs (pair `consts-clean`)."""
+
+CLEAN_A = 0.25
+CLEAN_B = 4.0e-6
+CLEAN_NAME = "lockstep"

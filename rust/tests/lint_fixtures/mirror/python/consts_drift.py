@@ -1,0 +1,5 @@
+"""MIRROR of rust/src/consts_drift.rs (pair `consts-drift`)."""
+
+ALPHA = 1.5
+BETA = 2.75
+GAMMA = "slow"

@@ -1,0 +1,4 @@
+"""MIRROR of rust/src/consts_oneside.rs (pair `consts-oneside`)."""
+
+PY_ONLY = 5.0
+SHARED = 4.0

@@ -1,0 +1,5 @@
+"""MIRROR of rust/src/consts_waived.rs (pair `consts-waived`)."""
+
+WAIVED_DRIFT = 6.5
+# lumina: allow(M002) one-sided on purpose
+PY_EXTRA = 8.0

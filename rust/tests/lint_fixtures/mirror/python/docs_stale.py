@@ -1,0 +1,3 @@
+"""MIRROR of rust/src/docs_stale.rs (pair `docs-stale`)."""
+
+DOC_A = 1.0

@@ -1,0 +1,17 @@
+"""MIRROR of rust/src/registry.rs (pair `fixture-registry`)."""
+
+from dataclasses import replace
+
+
+class FxSpec:
+    d_model = 1024
+    n_heads = 16
+
+
+_BASE = FxSpec()
+
+SCENARIOS = {
+    "alpha": _BASE,
+    "beta": replace(_BASE, n_heads=48),
+    "py-only": _BASE,
+}

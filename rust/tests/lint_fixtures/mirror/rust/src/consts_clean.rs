@@ -1,0 +1,5 @@
+// MIRROR of python/consts_clean.py (pair `consts-clean`).
+
+pub const CLEAN_A: f32 = 0.25;
+pub const CLEAN_B: f32 = 4.0e-6;
+pub const CLEAN_NAME: &str = "lockstep";

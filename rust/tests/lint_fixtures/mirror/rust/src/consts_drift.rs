@@ -1,0 +1,5 @@
+// MIRROR of python/consts_drift.py (pair `consts-drift`).
+
+pub const ALPHA: f32 = 1.5;
+pub const BETA: f32 = 2.5;
+pub const GAMMA: &str = "fast";

@@ -1,0 +1,4 @@
+// MIRROR of python/consts_oneside.py (pair `consts-oneside`).
+
+pub const RUST_ONLY: f32 = 3.0;
+pub const SHARED: f32 = 4.0;

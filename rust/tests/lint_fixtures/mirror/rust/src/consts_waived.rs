@@ -1,0 +1,4 @@
+// MIRROR of python/consts_waived.py (pair `consts-waived`).
+
+// lumina: allow(M001) intentional fixture drift
+pub const WAIVED_DRIFT: f32 = 6.0;

@@ -1,0 +1,12 @@
+// MIRROR of python/docs_stale.py (pair `docs-stale`).
+// mirror note: rust/src/gone.rs tracks this file.
+// mirror note: rust/src/consts_clean.rs::MISSING_SYM too.
+// lumina: allow(M004) waived stale reference demo
+// mirror note: rust/src/also_gone.rs is waived above.
+// Covered by the mirror test `real_helper_fn`; test `missing_test_fn`.
+
+pub const DOC_A: f32 = 1.0;
+
+pub fn real_helper_fn() -> f32 {
+    DOC_A
+}

@@ -1,0 +1,3 @@
+// Plain constants without any marker comment.
+
+pub const NOMARK_A: f32 = 9.0;

@@ -1,0 +1,5 @@
+// Fixture oracle pin site: ttft stays at the canonical value.
+
+pub fn check_a(ttft_ms: f32) -> f32 {
+    (ttft_ms - 12.5).abs()
+}

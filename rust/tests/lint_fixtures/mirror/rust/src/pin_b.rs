@@ -1,0 +1,5 @@
+// Fixture oracle pin site: intentionally diverged copy.
+
+pub fn check_b(ttft_ms: f32) -> f32 {
+    (ttft_ms - 13.0).abs()
+}

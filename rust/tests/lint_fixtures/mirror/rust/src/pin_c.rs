@@ -1,0 +1,6 @@
+// lumina: allow(M003) pin intentionally absent in this fixture
+// Fixture oracle pin site: no occurrence at all.
+
+pub fn check_c(x: f32) -> f32 {
+    x * 2.0
+}

@@ -1,0 +1,29 @@
+// MIRROR of python/registry.py (pair `fixture-registry`).
+
+use super::regspec::{FxSpec, BASE};
+
+pub struct FxScenario {
+    pub name: &'static str,
+    pub spec: FxSpec,
+}
+
+pub const SCENARIOS: [FxScenario; 3] = [
+    FxScenario {
+        name: "alpha",
+        spec: FxSpec {
+            d_ffn: 4096,
+            ..BASE
+        },
+    },
+    FxScenario {
+        name: "beta",
+        spec: FxSpec {
+            n_heads: 32,
+            ..BASE
+        },
+    },
+    FxScenario {
+        name: "rust-only",
+        spec: BASE,
+    },
+];

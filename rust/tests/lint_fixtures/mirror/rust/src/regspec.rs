@@ -1,0 +1,15 @@
+// Fixture aux module: base spec consumed by the registry fixture.
+
+pub struct FxSpec {
+    pub d_model: u32,
+    pub n_heads: u32,
+    pub n_kv_heads: u32,
+    pub d_ffn: u32,
+}
+
+pub const BASE: FxSpec = FxSpec {
+    d_model: 1024,
+    n_heads: 16,
+    n_kv_heads: 16,
+    d_ffn: 0,
+};

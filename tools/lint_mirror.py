@@ -1,0 +1,1824 @@
+#!/usr/bin/env python3
+"""Line-exact Python mirror of the Rust `lumina lint` engines.
+
+Ports `rust/src/analysis/` (lexer, pylex, waiver, scan, extract,
+mirror, report) plus the `util::json` pretty printer, so CI can
+cross-check the two implementations: both scan the same trees and
+must emit byte-identical findings JSON. Any divergence is itself a
+mirror bug.
+
+Stdlib only. Usage mirrors `lumina lint`:
+
+    python3 tools/lint_mirror.py [--mirror] [--root DIR] [--out F]
+        [--format text|json] [--deny-warnings]
+        [--manifest production|fixture] [--v1]
+
+`--v1` emits the legacy report layout (no `engine` key, version 1)
+to compare against goldens generated before the mirror engine
+landed.
+"""
+
+import os
+import sys
+from collections import namedtuple
+
+# --------------------------------------------------------------- lexer
+# Port of rust/src/analysis/lexer.rs. Tokens carry 1-based lines and
+# 1-based *byte* columns; the scanner walks raw bytes exactly like
+# the Rust one so every boundary decision matches.
+
+IDENT = "Ident"
+PUNCT = "Punct"
+STR = "Str"
+
+Tok = namedtuple("Tok", ["kind", "text", "line", "col"])
+
+WS = (0x20, 0x09, 0x0D, 0x0C)  # u8::is_ascii_whitespace minus \n
+
+
+def _ident_byte(c):
+    return (0x30 <= c <= 0x39) or (0x41 <= c <= 0x5A) \
+        or (0x61 <= c <= 0x7A) or c == 0x5F
+
+
+def _utf8_len(first):
+    if first <= 0x7F:
+        return 1
+    if 0xC0 <= first <= 0xDF:
+        return 2
+    if 0xE0 <= first <= 0xEF:
+        return 3
+    return 4
+
+
+def _dec(b):
+    return b.decode("utf-8", "replace")
+
+
+def lex(src):
+    return _lex_impl(src, False)
+
+
+def lex_full(src):
+    return _lex_impl(src, True)
+
+
+def _lex_impl(src, keep_strings):
+    b = src.encode("utf-8", "surrogateescape")
+    n = len(b)
+    toks = []
+    comments = []
+    i = 0
+    line = 1
+    line_start = 0
+    while i < n:
+        c = b[i]
+        if c == 0x0A:
+            line += 1
+            i += 1
+            line_start = i
+            continue
+        if c in WS:
+            i += 1
+            continue
+        col = i - line_start + 1
+        # Line comment: capture for the waiver parser.
+        if c == 0x2F and i + 1 < n and b[i + 1] == 0x2F:
+            start = i
+            while i < n and b[i] != 0x0A:
+                i += 1
+            comments.append((line, _dec(b[start:i])))
+            continue
+        # Block comment (nested, like Rust's).
+        if c == 0x2F and i + 1 < n and b[i + 1] == 0x2A:
+            depth = 1
+            i += 2
+            while i < n and depth > 0:
+                if b[i] == 0x2F and i + 1 < n and b[i + 1] == 0x2A:
+                    depth += 1
+                    i += 2
+                elif b[i] == 0x2A and i + 1 < n and b[i + 1] == 0x2F:
+                    depth -= 1
+                    i += 2
+                else:
+                    if b[i] == 0x0A:
+                        line += 1
+                        line_start = i + 1
+                    i += 1
+            continue
+        # Raw string r"..." / r#"..."# and br"..." / br#"..."#.
+        if c == 0x72 or (c == 0x62 and i + 1 < n and b[i + 1] == 0x72):
+            j = i + 1 + (1 if c == 0x62 else 0)
+            hashes = 0
+            while j < n and b[j] == 0x23:
+                hashes += 1
+                j += 1
+            if j < n and b[j] == 0x22:
+                tok_line = line
+                j += 1
+                inner_start = j
+                inner_end = n
+                while j < n:
+                    if b[j] == 0x22 and j + 1 + hashes <= n \
+                            and all(h == 0x23
+                                    for h in b[j + 1:j + 1 + hashes]):
+                        inner_end = j
+                        j += 1 + hashes
+                        break
+                    if b[j] == 0x0A:
+                        line += 1
+                        line_start = j + 1
+                    j += 1
+                if keep_strings:
+                    toks.append(Tok(STR, _dec(b[inner_start:inner_end]),
+                                    tok_line, col))
+                i = j
+                continue
+            # Not a raw string: fall through to the ident scanner.
+        # Plain string literal.
+        if c == 0x22:
+            tok_line = line
+            i += 1
+            inner_start = i
+            inner_end = n
+            while i < n:
+                ch = b[i]
+                if ch == 0x5C:
+                    if i + 1 < n and b[i + 1] == 0x0A:
+                        line += 1
+                        line_start = i + 2
+                    i += 2
+                elif ch == 0x22:
+                    inner_end = i
+                    i += 1
+                    break
+                elif ch == 0x0A:
+                    line += 1
+                    i += 1
+                    line_start = i
+                else:
+                    i += 1
+            if keep_strings:
+                toks.append(Tok(STR, _dec(b[inner_start:min(inner_end, n)]),
+                                tok_line, col))
+            continue
+        # Char literal vs lifetime tick.
+        if c == 0x27:
+            if i + 1 < n and b[i + 1] == 0x5C:
+                j = i + 2
+                while j < n and b[j] != 0x27:
+                    j += 1
+                i = min(j + 1, n)
+                continue
+            if i + 1 < n and b[i + 1] != 0x27:
+                ln = _utf8_len(b[i + 1])
+                if i + 1 + ln < n and b[i + 1 + ln] == 0x27:
+                    i += ln + 2
+                    continue
+            i += 1
+            continue
+        if _ident_byte(c):
+            start = i
+            while i < n and _ident_byte(b[i]):
+                i += 1
+            toks.append(Tok(IDENT, _dec(b[start:i]), line, col))
+            continue
+        if c == 0x3A and i + 1 < n and b[i + 1] == 0x3A:
+            toks.append(Tok(PUNCT, "::", line, col))
+            i += 2
+            continue
+        ln = min(_utf8_len(c), n - i)
+        toks.append(Tok(PUNCT, _dec(b[i:i + ln]), line, col))
+        i += ln
+    return toks, comments
+
+
+# --------------------------------------------------------------- pylex
+# Port of rust/src/analysis/pylex.rs.
+
+_PY_PREFIX = frozenset(b"rbfuRBFU")
+
+
+def lex_py(src):
+    b = src.encode("utf-8", "surrogateescape")
+    n = len(b)
+    toks = []
+    comments = []
+    i = 0
+    line = 1
+    line_start = 0
+    while i < n:
+        c = b[i]
+        if c == 0x0A:
+            line += 1
+            i += 1
+            line_start = i
+            continue
+        if c in WS:
+            i += 1
+            continue
+        col = i - line_start + 1
+        if c == 0x23:  # '#'
+            start = i
+            while i < n and b[i] != 0x0A:
+                i += 1
+            comments.append((line, _dec(b[start:i])))
+            continue
+        if c == 0x5C and i + 1 < n and b[i + 1] == 0x0A:
+            line += 1
+            i += 2
+            line_start = i
+            continue
+        if c in (0x22, 0x27) or c in _PY_PREFIX:
+            q = i
+            while q < n and q < i + 2 and b[q] in _PY_PREFIX:
+                q += 1
+            if q < n and b[q] in (0x22, 0x27):
+                quote = b[q]
+                tok_line = line
+                triple = q + 2 < n and b[q + 1] == quote \
+                    and b[q + 2] == quote
+                j = q + (3 if triple else 1)
+                inner_start = j
+                inner_end = n
+                while j < n:
+                    if b[j] == 0x5C:
+                        if j + 1 < n and b[j + 1] == 0x0A:
+                            line += 1
+                            line_start = j + 2
+                        j += 2
+                        continue
+                    if triple:
+                        if b[j] == quote and j + 2 < n \
+                                and b[j + 1] == quote \
+                                and b[j + 2] == quote:
+                            inner_end = j
+                            j += 3
+                            break
+                        if b[j] == 0x0A:
+                            line += 1
+                            line_start = j + 1
+                    else:
+                        if b[j] == quote:
+                            inner_end = j
+                            j += 1
+                            break
+                        if b[j] == 0x0A:
+                            # Unterminated: stop at the newline.
+                            inner_end = j
+                            break
+                    j += 1
+                toks.append(Tok(STR, _dec(b[inner_start:min(inner_end, n)]),
+                                tok_line, col))
+                i = j
+                continue
+        if _ident_byte(c):
+            start = i
+            while i < n and _ident_byte(b[i]):
+                i += 1
+            toks.append(Tok(IDENT, _dec(b[start:i]), line, col))
+            continue
+        ln = min(_utf8_len(c), n - i)
+        toks.append(Tok(PUNCT, _dec(b[i:i + ln]), line, col))
+        i += ln
+    return toks, comments
+
+
+# --------------------------------------------------------------- rules
+# Port of rust/src/analysis/rules.rs.
+
+SEVERITY = {
+    "D001": "error",
+    "D002": "warning",
+    "D003": "error",
+    "D004": "error",
+    "F001": "error",
+    "M001": "error",
+    "M002": "error",
+    "M003": "error",
+    "M004": "warning",
+    "P001": "warning",
+    "W001": "warning",
+}
+
+ORDER_METHODS = ("iter", "iter_mut", "into_iter", "keys", "values",
+                 "values_mut", "drain", "retain")
+RNG_METHODS = ("next_u32", "next_u64", "f64", "range_usize", "choose",
+               "chance", "normal", "shuffle", "sample_indices", "fork")
+ENTROPY_IDENTS = ("thread_rng", "ThreadRng", "from_entropy", "OsRng",
+                  "getrandom")
+DET_MODULES = ("eval", "dse", "pareto", "sim", "baselines")
+
+
+def severity_of(rule):
+    return SEVERITY.get(rule, "error")
+
+
+# -------------------------------------------------------------- waiver
+# Port of rust/src/analysis/waiver.rs.
+
+Waiver = namedtuple("Waiver", ["rule", "line", "reason"])
+
+
+def parse_waivers(comments):
+    waivers = []
+    w001 = []
+    for line, text in comments:
+        pos = text.find("lumina:")
+        if pos < 0:
+            continue
+        rest = text[pos + len("lumina:"):].lstrip()
+        if not rest.startswith("allow("):
+            continue
+        body = rest[len("allow("):]
+        close = body.find(")")
+        if close < 0:
+            w001.append((line, "waiver is missing its closing `)`"))
+            continue
+        ids = [s.strip() for s in body[:close].split(",")]
+        ids = [s for s in ids if s]
+        reason = body[close + 1:].strip()
+        if not ids:
+            w001.append((line, "waiver lists no rule id"))
+            continue
+        for rid in ids:
+            if rid == "W001":
+                w001.append((line, "waiver may not target W001"))
+                continue
+            if rid not in SEVERITY:
+                w001.append(
+                    (line, "waiver names unknown rule `%s`" % rid))
+                continue
+            if not reason:
+                w001.append(
+                    (line, "waiver for %s gives no reason" % rid))
+                continue
+            waivers.append(Waiver(rid, line, reason))
+    return waivers, w001
+
+
+# ---------------------------------------------------------------- scan
+# Port of rust/src/analysis/scan.rs.
+
+Finding = namedtuple(
+    "Finding",
+    ["rule", "severity", "file", "line", "message", "waived",
+     "waiver_reason"])
+
+
+def _relkey(rel):
+    r = rel[len("src/"):] if rel.startswith("src/") else rel
+    return r[len("rust/src/"):] if r.startswith("rust/src/") else r
+
+
+def is_det_module(rel):
+    key = _relkey(rel)
+    top = key.split("/", 1)[0]
+    return top in DET_MODULES
+
+
+def d002_allowed(rel):
+    key = _relkey(rel)
+    return key == "util/bench.rs" or key.startswith("bench/") \
+        or "benches/" in key
+
+
+def p001_exempt(rel):
+    key = _relkey(rel)
+    base = key.rsplit("/", 1)[-1]
+    return base == "main.rs" or base == "golden.rs" \
+        or "tests/" in key or "benches/" in key
+
+
+def _punct(t, s):
+    return t.kind == PUNCT and t.text == s
+
+
+def _is_ident(t, s):
+    return t.kind == IDENT and t.text == s
+
+
+def scan_file(relpath, src):
+    toks, comments = lex(src)
+    n = len(toks)
+    raw = []  # (rule, line, message)
+
+    # Pre-pass: idents bound to a hash-container type.
+    hash_idents = []
+    for k in range(n):
+        t = toks[k]
+        if t.kind != IDENT or t.text not in ("HashMap", "HashSet"):
+            continue
+        j = k - 1
+        while j >= 1 and _punct(toks[j], "::"):
+            j -= 1
+            if j >= 0 and toks[j].kind == IDENT:
+                j -= 1
+        if j >= 0 and (_punct(toks[j], ":") or _punct(toks[j], "=")):
+            j -= 1
+            if j >= 0:
+                p = toks[j]
+                if p.kind == IDENT and p.text != "mut" \
+                        and p.text not in hash_idents:
+                    hash_idents.append(p.text)
+
+    depth = 0
+    test_regions = []
+    impl_dse = []
+    tell_body = []
+    pending_test = False
+    pending_impl_dse = False
+    pending_fn_tell = False
+
+    i = 0
+    while i < n:
+        t = toks[i]
+        in_test = bool(test_regions)
+
+        if _punct(t, "{"):
+            depth += 1
+            if pending_test:
+                test_regions.append(depth)
+                pending_test = False
+            if pending_impl_dse:
+                impl_dse.append(depth)
+                pending_impl_dse = False
+            if pending_fn_tell:
+                tell_body.append(depth)
+                pending_fn_tell = False
+            i += 1
+            continue
+        if _punct(t, "}"):
+            if test_regions and test_regions[-1] == depth:
+                test_regions.pop()
+            if impl_dse and impl_dse[-1] == depth:
+                impl_dse.pop()
+            if tell_body and tell_body[-1] == depth:
+                tell_body.pop()
+            depth = max(depth - 1, 0)
+            i += 1
+            continue
+        if _punct(t, ";"):
+            pending_test = False
+            pending_impl_dse = False
+            pending_fn_tell = False
+            i += 1
+            continue
+
+        # Attribute `#[...]`: a `test` token (unless negated) marks
+        # the next body as a test region.
+        if _punct(t, "#") and i + 1 < n and _punct(toks[i + 1], "["):
+            j = i + 2
+            d = 1
+            has_test = False
+            has_not = False
+            while j < n and d > 0:
+                a = toks[j]
+                if _punct(a, "["):
+                    d += 1
+                elif _punct(a, "]"):
+                    d -= 1
+                    if d == 0:
+                        break
+                elif _is_ident(a, "test"):
+                    has_test = True
+                elif _is_ident(a, "not"):
+                    has_not = True
+                j += 1
+            if has_test and not has_not:
+                pending_test = True
+            i = j + 1
+            continue
+
+        # `impl ... DseSession ... {` opens a D004-tracked impl.
+        if _is_ident(t, "impl") and not in_test:
+            j = i + 1
+            seen_dse = False
+            while j < n and not _punct(toks[j], "{") \
+                    and not _punct(toks[j], ";"):
+                if _is_ident(toks[j], "DseSession"):
+                    seen_dse = True
+                j += 1
+            if seen_dse and j < n and _punct(toks[j], "{"):
+                pending_impl_dse = True
+            i += 1
+            continue
+
+        # `fn tell` inside a tracked impl.
+        if _is_ident(t, "fn") and impl_dse and i + 1 < n \
+                and _is_ident(toks[i + 1], "tell"):
+            pending_fn_tell = True
+            i += 2
+            continue
+
+        if t.kind == IDENT:
+            if t.text in ENTROPY_IDENTS:
+                raw.append((
+                    "D003", t.line,
+                    "entropy RNG `%s`; seed a stats::rng::Pcg32 "
+                    "instead" % t.text))
+            if not in_test and not d002_allowed(relpath):
+                if t.text in ("SystemTime", "UNIX_EPOCH"):
+                    raw.append((
+                        "D002", t.line,
+                        "wall-clock `%s` outside util/bench.rs"
+                        % t.text))
+                if t.text == "Instant" and i + 2 < n \
+                        and _punct(toks[i + 1], "::") \
+                        and _is_ident(toks[i + 2], "now"):
+                    raw.append((
+                        "D002", t.line,
+                        "wall-clock `Instant::now` outside "
+                        "util/bench.rs"))
+
+        # Method call: `. name (`.
+        if _punct(t, ".") and i + 2 < n and toks[i + 1].kind == IDENT \
+                and _punct(toks[i + 2], "("):
+            m = toks[i + 1].text
+            mline = toks[i + 1].line
+            recv = toks[i - 1].text if i > 0 \
+                and toks[i - 1].kind == IDENT else None
+            if not in_test:
+                if m in ("unwrap", "expect") \
+                        and not p001_exempt(relpath):
+                    raw.append((
+                        "P001", mline,
+                        "`.%s(` may panic in library code; return "
+                        "crate::error::Error or waive with a proof"
+                        % m))
+                if tell_body and m in RNG_METHODS:
+                    raw.append((
+                        "D004", mline,
+                        "RNG draw `.%s(` inside a `tell` body; "
+                        "draws belong in `ask`" % m))
+                if recv is not None and recv in hash_idents \
+                        and m in ORDER_METHODS:
+                    if is_det_module(relpath):
+                        raw.append((
+                            "D001", mline,
+                            "`%s.%s()` iterates an unordered hash "
+                            "container" % (recv, m)))
+                    _scan_float_reduction(toks, i, recv, m, relpath,
+                                          raw)
+            i += 1
+            continue
+
+        # `for pat in <hash ident> {`.
+        if _is_ident(t, "for") and not in_test \
+                and is_det_module(relpath):
+            j = i + 1
+            while j < n and not _is_ident(toks[j], "in") \
+                    and not _punct(toks[j], "{"):
+                j += 1
+            if j < n and _is_ident(toks[j], "in") and j + 1 < n:
+                core = []
+                k = j + 1
+                while k < n and not _punct(toks[k], "{"):
+                    x = toks[k]
+                    if not _punct(x, "&") and not _is_ident(x, "mut"):
+                        core.append(x)
+                    k += 1
+                if len(core) == 1 and core[0].kind == IDENT \
+                        and core[0].text in hash_idents:
+                    raw.append((
+                        "D001", core[0].line,
+                        "`for _ in %s` iterates an unordered hash "
+                        "container" % core[0].text))
+        i += 1
+
+    waivers, w001 = parse_waivers(comments)
+    out = []
+    for rule, line, message in raw:
+        w = next((wv for wv in waivers
+                  if wv.rule == rule
+                  and (wv.line == line or wv.line + 1 == line)), None)
+        out.append(Finding(rule, severity_of(rule), relpath, line,
+                           message, w is not None,
+                           w.reason if w is not None else None))
+    for line, message in w001:
+        out.append(Finding("W001", severity_of("W001"), relpath, line,
+                           message, False, None))
+    out.sort(key=lambda f: (f.line, f.rule, f.message))
+    return out
+
+
+def _scan_float_reduction(toks, i, recv, m, relpath, raw):
+    n = len(toks)
+    j = i + 2  # the call's own `(` — counted below
+    d = 0
+    while j < n:
+        t = toks[j]
+        if _punct(t, "(") or _punct(t, "["):
+            d += 1
+        elif _punct(t, ")") or _punct(t, "]") or _punct(t, "}"):
+            d -= 1
+            if d < 0:
+                break
+        elif _punct(t, "{"):
+            if d == 0:
+                break
+            d += 1
+        elif _punct(t, ";") and d == 0:
+            break
+        elif _punct(t, ".") and d == 0 and j + 1 < n \
+                and (_is_ident(toks[j + 1], "sum")
+                     or _is_ident(toks[j + 1], "fold")):
+            if is_det_module(relpath):
+                raw.append((
+                    "F001", toks[j + 1].line,
+                    "float reduction `.%s(` over unordered "
+                    "`%s.%s()`" % (toks[j + 1].text, recv, m)))
+            break
+        j += 1
+
+
+# -------------------------------------------------------------- report
+# Port of rust/src/analysis/report.rs + the util::json pretty writer.
+
+class Report(object):
+    def __init__(self, engine, root, files, findings):
+        self.engine = engine
+        self.root = root
+        self.files = files
+        self.findings = findings
+
+    def counts(self):
+        errors = warnings = waived = 0
+        for f in self.findings:
+            if f.waived:
+                waived += 1
+            elif f.severity == "error":
+                errors += 1
+            else:
+                warnings += 1
+        return errors, warnings, waived
+
+    def failed(self, deny_warnings):
+        errors, warnings, _ = self.counts()
+        return errors > 0 or (deny_warnings and warnings > 0)
+
+    def render_text(self):
+        out = []
+        for f in self.findings:
+            if f.waived:
+                continue
+            out.append("%s:%d: %s %s: %s\n" % (
+                f.file, f.line, f.severity, f.rule, f.message))
+        errors, warnings, waived = self.counts()
+        out.append(
+            "lint: %d files, %d findings (%d errors, %d warnings, "
+            "%d waived)\n" % (self.files, len(self.findings), errors,
+                              warnings, waived))
+        return "".join(out)
+
+    def to_json(self, v1=False):
+        errors, warnings, waived = self.counts()
+        findings = []
+        for f in self.findings:
+            findings.append({
+                "file": f.file,
+                "line": f.line,
+                "message": f.message,
+                "rule": f.rule,
+                "severity": f.severity,
+                "waived": f.waived,
+                "waiver_reason": f.waiver_reason,
+            })
+        doc = {
+            "counts": {
+                "errors": errors,
+                "waived": waived,
+                "warnings": warnings,
+            },
+            "files": self.files,
+            "findings": findings,
+            "root": self.root,
+            "version": 1 if v1 else 2,
+        }
+        if not v1:
+            doc["engine"] = self.engine
+        return doc
+
+
+def _escape_into(s, out):
+    out.append('"')
+    for c in s:
+        if c == '"':
+            out.append('\\"')
+        elif c == "\\":
+            out.append("\\\\")
+        elif c == "\n":
+            out.append("\\n")
+        elif c == "\t":
+            out.append("\\t")
+        elif c == "\r":
+            out.append("\\r")
+        elif ord(c) < 0x20:
+            out.append("\\u%04x" % ord(c))
+        else:
+            out.append(c)
+    out.append('"')
+
+
+def _write_json(v, out, indent):
+    pad = "  " * (indent + 1)
+    pad0 = "  " * indent
+    if v is None:
+        out.append("null")
+    elif v is True:
+        out.append("true")
+    elif v is False:
+        out.append("false")
+    elif isinstance(v, (int, float)):
+        f = float(v)
+        if f == int(f) and abs(f) < 1e15:
+            out.append("%d" % int(f))
+        else:
+            out.append(repr(f))
+    elif isinstance(v, str):
+        _escape_into(v, out)
+    elif isinstance(v, list):
+        if not v:
+            out.append("[]")
+            return
+        out.append("[\n")
+        for i, item in enumerate(v):
+            out.append(pad)
+            _write_json(item, out, indent + 1)
+            if i + 1 < len(v):
+                out.append(",")
+            out.append("\n")
+        out.append(pad0)
+        out.append("]")
+    elif isinstance(v, dict):
+        if not v:
+            out.append("{}")
+            return
+        keys = sorted(v.keys())
+        out.append("{\n")
+        for i, k in enumerate(keys):
+            out.append(pad)
+            _escape_into(k, out)
+            out.append(": ")
+            _write_json(v[k], out, indent + 1)
+            if i + 1 < len(keys):
+                out.append(",")
+            out.append("\n")
+        out.append(pad0)
+        out.append("}")
+    else:
+        raise TypeError("unsupported JSON value: %r" % (v,))
+
+
+def pretty(v):
+    out = []
+    _write_json(v, out, 0)
+    return "".join(out)
+
+
+# ----------------------------------------------------------- lint tree
+# Port of rust/src/analysis/mod.rs lint_tree/collect_rs/rel_of.
+
+def _collect_rs(dirpath, out):
+    for entry in os.scandir(dirpath):
+        if entry.is_dir(follow_symlinks=False):
+            if entry.name in ("target", "out"):
+                continue
+            _collect_rs(entry.path, out)
+        elif entry.is_file() and entry.name.endswith(".rs"):
+            out.append(entry.path)
+
+
+def lint_tree(root):
+    files = []
+    _collect_rs(root, files)
+    # Rust sorts Vec<PathBuf> component-wise; the findings are
+    # re-sorted below so only the file count is order-free.
+    files.sort(key=lambda p: p.replace(os.sep, "/").split("/"))
+    findings = []
+    for path in files:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        with open(path, "r", encoding="utf-8") as fh:
+            text = fh.read()
+        findings.extend(scan_file(rel, text))
+    findings.sort(key=lambda f: (f.file, f.line, f.rule, f.message))
+    return Report("determinism", root.replace("\\", "/"), len(files),
+                  findings)
+
+
+# ------------------------------------------------------------- extract
+# Port of rust/src/analysis/extract.rs. Values are tagged tuples:
+#   ("num", v, text, line) ("str", s, line) ("none",) ("ref", name)
+#   ("call", name, args, kwargs) ("struct", name, fields, base)
+#   ("arr", items) ("dict", entries) ("opaque",)
+
+OPAQUE = ("opaque",)
+NONE_LIT = ("none",)
+
+Sym = namedtuple("Sym", ["name", "line", "value"])
+PyClassT = namedtuple("PyClassT", ["name", "line", "fields"])
+
+
+def _digit_start(t):
+    return t.kind == IDENT and t.text[:1].isdigit()
+
+
+def join_number(toks, i):
+    n = len(toks)
+    k = i
+    neg = False
+    if k < n and _punct(toks[k], "-"):
+        neg = True
+        k += 1
+    if k >= n or not _digit_start(toks[k]):
+        return None
+    s = toks[k].text
+    k += 1
+    if "." not in s and k + 1 < n and _punct(toks[k], ".") \
+            and _digit_start(toks[k + 1]):
+        s += "." + toks[k + 1].text
+        k += 2
+    if s.endswith(("e", "E")) and k + 1 < n \
+            and (_punct(toks[k], "-") or _punct(toks[k], "+")) \
+            and _digit_start(toks[k + 1]):
+        s += toks[k].text + toks[k + 1].text
+        k += 2
+    cleaned = s.replace("_", "")
+    try:
+        v = _parse_f64(cleaned)
+    except ValueError:
+        return None
+    text = "-" + s if neg else s
+    return (-v if neg else v, text, k)
+
+
+def _parse_f64(s):
+    # Rust str::parse::<f64> rejects leading/trailing junk that
+    # Python's float() also rejects, but accepts fewer spellings:
+    # no underscores (pre-stripped above), no inf/nan shorthands
+    # beyond the same names. For the digit-led strings join_number
+    # feeds in, float() matches exactly; hex strings like "0x54"
+    # raise in both.
+    if s.startswith("0x") or s.startswith("0X"):
+        raise ValueError(s)
+    return float(s)
+
+
+def _expr_end(toks, i):
+    d = 0
+    j = i
+    n = len(toks)
+    while j < n:
+        t = toks[j]
+        if t.kind == PUNCT:
+            if t.text in ("(", "[", "{"):
+                d += 1
+            elif t.text in (")", "]", "}"):
+                if d == 0:
+                    return j
+                d -= 1
+            elif t.text in (",", ";") and d == 0:
+                return j
+        j += 1
+    return j
+
+
+def _py_expr_end(toks, i):
+    n = len(toks)
+    if i >= n:
+        return i
+    d = 0
+    cur = toks[i].line
+    j = i
+    while j < n:
+        t = toks[j]
+        if d == 0 and t.line > cur:
+            return j
+        if t.kind == PUNCT:
+            if t.text in ("(", "[", "{"):
+                d += 1
+            elif t.text in (")", "]", "}"):
+                if d == 0:
+                    return j
+                d -= 1
+            elif t.text in (",", ";") and d == 0:
+                return j
+        if d == 0:
+            cur = t.line
+        j += 1
+    return j
+
+
+def _elem(toks, i, end, f):
+    v, nxt = f(toks, i)
+    return v if nxt == end else OPAQUE
+
+
+def _path(toks, i, sep):
+    name = toks[i].text
+    j = i + 1
+    n = len(toks)
+    while j + 1 < n and _punct(toks[j], sep) \
+            and toks[j + 1].kind == IDENT:
+        name += sep + toks[j + 1].text
+        j += 2
+    return name, j
+
+
+def extract_rust(src):
+    toks, _ = lex_full(src)
+    n = len(toks)
+    out = []
+    depth = 0
+    i = 0
+    while i < n:
+        t = toks[i]
+        if t.kind == PUNCT:
+            if t.text in ("{", "(", "["):
+                depth += 1
+            elif t.text in ("}", ")", "]"):
+                depth -= 1
+        if depth == 0 and _is_ident(t, "const") and i + 2 < n \
+                and toks[i + 1].kind == IDENT \
+                and _punct(toks[i + 2], ":"):
+            name = toks[i + 1].text
+            line = toks[i + 1].line
+            # Skip the type: up to `=` at relative bracket depth 0.
+            j = i + 3
+            bd = 0
+            while j < n:
+                tt = toks[j]
+                if tt.kind == PUNCT:
+                    if tt.text in ("[", "(", "<"):
+                        bd += 1
+                    elif tt.text in ("]", ")", ">"):
+                        bd -= 1
+                    elif tt.text == "=" and bd == 0:
+                        break
+                j += 1
+            vstart = j + 1
+            end = _expr_end(toks, vstart)
+            out.append(Sym(name, line,
+                           _elem(toks, vstart, end, _parse_rust_value)))
+            i = end
+            continue
+        i += 1
+    return out
+
+
+def _parse_rust_value(toks, i):
+    n = len(toks)
+    if i >= n:
+        return OPAQUE, i
+    if _punct(toks[i], "&"):
+        return _parse_rust_value(toks, i + 1)
+    num = join_number(toks, i)
+    if num is not None:
+        v, text, nxt = num
+        return ("num", v, text, toks[i].line), nxt
+    if toks[i].kind == STR:
+        return ("str", toks[i].text, toks[i].line), i + 1
+    if _punct(toks[i], "["):
+        items = []
+        j = i + 1
+        while j < n and not _punct(toks[j], "]"):
+            end = _expr_end(toks, j)
+            items.append(_elem(toks, j, end, _parse_rust_value))
+            j = end
+            if j < n and _punct(toks[j], ","):
+                j += 1
+        return ("arr", items), min(j + 1, n)
+    if toks[i].kind == IDENT:
+        name, j = _path(toks, i, "::")
+        if j < n and _punct(toks[j], "{"):
+            fields = []
+            base = None
+            j += 1
+            while j < n and not _punct(toks[j], "}"):
+                if _punct(toks[j], ".") and j + 2 < n \
+                        and _punct(toks[j + 1], ".") \
+                        and toks[j + 2].kind == IDENT:
+                    base, j = _path(toks, j + 2, "::")
+                    continue
+                if toks[j].kind == IDENT and j + 1 < n \
+                        and _punct(toks[j + 1], ":"):
+                    fname = toks[j].text
+                    vstart = j + 2
+                    end = _expr_end(toks, vstart)
+                    fields.append(
+                        (fname,
+                         _elem(toks, vstart, end, _parse_rust_value)))
+                    j = end
+                else:
+                    j = _expr_end(toks, j)
+                if j < n and _punct(toks[j], ","):
+                    j += 1
+            return ("struct", name, fields, base), min(j + 1, n)
+        if j < n and _punct(toks[j], "("):
+            args = []
+            j += 1
+            while j < n and not _punct(toks[j], ")"):
+                end = _expr_end(toks, j)
+                args.append(_elem(toks, j, end, _parse_rust_value))
+                j = end
+                if j < n and _punct(toks[j], ","):
+                    j += 1
+            return ("call", name, args, []), min(j + 1, n)
+        return ("ref", name), j
+    return OPAQUE, i + 1
+
+
+PY_KEYWORDS = frozenset([
+    "assert", "class", "def", "del", "elif", "else", "except",
+    "finally", "for", "from", "global", "if", "import", "lambda",
+    "nonlocal", "pass", "print", "raise", "return", "try", "while",
+    "with",
+])
+
+
+def extract_py(src):
+    toks, _ = lex_py(src)
+    n = len(toks)
+    syms = []
+    classes = []
+    depth = 0
+    i = 0
+    while i < n:
+        t = toks[i]
+        if t.kind == PUNCT:
+            if t.text in ("(", "[", "{"):
+                depth += 1
+            elif t.text in (")", "]", "}"):
+                depth -= 1
+        if depth == 0 and t.col == 1 and t.kind == IDENT:
+            if t.text == "class" and i + 1 < n \
+                    and toks[i + 1].kind == IDENT:
+                cls, nxt = _extract_py_class(toks, i)
+                classes.append(cls)
+                i = nxt
+                continue
+            if t.text not in PY_KEYWORDS:
+                vstart = _assign_rhs(toks, i)
+                if vstart is not None:
+                    end = _py_expr_end(toks, vstart)
+                    syms.append(Sym(
+                        t.text, t.line,
+                        _elem(toks, vstart, end, _parse_py_value)))
+                    i = end
+                    continue
+        i += 1
+    return syms, classes
+
+
+def _assign_rhs(toks, i):
+    n = len(toks)
+    if i + 1 >= n:
+        return None
+    if _punct(toks[i + 1], "=") \
+            and not (i + 2 < n and _punct(toks[i + 2], "=")):
+        return i + 2
+    if _punct(toks[i + 1], ":"):
+        k = i + 2
+        while k < n and toks[k].line == toks[i].line:
+            if _punct(toks[k], "=") \
+                    and not (k + 1 < n and _punct(toks[k + 1], "=")):
+                return k + 1
+            k += 1
+    return None
+
+
+def _extract_py_class(toks, i):
+    n = len(toks)
+    name = toks[i + 1].text
+    line = toks[i + 1].line
+    fields = []
+    d = 0
+    j = i + 2
+    prev_line = toks[i].line
+    while j < n:
+        t = toks[j]
+        if t.kind == PUNCT:
+            if t.text in ("(", "[", "{"):
+                d += 1
+            elif t.text in (")", "]", "}"):
+                d -= 1
+        if d == 0 and t.col == 1 and t.line > toks[i].line:
+            break  # next module-level statement
+        if d == 0 and t.kind == IDENT and t.line > prev_line \
+                and t.col > 1 and t.text not in PY_KEYWORDS:
+            vstart = _assign_rhs(toks, j)
+            if vstart is not None:
+                end = _py_expr_end(toks, vstart)
+                fields.append(Sym(
+                    t.text, t.line,
+                    _elem(toks, vstart, end, _parse_py_value)))
+                prev_line = max(toks[max(end - 1, 0)].line, t.line)
+                j = end
+                continue
+        prev_line = max(prev_line, t.line)
+        j += 1
+    return PyClassT(name, line, fields), j
+
+
+def _parse_py_value(toks, i):
+    n = len(toks)
+    if i >= n:
+        return OPAQUE, i
+    num = join_number(toks, i)
+    if num is not None:
+        v, text, nxt = num
+        return ("num", v, text, toks[i].line), nxt
+    if toks[i].kind == STR:
+        return ("str", toks[i].text, toks[i].line), i + 1
+    if _punct(toks[i], "{"):
+        entries = []
+        j = i + 1
+        while j < n and not _punct(toks[j], "}"):
+            key, nk = _parse_py_value(toks, j)
+            if nk >= n or not _punct(toks[nk], ":"):
+                j = _expr_end(toks, j)
+                if j < n and _punct(toks[j], ","):
+                    j += 1
+                continue
+            vstart = nk + 1
+            end = _expr_end(toks, vstart)
+            entries.append(
+                (key, _elem(toks, vstart, end, _parse_py_value)))
+            j = end
+            if j < n and _punct(toks[j], ","):
+                j += 1
+        return ("dict", entries), min(j + 1, n)
+    if _punct(toks[i], "[") or _punct(toks[i], "("):
+        close = "]" if _punct(toks[i], "[") else ")"
+        items = []
+        j = i + 1
+        while j < n and not _punct(toks[j], close):
+            end = _expr_end(toks, j)
+            items.append(_elem(toks, j, end, _parse_py_value))
+            j = end
+            if j < n and _punct(toks[j], ","):
+                j += 1
+        return ("arr", items), min(j + 1, n)
+    if toks[i].kind == IDENT:
+        if toks[i].text == "None":
+            return NONE_LIT, i + 1
+        name, j = _path(toks, i, ".")
+        if j < n and _punct(toks[j], "("):
+            args = []
+            kwargs = []
+            j += 1
+            while j < n and not _punct(toks[j], ")"):
+                end = _expr_end(toks, j)
+                if toks[j].kind == IDENT and j + 1 < end \
+                        and _punct(toks[j + 1], "=") \
+                        and not (j + 2 < n
+                                 and _punct(toks[j + 2], "=")):
+                    kwargs.append(
+                        (toks[j].text,
+                         _elem(toks, j + 2, end, _parse_py_value)))
+                else:
+                    args.append(_elem(toks, j, end, _parse_py_value))
+                j = end
+                if j < n and _punct(toks[j], ","):
+                    j += 1
+            return ("call", name, args, kwargs), min(j + 1, n)
+        return ("ref", name), j
+    return OPAQUE, i + 1
+
+
+# ------------------------------------------------------------ mirrors
+# Port of rust/src/analysis/mirrors.rs: the production manifest,
+# plus the fixture manifest mirrored from rust/tests/mirror.rs.
+
+ALL = ("all",)
+
+
+def _named(*names):
+    return ("named", frozenset(names))
+
+
+def _except_prefixes(*prefixes):
+    return ("except", tuple(prefixes))
+
+
+def filter_keeps(flt, name):
+    if flt[0] == "all":
+        return True
+    if flt[0] == "named":
+        return name in flt[1]
+    return not any(name.startswith(p) for p in flt[1])
+
+
+CONSTS = ("consts",)
+
+MirrorPair = namedtuple("MirrorPair", [
+    "name", "rust_path", "rust_filter", "rust_aux", "python_path",
+    "python_filter", "kind"])
+OraclePin = namedtuple("OraclePin", ["name", "field", "value", "files"])
+
+PROD_PAIRS = (
+    MirrorPair("arch-constants", "rust/src/arch/constants.rs", ALL,
+               (), "python/compile/constants.py",
+               _except_prefixes("IDX_", "COL_", "KIND_", "MAX_", "N_"),
+               CONSTS),
+    MirrorPair("design-params", "rust/src/design/point.rs",
+               _named("N_PARAMS"), (), "python/compile/constants.py",
+               _named("N_PARAMS"), CONSTS),
+    MirrorPair("op-table-bounds", "rust/src/workload/spec.rs",
+               _named("MAX_OPS", "N_PHASES"), (),
+               "python/compile/constants.py",
+               _named("MAX_OPS", "N_PHASES"), CONSTS),
+    MirrorPair("scenario-registry", "rust/src/workload/scenario.rs",
+               ALL, ("rust/src/workload/spec.rs",),
+               "python/compile/workload.py", ALL,
+               ("registry", "SCENARIOS")),
+)
+
+_A100_PIN_FILES = ("rust/src/sim/roofline.rs",
+                   "rust/tests/artifact_vs_mirror.rs")
+
+PROD_PINS = (
+    OraclePin("a100-ttft", "ttft_ms", "36.70556", _A100_PIN_FILES),
+    OraclePin("a100-tpot", "tpot_ms", "0.4424397", _A100_PIN_FILES),
+    OraclePin("a100-area", "area_mm2", "833.9728", _A100_PIN_FILES),
+    OraclePin("a100-prefill-energy", "prefill_energy_mj", "8116.046",
+              _A100_PIN_FILES),
+    OraclePin("a100-decode-energy", "energy_per_token_mj",
+              "41.352123", _A100_PIN_FILES),
+    OraclePin("a100-avg-power", "avg_power_w", "219.59186",
+              _A100_PIN_FILES),
+)
+
+# Mirror of the test-local manifest in rust/tests/mirror.rs, checked
+# against the corpus under rust/tests/lint_fixtures/mirror/.
+FIXTURE_PAIRS = (
+    MirrorPair("consts-drift", "rust/src/consts_drift.rs", ALL, (),
+               "python/consts_drift.py", ALL, CONSTS),
+    MirrorPair("consts-clean", "rust/src/consts_clean.rs", ALL, (),
+               "python/consts_clean.py", ALL, CONSTS),
+    MirrorPair("consts-oneside", "rust/src/consts_oneside.rs", ALL,
+               (), "python/consts_oneside.py", ALL, CONSTS),
+    MirrorPair("consts-waived", "rust/src/consts_waived.rs", ALL, (),
+               "python/consts_waived.py", ALL, CONSTS),
+    MirrorPair("fixture-registry", "rust/src/registry.rs", ALL,
+               ("rust/src/regspec.rs",), "python/registry.py", ALL,
+               ("registry", "SCENARIOS")),
+    MirrorPair("docs-stale", "rust/src/docs_stale.rs", ALL, (),
+               "python/docs_stale.py", ALL, CONSTS),
+    MirrorPair("no-marker", "rust/src/nomark.rs", ALL, (),
+               "python/nomark.py", ALL, CONSTS),
+)
+
+FIXTURE_PINS = (
+    OraclePin("fx-ttft", "ttft_ms", "12.5",
+              ("rust/src/pin_a.rs", "rust/src/pin_b.rs",
+               "rust/src/pin_c.rs")),
+)
+
+
+# -------------------------------------------------------------- mirror
+# Port of rust/src/analysis/mirror.rs.
+
+PATH_ROOTS = ("rust/", "python/", "tests/", "src/")
+
+RUST, PY = "rust", "py"
+
+Raw = namedtuple("Raw", ["rule", "file", "line", "message"])
+Lit = namedtuple("Lit", ["v", "text", "file", "line"])
+
+
+class LintError(Exception):
+    pass
+
+
+def check_repo(root):
+    return check(root, PROD_PAIRS, PROD_PINS)
+
+
+def check(root, pairs, pins):
+    files = {}
+    for pair in pairs:
+        _load(files, root, pair.rust_path)
+        for aux in pair.rust_aux:
+            _load(files, root, aux)
+        _load(files, root, pair.python_path)
+    for pin in pins:
+        for f in pin.files:
+            _load(files, root, f)
+
+    raw = []
+    for pair in pairs:
+        if pair.kind[0] == "consts":
+            _diff_consts(pair, files, raw)
+        else:
+            _diff_registry(pair, pair.kind[1], files, raw)
+    for pin in pins:
+        _check_pin(pin, files, raw)
+    _check_docs(root, pairs, files, raw)
+
+    findings = []
+    for rel in sorted(files):
+        lang, text = files[rel]
+        if lang == RUST:
+            _, comments = lex(text)
+        else:
+            _, comments = lex_py(text)
+        waivers, w001 = parse_waivers(comments)
+        for r in raw:
+            if r.file != rel:
+                continue
+            w = next((wv for wv in waivers
+                      if wv.rule == r.rule
+                      and (wv.line == r.line
+                           or wv.line + 1 == r.line)), None)
+            findings.append(Finding(
+                r.rule, severity_of(r.rule), r.file, r.line,
+                r.message, w is not None,
+                w.reason if w is not None else None))
+        for line, message in w001:
+            findings.append(Finding(
+                "W001", severity_of("W001"), rel, line, message,
+                False, None))
+    findings.sort(key=lambda f: (f.file, f.line, f.rule, f.message))
+    return Report("mirror", root.replace("\\", "/"), len(files),
+                  findings)
+
+
+def _load(files, root, rel):
+    if rel in files:
+        return
+    path = os.path.join(root, rel)
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            text = fh.read()
+    except OSError as e:
+        raise LintError("mirror: read %s: %s" % (path, e))
+    files[rel] = (PY if rel.endswith(".py") else RUST, text)
+
+
+def _diff_consts(pair, files, raw):
+    rf = files.get(pair.rust_path)
+    pf = files.get(pair.python_path)
+    if rf is None or pf is None:
+        return
+    rsyms = extract_rust(rf[1])
+    psyms, _classes = extract_py(pf[1])
+    rmap = {s.name: s for s in rsyms
+            if filter_keeps(pair.rust_filter, s.name)}
+    pmap = {s.name: s for s in psyms
+            if filter_keeps(pair.python_filter, s.name)}
+    for name in sorted(set(rmap) | set(pmap)):
+        r = rmap.get(name)
+        p = pmap.get(name)
+        if r is not None and p is not None:
+            _diff_values(pair, name, r, p, raw)
+        elif r is not None:
+            raw.append(Raw(
+                "M002", pair.rust_path, r.line,
+                "`%s` only declared in %s; missing from %s "
+                "(mirror pair `%s`)" % (name, pair.rust_path,
+                                        pair.python_path, pair.name)))
+        elif p is not None:
+            raw.append(Raw(
+                "M002", pair.python_path, p.line,
+                "`%s` only declared in %s; missing from %s "
+                "(mirror pair `%s`)" % (name, pair.python_path,
+                                        pair.rust_path, pair.name)))
+
+
+def _diff_values(pair, name, r, p, raw):
+    rv, pv = r.value, p.value
+    drift = None
+    if rv[0] == "num" and pv[0] == "num":
+        if rv[1] != pv[1]:
+            drift = (rv[2], pv[2])
+    elif rv[0] == "str" and pv[0] == "str":
+        if rv[1] != pv[1]:
+            drift = ('"%s"' % rv[1], '"%s"' % pv[1])
+    if drift is not None:
+        rt, pt = drift
+        raw.append(Raw(
+            "M001", pair.rust_path, r.line,
+            "`%s` drifted: %s:%d has `%s`, %s:%d has `%s`"
+            % (name, pair.rust_path, r.line, rt, pair.python_path,
+               p.line, pt)))
+
+
+def _tail(name):
+    t = name.rsplit("::", 1)[-1]
+    return t.rsplit(".", 1)[-1]
+
+
+def _resolve_rust_spec(v, env, file):
+    if v[0] == "ref":
+        return dict(env.get(_tail(v[1]), {}))
+    if v[0] == "struct":
+        _, _name, fields, base = v
+        spec = dict(env.get(_tail(base), {})) if base is not None \
+            else {}
+        for fname, fval in fields:
+            if fval[0] == "num":
+                spec[fname] = Lit(fval[1], fval[2], file, fval[3])
+        return spec
+    return {}
+
+
+def _rust_scenarios(pair, symbol, files):
+    env = {}
+    reg = None
+    sources = list(pair.rust_aux) + [pair.rust_path]
+    for rel in sources:
+        f = files.get(rel)
+        if f is None:
+            continue
+        for sym in extract_rust(f[1]):
+            if sym.name == symbol:
+                reg = (rel, sym.value)
+                continue
+            spec = _resolve_rust_spec(sym.value, env, rel)
+            if spec:
+                env[sym.name] = spec
+    out = []
+    if reg is None or reg[1][0] != "arr":
+        return out
+    reg_file, (_, items) = reg
+    for item in items:
+        if item[0] != "struct":
+            continue
+        _, _sname, fields, _base = item
+        name = None
+        spec = {}
+        for fname, fval in fields:
+            if fname == "name":
+                if fval[0] == "str":
+                    name = (fval[1], fval[2])
+            elif fname == "spec":
+                spec = _resolve_rust_spec(fval, env, reg_file)
+        if name is not None:
+            out.append((name[0], name[1], spec))
+    return out
+
+
+def _py_class_defaults(c, file):
+    spec = {}
+    for f in c.fields:
+        if f.value[0] == "num":
+            spec[f.name] = Lit(f.value[1], f.value[2], file,
+                               f.value[3])
+    return spec
+
+
+def _gqa_default(spec):
+    if "n_kv_heads" not in spec and "n_heads" in spec:
+        spec["n_kv_heads"] = spec["n_heads"]
+
+
+def _resolve_py_spec(v, env, classes, file):
+    if v[0] == "ref":
+        return dict(env.get(_tail(v[1]), {}))
+    if v[0] == "call":
+        _, name, args, kwargs = v
+        callee = _tail(name)
+        if callee == "replace":
+            spec = _resolve_py_spec(args[0], env, classes, file) \
+                if args else {}
+        else:
+            defaults = classes.get(callee)
+            if defaults is None:
+                return {}
+            spec = dict(defaults)
+        for kname, kval in kwargs:
+            if kval[0] == "num":
+                spec[kname] = Lit(kval[1], kval[2], file, kval[3])
+            if kval == NONE_LIT:
+                spec.pop(kname, None)
+        _gqa_default(spec)
+        return spec
+    return {}
+
+
+def _py_scenarios(pair, symbol, files):
+    f = files.get(pair.python_path)
+    if f is None:
+        return []
+    syms, pyclasses = extract_py(f[1])
+    classes = {c.name: _py_class_defaults(c, pair.python_path)
+               for c in pyclasses}
+    env = {}
+    reg = None
+    for sym in syms:
+        if sym.name == symbol:
+            reg = sym.value
+            continue
+        spec = _resolve_py_spec(sym.value, env, classes,
+                                pair.python_path)
+        if spec:
+            env[sym.name] = spec
+    out = []
+    if reg is None or reg[0] != "dict":
+        return out
+    for key, val in reg[1]:
+        if key[0] != "str":
+            continue
+        spec = _resolve_py_spec(val, env, classes, pair.python_path)
+        out.append((key[1], key[2], spec))
+    return out
+
+
+def _diff_registry(pair, symbol, files, raw):
+    rs = _rust_scenarios(pair, symbol, files)
+    py = _py_scenarios(pair, symbol, files)
+    rmap = {n: (l, s) for n, l, s in rs}
+    pmap = {n: (l, s) for n, l, s in py}
+    for name in sorted(set(rmap) | set(pmap)):
+        r = rmap.get(name)
+        p = pmap.get(name)
+        if r is not None and p is not None:
+            if not r[1] or not p[1]:
+                continue  # resolution failed: presence-only
+            _diff_specs(pair, name, r[1], p[1], raw)
+        elif r is not None:
+            raw.append(Raw(
+                "M002", pair.rust_path, r[0],
+                "scenario `%s` only registered in %s; missing from "
+                "%s (mirror pair `%s`)" % (name, pair.rust_path,
+                                           pair.python_path,
+                                           pair.name)))
+        elif p is not None:
+            raw.append(Raw(
+                "M002", pair.python_path, p[0],
+                "scenario `%s` only registered in %s; missing from "
+                "%s (mirror pair `%s`)" % (name, pair.python_path,
+                                           pair.rust_path,
+                                           pair.name)))
+
+
+def _diff_specs(pair, name, rspec, pspec, raw):
+    for fname in sorted(set(rspec) | set(pspec)):
+        r = rspec.get(fname)
+        p = pspec.get(fname)
+        if r is not None and p is not None:
+            if r.v != p.v:
+                raw.append(Raw(
+                    "M001", r.file, r.line,
+                    "scenario `%s` field `%s` drifted: %s:%d has "
+                    "`%s`, %s:%d has `%s`" % (name, fname, r.file,
+                                              r.line, r.text, p.file,
+                                              p.line, p.text)))
+        elif r is not None:
+            raw.append(Raw(
+                "M002", r.file, r.line,
+                "scenario `%s` field `%s` only set in %s; missing "
+                "from %s (mirror pair `%s`)" % (name, fname, r.file,
+                                                pair.python_path,
+                                                pair.name)))
+        elif p is not None:
+            raw.append(Raw(
+                "M002", p.file, p.line,
+                "scenario `%s` field `%s` only set in %s; missing "
+                "from %s (mirror pair `%s`)" % (name, fname, p.file,
+                                                pair.rust_path,
+                                                pair.name)))
+
+
+def _check_pin(pin, files, raw):
+    try:
+        want = float(pin.value)
+    except ValueError:
+        return
+    for rel in pin.files:
+        f = files.get(rel)
+        if f is None:
+            continue
+        toks, _ = lex(f[1])
+        occs = []
+        for i in range(len(toks)):
+            if not _is_ident(toks[i], pin.field):
+                continue
+            if i + 2 >= len(toks) or not _punct(toks[i + 1], "-"):
+                continue
+            num = join_number(toks, i + 2)
+            if num is not None:
+                occs.append((num[0], num[1], toks[i + 2].line))
+        if not occs:
+            raw.append(Raw(
+                "M003", rel, 1,
+                "oracle pin `%s` (`%s`) not found in %s"
+                % (pin.name, pin.field, rel)))
+            continue
+        if any(o[0] == want for o in occs):
+            continue
+        best = occs[0]
+        for o in occs[1:]:
+            if abs(o[0] - want) < abs(best[0] - want):
+                best = o
+        raw.append(Raw(
+            "M003", rel, best[2],
+            "oracle pin `%s` (`%s`) diverged: found `%s`, canonical "
+            "is `%s`" % (pin.name, pin.field, best[1], pin.value)))
+
+
+def _check_docs(root, pairs, files, raw):
+    members = {}
+    for pair in pairs:
+        members.setdefault(pair.rust_path, []).append(pair.name)
+        members.setdefault(pair.python_path, []).append(pair.name)
+    corpus = _test_corpus(root, files)
+    for rel in sorted(members):
+        pair_names = members[rel]
+        f = files.get(rel)
+        if f is None:
+            continue
+        lines = _doc_lines(f)
+        has_marker = any("mirror" in t.lower() for _, t in lines)
+        if not has_marker:
+            raw.append(Raw(
+                "M004", rel, 1,
+                "mirror pair file carries no MIRROR marker comment "
+                "(pairs: %s)" % ", ".join(pair_names)))
+        for line, text in lines:
+            _check_doc_line(root, rel, line, text, corpus, raw)
+
+
+def _doc_lines(f):
+    lang, text = f
+    out = []
+    if lang == RUST:
+        _, comments = lex(text)
+        out.extend(comments)
+    else:
+        toks, comments = lex_py(text)
+        out.extend(comments)
+        if toks and toks[0].kind == STR:
+            for k, seg in enumerate(toks[0].text.split("\n")):
+                out.append((toks[0].line + k, seg))
+    out.sort(key=lambda p: p[0])
+    return out
+
+
+def _check_doc_line(root, rel, line, text, corpus, raw):
+    lower = text.lower()
+    mentions_test = "test" in lower and "`" in text
+    if "mirror" not in lower and not mentions_test:
+        return
+    for word in text.split():
+        w = word.strip("`()\",;:'<>").rstrip(".,")
+        if "{" in w or "*" in w:
+            continue  # brace-glob shorthand, not a literal path
+        if not any(w.startswith(p) for p in PATH_ROOTS):
+            continue
+        if "::" in w:
+            path, sym = w.split("::", 1)
+        else:
+            path, sym = w, None
+        path = path.rstrip("/")
+        target = _resolve_path(root, path)
+        if target is None:
+            raw.append(Raw(
+                "M004", rel, line,
+                "stale mirror reference: `%s` does not exist"
+                % path))
+            continue
+        if sym is not None:
+            try:
+                with open(target, "r", encoding="utf-8") as fh:
+                    found = sym in fh.read()
+            except OSError:
+                found = False
+            if not found:
+                raw.append(Raw(
+                    "M004", rel, line,
+                    "stale mirror reference: `%s` has no symbol "
+                    "`%s`" % (path, sym)))
+    if not mentions_test:
+        return
+    for k, part in enumerate(text.split("`")):
+        if k % 2 == 0 or not _snake_ident(part):
+            continue
+        fn_pat = "fn %s(" % part
+        def_pat = "def %s(" % part
+        found = any((t.find(fn_pat) >= 0 if lang == RUST
+                     else t.find(def_pat) >= 0)
+                    for lang, t in corpus)
+        if not found:
+            raw.append(Raw(
+                "M004", rel, line,
+                "stale mirror reference: no function or test named "
+                "`%s`" % part))
+
+
+def _resolve_path(root, rel):
+    a = os.path.join(root, rel)
+    if os.path.exists(a):
+        return a
+    b = os.path.join(root, "rust", rel)
+    if os.path.exists(b):
+        return b
+    return None
+
+
+def _snake_ident(s):
+    b = s.encode("utf-8", "surrogateescape")
+    return len(b) >= 4 and 0x5F in b \
+        and (0x61 <= b[0] <= 0x7A or b[0] == 0x5F) \
+        and all(0x61 <= c <= 0x7A or 0x30 <= c <= 0x39 or c == 0x5F
+                for c in b)
+
+
+def _test_corpus(root, files):
+    out = [(files[rel][0], files[rel][1]) for rel in sorted(files)]
+    for d in ("rust/tests", "tests"):
+        full = os.path.join(root, d)
+        try:
+            entries = os.listdir(full)
+        except OSError:
+            continue
+        paths = sorted(os.path.join(full, e) for e in entries
+                       if e.endswith(".rs"))
+        for p in paths:
+            try:
+                with open(p, "r", encoding="utf-8") as fh:
+                    out.append((RUST, fh.read()))
+            except OSError:
+                pass
+    return out
+
+
+# ----------------------------------------------------------------- cli
+# Mirrors `lumina lint` / `lumina mirror` (rust/src/main.rs).
+
+def _default_lint_root():
+    return "rust/src" if os.path.isdir("rust/src") else "src"
+
+
+def _default_mirror_root():
+    if os.path.isdir("rust/src") and os.path.isdir("python"):
+        return "."
+    return ".."
+
+
+def main(argv):
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Python mirror of `lumina lint`")
+    ap.add_argument("--mirror", action="store_true")
+    ap.add_argument("--root")
+    ap.add_argument("--out")
+    ap.add_argument("--format", default="text",
+                    choices=["text", "json"])
+    ap.add_argument("--deny-warnings", action="store_true")
+    ap.add_argument("--manifest", default="production",
+                    choices=["production", "fixture"])
+    ap.add_argument("--v1", action="store_true",
+                    help="legacy report layout (no engine key)")
+    args = ap.parse_args(argv)
+
+    root = args.root
+    if root is None:
+        root = _default_mirror_root() if args.mirror \
+            else _default_lint_root()
+    if not os.path.isdir(root):
+        print("error: lint root %s is not a directory "
+              "(pass --root <dir>)" % root, file=sys.stderr)
+        return 1
+    try:
+        if args.mirror:
+            if args.manifest == "fixture":
+                report = check(root, FIXTURE_PAIRS, FIXTURE_PINS)
+            else:
+                report = check_repo(root)
+        else:
+            report = lint_tree(root)
+    except LintError as e:
+        print("error: %s" % e, file=sys.stderr)
+        return 1
+
+    out_path = args.out or (
+        "out/mirror_findings.json" if args.mirror
+        else "out/lint_findings.json")
+    out_dir = os.path.dirname(out_path)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    json_text = pretty(report.to_json(v1=args.v1)) + "\n"
+    with open(out_path, "w", encoding="utf-8") as fh:
+        fh.write(json_text)
+
+    if args.format == "json":
+        sys.stdout.write(json_text)
+    else:
+        sys.stdout.write(report.render_text())
+        print("findings JSON: %s" % out_path)
+
+    if report.failed(args.deny_warnings):
+        errors, warnings, _ = report.counts()
+        print("error: lint: %d unwaivered findings (%d errors, "
+              "%d warnings); fix them or waive with "
+              "`// lumina: allow(RULE) reason`"
+              % (errors + warnings, errors, warnings),
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
