@@ -7,14 +7,56 @@
 //! metric; tuning questions pick the constraint-feasible candidate with
 //! the best simulated objective.
 
+use std::sync::Arc;
+
 use crate::design::{sample, DesignPoint, DesignSpace, Param};
-use crate::eval::{Metrics, Phase};
+use crate::eval::{DiskStore, Metrics, Phase};
 use crate::llm::analyst::analyst_area;
 use crate::llm::prompts;
 use crate::pareto::ObjectiveMode;
 use crate::sim::RooflineSim;
 use crate::stats::rng::Pcg32;
 use crate::workload::{default_scenario, WorkloadSpec};
+
+/// The ground-truth simulator behind question generation, optionally
+/// memoized in a persistent [`DiskStore`] (`benchmark --cache-dir`).
+/// Question ground truth revisits step-neighborhoods of sampled
+/// designs, and repeat benchmark runs (CI, scale sweeps) re-derive
+/// the same truths — warm restarts serve those simulations from disk.
+/// Served metrics are the stored f32 bits, so cached and uncached
+/// generation produce bit-identical question sets.
+pub struct TruthSim {
+    sim: RooflineSim,
+    fp: u64,
+    disk: Option<Arc<DiskStore>>,
+}
+
+impl TruthSim {
+    pub fn new(
+        sim: RooflineSim,
+        disk: Option<Arc<DiskStore>>,
+    ) -> TruthSim {
+        let fp = sim.spec().fingerprint();
+        TruthSim { sim, fp, disk }
+    }
+
+    pub fn spec(&self) -> &WorkloadSpec {
+        self.sim.spec()
+    }
+
+    pub fn evaluate(&self, d: &DesignPoint) -> Metrics {
+        let Some(disk) = &self.disk else {
+            return self.sim.evaluate(d);
+        };
+        if let Some(m) = disk.get(self.fp, d) {
+            disk.note_hit();
+            return m;
+        }
+        let m = self.sim.evaluate(d);
+        disk.append(self.fp, d, &m);
+        m
+    }
+}
 
 /// Benchmark task families (paper Figure 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -105,9 +147,23 @@ impl QuestionSet {
         workload: &WorkloadSpec,
         mode: ObjectiveMode,
     ) -> QuestionSet {
+        Self::generate_n_disk(task, n, seed, workload, mode, None)
+    }
+
+    /// [`QuestionSet::generate_n_mode`] with the ground-truth
+    /// simulations memoized in a shared disk store (`benchmark
+    /// --cache-dir`). `None` generates uncached, bit-identically.
+    pub fn generate_n_disk(
+        task: Task,
+        n: usize,
+        seed: u64,
+        workload: &WorkloadSpec,
+        mode: ObjectiveMode,
+        disk: Option<Arc<DiskStore>>,
+    ) -> QuestionSet {
         let mut rng = Pcg32::with_stream(seed, task as u64 + 0xbe);
         let space = DesignSpace::table1();
-        let sim = RooflineSim::new(*workload);
+        let sim = TruthSim::new(RooflineSim::new(*workload), disk);
         let questions = (0..n)
             .map(|_| match task {
                 Task::BottleneckAnalysis => {
@@ -128,7 +184,7 @@ impl QuestionSet {
 /// A design whose stall profile is interesting (non-degenerate).
 fn sample_design(
     space: &DesignSpace,
-    sim: &RooflineSim,
+    sim: &TruthSim,
     rng: &mut Pcg32,
 ) -> (DesignPoint, Metrics) {
     loop {
@@ -163,7 +219,7 @@ fn apply_actions(
 
 fn gen_bottleneck(
     space: &DesignSpace,
-    sim: &RooflineSim,
+    sim: &TruthSim,
     rng: &mut Pcg32,
 ) -> Question {
     // Resample until the dominant-stall fix is *unambiguously* the best
@@ -181,7 +237,7 @@ fn gen_bottleneck(
 
 fn try_gen_bottleneck(
     space: &DesignSpace,
-    sim: &RooflineSim,
+    sim: &TruthSim,
     rng: &mut Pcg32,
 ) -> Option<Question> {
     gen_bottleneck_inner(space, sim, rng, true)
@@ -189,7 +245,7 @@ fn try_gen_bottleneck(
 
 fn try_gen_bottleneck_relaxed(
     space: &DesignSpace,
-    sim: &RooflineSim,
+    sim: &TruthSim,
     rng: &mut Pcg32,
 ) -> Question {
     // lumina: allow(P001) strict=false never returns None (no regenerate path)
@@ -198,7 +254,7 @@ fn try_gen_bottleneck_relaxed(
 
 fn gen_bottleneck_inner(
     space: &DesignSpace,
-    sim: &RooflineSim,
+    sim: &TruthSim,
     rng: &mut Pcg32,
     strict: bool,
 ) -> Option<Question> {
@@ -313,7 +369,7 @@ fn gen_bottleneck_inner(
 
 fn gen_prediction(
     space: &DesignSpace,
-    sim: &RooflineSim,
+    sim: &TruthSim,
     rng: &mut Pcg32,
     mode: ObjectiveMode,
 ) -> Question {
@@ -406,7 +462,7 @@ fn gen_prediction(
 
 fn gen_tuning(
     space: &DesignSpace,
-    sim: &RooflineSim,
+    sim: &TruthSim,
     rng: &mut Pcg32,
 ) -> Question {
     let (initial, m) = sample_design(space, sim, rng);
@@ -544,6 +600,45 @@ mod tests {
             assert_eq!(x.prompt, y.prompt);
             assert_eq!(x.correct, y.correct);
         }
+    }
+
+    #[test]
+    fn disk_cached_generation_is_bit_identical() {
+        let dir = std::env::temp_dir().join(format!(
+            "lumina_bench_truth_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let disk = DiskStore::open_shared(&dir).unwrap();
+        let spec = default_scenario().spec;
+        let plain = QuestionSet::generate_n_mode(
+            Task::BottleneckAnalysis,
+            6,
+            9,
+            &spec,
+            ObjectiveMode::LatencyArea,
+        );
+        // Cold pass fills the store, warm pass serves from it; both
+        // must reproduce the uncached question set exactly.
+        for pass in 0..2 {
+            let cached = QuestionSet::generate_n_disk(
+                Task::BottleneckAnalysis,
+                6,
+                9,
+                &spec,
+                ObjectiveMode::LatencyArea,
+                Some(disk.clone()),
+            );
+            for (a, b) in plain.questions.iter().zip(&cached.questions)
+            {
+                assert_eq!(a.prompt, b.prompt, "pass {pass}");
+                assert_eq!(a.correct, b.correct, "pass {pass}");
+                assert_eq!(a.choices, b.choices, "pass {pass}");
+            }
+        }
+        assert!(disk.counters().hits > 0, "warm pass never hit disk");
+        disk.seal().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

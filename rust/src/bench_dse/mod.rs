@@ -10,8 +10,8 @@
 pub mod generator;
 pub mod runner;
 
-pub use generator::{Question, QuestionSet, Task};
+pub use generator::{Question, QuestionSet, Task, TruthSim};
 pub use runner::{
-    run_benchmark, run_benchmark_for, run_benchmark_mode,
-    BenchmarkReport, TaskAccuracy,
+    run_benchmark, run_benchmark_disk, run_benchmark_for,
+    run_benchmark_mode, BenchmarkReport, TaskAccuracy,
 };

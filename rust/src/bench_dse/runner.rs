@@ -84,12 +84,33 @@ pub fn run_benchmark_mode(
     workload: &WorkloadSpec,
     mode: ObjectiveMode,
 ) -> BenchmarkReport {
+    run_benchmark_disk(profiles, seed, scale, workload, mode, None)
+}
+
+/// [`run_benchmark_mode`] with the question ground truth memoized in
+/// a shared disk store (`benchmark --cache-dir`): repeat runs serve
+/// their simulations from disk and score bit-identical question sets.
+pub fn run_benchmark_disk(
+    profiles: &[ModelProfile],
+    seed: u64,
+    scale: f64,
+    workload: &WorkloadSpec,
+    mode: ObjectiveMode,
+    disk: Option<std::sync::Arc<crate::eval::DiskStore>>,
+) -> BenchmarkReport {
     let sets: Vec<QuestionSet> = Task::ALL
         .iter()
         .map(|&t| {
             let n = ((t.paper_count() as f64 * scale).round() as usize)
                 .max(10);
-            QuestionSet::generate_n_mode(t, n, seed, workload, mode)
+            QuestionSet::generate_n_disk(
+                t,
+                n,
+                seed,
+                workload,
+                mode,
+                disk.clone(),
+            )
         })
         .collect();
 

@@ -86,7 +86,9 @@ impl fmt::Display for Param {
 }
 
 /// A concrete design point: raw parameter values (not grid indices).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// Ordered lexicographically over the value lanes so deterministic
+/// containers (the disk store's `BTreeMap` index) can key on it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct DesignPoint {
     pub values: [u32; N_PARAMS],
 }

@@ -30,10 +30,16 @@
 //!   batches of dozens of designs instead of thousands of singletons.
 //! * [`observer`] — `on_sample` / `on_phase` / `on_front_update` hooks
 //!   for live progress (the CLI's `--verbose` PHV ticker).
+//! * [`shard`] — multi-process sharding of a fused race: N workers
+//!   claim disjoint (method x trial) cells through the disk store's
+//!   advisory-lock protocol, checkpoint each cell as a
+//!   [`state::SessionState`], and a merge pass reproduces the
+//!   single-process race bit-for-bit.
 
 pub mod driver;
 pub mod observer;
 pub mod race;
+pub mod shard;
 pub mod state;
 
 #[cfg(test)]
@@ -42,6 +48,10 @@ mod golden;
 pub use driver::{drive, replay, Driver, FrontTracker};
 pub use observer::{NullObserver, Observer, ProgressObserver};
 pub use race::{CellResult, FusedRace};
+pub use shard::{
+    merge_race, merged_front, run_race_shard, run_race_shard_observed,
+    ShardOutcome, ShardSpec,
+};
 pub use state::SessionState;
 
 use crate::design::{DesignPoint, DesignSpace};

@@ -1,0 +1,356 @@
+//! Multi-process sharded races: N worker processes split the
+//! (method x trial) cells of one fused race over a shared
+//! coordination directory, and a merge pass folds the per-cell
+//! checkpoints back into the exact single-process result.
+//!
+//! The protocol runs entirely through the `--cache-dir` directory —
+//! the same directory the [`crate::eval::DiskStore`] memoizes
+//! `explore` runs into — using the store's advisory-lock primitive
+//! for coordination:
+//!
+//! 1. Every worker enumerates the race's cells in the canonical
+//!    trial-outer / method-inner order of
+//!    [`crate::figures::race::run_race_fused`]. Cell `j` belongs to
+//!    shard `i` of `n` when `j % n == i` ([`ShardSpec::owns`]), and
+//!    ownership is then *claimed* on disk via
+//!    [`DirLock::try_claim`], so re-running a shard spec — or
+//!    pointing two workers at the same spec — never double-runs a
+//!    cell.
+//! 2. Each worker fuses its owned cells into one [`FusedRace`] (the
+//!    cells' `ask()` batches share `eval_batch` calls exactly as the
+//!    in-process race does) and checkpoints every finished cell's
+//!    `(design, metrics)` log to `DIR/cells/<method>-t<trial>.json`
+//!    as an ordinary [`SessionState`] (staged rename: never torn).
+//! 3. `lumina race --merge` ([`merge_race`]) loads every cell in
+//!    canonical order, validates its identity lane against the race
+//!    configuration, and rescores it with [`score_log`].
+//!
+//! Because every session draws all of its randomness in `ask` and
+//! the evaluators are pure functions of the design, a cell's
+//! trajectory does not depend on which process ran it or on what
+//! else was fused alongside it — so the merged per-cell results,
+//! and the global front folded by [`merged_front`], are bitwise
+//! identical to running the whole fused race in one process (see
+//! `tests/shard.rs`).
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::baselines::all_sessions_mode;
+use crate::design::{DesignPoint, DesignSpace};
+use crate::dse::{FusedRace, NullObserver, Observer, SessionState};
+use crate::eval::DirLock;
+use crate::figures::race::{
+    score_log, trial_seed, RaceConfig, RaceResult,
+};
+use crate::pareto::{Objectives, ParetoArchive, PHV_REF};
+use crate::{bail, err, Result};
+
+/// `SessionState.model` marker for race cells. The race harness runs
+/// every method under its default configuration — a cell is not an
+/// `explore` run with a chosen LLM backbone — so cells carry this
+/// fixed marker and [`merge_race`] validates it like any other
+/// identity lane.
+pub const RACE_MODEL: &str = "race";
+
+/// Which slice of the race's (method x trial) cells this worker runs:
+/// cell `j` (in canonical enumeration order) belongs to shard `index`
+/// of `count` when `j % count == index`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl ShardSpec {
+    /// The whole race as one shard (`0/1`).
+    pub fn whole() -> ShardSpec {
+        ShardSpec { index: 0, count: 1 }
+    }
+
+    /// Parse the CLI `--shard I/N` form: zero-based index `I` of `N`
+    /// workers, `I < N`.
+    pub fn parse(s: &str) -> Result<ShardSpec> {
+        let (i, n) = s
+            .split_once('/')
+            .ok_or_else(|| err!("--shard must be I/N, got {s:?}"))?;
+        let index: usize = i
+            .trim()
+            .parse()
+            .map_err(|_| err!("bad shard index {i:?} in {s:?}"))?;
+        let count: usize = n
+            .trim()
+            .parse()
+            .map_err(|_| err!("bad shard count {n:?} in {s:?}"))?;
+        if count == 0 {
+            bail!("shard count must be >= 1, got {s:?}");
+        }
+        if index >= count {
+            bail!(
+                "shard index {index} out of range for {count} \
+                 shards (indices are zero-based)"
+            );
+        }
+        Ok(ShardSpec { index, count })
+    }
+
+    /// Does this shard own cell `j` of the canonical enumeration?
+    pub fn owns(&self, cell: usize) -> bool {
+        cell % self.count == self.index
+    }
+}
+
+impl fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+/// Subdirectory of the coordination dir holding per-cell checkpoints
+/// and claim locks (kept apart from the memo store's `*.lms`
+/// segments and `LOCK`).
+pub fn cells_dir(dir: &Path) -> PathBuf {
+    dir.join("cells")
+}
+
+/// Checkpoint path of one (method, trial) cell.
+pub fn cell_path(dir: &Path, method: &str, trial: usize) -> PathBuf {
+    cells_dir(dir).join(format!("{method}-t{trial}.json"))
+}
+
+fn claim_name(method: &str, trial: usize) -> String {
+    format!("claim-{method}-t{trial}")
+}
+
+/// What one worker's shard pass did with the cells it enumerated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ShardOutcome {
+    /// Owned cells this worker ran and checkpointed.
+    pub ran: usize,
+    /// Owned cells skipped: a checkpoint already existed.
+    pub done: usize,
+    /// Owned cells skipped: another worker holds the claim.
+    pub contended: usize,
+    /// Total cells in the race, across all shards.
+    pub total: usize,
+}
+
+/// Run this worker's shard of the race (see the module docs for the
+/// protocol). Returns what was run/skipped; safe to re-run after a
+/// crash — finished cells are skipped, half-run cells were never
+/// checkpointed (the staged rename is atomic) but stay claimed, so
+/// recovering them means removing their `cells/claim-*` file first.
+pub fn run_race_shard(
+    cfg: &RaceConfig,
+    shard: ShardSpec,
+    dir: &Path,
+) -> Result<ShardOutcome> {
+    run_race_shard_observed(cfg, shard, dir, &mut NullObserver)
+}
+
+/// [`run_race_shard`] with observer hooks (live per-cell PHV progress
+/// for `race --shard I/N --verbose`).
+pub fn run_race_shard_observed(
+    cfg: &RaceConfig,
+    shard: ShardSpec,
+    dir: &Path,
+    observer: &mut dyn Observer,
+) -> Result<ShardOutcome> {
+    let cells = cells_dir(dir);
+    std::fs::create_dir_all(&cells)?;
+    let space = DesignSpace::table1();
+    let mut ev = cfg.evaluator.make_for(&cfg.workload);
+    // Same A100 reference the in-process race computes; the evaluator
+    // is pure, so warming it with one extra eval changes nothing.
+    let reference = ev.eval(&DesignPoint::a100())?;
+    let mut race = FusedRace::new(&space);
+    let mut outcome = ShardOutcome::default();
+    for trial in 0..cfg.trials {
+        let seed = trial_seed(cfg.seed, trial);
+        for (name, session) in all_sessions_mode(seed, cfg.objectives)
+        {
+            let mine = shard.owns(outcome.total);
+            outcome.total += 1;
+            if !mine {
+                continue;
+            }
+            if cell_path(dir, name, trial).exists() {
+                outcome.done += 1;
+                continue;
+            }
+            if !DirLock::try_claim(&cells, &claim_name(name, trial))? {
+                outcome.contended += 1;
+                continue;
+            }
+            race.add_cell(name, trial, session, cfg.samples);
+        }
+    }
+    let results =
+        race.run(ev.as_mut(), &reference, cfg.objectives, observer)?;
+    for c in &results {
+        let st = SessionState {
+            method: c.method.to_string(),
+            model: RACE_MODEL.to_string(),
+            seed: trial_seed(cfg.seed, c.trial),
+            budget: cfg.samples,
+            spent: c.spent,
+            evaluator: ev.name().to_string(),
+            workload_fp: cfg.workload.fingerprint(),
+            objectives: cfg.objectives,
+            log: c.log.clone(),
+        };
+        st.save(&cell_path(dir, c.method, c.trial))?;
+        outcome.ran += 1;
+    }
+    Ok(outcome)
+}
+
+/// Fold the per-cell checkpoints of a completed sharded race back
+/// into the single-process result: load every cell in canonical
+/// order, validate its identity lane against `cfg`, and rescore with
+/// [`score_log`]. Errors if any cell is missing (a shard has not
+/// finished or was never launched) or ran under a different
+/// configuration.
+pub fn merge_race(
+    cfg: &RaceConfig,
+    dir: &Path,
+) -> Result<Vec<RaceResult>> {
+    let mut ev = cfg.evaluator.make_for(&cfg.workload);
+    let reference = ev.eval(&DesignPoint::a100())?;
+    let ev_name = ev.name().to_string();
+    let fp = cfg.workload.fingerprint();
+    let mut out = Vec::new();
+    let mut missing: Vec<String> = Vec::new();
+    for trial in 0..cfg.trials {
+        let seed = trial_seed(cfg.seed, trial);
+        for (name, _) in all_sessions_mode(seed, cfg.objectives) {
+            let path = cell_path(dir, name, trial);
+            if !path.exists() {
+                missing.push(format!("{name}-t{trial}"));
+                continue;
+            }
+            let st = SessionState::load(&path)?;
+            st.expect_identity(
+                &format!("cell {name}-t{trial}"),
+                name,
+                Some(RACE_MODEL),
+                seed,
+                cfg.samples,
+                Some(&ev_name),
+                fp,
+                cfg.objectives,
+            )?;
+            out.push(score_log(
+                name,
+                trial,
+                &st.log,
+                &reference,
+                cfg.objectives,
+            ));
+        }
+    }
+    if !missing.is_empty() {
+        bail!(
+            "{} of {} race cells not checkpointed yet: {}",
+            missing.len(),
+            missing.len() + out.len(),
+            missing.join(", ")
+        );
+    }
+    Ok(out)
+}
+
+/// The race's global normalized Pareto front and its hypervolume:
+/// every trajectory folded through one incremental [`ParetoArchive`]
+/// in input order. [`merge_race`] and the in-process fused race
+/// produce results in the same canonical cell order, so the two
+/// fronts — points and PHV — compare bitwise.
+pub fn merged_front(
+    results: &[RaceResult],
+    reference: &Objectives,
+) -> (Vec<Objectives>, f64) {
+    let mut archive = ParetoArchive::new(PHV_REF);
+    for r in results {
+        for (_, o) in &r.trajectory {
+            archive.push([
+                o[0] / reference[0],
+                o[1] / reference[1],
+                o[2] / reference[2],
+            ]);
+        }
+    }
+    (archive.front(), archive.hypervolume())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_spec_parses_and_rejects() {
+        assert_eq!(
+            ShardSpec::parse("0/2").unwrap(),
+            ShardSpec { index: 0, count: 2 }
+        );
+        assert_eq!(
+            ShardSpec::parse(" 3 / 8 ").unwrap(),
+            ShardSpec { index: 3, count: 8 }
+        );
+        for bad in ["", "1", "a/2", "1/b", "2/2", "5/2", "1/0", "-1/2"]
+        {
+            assert!(ShardSpec::parse(bad).is_err(), "{bad:?}");
+        }
+        assert_eq!(ShardSpec::whole().to_string(), "0/1");
+    }
+
+    #[test]
+    fn shards_partition_cells_exactly_once() {
+        for count in 1..5usize {
+            for cell in 0..30usize {
+                let owners = (0..count)
+                    .filter(|&index| {
+                        ShardSpec { index, count }.owns(cell)
+                    })
+                    .count();
+                assert_eq!(owners, 1, "cell {cell} of {count}");
+            }
+        }
+    }
+
+    #[test]
+    fn cell_paths_are_stable() {
+        let dir = Path::new("/tmp/race");
+        assert_eq!(
+            cell_path(dir, "genetic", 3),
+            Path::new("/tmp/race/cells/genetic-t3.json")
+        );
+        assert_eq!(claim_name("genetic", 3), "claim-genetic-t3");
+    }
+
+    #[test]
+    fn merged_front_normalizes_against_reference() {
+        let traj = vec![
+            (DesignPoint::a100(), [2.0, 2.0, 2.0]),
+            (DesignPoint::a100(), [1.0, 1.0, 1.0]),
+        ];
+        let results = vec![score_like("a", traj)];
+        let (front, phv) = merged_front(&results, &[2.0, 2.0, 2.0]);
+        // [1,1,1] normalizes to [0.5; 3] and dominates [1.0; 3].
+        assert_eq!(front, vec![[0.5, 0.5, 0.5]]);
+        assert!((phv - 1.5f64.powi(3)).abs() < 1e-12);
+    }
+
+    fn score_like(
+        method: &'static str,
+        trajectory: Vec<(DesignPoint, Objectives)>,
+    ) -> RaceResult {
+        RaceResult {
+            method,
+            trial: 0,
+            phv: 0.0,
+            sample_efficiency: 0.0,
+            superior: 0,
+            trajectory,
+        }
+    }
+}

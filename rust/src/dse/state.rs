@@ -149,6 +149,74 @@ impl SessionState {
         let text = std::fs::read_to_string(path)?;
         Self::from_json(&Json::parse(&text)?)
     }
+
+    /// Validate the identity lane of a checkpoint against the run it
+    /// is being folded back into — replaying a log recorded under a
+    /// different configuration would silently produce a different
+    /// (but plausible-looking) trajectory. `what` names the
+    /// checkpoint in error messages (`"checkpoint"`, `"cell
+    /// genetic-t1"`); `None` fields are not checked.
+    #[allow(clippy::too_many_arguments)]
+    pub fn expect_identity(
+        &self,
+        what: &str,
+        method: &str,
+        model: Option<&str>,
+        seed: u64,
+        budget: usize,
+        evaluator: Option<&str>,
+        workload_fp: u64,
+        objectives: ObjectiveMode,
+    ) -> Result<()> {
+        if self.method != method {
+            bail!(
+                "{what} ran method {:?}, expected {method:?}",
+                self.method
+            );
+        }
+        if let Some(model) = model {
+            if self.model != model {
+                bail!(
+                    "{what} ran model {:?}, expected {model:?}",
+                    self.model
+                );
+            }
+        }
+        if self.seed != seed {
+            bail!(
+                "{what} ran seed {:#x}, expected {seed:#x}",
+                self.seed
+            );
+        }
+        if self.budget != budget {
+            bail!(
+                "{what} ran budget {}, expected {budget}",
+                self.budget
+            );
+        }
+        if let Some(evaluator) = evaluator {
+            if self.evaluator != evaluator {
+                bail!(
+                    "{what} ran evaluator {:?}, expected {evaluator:?}",
+                    self.evaluator
+                );
+            }
+        }
+        if self.workload_fp != workload_fp {
+            bail!(
+                "{what} ran workload {:#x}, expected {workload_fp:#x}",
+                self.workload_fp
+            );
+        }
+        if self.objectives != objectives {
+            bail!(
+                "{what} optimized {}, expected {}",
+                self.objectives.name(),
+                objectives.name()
+            );
+        }
+        Ok(())
+    }
 }
 
 fn str_field(j: &Json, key: &str) -> Result<String> {
@@ -380,6 +448,52 @@ mod tests {
         let again = SessionState::load(&path).unwrap();
         let _ = std::fs::remove_file(&path);
         assert_eq!(st, again);
+    }
+
+    #[test]
+    fn expect_identity_checks_every_lane() {
+        let st = state();
+        let seed = 0xdead_beef_cafe_f00d_u64;
+        let check = |method: &str,
+                     model: Option<&str>,
+                     seed: u64,
+                     budget: usize,
+                     evaluator: Option<&str>,
+                     fp: u64,
+                     mode: ObjectiveMode| {
+            st.expect_identity(
+                "checkpoint",
+                method,
+                model,
+                seed,
+                budget,
+                evaluator,
+                fp,
+                mode,
+            )
+        };
+        let m = ObjectiveMode::Ppa;
+        let ev = Some("roofline-rs");
+        let qw = Some("qwen3");
+        assert!(check("lumina", qw, seed, 40, ev, u64::MAX, m).is_ok());
+        // `None` lanes are not checked.
+        assert!(
+            check("lumina", None, seed, 40, None, u64::MAX, m).is_ok()
+        );
+        // Every mismatching lane trips.
+        assert!(check("genetic", qw, seed, 40, ev, u64::MAX, m).is_err());
+        let other = Some("phi4");
+        assert!(check("lumina", other, seed, 40, ev, u64::MAX, m)
+            .is_err());
+        assert!(check("lumina", qw, 1, 40, ev, u64::MAX, m).is_err());
+        assert!(check("lumina", qw, seed, 41, ev, u64::MAX, m).is_err());
+        let compass = Some("compass");
+        assert!(check("lumina", qw, seed, 40, compass, u64::MAX, m)
+            .is_err());
+        assert!(check("lumina", qw, seed, 40, ev, 7, m).is_err());
+        let la = ObjectiveMode::LatencyArea;
+        assert!(check("lumina", qw, seed, 40, ev, u64::MAX, la)
+            .is_err());
     }
 
     #[test]

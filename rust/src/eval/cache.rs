@@ -223,27 +223,31 @@ impl<E> CachedEvaluator<E> {
     }
 }
 
-/// Shared batch algorithm of both trait impls: forward unique uncached
-/// designs (first-appearance order) through `run_fresh`, memoize the
-/// results, assemble every requested slot from the map in input order,
-/// and count `hits = designs - fresh`, `misses = fresh`. A free
-/// function so `Evaluator::eval_batch` can pass a closure that mutably
-/// borrows the inner evaluator while the store is borrowed shared.
-fn batch_via(
-    cache: &SharedCache,
-    fp: u64,
+/// Tier-generic core of the shared batch algorithm: probe every design
+/// through `lookup`, forward unique misses (first-appearance order)
+/// through `run_fresh`, commit the fresh results, assemble every
+/// requested slot in input order, and `record(hits, misses)` with
+/// `hits = designs - fresh`, `misses = fresh`. Closure-shaped so the
+/// same algorithm serves both the in-memory [`SharedCache`] tier and
+/// the mem+disk read-through stack (`crate::eval::store`), and so
+/// `Evaluator::eval_batch` can pass a `run_fresh` that mutably borrows
+/// the inner evaluator while the store is borrowed shared.
+pub(crate) fn batch_via_tiers(
+    lookup: impl Fn(&DesignPoint) -> Option<Metrics>,
+    commit: impl Fn(&DesignPoint, Metrics),
+    record: impl Fn(u64, u64),
     designs: &[DesignPoint],
     run_fresh: impl FnOnce(&[DesignPoint]) -> Result<Vec<Metrics>>,
 ) -> Result<Vec<Metrics>> {
-    // One locked probe per design; the pure-hit path never touches the
-    // store again (fresh results are assembled from the local vec, not
+    // One probe per design; the pure-hit path never touches the tiers
+    // again (fresh results are assembled from the local vec, not
     // re-read through the shard locks).
     let mut slots: Vec<Option<Metrics>> =
         Vec::with_capacity(designs.len());
     let mut fresh: Vec<DesignPoint> = Vec::new();
     let mut seen: HashSet<DesignPoint> = HashSet::new();
     for d in designs {
-        let hit = cache.get(fp, d);
+        let hit = lookup(d);
         if hit.is_none() && seen.insert(*d) {
             fresh.push(*d);
         }
@@ -256,12 +260,9 @@ fn batch_via(
     };
     debug_assert_eq!(fresh_ms.len(), fresh.len());
     for (d, m) in fresh.iter().zip(&fresh_ms) {
-        cache.insert(fp, d, *m);
+        commit(d, *m);
     }
-    cache.record(
-        (designs.len() - fresh.len()) as u64,
-        fresh.len() as u64,
-    );
+    record((designs.len() - fresh.len()) as u64, fresh.len() as u64);
     let by_design: HashMap<DesignPoint, Metrics> =
         fresh.into_iter().zip(fresh_ms).collect();
     Ok(designs
@@ -272,6 +273,23 @@ fn batch_via(
             None => by_design[d],
         })
         .collect())
+}
+
+/// Shared batch algorithm of both trait impls, specialized to the
+/// single in-memory tier (see [`batch_via_tiers`]).
+fn batch_via(
+    cache: &SharedCache,
+    fp: u64,
+    designs: &[DesignPoint],
+    run_fresh: impl FnOnce(&[DesignPoint]) -> Result<Vec<Metrics>>,
+) -> Result<Vec<Metrics>> {
+    batch_via_tiers(
+        |d| cache.get(fp, d),
+        |d, m| cache.insert(fp, d, m),
+        |hits, misses| cache.record(hits, misses),
+        designs,
+        run_fresh,
+    )
 }
 
 impl<E: Evaluator> CachedEvaluator<E> {

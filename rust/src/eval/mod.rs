@@ -41,12 +41,16 @@ pub mod cache;
 pub mod parallel;
 pub mod pool;
 pub mod scratch;
+pub mod store;
 pub mod suite;
 
 pub use cache::{CachedEvaluator, SharedCache};
 pub use parallel::ParallelEvaluator;
 pub use pool::WorkerPool;
 pub use scratch::{with_caller_scratch, EvalScratch, SOA_LANES};
+pub use store::{
+    DirLock, DiskBackedCache, DiskCounters, DiskStore, StoreStats,
+};
 pub use suite::{ScenarioMetrics, SuiteEvaluator};
 
 use std::fmt;
@@ -292,6 +296,12 @@ pub trait EvalOne: Send + Sync {
         None
     }
 
+    /// Disk-tier counters, when a [`store::DiskBackedCache`] sits in
+    /// the stack (see [`DiskCounters`]).
+    fn memo_disk_counters(&self) -> Option<DiskCounters> {
+        None
+    }
+
     /// Seed known results into the memo store (checkpoint-resume path);
     /// no-op without one.
     fn memo_warm(&self, _pairs: &[(DesignPoint, Metrics)]) {}
@@ -386,6 +396,13 @@ pub trait Evaluator {
         None
     }
 
+    /// Disk-tier counters, when a [`store::DiskBackedCache`] sits in
+    /// the stack (see [`DiskCounters`]): warm-restart telemetry the
+    /// CLI reports and CI's warm-restart smoke asserts on.
+    fn disk_counters(&self) -> Option<DiskCounters> {
+        None
+    }
+
     /// Fingerprint of the workload the evaluator *currently* evaluates
     /// (0 = workload-agnostic/unknown). [`CachedEvaluator`] keys entries
     /// on *(workload, design)*, so evaluators whose workload can change
@@ -422,6 +439,10 @@ impl<E: Evaluator + ?Sized> Evaluator for Box<E> {
 
     fn cache_counters(&self) -> Option<CacheCounters> {
         (**self).cache_counters()
+    }
+
+    fn disk_counters(&self) -> Option<DiskCounters> {
+        (**self).disk_counters()
     }
 
     fn workload_fingerprint(&self) -> u64 {
@@ -499,6 +520,12 @@ impl<'a> BudgetedEvaluator<'a> {
     /// Inner evaluator's memoization counters, when it caches.
     pub fn cache_counters(&self) -> Option<CacheCounters> {
         self.inner.cache_counters()
+    }
+
+    /// Inner evaluator's disk-tier counters, when a
+    /// [`store::DiskBackedCache`] sits in the stack.
+    pub fn disk_counters(&self) -> Option<DiskCounters> {
+        self.inner.disk_counters()
     }
 
     /// Evaluate as many of `designs` as the budget allows; returns the

@@ -29,7 +29,8 @@ use std::collections::{HashMap, HashSet};
 use crate::design::DesignPoint;
 use crate::eval::scratch::{with_caller_scratch, EvalScratch};
 use crate::eval::{
-    CacheCounters, EvalOne, Evaluator, Metrics, WorkerPool,
+    CacheCounters, DiskCounters, EvalOne, Evaluator, Metrics,
+    WorkerPool,
 };
 use crate::Result;
 
@@ -115,6 +116,10 @@ impl<E: EvalOne> EvalOne for ParallelEvaluator<E> {
         self.inner.memo_counters()
     }
 
+    fn memo_disk_counters(&self) -> Option<DiskCounters> {
+        self.inner.memo_disk_counters()
+    }
+
     fn memo_warm(&self, pairs: &[(DesignPoint, Metrics)]) {
         self.inner.memo_warm(pairs);
     }
@@ -135,6 +140,10 @@ impl<E: EvalOne> Evaluator for ParallelEvaluator<E> {
 
     fn cache_counters(&self) -> Option<CacheCounters> {
         self.inner.memo_counters()
+    }
+
+    fn disk_counters(&self) -> Option<DiskCounters> {
+        self.inner.memo_disk_counters()
     }
 
     fn workload_fingerprint(&self) -> u64 {

@@ -1,0 +1,1026 @@
+//! On-disk memo store: warm evaluations that survive restarts and are
+//! shareable across a fleet of worker processes.
+//!
+//! A store is a directory of append-only binary **segment files** plus
+//! a sidecar `stats.json`. Each segment starts with a magic/version
+//! header and then holds fixed-size records, one memoized evaluation
+//! each, keyed exactly like [`SharedCache`] on **(workload
+//! fingerprint, design)**:
+//!
+//! ```text
+//! header  : "LMNMEMO1" (8)  | version u32 LE (4)            = 12 B
+//! record  : fp u64 LE   (8) | design 8 x u32 LE       (32)
+//!         | metrics 12 x f32-bits LE (48) | fnv1a64    (8)  = 96 B
+//! ```
+//!
+//! Floats travel as raw IEEE-754 bit patterns (`util::bin`), so a
+//! record read back is **bitwise** the metrics that were written — the
+//! store can sit under the evaluation stack without perturbing the
+//! repo's bit-identity guarantees. Every record carries an FNV-1a-64
+//! checksum over its first 88 bytes; on open, the whole directory is
+//! scanned into an in-memory `BTreeMap` index and a torn or corrupt
+//! tail (a crashed writer's partial record, a bit flip) is *skipped
+//! with a stderr note*, never an error — crash recovery is "reopen and
+//! keep going with every intact record".
+//!
+//! Multi-process safety needs no byte-range locks: each writer appends
+//! to its own `wip-<pid>-<k>.lms` file (claimed via `create_new`, so
+//! two processes can never share one) and **seals** it by rename to
+//! `seg-<pid>-<k>.lms` — rename is atomic, so readers see either the
+//! old name or the complete sealed segment. The advisory [`DirLock`]
+//! (`create_new` lock file, pid inside) serializes the one operation
+//! that deletes files — [`DiskStore::compact`] — and doubles as the
+//! claim protocol `dse::shard` uses to partition race cells. Appends
+//! are best-effort: an I/O error logs once and disables the writer
+//! (evaluation must not fail because a disk filled up).
+//!
+//! [`DiskBackedCache`] layers the store *under* a [`SharedCache`] as a
+//! read-through / write-behind tier and implements both evaluator
+//! traits exactly like [`CachedEvaluator`], so the CLI stack becomes
+//! `ParallelEvaluator<DiskBackedCache<Sim>>`: probes hit memory first,
+//! then disk (promoting into memory), and only true misses reach the
+//! worker pool; fresh results are written behind to both tiers.
+//!
+//! [`CachedEvaluator`]: crate::eval::CachedEvaluator
+
+use std::collections::BTreeMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::design::{DesignPoint, N_PARAMS};
+use crate::error::Context;
+use crate::eval::cache::batch_via_tiers;
+use crate::eval::scratch::EvalScratch;
+use crate::eval::{
+    CacheCounters, EvalOne, Evaluator, Metrics, SharedCache,
+};
+use crate::util::{bin, json::Json};
+use crate::{err, Result};
+
+/// Segment-file magic: "LuMiNa MEMO format 1".
+pub const MAGIC: [u8; 8] = *b"LMNMEMO1";
+/// On-disk format version (bump on any layout change).
+pub const FORMAT_VERSION: u32 = 1;
+/// Header length: magic + version.
+pub const HEADER_LEN: usize = 12;
+/// Fixed record length (see module docs for the layout).
+pub const RECORD_LEN: usize = 96;
+/// f32 lanes per record: the full [`Metrics`] struct.
+const N_METRIC_LANES: usize = 12;
+/// Segment rotation threshold: seal the write-in-progress file once it
+/// crosses this many bytes (~10.9k records/segment).
+const ROTATE_BYTES: u64 = 1 << 20;
+
+/// Filename of a write-in-progress segment owned by `pid`.
+fn wip_name(pid: u32, k: u64) -> String {
+    format!("wip-{pid:010}-{k:06}.lms")
+}
+
+/// Sealed name of the same segment (rename target).
+fn seg_name(pid: u32, k: u64) -> String {
+    format!("seg-{pid:010}-{k:06}.lms")
+}
+
+/// The 12 metric lanes in record order (struct declaration order:
+/// timing, area, energy, then the two stall stacks).
+fn metric_lanes(m: &Metrics) -> [f32; N_METRIC_LANES] {
+    [
+        m.ttft_ms,
+        m.tpot_ms,
+        m.area_mm2,
+        m.energy_per_token_mj,
+        m.prefill_energy_mj,
+        m.avg_power_w,
+        m.stalls[0][0],
+        m.stalls[0][1],
+        m.stalls[0][2],
+        m.stalls[1][0],
+        m.stalls[1][1],
+        m.stalls[1][2],
+    ]
+}
+
+fn lanes_to_metrics(l: [f32; N_METRIC_LANES]) -> Metrics {
+    Metrics {
+        ttft_ms: l[0],
+        tpot_ms: l[1],
+        area_mm2: l[2],
+        energy_per_token_mj: l[3],
+        prefill_energy_mj: l[4],
+        avg_power_w: l[5],
+        stalls: [[l[6], l[7], l[8]], [l[9], l[10], l[11]]],
+    }
+}
+
+/// Serialize one record (checksum included).
+fn encode_record(fp: u64, d: &DesignPoint, m: &Metrics) -> Vec<u8> {
+    let mut out = Vec::with_capacity(RECORD_LEN);
+    bin::put_u64(&mut out, fp);
+    for v in d.values {
+        bin::put_u32(&mut out, v);
+    }
+    for v in metric_lanes(m) {
+        bin::put_f32(&mut out, v);
+    }
+    let sum = bin::fnv1a64(&out);
+    bin::put_u64(&mut out, sum);
+    debug_assert_eq!(out.len(), RECORD_LEN);
+    out
+}
+
+/// Parse + checksum-validate one record; `None` on any damage.
+fn decode_record(rec: &[u8]) -> Option<((u64, DesignPoint), Metrics)> {
+    if rec.len() != RECORD_LEN {
+        return None;
+    }
+    let body = &rec[..RECORD_LEN - 8];
+    if bin::read_u64(rec, RECORD_LEN - 8)? != bin::fnv1a64(body) {
+        return None;
+    }
+    let fp = bin::read_u64(rec, 0)?;
+    let mut values = [0u32; N_PARAMS];
+    for (i, v) in values.iter_mut().enumerate() {
+        *v = bin::read_u32(rec, 8 + i * 4)?;
+    }
+    let mut lanes = [0f32; N_METRIC_LANES];
+    for (i, v) in lanes.iter_mut().enumerate() {
+        *v = bin::read_f32(rec, 40 + i * 4)?;
+    }
+    Some(((fp, DesignPoint::new(values)), lanes_to_metrics(lanes)))
+}
+
+/// Advisory directory lock: a `create_new` lock file holding the
+/// owner's pid. Guards compaction (the only file-deleting operation)
+/// and provides the claim primitive `dse::shard` partitions race
+/// cells with. Dropping releases; [`DirLock::persist`] instead leaves
+/// the file on disk as a durable claim marker.
+#[derive(Debug)]
+pub struct DirLock {
+    path: PathBuf,
+    held: bool,
+}
+
+impl DirLock {
+    /// `create_new` race: `Ok(None)` means some process already holds
+    /// the file; real I/O trouble is an error.
+    fn create(path: PathBuf) -> Result<Option<DirLock>> {
+        match OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&path)
+        {
+            Ok(mut f) => {
+                // Holder pid, purely diagnostic; claim is the file.
+                let _ = writeln!(f, "{}", std::process::id());
+                Ok(Some(DirLock { path, held: true }))
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::AlreadyExists =>
+            {
+                Ok(None)
+            }
+            Err(e) => Err(e).context(format!(
+                "acquiring lock {}",
+                path.display()
+            )),
+        }
+    }
+
+    /// Acquire `dir/<name>`; fails fast (no blocking/retry) when
+    /// another process holds it, reporting the holder's pid.
+    pub fn acquire(dir: &Path, name: &str) -> Result<DirLock> {
+        let path = dir.join(name);
+        match DirLock::create(path.clone())? {
+            Some(lock) => Ok(lock),
+            None => {
+                let holder = fs::read_to_string(&path)
+                    .unwrap_or_default()
+                    .trim()
+                    .to_string();
+                Err(err!(
+                    "lock {} held (pid {})",
+                    path.display(),
+                    if holder.is_empty() { "?" } else { &holder }
+                ))
+            }
+        }
+    }
+
+    /// Non-erroring claim: `Ok(true)` when this call won the file,
+    /// `Ok(false)` when some process (possibly us, earlier) already
+    /// holds it. The won claim is persistent (survives the process).
+    pub fn try_claim(dir: &Path, name: &str) -> Result<bool> {
+        Ok(match DirLock::create(dir.join(name))? {
+            Some(lock) => {
+                lock.persist();
+                true
+            }
+            None => false,
+        })
+    }
+
+    /// Keep the lock file on disk permanently (claim-marker mode).
+    pub fn persist(mut self) {
+        self.held = false;
+    }
+}
+
+impl Drop for DirLock {
+    fn drop(&mut self) {
+        if self.held {
+            let _ = fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// One write-in-progress segment file.
+#[derive(Debug)]
+struct SegWriter {
+    file: File,
+    pid: u32,
+    k: u64,
+    written: u64,
+}
+
+/// Per-session disk-tier counters (cumulative session totals are
+/// additionally folded into the store's `stats.json` on drop).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DiskCounters {
+    /// Lookups served from disk (first touch per entry; later probes
+    /// hit the promoted in-memory copy).
+    pub hits: u64,
+    /// Records appended this session.
+    pub appended: u64,
+    /// Records recovered from disk when the store was opened.
+    pub entries_on_open: u64,
+}
+
+/// Aggregate shape of a store directory (the `cache stats` report).
+#[derive(Debug, Clone, Default)]
+pub struct StoreStats {
+    pub sealed_segments: usize,
+    pub wip_segments: usize,
+    pub bytes: u64,
+    pub entries: usize,
+    /// Records skipped on open (torn tails, checksum failures).
+    pub skipped: usize,
+    /// Distinct entries per workload fingerprint.
+    pub per_workload: BTreeMap<u64, usize>,
+    /// Lifetime counters from `stats.json` (0 when absent).
+    pub lifetime_hits: u64,
+    pub lifetime_appended: u64,
+}
+
+/// The on-disk memo store (see module docs for format + protocol).
+/// All methods take `&self`; the store is shared across threads via
+/// `Arc` and across processes via the directory itself.
+#[derive(Debug)]
+pub struct DiskStore {
+    dir: PathBuf,
+    index: RwLock<BTreeMap<(u64, DesignPoint), Metrics>>,
+    writer: Mutex<Option<SegWriter>>,
+    /// Next wip-file ordinal to probe for this process.
+    next_k: AtomicU64,
+    /// Set after the first append failure: stop writing, keep serving.
+    broken: AtomicBool,
+    /// Session counters already folded into `stats.json`.
+    persisted: AtomicBool,
+    hits: AtomicU64,
+    appended: AtomicU64,
+    entries_on_open: u64,
+    skipped_on_open: usize,
+}
+
+impl DiskStore {
+    /// Open (creating if absent) the store at `dir`, scanning every
+    /// segment into the in-memory index. Damaged tails are skipped
+    /// with a stderr note; only directory-level I/O errors fail.
+    pub fn open(dir: &Path) -> Result<DiskStore> {
+        fs::create_dir_all(dir).with_context(|| {
+            format!("creating store dir {}", dir.display())
+        })?;
+        let mut index = BTreeMap::new();
+        let mut skipped = 0usize;
+        for name in segment_names(dir)? {
+            let path = dir.join(&name);
+            let bytes = match fs::read(&path) {
+                Ok(b) => b,
+                // A concurrent compact may remove segments under us;
+                // whatever replaced them holds the same records.
+                Err(e) => {
+                    eprintln!(
+                        "store: skipping unreadable segment {name}: {e}"
+                    );
+                    continue;
+                }
+            };
+            skipped += scan_segment(&name, &bytes, &mut index);
+        }
+        let entries_on_open = index.len() as u64;
+        Ok(DiskStore {
+            dir: dir.to_path_buf(),
+            index: RwLock::new(index),
+            writer: Mutex::new(None),
+            next_k: AtomicU64::new(0),
+            broken: AtomicBool::new(false),
+            persisted: AtomicBool::new(false),
+            hits: AtomicU64::new(0),
+            appended: AtomicU64::new(0),
+            entries_on_open,
+            skipped_on_open: skipped,
+        })
+    }
+
+    /// Open wrapped in `Arc` (the shape evaluator stacks want).
+    pub fn open_shared(dir: &Path) -> Result<Arc<DiskStore>> {
+        Ok(Arc::new(DiskStore::open(dir)?))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Silent index lookup (no counter effects; promotion layers call
+    /// [`DiskStore::note_hit`] when they serve a result from here).
+    pub fn get(&self, fp: u64, d: &DesignPoint) -> Option<Metrics> {
+        self.index
+            .read()
+            // lumina: allow(P001) poison propagates a panic from a peer thread
+            .expect("store index poisoned")
+            .get(&(fp, *d))
+            .copied()
+    }
+
+    pub fn contains(&self, fp: u64, d: &DesignPoint) -> bool {
+        self.get(fp, d).is_some()
+    }
+
+    /// Count one lookup served from the disk tier.
+    pub fn note_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Append one record (write-behind; best-effort). The entry is
+    /// always visible in the in-memory index; if the disk write fails
+    /// the store logs once and stops writing for this session.
+    pub fn append(&self, fp: u64, d: &DesignPoint, m: &Metrics) {
+        self.index
+            .write()
+            // lumina: allow(P001) poison propagates a panic from a peer thread
+            .expect("store index poisoned")
+            .insert((fp, *d), *m);
+        if self.broken.load(Ordering::Relaxed) {
+            return;
+        }
+        if let Err(e) = self.append_bytes(&encode_record(fp, d, m)) {
+            self.broken.store(true, Ordering::Relaxed);
+            eprintln!("store: append failed, writes disabled: {e}");
+        } else {
+            self.appended.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn append_bytes(&self, rec: &[u8]) -> Result<()> {
+        let mut guard = self
+            .writer
+            .lock()
+            // lumina: allow(P001) poison propagates a panic from a peer thread
+            .expect("store writer poisoned");
+        if guard.is_none() {
+            *guard = Some(self.open_writer()?);
+        }
+        // lumina: allow(P001) just assigned above when it was None
+        let w = guard.as_mut().expect("writer present");
+        w.file.write_all(rec)?;
+        w.written += rec.len() as u64;
+        if w.written >= ROTATE_BYTES {
+            // lumina: allow(P001) checked Some on the line above
+            let full = guard.take().expect("writer present");
+            seal_writer(&self.dir, full)?;
+        }
+        Ok(())
+    }
+
+    /// Claim a fresh `wip-<pid>-<k>.lms` via `create_new` (collisions
+    /// — a previous incarnation's leftover — just advance `k`).
+    fn open_writer(&self) -> Result<SegWriter> {
+        let pid = std::process::id();
+        loop {
+            let k = self.next_k.fetch_add(1, Ordering::Relaxed);
+            let path = self.dir.join(wip_name(pid, k));
+            match OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(mut file) => {
+                    let mut hdr = Vec::with_capacity(HEADER_LEN);
+                    hdr.extend_from_slice(&MAGIC);
+                    bin::put_u32(&mut hdr, FORMAT_VERSION);
+                    file.write_all(&hdr)?;
+                    return Ok(SegWriter {
+                        file,
+                        pid,
+                        k,
+                        written: HEADER_LEN as u64,
+                    });
+                }
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::AlreadyExists =>
+                {
+                    continue;
+                }
+                Err(e) => {
+                    return Err(e).context(format!(
+                        "creating segment {}",
+                        path.display()
+                    ))
+                }
+            }
+        }
+    }
+
+    /// Seal the write-in-progress segment (flush + atomic rename to
+    /// `seg-*`), making it immutable and compaction-eligible. No-op
+    /// without an open writer. Also folds the session counters into
+    /// `stats.json`.
+    pub fn seal(&self) -> Result<()> {
+        let taken = self
+            .writer
+            .lock()
+            // lumina: allow(P001) poison propagates a panic from a peer thread
+            .expect("store writer poisoned")
+            .take();
+        if let Some(w) = taken {
+            seal_writer(&self.dir, w)?;
+        }
+        self.persist_stats();
+        Ok(())
+    }
+
+    /// Distinct (workload, design) records currently indexed.
+    pub fn len(&self) -> usize {
+        self.index
+            .read()
+            // lumina: allow(P001) poison propagates a panic from a peer thread
+            .expect("store index poisoned")
+            .len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Session counters (see [`DiskCounters`]).
+    pub fn counters(&self) -> DiskCounters {
+        DiskCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            appended: self.appended.load(Ordering::Relaxed),
+            entries_on_open: self.entries_on_open,
+        }
+    }
+
+    /// Records skipped while scanning on open.
+    pub fn skipped_on_open(&self) -> usize {
+        self.skipped_on_open
+    }
+
+    /// Directory-level aggregate for `cache stats`.
+    pub fn stats(&self) -> Result<StoreStats> {
+        let mut s = StoreStats::default();
+        for name in segment_names(&self.dir)? {
+            if name.starts_with("wip-") {
+                s.wip_segments += 1;
+            } else {
+                s.sealed_segments += 1;
+            }
+            if let Ok(meta) = fs::metadata(self.dir.join(&name)) {
+                s.bytes += meta.len();
+            }
+        }
+        let index = self
+            .index
+            .read()
+            // lumina: allow(P001) poison propagates a panic from a peer thread
+            .expect("store index poisoned");
+        s.entries = index.len();
+        for (fp, _) in index.keys() {
+            *s.per_workload.entry(*fp).or_insert(0) += 1;
+        }
+        s.skipped = self.skipped_on_open;
+        let (h, a) = self.lifetime_counters();
+        s.lifetime_hits = h + self.hits.load(Ordering::Relaxed);
+        s.lifetime_appended =
+            a + self.appended.load(Ordering::Relaxed);
+        Ok(s)
+    }
+
+    /// Rewrite every live index record into one fresh sealed segment
+    /// and delete the sealed segments it supersedes. Serialized by the
+    /// advisory [`DirLock`]; write-in-progress files of live writers
+    /// are left alone (their later sealing can at worst duplicate
+    /// records, and duplicates are benign — evaluators are pure, so
+    /// the bits agree). Returns (records written, segments removed).
+    pub fn compact(&self) -> Result<(usize, usize)> {
+        let _lock = DirLock::acquire(&self.dir, "LOCK")?;
+        // Seal our own writer first so our records are on disk and no
+        // wip file of ours lingers.
+        self.seal()?;
+        let old: Vec<String> = segment_names(&self.dir)?
+            .into_iter()
+            .filter(|n| n.starts_with("seg-"))
+            .collect();
+        let snapshot: Vec<((u64, DesignPoint), Metrics)> = {
+            let index = self
+                .index
+                .read()
+                // lumina: allow(P001) poison propagates a panic from a peer thread
+                .expect("store index poisoned");
+            index.iter().map(|(k, v)| (*k, *v)).collect()
+        };
+        let mut w = self.open_writer()?;
+        for ((fp, d), m) in &snapshot {
+            let rec = encode_record(*fp, d, m);
+            w.file.write_all(&rec)?;
+            w.written += rec.len() as u64;
+        }
+        seal_writer(&self.dir, w)?;
+        // Old segments go only after the replacement is sealed, so a
+        // crash mid-compact can duplicate records but never lose any.
+        let mut removed = 0usize;
+        for name in &old {
+            match fs::remove_file(self.dir.join(name)) {
+                Ok(()) => removed += 1,
+                Err(e) => eprintln!(
+                    "store: compact could not remove {name}: {e}"
+                ),
+            }
+        }
+        Ok((snapshot.len(), removed))
+    }
+
+    /// Delete every segment file (and the `stats.json` sidecar) in
+    /// `dir` without opening the store — the `cache clear`
+    /// maintenance verb. Serialized by the advisory [`DirLock`] like
+    /// [`Self::compact`]. Returns (files removed, bytes freed).
+    pub fn clear(dir: &Path) -> Result<(usize, u64)> {
+        let _lock = DirLock::acquire(dir, "LOCK")?;
+        let mut files = 0usize;
+        let mut bytes = 0u64;
+        for name in segment_names(dir)? {
+            let path = dir.join(&name);
+            if let Ok(meta) = fs::metadata(&path) {
+                bytes += meta.len();
+            }
+            fs::remove_file(&path)?;
+            files += 1;
+        }
+        let stats = dir.join("stats.json");
+        if stats.exists() {
+            fs::remove_file(&stats)?;
+        }
+        Ok((files, bytes))
+    }
+
+    /// Lifetime counters recorded by previous sessions (from
+    /// `stats.json`; zeros when absent/unreadable).
+    fn lifetime_counters(&self) -> (u64, u64) {
+        let raw = match fs::read_to_string(self.stats_path()) {
+            Ok(s) => s,
+            Err(_) => return (0, 0),
+        };
+        let Ok(j) = Json::parse(&raw) else { return (0, 0) };
+        let get = |k: &str| {
+            j.get(k)
+                .ok()
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0) as u64
+        };
+        (get("hits"), get("appended"))
+    }
+
+    fn stats_path(&self) -> PathBuf {
+        self.dir.join("stats.json")
+    }
+
+    /// Fold this session's counters into `stats.json` (best-effort,
+    /// once; tmp + rename like every other artifact writer). The file
+    /// is advisory telemetry — concurrent sessions may interleave and
+    /// lose an update; the segment data never depends on it.
+    pub fn persist_stats(&self) {
+        if self.persisted.swap(true, Ordering::Relaxed) {
+            return;
+        }
+        let (h, a) = self.lifetime_counters();
+        let mut obj = BTreeMap::new();
+        obj.insert(
+            "hits".to_string(),
+            Json::Num((h + self.hits.load(Ordering::Relaxed)) as f64),
+        );
+        obj.insert(
+            "appended".to_string(),
+            Json::Num(
+                (a + self.appended.load(Ordering::Relaxed)) as f64,
+            ),
+        );
+        let body = Json::Obj(obj).pretty();
+        let tmp = self
+            .dir
+            .join(format!("stats.json.tmp-{}", std::process::id()));
+        let ok = fs::write(&tmp, body)
+            .and_then(|()| fs::rename(&tmp, self.stats_path()));
+        if let Err(e) = ok {
+            eprintln!("store: could not persist stats.json: {e}");
+        }
+    }
+}
+
+impl Drop for DiskStore {
+    fn drop(&mut self) {
+        if let Err(e) = self.seal() {
+            eprintln!("store: seal on drop failed: {e}");
+        }
+    }
+}
+
+/// Flush + fsync + rename `wip-*` to its sealed `seg-*` name.
+fn seal_writer(dir: &Path, mut w: SegWriter) -> Result<()> {
+    w.file.flush()?;
+    w.file.sync_all()?;
+    let from = dir.join(wip_name(w.pid, w.k));
+    let to = dir.join(seg_name(w.pid, w.k));
+    fs::rename(&from, &to).with_context(|| {
+        format!("sealing segment {}", from.display())
+    })
+}
+
+/// Segment filenames under `dir`, sorted for a deterministic scan
+/// order (`read_dir` order is filesystem-dependent).
+fn segment_names(dir: &Path) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    for entry in fs::read_dir(dir).with_context(|| {
+        format!("listing store dir {}", dir.display())
+    })? {
+        let name = entry?.file_name().to_string_lossy().into_owned();
+        let is_seg = name.starts_with("seg-")
+            || name.starts_with("wip-");
+        if is_seg && name.ends_with(".lms") {
+            names.push(name);
+        }
+    }
+    names.sort();
+    Ok(names)
+}
+
+/// Fold one segment's intact records into `index`; returns how many
+/// records were skipped (bad header counts the whole file's records).
+fn scan_segment(
+    name: &str,
+    bytes: &[u8],
+    index: &mut BTreeMap<(u64, DesignPoint), Metrics>,
+) -> usize {
+    if bytes.len() < HEADER_LEN
+        || bytes[..8] != MAGIC
+        || bin::read_u32(bytes, 8) != Some(FORMAT_VERSION)
+    {
+        eprintln!("store: {name}: bad header, segment skipped");
+        return bytes.len().saturating_sub(HEADER_LEN) / RECORD_LEN;
+    }
+    let mut skipped = 0usize;
+    let body = &bytes[HEADER_LEN..];
+    let whole = body.len() / RECORD_LEN;
+    for (i, rec) in body.chunks(RECORD_LEN).enumerate() {
+        match decode_record(rec) {
+            Some((key, m)) => {
+                index.insert(key, m);
+            }
+            None if rec.len() < RECORD_LEN => {
+                // Torn tail: a writer crashed mid-record. Everything
+                // before it was intact; carry on.
+                eprintln!(
+                    "store: {name}: torn tail ({} bytes) skipped",
+                    rec.len()
+                );
+                skipped += 1;
+            }
+            None => {
+                // Checksum failure: nothing after this offset can be
+                // trusted (lengths are only implicit in the framing).
+                let rest = whole - i;
+                eprintln!(
+                    "store: {name}: bad checksum at record {i}, \
+                     {rest} record(s) skipped"
+                );
+                skipped += rest;
+                break;
+            }
+        }
+    }
+    skipped
+}
+
+/// Read-through / write-behind two-tier memo cache: an in-memory
+/// [`SharedCache`] in front of a [`DiskStore`]. Implements both
+/// evaluator traits exactly like [`CachedEvaluator`], so it composes
+/// with [`ParallelEvaluator`] identically — disk- and memory-resident
+/// designs are served on the caller thread without touching the pool,
+/// and only true misses are dispatched.
+///
+/// Counter semantics: the [`SharedCache`] hit/miss counters treat a
+/// disk-served lookup as a *hit* (it costs no simulator work, so
+/// [`BudgetedEvaluator`] lets it ride budget-free); the promotion
+/// itself is additionally counted in [`DiskCounters::hits`].
+///
+/// [`CachedEvaluator`]: crate::eval::CachedEvaluator
+/// [`ParallelEvaluator`]: crate::eval::ParallelEvaluator
+/// [`BudgetedEvaluator`]: crate::eval::BudgetedEvaluator
+#[derive(Debug)]
+pub struct DiskBackedCache<E> {
+    inner: E,
+    mem: SharedCache,
+    disk: Arc<DiskStore>,
+}
+
+impl<E> DiskBackedCache<E> {
+    pub fn new(inner: E, disk: Arc<DiskStore>) -> Self {
+        Self { inner, mem: SharedCache::new(), disk }
+    }
+
+    /// Wrap over existing (possibly shared) tiers.
+    pub fn with_tiers(
+        inner: E,
+        mem: SharedCache,
+        disk: Arc<DiskStore>,
+    ) -> Self {
+        Self { inner, mem, disk }
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    pub fn mem(&self) -> &SharedCache {
+        &self.mem
+    }
+
+    pub fn disk(&self) -> &Arc<DiskStore> {
+        &self.disk
+    }
+
+    /// In-memory tier lookup counters.
+    pub fn counters(&self) -> CacheCounters {
+        self.mem.counters()
+    }
+
+    /// Two-tier probe: memory first, then disk with promotion.
+    fn tier_get(&self, fp: u64, d: &DesignPoint) -> Option<Metrics> {
+        if let Some(m) = self.mem.get(fp, d) {
+            return Some(m);
+        }
+        let m = self.disk.get(fp, d)?;
+        self.mem.insert_if_absent(fp, d, m);
+        self.disk.note_hit();
+        Some(m)
+    }
+
+    /// Write-behind commit to both tiers.
+    fn tier_put(&self, fp: u64, d: &DesignPoint, m: Metrics) {
+        self.mem.insert(fp, d, m);
+        self.disk.append(fp, d, &m);
+    }
+
+    /// Seed known results without counter effects (resume path); new
+    /// pairs are persisted, already-stored ones are not re-appended.
+    fn warm_with_fp(&self, fp: u64, pairs: &[(DesignPoint, Metrics)]) {
+        for (d, m) in pairs {
+            self.mem.insert_if_absent(fp, d, *m);
+            if !self.disk.contains(fp, d) {
+                self.disk.append(fp, d, m);
+            }
+        }
+    }
+
+    fn batch_with_fp(
+        &self,
+        fp: u64,
+        designs: &[DesignPoint],
+        run_fresh: impl FnOnce(&[DesignPoint]) -> Result<Vec<Metrics>>,
+    ) -> Result<Vec<Metrics>> {
+        batch_via_tiers(
+            |d| self.tier_get(fp, d),
+            |d, m| self.tier_put(fp, d, m),
+            |hits, misses| self.mem.record(hits, misses),
+            designs,
+            run_fresh,
+        )
+    }
+}
+
+impl<E: Evaluator> Evaluator for DiskBackedCache<E> {
+    fn eval_batch(&mut self, designs: &[DesignPoint]) -> Result<Vec<Metrics>> {
+        let fp = self.inner.workload_fingerprint();
+        // Split borrow: tiers shared, inner evaluator mutable.
+        let (mem, disk) = (&self.mem, &self.disk);
+        let inner = &mut self.inner;
+        batch_via_tiers(
+            |d| {
+                if let Some(m) = mem.get(fp, d) {
+                    return Some(m);
+                }
+                let m = disk.get(fp, d)?;
+                mem.insert_if_absent(fp, d, m);
+                disk.note_hit();
+                Some(m)
+            },
+            |d, m| {
+                mem.insert(fp, d, m);
+                disk.append(fp, d, &m);
+            },
+            |hits, misses| mem.record(hits, misses),
+            designs,
+            |fresh| inner.eval_batch(fresh),
+        )
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn is_cached(&self, d: &DesignPoint) -> bool {
+        let fp = self.inner.workload_fingerprint();
+        self.mem.contains(fp, d) || self.disk.contains(fp, d)
+    }
+
+    fn cache_counters(&self) -> Option<CacheCounters> {
+        Some(self.mem.counters())
+    }
+
+    fn disk_counters(&self) -> Option<DiskCounters> {
+        Some(self.disk.counters())
+    }
+
+    fn workload_fingerprint(&self) -> u64 {
+        self.inner.workload_fingerprint()
+    }
+
+    fn preload(&mut self, pairs: &[(DesignPoint, Metrics)]) {
+        self.warm_with_fp(self.inner.workload_fingerprint(), pairs);
+    }
+}
+
+impl<E: EvalOne> EvalOne for DiskBackedCache<E> {
+    fn eval_one(&self, d: &DesignPoint) -> Metrics {
+        let fp = EvalOne::workload_fingerprint(&self.inner);
+        if let Some(m) = self.tier_get(fp, d) {
+            self.mem.record(1, 0);
+            return m;
+        }
+        let m = self.inner.eval_one(d);
+        self.tier_put(fp, d, m);
+        self.mem.record(0, 1);
+        m
+    }
+
+    fn label(&self) -> &'static str {
+        self.inner.label()
+    }
+
+    fn workload_fingerprint(&self) -> u64 {
+        EvalOne::workload_fingerprint(&self.inner)
+    }
+
+    fn eval_chunk(
+        &self,
+        designs: &[DesignPoint],
+        out: &mut [Metrics],
+        scratch: &mut EvalScratch,
+    ) {
+        let fp = EvalOne::workload_fingerprint(&self.inner);
+        let ms = self
+            .batch_with_fp(fp, designs, |fresh| {
+                let mut fresh_ms =
+                    vec![Metrics::default(); fresh.len()];
+                self.inner.eval_chunk(fresh, &mut fresh_ms, scratch);
+                Ok(fresh_ms)
+            })
+            // lumina: allow(P001) the closure is Ok-returning; cannot fail
+            .expect("infallible inner chunk");
+        out.copy_from_slice(&ms);
+    }
+
+    fn probe(&self, d: &DesignPoint) -> Option<Metrics> {
+        self.tier_get(EvalOne::workload_fingerprint(&self.inner), d)
+    }
+
+    fn memoizes(&self) -> bool {
+        true
+    }
+
+    fn count_hits(&self, n: u64) {
+        self.mem.record(n, 0);
+    }
+
+    fn memo_counters(&self) -> Option<CacheCounters> {
+        Some(self.mem.counters())
+    }
+
+    fn memo_disk_counters(&self) -> Option<DiskCounters> {
+        Some(self.disk.counters())
+    }
+
+    fn memo_warm(&self, pairs: &[(DesignPoint, Metrics)]) {
+        self.warm_with_fp(
+            EvalOne::workload_fingerprint(&self.inner),
+            pairs,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_metrics(tag: f32) -> Metrics {
+        Metrics {
+            ttft_ms: 30.0 + tag,
+            tpot_ms: 0.5,
+            area_mm2: 800.0,
+            energy_per_token_mj: 40.0,
+            prefill_energy_mj: 8000.0,
+            avg_power_w: 263.6,
+            stalls: [[20.0, 4.0, 6.0], [0.01, 0.4, 0.09]],
+        }
+    }
+
+    #[test]
+    fn record_round_trips_bitwise() {
+        let d = DesignPoint::a100();
+        let mut m = sample_metrics(0.0);
+        // Exercise payloads a text round-trip would mangle.
+        m.tpot_ms = f32::from_bits(0x0000_0001);
+        m.stalls[1][2] = -0.0;
+        let rec = encode_record(0xfeed_beef, &d, &m);
+        assert_eq!(rec.len(), RECORD_LEN);
+        let ((fp, d2), m2) = decode_record(&rec).unwrap();
+        assert_eq!(fp, 0xfeed_beef);
+        assert_eq!(d2, d);
+        let (a, b) = (metric_lanes(&m), metric_lanes(&m2));
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_damage() {
+        let d = DesignPoint::a100();
+        let m = sample_metrics(1.0);
+        let rec = encode_record(7, &d, &m);
+        // Any single-byte flip must fail the checksum.
+        for i in [0usize, 11, 40, RECORD_LEN - 1] {
+            let mut bad = rec.clone();
+            bad[i] ^= 0x40;
+            assert!(decode_record(&bad).is_none(), "flip at {i}");
+        }
+        // Short (torn) records never decode.
+        assert!(decode_record(&rec[..RECORD_LEN - 1]).is_none());
+        assert!(decode_record(&[]).is_none());
+    }
+
+    #[test]
+    fn scan_segment_skips_from_first_bad_checksum() {
+        let d = DesignPoint::a100();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bin::put_u32(&mut bytes, FORMAT_VERSION);
+        for i in 0..4 {
+            let m = sample_metrics(i as f32);
+            let dd = d.with(crate::design::Param::Cores, 32 + i);
+            bytes.extend_from_slice(&encode_record(9, &dd, &m));
+        }
+        // Corrupt record 2: records 0..2 survive, 2..4 are dropped.
+        bytes[HEADER_LEN + 2 * RECORD_LEN + 5] ^= 0xff;
+        let mut index = BTreeMap::new();
+        let skipped = scan_segment("t.lms", &bytes, &mut index);
+        assert_eq!(index.len(), 2);
+        assert_eq!(skipped, 2);
+    }
+
+    #[test]
+    fn scan_segment_rejects_bad_header() {
+        let mut index = BTreeMap::new();
+        let skipped = scan_segment("t.lms", b"NOTMAGIC", &mut index);
+        assert_eq!(skipped, 0);
+        assert!(index.is_empty());
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bin::put_u32(&mut bytes, FORMAT_VERSION + 1);
+        bytes.extend_from_slice(&[0u8; RECORD_LEN]);
+        let skipped = scan_segment("t.lms", &bytes, &mut index);
+        assert_eq!(skipped, 1, "future version: all records skipped");
+        assert!(index.is_empty());
+    }
+}

@@ -6,9 +6,11 @@
 use crate::baselines::{all_methods_mode, all_sessions_mode, DseMethod};
 use crate::design::{DesignPoint, DesignSpace};
 use crate::dse::{FusedRace, NullObserver, Observer};
+use std::sync::Arc;
+
 use crate::eval::{
-    BudgetedEvaluator, CachedEvaluator, Evaluator, Metrics,
-    ParallelEvaluator,
+    BudgetedEvaluator, CachedEvaluator, DiskBackedCache, DiskStore,
+    Evaluator, Metrics, ParallelEvaluator,
 };
 use crate::pareto::{
     normalize, phv_ref, sample_efficiency, superior_count,
@@ -84,6 +86,49 @@ impl EvaluatorKind {
             EvaluatorKind::Compass => {
                 Box::new(ParallelEvaluator::new(CachedEvaluator::new(
                     CompassSim::new(*spec),
+                )))
+            }
+        }
+    }
+
+    /// [`Self::make_cached_for`] with the memo store spilled to disk:
+    /// `ParallelEvaluator<DiskBackedCache<Sim>>`. The in-memory
+    /// [`crate::eval::SharedCache`] stays the hot tier (probed on the
+    /// caller thread, hits never touch the worker pool); the
+    /// [`DiskStore`] underneath serves warm restarts and is shared —
+    /// via its `Arc` — by every process pointing `--cache-dir` at the
+    /// same directory. Results and budget accounting are bit-identical
+    /// to the purely in-memory stack: the disk tier only changes
+    /// *where* a memoized metric is found, never its value.
+    pub fn make_cached_disk_for(
+        self,
+        spec: &WorkloadSpec,
+        disk: Arc<DiskStore>,
+    ) -> Box<dyn Evaluator> {
+        match self {
+            EvaluatorKind::RooflinePjrt => {
+                match open_matching_pjrt(spec) {
+                    Some(e) => {
+                        Box::new(DiskBackedCache::new(e, disk))
+                    }
+                    None => Box::new(ParallelEvaluator::new(
+                        DiskBackedCache::new(
+                            RooflineSim::new(*spec),
+                            disk,
+                        ),
+                    )),
+                }
+            }
+            EvaluatorKind::RooflineRust => {
+                Box::new(ParallelEvaluator::new(DiskBackedCache::new(
+                    RooflineSim::new(*spec),
+                    disk,
+                )))
+            }
+            EvaluatorKind::Compass => {
+                Box::new(ParallelEvaluator::new(DiskBackedCache::new(
+                    CompassSim::new(*spec),
+                    disk,
                 )))
             }
         }
@@ -194,6 +239,15 @@ pub fn reference_objectives(
     Ok(reference_metrics(kind, workload)?.objectives())
 }
 
+/// Per-trial session seed. Every race driver — serial, fused, and the
+/// sharded workers/merge in [`crate::dse::shard`] — derives cell seeds
+/// through this one formula, so a shard worker on another process
+/// constructs sessions bit-identical to the in-process race.
+pub fn trial_seed(seed: u64, trial: usize) -> u64 {
+    seed.wrapping_mul(0x9e3779b97f4a7c15)
+        .wrapping_add(trial as u64)
+}
+
 /// Run the full race: every method in the paper's comparison x trials.
 ///
 /// One evaluator instance is shared across all (method, trial) cells so
@@ -207,9 +261,7 @@ pub fn run_race(cfg: &RaceConfig) -> Result<Vec<RaceResult>> {
     let mut ev = cfg.evaluator.make_for(&cfg.workload);
     let mut out = Vec::new();
     for trial in 0..cfg.trials {
-        let seed = cfg.seed
-            .wrapping_mul(0x9e3779b97f4a7c15)
-            .wrapping_add(trial as u64);
+        let seed = trial_seed(cfg.seed, trial);
         for mut method in all_methods_mode(seed, cfg.objectives) {
             let mut be =
                 BudgetedEvaluator::new(ev.as_mut(), cfg.samples);
@@ -249,10 +301,7 @@ pub fn run_race_fused_observed(
     let mut ev = cfg.evaluator.make_for(&cfg.workload);
     let mut race = FusedRace::new(&space);
     for trial in 0..cfg.trials {
-        let seed = cfg
-            .seed
-            .wrapping_mul(0x9e3779b97f4a7c15)
-            .wrapping_add(trial as u64);
+        let seed = trial_seed(cfg.seed, trial);
         for (name, session) in
             all_sessions_mode(seed, cfg.objectives)
         {
@@ -545,6 +594,7 @@ mod tests {
             seed: 21,
             evaluator: EvaluatorKind::RooflineRust,
             workload: spec_by_name("llama-70b").unwrap(),
+            objectives: ObjectiveMode::LatencyArea,
         };
         let results = run_race(&cfg).unwrap();
         assert_eq!(results.len(), 6);

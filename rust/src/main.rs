@@ -8,6 +8,7 @@
 //!   sensitivity QuanE sensitivity study around a design
 //!   report      Table-4 style design report
 //!   workloads   list the registered workload scenarios
+//!   cache       stats/compact/clear a disk memo store (--cache-dir)
 //!   bench       check/update/show the perf-bench regression ratchet
 //!   lint        determinism static-analysis pass over the sources
 //!   mirror      cross-language mirror-drift check (lint --mirror)
@@ -20,18 +21,21 @@
 
 use lumina::analysis;
 use lumina::bench::{ratchet, resolve_existing, Baseline};
-use lumina::bench_dse::run_benchmark_mode;
+use lumina::bench_dse::run_benchmark_disk;
 use lumina::design::{DesignPoint, DesignSpace, Param};
 use lumina::dse::{
-    self, driver::CheckpointSink, Driver, NullObserver, Observer,
-    ProgressObserver, SessionState,
+    self, driver::CheckpointSink, merge_race, merged_front,
+    run_race_shard, run_race_shard_observed, shard, Driver,
+    NullObserver, Observer, ProgressObserver, SessionState, ShardSpec,
 };
 use lumina::eval::{
-    BudgetedEvaluator, CachedEvaluator, Evaluator, Phase, SuiteEvaluator,
+    BudgetedEvaluator, CachedEvaluator, DiskStore, Evaluator, Phase,
+    SuiteEvaluator,
 };
 use lumina::figures::race::{
-    aggregate, run_race, run_race_fused, run_race_fused_observed,
-    score_log, EvaluatorKind, RaceConfig,
+    aggregate, reference_objectives, run_race, run_race_fused,
+    run_race_fused_observed, score_log, EvaluatorKind, RaceConfig,
+    RaceResult,
 };
 use lumina::figures::table4::{pick_top2, render, report_rows};
 use lumina::llm::ModelProfile;
@@ -46,6 +50,8 @@ use lumina::workload::{
     WorkloadSpec, DEFAULT_SCENARIO,
 };
 
+use std::sync::Arc;
+
 const USAGE: &str = "\
 lumina — LLM-guided GPU architecture exploration (paper reproduction)
 
@@ -58,15 +64,33 @@ USAGE: lumina <command> [--options]
           [--workload NAME | --suite] [--verbose]
           [--objectives latency-area|ppa]
           [--checkpoint PATH [--resume] [--checkpoint-every K]]
+          [--cache-dir DIR]  persist the memo store on disk: repeat
+                             runs serve known designs as free hits
   race [--samples N] [--trials T] [--evaluator ...] [--workload NAME]
        [--objectives latency-area|ppa] [--fused] [--verbose]
+       [--cache-dir DIR --shard I/N]
+                             run worker I of N: claim a disjoint slice
+                             of the (method x trial) cells, checkpoint
+                             each to DIR/cells (evaluations stay
+                             unmemoized for budget fairness)
+       [--cache-dir DIR --merge [--verify]]
+                             fold the cell checkpoints back into the
+                             exact single-process race result
+                             (--verify reruns it in-process and
+                             asserts bitwise identity)
   benchmark [--scale F] [--seed S] [--workload NAME]
-            [--objectives latency-area|ppa]
+            [--objectives latency-area|ppa] [--cache-dir DIR]
+  cache [stats|compact|clear] --cache-dir DIR
+                             inspect/maintain a disk memo store:
+                             stats (segments, entries per workload,
+                             lifetime hit counters), compact (rewrite
+                             live records into one sealed segment),
+                             clear (delete every segment)
   sensitivity [--evaluator ...] [--workload NAME]
   report [<8 values>]        Table-4 style PPA report (defaults: paper
                              designs) [--workload NAME]
   workloads                  list the workload scenario registry
-  bench [check|update|show]  hold BENCH_6.json to BENCH_BASELINE.json
+  bench [check|update|show]  hold BENCH_9.json to BENCH_BASELINE.json
         [--snapshot PATH] [--baseline PATH] [--issue N]
                              check: non-zero exit on any regressed row
                              update: ratchet the baseline forward
@@ -129,6 +153,60 @@ fn parse_design(values: &[String]) -> Option<DesignPoint> {
     })
 }
 
+/// Open `--cache-dir` as a shared on-disk memo store, when present.
+/// A crash-truncated tail is recovered, not fatal: intact records are
+/// kept and the skip count is reported on stderr.
+fn cache_dir_arg(args: &Args) -> lumina::Result<Option<Arc<DiskStore>>> {
+    let Some(dir) = args.opt("cache-dir") else {
+        return Ok(None);
+    };
+    let disk = DiskStore::open_shared(std::path::Path::new(dir))?;
+    let skipped = disk.skipped_on_open();
+    if skipped > 0 {
+        eprintln!(
+            "note: skipped {skipped} corrupt record(s) while opening \
+             {dir} (crash-truncated tail; intact records were kept)"
+        );
+    }
+    Ok(Some(disk))
+}
+
+/// Report how a disk-backed run used its store.
+fn print_disk_summary(disk: &DiskStore) {
+    let c = disk.counters();
+    println!(
+        "cache dir: {} ({} entries, {} disk hits, {} appended)",
+        disk.dir().display(),
+        disk.len(),
+        c.hits,
+        c.appended
+    );
+}
+
+/// The shared coordination directory `race --shard`/`--merge` need.
+fn race_dir_arg(args: &Args) -> lumina::Result<std::path::PathBuf> {
+    args.opt("cache-dir")
+        .map(std::path::PathBuf::from)
+        .ok_or_else(|| {
+            lumina::err!(
+                "--shard/--merge need --cache-dir <dir> as the shared \
+                 coordination directory"
+            )
+        })
+}
+
+fn print_race_table(results: &[RaceResult]) {
+    println!(
+        "{:<16} {:>10} {:>10} {:>12} {:>9}",
+        "method", "mean PHV", "std PHV", "sample eff", "superior"
+    );
+    for (m, phv, eff, std, sup) in aggregate(results) {
+        println!(
+            "{m:<16} {phv:>10.4} {std:>10.4} {eff:>12.4} {sup:>9.1}"
+        );
+    }
+}
+
 fn main() -> lumina::Result<()> {
     let args = Args::from_env()?;
     match args.command.as_str() {
@@ -142,6 +220,7 @@ fn main() -> lumina::Result<()> {
             print!("{}", scenario_matrix());
             Ok(())
         }
+        "cache" => cmd_cache(&args),
         "bench" => cmd_bench(&args),
         "lint" => cmd_lint(&args, args.flag("mirror")),
         "mirror" => cmd_lint(&args, true),
@@ -239,21 +318,16 @@ fn run_explore(
         (&ckpt, args.flag("resume"))
     {
         let st = SessionState::load(path)?;
-        if st.method != "lumina"
-            || st.model != model.name
-            || st.seed != seed
-            || st.budget != budget
-            || st.evaluator != evaluator_name
-            || st.workload_fp != workload_fp
-            || st.objectives != objectives
-        {
-            lumina::bail!(
-                "checkpoint {} was written by a different run \
-                 (method/model/seed/budget/evaluator/workload/\
-                 objectives mismatch)",
-                path.display()
-            );
-        }
+        st.expect_identity(
+            &format!("checkpoint {}", path.display()),
+            "lumina",
+            Some(model.name),
+            seed,
+            budget,
+            Some(&evaluator_name),
+            workload_fp,
+            objectives,
+        )?;
         ev.preload(&st.log);
         Some(st)
     } else {
@@ -326,8 +400,12 @@ fn run_explore(
         .cache_counters()
         .map(|c| format!(", {} cache hits", c.hits))
         .unwrap_or_default();
+    let disk = be
+        .disk_counters()
+        .map(|c| format!(", {} disk hits", c.hits))
+        .unwrap_or_default();
     println!(
-        "explored {} samples ({} simulated{hits}) in {:.2}s  \
+        "explored {} samples ({} simulated{hits}{disk}) in {:.2}s  \
          [{objectives}] PHV={:.4}  eff={:.4}  superior={}",
         traj.len(),
         be.spent(),
@@ -361,10 +439,19 @@ fn cmd_explore(args: &Args) -> lumina::Result<()> {
     // sensitivity sweeps revisit grid points — hits are served from the
     // concurrent memo store without touching the worker pool and don't
     // burn the sample budget, while fresh proposals evaluate in
-    // parallel through the SoA chunk kernels.
-    let mut ev = kind.make_cached_for(&scenario.spec);
+    // parallel through the SoA chunk kernels. With `--cache-dir` the
+    // memo gains a disk tier, so a warm restart serves every known
+    // design without re-simulating.
+    let disk = cache_dir_arg(args)?;
+    let mut ev = match &disk {
+        Some(d) => kind.make_cached_disk_for(&scenario.spec, d.clone()),
+        None => kind.make_cached_for(&scenario.spec),
+    };
     let (traj, reference, lum) =
         run_explore(args, "lumina", ev.as_mut())?;
+    if let Some(d) = &disk {
+        print_disk_summary(d);
+    }
     if args.flag("verbose") {
         if let Some(ahk) = &lum.ahk {
             println!("\ninfluence map:\n{}", ahk.qual.render());
@@ -393,6 +480,13 @@ fn cmd_explore(args: &Args) -> lumina::Result<()> {
 /// `explore --suite`: optimize the weighted multi-scenario composite and
 /// report the top designs per scenario.
 fn cmd_explore_suite(args: &Args) -> lumina::Result<()> {
+    if args.opt("cache-dir").is_some() {
+        lumina::bail!(
+            "--cache-dir is not supported with --suite: the composite \
+             memo is keyed on the combined suite fingerprint and stays \
+             in-memory (see EXPERIMENTS.md, Disk store)"
+        );
+    }
     let kind = evaluator_kind(args);
     let scenarios = suite_scenarios();
     println!(
@@ -451,6 +545,13 @@ fn cmd_race(args: &Args) -> lumina::Result<()> {
         workload: workload_arg(args)?.spec,
         objectives: objectives_arg(args)?,
     };
+    if let Some(spec) = args.opt("shard") {
+        let spec = ShardSpec::parse(spec)?;
+        return cmd_race_shard(args, &cfg, spec);
+    }
+    if args.flag("merge") {
+        return cmd_race_merge(args, &cfg);
+    }
     let fused = args.flag("fused");
     if args.flag("verbose") && !fused {
         eprintln!(
@@ -477,13 +578,114 @@ fn cmd_race(args: &Args) -> lumina::Result<()> {
         cfg.objectives,
         t0.elapsed_s()
     );
+    print_race_table(&results);
+    Ok(())
+}
+
+/// `race --shard I/N --cache-dir DIR`: run worker I's disjoint slice
+/// of the (method x trial) cells against the shared coordination
+/// directory. Workers coordinate purely through the store's lock
+/// files and atomic checkpoint renames — no IPC, so the N processes
+/// can live on different hosts sharing a filesystem.
+fn cmd_race_shard(
+    args: &Args,
+    cfg: &RaceConfig,
+    spec: ShardSpec,
+) -> lumina::Result<()> {
+    let dir = race_dir_arg(args)?;
+    let t0 = Stopwatch::start();
+    let outcome = if args.flag("verbose") {
+        let mut obs = ProgressObserver::new();
+        run_race_shard_observed(cfg, spec, &dir, &mut obs)?
+    } else {
+        run_race_shard(cfg, spec, &dir)?
+    };
     println!(
-        "{:<16} {:>10} {:>10} {:>12} {:>9}",
-        "method", "mean PHV", "std PHV", "sample eff", "superior"
+        "shard {spec}: ran {} of {} cells ({} already done, {} claimed \
+         by other workers) in {:.2}s",
+        outcome.ran,
+        outcome.total,
+        outcome.done,
+        outcome.contended,
+        t0.elapsed_s()
     );
-    for (m, phv, eff, std, sup) in aggregate(&results) {
+    println!("cells: {}", shard::cells_dir(&dir).display());
+    println!(
+        "merge with: lumina race --merge --cache-dir {}",
+        dir.display()
+    );
+    Ok(())
+}
+
+/// `race --merge --cache-dir DIR`: fold a completed sharded race's
+/// cell checkpoints back into the exact single-process result.
+/// `--verify` reruns the race in-process and asserts bitwise identity
+/// of every cell and of the merged Pareto front.
+fn cmd_race_merge(args: &Args, cfg: &RaceConfig) -> lumina::Result<()> {
+    let dir = race_dir_arg(args)?;
+    let t0 = Stopwatch::start();
+    let results = merge_race(cfg, &dir)?;
+    let reference =
+        reference_objectives(cfg.evaluator, &cfg.workload)?;
+    let (front, phv) = merged_front(&results, &reference);
+    println!(
+        "merged race: 6 methods x {} trials x {} samples [{}] in \
+         {:.2}s",
+        cfg.trials,
+        cfg.samples,
+        cfg.objectives,
+        t0.elapsed_s()
+    );
+    print_race_table(&results);
+    println!("merged front: {} points, PHV {phv:.6}", front.len());
+    if args.flag("verify") {
+        let serial = run_race_fused(cfg)?;
+        verify_merge(&results, &serial, &front, phv, &reference)?;
         println!(
-            "{m:<16} {phv:>10.4} {std:>10.4} {eff:>12.4} {sup:>9.1}"
+            "verify: merged cells bitwise-identical to the in-process \
+             fused race"
+        );
+    }
+    Ok(())
+}
+
+/// Bitwise comparison of merged shard cells against an in-process
+/// serial rerun — the `--verify` acceptance gate.
+fn verify_merge(
+    merged: &[RaceResult],
+    serial: &[RaceResult],
+    front: &[Objectives],
+    phv: f64,
+    reference: &Objectives,
+) -> lumina::Result<()> {
+    if merged.len() != serial.len() {
+        lumina::bail!(
+            "verify: merged {} cells but the in-process race ran {}",
+            merged.len(),
+            serial.len()
+        );
+    }
+    for (m, s) in merged.iter().zip(serial) {
+        if m.method != s.method
+            || m.trial != s.trial
+            || m.phv.to_bits() != s.phv.to_bits()
+            || m.superior != s.superior
+            || m.trajectory != s.trajectory
+        {
+            lumina::bail!(
+                "verify: cell {}-t{} diverged from the in-process race",
+                m.method,
+                m.trial
+            );
+        }
+    }
+    let (sf, sphv) = merged_front(serial, reference);
+    if front != sf.as_slice() || phv.to_bits() != sphv.to_bits() {
+        lumina::bail!(
+            "verify: merged Pareto front diverged from the in-process \
+             race ({} vs {} points, PHV {phv} vs {sphv})",
+            front.len(),
+            sf.len()
         );
     }
     Ok(())
@@ -494,7 +696,11 @@ fn cmd_benchmark(args: &Args) -> lumina::Result<()> {
     let seed = args.u64_or("seed", 2026)?;
     let scenario = workload_arg(args)?;
     let objectives = objectives_arg(args)?;
-    let report = run_benchmark_mode(
+    // `--cache-dir` memoizes the question-set ground truth: repeat
+    // benchmark runs at the same seed serve every simulation from
+    // disk and score bit-identical question sets.
+    let disk = cache_dir_arg(args)?;
+    let report = run_benchmark_disk(
         &[
             ModelProfile::phi4(),
             ModelProfile::qwen3(),
@@ -504,10 +710,82 @@ fn cmd_benchmark(args: &Args) -> lumina::Result<()> {
         scale,
         &scenario.spec,
         objectives,
+        disk.clone(),
     );
     println!("workload: {} [{objectives}]", scenario.name);
     println!("{}", report.render_table3());
+    if let Some(d) = &disk {
+        print_disk_summary(d);
+    }
     Ok(())
+}
+
+/// `lumina cache {stats,compact,clear} --cache-dir DIR` — disk memo
+/// store maintenance. `stats` reports segments, live entries per
+/// workload fingerprint and the persisted lifetime counters;
+/// `compact` rewrites the live index into one sealed segment;
+/// `clear` deletes every segment (both are serialized against
+/// concurrent writers by the store's advisory lock).
+fn cmd_cache(args: &Args) -> lumina::Result<()> {
+    let verb = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("stats");
+    let dir = args
+        .opt("cache-dir")
+        .map(std::path::PathBuf::from)
+        .ok_or_else(|| {
+            lumina::err!("cache needs --cache-dir <dir> to operate on")
+        })?;
+    match verb {
+        "stats" => {
+            let store = DiskStore::open(&dir)?;
+            let s = store.stats()?;
+            println!("store: {}", dir.display());
+            println!(
+                "segments: {} sealed + {} in progress ({} bytes)",
+                s.sealed_segments, s.wip_segments, s.bytes
+            );
+            println!(
+                "entries: {} live ({} corrupt/truncated skipped)",
+                s.entries, s.skipped
+            );
+            for (fp, n) in &s.per_workload {
+                println!("  workload {fp:#018x}: {n} entries");
+            }
+            println!(
+                "lifetime: {} hits served, {} records appended",
+                s.lifetime_hits, s.lifetime_appended
+            );
+            Ok(())
+        }
+        "compact" => {
+            let store = DiskStore::open(&dir)?;
+            let (records, removed) = store.compact()?;
+            println!(
+                "compacted {}: {} live records into 1 sealed segment \
+                 ({} old segment files removed)",
+                dir.display(),
+                records,
+                removed
+            );
+            Ok(())
+        }
+        "clear" => {
+            let (files, bytes) = DiskStore::clear(&dir)?;
+            println!(
+                "cleared {}: removed {} segment files ({} bytes)",
+                dir.display(),
+                files,
+                bytes
+            );
+            Ok(())
+        }
+        other => Err(lumina::err!(
+            "unknown cache verb {other:?}; use stats, compact or clear"
+        )),
+    }
 }
 
 fn cmd_sensitivity(args: &Args) -> lumina::Result<()> {
@@ -563,7 +841,7 @@ fn cmd_bench(args: &Args) -> lumina::Result<()> {
     let snapshot_path = args
         .opt("snapshot")
         .map(std::path::PathBuf::from)
-        .unwrap_or_else(|| resolve_existing("BENCH_6.json"));
+        .unwrap_or_else(|| resolve_existing("BENCH_9.json"));
     let mut baseline = Baseline::load(&baseline_path)?;
     let text =
         std::fs::read_to_string(&snapshot_path).map_err(|e| {

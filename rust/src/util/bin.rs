@@ -1,0 +1,123 @@
+//! Little-endian binary codec + FNV-1a checksum for the on-disk memo
+//! store (`crate::eval::store`). Kept in `util` so the byte layout has
+//! one authoritative, unit-tested home independent of the store's
+//! segment-file plumbing.
+//!
+//! Everything here is explicit-width and little-endian regardless of
+//! host byte order, so segment files written on one machine read
+//! identically on any other. Floats travel as raw IEEE-754 bit
+//! patterns (`to_bits`/`from_bits`) — the store's bit-identity
+//! guarantee forbids any text round-trip.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64-bit hash of `bytes`. Dependency-free, stable across
+/// platforms and releases (unlike `DefaultHasher`), and cheap enough
+/// to checksum every 96-byte record on the append path.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Append `v` to `out` as 4 little-endian bytes.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append `v` to `out` as 8 little-endian bytes.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append `v`'s IEEE-754 bit pattern to `out` as 4 LE bytes.
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    put_u32(out, v.to_bits());
+}
+
+/// Read a little-endian u32 at `off`; `None` if out of bounds.
+pub fn read_u32(bytes: &[u8], off: usize) -> Option<u32> {
+    let end = off.checked_add(4)?;
+    let raw = bytes.get(off..end)?;
+    let mut buf = [0u8; 4];
+    buf.copy_from_slice(raw);
+    Some(u32::from_le_bytes(buf))
+}
+
+/// Read a little-endian u64 at `off`; `None` if out of bounds.
+pub fn read_u64(bytes: &[u8], off: usize) -> Option<u64> {
+    let end = off.checked_add(8)?;
+    let raw = bytes.get(off..end)?;
+    let mut buf = [0u8; 8];
+    buf.copy_from_slice(raw);
+    Some(u64::from_le_bytes(buf))
+}
+
+/// Read an f32 (stored as its bit pattern) at `off`.
+pub fn read_f32(bytes: &[u8], off: usize) -> Option<f32> {
+    read_u32(bytes, off).map(f32::from_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn ints_round_trip_little_endian() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 0xdead_beef);
+        put_u64(&mut buf, 0x0123_4567_89ab_cdef);
+        assert_eq!(buf.len(), 12);
+        // Explicit byte order: LSB first.
+        assert_eq!(&buf[..4], &[0xef, 0xbe, 0xad, 0xde]);
+        assert_eq!(read_u32(&buf, 0), Some(0xdead_beef));
+        assert_eq!(read_u64(&buf, 4), Some(0x0123_4567_89ab_cdef));
+    }
+
+    #[test]
+    fn floats_round_trip_bitwise() {
+        // Bit-exact through the codec, including non-finite and
+        // negative-zero payloads a text round-trip would mangle.
+        let specials = [
+            0.0f32,
+            -0.0,
+            1.5,
+            f32::MIN_POSITIVE,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            1.0e-42, // subnormal
+        ];
+        let mut buf = Vec::new();
+        for v in specials {
+            put_f32(&mut buf, v);
+        }
+        for (i, v) in specials.iter().enumerate() {
+            let got = read_f32(&buf, i * 4).unwrap();
+            assert_eq!(got.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn out_of_bounds_reads_return_none() {
+        let buf = [0u8; 7];
+        assert_eq!(read_u32(&buf, 4), None);
+        assert_eq!(read_u64(&buf, 0), None);
+        assert_eq!(read_u64(&buf, usize::MAX), None);
+        assert_eq!(read_f32(&buf, 5), None);
+    }
+}

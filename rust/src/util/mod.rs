@@ -4,6 +4,7 @@
 //! wall-clock bench timer.
 
 pub mod bench;
+pub mod bin;
 pub mod cli;
 pub mod csv;
 pub mod json;

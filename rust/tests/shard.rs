@@ -1,0 +1,163 @@
+//! Integration tests for the sharded race (`dse/shard.rs`): the
+//! tentpole acceptance — two worker processes' merged cells reproduce
+//! the single-process fused race's Pareto front and PHV bitwise —
+//! plus claim contention and idempotent re-runs.
+
+use std::fs;
+use std::path::PathBuf;
+
+use lumina::baselines::all_sessions_mode;
+use lumina::dse::{
+    merge_race, run_race_shard, shard, ShardOutcome, ShardSpec,
+};
+use lumina::eval::DirLock;
+use lumina::figures::race::{
+    reference_objectives, run_race_fused, trial_seed, EvaluatorKind,
+    RaceConfig,
+};
+use lumina::pareto::ObjectiveMode;
+use lumina::workload::GPT3_175B;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "lumina_shard_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn small_cfg() -> RaceConfig {
+    RaceConfig {
+        samples: 12,
+        trials: 2,
+        seed: 7,
+        evaluator: EvaluatorKind::RooflineRust,
+        workload: GPT3_175B,
+        objectives: ObjectiveMode::LatencyArea,
+    }
+}
+
+#[test]
+fn two_shard_merge_is_bitwise_identical_to_fused_race() {
+    // Tentpole acceptance (b): worker 0/2 and worker 1/2 into one
+    // coordination dir, then merge — every cell and the merged global
+    // front/PHV must equal the in-process fused race bit for bit.
+    let dir = tmp_dir("identity");
+    let cfg = small_cfg();
+    let a = run_race_shard(&cfg, ShardSpec::parse("0/2").unwrap(), &dir)
+        .unwrap();
+    let b = run_race_shard(&cfg, ShardSpec::parse("1/2").unwrap(), &dir)
+        .unwrap();
+    assert_eq!(a.total, 12, "6 methods x 2 trials");
+    assert_eq!(b.total, 12);
+    assert_eq!(a.ran + b.ran, 12, "shards did not partition the cells");
+    assert_eq!(a.contended + b.contended, 0);
+
+    let merged = merge_race(&cfg, &dir).unwrap();
+    let serial = run_race_fused(&cfg).unwrap();
+    assert_eq!(merged.len(), serial.len());
+    for (m, s) in merged.iter().zip(&serial) {
+        assert_eq!(m.method, s.method);
+        assert_eq!(m.trial, s.trial);
+        assert_eq!(
+            m.phv.to_bits(),
+            s.phv.to_bits(),
+            "{}-t{}: PHV diverged",
+            m.method,
+            m.trial
+        );
+        assert_eq!(m.superior, s.superior);
+        assert_eq!(
+            m.sample_efficiency.to_bits(),
+            s.sample_efficiency.to_bits()
+        );
+        assert_eq!(
+            m.trajectory, s.trajectory,
+            "{}-t{}: trajectory diverged",
+            m.method, m.trial
+        );
+    }
+
+    let reference =
+        reference_objectives(cfg.evaluator, &cfg.workload).unwrap();
+    let (front_m, phv_m) = shard::merged_front(&merged, &reference);
+    let (front_s, phv_s) = shard::merged_front(&serial, &reference);
+    assert!(!front_m.is_empty());
+    assert_eq!(front_m, front_s, "merged Pareto front diverged");
+    assert_eq!(phv_m.to_bits(), phv_s.to_bits(), "merged PHV diverged");
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn shard_rerun_skips_checkpointed_cells() {
+    let dir = tmp_dir("idempotent");
+    let cfg = small_cfg();
+    let spec = ShardSpec::parse("0/2").unwrap();
+    let first = run_race_shard(&cfg, spec, &dir).unwrap();
+    assert_eq!(first.ran, 6);
+    let again = run_race_shard(&cfg, spec, &dir).unwrap();
+    assert_eq!(
+        again,
+        ShardOutcome { ran: 0, done: 6, contended: 0, total: 12 },
+        "re-run must skip finished cells without recomputing"
+    );
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn claimed_cell_is_skipped_and_merge_reports_it_missing() {
+    let dir = tmp_dir("contention");
+    let cfg = small_cfg();
+    let cells = shard::cells_dir(&dir);
+    fs::create_dir_all(&cells).unwrap();
+    // Pose as another worker holding cell 0 (trial 0, first method in
+    // the canonical enumeration).
+    let seed0 = trial_seed(cfg.seed, 0);
+    let first_method = all_sessions_mode(seed0, cfg.objectives)
+        .into_iter()
+        .next()
+        .unwrap()
+        .0;
+    let claim = format!("claim-{first_method}-t0");
+    assert!(DirLock::try_claim(&cells, &claim).unwrap());
+
+    let spec = ShardSpec::parse("0/2").unwrap();
+    let out = run_race_shard(&cfg, spec, &dir).unwrap();
+    assert_eq!(out.contended, 1, "held claim not respected");
+    assert_eq!(out.ran, 5);
+
+    // A completed-elsewhere merge attempt names the missing cell.
+    let err = merge_race(&cfg, &dir).unwrap_err().to_string();
+    assert!(
+        err.contains(&format!("{first_method}-t0")),
+        "merge error does not name the missing cell: {err}"
+    );
+    run_race_shard(&cfg, ShardSpec::parse("1/2").unwrap(), &dir)
+        .unwrap();
+    let err = merge_race(&cfg, &dir).unwrap_err().to_string();
+    assert!(err.contains("1 of 12"), "unexpected merge error: {err}");
+
+    // Crash recovery per the module docs: remove the stale claim and
+    // re-run the owning shard.
+    fs::remove_file(cells.join(&claim)).unwrap();
+    let out = run_race_shard(&cfg, spec, &dir).unwrap();
+    assert_eq!((out.ran, out.done), (1, 5));
+    let merged = merge_race(&cfg, &dir).unwrap();
+    assert_eq!(merged.len(), 12);
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn whole_shard_equals_unsharded_enumeration() {
+    // ShardSpec::whole is 0/1: one worker owns every cell.
+    let dir = tmp_dir("whole");
+    let cfg = small_cfg();
+    let out =
+        run_race_shard(&cfg, ShardSpec::whole(), &dir).unwrap();
+    assert_eq!(out.ran, 12);
+    assert_eq!(out.total, 12);
+    let merged = merge_race(&cfg, &dir).unwrap();
+    assert_eq!(merged.len(), 12);
+    fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,357 @@
+//! Integration tests for the disk-backed memo store (`eval/store.rs`):
+//! crash recovery, multi-writer contention, compaction, and the
+//! tentpole acceptance — `explore --cache-dir` over a pre-warmed store
+//! serves metrics bitwise-equal to an uncached simulator run.
+
+use std::fs;
+use std::fs::OpenOptions;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use lumina::design::{DesignPoint, DesignSpace};
+use lumina::eval::{BudgetedEvaluator, DiskStore, Metrics};
+use lumina::figures::race::EvaluatorKind;
+use lumina::lumina::Lumina;
+use lumina::sim::RooflineSim;
+use lumina::workload::GPT3_175B;
+
+/// Fresh scratch dir, unique per (test, process).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "lumina_store_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// All 12 metric lanes as raw bits, for bitwise comparisons.
+fn metric_bits(m: &Metrics) -> [u32; 12] {
+    [
+        m.ttft_ms.to_bits(),
+        m.tpot_ms.to_bits(),
+        m.area_mm2.to_bits(),
+        m.energy_per_token_mj.to_bits(),
+        m.prefill_energy_mj.to_bits(),
+        m.avg_power_w.to_bits(),
+        m.stalls[0][0].to_bits(),
+        m.stalls[0][1].to_bits(),
+        m.stalls[0][2].to_bits(),
+        m.stalls[1][0].to_bits(),
+        m.stalls[1][1].to_bits(),
+        m.stalls[1][2].to_bits(),
+    ]
+}
+
+/// A deterministic spread of distinct valid designs to key records
+/// with (LCG over the enumerable design-space index).
+fn sample_designs(n: usize) -> Vec<DesignPoint> {
+    let space = DesignSpace::table1();
+    let size = space.size();
+    let mut seen = std::collections::BTreeSet::new();
+    let mut out = Vec::new();
+    let mut seed = 0x5eed_0001_u64;
+    while out.len() < n {
+        seed = seed
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let d = space.decode_index(seed % size).unwrap();
+        if seen.insert(d) {
+            out.push(d);
+        }
+    }
+    out
+}
+
+fn fill(store: &DiskStore, fp: u64, designs: &[DesignPoint]) {
+    let sim = RooflineSim::new(GPT3_175B);
+    for d in designs {
+        store.append(fp, d, &sim.evaluate(d));
+    }
+}
+
+/// The single sealed `seg-*.lms` file in `dir`.
+fn only_segment(dir: &PathBuf) -> PathBuf {
+    let mut segs: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            p.file_name()
+                .map(|n| n.to_string_lossy().starts_with("seg-"))
+                .unwrap_or(false)
+        })
+        .collect();
+    assert_eq!(segs.len(), 1, "expected exactly one sealed segment");
+    segs.pop().unwrap()
+}
+
+#[test]
+fn records_survive_seal_and_reopen_bitwise() {
+    let dir = tmp_dir("reopen");
+    let designs = sample_designs(25);
+    let fp = GPT3_175B.fingerprint();
+    {
+        let store = DiskStore::open(&dir).unwrap();
+        fill(&store, fp, &designs);
+        assert_eq!(store.len(), 25);
+        store.seal().unwrap();
+    }
+    let store = DiskStore::open(&dir).unwrap();
+    assert_eq!(store.len(), 25);
+    assert_eq!(store.skipped_on_open(), 0);
+    let sim = RooflineSim::new(GPT3_175B);
+    for d in &designs {
+        let got = store.get(fp, d).expect("record lost on reopen");
+        assert_eq!(
+            metric_bits(&got),
+            metric_bits(&sim.evaluate(d)),
+            "metrics drifted through the disk round-trip for {d}"
+        );
+    }
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn truncated_tail_keeps_prior_records() {
+    // A writer crash mid-record must cost exactly the torn record:
+    // everything before it is served on reopen.
+    let dir = tmp_dir("truncate");
+    let designs = sample_designs(5);
+    let fp = GPT3_175B.fingerprint();
+    {
+        let store = DiskStore::open(&dir).unwrap();
+        fill(&store, fp, &designs);
+        store.seal().unwrap();
+    }
+    let seg = only_segment(&dir);
+    let len = fs::metadata(&seg).unwrap().len();
+    // 12-byte header + 5 x 96-byte records; cut into the last record.
+    assert_eq!(len, 12 + 5 * 96);
+    let file = OpenOptions::new().write(true).open(&seg).unwrap();
+    file.set_len(len - 40).unwrap();
+    drop(file);
+
+    let store = DiskStore::open(&dir).unwrap();
+    assert_eq!(store.len(), 4, "prior records lost after truncation");
+    assert_eq!(store.skipped_on_open(), 1);
+    for d in &designs[..4] {
+        assert!(store.contains(fp, d), "intact record {d} missing");
+    }
+    assert!(!store.contains(fp, &designs[4]));
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn corrupt_record_skips_rest_of_segment() {
+    // Checksum damage poisons the segment from that offset on (record
+    // framing is implicit), but earlier records still serve.
+    let dir = tmp_dir("corrupt");
+    let designs = sample_designs(4);
+    let fp = GPT3_175B.fingerprint();
+    {
+        let store = DiskStore::open(&dir).unwrap();
+        fill(&store, fp, &designs);
+        store.seal().unwrap();
+    }
+    let seg = only_segment(&dir);
+    let mut bytes = fs::read(&seg).unwrap();
+    // Flip a payload byte inside record #1 (header 12 + one record 96).
+    bytes[12 + 96 + 50] ^= 0xff;
+    fs::write(&seg, &bytes).unwrap();
+
+    let store = DiskStore::open(&dir).unwrap();
+    assert_eq!(store.len(), 1);
+    assert_eq!(store.skipped_on_open(), 3);
+    assert!(store.contains(fp, &designs[0]));
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn two_writers_lose_and_duplicate_nothing() {
+    // Two store handles on one directory model two worker processes:
+    // segment names are claimed with create_new, so writers never
+    // clobber each other and a reader sees the union.
+    let dir = tmp_dir("two_writers");
+    let designs = sample_designs(60);
+    let fp = GPT3_175B.fingerprint();
+    {
+        let a = DiskStore::open(&dir).unwrap();
+        let b = DiskStore::open(&dir).unwrap();
+        for (i, d) in designs.iter().enumerate() {
+            let w = if i % 2 == 0 { &a } else { &b };
+            w.append(fp, d, &RooflineSim::new(GPT3_175B).evaluate(d));
+        }
+        assert_eq!(a.counters().appended, 30);
+        assert_eq!(b.counters().appended, 30);
+        a.seal().unwrap();
+        b.seal().unwrap();
+    }
+    let store = DiskStore::open(&dir).unwrap();
+    assert_eq!(store.len(), 60, "records lost across two writers");
+    assert_eq!(store.skipped_on_open(), 0);
+    let sim = RooflineSim::new(GPT3_175B);
+    for d in &designs {
+        let got = store.get(fp, d).expect("record missing");
+        assert_eq!(metric_bits(&got), metric_bits(&sim.evaluate(d)));
+    }
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn concurrent_appends_through_one_shared_store() {
+    let dir = tmp_dir("threads");
+    let designs = sample_designs(64);
+    let fp = GPT3_175B.fingerprint();
+    {
+        let store = DiskStore::open_shared(&dir).unwrap();
+        std::thread::scope(|s| {
+            for chunk in designs.chunks(16) {
+                let store = Arc::clone(&store);
+                s.spawn(move || {
+                    let sim = RooflineSim::new(GPT3_175B);
+                    for d in chunk {
+                        store.append(fp, d, &sim.evaluate(d));
+                    }
+                });
+            }
+        });
+        assert_eq!(store.len(), 64);
+        store.seal().unwrap();
+    }
+    let store = DiskStore::open(&dir).unwrap();
+    assert_eq!(store.len(), 64);
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn compact_folds_segments_and_preserves_every_record() {
+    let dir = tmp_dir("compact");
+    let designs = sample_designs(30);
+    let fp = GPT3_175B.fingerprint();
+    // Three sealed generations of overlapping appends.
+    for lo in [0usize, 10, 20] {
+        let store = DiskStore::open(&dir).unwrap();
+        fill(&store, fp, &designs[lo..lo + 10]);
+        store.seal().unwrap();
+    }
+    let store = DiskStore::open(&dir).unwrap();
+    assert_eq!(store.len(), 30);
+    let (records, removed) = store.compact().unwrap();
+    assert_eq!(records, 30);
+    assert_eq!(removed, 3, "old sealed segments not removed");
+    drop(store);
+
+    let store = DiskStore::open(&dir).unwrap();
+    assert_eq!(store.len(), 30);
+    let stats = store.stats().unwrap();
+    assert_eq!(stats.entries, 30);
+    assert_eq!(stats.per_workload.get(&fp), Some(&30));
+    drop(store);
+    let (files, bytes) = DiskStore::clear(&dir).unwrap();
+    assert!(files >= 1 && bytes > 0);
+    assert_eq!(DiskStore::open(&dir).unwrap().len(), 0);
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn cold_disk_explore_matches_memory_cached_explore_bitwise() {
+    // A cold DiskBackedCache stack must behave exactly like the
+    // in-memory CachedEvaluator stack: same seed, same budget, same
+    // trajectory, bit for bit.
+    let dir = tmp_dir("cold_vs_mem");
+    let space = DesignSpace::table1();
+    let spec = GPT3_175B;
+    let log_mem = {
+        let mut ev = EvaluatorKind::RooflineRust.make_cached_for(&spec);
+        let mut be = BudgetedEvaluator::new(ev.as_mut(), 30);
+        Lumina::with_seed(41).run(&space, &mut be).unwrap();
+        be.log
+    };
+    let log_disk = {
+        let disk = DiskStore::open_shared(&dir).unwrap();
+        let mut ev = EvaluatorKind::RooflineRust
+            .make_cached_disk_for(&spec, disk);
+        let mut be = BudgetedEvaluator::new(ev.as_mut(), 30);
+        Lumina::with_seed(41).run(&space, &mut be).unwrap();
+        be.log
+    };
+    assert_eq!(log_mem.len(), log_disk.len());
+    for ((d1, m1), (d2, m2)) in log_mem.iter().zip(&log_disk) {
+        assert_eq!(d1, d2, "trajectory diverged");
+        assert_eq!(metric_bits(m1), metric_bits(m2));
+    }
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn warm_restart_serves_bitwise_identical_metrics() {
+    // Tentpole acceptance (a): a second `explore --cache-dir` run over
+    // the store the first run left behind serves every known design
+    // from disk — nonzero disk hits, less budget burned — and every
+    // metric it returns is bitwise-equal to an uncached simulation.
+    let dir = tmp_dir("warm_restart");
+    let space = DesignSpace::table1();
+    let spec = GPT3_175B;
+    let budget = 30usize;
+    let cold_spent = {
+        let disk = DiskStore::open_shared(&dir).unwrap();
+        let mut ev = EvaluatorKind::RooflineRust
+            .make_cached_disk_for(&spec, disk);
+        let mut be = BudgetedEvaluator::new(ev.as_mut(), budget);
+        Lumina::with_seed(41).run(&space, &mut be).unwrap();
+        be.spent()
+    };
+    assert_eq!(cold_spent, budget);
+
+    // "Restart": a fresh store handle rebuilt purely from the segment
+    // files (the first handle sealed on drop).
+    let disk = DiskStore::open_shared(&dir).unwrap();
+    assert!(disk.len() > 0, "first run persisted nothing");
+    let mut ev =
+        EvaluatorKind::RooflineRust.make_cached_disk_for(&spec, disk);
+    let mut be = BudgetedEvaluator::new(ev.as_mut(), budget);
+    Lumina::with_seed(41).run(&space, &mut be).unwrap();
+    let warm_spent = be.spent();
+    let evaluations = be.evaluations();
+    let disk_hits = be.disk_counters().expect("disk tier present").hits;
+    let log = be.log;
+    assert!(disk_hits > 0, "warm restart took no disk hits");
+    // The replayed prefix rides free: the log outgrows the charge.
+    assert!(
+        evaluations > warm_spent,
+        "no free disk rides ({evaluations} evals, {warm_spent} spent)"
+    );
+    let sim = RooflineSim::new(spec);
+    for (d, m) in &log {
+        assert_eq!(
+            metric_bits(m),
+            metric_bits(&sim.evaluate(d)),
+            "disk-served metrics for {d} differ from the simulator"
+        );
+    }
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn budgeted_evaluator_lets_disk_hits_ride_free() {
+    // Warm one design into the store, then evaluate it plus a fresh
+    // one through the budget ledger: only the miss is charged.
+    let dir = tmp_dir("budget");
+    let designs = sample_designs(2);
+    let fp = GPT3_175B.fingerprint();
+    {
+        let store = DiskStore::open(&dir).unwrap();
+        fill(&store, fp, &designs[..1]);
+        store.seal().unwrap();
+    }
+    let disk = DiskStore::open_shared(&dir).unwrap();
+    let mut ev = EvaluatorKind::RooflineRust
+        .make_cached_disk_for(&GPT3_175B, disk);
+    let mut be = BudgetedEvaluator::new(ev.as_mut(), 10);
+    be.eval(&designs[0]).unwrap();
+    assert_eq!(be.spent(), 0, "disk hit charged against the budget");
+    be.eval(&designs[1]).unwrap();
+    assert_eq!(be.spent(), 1);
+    assert_eq!(be.evaluations(), 2);
+    fs::remove_dir_all(&dir).unwrap();
+}
