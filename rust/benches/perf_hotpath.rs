@@ -4,13 +4,15 @@
 //! compass simulator (same three forms, plus the warm memo path through
 //! the composed `ParallelEvaluator<CachedEvaluator<_>>` stack), pool
 //! vs spawn-per-batch dispatch at small batch sizes, the PHV kernel
-//! (batch and incremental archive), a full LUMINA iteration, and the
+//! (batch and incremental archive), a full LUMINA iteration, the
 //! disk-backed memo store (cold append, warm-restart disk hit,
-//! in-memory tier hit, warm-restart hit rate).
+//! in-memory tier hit, warm-restart hit rate), and suite evaluation
+//! (sequential member barriers vs the fused cross-scenario dispatch,
+//! plus the dedup/memo hit-rate contract).
 //! Records the numbers EXPERIMENTS.md §Perf tracks.
 //!
 //! Outputs: `out/perf_hotpath.csv` (bench, mean_s, throughput_per_s)
-//! and the machine-readable `BENCH_9.json` snapshot at the repo root
+//! and the machine-readable `BENCH_10.json` snapshot at the repo root
 //! (format documented in EXPERIMENTS.md §Perf). `lumina bench check`
 //! holds the snapshot's machine-independent rows (speedup ratios,
 //! alloc counts, guard pass flags) to `BENCH_BASELINE.json`.
@@ -20,7 +22,8 @@
 //!   for CI smoke runs.
 //! * `LUMINA_STRICT_PERF_GUARD=1` — turn the acceptance guard rows
 //!   (compass SoA >= 2x sequential, pool <= spawn dispatch, ppa
-//!   overhead < 10%, zero warm-arena allocations) into hard asserts.
+//!   overhead < 10%, zero warm-arena allocations, suite fused <=
+//!   sequential members, suite dedup hit rate) into hard asserts.
 //!   The roofline SoA guard is recorded but never asserted (it is not
 //!   an acceptance criterion).
 //!
@@ -38,6 +41,7 @@ use lumina::eval::parallel::{default_threads, eval_batch_parallel};
 use lumina::eval::{
     BudgetedEvaluator, CachedEvaluator, DiskBackedCache, DiskStore,
     EvalOne, EvalScratch, Evaluator, Metrics, ParallelEvaluator,
+    SuiteBackend, SuiteEvaluator,
 };
 use lumina::figures::race::{
     run_race, run_race_fused, EvaluatorKind, RaceConfig,
@@ -52,7 +56,9 @@ use lumina::stats::Pcg32;
 use lumina::util::bench::{bench, section, BenchResult};
 use lumina::util::csv::Csv;
 use lumina::util::json::Json;
-use lumina::workload::default_scenario;
+use lumina::workload::{
+    default_scenario, suite_scenarios, WorkloadSpec,
+};
 use lumina::csv_row;
 
 /// Counting wrapper around the system allocator: the arena rows
@@ -708,6 +714,132 @@ fn main() {
     drop(disk);
     let _ = std::fs::remove_dir_all(&store_dir);
 
+    // --- Suite evaluation: the sequential member path (one pool
+    // barrier per scenario member) vs the fused cross-scenario
+    // dispatch (ISSUE 10: all member x chunk tasks under one batch
+    // latch). Both suites drop their memo each iteration so every
+    // pass re-dispatches the full batch.
+    let scenarios = suite_scenarios();
+    let suite_batch: Vec<DesignPoint> =
+        sample::uniform_batch(&space, &mut rng, nb);
+    let mut seq_suite = SuiteEvaluator::new(
+        &scenarios,
+        &mut |spec: &WorkloadSpec| -> Box<dyn Evaluator> {
+            Box::new(ParallelEvaluator::new(RooflineSim::new(*spec)))
+        },
+    )
+    .unwrap();
+    let r = bench(
+        &format!("suite sequential members eval, batch={nb}"),
+        1,
+        it(20),
+        || {
+            seq_suite.clear_memo();
+            let _ = seq_suite.eval_batch(&suite_batch).unwrap();
+        },
+    );
+    rows.put(&r, nb as f64);
+    let suite_seq = r;
+
+    let mut fused_suite = SuiteEvaluator::with_backends(
+        &scenarios,
+        &mut |spec: &WorkloadSpec| {
+            SuiteBackend::Fused(Box::new(RooflineSim::new(*spec)))
+        },
+        None,
+    )
+    .unwrap();
+    let r = bench(
+        &format!("suite fused eval, batch={nb}"),
+        1,
+        it(20),
+        || {
+            fused_suite.clear_memo();
+            let _ = fused_suite.eval_batch(&suite_batch).unwrap();
+        },
+    );
+    rows.put(&r, nb as f64);
+    let suite_fused = r;
+
+    let suite_speedup = suite_seq.mean_s / suite_fused.mean_s;
+    // Acceptance: fusing the member barriers must never cost wall
+    // time (5% noise allowance on the timed ratio).
+    let suite_ok = suite_fused.mean_s <= suite_seq.mean_s * 1.05;
+    rows.guard(
+        "suite fused <= sequential members",
+        suite_speedup,
+        suite_ok,
+    );
+    println!(
+        "suite fused vs sequential members: {suite_speedup:.2}x \
+         ({:.2e}s vs {:.2e}s per batch)",
+        suite_fused.mean_s, suite_seq.mean_s
+    );
+    if strict {
+        assert!(
+            suite_ok,
+            "fused suite dispatch slower than sequential members: \
+             {:.3e}s vs {:.3e}s",
+            suite_fused.mean_s, suite_seq.mean_s
+        );
+    }
+
+    // Machine-independent dedup/memo contract (enrolled in
+    // BENCH_BASELINE.json): over one unique batch, one duplicated
+    // fresh batch and one full revisit, exactly 2 of every 5 lookups
+    // simulate — hit rate 0.6 regardless of nb or host.
+    let mut dedup_suite = SuiteEvaluator::with_backends(
+        &scenarios,
+        &mut |spec: &WorkloadSpec| {
+            SuiteBackend::Fused(Box::new(RooflineSim::new(*spec)))
+        },
+        None,
+    )
+    .unwrap();
+    let distinct = {
+        let mut seen = std::collections::HashSet::new();
+        let mut out: Vec<DesignPoint> = Vec::with_capacity(2 * nb);
+        // The A100 reference is already tier-pinned; keep it out so
+        // exactly 2*nb designs simulate.
+        while out.len() < 2 * nb {
+            let d = sample::uniform_batch(&space, &mut rng, 1)[0];
+            if seen.insert(d) && d != DesignPoint::a100() {
+                out.push(d);
+            }
+        }
+        out
+    };
+    let (b1, c1) = distinct.split_at(nb);
+    let doubled: Vec<DesignPoint> =
+        c1.iter().chain(c1.iter()).copied().collect();
+    let revisit: Vec<DesignPoint> =
+        b1.iter().chain(b1.iter()).copied().collect();
+    let _ = dedup_suite.eval_batch(b1).unwrap();
+    let _ = dedup_suite.eval_batch(&doubled).unwrap();
+    let _ = dedup_suite.eval_batch(&revisit).unwrap();
+    let c = dedup_suite.cache_counters().unwrap();
+    let suite_rate =
+        c.hits as f64 / (c.hits + c.misses).max(1) as f64;
+    let rate_ok = (suite_rate - 0.6).abs() < 1e-9;
+    rows.guard(
+        "suite dedup/memo hit rate (best=0.6)",
+        suite_rate,
+        rate_ok,
+    );
+    println!(
+        "suite dedup/memo hit rate: {suite_rate:.4} ({} hits / {} \
+         lookups)",
+        c.hits,
+        c.hits + c.misses
+    );
+    if strict {
+        assert!(
+            rate_ok,
+            "suite dedup/memo contract broken: hit rate \
+             {suite_rate:.4}, want exactly 0.6"
+        );
+    }
+
     rows.csv.write("out/perf_hotpath.csv").unwrap();
     println!("wrote out/perf_hotpath.csv");
 
@@ -718,7 +850,7 @@ fn main() {
         "bench".to_string(),
         Json::Str("perf_hotpath".to_string()),
     );
-    snapshot.insert("issue".to_string(), Json::Num(9.0));
+    snapshot.insert("issue".to_string(), Json::Num(10.0));
     snapshot.insert(
         "hardware_threads".to_string(),
         Json::Num(default_threads() as f64),
@@ -729,9 +861,9 @@ fn main() {
     // `cargo bench` runs from rust/; land the snapshot at the repo
     // root when it is where we expect, else alongside the CSV.
     let path = if std::path::Path::new("../ROADMAP.md").exists() {
-        "../BENCH_9.json"
+        "../BENCH_10.json"
     } else {
-        "BENCH_9.json"
+        "BENCH_10.json"
     };
     std::fs::write(path, Json::Obj(snapshot).pretty()).unwrap();
     println!("wrote {path}");

@@ -327,6 +327,13 @@ impl<E: Evaluator> Evaluator for CachedEvaluator<E> {
         Some(self.cache.counters())
     }
 
+    fn disk_counters(&self) -> Option<super::DiskCounters> {
+        // A disk tier lower in the stack (e.g. a memoized suite whose
+        // members probe the store) still reports its warm-restart
+        // telemetry through this wrapper.
+        self.inner.disk_counters()
+    }
+
     fn workload_fingerprint(&self) -> u64 {
         self.inner.workload_fingerprint()
     }

@@ -49,9 +49,10 @@ pub use parallel::ParallelEvaluator;
 pub use pool::WorkerPool;
 pub use scratch::{with_caller_scratch, EvalScratch, SOA_LANES};
 pub use store::{
-    DirLock, DiskBackedCache, DiskCounters, DiskStore, StoreStats,
+    DirLock, DiskBackedCache, DiskCounters, DiskStore, MemoTiers,
+    StoreStats,
 };
-pub use suite::{ScenarioMetrics, SuiteEvaluator};
+pub use suite::{ScenarioMetrics, SuiteBackend, SuiteEvaluator};
 
 use std::fmt;
 

@@ -37,7 +37,7 @@ use crate::Result;
 /// Batches smaller than this run sequentially on the caller: even pool
 /// dispatch (a queue push + condvar wake per lane) would dominate
 /// sub-microsecond chunks.
-const MIN_PARALLEL_BATCH: usize = 8;
+pub(crate) const MIN_PARALLEL_BATCH: usize = 8;
 
 /// Worker count used by [`ParallelEvaluator::new`]: every available
 /// hardware thread (the caller lane plus the global pool's workers).

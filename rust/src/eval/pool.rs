@@ -27,9 +27,17 @@
 //!   kernels (`eval_batch_soa`), so pool parallelism and SoA
 //!   vectorization compose.
 //!
+//! * **Fused multi-evaluator batches.** [`WorkerPool::eval_on_multi`]
+//!   enqueues tasks for *several* evaluators (one [`PoolJob`] each)
+//!   under a single batch latch — the suite's per-scenario members
+//!   collapse their per-member barriers into one, and the chunk size
+//!   is derived from the fused total so small per-member batches
+//!   still keep every lane busy.
+//!
 //! Safety: tasks carry raw pointers into the caller's stack (the
 //! evaluator reference, the input slice, the output buffer).
-//! [`WorkerPool::eval_on`] does not return until the batch latch counts
+//! [`WorkerPool::eval_on`] / [`WorkerPool::eval_on_multi`] do not
+//! return until the batch latch counts
 //! every chunk complete — including chunks whose evaluation panicked
 //! (the panic is caught, the latch still fires, and the caller re-raises
 //! after the batch drains) — so the pointed-to data strictly outlives
@@ -128,6 +136,16 @@ unsafe fn run_chunk<E: EvalOne + ?Sized>(
     ev.eval_chunk(src, dst, scratch);
 }
 
+/// One member of a fused multi-evaluator dispatch (see
+/// [`WorkerPool::eval_on_multi`]): evaluate `designs` into `out`
+/// (same length) with `ev`. The suite builds one job per scenario
+/// member; all jobs of one call share a single batch latch.
+pub struct PoolJob<'a, E: ?Sized> {
+    pub ev: &'a E,
+    pub designs: &'a [DesignPoint],
+    pub out: &'a mut [Metrics],
+}
+
 /// Queue + instrumentation shared between the pool handle and workers.
 struct Shared {
     state: Mutex<QueueState>,
@@ -219,39 +237,77 @@ impl WorkerPool {
         out: &mut [Metrics],
         threads: usize,
     ) {
-        let n = designs.len();
-        assert_eq!(n, out.len(), "output buffer length mismatch");
-        if n == 0 {
+        let mut jobs = [PoolJob { ev, designs, out }];
+        self.eval_on_multi(&mut jobs, threads);
+    }
+
+    /// Fused multi-evaluator dispatch: enqueue every (job × chunk)
+    /// task under **one** batch latch, so a batch spanning several
+    /// evaluators (the suite's scenario members) pays a single
+    /// barrier instead of one latch-drain per evaluator. Each job
+    /// writes only its own pre-sized output lane; within a job the
+    /// chunking is contiguous with input-order assembly, so results
+    /// are bit-identical to evaluating each job sequentially. The
+    /// chunk size is derived from the *total* design count, so small
+    /// per-member batches still spread across every lane. Blocks
+    /// until all jobs complete; re-raises if any chunk panicked.
+    pub fn eval_on_multi<E: EvalOne + ?Sized>(
+        &self,
+        jobs: &mut [PoolJob<'_, E>],
+        threads: usize,
+    ) {
+        let mut total = 0usize;
+        for j in jobs.iter() {
+            assert_eq!(
+                j.designs.len(),
+                j.out.len(),
+                "output buffer length mismatch"
+            );
+            total += j.designs.len();
+        }
+        if total == 0 {
             return;
         }
-        let lanes = threads.clamp(1, n).min(self.worker_count() + 1);
+        let lanes = threads.clamp(1, total).min(self.worker_count() + 1);
         if lanes == 1 {
-            with_caller_scratch(|s| ev.eval_chunk(designs, out, s));
+            with_caller_scratch(|s| {
+                for j in jobs.iter_mut() {
+                    j.ev.eval_chunk(j.designs, j.out, s);
+                }
+            });
             return;
         }
         self.shared.dispatches.fetch_add(1, Ordering::Relaxed);
-        // Ceiling division: every lane gets at most `chunk` designs and
-        // the chunk partitions of input and output line up exactly.
-        let chunk = n.div_ceil(lanes);
-        let n_chunks = n.div_ceil(chunk);
+        // Ceiling division over the fused total: every lane gets at
+        // most `chunk` designs, chunks never span jobs, and each
+        // job's chunk partitions of input and output line up exactly.
+        let chunk = total.div_ceil(lanes);
+        let n_chunks: usize = jobs
+            .iter()
+            .map(|j| j.designs.len().div_ceil(chunk))
+            .sum();
         let latch = Arc::new(Latch::new(n_chunks));
-        let ev_ref: &E = ev;
-        let ev_ptr = (&ev_ref as *const &E).cast::<()>();
         {
             let mut state =
                 // lumina: allow(P001) poison propagates a panic from a peer thread
                 self.shared.state.lock().expect("pool lock poisoned");
-            for (src, dst) in
-                designs.chunks(chunk).zip(out.chunks_mut(chunk))
-            {
-                state.tasks.push_back(Task {
-                    run: run_chunk::<E>,
-                    ev: ev_ptr,
-                    src: src.as_ptr(),
-                    dst: dst.as_mut_ptr(),
-                    len: src.len(),
-                    latch: Arc::clone(&latch),
-                });
+            for j in jobs.iter_mut() {
+                // Thin pointer to this job's `&E` field; the jobs
+                // slice outlives the latch wait below, so workers can
+                // read the (possibly fat) reference through it.
+                let ev_ptr = (&j.ev as *const &E).cast::<()>();
+                for (src, dst) in
+                    j.designs.chunks(chunk).zip(j.out.chunks_mut(chunk))
+                {
+                    state.tasks.push_back(Task {
+                        run: run_chunk::<E>,
+                        ev: ev_ptr,
+                        src: src.as_ptr(),
+                        dst: dst.as_mut_ptr(),
+                        len: src.len(),
+                        latch: Arc::clone(&latch),
+                    });
+                }
             }
         }
         self.shared.available.notify_all();
@@ -402,6 +458,103 @@ mod tests {
         assert_eq!(pool.worker_count(), 2, "no threads added per batch");
         assert_eq!(pool.dispatches(), 10);
         assert!(pool.peak_worker_tasks() <= 2);
+    }
+
+    #[test]
+    fn multi_dispatch_matches_per_member_sequential() {
+        // Heterogeneous member sizes and workloads through ONE fused
+        // call: every job's lane must be bit-identical to evaluating
+        // that member alone, at every thread count.
+        use crate::workload::spec_by_name;
+        let specs = [
+            GPT3_175B,
+            spec_by_name("long-context").unwrap(),
+            spec_by_name("latency-decode").unwrap(),
+        ];
+        let sims: Vec<RooflineSim> =
+            specs.iter().map(|s| RooflineSim::new(*s)).collect();
+        let pool = WorkerPool::new(3);
+        for sizes in [[0usize, 1, 5], [8, 8, 8], [31, 7, 64]] {
+            let ds: Vec<Vec<DesignPoint>> = sizes
+                .iter()
+                .enumerate()
+                .map(|(k, n)| designs(*n + k))
+                .collect();
+            let want: Vec<Vec<Metrics>> = sims
+                .iter()
+                .zip(&ds)
+                .map(|(s, d)| d.iter().map(|x| s.eval_one(x)).collect())
+                .collect();
+            for threads in [1usize, 2, 4, 16] {
+                let mut outs: Vec<Vec<Metrics>> = ds
+                    .iter()
+                    .map(|d| vec![Metrics::default(); d.len()])
+                    .collect();
+                {
+                    let mut jobs: Vec<PoolJob<'_, RooflineSim>> = sims
+                        .iter()
+                        .zip(ds.iter().zip(outs.iter_mut()))
+                        .map(|(ev, (designs, out))| PoolJob {
+                            ev,
+                            designs,
+                            out,
+                        })
+                        .collect();
+                    pool.eval_on_multi(&mut jobs, threads);
+                }
+                assert_eq!(
+                    outs, want,
+                    "sizes={sizes:?} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multi_dispatch_is_one_latch_one_dispatch() {
+        // The tentpole property: one fused call = one dispatch (one
+        // batch latch), regardless of how many members it spans.
+        let pool = WorkerPool::new(2);
+        let sims = [
+            RooflineSim::new(GPT3_175B),
+            RooflineSim::new(GPT3_175B),
+            RooflineSim::new(GPT3_175B),
+        ];
+        let ds = designs(24);
+        let mut outs =
+            vec![vec![Metrics::default(); ds.len()]; sims.len()];
+        let mut jobs: Vec<PoolJob<'_, RooflineSim>> = sims
+            .iter()
+            .zip(outs.iter_mut())
+            .map(|(ev, out)| PoolJob { ev, designs: &ds, out })
+            .collect();
+        pool.eval_on_multi(&mut jobs, 3);
+        assert_eq!(pool.dispatches(), 1, "one latch for all members");
+        assert!(pool.peak_worker_tasks() <= 2);
+    }
+
+    #[test]
+    fn multi_dispatch_supports_trait_object_members() {
+        // The suite dispatches `&dyn EvalOne` members of different
+        // concrete types under one latch.
+        use crate::sim::CompassSim;
+        let a = RooflineSim::new(GPT3_175B);
+        let b = CompassSim::new(GPT3_175B);
+        let ds = designs(17);
+        let want_a: Vec<Metrics> =
+            ds.iter().map(|d| a.eval_one(d)).collect();
+        let want_b: Vec<Metrics> =
+            ds.iter().map(|d| b.eval_one(d)).collect();
+        let pool = WorkerPool::new(2);
+        let mut out_a = vec![Metrics::default(); ds.len()];
+        let mut out_b = vec![Metrics::default(); ds.len()];
+        let mut jobs: Vec<PoolJob<'_, dyn EvalOne>> = vec![
+            PoolJob { ev: &a, designs: &ds, out: &mut out_a },
+            PoolJob { ev: &b, designs: &ds, out: &mut out_b },
+        ];
+        pool.eval_on_multi(&mut jobs, 4);
+        assert_eq!(out_a, want_a);
+        assert_eq!(out_b, want_b);
     }
 
     #[test]

@@ -723,6 +723,69 @@ fn scan_segment(
     skipped
 }
 
+/// An in-memory [`SharedCache`] front with an *optional* [`DiskStore`]
+/// behind it: the reusable two-tier (workload-fingerprint, design)
+/// memo probe. [`DiskBackedCache`] is the evaluator-shaped wrapper of
+/// the same tiering; the suite evaluator threads one `MemoTiers`
+/// through all of its members instead — every member probes and
+/// write-behinds under its **own** workload fingerprint (the same key
+/// a single-workload run over that scenario uses, so entries
+/// interchange between suite and single-workload runs). Cloning
+/// shares both tiers.
+#[derive(Debug, Clone, Default)]
+pub struct MemoTiers {
+    mem: SharedCache,
+    disk: Option<Arc<DiskStore>>,
+}
+
+impl MemoTiers {
+    pub fn new(disk: Option<Arc<DiskStore>>) -> Self {
+        Self { mem: SharedCache::new(), disk }
+    }
+
+    /// The in-memory front tier.
+    pub fn mem(&self) -> &SharedCache {
+        &self.mem
+    }
+
+    /// The disk tier, when one is attached.
+    pub fn disk(&self) -> Option<&Arc<DiskStore>> {
+        self.disk.as_ref()
+    }
+
+    /// Two-tier probe: memory first, then disk with promotion into
+    /// the memory tier (the promotion is counted in
+    /// [`DiskCounters::hits`], mirroring [`DiskBackedCache`]).
+    pub fn get(&self, fp: u64, d: &DesignPoint) -> Option<Metrics> {
+        if let Some(m) = self.mem.get(fp, d) {
+            return Some(m);
+        }
+        let disk = self.disk.as_ref()?;
+        let m = disk.get(fp, d)?;
+        self.mem.insert_if_absent(fp, d, m);
+        disk.note_hit();
+        Some(m)
+    }
+
+    /// True when either tier knows `(fp, d)`; no promotion, no
+    /// counter effects.
+    pub fn contains(&self, fp: u64, d: &DesignPoint) -> bool {
+        self.mem.contains(fp, d)
+            || self
+                .disk
+                .as_ref()
+                .is_some_and(|dk| dk.contains(fp, d))
+    }
+
+    /// Write-behind commit to both tiers.
+    pub fn put(&self, fp: u64, d: &DesignPoint, m: Metrics) {
+        self.mem.insert(fp, d, m);
+        if let Some(dk) = &self.disk {
+            dk.append(fp, d, &m);
+        }
+    }
+}
+
 /// Read-through / write-behind two-tier memo cache: an in-memory
 /// [`SharedCache`] in front of a [`DiskStore`]. Implements both
 /// evaluator traits exactly like [`CachedEvaluator`], so it composes

@@ -1,14 +1,30 @@
 //! Multi-scenario suite evaluation: one design, every registered
 //! workload scenario, one weighted composite objective.
 //!
-//! [`SuiteEvaluator`] owns one inner evaluator per scenario (built by a
-//! caller-supplied factory, so the suite composes with
-//! [`super::ParallelEvaluator`] / [`super::CachedEvaluator`] and any
-//! backend; pool-backed parallel members all dispatch to the one
-//! process-wide [`super::WorkerPool`], so a 7-member suite cannot
-//! oversubscribe the host). `eval_batch` returns a **composite**
-//! [`Metrics`] per
-//! design: TTFT/TPOT are the weighted means of the per-scenario values
+//! [`SuiteEvaluator`] owns one backend per scenario (built by a
+//! caller-supplied factory). Pure per-design backends
+//! ([`SuiteBackend::Fused`]) join a **single fused cross-scenario
+//! dispatch**: every (member × design-chunk) task of one ask batch is
+//! enqueued under one [`super::WorkerPool`] batch latch
+//! ([`super::pool::PoolJob`]), each member writing its own pre-sized
+//! output lane — one barrier per batch instead of one per member, and
+//! small ask batches still keep every worker busy because the chunk
+//! size is derived from the fused total. Stateful batch backends
+//! ([`SuiteBackend::Sequential`], e.g. a PJRT artifact) keep their own
+//! `eval_batch` and run member-at-a-time, exactly like the historical
+//! member path.
+//!
+//! Memoization is two-layered. A **composite memo** (keyed on the
+//! combined suite fingerprint) dedups duplicate designs once before
+//! any fan-out, so revisits and intra-batch duplicates are served on
+//! the caller thread. Below it, every fused member probes and
+//! write-behinds a shared [`super::store::MemoTiers`] under its
+//! **own** workload fingerprint — with a `--cache-dir` disk store
+//! attached, a design evaluated in a single-workload run is a free
+//! disk hit inside a suite run, and vice versa.
+//!
+//! `eval_batch` returns a **composite** [`Metrics`] per design:
+//! TTFT/TPOT are the weighted means of the per-scenario values
 //! normalized by that scenario's A100 reference (so the A100 scores
 //! exactly 1.0 on both axes and DSE methods optimize a dimensionless
 //! multi-scenario objective); stall stacks are normalized the same way,
@@ -16,13 +32,25 @@
 //! workload-independent and taken from the first scenario. Per-scenario
 //! TTFT/TPOT reporting goes through [`SuiteEvaluator::eval_scenarios`].
 //!
-//! Composition order is fixed (registry order, f32 accumulation), so
-//! suite results are bit-deterministic and independent of whether the
-//! members are parallel, cached, or plain — covered by
+//! Composition order is fixed (registry order, f32 accumulation) and
+//! composes straight from the transposed per-member lanes (no
+//! per-design row is built), so suite results are bit-deterministic
+//! and independent of whether the members are fused, parallel, cached,
+//! or plain — covered by
+//! `tests/eval_pipeline.rs::suite_fused_matches_sequential_bitwise_256`
+//! and
 //! `tests/eval_pipeline.rs::suite_composite_is_deterministic_across_pipelines`.
 
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
 use crate::design::DesignPoint;
-use crate::eval::{Evaluator, Metrics};
+use crate::eval::parallel::{default_threads, MIN_PARALLEL_BATCH};
+use crate::eval::pool::PoolJob;
+use crate::eval::{
+    CacheCounters, DiskCounters, DiskStore, EvalOne, Evaluator,
+    MemoTiers, Metrics, SharedCache, WorkerPool,
+};
 use crate::workload::{Scenario, WorkloadSpec};
 use crate::{bail, Result};
 
@@ -51,10 +79,22 @@ impl ScenarioMetrics {
     }
 }
 
+/// How one suite member evaluates (see module docs): pure per-design
+/// backends join the fused cross-scenario pool dispatch and the
+/// per-member memo tiers; stateful batch backends keep their own
+/// `eval_batch` and run member-at-a-time.
+pub enum SuiteBackend {
+    Fused(Box<dyn EvalOne>),
+    Sequential(Box<dyn Evaluator>),
+}
+
 struct SuiteMember {
     scenario: Scenario,
-    evaluator: Box<dyn Evaluator>,
+    backend: SuiteBackend,
     reference: Metrics,
+    /// This member's own workload fingerprint — the per-member memo
+    /// tier key, shared with single-workload runs of the same spec.
+    fp: u64,
 }
 
 /// Weighted multi-scenario evaluator (see module docs).
@@ -62,14 +102,40 @@ pub struct SuiteEvaluator {
     members: Vec<SuiteMember>,
     weight_total: f32,
     fingerprint: u64,
+    threads: usize,
+    /// Composite memo keyed on (combined suite fingerprint, design);
+    /// its counters drive budget accounting (a design counts as a
+    /// miss only when some member actually simulated it).
+    composite: SharedCache,
+    /// Per-member memo tier keyed on (member fingerprint, design) —
+    /// one shared two-tier store serves every fused member, since the
+    /// keys embed each member's own fingerprint.
+    tiers: MemoTiers,
 }
 
 impl SuiteEvaluator {
-    /// Build one inner evaluator per scenario via `factory` and pin each
-    /// scenario's A100 reference. Scenario weights must sum positive.
+    /// Build one inner evaluator per scenario via `factory` and pin
+    /// each scenario's A100 reference. Scenario weights must sum
+    /// positive. Members built this way run the sequential member
+    /// path; [`SuiteEvaluator::with_backends`] builds fused members.
     pub fn new(
         scenarios: &[&Scenario],
         factory: &mut dyn FnMut(&WorkloadSpec) -> Box<dyn Evaluator>,
+    ) -> Result<Self> {
+        Self::with_backends(
+            scenarios,
+            &mut |spec| SuiteBackend::Sequential(factory(spec)),
+            None,
+        )
+    }
+
+    /// Build one backend per scenario via `factory`, attach an
+    /// optional disk tier under the per-member memo, and pin each
+    /// scenario's A100 reference through one fused startup batch.
+    pub fn with_backends(
+        scenarios: &[&Scenario],
+        factory: &mut dyn FnMut(&WorkloadSpec) -> SuiteBackend,
+        disk: Option<Arc<DiskStore>>,
     ) -> Result<Self> {
         if scenarios.is_empty() {
             bail!("suite needs at least one scenario");
@@ -79,23 +145,52 @@ impl SuiteEvaluator {
         if weight_total <= 0.0 {
             bail!("suite scenario weights must sum positive");
         }
-        let a100 = DesignPoint::a100();
         let mut members = Vec::with_capacity(scenarios.len());
         let mut fingerprint: u64 = 0xcbf29ce484222325;
         for s in scenarios {
-            let mut evaluator = factory(&s.spec);
-            let reference = evaluator.eval(&a100)?;
+            let backend = factory(&s.spec);
+            let fp = match &backend {
+                SuiteBackend::Fused(ev) => ev.workload_fingerprint(),
+                SuiteBackend::Sequential(ev) => {
+                    ev.workload_fingerprint()
+                }
+            };
             fingerprint ^= s.spec.fingerprint();
             fingerprint = fingerprint.wrapping_mul(0x100000001b3);
             fingerprint ^= s.weight.to_bits();
             fingerprint = fingerprint.wrapping_mul(0x100000001b3);
             members.push(SuiteMember {
                 scenario: **s,
-                evaluator,
-                reference,
+                backend,
+                reference: Metrics::default(),
+                fp,
             });
         }
-        Ok(Self { members, weight_total, fingerprint })
+        let mut suite = Self {
+            members,
+            weight_total,
+            fingerprint,
+            threads: default_threads(),
+            composite: SharedCache::new(),
+            tiers: MemoTiers::new(disk),
+        };
+        suite.pin_references()?;
+        Ok(suite)
+    }
+
+    /// Pin each member's A100 reference through [`Self::eval_members`]:
+    /// fused members resolve in **one** shared pool dispatch (suite
+    /// startup rides the pool instead of one sequential `eval` per
+    /// member), and a warm disk store serves references without
+    /// simulating at all.
+    fn pin_references(&mut self) -> Result<()> {
+        let a100 = DesignPoint::a100();
+        let (per_member, _simulated) =
+            self.eval_members(std::slice::from_ref(&a100))?;
+        for (m, lane) in self.members.iter_mut().zip(&per_member) {
+            m.reference = lane[0];
+        }
+        Ok(())
     }
 
     /// The scenarios of this suite, in evaluation order.
@@ -103,36 +198,191 @@ impl SuiteEvaluator {
         self.members.iter().map(|m| &m.scenario).collect()
     }
 
+    /// Drop every memoized entry (the composite memo and the
+    /// in-memory member tier; a disk tier is untouched) while keeping
+    /// the counters. The perf bench re-evaluates one batch repeatedly
+    /// and must re-dispatch it each iteration.
+    pub fn clear_memo(&mut self) {
+        self.composite.clear();
+        self.tiers.mem().clear();
+    }
+
     /// Per-scenario metrics of one design (report path; the
-    /// [`Evaluator`] impl returns the composite instead).
+    /// [`Evaluator`] impl returns the composite instead). Fused
+    /// members resolve through the member tiers, so a report on an
+    /// already-explored design never re-simulates.
     pub fn eval_scenarios(
         &mut self,
         d: &DesignPoint,
     ) -> Result<Vec<ScenarioMetrics>> {
+        let tiers = &self.tiers;
         let mut out = Vec::with_capacity(self.members.len());
         for m in &mut self.members {
-            let metrics = m.evaluator.eval(d)?;
+            let SuiteMember { scenario, backend, reference, fp } = m;
+            let metrics = match backend {
+                SuiteBackend::Fused(ev) => match tiers.get(*fp, d) {
+                    Some(hit) => hit,
+                    None => {
+                        let v = ev.eval_one(d);
+                        tiers.put(*fp, d, v);
+                        v
+                    }
+                },
+                SuiteBackend::Sequential(ev) => ev.eval(d)?,
+            };
             out.push(ScenarioMetrics {
-                name: m.scenario.name,
-                weight: m.scenario.weight,
+                name: scenario.name,
+                weight: scenario.weight,
                 metrics,
-                reference: m.reference,
-                n_layers: m.scenario.spec.n_layers,
+                reference: *reference,
+                n_layers: scenario.spec.n_layers,
             });
         }
         Ok(out)
     }
 
-    /// Compose one design's per-member metrics (member order matches
-    /// `self.members`) into the suite objective.
-    fn composite(&self, per_member: &[Metrics]) -> Metrics {
+    /// Resolve `fresh` (unique designs) under every member. Fused
+    /// members are tier-probed on the caller thread, then every
+    /// still-missing (member × chunk) task runs under **one** fused
+    /// pool dispatch, with write-behind into the member tiers.
+    /// Sequential members run their own `eval_batch` over the full
+    /// list, unchanged. Returns the member-major metrics grid and how
+    /// many of the designs required at least one member simulation.
+    fn eval_members(
+        &mut self,
+        fresh: &[DesignPoint],
+    ) -> Result<(Vec<Vec<Metrics>>, usize)> {
+        struct PendingLane<'a> {
+            member: usize,
+            ev: &'a dyn EvalOne,
+            need: Vec<DesignPoint>,
+            lane: Vec<Metrics>,
+        }
+
+        let nm = self.members.len();
+        let n = fresh.len();
+        let mut resolved: Vec<Vec<Option<Metrics>>> =
+            vec![vec![None; n]; nm];
+        let mut needs_sim = vec![false; n];
+        let mut pending: Vec<PendingLane<'_>> = Vec::new();
+        for (k, m) in self.members.iter().enumerate() {
+            match &m.backend {
+                SuiteBackend::Fused(ev) => {
+                    let mut need = Vec::new();
+                    for (i, d) in fresh.iter().enumerate() {
+                        match self.tiers.get(m.fp, d) {
+                            Some(hit) => resolved[k][i] = Some(hit),
+                            None => {
+                                need.push(*d);
+                                needs_sim[i] = true;
+                            }
+                        }
+                    }
+                    if !need.is_empty() {
+                        let lane =
+                            vec![Metrics::default(); need.len()];
+                        pending.push(PendingLane {
+                            member: k,
+                            ev: ev.as_ref(),
+                            need,
+                            lane,
+                        });
+                    }
+                }
+                SuiteBackend::Sequential(_) => {
+                    // Stateful members can be neither tier-served nor
+                    // fused: every design reaches their simulator.
+                    needs_sim.fill(true);
+                }
+            }
+        }
+        if !pending.is_empty() {
+            // The tentpole: all (member × chunk) tasks share a single
+            // batch latch — one barrier for the whole suite batch.
+            let total: usize =
+                pending.iter().map(|p| p.need.len()).sum();
+            let threads = if total < MIN_PARALLEL_BATCH {
+                1
+            } else {
+                self.threads
+            };
+            let mut jobs: Vec<PoolJob<'_, dyn EvalOne>> = pending
+                .iter_mut()
+                .map(|p| PoolJob {
+                    ev: p.ev,
+                    designs: p.need.as_slice(),
+                    out: p.lane.as_mut_slice(),
+                })
+                .collect();
+            WorkerPool::global().eval_on_multi(&mut jobs, threads);
+        }
+        // Write-behind + scatter: `need` was collected in probe
+        // order, so its results fill this member's unresolved slots
+        // in order.
+        for p in &pending {
+            let fp = self.members[p.member].fp;
+            let mut j = 0;
+            for slot in resolved[p.member].iter_mut() {
+                if slot.is_none() {
+                    self.tiers.put(fp, &p.need[j], p.lane[j]);
+                    *slot = Some(p.lane[j]);
+                    j += 1;
+                }
+            }
+            debug_assert_eq!(j, p.need.len());
+        }
+        drop(pending);
+        for (k, m) in self.members.iter_mut().enumerate() {
+            let SuiteMember { scenario, backend, .. } = m;
+            if let SuiteBackend::Sequential(ev) = backend {
+                let ms = ev.eval_batch(fresh)?;
+                if ms.len() != n {
+                    bail!(
+                        "suite member {} returned {} results for {} \
+                         designs",
+                        scenario.name,
+                        ms.len(),
+                        n
+                    );
+                }
+                for (i, v) in ms.into_iter().enumerate() {
+                    resolved[k][i] = Some(v);
+                }
+            }
+        }
+        let simulated = needs_sim.iter().filter(|f| **f).count();
+        let per_member = resolved
+            .into_iter()
+            .map(|lane| {
+                lane.into_iter()
+                    .map(|slot| {
+                        // lumina: allow(P001) every slot is filled by the probe, the fused dispatch, or the sequential member pass above
+                        slot.expect("unresolved suite member slot")
+                    })
+                    .collect()
+            })
+            .collect();
+        Ok((per_member, simulated))
+    }
+
+    /// Compose design `i` of the transposed member-major metrics grid
+    /// (member order matches `self.members`) into the suite
+    /// objective. Reads straight from the member lanes — no
+    /// per-design row is allocated, so steady-state composition is
+    /// allocation-free.
+    fn composite_at(
+        &self,
+        per_member: &[Vec<Metrics>],
+        i: usize,
+    ) -> Metrics {
         debug_assert_eq!(per_member.len(), self.members.len());
         let mut ttft = 0.0f32;
         let mut tpot = 0.0f32;
         let mut e_pf = 0.0f32;
         let mut e_dc = 0.0f32;
         let mut stalls = [[0.0f32; 3]; 2];
-        for (mem, m) in self.members.iter().zip(per_member) {
+        for (mem, ms) in self.members.iter().zip(per_member) {
+            let m = &ms[i];
             let wn = mem.scenario.weight as f32 / self.weight_total;
             let r = &mem.reference;
             ttft += wn * (m.ttft_ms / r.ttft_ms);
@@ -155,8 +405,8 @@ impl SuiteEvaluator {
                     m.energy_per_token_mj,
                     r.energy_per_token_mj,
                 );
-            for (p, phase_ref) in [r.ttft_ms, r.tpot_ms].into_iter().enumerate()
-            {
+            let phase_refs = [r.ttft_ms, r.tpot_ms];
+            for (p, phase_ref) in phase_refs.into_iter().enumerate() {
                 for c in 0..3 {
                     stalls[p][c] += wn * (m.stalls[p][c] / phase_ref);
                 }
@@ -167,7 +417,7 @@ impl SuiteEvaluator {
             tpot_ms: tpot,
             // Die area does not depend on the workload; every member
             // reports the same value for a given design.
-            area_mm2: per_member[0].area_mm2,
+            area_mm2: per_member[0][i].area_mm2,
             energy_per_token_mj: e_dc,
             prefill_energy_mj: e_pf,
             // On normalized lanes the helper yields a dimensionless
@@ -182,26 +432,47 @@ impl SuiteEvaluator {
 
 impl Evaluator for SuiteEvaluator {
     fn eval_batch(&mut self, designs: &[DesignPoint]) -> Result<Vec<Metrics>> {
-        let mut per_member: Vec<Vec<Metrics>> =
-            Vec::with_capacity(self.members.len());
-        for m in &mut self.members {
-            let ms = m.evaluator.eval_batch(designs)?;
-            if ms.len() != designs.len() {
-                bail!(
-                    "suite member {} returned {} results for {} designs",
-                    m.scenario.name,
-                    ms.len(),
-                    designs.len()
-                );
+        let fp = self.fingerprint;
+        // Composite-memo probe + one dedup before any fan-out:
+        // duplicate designs inside the ask batch and revisits across
+        // batches are served on the caller thread.
+        let mut slots: Vec<Option<Metrics>> =
+            Vec::with_capacity(designs.len());
+        let mut fresh: Vec<DesignPoint> = Vec::new();
+        let mut seen: HashSet<DesignPoint> = HashSet::new();
+        for d in designs {
+            let hit = self.composite.get(fp, d);
+            if hit.is_none() && seen.insert(*d) {
+                fresh.push(*d);
             }
-            per_member.push(ms);
+            slots.push(hit);
         }
-        Ok((0..designs.len())
-            .map(|i| {
-                let row: Vec<Metrics> =
-                    per_member.iter().map(|ms| ms[i]).collect();
-                self.composite(&row)
-            })
+        let (per_member, simulated) = if fresh.is_empty() {
+            (Vec::new(), 0)
+        } else {
+            self.eval_members(&fresh)?
+        };
+        // Compose in input order from the transposed per-member lanes
+        // directly — no per-design row allocation.
+        let mut fresh_ms: HashMap<DesignPoint, Metrics> =
+            HashMap::with_capacity(fresh.len());
+        for (i, d) in fresh.iter().enumerate() {
+            let m = self.composite_at(&per_member, i);
+            self.composite.insert(fp, d, m);
+            fresh_ms.insert(*d, m);
+        }
+        // A design counts as a miss only when some member actually
+        // simulated it: composite-memo hits, intra-batch duplicates
+        // and designs fully served by the member tiers (a warm disk
+        // store) all ride as hits — so under `BudgetedEvaluator`
+        // they stay budget-free, exactly like the single-workload
+        // disk-backed stack.
+        let misses = simulated as u64;
+        self.composite.record(designs.len() as u64 - misses, misses);
+        Ok(designs
+            .iter()
+            .zip(slots)
+            .map(|(d, s)| s.unwrap_or_else(|| fresh_ms[d]))
             .collect())
     }
 
@@ -209,16 +480,47 @@ impl Evaluator for SuiteEvaluator {
         "suite"
     }
 
+    fn is_cached(&self, d: &DesignPoint) -> bool {
+        if self.composite.contains(self.fingerprint, d) {
+            return true;
+        }
+        // Served without simulating iff *every* member can be
+        // tier-served; sequential members never can.
+        self.members.iter().all(|m| {
+            matches!(m.backend, SuiteBackend::Fused(_))
+                && self.tiers.contains(m.fp, d)
+        })
+    }
+
+    fn cache_counters(&self) -> Option<CacheCounters> {
+        Some(self.composite.counters())
+    }
+
+    fn disk_counters(&self) -> Option<DiskCounters> {
+        self.tiers.disk().map(|d| d.counters())
+    }
+
     fn workload_fingerprint(&self) -> u64 {
         self.fingerprint
+    }
+
+    fn preload(&mut self, pairs: &[(DesignPoint, Metrics)]) {
+        // Resume path: a checkpointed trajectory holds *composite*
+        // metrics, so it warms the composite memo (the member tiers
+        // refill from disk or fresh evaluation).
+        for (d, m) in pairs {
+            self.composite.insert_if_absent(self.fingerprint, d, *m);
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::design::{sample, DesignSpace};
     use crate::eval::{Bottleneck, Phase};
     use crate::sim::RooflineSim;
+    use crate::stats::rng::Pcg32;
     use crate::workload::{scenario_by_name, suite_scenarios};
 
     fn suite() -> SuiteEvaluator {
@@ -227,6 +529,17 @@ mod tests {
             &mut |spec: &WorkloadSpec| -> Box<dyn Evaluator> {
                 Box::new(RooflineSim::new(*spec))
             },
+        )
+        .unwrap()
+    }
+
+    fn fused_suite() -> SuiteEvaluator {
+        SuiteEvaluator::with_backends(
+            &suite_scenarios(),
+            &mut |spec: &WorkloadSpec| {
+                SuiteBackend::Fused(Box::new(RooflineSim::new(*spec)))
+            },
+            None,
         )
         .unwrap()
     }
@@ -426,5 +739,69 @@ mod tests {
         assert!(SuiteEvaluator::new(&none, &mut factory).is_err());
         let tiny = [scenario_by_name("gpt3-tiny").unwrap()];
         assert!(SuiteEvaluator::new(&tiny, &mut factory).is_err());
+    }
+
+    #[test]
+    fn fused_suite_matches_sequential_bitwise() {
+        let space = DesignSpace::table1();
+        let mut rng = Pcg32::new(1009);
+        let ds = sample::uniform_batch(&space, &mut rng, 32);
+        let mut seq = suite();
+        let mut fused = fused_suite();
+        let a = seq.eval_batch(&ds).unwrap();
+        let b = fused.eval_batch(&ds).unwrap();
+        assert_eq!(a, b, "fused dispatch must be bitwise-identical");
+        // References must agree bitwise too.
+        let ra = seq.eval_scenarios(&DesignPoint::a100()).unwrap();
+        let rb = fused.eval_scenarios(&DesignPoint::a100()).unwrap();
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.reference, y.reference);
+            assert_eq!(x.metrics, y.metrics);
+        }
+    }
+
+    #[test]
+    fn dedup_changes_counters_not_results() {
+        let space = DesignSpace::table1();
+        let mut rng = Pcg32::new(2027);
+        let uniq = sample::uniform_batch(&space, &mut rng, 6);
+        let dup: Vec<DesignPoint> =
+            (0..24).map(|i| uniq[i % uniq.len()]).collect();
+        let mut seq = suite();
+        let mut fused = fused_suite();
+        let a = seq.eval_batch(&dup).unwrap();
+        let b = fused.eval_batch(&dup).unwrap();
+        assert_eq!(a, b, "dedup must not change results");
+        // Both stacks simulate only the unique designs; the 18
+        // duplicate occurrences ride as caller-thread hits.
+        for s in [&seq, &fused] {
+            let c = s.cache_counters().unwrap();
+            assert_eq!(c.misses, 6, "{}", s.name());
+            assert_eq!(c.hits, 18, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn composite_memo_serves_repeat_batches() {
+        let space = DesignSpace::table1();
+        let mut rng = Pcg32::new(4099);
+        let ds = sample::uniform_batch(&space, &mut rng, 10);
+        let mut s = fused_suite();
+        let first = s.eval_batch(&ds).unwrap();
+        let again = s.eval_batch(&ds).unwrap();
+        assert_eq!(first, again);
+        let c = s.cache_counters().unwrap();
+        assert_eq!(c.misses, 10);
+        assert_eq!(c.hits, 10);
+        for d in &ds {
+            assert!(s.is_cached(d));
+        }
+        // clear_memo drops the memo but keeps the counters; the next
+        // batch re-simulates.
+        s.clear_memo();
+        assert!(!s.is_cached(&ds[0]));
+        let third = s.eval_batch(&ds).unwrap();
+        assert_eq!(first, third);
+        assert_eq!(s.cache_counters().unwrap().misses, 20);
     }
 }

@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use crate::eval::{
     BudgetedEvaluator, CachedEvaluator, DiskBackedCache, DiskStore,
-    Evaluator, Metrics, ParallelEvaluator,
+    Evaluator, Metrics, ParallelEvaluator, SuiteBackend,
 };
 use crate::pareto::{
     normalize, phv_ref, sample_efficiency, superior_count,
@@ -130,6 +130,33 @@ impl EvaluatorKind {
                     CompassSim::new(*spec),
                     disk,
                 )))
+            }
+        }
+    }
+
+    /// Build one [`crate::eval::SuiteEvaluator`] member backend for a
+    /// suite scenario. The pure analytical simulators come back as
+    /// [`SuiteBackend::Fused`] — thread-safe per-design functions the
+    /// suite folds into its single fused cross-scenario pool dispatch
+    /// and probes through the per-member memo tiers. A PJRT artifact
+    /// matching the scenario stays [`SuiteBackend::Sequential`]: it
+    /// batches internally, is not a pure per-design function, and so
+    /// can neither fuse nor be tier-served.
+    pub fn make_suite_backend(self, spec: &WorkloadSpec) -> SuiteBackend {
+        match self {
+            EvaluatorKind::RooflinePjrt => {
+                match open_matching_pjrt(spec) {
+                    Some(e) => SuiteBackend::Sequential(Box::new(e)),
+                    None => SuiteBackend::Fused(Box::new(
+                        RooflineSim::new(*spec),
+                    )),
+                }
+            }
+            EvaluatorKind::RooflineRust => {
+                SuiteBackend::Fused(Box::new(RooflineSim::new(*spec)))
+            }
+            EvaluatorKind::Compass => {
+                SuiteBackend::Fused(Box::new(CompassSim::new(*spec)))
             }
         }
     }

@@ -29,8 +29,7 @@ use lumina::dse::{
     NullObserver, Observer, ProgressObserver, SessionState, ShardSpec,
 };
 use lumina::eval::{
-    BudgetedEvaluator, CachedEvaluator, DiskStore, Evaluator, Phase,
-    SuiteEvaluator,
+    BudgetedEvaluator, DiskStore, Evaluator, Phase, SuiteEvaluator,
 };
 use lumina::figures::race::{
     aggregate, reference_objectives, run_race, run_race_fused,
@@ -66,6 +65,9 @@ USAGE: lumina <command> [--options]
           [--checkpoint PATH [--resume] [--checkpoint-every K]]
           [--cache-dir DIR]  persist the memo store on disk: repeat
                              runs serve known designs as free hits
+                             (with --suite, keyed per scenario, so
+                             designs interchange with single-workload
+                             runs)
   race [--samples N] [--trials T] [--evaluator ...] [--workload NAME]
        [--objectives latency-area|ppa] [--fused] [--verbose]
        [--cache-dir DIR --shard I/N]
@@ -90,7 +92,7 @@ USAGE: lumina <command> [--options]
   report [<8 values>]        Table-4 style PPA report (defaults: paper
                              designs) [--workload NAME]
   workloads                  list the workload scenario registry
-  bench [check|update|show]  hold BENCH_9.json to BENCH_BASELINE.json
+  bench [check|update|show]  hold BENCH_10.json to BENCH_BASELINE.json
         [--snapshot PATH] [--baseline PATH] [--issue N]
                              check: non-zero exit on any regressed row
                              update: ratchet the baseline forward
@@ -480,13 +482,6 @@ fn cmd_explore(args: &Args) -> lumina::Result<()> {
 /// `explore --suite`: optimize the weighted multi-scenario composite and
 /// report the top designs per scenario.
 fn cmd_explore_suite(args: &Args) -> lumina::Result<()> {
-    if args.opt("cache-dir").is_some() {
-        lumina::bail!(
-            "--cache-dir is not supported with --suite: the composite \
-             memo is keyed on the combined suite fingerprint and stays \
-             in-memory (see EXPERIMENTS.md, Disk store)"
-        );
-    }
     let kind = evaluator_kind(args);
     let scenarios = suite_scenarios();
     println!(
@@ -499,23 +494,32 @@ fn cmd_explore_suite(args: &Args) -> lumina::Result<()> {
             .join(", ")
     );
 
-    // Per-scenario members are pool-backed parallel pipelines: every
-    // member's batch shards over the same process-wide worker pool, so
-    // a 7-scenario suite cannot oversubscribe the host.
-    let mut factory = |spec: &WorkloadSpec| -> Box<dyn Evaluator> {
-        kind.make_for(spec)
-    };
-    let suite = SuiteEvaluator::new(&scenarios, &mut factory)?;
+    // Pure members join one fused cross-scenario pool dispatch per ask
+    // batch: all (member x chunk) tasks run under a single batch
+    // latch, so a 7-scenario suite pays one barrier per batch and
+    // still cannot oversubscribe the host (one process-wide pool).
     // One sample = one design evaluated under every scenario; the
-    // composite is memoized *outside* the members (keyed on the
-    // suite's combined workload fingerprint) so a revisited design
-    // skips all members at once and rides free on the budget.
-    let mut ev = CachedEvaluator::new(suite);
+    // suite memoizes composites (keyed on the combined suite
+    // fingerprint) so a revisited design skips all members at once
+    // and rides free on the budget. With `--cache-dir` every member
+    // also probes and write-behinds the shared disk store under its
+    // *own* workload fingerprint, so designs interchange freely
+    // between single-workload and suite runs.
+    let disk = cache_dir_arg(args)?;
+    let mut factory =
+        |spec: &WorkloadSpec| kind.make_suite_backend(spec);
+    let mut suite = SuiteEvaluator::with_backends(
+        &scenarios,
+        &mut factory,
+        disk.clone(),
+    )?;
     let (traj, reference, _lum) =
-        run_explore(args, "lumina-suite", &mut ev)?;
+        run_explore(args, "lumina-suite", &mut suite)?;
+    if let Some(d) = &disk {
+        print_disk_summary(d);
+    }
 
     let picks = pick_top2(&traj, &reference);
-    let mut suite = ev.into_inner();
     for d in &picks {
         println!("\ntop design: {d}");
         println!(
@@ -824,7 +828,7 @@ fn cmd_sensitivity(args: &Args) -> lumina::Result<()> {
 }
 
 /// `lumina bench {check,update,show}` — the perf regression ratchet.
-/// `check` exits non-zero when any enrolled `BENCH_6.json` row
+/// `check` exits non-zero when any enrolled `BENCH_10.json` row
 /// regressed past `BENCH_BASELINE.json`'s tolerance band; `update`
 /// adopts the snapshot's values as the new baseline (the escape hatch
 /// for intentional trade-offs — commit the result).
@@ -841,7 +845,7 @@ fn cmd_bench(args: &Args) -> lumina::Result<()> {
     let snapshot_path = args
         .opt("snapshot")
         .map(std::path::PathBuf::from)
-        .unwrap_or_else(|| resolve_existing("BENCH_9.json"));
+        .unwrap_or_else(|| resolve_existing("BENCH_10.json"));
     let mut baseline = Baseline::load(&baseline_path)?;
     let text =
         std::fs::read_to_string(&snapshot_path).map_err(|e| {

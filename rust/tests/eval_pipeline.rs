@@ -7,7 +7,7 @@
 use lumina::design::{sample, DesignPoint, DesignSpace};
 use lumina::eval::{
     BudgetedEvaluator, CachedEvaluator, EvalOne, Evaluator, Metrics,
-    ParallelEvaluator, SuiteEvaluator,
+    ParallelEvaluator, SuiteBackend, SuiteEvaluator,
 };
 use lumina::pareto::{
     hypervolume, normalize, pareto_front, Objectives, ParetoArchive,
@@ -299,6 +299,118 @@ fn suite_composite_is_deterministic_across_pipelines() {
         assert_eq!(x.metrics, y.metrics, "{}", x.name);
         assert_eq!(x.metrics, z.metrics, "{}", x.name);
     }
+}
+
+#[test]
+fn suite_fused_matches_sequential_bitwise_256() {
+    // Acceptance (ISSUE 10): the fused cross-scenario dispatch — one
+    // batch latch for all (member x chunk) tasks, per-member memo
+    // tiers, dedup before fan-out — must be bitwise-identical to the
+    // sequential member path, across every suite scenario and both
+    // objective modes.
+    let scenarios = suite_scenarios();
+    let designs = batch(256, 202);
+
+    let mut seq = SuiteEvaluator::new(
+        &scenarios,
+        &mut |spec: &WorkloadSpec| -> Box<dyn Evaluator> {
+            Box::new(RooflineSim::new(*spec))
+        },
+    )
+    .unwrap();
+    let mut fused = SuiteEvaluator::with_backends(
+        &scenarios,
+        &mut |spec: &WorkloadSpec| {
+            SuiteBackend::Fused(Box::new(RooflineSim::new(*spec)))
+        },
+        None,
+    )
+    .unwrap();
+
+    let want = seq.eval_batch(&designs).unwrap();
+    let got = fused.eval_batch(&designs).unwrap();
+    assert_eq!(got, want, "fused suite must be bitwise-identical");
+    for (g, w) in got.iter().zip(&want) {
+        // Both objective modes derive identical vectors.
+        assert_eq!(g.objectives(), w.objectives());
+        assert_eq!(g.objectives_ppa(), w.objectives_ppa());
+    }
+    // References and per-scenario reports agree bitwise too (the
+    // fused report resolves through the member tiers).
+    let a = seq.eval_scenarios(&designs[0]).unwrap();
+    let b = fused.eval_scenarios(&designs[0]).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.metrics, y.metrics, "{}", x.name);
+        assert_eq!(x.reference, y.reference, "{}", x.name);
+    }
+}
+
+#[test]
+fn suite_fused_compass_members_match_sequential() {
+    // Same identity on the detailed simulator, which exercises a
+    // different eval_chunk kernel under the fused dispatch.
+    let scenarios = suite_scenarios();
+    let designs = batch(48, 203);
+    let mut seq = SuiteEvaluator::new(
+        &scenarios,
+        &mut |spec: &WorkloadSpec| -> Box<dyn Evaluator> {
+            Box::new(CompassSim::new(*spec))
+        },
+    )
+    .unwrap();
+    let mut fused = SuiteEvaluator::with_backends(
+        &scenarios,
+        &mut |spec: &WorkloadSpec| {
+            SuiteBackend::Fused(Box::new(CompassSim::new(*spec)))
+        },
+        None,
+    )
+    .unwrap();
+    let want = seq.eval_batch(&designs).unwrap();
+    assert_eq!(fused.eval_batch(&designs).unwrap(), want);
+}
+
+#[test]
+fn suite_mixed_backends_match_sequential() {
+    // A suite mixing fused members with stateful sequential members
+    // (the PJRT-artifact case) composes identically: sequential
+    // members run their own eval_batch, fused members share the one
+    // pool dispatch, and the composite is assembled in registry order
+    // either way.
+    let scenarios = suite_scenarios();
+    let designs = batch(64, 204);
+    let mut seq = SuiteEvaluator::new(
+        &scenarios,
+        &mut |spec: &WorkloadSpec| -> Box<dyn Evaluator> {
+            Box::new(RooflineSim::new(*spec))
+        },
+    )
+    .unwrap();
+    let mut flip = false;
+    let mut mixed = SuiteEvaluator::with_backends(
+        &scenarios,
+        &mut |spec: &WorkloadSpec| {
+            flip = !flip;
+            if flip {
+                SuiteBackend::Fused(Box::new(RooflineSim::new(*spec)))
+            } else {
+                SuiteBackend::Sequential(Box::new(
+                    ParallelEvaluator::new(RooflineSim::new(*spec)),
+                ))
+            }
+        },
+        None,
+    )
+    .unwrap();
+    let want = seq.eval_batch(&designs).unwrap();
+    assert_eq!(mixed.eval_batch(&designs).unwrap(), want);
+    // With a sequential member present, nothing can be fully
+    // tier-served, so every unique design counts as a budget miss —
+    // identical to the historical accounting.
+    let c = mixed.cache_counters().unwrap();
+    assert_eq!(c.hits + c.misses, designs.len() as u64);
 }
 
 #[test]

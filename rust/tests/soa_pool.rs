@@ -290,6 +290,53 @@ fn fused_race_never_exceeds_the_worker_cap() {
 }
 
 #[test]
+fn fused_multi_member_dispatch_is_bitwise_on_the_global_pool() {
+    // The suite's fused cross-scenario dispatch in miniature: several
+    // heterogeneous members (including a trait-object mix of both
+    // simulators), uneven job sizes, one shared batch latch — results
+    // must be bitwise-identical to per-design eval_one at every
+    // thread count.
+    use lumina::eval::pool::PoolJob;
+    let pool = WorkerPool::global();
+    let scenarios = all_scenarios();
+    let evs: Vec<Box<dyn EvalOne>> = scenarios
+        .iter()
+        .take(2)
+        .map(|s| Box::new(RooflineSim::new(s.spec)) as Box<dyn EvalOne>)
+        .chain(std::iter::once(Box::new(CompassSim::new(
+            scenarios[0].spec,
+        )) as Box<dyn EvalOne>))
+        .collect();
+    let designs: Vec<Vec<DesignPoint>> = (0..evs.len())
+        .map(|k| batch(21 + 11 * k, 0xf0 + k as u64))
+        .collect();
+    let want: Vec<Vec<Metrics>> = evs
+        .iter()
+        .zip(&designs)
+        .map(|(ev, ds)| ds.iter().map(|d| ev.eval_one(d)).collect())
+        .collect();
+    for threads in [1usize, 2, default_threads().max(2)] {
+        let mut outs: Vec<Vec<Metrics>> = designs
+            .iter()
+            .map(|ds| vec![Metrics::default(); ds.len()])
+            .collect();
+        let mut jobs: Vec<PoolJob<'_, dyn EvalOne>> = evs
+            .iter()
+            .zip(&designs)
+            .zip(outs.iter_mut())
+            .map(|((ev, ds), out)| PoolJob {
+                ev: ev.as_ref(),
+                designs: ds.as_slice(),
+                out: out.as_mut_slice(),
+            })
+            .collect();
+        pool.eval_on_multi(&mut jobs, threads);
+        drop(jobs);
+        assert_eq!(outs, want, "threads={threads}");
+    }
+}
+
+#[test]
 fn lane_width_sweep_is_bitwise_identical_to_eval_one() {
     // The vectorized window must not change a single bit at any lane
     // width: L=1 degenerates to the pure remainder loop, L=4 and L=8

@@ -8,12 +8,17 @@ use std::fs::OpenOptions;
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use lumina::design::{DesignPoint, DesignSpace};
-use lumina::eval::{BudgetedEvaluator, DiskStore, Metrics};
+use lumina::eval::{
+    BudgetedEvaluator, DiskStore, EvalOne, EvalScratch, Evaluator,
+    Metrics, SuiteBackend, SuiteEvaluator,
+};
 use lumina::figures::race::EvaluatorKind;
 use lumina::lumina::Lumina;
 use lumina::sim::RooflineSim;
-use lumina::workload::GPT3_175B;
+use lumina::workload::{suite_scenarios, WorkloadSpec, GPT3_175B};
 
 /// Fresh scratch dir, unique per (test, process).
 fn tmp_dir(tag: &str) -> PathBuf {
@@ -329,6 +334,168 @@ fn warm_restart_serves_bitwise_identical_metrics() {
             "disk-served metrics for {d} differ from the simulator"
         );
     }
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+/// An [`EvalOne`] wrapper counting how many designs reach the
+/// simulator — proves tier-served suite designs never re-simulate.
+struct CountingSim {
+    inner: RooflineSim,
+    calls: Arc<AtomicUsize>,
+}
+
+impl EvalOne for CountingSim {
+    fn eval_one(&self, d: &DesignPoint) -> Metrics {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.eval_one(d)
+    }
+    fn label(&self) -> &'static str {
+        "counting"
+    }
+    fn workload_fingerprint(&self) -> u64 {
+        EvalOne::workload_fingerprint(&self.inner)
+    }
+    fn eval_chunk(
+        &self,
+        designs: &[DesignPoint],
+        out: &mut [Metrics],
+        scratch: &mut EvalScratch,
+    ) {
+        self.calls.fetch_add(designs.len(), Ordering::Relaxed);
+        self.inner.eval_chunk(designs, out, scratch);
+    }
+}
+
+#[test]
+fn suite_warm_restart_serves_per_member_disk_hits() {
+    // ISSUE 10 acceptance: a second `explore --suite --cache-dir` run
+    // over the store the first run left behind serves every member of
+    // every known design from disk — nonzero per-member disk hits,
+    // zero simulator calls — and composes bitwise-equal composites.
+    let dir = tmp_dir("suite_warm");
+    let scenarios = suite_scenarios();
+    let designs = sample_designs(12);
+    let cold = {
+        let disk = DiskStore::open_shared(&dir).unwrap();
+        let mut suite = SuiteEvaluator::with_backends(
+            &scenarios,
+            &mut |spec: &WorkloadSpec| {
+                SuiteBackend::Fused(Box::new(RooflineSim::new(*spec)))
+            },
+            Some(disk),
+        )
+        .unwrap();
+        suite.eval_batch(&designs).unwrap()
+        // Store handle seals on drop.
+    };
+
+    let calls = Arc::new(AtomicUsize::new(0));
+    let disk = DiskStore::open_shared(&dir).unwrap();
+    assert!(disk.len() > 0, "cold suite run persisted nothing");
+    let mut suite = SuiteEvaluator::with_backends(
+        &scenarios,
+        &mut |spec: &WorkloadSpec| {
+            SuiteBackend::Fused(Box::new(CountingSim {
+                inner: RooflineSim::new(*spec),
+                calls: Arc::clone(&calls),
+            }))
+        },
+        Some(disk),
+    )
+    .unwrap();
+    let warm = suite.eval_batch(&designs).unwrap();
+    assert_eq!(
+        calls.load(Ordering::Relaxed),
+        0,
+        "warm suite restart re-simulated instead of serving disk hits"
+    );
+    for (a, b) in cold.iter().zip(&warm) {
+        assert_eq!(
+            metric_bits(a),
+            metric_bits(b),
+            "warm composite drifted from the cold run"
+        );
+    }
+    let hits = suite.disk_counters().expect("disk tier present").hits;
+    assert!(hits > 0, "no per-member disk hits recorded");
+    // Fully tier-served designs ride as budget-free hits.
+    let c = suite.cache_counters().unwrap();
+    assert_eq!(c.misses, 0);
+    assert_eq!(c.hits, designs.len() as u64);
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn suite_and_single_workload_runs_share_the_store() {
+    // Per-member keying means designs interchange freely between
+    // single-workload and suite runs over one `--cache-dir`.
+    let dir = tmp_dir("suite_xpoll");
+    let scenarios = suite_scenarios();
+    let designs = sample_designs(8);
+    // Seed the store the way per-scenario single-workload runs would:
+    // one record per (scenario fingerprint, design), references
+    // included.
+    {
+        let store = DiskStore::open(&dir).unwrap();
+        let a100 = DesignPoint::a100();
+        for s in &scenarios {
+            let sim = RooflineSim::new(s.spec);
+            for d in designs.iter().chain(std::iter::once(&a100)) {
+                store.append(s.spec.fingerprint(), d, &sim.evaluate(d));
+            }
+        }
+        store.seal().unwrap();
+    }
+
+    // Forward: the fused suite is fully served by those records.
+    let fresh = sample_designs(10);
+    assert_eq!(&fresh[..8], &designs[..], "sampler lost prefix");
+    let calls = Arc::new(AtomicUsize::new(0));
+    {
+        let disk = DiskStore::open_shared(&dir).unwrap();
+        let mut suite = SuiteEvaluator::with_backends(
+            &scenarios,
+            &mut |spec: &WorkloadSpec| {
+                SuiteBackend::Fused(Box::new(CountingSim {
+                    inner: RooflineSim::new(*spec),
+                    calls: Arc::clone(&calls),
+                }))
+            },
+            Some(disk),
+        )
+        .unwrap();
+        suite.eval_batch(&designs).unwrap();
+        assert_eq!(
+            calls.load(Ordering::Relaxed),
+            0,
+            "single-workload records not served to the suite"
+        );
+        assert_eq!(suite.cache_counters().unwrap().misses, 0);
+        // Two genuinely new designs: the suite simulates them and
+        // write-behinds per member.
+        suite.eval_batch(&fresh).unwrap();
+        assert_eq!(
+            calls.load(Ordering::Relaxed),
+            2 * scenarios.len(),
+            "expected exactly the two new designs per member"
+        );
+    }
+
+    // Reverse: a single-workload run over one scenario takes the
+    // suite-written records as free disk hits.
+    let disk = DiskStore::open_shared(&dir).unwrap();
+    let mut ev = EvaluatorKind::RooflineRust
+        .make_cached_disk_for(&scenarios[0].spec, disk);
+    let mut be = BudgetedEvaluator::new(ev.as_mut(), 10);
+    for d in &fresh {
+        be.eval(d).unwrap();
+    }
+    assert_eq!(be.evaluations(), 10);
+    assert_eq!(
+        be.spent(),
+        0,
+        "suite-written records not shared back to single-workload runs"
+    );
     fs::remove_dir_all(&dir).unwrap();
 }
 
